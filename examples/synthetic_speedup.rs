@@ -1,0 +1,48 @@
+//! The paper's Figure-5 experiment at example scale: synthetic Matérn
+//! GP workload, sweep the device count, measure the time for the average
+//! instantaneous regret to drop below the cutoff, and report the
+//! speedup — near-linear while M ≪ N (the paper's headline property).
+//!
+//! Run with: `cargo run --release --example synthetic_speedup`
+//! (the full 50×50 paper configuration runs in the fig5 bench:
+//! `cargo bench --bench fig5_speedup`)
+
+use mmgpei::metrics::mean_std;
+use mmgpei::sched::MmGpEi;
+use mmgpei::sim::{simulate, SimConfig};
+use mmgpei::workload::{synthetic_gp, SyntheticConfig};
+
+fn main() {
+    let cfg = SyntheticConfig { n_users: 24, n_models: 16, ..Default::default() };
+    let cutoff = 0.01;
+    let repeats = 3;
+    println!(
+        "synthetic workload: {} users × {} models, Matérn ν=5/2, cutoff {}",
+        cfg.n_users, cfg.n_models, cutoff
+    );
+    println!("\ndevices  time-to-cutoff (mean ± σ)  speedup  efficiency");
+    let mut t1 = None;
+    for m in [1usize, 2, 4, 8, 16] {
+        let times: Vec<f64> = (0..repeats)
+            .map(|seed| {
+                let (problem, truth) = synthetic_gp(&cfg, 100 + seed);
+                let mut policy = MmGpEi::new(&problem);
+                let r = simulate(
+                    &problem,
+                    &truth,
+                    &mut policy,
+                    &SimConfig { n_devices: m, warm_start_per_user: 2, horizon: None, ..Default::default() },
+                );
+                r.time_to(cutoff).expect("all arms eventually observed")
+            })
+            .collect();
+        let (mean, std) = mean_std(&times);
+        let base = *t1.get_or_insert(mean);
+        let speedup = base / mean;
+        println!(
+            "{m:>7}  {mean:10.2} ± {std:5.2}        {speedup:6.2}×  {:.0}%",
+            100.0 * speedup / m as f64
+        );
+    }
+    println!("\n(efficiency ≈ 100% while M ≪ N = near-linear speedup, paper §6.3)");
+}

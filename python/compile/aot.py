@@ -1,0 +1,92 @@
+"""AOT compile path: lower ``scheduler_step`` to HLO text artifacts.
+
+Run once at build time (``make artifacts``); the rust runtime
+(``rust/src/runtime``) loads the text, compiles it on the PJRT CPU client
+and executes it on the request path — python is never invoked again.
+
+Interchange format is **HLO text**, not a serialized HloModuleProto:
+jax >= 0.5 emits protos with 64-bit instruction ids which the published
+``xla`` crate's xla_extension 0.5.1 rejects (``proto.id() <= INT_MAX``);
+the text parser reassigns ids and round-trips cleanly (see
+/opt/xla-example/README.md).
+
+Artifacts are lowered in float64 (``jax_enable_x64``) so the rust native
+backend and the XLA backend agree to ~1e-9 and parity tests can be tight.
+
+Usage:  python -m compile.aot --out-dir ../artifacts
+"""
+
+import argparse
+import os
+
+import jax
+
+jax.config.update("jax_enable_x64", True)
+
+import jax.numpy as jnp  # noqa: E402
+from jax._src.lib import xla_client as xc  # noqa: E402
+
+from .model import scheduler_step  # noqa: E402
+
+# (N, L) shape buckets to emit. Small bucket covers the Azure (9 users x
+# 8 models = 72 arms) and DeepLearning (14 x 8 = 112) protocol instances;
+# the medium bucket covers synthetic instances up to 24 users x 20 models.
+BUCKETS = [(16, 128), (32, 512)]
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (id-safe interchange)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_bucket(n: int, l: int) -> str:
+    """Lower scheduler_step for an (N, L) bucket to HLO text."""
+    f64 = jnp.float64
+    spec = jax.ShapeDtypeStruct
+    args = (
+        spec((l, l), f64),  # k
+        spec((l,), f64),  # mu0
+        spec((l,), f64),  # obs_mask
+        spec((l,), f64),  # z
+        spec((l,), f64),  # sel_mask
+        spec((n, l), f64),  # member
+        spec((l,), f64),  # cost
+    )
+    lowered = jax.jit(scheduler_step).lower(*args)
+    return to_hlo_text(lowered)
+
+
+def main() -> None:
+    parser = argparse.ArgumentParser(description=__doc__)
+    parser.add_argument("--out-dir", default="../artifacts", help="artifact directory")
+    parser.add_argument(
+        "--buckets",
+        default=",".join(f"{n}x{l}" for n, l in BUCKETS),
+        help="comma-separated NxL bucket list",
+    )
+    args = parser.parse_args()
+    os.makedirs(args.out_dir, exist_ok=True)
+    buckets = []
+    for tok in args.buckets.split(","):
+        n, l = tok.lower().split("x")
+        buckets.append((int(n), int(l)))
+    manifest_lines = []
+    for n, l in buckets:
+        name = f"scheduler_step_n{n}_l{l}"
+        text = lower_bucket(n, l)
+        path = os.path.join(args.out_dir, f"{name}.hlo.txt")
+        with open(path, "w") as f:
+            f.write(text)
+        manifest_lines.append(f"{name} {n} {l} {name}.hlo.txt")
+        print(f"wrote {path} ({len(text)} chars)")
+    with open(os.path.join(args.out_dir, "manifest.txt"), "w") as f:
+        f.write("\n".join(manifest_lines) + "\n")
+    print(f"wrote {os.path.join(args.out_dir, 'manifest.txt')} ({len(buckets)} buckets)")
+
+
+if __name__ == "__main__":
+    main()

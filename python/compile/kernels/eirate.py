@@ -1,0 +1,89 @@
+"""Layer-1 Pallas kernel: fused EIrate scoring (paper Eqs. 3-5).
+
+One pass over the arm axis computes, for a VMEM-resident tile of arms,
+the expected improvement of every (user, arm) pair, the membership-masked
+sum over users, the division by cost, and the selected-arm masking —
+fused so the [N, L] intermediate never round-trips to HBM.
+
+TPU mapping (DESIGN.md section Hardware-Adaptation): the arm axis is the
+lane dimension, tiled at ``BLOCK_L`` (multiple of 128 on real TPUs; any
+multiple works under interpret=True); the user axis (N <= 64 in all paper
+workloads) stays fully resident, so the kernel is a single HBM->VMEM
+stream over ``member``. ``interpret=True`` is mandatory on CPU PJRT —
+real-TPU lowering emits Mosaic custom-calls the CPU plugin cannot run.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from . import ref
+
+# Default arm-tile width. 128 = one TPU lane tile; interpret mode accepts
+# any positive multiple of the padded L.
+BLOCK_L = 128
+
+
+def _eirate_kernel(mu_ref, sigma_ref, best_ref, member_ref, cost_ref, sel_ref, out_ref):
+    """Kernel body for one arm tile."""
+    mu = mu_ref[...]  # [BL]
+    sigma = sigma_ref[...]  # [BL]
+    cost = cost_ref[...]  # [BL]
+    sel = sel_ref[...]  # [BL]
+    best = best_ref[...]  # [N]
+    member = member_ref[...]  # [N, BL]
+
+    sigma_safe = jnp.maximum(sigma, ref.SIGMA_EPS)
+    u = (mu[None, :] - best[:, None]) / sigma_safe[None, :]
+    ei_analytic = sigma_safe[None, :] * ref.tau(u)
+    ei_degenerate = jnp.maximum(mu[None, :] - best[:, None], 0.0)
+    ei = jnp.where(sigma[None, :] > ref.SIGMA_EPS, ei_analytic, ei_degenerate)
+    total = jnp.sum(member * ei, axis=0)  # [BL]
+    score = total / cost
+    out_ref[...] = jnp.where(sel > 0.5, ref.NEG_INF_SCORE, score)
+
+
+def _pad_arms(x, block, value):
+    l = x.shape[-1]
+    pad = (-l) % block
+    if pad == 0:
+        return x
+    widths = [(0, 0)] * (x.ndim - 1) + [(0, pad)]
+    return jnp.pad(x, widths, constant_values=value)
+
+
+@functools.partial(jax.jit, static_argnames=("block_l",))
+def eirate(mu, sigma, best, member, cost, sel_mask, *, block_l=BLOCK_L):
+    """Fused EIrate scores for all arms.
+
+    Same contract as :func:`ref.eirate_ref`; arms are padded to a multiple
+    of ``block_l`` internally (padding arms carry sel_mask = 1 and cost =
+    1 so they score -1e30 and are sliced off).
+    """
+    l = mu.shape[0]
+    mu_p = _pad_arms(mu, block_l, 0.0)
+    sigma_p = _pad_arms(sigma, block_l, 1.0)
+    cost_p = _pad_arms(cost, block_l, 1.0)
+    sel_p = _pad_arms(sel_mask, block_l, 1.0)
+    member_p = _pad_arms(member, block_l, 0.0)
+    lp = mu_p.shape[0]
+    n = best.shape[0]
+    grid = (lp // block_l,)
+    out = pl.pallas_call(
+        _eirate_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_l,), lambda i: (i,)),  # mu
+            pl.BlockSpec((block_l,), lambda i: (i,)),  # sigma
+            pl.BlockSpec((n,), lambda i: (0,)),  # best (broadcast)
+            pl.BlockSpec((n, block_l), lambda i: (0, i)),  # member
+            pl.BlockSpec((block_l,), lambda i: (i,)),  # cost
+            pl.BlockSpec((block_l,), lambda i: (i,)),  # sel
+        ],
+        out_specs=pl.BlockSpec((block_l,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((lp,), mu.dtype),
+        interpret=True,  # CPU PJRT cannot execute Mosaic custom-calls
+    )(mu_p, sigma_p, best, member_p, cost_p, sel_p)
+    return out[:l]

@@ -1,0 +1,119 @@
+"""Pure-jnp oracles for the Pallas kernels (Layer-1 correctness bar).
+
+Every Pallas kernel in this package has a reference implementation here,
+written with nothing but plain ``jax.numpy`` ops so it is obviously
+correct. ``python/tests`` asserts allclose between kernel and reference
+across hypothesis-generated shapes; the rust test-suite additionally
+checks the AOT artifact built *from the kernels* against its own native
+GP implementation.
+
+All math follows the paper:
+
+* ``tau(u) = u * Phi(u) + phi(u)``                      (Lemma 1)
+* ``EI_{i,t}(x) = sigma_t(x) * tau((mu_t(x) - best_i)/sigma_t(x))`` (Eq. 3)
+* ``EIrate_t(x) = sum_i member[i,x] * EI_{i,t}(x) / c(x)``   (Eqs. 4-5)
+"""
+
+import jax.numpy as jnp
+
+from ..linalg_jax import erf  # Cody rational erf — lowers to plain HLO
+                              # (the `erf` opcode is unknown to the pinned
+                              # xla_extension 0.5.1 HLO parser)
+
+# Score assigned to arms that must not be selected (already dispatched).
+NEG_INF_SCORE = -1e30
+
+# Below this posterior std an arm is treated as deterministic.
+SIGMA_EPS = 1e-12
+
+
+def norm_cdf(u):
+    """Standard normal CDF."""
+    return 0.5 * (1.0 + erf(u / jnp.sqrt(2.0).astype(u.dtype)))
+
+
+def norm_pdf(u):
+    """Standard normal PDF."""
+    inv_sqrt_2pi = 1.0 / jnp.sqrt(2.0 * jnp.pi).astype(u.dtype)
+    return inv_sqrt_2pi * jnp.exp(-0.5 * u * u)
+
+
+def tau(u):
+    """The paper's tau(u) = u*Phi(u) + phi(u)."""
+    return u * norm_cdf(u) + norm_pdf(u)
+
+
+def expected_improvement(mu, sigma, best):
+    """EI of N(mu, sigma^2) over incumbent ``best``; rows of ``best``
+    broadcast against columns of ``mu``/``sigma``.
+
+    Handles the degenerate sigma -> 0 case as max(mu - best, 0), exactly
+    like the rust implementation (gp::stats::expected_improvement).
+    """
+    mu2 = mu[None, :]
+    best2 = best[:, None]
+    sigma2 = jnp.maximum(sigma, SIGMA_EPS)[None, :]
+    analytic = sigma2 * tau((mu2 - best2) / sigma2)
+    degenerate = jnp.maximum(mu2 - best2, 0.0)
+    return jnp.where(sigma[None, :] > SIGMA_EPS, analytic, degenerate)
+
+
+def eirate_ref(mu, sigma, best, member, cost, sel_mask):
+    """Reference EIrate scores (Eq. 5) for all arms.
+
+    Args:
+      mu:       [L] posterior means.
+      sigma:    [L] posterior stds.
+      best:     [N] per-user incumbents.
+      member:   [N, L] 0/1 membership matrix.
+      cost:     [L] arm costs.
+      sel_mask: [L] 0/1, 1 = already selected (score forced to -1e30).
+
+    Returns:
+      [L] EIrate scores.
+    """
+    ei = expected_improvement(mu, sigma, best)  # [N, L]
+    total = jnp.sum(member * ei, axis=0)
+    score = total / cost
+    return jnp.where(sel_mask > 0.5, NEG_INF_SCORE, score)
+
+
+def posterior_diag_ref(wt, gamma, kdiag, mu0):
+    """Reference fused posterior contraction (whitened form).
+
+    Given ``wt = (L^{-1} V^T)^T`` (shape [L, O]), whitened residuals
+    ``gamma = L^{-1} resid`` ([O]), prior diagonal ``kdiag`` and prior
+    mean ``mu0`` (both [L]):
+
+      mu[l]  = mu0[l]  + sum_o wt[l,o] * gamma[o]
+      var[l] = kdiag[l] - sum_o wt[l,o]^2
+
+    Returns (mu, var).
+    """
+    mu = mu0 + wt @ gamma
+    var = kdiag - jnp.sum(wt * wt, axis=1)
+    return mu, var
+
+
+def gp_posterior_ref(k, mu0, obs_mask, z, jitter=1e-10):
+    """Full-reference masked GP posterior over all arms (textbook formulas,
+    paper Supplemental section A), used to validate the Layer-2 graph.
+
+    Returns (mu_t, sigma_t) with observed arms pinned to (z, 0).
+    """
+    m = obs_mask
+    a = k * m[:, None] * m[None, :] + jnp.diag(1.0 - m) + jnp.diag(m) * jitter
+    lchol = jnp.linalg.cholesky(a)
+    resid = m * (z - mu0)
+    # alpha = A^{-1} resid via two triangular solves.
+    import jax.scipy.linalg as jsl
+
+    alpha = jsl.cho_solve((lchol, True), resid)
+    v = k * m[None, :]
+    mu = mu0 + v @ alpha
+    x = jsl.cho_solve((lchol, True), v.T)  # A^{-1} V^T, [L, L]
+    var = jnp.diag(k) - jnp.sum(v * x.T, axis=1)
+    mu = jnp.where(m > 0.5, z, mu)
+    sigma = jnp.sqrt(jnp.maximum(var, 0.0))
+    sigma = jnp.where(m > 0.5, 0.0, sigma)
+    return mu, sigma

@@ -1,0 +1,271 @@
+"""Parser-safe dense linear algebra for the AOT path.
+
+``jnp.linalg.cholesky`` / ``jax.scipy.linalg.cho_solve`` lower to LAPACK
+FFI *custom-calls* on CPU (``lapack_dpotrf_ffi``, ``lapack_dtrsm_ffi``)
+which the pinned runtime (xla_extension 0.5.1, behind the published
+``xla`` crate) can neither parse nor execute. The AOT ``scheduler_step``
+graph therefore uses these jax-native implementations, which lower to
+plain HLO (while-loops over fused vector ops) and round-trip through the
+0.5.1 HLO text parser.
+
+Numerics: unblocked right-looking Cholesky and row-sweep triangular
+solves, identical operation order to the rust ``linalg`` module — the
+backend-parity test suite relies on this agreement (~1e-9 on the paper's
+problem sizes).
+
+The python test-suite cross-checks every function against
+``jnp.linalg``/``jax.scipy`` on random SPD systems.
+"""
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+# Panel width for the blocked algorithms (§Perf L2). A block step does
+# O(n·B) work as dense matmuls, so the HLO while-loop runs n/B trips of
+# MXU/gemm-shaped bodies instead of n trips of vector ops — on the pinned
+# CPU PJRT this cut the L=512 scheduler_step from ~152 ms to the
+# low-tens-of-ms range (see EXPERIMENTS.md §Perf).
+BLOCK = 32
+
+
+def _cholesky_unblocked(a):
+    """Right-looking unblocked Cholesky (used for diagonal blocks and
+    shapes not divisible by BLOCK)."""
+    n = a.shape[-1]
+    idx = jnp.arange(n)
+
+    def body(j, carry):
+        a_work, l = carry
+        d = jnp.sqrt(a_work[j, j])
+        col = a_work[:, j] / d
+        col = jnp.where(idx >= j, col, 0.0)  # keep L[j:, j]; col[j] == d
+        l = l.at[:, j].set(col)
+        below = jnp.where(idx > j, col, 0.0)
+        a_work = a_work - jnp.outer(below, below)
+        return a_work, l
+
+    _, l = lax.fori_loop(0, n, body, (a, jnp.zeros_like(a)))
+    return l
+
+
+def _solve_lower_unblocked(l, b):
+    """Row-sweep forward substitution (small systems / fallback)."""
+    n = b.shape[0]
+
+    def body(i, y):
+        yi = (b[i, :] - l[i, :] @ y) / l[i, i]
+        return y.at[i, :].set(yi)
+
+    return lax.fori_loop(0, n, body, jnp.zeros_like(b))
+
+
+def _solve_upper_unblocked(u, b):
+    """Row-sweep backward substitution for upper-triangular ``u``."""
+    n = b.shape[0]
+
+    def body(k, x):
+        i = n - 1 - k
+        xi = (b[i, :] - u[i, :] @ x) / u[i, i]
+        return x.at[i, :].set(xi)
+
+    return lax.fori_loop(0, n, body, jnp.zeros_like(b))
+
+
+def cholesky(a, block=BLOCK):
+    """Lower Cholesky factor of SPD matrix ``a`` ([n, n]), pure-HLO.
+
+    Blocked right-looking variant: per panel, factor the B×B diagonal
+    block with the unblocked loop, form the sub-diagonal panel with one
+    triangular solve, and apply the rank-B Schur update as a dense
+    matmul. Falls back to the unblocked loop when B does not divide n.
+    """
+    a = jnp.asarray(a)  # numpy closures break fori_loop tracing
+    n = a.shape[-1]
+    if n <= block or n % block != 0:
+        return _cholesky_unblocked(a)
+    nb = n // block
+    rows = jnp.arange(n)
+
+    def body(jb, carry):
+        a_work, l = carry
+        start = jb * block
+        d = lax.dynamic_slice(a_work, (start, start), (block, block))
+        ld = _cholesky_unblocked(d)
+        # Full-height column strip; only rows below the block are valid.
+        strip = lax.dynamic_slice(a_work, (0, start), (n, block))  # [n, B]
+        sol = _solve_lower_unblocked(ld, strip.T).T  # [n, B] = strip·Ld⁻ᵀ
+        below = (rows >= start + block)[:, None]
+        panel = jnp.where(below, sol, 0.0)
+        # Write the diagonal block + sub-diagonal panel into L.
+        col = panel + lax.dynamic_update_slice(
+            jnp.zeros((n, block), a.dtype), ld, (start, 0)
+        )
+        l = lax.dynamic_update_slice(l, col, (0, start))
+        # Rank-B Schur update of the trailing submatrix (dense matmul;
+        # rows/cols already consumed are never read again).
+        a_work = a_work - panel @ panel.T
+        return a_work, l
+
+    _, l = lax.fori_loop(0, nb, body, (a, jnp.zeros_like(a)))
+    return l
+
+
+def solve_lower(l, b, block=BLOCK):
+    """Solve ``L Y = B`` for lower-triangular ``L`` ([n, n]), ``B`` [n, m].
+
+    Blocked forward substitution: each trip solves one B-row panel
+    against the diagonal block after a dense-matmul update with all
+    previously solved rows.
+    """
+    l, b = jnp.asarray(l), jnp.asarray(b)
+    n = b.shape[0]
+    if n <= block or n % block != 0:
+        return _solve_lower_unblocked(l, b)
+    nb = n // block
+
+    def body(jb, y):
+        start = jb * block
+        lrows = lax.dynamic_slice(l, (start, 0), (block, n))  # [B, n]
+        # Unsolved rows of y are still zero, and L's diagonal block
+        # columns hit them, so one full-width matmul charges exactly the
+        # solved prefix.
+        rhs = lax.dynamic_slice(b, (start, 0), (block, b.shape[1])) - lrows @ y
+        ld = lax.dynamic_slice(l, (start, start), (block, block))
+        y_blk = _solve_lower_unblocked(ld, rhs)
+        return lax.dynamic_update_slice(y, y_blk, (start, 0))
+
+    return lax.fori_loop(0, nb, body, jnp.zeros_like(b))
+
+
+def solve_lower_t(l, y, block=BLOCK):
+    """Solve ``Lᵀ X = Y`` for lower-triangular ``L``, ``Y`` [n, m].
+
+    Blocked backward substitution over Lᵀ's upper-triangular structure.
+    """
+    l, y = jnp.asarray(l), jnp.asarray(y)
+    n = y.shape[0]
+    if n <= block or n % block != 0:
+        return _solve_upper_unblocked(l.T, y)
+    nb = n // block
+
+    def body(k, x):
+        start = (nb - 1 - k) * block
+        cols = lax.dynamic_slice(l, (0, start), (n, block))  # [n, B] = Lᵀ rows
+        rhs = lax.dynamic_slice(y, (start, 0), (block, y.shape[1])) - cols.T @ x
+        ld = lax.dynamic_slice(l, (start, start), (block, block))
+        x_blk = _solve_upper_unblocked(ld.T, rhs)
+        return lax.dynamic_update_slice(x, x_blk, (start, 0))
+
+    return lax.fori_loop(0, nb, body, jnp.zeros_like(y))
+
+
+def cho_solve(l, b):
+    """Solve ``A X = B`` given the lower Cholesky factor of ``A``."""
+    squeeze = b.ndim == 1
+    if squeeze:
+        b = b[:, None]
+    x = solve_lower_t(l, solve_lower(l, b))
+    return x[:, 0] if squeeze else x
+
+
+# ---------------------------------------------------------------------------
+# erf without the `erf` HLO opcode (unknown to the 0.5.1 parser):
+# W. J. Cody's rational approximations — the exact coefficients of the
+# rust implementation (rust/src/gp/stats.rs), so both sides agree to
+# ~1e-15 and backend parity is tight.
+# ---------------------------------------------------------------------------
+
+_P0 = (
+    3.209377589138469472562e3,
+    3.774852376853020208137e2,
+    1.138641541510501556495e2,
+    3.161123743870565596947e0,
+    1.857777061846031526730e-1,
+)
+_Q0 = (
+    2.844236833439170622273e3,
+    1.282616526077372275645e3,
+    2.440246379344441733056e2,
+    2.360129095234412093499e1,
+)
+_P1 = (
+    1.23033935479799725272e3,
+    2.05107837782607146532e3,
+    1.71204761263407058314e3,
+    8.81952221241769090411e2,
+    2.98635138197400131132e2,
+    6.61191906371416294775e1,
+    8.88314979438837594118e0,
+    5.64188496988670089180e-1,
+    2.15311535474403846343e-8,
+)
+_Q1 = (
+    1.23033935480374942043e3,
+    3.43936767414372163696e3,
+    4.36261909014324715820e3,
+    3.29079923573345962678e3,
+    1.62138957456669018874e3,
+    5.37181101862009857509e2,
+    1.17693950891312499305e2,
+    1.57449261107098347253e1,
+    1.0,
+)
+_P2 = (
+    -6.58749161529837803157e-4,
+    -1.60837851487422766278e-2,
+    -1.25781726111229246204e-1,
+    -3.60344899949804439429e-1,
+    -3.05326634961232344035e-1,
+    -1.63153871373020978498e-2,
+)
+_Q2 = (
+    2.33520497626869185443e-3,
+    6.05183413124413191178e-2,
+    5.27905102951428412248e-1,
+    1.87295284992346047209e0,
+    2.56852019228982242072e0,
+    1.0,
+)
+_INV_SQRT_PI = 0.564189583547756286948
+
+
+def _erf_small(x):
+    """erf on |x| < 0.5 (argument pre-clamped)."""
+    z = x * x
+    num = (((_P0[4] * z + _P0[3]) * z + _P0[2]) * z + _P0[1]) * z + _P0[0]
+    den = (((z + _Q0[3]) * z + _Q0[2]) * z + _Q0[1]) * z + _Q0[0]
+    return x * num / den
+
+
+def _erfc_mid(x):
+    """erfc on 0.5 <= x <= 4 (argument pre-clamped)."""
+    num = _P1[8] * x
+    den = _Q1[8] * x
+    for i in range(7, 0, -1):
+        num = (num + _P1[i]) * x
+        den = (den + _Q1[i]) * x
+    return jnp.exp(-x * x) * (num + _P1[0]) / (den + _Q1[0])
+
+
+def _erfc_far(x):
+    """erfc on x > 4 (argument pre-clamped to <= 27 to avoid overflow)."""
+    z = 1.0 / (x * x)
+    num = _P2[5] * z
+    den = _Q2[5] * z
+    for i in range(4, 0, -1):
+        num = (num + _P2[i]) * z
+        den = (den + _Q2[i]) * z
+    r = z * (num + _P2[0]) / (den + _Q2[0])
+    return (jnp.exp(-x * x) / x) * (_INV_SQRT_PI + r)
+
+
+def erf(x):
+    """Cody erf, branch-free (jnp.where over pre-clamped arguments)."""
+    ax = jnp.abs(x)
+    sign = jnp.sign(x)
+    small = _erf_small(jnp.clip(x, -0.5, 0.5))
+    mid = 1.0 - _erfc_mid(jnp.clip(ax, 0.5, 4.0))
+    far = 1.0 - _erfc_far(jnp.clip(ax, 4.0, 27.0))
+    out = jnp.where(ax < 0.5, small, jnp.where(ax <= 4.0, sign * mid, sign * far))
+    return jnp.where(ax > 27.0, sign, out)

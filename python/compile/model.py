@@ -1,0 +1,88 @@
+"""Layer-2: the JAX ``scheduler_step`` graph.
+
+One scheduler decision = one execution of this function. Given the fixed
+prior (kernel matrix ``k``, mean ``mu0``), the observation state
+(``obs_mask``, ``z``), the dispatch state (``sel_mask``) and the problem
+structure (``member``, ``cost``), it produces everything Algorithm 1
+needs at a decision point:
+
+  1. masked GP posterior over *all* arms (Supplemental section A formulas
+     with a fixed-shape masked Cholesky — unobserved rows/columns are
+     replaced by identity so padding and not-yet-observed arms are inert);
+  2. per-user incumbents ``best_i = max z over observed arms of user i``
+     (floored at 0, matching the rust EMPTY_INCUMBENT — all paper
+     workloads have non-negative performances);
+  3. the Layer-1 Pallas kernels: the fused posterior contraction and the
+     fused EIrate scoring.
+
+The function is shape-polymorphic in nothing: ``aot.py`` lowers one HLO
+artifact per (N, L) bucket and the rust runtime pads its state into the
+bucket. Python never runs at decision time.
+"""
+
+import jax
+import jax.numpy as jnp
+
+from . import linalg_jax
+from .kernels import eirate as eirate_kernel
+from .kernels import posterior as posterior_kernel
+
+# Jitter added to observed diagonal entries. The rust native backend adds
+# jitter only when a Cholesky pivot fails (typically never on the paper's
+# PD priors), so this is kept tiny to hold native↔XLA parity at ~1e-9
+# while still guarding genuinely duplicated arms in f64.
+JITTER = 1e-12
+
+
+def scheduler_step(k, mu0, obs_mask, z, sel_mask, member, cost):
+    """One MM-GP-EI decision step.
+
+    Args:
+      k:        [L, L] prior covariance over arms.
+      mu0:      [L] prior mean.
+      obs_mask: [L] 1.0 where the arm's z has been observed.
+      z:        [L] observed performances (0 where unobserved).
+      sel_mask: [L] 1.0 where the arm is dispatched (observed or running).
+      member:   [N, L] 0/1 membership (user i owns arm x).
+      cost:     [L] arm costs c(x); padding arms must carry cost 1.
+
+    Returns:
+      (eirate, mu_t, sigma_t, best): [L], [L], [L], [N].
+    """
+    m = obs_mask
+    # Masked SPD system: A = M K M + (I - M) + jitter*M.
+    a = k * m[:, None] * m[None, :] + jnp.diag(1.0 - m + JITTER * m)
+    # jax-native Cholesky/solves: jnp.linalg lowers to LAPACK FFI
+    # custom-calls on CPU, which the pinned PJRT runtime cannot execute.
+    lchol = linalg_jax.cholesky(a)
+    resid = m * (z - mu0)
+    # Whitened quantities only — no backward solve needed (§Perf L2):
+    #   W = L^{-1} V^T, gamma = L^{-1} resid,
+    #   mu = mu0 + W^T gamma,  sigma^2 = K_xx - ||W column||^2.
+    v = k * m[None, :]
+    w = linalg_jax.solve_lower(lchol, v.T)  # [O=L, L(arm axis)]
+    gamma = linalg_jax.solve_lower(lchol, resid[:, None])[:, 0]
+    wt = w.T  # [L, O=L]
+    kdiag = jnp.diagonal(k)
+    # Layer-1 fused contraction.
+    mu, var = posterior_kernel.posterior_diag(wt, gamma, kdiag, mu0)
+    # Pin observed arms to their exact values (kills jitter residue).
+    mu = jnp.where(m > 0.5, z, mu)
+    sigma = jnp.sqrt(jnp.maximum(var, 0.0))
+    sigma = jnp.where(m > 0.5, 0.0, sigma)
+    # Incumbents (floored at 0 = rust EMPTY_INCUMBENT).
+    best = jnp.max(member * (m * z)[None, :], axis=1)
+    # Layer-1 fused EIrate.
+    scores = eirate_kernel.eirate(mu, sigma, best, member, cost, sel_mask)
+    return scores, mu, sigma, best
+
+
+def scheduler_step_ref(k, mu0, obs_mask, z, sel_mask, member, cost):
+    """Pure-jnp reference of :func:`scheduler_step` (no Pallas), used by
+    the python test-suite to validate the composed graph."""
+    from .kernels import ref
+
+    mu, sigma = ref.gp_posterior_ref(k, mu0, obs_mask, z, jitter=JITTER)
+    best = jnp.max(member * (obs_mask * z)[None, :], axis=1)
+    scores = ref.eirate_ref(mu, sigma, best, member, cost, sel_mask)
+    return scores, mu, sigma, best

@@ -1,0 +1,66 @@
+"""AOT artifact regression tests.
+
+The pinned runtime (xla_extension 0.5.1 behind the published `xla` crate)
+parses HLO *text* and executes only classic HLO ops. These tests lower
+the scheduler_step buckets exactly as `make artifacts` does and assert
+the output stays inside that envelope — catching regressions like the
+`erf` opcode or LAPACK FFI custom-calls that newer jax lowers to.
+"""
+
+import re
+
+import pytest
+
+from compile.aot import lower_bucket, to_hlo_text, BUCKETS
+
+
+@pytest.fixture(scope="module")
+def small_bucket_hlo():
+    return lower_bucket(4, 16)
+
+
+class TestHloEnvelope:
+    def test_no_custom_calls(self, small_bucket_hlo):
+        assert "custom-call" not in small_bucket_hlo, (
+            "custom-calls (e.g. lapack_*_ffi) cannot execute on the pinned "
+            "PJRT runtime — keep linalg on the jax-native path"
+        )
+
+    def test_no_erf_opcode(self, small_bucket_hlo):
+        # The erf HLO opcode postdates xla_extension 0.5.1's parser.
+        assert not re.search(r"\berf\(", small_bucket_hlo), (
+            "`erf` opcode leaked into the artifact — use linalg_jax.erf"
+        )
+
+    def test_entry_signature_shapes(self, small_bucket_hlo):
+        # 7 parameters; the root is a tuple carrying the 4 outputs
+        # (eirate, mu, sigma, best).
+        assert "ENTRY" in small_bucket_hlo, "missing ENTRY computation"
+        params = set(re.findall(r"parameter\((\d)\)", small_bucket_hlo))
+        assert params == {str(i) for i in range(7)}, f"params {sorted(params)}"
+        assert re.search(r"ROOT .* tuple\(", small_bucket_hlo), "root must be a tuple"
+
+    def test_default_buckets_cover_paper_instances(self):
+        # Azure protocol: 9 users × 8 models = 72 arms; DeepLearning:
+        # 14 × 8 = 112 arms. The smallest shipped bucket must fit both.
+        n_max = max(n for n, _ in BUCKETS)
+        l_max = max(l for _, l in BUCKETS)
+        assert any(n >= 14 and l >= 112 for n, l in BUCKETS), BUCKETS
+        assert n_max >= 14 and l_max >= 112
+
+    def test_lowering_is_deterministic(self):
+        a = lower_bucket(4, 16)
+        b = lower_bucket(4, 16)
+        assert a == b, "HLO text must be reproducible for artifact caching"
+
+
+class TestToHloText:
+    def test_simple_function_roundtrips(self):
+        import jax
+        import jax.numpy as jnp
+
+        spec = jax.ShapeDtypeStruct((2, 2), jnp.float64)
+        lowered = jax.jit(lambda x: (x @ x,)).lower(spec)
+        text = to_hlo_text(lowered)
+        assert "ENTRY" in text
+        assert "dot" in text

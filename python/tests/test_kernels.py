@@ -1,0 +1,191 @@
+"""Layer-1 correctness: Pallas kernels vs pure-jnp oracles.
+
+Hypothesis sweeps shapes and values; assert_allclose against ref.py is
+the core correctness signal for the kernels that end up inside the AOT
+artifact the rust coordinator executes.
+"""
+
+import jax
+
+jax.config.update("jax_enable_x64", True)
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import ref
+from compile.kernels.eirate import eirate
+from compile.kernels.posterior import posterior_diag
+
+RNG = np.random.default_rng
+
+
+def _random_inputs(rng, n, l):
+    mu = rng.normal(0.5, 0.3, l)
+    sigma = np.abs(rng.normal(0.0, 0.5, l))
+    # Sprinkle exact zeros to exercise the degenerate-sigma branch.
+    sigma[rng.random(l) < 0.2] = 0.0
+    best = rng.uniform(0.0, 1.0, n)
+    member = (rng.random((n, l)) < 0.4).astype(np.float64)
+    cost = rng.uniform(0.3, 5.0, l)
+    sel = (rng.random(l) < 0.3).astype(np.float64)
+    return mu, sigma, best, member, cost, sel
+
+
+class TestEirateKernel:
+    @settings(deadline=None, max_examples=25)
+    @given(
+        n=st.integers(min_value=1, max_value=40),
+        l=st.integers(min_value=1, max_value=300),
+        seed=st.integers(min_value=0, max_value=2**32 - 1),
+    )
+    def test_matches_ref_across_shapes(self, n, l, seed):
+        rng = RNG(seed)
+        mu, sigma, best, member, cost, sel = _random_inputs(rng, n, l)
+        got = eirate(mu, sigma, best, member, cost, sel)
+        want = ref.eirate_ref(mu, sigma, best, member, cost, sel)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-10, atol=1e-12)
+
+    def test_block_boundary_shapes(self):
+        # Exact block multiples and off-by-one sizes around BLOCK_L.
+        rng = RNG(7)
+        for l in (127, 128, 129, 255, 256, 257):
+            mu, sigma, best, member, cost, sel = _random_inputs(rng, 8, l)
+            got = eirate(mu, sigma, best, member, cost, sel)
+            want = ref.eirate_ref(mu, sigma, best, member, cost, sel)
+            np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-10)
+
+    def test_selected_arms_masked(self):
+        rng = RNG(3)
+        mu, sigma, best, member, cost, _ = _random_inputs(rng, 4, 64)
+        sel = np.zeros(64)
+        sel[10] = 1.0
+        got = np.asarray(eirate(mu, sigma, best, member, cost, sel))
+        assert got[10] == ref.NEG_INF_SCORE
+        assert np.all(got[np.arange(64) != 10] > ref.NEG_INF_SCORE)
+
+    def test_shared_arm_sums_users(self):
+        # Two users share one arm -> EI doubles relative to one user.
+        mu = jnp.array([0.5])
+        sigma = jnp.array([0.2])
+        best = jnp.array([0.4, 0.4])
+        cost = jnp.array([1.0])
+        sel = jnp.array([0.0])
+        one = eirate(mu, sigma, best, jnp.array([[1.0], [0.0]]), cost, sel)
+        both = eirate(mu, sigma, best, jnp.array([[1.0], [1.0]]), cost, sel)
+        np.testing.assert_allclose(np.asarray(both), 2 * np.asarray(one), rtol=1e-12)
+
+    def test_cost_divides(self):
+        rng = RNG(11)
+        mu, sigma, best, member, _, sel = _random_inputs(rng, 6, 32)
+        sel[:] = 0.0
+        c1 = np.ones(32)
+        c3 = np.full(32, 3.0)
+        s1 = np.asarray(eirate(mu, sigma, best, member, c1, sel))
+        s3 = np.asarray(eirate(mu, sigma, best, member, c3, sel))
+        np.testing.assert_allclose(s3, s1 / 3.0, rtol=1e-12)
+
+    def test_float32_dtype(self):
+        rng = RNG(5)
+        mu, sigma, best, member, cost, sel = (
+            a.astype(np.float32) for a in _random_inputs(rng, 5, 70)
+        )
+        got = eirate(mu, sigma, best, member, cost, sel)
+        want = ref.eirate_ref(mu, sigma, best, member, cost, sel)
+        assert np.asarray(got).dtype == np.float32
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=2e-5, atol=1e-6)
+
+
+class TestPosteriorKernel:
+    @settings(deadline=None, max_examples=25)
+    @given(
+        l=st.integers(min_value=1, max_value=200),
+        o=st.integers(min_value=1, max_value=200),
+        seed=st.integers(min_value=0, max_value=2**32 - 1),
+    )
+    def test_matches_ref_across_shapes(self, l, o, seed):
+        rng = RNG(seed)
+        wt = rng.normal(0, 1, (l, o))
+        gamma = rng.normal(0, 1, o)
+        kdiag = rng.uniform(0.5, 2.0, l)
+        mu0 = rng.normal(0, 1, l)
+        mu, var = posterior_diag(wt, gamma, kdiag, mu0)
+        mu_w, var_w = ref.posterior_diag_ref(wt, gamma, kdiag, mu0)
+        np.testing.assert_allclose(np.asarray(mu), np.asarray(mu_w), rtol=1e-10, atol=1e-10)
+        np.testing.assert_allclose(np.asarray(var), np.asarray(var_w), rtol=1e-10, atol=1e-10)
+
+    def test_multi_tile_accumulation(self):
+        # Observation axis spanning several tiles exercises the revisit/
+        # accumulate pattern.
+        rng = RNG(13)
+        l, o = 130, 300
+        wt = rng.normal(0, 1, (l, o))
+        gamma = rng.normal(0, 1, o)
+        kdiag = rng.uniform(0.5, 2.0, l)
+        mu0 = rng.normal(0, 1, l)
+        mu, var = posterior_diag(wt, gamma, kdiag, mu0)
+        mu_w, var_w = ref.posterior_diag_ref(wt, gamma, kdiag, mu0)
+        np.testing.assert_allclose(np.asarray(mu), np.asarray(mu_w), rtol=1e-9)
+        np.testing.assert_allclose(np.asarray(var), np.asarray(var_w), rtol=1e-9)
+
+    def test_zero_observations_identity(self):
+        # gamma = 0, wt = 0 -> posterior equals prior.
+        l, o = 17, 8
+        wt = np.zeros((l, o))
+        gamma = np.zeros(o)
+        kdiag = np.full(l, 1.5)
+        mu0 = np.linspace(-1, 1, l)
+        mu, var = posterior_diag(wt, gamma, kdiag, mu0)
+        np.testing.assert_allclose(np.asarray(mu), mu0, atol=1e-15)
+        np.testing.assert_allclose(np.asarray(var), kdiag, atol=1e-15)
+
+    def test_whitened_form_matches_textbook_gp(self):
+        # wt = (L^{-1} V^T)^T, gamma = L^{-1} r reproduce the textbook
+        # posterior mu0 + V A^{-1} r and diag(K - V A^{-1} V^T).
+        rng = RNG(99)
+        o, l = 12, 20
+        b = rng.normal(0, 1, (o, o))
+        a = b @ b.T + o * np.eye(o)
+        lchol = np.linalg.cholesky(a)
+        v = rng.normal(0, 1, (l, o))
+        r = rng.normal(0, 1, o)
+        kdiag = np.sum(v * (v @ np.linalg.inv(a)), axis=1) + rng.uniform(0.1, 1.0, l)
+        mu0 = rng.normal(0, 1, l)
+        wt = np.linalg.solve(lchol, v.T).T
+        gamma = np.linalg.solve(lchol, r)
+        mu, var = posterior_diag(wt, gamma, kdiag, mu0)
+        want_mu = mu0 + v @ np.linalg.solve(a, r)
+        want_var = kdiag - np.sum(v * np.linalg.solve(a, v.T).T, axis=1)
+        np.testing.assert_allclose(np.asarray(mu), want_mu, rtol=1e-9)
+        np.testing.assert_allclose(np.asarray(var), want_var, rtol=1e-8, atol=1e-10)
+
+
+class TestTauMath:
+    @settings(deadline=None, max_examples=50)
+    @given(u=st.floats(min_value=-8.0, max_value=8.0))
+    def test_tau_identity(self, u):
+        # tau(u) = u + tau(-u) (used in the paper's Lemma 3 proof).
+        t_pos = float(ref.tau(jnp.array(u)))
+        t_neg = float(ref.tau(jnp.array(-u)))
+        assert t_pos == pytest.approx(u + t_neg, abs=1e-12)
+
+    def test_tau_known_value(self):
+        # tau(0) = phi(0) = 1/sqrt(2*pi)
+        assert float(ref.tau(jnp.array(0.0))) == pytest.approx(0.3989422804014327, abs=1e-14)
+
+    @settings(deadline=None, max_examples=30)
+    @given(
+        mu=st.floats(-2, 2),
+        sigma=st.floats(0.01, 2.0),
+        a=st.floats(-2, 2),
+        seed=st.integers(0, 2**31),
+    )
+    def test_ei_against_monte_carlo(self, mu, sigma, a, seed):
+        rng = RNG(seed)
+        draws = rng.normal(mu, sigma, 200_000)
+        mc = np.maximum(draws - a, 0.0).mean()
+        analytic = float(
+            ref.expected_improvement(jnp.array([mu]), jnp.array([sigma]), jnp.array([a]))[0, 0]
+        )
+        assert analytic == pytest.approx(mc, abs=6e-3)

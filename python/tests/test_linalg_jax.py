@@ -1,0 +1,119 @@
+"""linalg_jax (the parser-safe HLO-native linear algebra) vs jnp/scipy."""
+
+import jax
+
+jax.config.update("jax_enable_x64", True)
+
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+from scipy.special import erf as scipy_erf
+
+from compile import linalg_jax
+
+RNG = np.random.default_rng
+
+
+def _spd(rng, n):
+    b = rng.normal(0, 1, (n, n))
+    return b @ b.T + n * np.eye(n)
+
+
+class TestCholesky:
+    @settings(deadline=None, max_examples=20)
+    @given(n=st.integers(1, 48), seed=st.integers(0, 2**32 - 1))
+    def test_matches_jnp(self, n, seed):
+        a = _spd(RNG(seed), n)
+        got = np.asarray(linalg_jax.cholesky(jnp.asarray(a)))
+        want = np.linalg.cholesky(a)
+        np.testing.assert_allclose(got, want, rtol=1e-10, atol=1e-10)
+
+    def test_strictly_lower_output(self):
+        a = _spd(RNG(0), 7)
+        l = np.asarray(linalg_jax.cholesky(jnp.asarray(a)))
+        assert np.allclose(np.triu(l, 1), 0.0)
+
+    def test_blocked_path_matches_unblocked(self):
+        # n = 64, 128 are multiples of BLOCK=32 -> blocked algorithm.
+        for n in (64, 128):
+            a = _spd(RNG(n), n)
+            blocked = np.asarray(linalg_jax.cholesky(jnp.asarray(a)))
+            unblocked = np.asarray(linalg_jax._cholesky_unblocked(jnp.asarray(a)))
+            np.testing.assert_allclose(blocked, unblocked, rtol=1e-9, atol=1e-9)
+            np.testing.assert_allclose(blocked, np.linalg.cholesky(a), rtol=1e-9, atol=1e-9)
+            assert np.allclose(np.triu(blocked, 1), 0.0)
+
+    def test_blocked_solves_match(self):
+        rng = RNG(77)
+        n, m = 96, 40
+        a = _spd(rng, n)
+        b = rng.normal(0, 1, (n, m))
+        l = np.linalg.cholesky(a)
+        y_b = np.asarray(linalg_jax.solve_lower(jnp.asarray(l), jnp.asarray(b)))
+        np.testing.assert_allclose(l @ y_b, b, rtol=1e-8, atol=1e-9)
+        x_b = np.asarray(linalg_jax.solve_lower_t(jnp.asarray(l), jnp.asarray(y_b)))
+        np.testing.assert_allclose(l.T @ x_b, y_b, rtol=1e-8, atol=1e-9)
+        x = np.asarray(linalg_jax.cho_solve(jnp.asarray(l), jnp.asarray(b)))
+        np.testing.assert_allclose(a @ x, b, rtol=1e-7, atol=1e-8)
+
+
+class TestSolves:
+    @settings(deadline=None, max_examples=20)
+    @given(
+        n=st.integers(1, 40),
+        m=st.integers(1, 8),
+        seed=st.integers(0, 2**32 - 1),
+    )
+    def test_cho_solve_matches_direct(self, n, m, seed):
+        rng = RNG(seed)
+        a = _spd(rng, n)
+        b = rng.normal(0, 1, (n, m))
+        l = linalg_jax.cholesky(jnp.asarray(a))
+        x = np.asarray(linalg_jax.cho_solve(l, jnp.asarray(b)))
+        np.testing.assert_allclose(a @ x, b, rtol=1e-8, atol=1e-8)
+
+    def test_vector_rhs(self):
+        rng = RNG(3)
+        a = _spd(rng, 9)
+        b = rng.normal(0, 1, 9)
+        l = linalg_jax.cholesky(jnp.asarray(a))
+        x = np.asarray(linalg_jax.cho_solve(l, jnp.asarray(b)))
+        assert x.shape == (9,)
+        np.testing.assert_allclose(a @ x, b, rtol=1e-8)
+
+    def test_triangular_solves_individually(self):
+        rng = RNG(5)
+        a = _spd(rng, 11)
+        l = np.linalg.cholesky(a)
+        b = rng.normal(0, 1, (11, 3))
+        y = np.asarray(linalg_jax.solve_lower(jnp.asarray(l), jnp.asarray(b)))
+        np.testing.assert_allclose(l @ y, b, rtol=1e-9)
+        x = np.asarray(linalg_jax.solve_lower_t(jnp.asarray(l), jnp.asarray(y)))
+        np.testing.assert_allclose(l.T @ x, y, rtol=1e-9)
+
+
+class TestErf:
+    @settings(deadline=None, max_examples=60)
+    @given(x=st.floats(min_value=-30.0, max_value=30.0, allow_nan=False))
+    def test_matches_scipy_pointwise(self, x):
+        got = float(linalg_jax.erf(jnp.asarray(x, dtype=jnp.float64)))
+        want = float(scipy_erf(x))
+        assert abs(got - want) < 1e-13, f"erf({x}): {got} vs {want}"
+
+    def test_branch_boundaries(self):
+        for x in (-4.0, -0.5, 0.0, 0.5, 4.0, 26.0, 27.0, 28.0, 1e6):
+            got = float(linalg_jax.erf(jnp.asarray(x, dtype=jnp.float64)))
+            want = float(scipy_erf(x))
+            assert abs(got - want) < 1e-13
+
+    def test_extreme_arguments_no_nan(self):
+        xs = jnp.asarray([-1e12, -100.0, 100.0, 1e12], dtype=jnp.float64)
+        out = np.asarray(linalg_jax.erf(xs))
+        np.testing.assert_allclose(out, [-1.0, -1.0, 1.0, 1.0])
+        assert not np.any(np.isnan(out))
+
+    def test_vectorized(self):
+        xs = np.linspace(-6, 6, 4001)
+        got = np.asarray(linalg_jax.erf(jnp.asarray(xs)))
+        want = scipy_erf(xs)
+        np.testing.assert_allclose(got, want, atol=1e-13)

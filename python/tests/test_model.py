@@ -1,0 +1,157 @@
+"""Layer-2 correctness: the composed scheduler_step graph.
+
+Validates (a) the Pallas-backed graph against the pure-jnp reference,
+(b) the masked-Cholesky posterior against a direct numpy GP computed on
+the observed subset only, and (c) the Algorithm-1 semantics (masking,
+incumbents, argmax behaviour) the rust coordinator relies on.
+"""
+
+import jax
+
+jax.config.update("jax_enable_x64", True)
+
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import ref
+from compile.model import scheduler_step, scheduler_step_ref
+
+RNG = np.random.default_rng
+
+
+def _random_problem(rng, n, l):
+    """Random SPD prior + problem structure with some observations."""
+    b = rng.normal(0, 1, (l, l))
+    k = b @ b.T / l + 0.3 * np.eye(l)
+    mu0 = rng.uniform(0.2, 0.8, l)
+    z_true = rng.uniform(0.0, 1.0, l)
+    obs = np.zeros(l)
+    n_obs = rng.integers(0, l // 2 + 1)
+    obs[rng.choice(l, size=n_obs, replace=False)] = 1.0
+    z = z_true * obs
+    sel = obs.copy()
+    extra_running = rng.random(l) < 0.1
+    sel = np.clip(sel + extra_running, 0, 1)
+    member = np.zeros((n, l))
+    for x in range(l):
+        owners = rng.choice(n, size=rng.integers(1, min(3, n) + 1), replace=False)
+        member[owners, x] = 1.0
+    cost = rng.uniform(0.3, 4.0, l)
+    return k, mu0, obs, z, sel, member, cost
+
+
+class TestSchedulerStepGraph:
+    @settings(deadline=None, max_examples=15)
+    @given(
+        n=st.integers(min_value=1, max_value=16),
+        l=st.integers(min_value=2, max_value=96),
+        seed=st.integers(min_value=0, max_value=2**32 - 1),
+    )
+    def test_pallas_graph_matches_ref_graph(self, n, l, seed):
+        rng = RNG(seed)
+        args = _random_problem(rng, n, l)
+        got = scheduler_step(*args)
+        want = scheduler_step_ref(*args)
+        for g, w, name in zip(got, want, ["eirate", "mu", "sigma", "best"]):
+            np.testing.assert_allclose(
+                np.asarray(g), np.asarray(w), rtol=1e-7, atol=1e-9, err_msg=name
+            )
+
+    def test_posterior_matches_direct_numpy_gp(self):
+        # Masked fixed-shape posterior == textbook posterior on the
+        # observed subset (paper Supplemental A).
+        rng = RNG(42)
+        n, l = 4, 24
+        k, mu0, obs, z, sel, member, cost = _random_problem(rng, n, l)
+        obs_idx = np.where(obs > 0.5)[0]
+        if len(obs_idx) == 0:
+            obs[0] = 1.0
+            z[0] = 0.7
+            obs_idx = np.array([0])
+        _, mu, sigma, _ = scheduler_step(k, mu0, obs, z, sel, member, cost)
+        mu = np.asarray(mu)
+        sigma = np.asarray(sigma)
+        kt = k[np.ix_(obs_idx, obs_idx)]
+        kt_inv = np.linalg.inv(kt + 1e-9 * np.eye(len(obs_idx)))
+        for x in range(l):
+            v = k[x, obs_idx]
+            want_mu = mu0[x] + v @ kt_inv @ (z[obs_idx] - mu0[obs_idx])
+            want_var = k[x, x] - v @ kt_inv @ v
+            if obs[x] > 0.5:
+                assert mu[x] == z[x]
+                assert sigma[x] == 0.0
+            else:
+                assert abs(mu[x] - want_mu) < 1e-6, f"mu mismatch at {x}"
+                assert abs(sigma[x] - np.sqrt(max(want_var, 0))) < 1e-6
+
+    def test_no_observations_prior_pass_through(self):
+        rng = RNG(1)
+        n, l = 3, 10
+        k, mu0, _, _, _, member, cost = _random_problem(rng, n, l)
+        zeros = np.zeros(l)
+        scores, mu, sigma, best = scheduler_step(k, mu0, zeros, zeros, zeros, member, cost)
+        np.testing.assert_allclose(np.asarray(mu), mu0, atol=1e-12)
+        np.testing.assert_allclose(np.asarray(sigma), np.sqrt(np.diagonal(k)), rtol=1e-9)
+        np.testing.assert_allclose(np.asarray(best), np.zeros(n), atol=1e-15)
+        assert np.all(np.asarray(scores) > ref.NEG_INF_SCORE)
+
+    def test_incumbents_per_user_max(self):
+        rng = RNG(2)
+        n, l = 3, 12
+        k, mu0, _, _, _, _, cost = _random_problem(rng, n, l)
+        member = np.zeros((n, l))
+        member[0, :4] = 1.0
+        member[1, 4:8] = 1.0
+        member[2, 8:] = 1.0
+        obs = np.zeros(l)
+        z = np.zeros(l)
+        obs[[0, 1, 4]] = 1.0
+        z[[0, 1, 4]] = [0.3, 0.6, 0.9]
+        _, _, _, best = scheduler_step(k, mu0, obs, z, obs.copy(), member, cost)
+        best = np.asarray(best)
+        assert best[0] == 0.6  # max of user 0's observed arms
+        assert best[1] == 0.9
+        assert best[2] == 0.0  # no observation -> EMPTY_INCUMBENT
+
+    def test_padding_arms_are_inert(self):
+        # Emulate the rust runtime's padding contract: padded arms have
+        # obs=0, sel=1, member=0, cost=1, k row/col = e_x (identity).
+        rng = RNG(3)
+        n, l, pad = 3, 10, 6
+        k, mu0, obs, z, sel, member, cost = _random_problem(rng, n, l)
+        lp = l + pad
+        kp = np.eye(lp)
+        kp[:l, :l] = k
+        mu0p = np.concatenate([mu0, np.zeros(pad)])
+        obsp = np.concatenate([obs, np.zeros(pad)])
+        zp = np.concatenate([z, np.zeros(pad)])
+        selp = np.concatenate([sel, np.ones(pad)])
+        memberp = np.concatenate([member, np.zeros((n, pad))], axis=1)
+        costp = np.concatenate([cost, np.ones(pad)])
+        s_pad, mu_pad, sig_pad, best_pad = scheduler_step(
+            kp, mu0p, obsp, zp, selp, memberp, costp
+        )
+        s, mu, sig, best = scheduler_step(k, mu0, obs, z, sel, member, cost)
+        np.testing.assert_allclose(np.asarray(s_pad)[:l], np.asarray(s), rtol=1e-9)
+        np.testing.assert_allclose(np.asarray(mu_pad)[:l], np.asarray(mu), rtol=1e-9)
+        np.testing.assert_allclose(np.asarray(sig_pad)[:l], np.asarray(sig), rtol=1e-9, atol=1e-12)
+        np.testing.assert_allclose(np.asarray(best_pad), np.asarray(best), rtol=1e-12)
+        # Padding arms can never win the argmax.
+        assert np.all(np.asarray(s_pad)[l:] == ref.NEG_INF_SCORE)
+
+    def test_argmax_prefers_cheap_equal_ei(self):
+        # Two identical unobserved arms, different costs -> argmax picks
+        # the cheap one (the EIrate mechanism).
+        n, l = 1, 4
+        k = np.eye(l)
+        mu0 = np.full(l, 0.5)
+        obs = np.zeros(l)
+        z = np.zeros(l)
+        sel = np.zeros(l)
+        member = np.ones((n, l))
+        cost = np.array([1.0, 5.0, 1.0, 5.0])
+        scores, _, _, _ = scheduler_step(k, mu0, obs, z, sel, member, cost)
+        scores = np.asarray(scores)
+        assert scores.argmax() in (0, 2)
+        assert scores[0] > scores[1]

@@ -1,0 +1,151 @@
+//! §Perf P1 — the scheduler decision hot path, per layer and per backend.
+//!
+//! Measures, as a function of problem size:
+//!  * native incremental GP: cost of one `observe` (posterior refresh)
+//!    and one full EIrate scoring pass;
+//!  * the naive O(t³) recompute the incremental path replaces (the
+//!    before/after of the §Perf iteration log);
+//!  * the AOT XLA artifact: one full `scheduler_step` execution via PJRT
+//!    (requires `make artifacts`; skipped otherwise);
+//!  * end-to-end decision latency inside the live coordinator.
+//!
+//! Run: `cargo bench --bench perf_hotpath`
+
+use mmgpei::bench::{Bencher, Table};
+use mmgpei::prng::Rng;
+use mmgpei::runtime::{default_artifact_dir, XlaBackend};
+use mmgpei::sched::{EiBackend, NativeBackend};
+use mmgpei::testutil::gen;
+use std::hint::black_box;
+use std::time::Duration;
+
+fn main() {
+    let bench = Bencher {
+        warmup: Duration::from_millis(100),
+        budget: Duration::from_millis(800),
+        max_iters: 100_000,
+        min_iters: 3,
+    };
+    println!("=== §Perf P1: decision hot path ===\n");
+    let mut table = Table::new(&["operation", "L (arms)", "t (obs)", "mean", "p99"]);
+
+    for (n_users, models_per_user) in [(8usize, 8usize), (16, 8), (16, 32), (32, 32)] {
+        let l = n_users * models_per_user;
+        let mut rng = Rng::new(42);
+        let (problem, truth) = gen::problem(&mut rng, n_users, models_per_user);
+        let t_obs = l / 2;
+
+        // Native backend pre-warmed with t_obs observations.
+        let mut native = NativeBackend::new(&problem);
+        let mut selected = vec![false; l];
+        for a in 0..t_obs {
+            native.observe(a, truth.z[a]);
+            selected[a] = true;
+        }
+        let best: Vec<f64> = (0..n_users)
+            .map(|u| {
+                problem.user_arms[u]
+                    .iter()
+                    .filter(|&&a| a < t_obs)
+                    .map(|&a| truth.z[a])
+                    .fold(0.0, f64::max)
+            })
+            .collect();
+
+        // (a) EIrate scoring pass (reads cached posterior — O(L·N̄)).
+        let stats = bench.run("eirate", || {
+            black_box(native.eirate(black_box(&best), black_box(&selected), true))
+        });
+        table.row(vec![
+            "native eirate scan".into(),
+            l.to_string(),
+            t_obs.to_string(),
+            mmgpei::bench::fmt_duration(stats.mean),
+            mmgpei::bench::fmt_duration(stats.p99),
+        ]);
+
+        // (b) incremental observe, amortized over a fresh sequential run
+        // of t_obs observations (what the simulator actually pays; a
+        // per-call measurement would be dominated by cloning the GP's
+        // flat buffers inside the timed region).
+        let stats = bench.run("observe", || {
+            let mut gp = mmgpei::gp::Gp::new(problem.prior_mean.clone(), problem.prior_cov.clone());
+            for a in 0..t_obs {
+                gp.observe(a, truth.z[a]);
+            }
+            black_box(gp.posterior_mean(0))
+        });
+        table.row(vec![
+            "native observe (amortized/obs)".into(),
+            l.to_string(),
+            t_obs.to_string(),
+            mmgpei::bench::fmt_duration(stats.mean / t_obs as u32),
+            mmgpei::bench::fmt_duration(stats.p99 / t_obs as u32),
+        ]);
+
+        // (c) the naive full recompute the incremental path replaces.
+        let stats = bench.run("recompute", || black_box(native.gp().recompute_posterior_slow()));
+        table.row(vec![
+            "naive posterior recompute".into(),
+            l.to_string(),
+            t_obs.to_string(),
+            mmgpei::bench::fmt_duration(stats.mean),
+            mmgpei::bench::fmt_duration(stats.p99),
+        ]);
+
+        // (d) XLA artifact scheduler_step (if artifacts exist and fit).
+        if let Ok(mut xla) = XlaBackend::new(&problem, &default_artifact_dir()) {
+            for a in 0..t_obs {
+                xla.observe(a, truth.z[a]);
+            }
+            let stats = bench.run("xla", || {
+                black_box(xla.eirate(black_box(&best), black_box(&selected), true))
+            });
+            table.row(vec![
+                "xla scheduler_step (PJRT)".into(),
+                l.to_string(),
+                t_obs.to_string(),
+                mmgpei::bench::fmt_duration(stats.mean),
+                mmgpei::bench::fmt_duration(stats.p99),
+            ]);
+        }
+    }
+    println!("{}", table.to_markdown());
+
+    // End-to-end: decision latency inside the live coordinator.
+    println!("\n--- live coordinator decision latency (azure, 4 devices) ---");
+    let data = mmgpei::workload::azure();
+    let mut rng = Rng::new(5);
+    let split = data.protocol_split(&mut rng, 8);
+    let (problem, truth) = data.make_problem(&split);
+    for backend in ["native", "xla"] {
+        let mut policy: Box<dyn mmgpei::sched::Policy> = match backend {
+            "native" => Box::new(mmgpei::sched::MmGpEi::new(&problem)),
+            _ => match XlaBackend::new(&problem, &default_artifact_dir()) {
+                Ok(b) => Box::new(mmgpei::sched::MmGpEi::with_backend(&problem, Box::new(b))),
+                Err(_) => {
+                    println!("xla: skipped (run `make artifacts`)");
+                    continue;
+                }
+            },
+        };
+        let report = mmgpei::coordinator::serve(
+            &problem,
+            &truth,
+            policy.as_mut(),
+            &mmgpei::coordinator::ServeConfig {
+                n_devices: 4,
+                time_scale: 0.0005,
+                warm_start_per_user: 2,
+                verbose: false,
+            },
+        );
+        println!(
+            "{backend:>7}: mean {:?}, max {:?} over {} decisions (makespan {:?})",
+            report.mean_decision_latency(),
+            report.max_decision_latency(),
+            report.decision_latencies.len(),
+            report.makespan
+        );
+    }
+}

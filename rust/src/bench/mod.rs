@@ -1,0 +1,243 @@
+//! Micro/throughput benchmark harness.
+//!
+//! The offline environment ships no `criterion`, so the `cargo bench`
+//! targets (`rust/benches/*.rs`, `harness = false`) use this hand-rolled
+//! harness: warmup, fixed-duration sampling, and mean/p50/p95/p99 stats
+//! with outlier-robust reporting. It intentionally mimics the parts of
+//! criterion the project needs and nothing more.
+
+use std::time::{Duration, Instant};
+
+/// Result of a timed benchmark.
+#[derive(Clone, Debug)]
+pub struct BenchStats {
+    /// Benchmark label.
+    pub name: String,
+    /// Number of timed iterations.
+    pub iters: usize,
+    /// Mean iteration time.
+    pub mean: Duration,
+    /// Median iteration time.
+    pub p50: Duration,
+    /// 95th percentile.
+    pub p95: Duration,
+    /// 99th percentile.
+    pub p99: Duration,
+    /// Min / max.
+    pub min: Duration,
+    /// Max.
+    pub max: Duration,
+}
+
+impl BenchStats {
+    /// Single-line report in the style of `criterion`'s summary.
+    pub fn report(&self) -> String {
+        format!(
+            "{:<44} {:>10} iters  mean {:>12}  p50 {:>12}  p95 {:>12}  p99 {:>12}",
+            self.name,
+            self.iters,
+            fmt_duration(self.mean),
+            fmt_duration(self.p50),
+            fmt_duration(self.p95),
+            fmt_duration(self.p99),
+        )
+    }
+}
+
+/// Format a duration with adaptive units.
+pub fn fmt_duration(d: Duration) -> String {
+    let ns = d.as_nanos();
+    if ns < 1_000 {
+        format!("{ns} ns")
+    } else if ns < 1_000_000 {
+        format!("{:.2} µs", ns as f64 / 1e3)
+    } else if ns < 1_000_000_000 {
+        format!("{:.2} ms", ns as f64 / 1e6)
+    } else {
+        format!("{:.3} s", ns as f64 / 1e9)
+    }
+}
+
+/// Benchmark runner with warmup and a sampling budget.
+pub struct Bencher {
+    /// Warmup duration before sampling starts.
+    pub warmup: Duration,
+    /// Total sampling budget.
+    pub budget: Duration,
+    /// Upper bound on timed iterations (for slow end-to-end benches).
+    pub max_iters: usize,
+    /// Lower bound on timed iterations.
+    pub min_iters: usize,
+}
+
+impl Default for Bencher {
+    fn default() -> Self {
+        Bencher {
+            warmup: Duration::from_millis(200),
+            budget: Duration::from_secs(2),
+            max_iters: 10_000_000,
+            min_iters: 5,
+        }
+    }
+}
+
+impl Bencher {
+    /// Quick preset for expensive end-to-end simulations.
+    pub fn end_to_end() -> Self {
+        Bencher {
+            warmup: Duration::ZERO,
+            budget: Duration::from_secs(1),
+            max_iters: 5,
+            min_iters: 1,
+        }
+    }
+
+    /// Time `f`, which must consume/produce enough to avoid being
+    /// optimized away (use [`std::hint::black_box`] inside).
+    pub fn run<T>(&self, name: &str, mut f: impl FnMut() -> T) -> BenchStats {
+        // Warmup.
+        let w0 = Instant::now();
+        while w0.elapsed() < self.warmup {
+            std::hint::black_box(f());
+        }
+        // Sampling.
+        let mut samples: Vec<Duration> = Vec::new();
+        let s0 = Instant::now();
+        while (s0.elapsed() < self.budget || samples.len() < self.min_iters)
+            && samples.len() < self.max_iters
+        {
+            let t0 = Instant::now();
+            std::hint::black_box(f());
+            samples.push(t0.elapsed());
+        }
+        samples.sort();
+        let iters = samples.len();
+        let total: Duration = samples.iter().sum();
+        let pct = |p: f64| samples[((iters as f64 - 1.0) * p) as usize];
+        BenchStats {
+            name: name.to_string(),
+            iters,
+            mean: total / iters as u32,
+            p50: pct(0.50),
+            p95: pct(0.95),
+            p99: pct(0.99),
+            min: samples[0],
+            max: samples[iters - 1],
+        }
+    }
+}
+
+/// A simple markdown/ASCII table builder used by bench binaries to print
+/// figure-shaped outputs (rows = series the paper plots).
+pub struct Table {
+    header: Vec<String>,
+    rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    /// New table with the given column names.
+    pub fn new(header: &[&str]) -> Self {
+        Table { header: header.iter().map(|s| s.to_string()).collect(), rows: Vec::new() }
+    }
+
+    /// Append a row (stringified cells).
+    pub fn row(&mut self, cells: Vec<String>) {
+        assert_eq!(cells.len(), self.header.len(), "row arity mismatch");
+        self.rows.push(cells);
+    }
+
+    /// Render as a github-markdown table.
+    pub fn to_markdown(&self) -> String {
+        let ncol = self.header.len();
+        let mut widths: Vec<usize> = self.header.iter().map(|h| h.len()).collect();
+        for row in &self.rows {
+            for (i, c) in row.iter().enumerate() {
+                widths[i] = widths[i].max(c.len());
+            }
+        }
+        let mut out = String::new();
+        let fmt_row = |cells: &[String], widths: &[usize]| {
+            let mut line = String::from("|");
+            for i in 0..ncol {
+                line.push_str(&format!(" {:<w$} |", cells[i], w = widths[i]));
+            }
+            line
+        };
+        out.push_str(&fmt_row(&self.header, &widths));
+        out.push('\n');
+        out.push('|');
+        for w in &widths {
+            out.push_str(&format!("{:-<w$}|", "", w = w + 2));
+        }
+        out.push('\n');
+        for row in &self.rows {
+            out.push_str(&fmt_row(row, &widths));
+            out.push('\n');
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bencher_produces_ordered_stats() {
+        let b = Bencher {
+            warmup: Duration::ZERO,
+            budget: Duration::from_millis(30),
+            max_iters: 1000,
+            min_iters: 5,
+        };
+        let stats = b.run("spin", || {
+            let mut acc = 0u64;
+            for i in 0..500 {
+                acc = acc.wrapping_add(i);
+            }
+            acc
+        });
+        assert!(stats.iters >= 5);
+        assert!(stats.min <= stats.p50);
+        assert!(stats.p50 <= stats.p95);
+        assert!(stats.p95 <= stats.p99);
+        assert!(stats.p99 <= stats.max);
+        assert!(!stats.report().is_empty());
+    }
+
+    #[test]
+    fn min_iters_enforced_for_slow_fns() {
+        let b = Bencher {
+            warmup: Duration::ZERO,
+            budget: Duration::from_millis(1),
+            max_iters: 100,
+            min_iters: 3,
+        };
+        let stats = b.run("sleepy", || std::thread::sleep(Duration::from_millis(2)));
+        assert!(stats.iters >= 3);
+    }
+
+    #[test]
+    fn duration_formatting_units() {
+        assert_eq!(fmt_duration(Duration::from_nanos(500)), "500 ns");
+        assert_eq!(fmt_duration(Duration::from_micros(1500)), "1.50 ms");
+        assert!(fmt_duration(Duration::from_secs(2)).ends_with(" s"));
+    }
+
+    #[test]
+    fn table_renders_markdown() {
+        let mut t = Table::new(&["devices", "time"]);
+        t.row(vec!["1".into(), "10.0".into()]);
+        t.row(vec!["2".into(), "5.2".into()]);
+        let md = t.to_markdown();
+        assert!(md.contains("| devices | time |"));
+        assert!(md.lines().count() == 4);
+    }
+
+    #[test]
+    #[should_panic(expected = "row arity")]
+    fn table_rejects_wrong_arity() {
+        let mut t = Table::new(&["a", "b"]);
+        t.row(vec!["1".into()]);
+    }
+}

@@ -1,0 +1,227 @@
+//! Experiment driver: instantiate workloads per the paper's protocol,
+//! construct policies by name, sweep (policy × devices × seeds), and
+//! aggregate the metrics the figures plot. Shared by the CLI launcher
+//! and the `cargo bench` figure harnesses.
+
+use crate::config::{Backend, ExperimentConfig};
+use crate::metrics::{aggregate_curves, mean_std, time_grid, StepCurve};
+use crate::prng::Rng;
+use crate::problem::{Problem, Truth};
+use crate::runtime::{default_artifact_dir, XlaBackend};
+use crate::sched::{GpEiRandom, GpEiRoundRobin, MmGpEi, MmGpEiIndep, Oracle, Policy};
+use crate::sim::{simulate, SimConfig, SimResult};
+use crate::workload::{azure, deeplearning, synthetic_gp};
+
+/// Instantiate a policy by CLI name.
+///
+/// Vocabulary: `mdmt` (Algorithm 1), `mdmt-nocost` (EI-only ablation),
+/// `mdmt-indep` (independent-GP ablation), `round-robin`, `random`,
+/// `oracle`.
+pub fn make_policy(
+    name: &str,
+    problem: &Problem,
+    truth: &Truth,
+    seed: u64,
+    backend: Backend,
+) -> Result<Box<dyn Policy>, String> {
+    Ok(match name {
+        "mdmt" => match backend {
+            Backend::Native => Box::new(MmGpEi::new(problem)),
+            Backend::Xla => {
+                let b = XlaBackend::new(problem, &default_artifact_dir())
+                    .map_err(|e| format!("xla backend: {e:#}"))?;
+                Box::new(MmGpEi::with_backend(problem, Box::new(b)))
+            }
+        },
+        "mdmt-nocost" => Box::new(MmGpEi::cost_insensitive(problem)),
+        "mdmt-indep" => Box::new(MmGpEiIndep::new(problem)),
+        "mdmt-fantasy" => Box::new(crate::sched::MmGpEiFantasy::new(problem)),
+        "ucb-mdmt" => Box::new(crate::sched::GpUcbMdmt::new(problem)),
+        "ucb-round-robin" => Box::new(crate::sched::GpUcbRoundRobin::new(problem)),
+        "round-robin" => Box::new(GpEiRoundRobin::new(problem)),
+        "random" => Box::new(GpEiRandom::new(problem, seed ^ 0x5EED)),
+        "oracle" => Box::new(Oracle::new(problem, truth)),
+        other => return Err(format!("unknown policy {other:?}")),
+    })
+}
+
+/// Build the (problem, truth) instance for seed `seed` per the paper's
+/// protocol (§6.1): real datasets get a random 8-user holdout split; the
+/// synthetic workload is regenerated from the seed.
+pub fn make_instance(cfg: &ExperimentConfig, seed: u64) -> Result<(Problem, Truth), String> {
+    match cfg.dataset.as_str() {
+        "azure" => {
+            let data = azure();
+            let mut rng = Rng::new(0xAE0 + seed);
+            let split = data.protocol_split(&mut rng, cfg.holdout);
+            Ok(data.make_problem(&split))
+        }
+        "deeplearning" => {
+            let data = deeplearning();
+            let mut rng = Rng::new(0xD1 + seed);
+            let split = data.protocol_split(&mut rng, cfg.holdout);
+            Ok(data.make_problem(&split))
+        }
+        "synthetic" => Ok(synthetic_gp(&cfg.synthetic, 0x517 + seed)),
+        other => Err(format!("unknown dataset {other:?}")),
+    }
+}
+
+/// Aggregated results for one (policy, device-count) cell of the sweep.
+#[derive(Clone, Debug)]
+pub struct CellResult {
+    /// Policy name.
+    pub policy: String,
+    /// Device count.
+    pub devices: usize,
+    /// Per-seed raw results.
+    pub runs: Vec<SimResult>,
+    /// Mean ± std of cumulative regret.
+    pub cumulative: (f64, f64),
+    /// Mean ± std of time-to-cutoff (seeds that reached it).
+    pub time_to_cutoff: Option<(f64, f64)>,
+    /// Mean instantaneous-regret curve (simple per-seed average curve on
+    /// a uniform grid; also carries the 1σ band).
+    pub curve: Vec<(f64, f64, f64)>,
+}
+
+/// Full sweep output.
+#[derive(Clone, Debug)]
+pub struct ExperimentResults {
+    /// Config used.
+    pub config: ExperimentConfig,
+    /// One cell per (policy, devices) pair, in sweep order.
+    pub cells: Vec<CellResult>,
+}
+
+impl ExperimentResults {
+    /// Find a cell.
+    pub fn cell(&self, policy: &str, devices: usize) -> Option<&CellResult> {
+        self.cells.iter().find(|c| c.policy == policy && c.devices == devices)
+    }
+}
+
+/// Run the full sweep described by `cfg`.
+pub fn run_experiment(cfg: &ExperimentConfig) -> Result<ExperimentResults, String> {
+    cfg.validate()?;
+    let mut cells = Vec::new();
+    for policy_name in &cfg.policies {
+        for &devices in &cfg.devices {
+            let mut runs = Vec::with_capacity(cfg.seeds as usize);
+            for seed in 0..cfg.seeds {
+                let (problem, truth) = make_instance(cfg, seed)?;
+                let mut policy =
+                    make_policy(policy_name, &problem, &truth, seed, cfg.backend)?;
+                runs.push(simulate(
+                    &problem,
+                    &truth,
+                    policy.as_mut(),
+                    &SimConfig {
+                        n_devices: devices,
+                        warm_start_per_user: cfg.warm_start,
+                        horizon: cfg.horizon,
+                        stop_at_cutoff: None,
+                    },
+                ));
+            }
+            cells.push(aggregate_cell(policy_name, devices, runs, cfg.cutoff));
+        }
+    }
+    Ok(ExperimentResults { config: cfg.clone(), cells })
+}
+
+/// Aggregate per-seed runs into a cell.
+pub fn aggregate_cell(
+    policy: &str,
+    devices: usize,
+    runs: Vec<SimResult>,
+    cutoff: f64,
+) -> CellResult {
+    let cumulative = mean_std(&runs.iter().map(|r| r.cumulative_regret).collect::<Vec<_>>());
+    let hit_times: Vec<f64> = runs.iter().filter_map(|r| r.time_to(cutoff)).collect();
+    let time_to_cutoff =
+        if hit_times.len() == runs.len() { Some(mean_std(&hit_times)) } else { None };
+    let t_end = runs.iter().map(|r| r.makespan).fold(0.0f64, f64::max).max(1e-9);
+    let curves: Vec<StepCurve> = runs.iter().map(|r| r.inst_regret.clone()).collect();
+    let curve = aggregate_curves(&curves, &time_grid(t_end, 120));
+    CellResult {
+        policy: policy.to_string(),
+        devices,
+        runs,
+        cumulative,
+        time_to_cutoff,
+        curve,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn quick_cfg() -> ExperimentConfig {
+        ExperimentConfig {
+            dataset: "azure".into(),
+            policies: vec!["mdmt".into(), "round-robin".into()],
+            devices: vec![1, 2],
+            seeds: 2,
+            ..Default::default()
+        }
+    }
+
+    #[test]
+    fn sweep_produces_all_cells() {
+        let res = run_experiment(&quick_cfg()).unwrap();
+        assert_eq!(res.cells.len(), 4);
+        assert!(res.cell("mdmt", 1).is_some());
+        assert!(res.cell("round-robin", 2).is_some());
+        assert!(res.cell("oracle", 1).is_none());
+        for cell in &res.cells {
+            assert_eq!(cell.runs.len(), 2);
+            assert!(cell.cumulative.0 > 0.0);
+            assert!(!cell.curve.is_empty());
+        }
+    }
+
+    #[test]
+    fn policy_vocabulary() {
+        let cfg = quick_cfg();
+        let (p, t) = make_instance(&cfg, 0).unwrap();
+        for name in [
+            "mdmt",
+            "mdmt-nocost",
+            "mdmt-indep",
+            "mdmt-fantasy",
+            "ucb-mdmt",
+            "ucb-round-robin",
+            "round-robin",
+            "random",
+            "oracle",
+        ] {
+            let pol = make_policy(name, &p, &t, 0, Backend::Native).unwrap();
+            assert!(!pol.name().is_empty());
+        }
+        assert!(make_policy("ucb", &p, &t, 0, Backend::Native).is_err());
+    }
+
+    #[test]
+    fn instances_deterministic_per_seed() {
+        let cfg = quick_cfg();
+        let (p1, t1) = make_instance(&cfg, 3).unwrap();
+        let (p2, t2) = make_instance(&cfg, 3).unwrap();
+        assert_eq!(t1.z, t2.z);
+        assert_eq!(p1.cost, p2.cost);
+        let (_, t3) = make_instance(&cfg, 4).unwrap();
+        assert_ne!(t1.z, t3.z);
+    }
+
+    #[test]
+    fn synthetic_instance_uses_config() {
+        let mut cfg = quick_cfg();
+        cfg.dataset = "synthetic".into();
+        cfg.synthetic.n_users = 4;
+        cfg.synthetic.n_models = 5;
+        let (p, t) = make_instance(&cfg, 0).unwrap();
+        assert_eq!(p.n_users, 4);
+        assert_eq!(t.z.len(), 20);
+    }
+}

@@ -1,0 +1,130 @@
+//! Command-line interface: hand-rolled argument parsing (no `clap`
+//! offline) plus the experiment driver shared by `main.rs` and the bench
+//! binaries.
+
+mod driver;
+
+pub use driver::{aggregate_cell, make_instance, make_policy, run_experiment, CellResult, ExperimentResults};
+
+use std::collections::BTreeMap;
+
+/// Parsed command line: a subcommand, `--key value` options, and
+/// `--flag` booleans.
+#[derive(Debug, Default)]
+pub struct Args {
+    /// First positional token (the subcommand).
+    pub command: Option<String>,
+    /// `--key value` pairs.
+    pub options: BTreeMap<String, String>,
+    /// Bare `--flag` switches.
+    pub flags: Vec<String>,
+}
+
+impl Args {
+    /// Parse from an iterator of tokens (usually `std::env::args().skip(1)`).
+    ///
+    /// Grammar: the first non-dash token is the subcommand; `--key value`
+    /// binds the next token unless it also starts with `--`; a trailing
+    /// or value-less `--key` becomes a flag.
+    pub fn parse(tokens: impl IntoIterator<Item = String>) -> Result<Args, String> {
+        let mut args = Args::default();
+        let mut it = tokens.into_iter().peekable();
+        while let Some(tok) = it.next() {
+            if let Some(key) = tok.strip_prefix("--") {
+                if key.is_empty() {
+                    return Err("bare `--` not supported".into());
+                }
+                match it.peek() {
+                    Some(next) if !next.starts_with("--") => {
+                        let value = it.next().unwrap();
+                        args.options.insert(key.to_string(), value);
+                    }
+                    _ => args.flags.push(key.to_string()),
+                }
+            } else if args.command.is_none() {
+                args.command = Some(tok);
+            } else {
+                return Err(format!("unexpected positional argument {tok:?}"));
+            }
+        }
+        Ok(args)
+    }
+
+    /// String option.
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.options.get(key).map(|s| s.as_str())
+    }
+
+    /// String option with default.
+    pub fn get_or(&self, key: &str, default: &str) -> String {
+        self.get(key).unwrap_or(default).to_string()
+    }
+
+    /// Parsed option with default; errors mention the key.
+    pub fn get_parsed_or<T: std::str::FromStr>(&self, key: &str, default: T) -> Result<T, String>
+    where
+        T::Err: std::fmt::Display,
+    {
+        match self.get(key) {
+            None => Ok(default),
+            Some(raw) => raw.parse().map_err(|e| format!("--{key} {raw:?}: {e}")),
+        }
+    }
+
+    /// Comma-separated list option.
+    pub fn get_list(&self, key: &str) -> Option<Vec<String>> {
+        self.get(key)
+            .map(|s| s.split(',').map(|p| p.trim().to_string()).filter(|p| !p.is_empty()).collect())
+    }
+
+    /// Whether a bare flag was passed.
+    pub fn has_flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &str) -> Args {
+        Args::parse(s.split_whitespace().map(str::to_string)).unwrap()
+    }
+
+    #[test]
+    fn subcommand_and_options() {
+        let a = parse("simulate --dataset azure --devices 1,2,4 --seeds 10 --verbose");
+        assert_eq!(a.command.as_deref(), Some("simulate"));
+        assert_eq!(a.get("dataset"), Some("azure"));
+        assert_eq!(a.get_list("devices").unwrap(), vec!["1", "2", "4"]);
+        assert!(a.has_flag("verbose"));
+        assert_eq!(a.get_parsed_or("seeds", 5u64).unwrap(), 10);
+    }
+
+    #[test]
+    fn defaults_and_missing() {
+        let a = parse("theory");
+        assert_eq!(a.get_or("dataset", "azure"), "azure");
+        assert_eq!(a.get_parsed_or("seeds", 7u64).unwrap(), 7);
+        assert!(!a.has_flag("verbose"));
+    }
+
+    #[test]
+    fn flag_followed_by_flag() {
+        let a = parse("serve --verbose --dataset azure");
+        assert!(a.has_flag("verbose"));
+        assert_eq!(a.get("dataset"), Some("azure"));
+    }
+
+    #[test]
+    fn rejects_extra_positionals() {
+        assert!(Args::parse(["a".into(), "b".into()]).is_err());
+    }
+
+    #[test]
+    fn parse_error_mentions_key() {
+        let a = parse("simulate --seeds nope");
+        let err = a.get_parsed_or("seeds", 1u64).unwrap_err();
+        assert!(err.contains("--seeds"), "{err}");
+    }
+}

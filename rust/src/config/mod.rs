@@ -1,0 +1,232 @@
+//! Configuration system: a hand-rolled TOML-subset parser and the typed
+//! experiment configuration the launcher consumes.
+//!
+//! The offline environment ships no `serde`/`toml`, so this module
+//! implements the subset the project needs: `[section]` headers,
+//! `key = value` pairs with string / integer / float / bool / flat-array
+//! values, `#` comments, and helpful line-numbered errors. Experiment
+//! configs live in `configs/*.toml`.
+
+mod toml;
+
+pub use toml::{ParseError, TomlDoc, TomlValue};
+
+use crate::workload::SyntheticConfig;
+
+/// Which posterior/EI backend drives MM-GP-EI.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Backend {
+    /// Native rust incremental-Cholesky GP.
+    Native,
+    /// AOT-compiled JAX/Pallas artifact via PJRT.
+    Xla,
+}
+
+impl std::str::FromStr for Backend {
+    type Err = String;
+    fn from_str(s: &str) -> Result<Self, String> {
+        match s {
+            "native" => Ok(Backend::Native),
+            "xla" => Ok(Backend::Xla),
+            other => Err(format!("unknown backend {other:?} (native|xla)")),
+        }
+    }
+}
+
+/// A fully specified experiment: dataset × policies × device counts ×
+/// seeds, matching the paper's §6.1 protocol knobs.
+#[derive(Clone, Debug)]
+pub struct ExperimentConfig {
+    /// Experiment name (used for report files).
+    pub name: String,
+    /// Dataset: "azure", "deeplearning" or "synthetic".
+    pub dataset: String,
+    /// Policy names (see `cli::make_policy` for the vocabulary).
+    pub policies: Vec<String>,
+    /// Device counts to sweep.
+    pub devices: Vec<usize>,
+    /// Number of protocol re-samplings (seeds).
+    pub seeds: u64,
+    /// Warm-start arms per user (paper: 2).
+    pub warm_start: usize,
+    /// Users held out for prior estimation (paper: 8).
+    pub holdout: usize,
+    /// Optional report horizon.
+    pub horizon: Option<f64>,
+    /// Instantaneous-regret cutoff for time-to-cutoff metrics (Fig. 5).
+    pub cutoff: f64,
+    /// Scoring backend for MM-GP-EI.
+    pub backend: Backend,
+    /// Synthetic workload parameters (used when dataset == "synthetic").
+    pub synthetic: SyntheticConfig,
+}
+
+impl Default for ExperimentConfig {
+    fn default() -> Self {
+        ExperimentConfig {
+            name: "experiment".into(),
+            dataset: "azure".into(),
+            policies: vec!["mdmt".into(), "round-robin".into(), "random".into()],
+            devices: vec![1],
+            seeds: 10,
+            warm_start: 2,
+            holdout: 8,
+            horizon: None,
+            cutoff: 0.01,
+            backend: Backend::Native,
+            synthetic: SyntheticConfig::default(),
+        }
+    }
+}
+
+impl ExperimentConfig {
+    /// Load from a TOML-subset file (see `configs/` for examples).
+    pub fn from_file(path: &str) -> Result<Self, String> {
+        let text = std::fs::read_to_string(path).map_err(|e| format!("reading {path}: {e}"))?;
+        Self::from_toml_str(&text).map_err(|e| format!("{path}: {e}"))
+    }
+
+    /// Parse from TOML text.
+    pub fn from_toml_str(text: &str) -> Result<Self, String> {
+        let doc = TomlDoc::parse(text).map_err(|e| e.to_string())?;
+        let mut cfg = ExperimentConfig::default();
+        let exp = doc.section("experiment");
+        if let Some(v) = exp.get("name") {
+            cfg.name = v.as_str()?.to_string();
+        }
+        if let Some(v) = exp.get("dataset") {
+            cfg.dataset = v.as_str()?.to_string();
+        }
+        if let Some(v) = exp.get("policies") {
+            cfg.policies = v.as_str_array()?;
+        }
+        if let Some(v) = exp.get("devices") {
+            cfg.devices = v.as_usize_array()?;
+        }
+        if let Some(v) = exp.get("seeds") {
+            cfg.seeds = v.as_int()? as u64;
+        }
+        if let Some(v) = exp.get("warm_start") {
+            cfg.warm_start = v.as_int()? as usize;
+        }
+        if let Some(v) = exp.get("holdout") {
+            cfg.holdout = v.as_int()? as usize;
+        }
+        if let Some(v) = exp.get("horizon") {
+            cfg.horizon = Some(v.as_float()?);
+        }
+        if let Some(v) = exp.get("cutoff") {
+            cfg.cutoff = v.as_float()?;
+        }
+        if let Some(v) = exp.get("backend") {
+            cfg.backend = v.as_str()?.parse()?;
+        }
+        let syn = doc.section("synthetic");
+        if let Some(v) = syn.get("n_users") {
+            cfg.synthetic.n_users = v.as_int()? as usize;
+        }
+        if let Some(v) = syn.get("n_models") {
+            cfg.synthetic.n_models = v.as_int()? as usize;
+        }
+        if let Some(v) = syn.get("variance") {
+            cfg.synthetic.variance = v.as_float()?;
+        }
+        if let Some(v) = syn.get("lengthscale") {
+            cfg.synthetic.lengthscale = v.as_float()?;
+        }
+        if let Some(v) = syn.get("cost_lo") {
+            cfg.synthetic.cost_range.0 = v.as_float()?;
+        }
+        if let Some(v) = syn.get("cost_hi") {
+            cfg.synthetic.cost_range.1 = v.as_float()?;
+        }
+        cfg.validate()?;
+        Ok(cfg)
+    }
+
+    /// Sanity-check field combinations.
+    pub fn validate(&self) -> Result<(), String> {
+        if !["azure", "deeplearning", "synthetic"].contains(&self.dataset.as_str()) {
+            return Err(format!("unknown dataset {:?}", self.dataset));
+        }
+        if self.policies.is_empty() {
+            return Err("no policies listed".into());
+        }
+        if self.devices.is_empty() || self.devices.contains(&0) {
+            return Err("devices must be non-empty positive".into());
+        }
+        if self.seeds == 0 {
+            return Err("seeds must be >= 1".into());
+        }
+        if !(self.cutoff > 0.0) {
+            return Err("cutoff must be positive".into());
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"
+# Figure-2 style experiment
+[experiment]
+name = "fig2-azure"
+dataset = "azure"
+policies = ["mdmt", "round-robin", "random"]
+devices = [1]
+seeds = 10
+warm_start = 2
+backend = "native"
+cutoff = 0.01
+
+[synthetic]
+n_users = 50
+n_models = 50
+"#;
+
+    #[test]
+    fn parses_sample_config() {
+        let cfg = ExperimentConfig::from_toml_str(SAMPLE).unwrap();
+        assert_eq!(cfg.name, "fig2-azure");
+        assert_eq!(cfg.dataset, "azure");
+        assert_eq!(cfg.policies, vec!["mdmt", "round-robin", "random"]);
+        assert_eq!(cfg.devices, vec![1]);
+        assert_eq!(cfg.seeds, 10);
+        assert_eq!(cfg.backend, Backend::Native);
+        assert_eq!(cfg.synthetic.n_users, 50);
+    }
+
+    #[test]
+    fn defaults_fill_missing_fields() {
+        let cfg = ExperimentConfig::from_toml_str("[experiment]\ndataset = \"deeplearning\"\n")
+            .unwrap();
+        assert_eq!(cfg.dataset, "deeplearning");
+        assert_eq!(cfg.warm_start, 2);
+        assert_eq!(cfg.holdout, 8);
+    }
+
+    #[test]
+    fn rejects_bad_dataset() {
+        let err =
+            ExperimentConfig::from_toml_str("[experiment]\ndataset = \"imagenet\"\n").unwrap_err();
+        assert!(err.contains("unknown dataset"), "{err}");
+    }
+
+    #[test]
+    fn rejects_zero_devices() {
+        let err = ExperimentConfig::from_toml_str(
+            "[experiment]\ndevices = [0]\n",
+        )
+        .unwrap_err();
+        assert!(err.contains("devices"), "{err}");
+    }
+
+    #[test]
+    fn backend_parse() {
+        assert_eq!("native".parse::<Backend>().unwrap(), Backend::Native);
+        assert_eq!("xla".parse::<Backend>().unwrap(), Backend::Xla);
+        assert!("tpu".parse::<Backend>().is_err());
+    }
+}

@@ -1,0 +1,298 @@
+//! Minimal TOML-subset parser (sections, scalar values, flat arrays).
+
+use std::collections::BTreeMap;
+use std::fmt;
+
+/// A parsed value.
+#[derive(Clone, Debug, PartialEq)]
+pub enum TomlValue {
+    /// Quoted string.
+    Str(String),
+    /// Integer literal.
+    Int(i64),
+    /// Float literal.
+    Float(f64),
+    /// `true` / `false`.
+    Bool(bool),
+    /// Flat array of values.
+    Array(Vec<TomlValue>),
+}
+
+impl TomlValue {
+    /// String view (errors on other kinds).
+    pub fn as_str(&self) -> Result<&str, String> {
+        match self {
+            TomlValue::Str(s) => Ok(s),
+            other => Err(format!("expected string, got {other:?}")),
+        }
+    }
+
+    /// Integer view.
+    pub fn as_int(&self) -> Result<i64, String> {
+        match self {
+            TomlValue::Int(i) => Ok(*i),
+            other => Err(format!("expected integer, got {other:?}")),
+        }
+    }
+
+    /// Float view (accepts integers).
+    pub fn as_float(&self) -> Result<f64, String> {
+        match self {
+            TomlValue::Float(f) => Ok(*f),
+            TomlValue::Int(i) => Ok(*i as f64),
+            other => Err(format!("expected number, got {other:?}")),
+        }
+    }
+
+    /// Bool view.
+    pub fn as_bool(&self) -> Result<bool, String> {
+        match self {
+            TomlValue::Bool(b) => Ok(*b),
+            other => Err(format!("expected bool, got {other:?}")),
+        }
+    }
+
+    /// Array-of-strings view.
+    pub fn as_str_array(&self) -> Result<Vec<String>, String> {
+        match self {
+            TomlValue::Array(xs) => {
+                xs.iter().map(|v| v.as_str().map(str::to_string)).collect()
+            }
+            other => Err(format!("expected array, got {other:?}")),
+        }
+    }
+
+    /// Array-of-usize view.
+    pub fn as_usize_array(&self) -> Result<Vec<usize>, String> {
+        match self {
+            TomlValue::Array(xs) => xs
+                .iter()
+                .map(|v| {
+                    let i = v.as_int()?;
+                    usize::try_from(i).map_err(|_| format!("negative array entry {i}"))
+                })
+                .collect(),
+            other => Err(format!("expected array, got {other:?}")),
+        }
+    }
+}
+
+/// Parse error with a line number.
+#[derive(Debug)]
+pub struct ParseError {
+    /// 1-based line.
+    pub line: usize,
+    /// Description.
+    pub message: String,
+}
+
+impl fmt::Display for ParseError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "line {}: {}", self.line, self.message)
+    }
+}
+
+impl std::error::Error for ParseError {}
+
+/// A parsed document: section name → key → value. Keys outside any
+/// section land in the "" section.
+#[derive(Debug, Default)]
+pub struct TomlDoc {
+    sections: BTreeMap<String, BTreeMap<String, TomlValue>>,
+}
+
+impl TomlDoc {
+    /// Parse the subset grammar.
+    pub fn parse(text: &str) -> Result<TomlDoc, ParseError> {
+        let mut doc = TomlDoc::default();
+        let mut current = String::new();
+        for (i, raw) in text.lines().enumerate() {
+            let lineno = i + 1;
+            let line = strip_comment(raw).trim();
+            if line.is_empty() {
+                continue;
+            }
+            if let Some(rest) = line.strip_prefix('[') {
+                let name = rest.strip_suffix(']').ok_or_else(|| ParseError {
+                    line: lineno,
+                    message: "unterminated section header".into(),
+                })?;
+                current = name.trim().to_string();
+                doc.sections.entry(current.clone()).or_default();
+                continue;
+            }
+            let eq = line.find('=').ok_or_else(|| ParseError {
+                line: lineno,
+                message: format!("expected `key = value`, got {line:?}"),
+            })?;
+            let key = line[..eq].trim();
+            if key.is_empty() {
+                return Err(ParseError { line: lineno, message: "empty key".into() });
+            }
+            let value = parse_value(line[eq + 1..].trim(), lineno)?;
+            doc.sections.entry(current.clone()).or_default().insert(key.to_string(), value);
+        }
+        Ok(doc)
+    }
+
+    /// Section view (empty map if absent).
+    pub fn section(&self, name: &str) -> SectionView<'_> {
+        SectionView { map: self.sections.get(name) }
+    }
+
+    /// Section names.
+    pub fn section_names(&self) -> impl Iterator<Item = &str> {
+        self.sections.keys().map(|s| s.as_str())
+    }
+}
+
+/// Borrowed view over one section.
+pub struct SectionView<'a> {
+    map: Option<&'a BTreeMap<String, TomlValue>>,
+}
+
+impl<'a> SectionView<'a> {
+    /// Value for a key, if present.
+    pub fn get(&self, key: &str) -> Option<&'a TomlValue> {
+        self.map.and_then(|m| m.get(key))
+    }
+}
+
+fn strip_comment(line: &str) -> &str {
+    // `#` starts a comment unless inside a quoted string.
+    let mut in_str = false;
+    for (i, c) in line.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            '#' if !in_str => return &line[..i],
+            _ => {}
+        }
+    }
+    line
+}
+
+fn parse_value(tok: &str, lineno: usize) -> Result<TomlValue, ParseError> {
+    let err = |m: String| ParseError { line: lineno, message: m };
+    if tok.is_empty() {
+        return Err(err("missing value".into()));
+    }
+    if let Some(rest) = tok.strip_prefix('"') {
+        let inner = rest.strip_suffix('"').ok_or_else(|| err("unterminated string".into()))?;
+        if inner.contains('"') {
+            return Err(err("embedded quote in string (escapes unsupported)".into()));
+        }
+        return Ok(TomlValue::Str(inner.to_string()));
+    }
+    if let Some(rest) = tok.strip_prefix('[') {
+        let inner = rest.strip_suffix(']').ok_or_else(|| err("unterminated array".into()))?;
+        let inner = inner.trim();
+        if inner.is_empty() {
+            return Ok(TomlValue::Array(Vec::new()));
+        }
+        let mut items = Vec::new();
+        for part in split_array_items(inner) {
+            items.push(parse_value(part.trim(), lineno)?);
+        }
+        return Ok(TomlValue::Array(items));
+    }
+    match tok {
+        "true" => return Ok(TomlValue::Bool(true)),
+        "false" => return Ok(TomlValue::Bool(false)),
+        _ => {}
+    }
+    if let Ok(i) = tok.parse::<i64>() {
+        return Ok(TomlValue::Int(i));
+    }
+    if let Ok(f) = tok.parse::<f64>() {
+        return Ok(TomlValue::Float(f));
+    }
+    Err(err(format!("cannot parse value {tok:?}")))
+}
+
+/// Split a flat array body at commas not inside quotes.
+fn split_array_items(s: &str) -> Vec<&str> {
+    let mut out = Vec::new();
+    let mut start = 0;
+    let mut in_str = false;
+    for (i, c) in s.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            ',' if !in_str => {
+                out.push(&s[start..i]);
+                start = i + 1;
+            }
+            _ => {}
+        }
+    }
+    out.push(&s[start..]);
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_scalars() {
+        let doc = TomlDoc::parse(
+            "a = 1\nb = 2.5\nc = \"hi\"\nd = true\ne = -3\n",
+        )
+        .unwrap();
+        let s = doc.section("");
+        assert_eq!(s.get("a").unwrap().as_int().unwrap(), 1);
+        assert_eq!(s.get("b").unwrap().as_float().unwrap(), 2.5);
+        assert_eq!(s.get("c").unwrap().as_str().unwrap(), "hi");
+        assert!(s.get("d").unwrap().as_bool().unwrap());
+        assert_eq!(s.get("e").unwrap().as_int().unwrap(), -3);
+    }
+
+    #[test]
+    fn parses_sections_and_arrays() {
+        let doc = TomlDoc::parse(
+            "[x]\nnums = [1, 2, 3]\nnames = [\"a\", \"b\"]\nempty = []\n[y]\nk = 7\n",
+        )
+        .unwrap();
+        assert_eq!(doc.section("x").get("nums").unwrap().as_usize_array().unwrap(), vec![1, 2, 3]);
+        assert_eq!(
+            doc.section("x").get("names").unwrap().as_str_array().unwrap(),
+            vec!["a", "b"]
+        );
+        assert_eq!(
+            doc.section("x").get("empty").unwrap(),
+            &TomlValue::Array(vec![])
+        );
+        assert_eq!(doc.section("y").get("k").unwrap().as_int().unwrap(), 7);
+        assert!(doc.section("z").get("k").is_none());
+    }
+
+    #[test]
+    fn comments_stripped_even_after_values() {
+        let doc = TomlDoc::parse("a = 5 # five\nb = \"x # y\" # real comment\n").unwrap();
+        assert_eq!(doc.section("").get("a").unwrap().as_int().unwrap(), 5);
+        assert_eq!(doc.section("").get("b").unwrap().as_str().unwrap(), "x # y");
+    }
+
+    #[test]
+    fn errors_carry_line_numbers() {
+        let err = TomlDoc::parse("good = 1\nbad line\n").unwrap_err();
+        assert_eq!(err.line, 2);
+        let err = TomlDoc::parse("x = \"unterminated\n").unwrap_err();
+        assert_eq!(err.line, 1);
+        let err = TomlDoc::parse("[unclosed\n").unwrap_err();
+        assert_eq!(err.line, 1);
+    }
+
+    #[test]
+    fn float_and_int_coercion() {
+        let doc = TomlDoc::parse("f = 3\n").unwrap();
+        assert_eq!(doc.section("").get("f").unwrap().as_float().unwrap(), 3.0);
+        let doc = TomlDoc::parse("f = 3.5\n").unwrap();
+        assert!(doc.section("").get("f").unwrap().as_int().is_err());
+    }
+
+    #[test]
+    fn negative_usize_array_rejected() {
+        let doc = TomlDoc::parse("a = [1, -2]\n").unwrap();
+        assert!(doc.section("").get("a").unwrap().as_usize_array().is_err());
+    }
+}

@@ -1,0 +1,356 @@
+//! Live serving coordinator: the paper's service deployed as a real
+//! multi-threaded leader/worker system (wall-clock time, real
+//! asynchrony), as opposed to the deterministic virtual-time simulator
+//! in [`crate::sim`].
+//!
+//! Topology: the **leader** (caller thread) owns the policy — including a
+//! PJRT-backed [`crate::runtime::XlaBackend`], which is not thread-safe —
+//! and the regret accounting. Each **device** is a worker thread with its
+//! own job channel; running a model is simulated by sleeping
+//! `c(x) × time_scale` seconds (the substitution for real training, see
+//! DESIGN.md §3: regret depends only on the schedule). Completions flow
+//! back over a shared channel; every completion triggers one scheduling
+//! decision, exactly like Algorithm 1's "while there is a device
+//! available".
+//!
+//! The report includes per-decision latencies — the number that must stay
+//! far below `min c(x) × time_scale` for the scheduler never to become
+//! the bottleneck (§Perf L3 target).
+
+use std::collections::VecDeque;
+use std::sync::mpsc;
+use std::thread;
+use std::time::{Duration, Instant};
+
+use crate::metrics::StepCurve;
+use crate::problem::{ArmId, Problem, Truth};
+use crate::sched::{Policy, SchedContext, EMPTY_INCUMBENT};
+
+/// Serving parameters.
+#[derive(Clone, Debug)]
+pub struct ServeConfig {
+    /// Number of device worker threads.
+    pub n_devices: usize,
+    /// Wall-clock seconds per abstract cost unit.
+    pub time_scale: f64,
+    /// Warm-start arms per user (paper protocol: 2).
+    pub warm_start_per_user: usize,
+    /// Print progress lines to stderr.
+    pub verbose: bool,
+}
+
+impl Default for ServeConfig {
+    fn default() -> Self {
+        ServeConfig { n_devices: 2, time_scale: 0.005, warm_start_per_user: 2, verbose: false }
+    }
+}
+
+/// One served job in the report.
+#[derive(Clone, Debug)]
+pub struct ServedJob {
+    /// Arm that ran.
+    pub arm: ArmId,
+    /// Dispatch offset from serve start.
+    pub start: Duration,
+    /// Completion offset from serve start.
+    pub finish: Duration,
+    /// Revealed performance.
+    pub z: f64,
+    /// Worker that ran it.
+    pub device: usize,
+}
+
+/// Result of a serve session.
+#[derive(Clone, Debug)]
+pub struct ServeReport {
+    /// Policy display name.
+    pub policy: String,
+    /// All completions in completion order.
+    pub jobs: Vec<ServedJob>,
+    /// Instantaneous regret over wall-clock seconds.
+    pub inst_regret: StepCurve,
+    /// Wall-clock latency of every scheduling decision.
+    pub decision_latencies: Vec<Duration>,
+    /// Total session duration.
+    pub makespan: Duration,
+}
+
+impl ServeReport {
+    /// Max decision latency (the L3 §Perf headline).
+    pub fn max_decision_latency(&self) -> Duration {
+        self.decision_latencies.iter().max().copied().unwrap_or_default()
+    }
+
+    /// Mean decision latency.
+    pub fn mean_decision_latency(&self) -> Duration {
+        if self.decision_latencies.is_empty() {
+            return Duration::ZERO;
+        }
+        self.decision_latencies.iter().sum::<Duration>() / self.decision_latencies.len() as u32
+    }
+}
+
+/// Job message to a device worker.
+struct Job {
+    arm: ArmId,
+    sleep: Duration,
+    z: f64,
+}
+
+/// Completion message back to the leader.
+struct Done {
+    device: usize,
+    arm: ArmId,
+    z: f64,
+}
+
+/// Run a live serving session of `policy` over `(problem, truth)`.
+pub fn serve(
+    problem: &Problem,
+    truth: &Truth,
+    policy: &mut dyn Policy,
+    config: &ServeConfig,
+) -> ServeReport {
+    assert!(config.n_devices >= 1);
+    assert!(config.time_scale > 0.0);
+    let n_arms = problem.n_arms();
+    let n_users = problem.n_users;
+
+    let (done_tx, done_rx) = mpsc::channel::<Done>();
+    let mut job_txs = Vec::with_capacity(config.n_devices);
+    let mut workers = Vec::with_capacity(config.n_devices);
+    for device in 0..config.n_devices {
+        let (tx, rx) = mpsc::channel::<Job>();
+        let done_tx = done_tx.clone();
+        job_txs.push(tx);
+        workers.push(thread::spawn(move || {
+            // Device worker: "train" each model by sleeping its cost,
+            // then report the observed performance.
+            while let Ok(job) = rx.recv() {
+                thread::sleep(job.sleep);
+                if done_tx.send(Done { device, arm: job.arm, z: job.z }).is_err() {
+                    break; // leader gone
+                }
+            }
+        }));
+    }
+    drop(done_tx);
+
+    let t0 = Instant::now();
+    let mut selected = vec![false; n_arms];
+    let mut observed = vec![false; n_arms];
+    let mut warm: VecDeque<ArmId> = problem.warm_start_arms(config.warm_start_per_user).into();
+    let z_star: Vec<f64> = (0..n_users).map(|u| truth.best_value(problem, u)).collect();
+    let mut incumbent = vec![EMPTY_INCUMBENT; n_users];
+    let gap_avg = |inc: &[f64]| -> f64 {
+        inc.iter().zip(&z_star).map(|(&b, &s)| (s - b).max(0.0)).sum::<f64>() / n_users as f64
+    };
+    let mut inst_regret = StepCurve::new(gap_avg(&incumbent));
+    let mut decision_latencies = Vec::new();
+    let mut jobs = Vec::with_capacity(n_arms);
+    let mut in_flight = 0usize;
+
+    let dispatch = |device: usize,
+                        selected: &mut Vec<bool>,
+                        observed: &[bool],
+                        warm: &mut VecDeque<ArmId>,
+                        policy: &mut dyn Policy,
+                        decision_latencies: &mut Vec<Duration>,
+                        in_flight: &mut usize| {
+        while let Some(&a) = warm.front() {
+            if selected[a] {
+                warm.pop_front();
+            } else {
+                break;
+            }
+        }
+        let arm = if let Some(a) = warm.pop_front() {
+            Some(a)
+        } else {
+            let now = t0.elapsed().as_secs_f64();
+            let ctx = SchedContext { problem, selected, observed, now };
+            let d0 = Instant::now();
+            let pick = policy.select(&ctx);
+            decision_latencies.push(d0.elapsed());
+            pick
+        };
+        if let Some(a) = arm {
+            assert!(!selected[a], "policy returned already-selected arm {a}");
+            selected[a] = true;
+            *in_flight += 1;
+            job_txs[device]
+                .send(Job {
+                    arm: a,
+                    sleep: Duration::from_secs_f64(problem.cost[a] * config.time_scale),
+                    z: truth.z[a],
+                })
+                .expect("worker hung up");
+        }
+    };
+
+    for device in 0..config.n_devices {
+        dispatch(
+            device,
+            &mut selected,
+            &observed,
+            &mut warm,
+            policy,
+            &mut decision_latencies,
+            &mut in_flight,
+        );
+    }
+
+    while in_flight > 0 {
+        let done = done_rx.recv().expect("all workers died");
+        in_flight -= 1;
+        let finish = t0.elapsed();
+        observed[done.arm] = true;
+        policy.observe(problem, done.arm, done.z);
+        for &u in &problem.arm_users[done.arm] {
+            incumbent[u] = incumbent[u].max(done.z);
+        }
+        inst_regret.push(finish.as_secs_f64(), gap_avg(&incumbent));
+        jobs.push(ServedJob {
+            arm: done.arm,
+            start: Duration::ZERO, // filled below from cost
+            finish,
+            z: done.z,
+            device: done.device,
+        });
+        if let Some(last) = jobs.last_mut() {
+            let run = Duration::from_secs_f64(problem.cost[last.arm] * config.time_scale);
+            last.start = finish.saturating_sub(run);
+        }
+        if config.verbose {
+            eprintln!(
+                "[{:8.3}s] device {} finished arm {} (z = {:.4}); avg regret {:.4}",
+                finish.as_secs_f64(),
+                done.device,
+                done.arm,
+                done.z,
+                gap_avg(&incumbent)
+            );
+        }
+        dispatch(
+            done.device,
+            &mut selected,
+            &observed,
+            &mut warm,
+            policy,
+            &mut decision_latencies,
+            &mut in_flight,
+        );
+    }
+
+    // Shut workers down.
+    drop(job_txs);
+    for w in workers {
+        let _ = w.join();
+    }
+
+    ServeReport {
+        policy: policy.name(),
+        jobs,
+        inst_regret,
+        decision_latencies,
+        makespan: t0.elapsed(),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::Mat;
+    use crate::sched::MmGpEi;
+
+    fn tiny() -> (Problem, Truth) {
+        let user_arms = vec![vec![0, 1], vec![2, 3]];
+        let arm_users = Problem::compute_arm_users(4, &user_arms);
+        let p = Problem {
+            name: "serve-test".into(),
+            n_users: 2,
+            cost: vec![1.0, 2.0, 1.0, 2.0],
+            user_arms,
+            arm_users,
+            prior_mean: vec![0.5; 4],
+            prior_cov: Mat::eye(4),
+        };
+        let t = Truth { z: vec![0.6, 0.9, 0.4, 0.8] };
+        (p, t)
+    }
+
+    #[test]
+    fn serves_all_arms_and_reaches_zero_regret() {
+        let (p, t) = tiny();
+        let mut pol = MmGpEi::new(&p);
+        let report = serve(
+            &p,
+            &t,
+            &mut pol,
+            &ServeConfig { n_devices: 2, time_scale: 0.002, warm_start_per_user: 1, verbose: false },
+        );
+        assert_eq!(report.jobs.len(), 4);
+        assert_eq!(report.inst_regret.final_value(), 0.0);
+        let mut arms: Vec<_> = report.jobs.iter().map(|j| j.arm).collect();
+        arms.sort_unstable();
+        assert_eq!(arms, vec![0, 1, 2, 3]);
+    }
+
+    #[test]
+    fn decision_latencies_recorded() {
+        let (p, t) = tiny();
+        let mut pol = MmGpEi::new(&p);
+        let report = serve(
+            &p,
+            &t,
+            &mut pol,
+            &ServeConfig { n_devices: 1, time_scale: 0.001, warm_start_per_user: 0, verbose: false },
+        );
+        assert!(!report.decision_latencies.is_empty());
+        assert!(report.mean_decision_latency() <= report.max_decision_latency());
+    }
+
+    #[test]
+    fn wall_clock_respects_costs_roughly() {
+        let (p, t) = tiny();
+        let mut pol = MmGpEi::new(&p);
+        let scale = 0.004;
+        let report = serve(
+            &p,
+            &t,
+            &mut pol,
+            &ServeConfig { n_devices: 1, time_scale: scale, warm_start_per_user: 0, verbose: false },
+        );
+        // Sequential: makespan ≳ Σc × scale.
+        let total: f64 = p.cost.iter().sum();
+        assert!(report.makespan.as_secs_f64() >= total * scale * 0.9);
+    }
+
+    #[test]
+    fn parallel_devices_shorten_makespan() {
+        let (p, t) = tiny();
+        let run = |m: usize| {
+            let mut pol = MmGpEi::new(&p);
+            serve(
+                &p,
+                &t,
+                &mut pol,
+                &ServeConfig {
+                    n_devices: m,
+                    time_scale: 0.01,
+                    warm_start_per_user: 0,
+                    verbose: false,
+                },
+            )
+            .makespan
+        };
+        let m1 = run(1);
+        let m4 = run(4);
+        assert!(
+            m4.as_secs_f64() < m1.as_secs_f64() * 0.8,
+            "4 devices {:?} should beat 1 device {:?}",
+            m4,
+            m1
+        );
+    }
+}

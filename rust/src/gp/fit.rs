@@ -1,0 +1,208 @@
+//! GP prior hyperparameter fitting — the "parameters of the Gaussian
+//! process can be obtained from historical experiences" discussion of
+//! the paper's §4.2, made concrete: maximize the log marginal likelihood
+//! of holdout observations over kernel hyperparameters with an in-tree
+//! Nelder–Mead optimizer (no optimization crates exist in the offline
+//! environment — this is another substrate built from scratch).
+
+use crate::kernels::{Kernel, Matern52};
+use crate::linalg::{cholesky_jittered, cholesky_solve, logdet_from_cholesky, Mat};
+
+/// Log marginal likelihood of observations `y` under a zero-mean GP with
+/// covariance `k`: `−½ yᵀK⁻¹y − ½ log|K| − n/2·log 2π`.
+pub fn log_marginal_likelihood(k: &Mat, y: &[f64]) -> f64 {
+    let n = y.len();
+    assert_eq!(k.rows(), n);
+    let (l, _) = match cholesky_jittered(k, 1e-10) {
+        Ok(ok) => ok,
+        Err(_) => return f64::NEG_INFINITY,
+    };
+    let alpha = cholesky_solve(&l, y);
+    let fit: f64 = y.iter().zip(&alpha).map(|(a, b)| a * b).sum();
+    -0.5 * fit - 0.5 * logdet_from_cholesky(&l)
+        - 0.5 * n as f64 * (2.0 * std::f64::consts::PI).ln()
+}
+
+/// Nelder–Mead simplex minimizer (derivative-free).
+///
+/// Standard coefficients (reflection 1, expansion 2, contraction ½,
+/// shrink ½); terminates when the simplex's objective spread drops below
+/// `tol` or after `max_iter` iterations. Returns `(argmin, min)`.
+pub fn nelder_mead(
+    f: impl Fn(&[f64]) -> f64,
+    x0: &[f64],
+    step: f64,
+    tol: f64,
+    max_iter: usize,
+) -> (Vec<f64>, f64) {
+    let dim = x0.len();
+    assert!(dim >= 1);
+    // Initial simplex: x0 plus one perturbed vertex per dimension.
+    let mut simplex: Vec<(Vec<f64>, f64)> = Vec::with_capacity(dim + 1);
+    simplex.push((x0.to_vec(), f(x0)));
+    for d in 0..dim {
+        let mut v = x0.to_vec();
+        v[d] += step;
+        let fv = f(&v);
+        simplex.push((v, fv));
+    }
+    for _ in 0..max_iter {
+        simplex.sort_by(|a, b| a.1.partial_cmp(&b.1).unwrap());
+        let spread = simplex[dim].1 - simplex[0].1;
+        if spread.abs() < tol {
+            break;
+        }
+        // Centroid of all but the worst.
+        let mut centroid = vec![0.0; dim];
+        for (v, _) in &simplex[..dim] {
+            for d in 0..dim {
+                centroid[d] += v[d] / dim as f64;
+            }
+        }
+        let worst = simplex[dim].clone();
+        let lerp = |t: f64| -> Vec<f64> {
+            (0..dim).map(|d| centroid[d] + t * (worst.0[d] - centroid[d])).collect()
+        };
+        let reflect = lerp(-1.0);
+        let f_reflect = f(&reflect);
+        if f_reflect < simplex[0].1 {
+            // Try expansion.
+            let expand = lerp(-2.0);
+            let f_expand = f(&expand);
+            simplex[dim] = if f_expand < f_reflect {
+                (expand, f_expand)
+            } else {
+                (reflect, f_reflect)
+            };
+        } else if f_reflect < simplex[dim - 1].1 {
+            simplex[dim] = (reflect, f_reflect);
+        } else {
+            // Contraction (outside if reflection helped at all).
+            let contract = if f_reflect < worst.1 { lerp(-0.5) } else { lerp(0.5) };
+            let f_contract = f(&contract);
+            if f_contract < worst.1.min(f_reflect) {
+                simplex[dim] = (contract, f_contract);
+            } else {
+                // Shrink toward the best vertex.
+                let best = simplex[0].0.clone();
+                for item in simplex.iter_mut().skip(1) {
+                    for d in 0..dim {
+                        item.0[d] = best[d] + 0.5 * (item.0[d] - best[d]);
+                    }
+                    item.1 = f(&item.0);
+                }
+            }
+        }
+    }
+    simplex.sort_by(|a, b| a.1.partial_cmp(&b.1).unwrap());
+    simplex[0].clone().into()
+}
+
+/// Fitted Matérn-5/2 hyperparameters.
+#[derive(Clone, Debug, PartialEq)]
+pub struct FittedMatern {
+    /// Output variance σ².
+    pub variance: f64,
+    /// Lengthscale ℓ.
+    pub lengthscale: f64,
+    /// Achieved log marginal likelihood.
+    pub log_marginal: f64,
+}
+
+/// Fit Matérn-5/2 `(σ², ℓ)` to zero-mean observations `y` at 1-D
+/// `points` by maximizing the log marginal likelihood (optimized in
+/// log-parameter space to keep both positive).
+pub fn fit_matern52(points: &[Vec<f64>], y: &[f64], init: &Matern52) -> FittedMatern {
+    assert_eq!(points.len(), y.len());
+    let objective = |log_params: &[f64]| -> f64 {
+        let kern = Matern52 { variance: log_params[0].exp(), lengthscale: log_params[1].exp() };
+        // Guard absurd scales that make the gram matrix degenerate.
+        if !(1e-8..1e8).contains(&kern.variance) || !(1e-8..1e8).contains(&kern.lengthscale) {
+            return f64::INFINITY;
+        }
+        -log_marginal_likelihood(&kern.gram(points), y)
+    };
+    let x0 = [init.variance.ln(), init.lengthscale.ln()];
+    let (best, neg_lml) = nelder_mead(objective, &x0, 0.4, 1e-8, 200);
+    FittedMatern {
+        variance: best[0].exp(),
+        lengthscale: best[1].exp(),
+        log_marginal: -neg_lml,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::prng::Rng;
+
+    #[test]
+    fn nelder_mead_minimizes_quadratic() {
+        let f = |x: &[f64]| (x[0] - 3.0).powi(2) + 2.0 * (x[1] + 1.0).powi(2) + 5.0;
+        let (x, fx) = nelder_mead(f, &[0.0, 0.0], 1.0, 1e-12, 500);
+        assert!((x[0] - 3.0).abs() < 1e-4, "{x:?}");
+        assert!((x[1] + 1.0).abs() < 1e-4);
+        assert!((fx - 5.0).abs() < 1e-8);
+    }
+
+    #[test]
+    fn nelder_mead_rosenbrock_1d_family() {
+        // Rosenbrock in 2-D: minimum at (1, 1).
+        let f = |x: &[f64]| (1.0 - x[0]).powi(2) + 100.0 * (x[1] - x[0] * x[0]).powi(2);
+        let (x, fx) = nelder_mead(f, &[-1.2, 1.0], 0.5, 1e-14, 5000);
+        assert!(fx < 1e-6, "rosenbrock min {fx} at {x:?}");
+    }
+
+    #[test]
+    fn lml_prefers_true_kernel() {
+        // Draw from a known Matérn; its LML must beat badly wrong scales.
+        let pts: Vec<Vec<f64>> = (0..30).map(|i| vec![i as f64 * 0.3]).collect();
+        let truth = Matern52 { variance: 1.0, lengthscale: 1.0 };
+        let gram = truth.gram(&pts);
+        let (l, _) = cholesky_jittered(&gram, 1e-10).unwrap();
+        let mut rng = Rng::new(44);
+        let y = rng.mvn(&vec![0.0; 30], &l);
+        let lml_true = log_marginal_likelihood(&gram, &y);
+        for wrong in [
+            Matern52 { variance: 25.0, lengthscale: 1.0 },
+            Matern52 { variance: 1.0, lengthscale: 0.05 },
+            Matern52 { variance: 0.05, lengthscale: 1.0 },
+        ] {
+            let lml_wrong = log_marginal_likelihood(&wrong.gram(&pts), &y);
+            assert!(
+                lml_true > lml_wrong,
+                "true kernel must beat σ²={}, ℓ={}: {lml_true} vs {lml_wrong}",
+                wrong.variance,
+                wrong.lengthscale
+            );
+        }
+    }
+
+    #[test]
+    fn fit_recovers_ballpark_hyperparameters() {
+        let pts: Vec<Vec<f64>> = (0..40).map(|i| vec![i as f64 * 0.25]).collect();
+        let truth = Matern52 { variance: 2.0, lengthscale: 0.8 };
+        let gram = truth.gram(&pts);
+        let (l, _) = cholesky_jittered(&gram, 1e-10).unwrap();
+        let mut rng = Rng::new(7);
+        let y = rng.mvn(&vec![0.0; 40], &l);
+        let fitted = fit_matern52(&pts, &y, &Matern52 { variance: 0.5, lengthscale: 2.0 });
+        // One sample path → loose recovery bounds; order of magnitude is
+        // what matters for the prior-misspecification experiment.
+        assert!(fitted.variance > 0.4 && fitted.variance < 10.0, "{fitted:?}");
+        assert!(fitted.lengthscale > 0.2 && fitted.lengthscale < 3.2, "{fitted:?}");
+        // Fitted LML must be at least as good as the init's.
+        let init_lml = log_marginal_likelihood(
+            &Matern52 { variance: 0.5, lengthscale: 2.0 }.gram(&pts),
+            &y,
+        );
+        assert!(fitted.log_marginal >= init_lml - 1e-9);
+    }
+
+    #[test]
+    fn lml_degenerate_matrix_is_neg_inf() {
+        // A matrix that stays indefinite even after jitter escalation.
+        let k = Mat::from_rows(&[&[1.0, 5.0], &[5.0, 1.0]]);
+        assert_eq!(log_marginal_likelihood(&k, &[0.1, 0.2]), f64::NEG_INFINITY);
+    }
+}

@@ -1,0 +1,262 @@
+//! Gaussian-process covariance functions over the arm space.
+//!
+//! The paper (§4.2) chooses the GP prior "from historical experiences":
+//! the correlation between two arms depends on (a) the similarity of the
+//! *models* and (b) the similarity of the *users' datasets*. This module
+//! provides:
+//!
+//! * stationary kernels over feature vectors ([`Matern52`], [`Rbf`]) —
+//!   the synthetic Figure-5 experiment uses Matérn ν = 5/2;
+//! * [`empirical_model_cov`] — the "historical runs" estimator: a
+//!   model×model covariance estimated from a matrix of holdout-user
+//!   accuracies (the paper's protocol isolates 8 users for exactly this);
+//! * [`kronecker_arm_cov`] — the user⊗model composition that turns a
+//!   model-covariance and a user-similarity into a full arm covariance.
+
+use crate::linalg::Mat;
+
+/// A positive-definite kernel over ℝᵈ feature vectors.
+pub trait Kernel {
+    /// Covariance `k(x, x')`.
+    fn eval(&self, x: &[f64], y: &[f64]) -> f64;
+
+    /// Gram matrix over a set of points.
+    fn gram(&self, points: &[Vec<f64>]) -> Mat {
+        let n = points.len();
+        let mut k = Mat::zeros(n, n);
+        for i in 0..n {
+            for j in 0..=i {
+                let v = self.eval(&points[i], &points[j]);
+                k[(i, j)] = v;
+                k[(j, i)] = v;
+            }
+        }
+        k
+    }
+}
+
+#[inline]
+fn sq_dist(x: &[f64], y: &[f64]) -> f64 {
+    debug_assert_eq!(x.len(), y.len());
+    x.iter().zip(y).map(|(a, b)| (a - b) * (a - b)).sum()
+}
+
+/// Matérn ν = 5/2 kernel,
+/// `k(r) = σ²(1 + √5 r/ℓ + 5r²/(3ℓ²))·exp(−√5 r/ℓ)` — the kernel used for
+/// the paper's synthetic experiment (Figure 5).
+#[derive(Clone, Debug)]
+pub struct Matern52 {
+    /// Output variance σ².
+    pub variance: f64,
+    /// Lengthscale ℓ.
+    pub lengthscale: f64,
+}
+
+impl Kernel for Matern52 {
+    fn eval(&self, x: &[f64], y: &[f64]) -> f64 {
+        let r = sq_dist(x, y).sqrt();
+        let s = 5f64.sqrt() * r / self.lengthscale;
+        self.variance * (1.0 + s + s * s / 3.0) * (-s).exp()
+    }
+}
+
+/// Squared-exponential (RBF) kernel `σ²·exp(−r²/(2ℓ²))`.
+#[derive(Clone, Debug)]
+pub struct Rbf {
+    /// Output variance σ².
+    pub variance: f64,
+    /// Lengthscale ℓ.
+    pub lengthscale: f64,
+}
+
+impl Kernel for Rbf {
+    fn eval(&self, x: &[f64], y: &[f64]) -> f64 {
+        self.variance * (-0.5 * sq_dist(x, y) / (self.lengthscale * self.lengthscale)).exp()
+    }
+}
+
+/// Empirical model×model covariance from a history matrix.
+///
+/// `history[u][m]` is the observed performance of model `m` on holdout
+/// user `u`'s dataset. Returns `(mean, cov)` where `mean[m]` is the
+/// per-model empirical mean and `cov` the (ridge-regularized) empirical
+/// covariance across holdout users — the paper's "construct the kernel
+/// matrix from historical runs" (§4.2).
+pub fn empirical_model_cov(history: &[Vec<f64>], ridge: f64) -> (Vec<f64>, Mat) {
+    let u = history.len();
+    assert!(u >= 2, "need at least two holdout users to estimate covariance");
+    let m = history[0].len();
+    let mut mean = vec![0.0; m];
+    for row in history {
+        assert_eq!(row.len(), m, "ragged history matrix");
+        for (acc, &v) in mean.iter_mut().zip(row.iter()) {
+            *acc += v;
+        }
+    }
+    for v in mean.iter_mut() {
+        *v /= u as f64;
+    }
+    let mut cov = Mat::zeros(m, m);
+    for row in history {
+        for i in 0..m {
+            let di = row[i] - mean[i];
+            for j in 0..=i {
+                let dj = row[j] - mean[j];
+                cov[(i, j)] += di * dj;
+            }
+        }
+    }
+    let denom = (u - 1) as f64;
+    for i in 0..m {
+        for j in 0..=i {
+            let v = cov[(i, j)] / denom;
+            cov[(i, j)] = v;
+            cov[(j, i)] = v;
+        }
+    }
+    // Ridge keeps the estimate PD when #holdout-users < #models.
+    for i in 0..m {
+        cov[(i, i)] += ridge;
+    }
+    (mean, cov)
+}
+
+/// Exchangeable user-similarity matrix
+/// `U = (1 − ρ)·I + ρ·𝟙𝟙ᵀ` for `ρ ∈ [0, 1)`.
+///
+/// ρ is the assumed correlation between *different* users' responses to
+/// the same model; ρ = 0 recovers fully independent users (the paper's
+/// "not converge" special case of §5.2), ρ → 1 makes every user share one
+/// latent response.
+pub fn exchangeable_user_sim(n_users: usize, rho: f64) -> Mat {
+    assert!((0.0..1.0).contains(&rho), "rho must be in [0,1)");
+    Mat::from_fn(n_users, n_users, |i, j| if i == j { 1.0 } else { rho })
+}
+
+/// Kronecker arm covariance: arm `a = (user uₐ, model mₐ)` gets
+/// `K[a,b] = U[uₐ, u_b] · C[mₐ, m_b]` — dataset similarity times model
+/// similarity, the standard multi-task GP construction the paper alludes
+/// to in §4.2.
+///
+/// `arms[a] = (user, model)`.
+pub fn kronecker_arm_cov(arms: &[(usize, usize)], user_sim: &Mat, model_cov: &Mat) -> Mat {
+    let n = arms.len();
+    let mut k = Mat::zeros(n, n);
+    for a in 0..n {
+        let (ua, ma) = arms[a];
+        for b in 0..=a {
+            let (ub, mb) = arms[b];
+            let v = user_sim[(ua, ub)] * model_cov[(ma, mb)];
+            k[(a, b)] = v;
+            k[(b, a)] = v;
+        }
+    }
+    k
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::{cholesky, cholesky_jittered};
+
+    #[test]
+    fn matern_at_zero_is_variance() {
+        let k = Matern52 { variance: 2.5, lengthscale: 1.3 };
+        assert!((k.eval(&[0.7, -0.2], &[0.7, -0.2]) - 2.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn matern_decreases_with_distance() {
+        let k = Matern52 { variance: 1.0, lengthscale: 1.0 };
+        let mut prev = k.eval(&[0.0], &[0.0]);
+        for step in 1..30 {
+            let d = step as f64 * 0.3;
+            let v = k.eval(&[0.0], &[d]);
+            assert!(v < prev, "Matérn must decay at distance {d}");
+            assert!(v > 0.0);
+            prev = v;
+        }
+    }
+
+    #[test]
+    fn matern_known_value() {
+        // k(r=1, ℓ=1, σ²=1) = (1+√5+5/3)·exp(−√5)
+        let k = Matern52 { variance: 1.0, lengthscale: 1.0 };
+        let s = 5f64.sqrt();
+        let want = (1.0 + s + 5.0 / 3.0) * (-s).exp();
+        assert!((k.eval(&[0.0], &[1.0]) - want).abs() < 1e-12);
+    }
+
+    #[test]
+    fn rbf_known_value() {
+        let k = Rbf { variance: 1.0, lengthscale: 2.0 };
+        assert!((k.eval(&[0.0], &[2.0]) - (-0.5f64).exp()).abs() < 1e-12);
+    }
+
+    #[test]
+    fn gram_is_symmetric_pd() {
+        let pts: Vec<Vec<f64>> = (0..12).map(|i| vec![i as f64 * 0.37, (i * i % 7) as f64]).collect();
+        for k in [&Matern52 { variance: 1.0, lengthscale: 1.5 } as &dyn Kernel] {
+            let g = k.gram(&pts);
+            for i in 0..12 {
+                for j in 0..12 {
+                    assert!((g[(i, j)] - g[(j, i)]).abs() < 1e-15);
+                }
+            }
+            assert!(cholesky_jittered(&g, 1e-10).is_ok());
+        }
+    }
+
+    #[test]
+    fn empirical_cov_matches_hand_computation() {
+        // Two models, three users.
+        let hist = vec![vec![0.8, 0.2], vec![0.6, 0.4], vec![0.7, 0.3]];
+        let (mean, cov) = empirical_model_cov(&hist, 0.0);
+        assert!((mean[0] - 0.7).abs() < 1e-12);
+        assert!((mean[1] - 0.3).abs() < 1e-12);
+        // var(model0) = ((0.1)²+(0.1)²+0)/2 = 0.01
+        assert!((cov[(0, 0)] - 0.01).abs() < 1e-12);
+        assert!((cov[(1, 1)] - 0.01).abs() < 1e-12);
+        // cov = (0.1·−0.1 + (−0.1)·0.1 + 0)/2 = −0.01 (perfectly anti-correlated)
+        assert!((cov[(0, 1)] + 0.01).abs() < 1e-12);
+    }
+
+    #[test]
+    fn empirical_cov_ridge_makes_pd() {
+        // 2 holdout users, 4 models → rank-1 covariance, needs ridge.
+        let hist = vec![vec![0.1, 0.2, 0.3, 0.4], vec![0.5, 0.1, 0.0, 0.9]];
+        let (_, cov) = empirical_model_cov(&hist, 1e-4);
+        assert!(cholesky(&cov).is_ok(), "ridge must make the estimate PD");
+    }
+
+    #[test]
+    fn exchangeable_user_sim_shape() {
+        let u = exchangeable_user_sim(3, 0.4);
+        for i in 0..3 {
+            for j in 0..3 {
+                assert_eq!(u[(i, j)], if i == j { 1.0 } else { 0.4 });
+            }
+        }
+    }
+
+    #[test]
+    fn kronecker_composition() {
+        let user_sim = exchangeable_user_sim(2, 0.5);
+        let model_cov = Mat::from_rows(&[&[1.0, 0.3], &[0.3, 2.0]]);
+        // arms: (u0,m0), (u0,m1), (u1,m0)
+        let arms = [(0, 0), (0, 1), (1, 0)];
+        let k = kronecker_arm_cov(&arms, &user_sim, &model_cov);
+        assert_eq!(k[(0, 0)], 1.0);
+        assert_eq!(k[(0, 1)], 0.3); // same user, different model
+        assert_eq!(k[(0, 2)], 0.5); // different user, same model
+        assert_eq!(k[(1, 2)], 0.5 * 0.3);
+        // Symmetric PD (after tiny jitter).
+        assert!(cholesky_jittered(&k, 1e-12).is_ok());
+    }
+
+    #[test]
+    #[should_panic(expected = "at least two holdout users")]
+    fn empirical_cov_needs_two_users() {
+        let _ = empirical_model_cov(&[vec![0.5, 0.5]], 0.0);
+    }
+}

@@ -1,0 +1,41 @@
+//! # mmgpei — Multi-device, Multi-tenant Model Selection with GP-EI
+//!
+//! Production-grade reproduction of *"AutoML from Service Provider's
+//! Perspective: Multi-device, Multi-tenant Model Selection with GP-EI"*
+//! (Yu, Karlaš, Zhong, Zhang, Liu; 2018).
+//!
+//! The paper's contribution — the MM-GP-EI scheduler that allocates `M`
+//! devices to `N` AutoML tenants by maximizing the expected-improvement
+//! *rate* summed over tenants — lives in [`sched`] and is driven either by
+//! the deterministic discrete-event simulator ([`sim`]) or the real-time
+//! threaded serving coordinator ([`coordinator`]). The numeric hot spot of
+//! every scheduling decision (GP posterior refresh + EIrate scoring) has
+//! two interchangeable backends:
+//!
+//! * [`gp`] — native rust incremental-Cholesky posterior (default), and
+//! * [`runtime`] — an AOT-compiled JAX/Pallas `scheduler_step` artifact
+//!   executed through the PJRT C API (the `xla` crate); python never runs
+//!   at decision time.
+//!
+//! See `DESIGN.md` for the system inventory and the per-figure experiment
+//! index, and `EXPERIMENTS.md` for reproduction results.
+
+#![warn(missing_docs)]
+
+pub mod bench;
+pub mod cli;
+pub mod config;
+pub mod coordinator;
+pub mod gp;
+pub mod kernels;
+pub mod linalg;
+pub mod metrics;
+pub mod miu;
+pub mod prng;
+pub mod problem;
+pub mod report;
+pub mod runtime;
+pub mod sched;
+pub mod sim;
+pub mod testutil;
+pub mod workload;

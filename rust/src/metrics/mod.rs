@@ -1,0 +1,206 @@
+//! Regret metrics (paper §3.2 and §6.1).
+//!
+//! * **Cumulative global-happiness regret** (Eq. 2):
+//!   `Regret_T = Σ_i ∫₀ᵀ (z(x_i*) − z(x_i*(t))) dt` — the integral of a
+//!   piecewise-constant gap, computed exactly from the completion events.
+//! * **Instantaneous regret**: the average over users of the current gap
+//!   — the paper's "global unhappiness at time T".
+//! * Cross-seed aggregation (mean ± 1σ bands, as in the paper's shaded
+//!   plots) and time-to-cutoff speedup measurement (Figure 5's metric).
+
+/// A right-continuous piecewise-constant curve: `value(t) = vᵢ` for
+/// `t ∈ [tᵢ, tᵢ₊₁)`. Breakpoints must be non-decreasing in time.
+#[derive(Clone, Debug, PartialEq)]
+pub struct StepCurve {
+    points: Vec<(f64, f64)>,
+}
+
+impl StepCurve {
+    /// New curve with an initial value at t = 0.
+    pub fn new(initial: f64) -> Self {
+        StepCurve { points: vec![(0.0, initial)] }
+    }
+
+    /// Build directly from breakpoints (first must be at t = 0).
+    pub fn from_points(points: Vec<(f64, f64)>) -> Self {
+        assert!(!points.is_empty() && points[0].0 == 0.0, "curve must start at t=0");
+        for w in points.windows(2) {
+            assert!(w[0].0 <= w[1].0, "breakpoints must be sorted");
+        }
+        StepCurve { points }
+    }
+
+    /// Append a new value from time `t` on.
+    pub fn push(&mut self, t: f64, value: f64) {
+        let last = self.points.last().unwrap();
+        assert!(t >= last.0, "time must be non-decreasing");
+        if t == last.0 {
+            self.points.last_mut().unwrap().1 = value;
+        } else {
+            self.points.push((t, value));
+        }
+    }
+
+    /// Breakpoints view.
+    pub fn points(&self) -> &[(f64, f64)] {
+        &self.points
+    }
+
+    /// Value at time `t` (right-continuous).
+    pub fn value(&self, t: f64) -> f64 {
+        match self.points.binary_search_by(|p| p.0.partial_cmp(&t).unwrap()) {
+            Ok(i) => self.points[i].1,
+            Err(0) => self.points[0].1,
+            Err(i) => self.points[i - 1].1,
+        }
+    }
+
+    /// Exact integral `∫₀ᵀ curve(t) dt`.
+    pub fn integral_to(&self, t_end: f64) -> f64 {
+        let mut acc = 0.0;
+        for (i, &(t, v)) in self.points.iter().enumerate() {
+            if t >= t_end {
+                break;
+            }
+            let next_t = self.points.get(i + 1).map(|p| p.0).unwrap_or(f64::INFINITY);
+            acc += v * (next_t.min(t_end) - t);
+        }
+        acc
+    }
+
+    /// First time at which the curve drops to `≤ cutoff` (the Figure-5
+    /// convergence-time metric), or `None` if it never does.
+    pub fn first_time_leq(&self, cutoff: f64) -> Option<f64> {
+        self.points.iter().find(|&&(_, v)| v <= cutoff).map(|&(t, _)| t)
+    }
+
+    /// Final value.
+    pub fn final_value(&self) -> f64 {
+        self.points.last().unwrap().1
+    }
+
+    /// Last breakpoint time.
+    pub fn end_time(&self) -> f64 {
+        self.points.last().unwrap().0
+    }
+
+    /// Scale all values by `factor` (e.g. sum-gap → average-gap).
+    pub fn scaled(&self, factor: f64) -> StepCurve {
+        StepCurve { points: self.points.iter().map(|&(t, v)| (t, v * factor)).collect() }
+    }
+}
+
+/// Mean ± std of several step curves sampled on a common time grid.
+/// Returns `(grid_t, mean, std)` triples — exactly what the paper's
+/// shaded 1σ plots show.
+pub fn aggregate_curves(curves: &[StepCurve], grid: &[f64]) -> Vec<(f64, f64, f64)> {
+    assert!(!curves.is_empty());
+    grid.iter()
+        .map(|&t| {
+            let vals: Vec<f64> = curves.iter().map(|c| c.value(t)).collect();
+            let mean = vals.iter().sum::<f64>() / vals.len() as f64;
+            let var = vals.iter().map(|v| (v - mean) * (v - mean)).sum::<f64>()
+                / vals.len() as f64;
+            (t, mean, var.sqrt())
+        })
+        .collect()
+}
+
+/// Uniform grid `[0, t_end]` with `n` points (n ≥ 2).
+pub fn time_grid(t_end: f64, n: usize) -> Vec<f64> {
+    assert!(n >= 2);
+    (0..n).map(|i| t_end * i as f64 / (n - 1) as f64).collect()
+}
+
+/// Mean and sample-std of a slice (speedup tables).
+pub fn mean_std(xs: &[f64]) -> (f64, f64) {
+    let n = xs.len() as f64;
+    let mean = xs.iter().sum::<f64>() / n;
+    if xs.len() < 2 {
+        return (mean, 0.0);
+    }
+    let var = xs.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>() / (n - 1.0);
+    (mean, var.sqrt())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn value_is_right_continuous() {
+        let c = StepCurve::from_points(vec![(0.0, 2.0), (1.0, 1.0), (3.0, 0.0)]);
+        assert_eq!(c.value(0.0), 2.0);
+        assert_eq!(c.value(0.999), 2.0);
+        assert_eq!(c.value(1.0), 1.0);
+        assert_eq!(c.value(2.5), 1.0);
+        assert_eq!(c.value(3.0), 0.0);
+        assert_eq!(c.value(100.0), 0.0);
+    }
+
+    #[test]
+    fn integral_exact() {
+        let c = StepCurve::from_points(vec![(0.0, 2.0), (1.0, 1.0), (3.0, 0.0)]);
+        // ∫₀⁴ = 2·1 + 1·2 + 0·1 = 4
+        assert!((c.integral_to(4.0) - 4.0).abs() < 1e-12);
+        // Partial: ∫₀^{0.5} = 1
+        assert!((c.integral_to(0.5) - 1.0).abs() < 1e-12);
+        // Mid-segment: ∫₀² = 2 + 1 = 3
+        assert!((c.integral_to(2.0) - 3.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn push_replaces_same_time() {
+        let mut c = StepCurve::new(5.0);
+        c.push(0.0, 4.0);
+        assert_eq!(c.points().len(), 1);
+        assert_eq!(c.value(0.0), 4.0);
+        c.push(2.0, 1.0);
+        assert_eq!(c.value(3.0), 1.0);
+    }
+
+    #[test]
+    fn first_time_leq_finds_crossing() {
+        let c = StepCurve::from_points(vec![(0.0, 1.0), (2.0, 0.5), (5.0, 0.01)]);
+        assert_eq!(c.first_time_leq(0.6), Some(2.0));
+        assert_eq!(c.first_time_leq(0.01), Some(5.0));
+        assert_eq!(c.first_time_leq(0.001), None);
+        assert_eq!(c.first_time_leq(2.0), Some(0.0));
+    }
+
+    #[test]
+    fn aggregate_mean_and_band() {
+        let a = StepCurve::from_points(vec![(0.0, 1.0), (1.0, 0.0)]);
+        let b = StepCurve::from_points(vec![(0.0, 3.0), (2.0, 0.0)]);
+        let agg = aggregate_curves(&[a, b], &[0.0, 1.5, 2.5]);
+        assert_eq!(agg[0], (0.0, 2.0, 1.0));
+        // at 1.5: values 0 and 3 → mean 1.5, std 1.5
+        assert!((agg[1].1 - 1.5).abs() < 1e-12);
+        assert!((agg[1].2 - 1.5).abs() < 1e-12);
+        assert_eq!(agg[2].1, 0.0);
+    }
+
+    #[test]
+    fn grid_and_mean_std() {
+        let g = time_grid(10.0, 6);
+        assert_eq!(g, vec![0.0, 2.0, 4.0, 6.0, 8.0, 10.0]);
+        let (m, s) = mean_std(&[1.0, 3.0]);
+        assert_eq!(m, 2.0);
+        assert!((s - 2f64.sqrt()).abs() < 1e-12);
+        assert_eq!(mean_std(&[5.0]).1, 0.0);
+    }
+
+    #[test]
+    fn scaled_divides() {
+        let c = StepCurve::from_points(vec![(0.0, 4.0), (1.0, 2.0)]);
+        let s = c.scaled(0.25);
+        assert_eq!(s.value(0.0), 1.0);
+        assert_eq!(s.value(1.5), 0.5);
+    }
+
+    #[test]
+    #[should_panic(expected = "start at t=0")]
+    fn from_points_requires_origin() {
+        let _ = StepCurve::from_points(vec![(1.0, 2.0)]);
+    }
+}

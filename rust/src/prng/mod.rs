@@ -1,0 +1,295 @@
+//! Pseudo-random number generation substrate.
+//!
+//! The offline build environment provides no `rand` crate, so the library
+//! carries its own generator: [xoshiro256++], a small, fast, high-quality
+//! PRNG with 256 bits of state, seeded through SplitMix64 so that any
+//! `u64` seed produces a well-mixed initial state. On top of the raw
+//! generator we provide uniform floats, Box–Muller Gaussians, and
+//! multivariate-normal sampling via a Cholesky factor (used by the
+//! synthetic Matérn workload of the paper's Figure 5).
+//!
+//! [xoshiro256++]: https://prng.di.unimi.it/
+
+use crate::linalg::Mat;
+
+/// xoshiro256++ generator with Box–Muller caching for normal deviates.
+#[derive(Clone, Debug)]
+pub struct Rng {
+    s: [u64; 4],
+    /// Cached second output of the most recent Box–Muller pair.
+    gauss_cache: Option<f64>,
+}
+
+#[inline]
+fn rotl(x: u64, k: u32) -> u64 {
+    x.rotate_left(k)
+}
+
+/// SplitMix64 step — used only for seeding.
+#[inline]
+fn splitmix64(state: &mut u64) -> u64 {
+    *state = state.wrapping_add(0x9E37_79B9_7F4A_7C15);
+    let mut z = *state;
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+    z ^ (z >> 31)
+}
+
+impl Rng {
+    /// Create a generator from a 64-bit seed (SplitMix64-expanded).
+    pub fn new(seed: u64) -> Self {
+        let mut sm = seed;
+        let s = [
+            splitmix64(&mut sm),
+            splitmix64(&mut sm),
+            splitmix64(&mut sm),
+            splitmix64(&mut sm),
+        ];
+        Rng { s, gauss_cache: None }
+    }
+
+    /// Derive an independent child generator (for per-repeat seeding).
+    pub fn fork(&mut self, stream: u64) -> Rng {
+        let mix = self.next_u64() ^ stream.wrapping_mul(0xA24B_AED4_963E_E407);
+        Rng::new(mix)
+    }
+
+    /// Next raw 64-bit output.
+    #[inline]
+    pub fn next_u64(&mut self) -> u64 {
+        let result = rotl(self.s[0].wrapping_add(self.s[3]), 23).wrapping_add(self.s[0]);
+        let t = self.s[1] << 17;
+        self.s[2] ^= self.s[0];
+        self.s[3] ^= self.s[1];
+        self.s[1] ^= self.s[2];
+        self.s[0] ^= self.s[3];
+        self.s[2] ^= t;
+        self.s[3] = rotl(self.s[3], 45);
+        result
+    }
+
+    /// Uniform in `[0, 1)` with 53 bits of precision.
+    #[inline]
+    pub fn uniform(&mut self) -> f64 {
+        (self.next_u64() >> 11) as f64 * (1.0 / (1u64 << 53) as f64)
+    }
+
+    /// Uniform in `[lo, hi)`.
+    #[inline]
+    pub fn uniform_in(&mut self, lo: f64, hi: f64) -> f64 {
+        lo + (hi - lo) * self.uniform()
+    }
+
+    /// Uniform integer in `[0, n)` (Lemire-style rejection-free for our use).
+    #[inline]
+    pub fn below(&mut self, n: usize) -> usize {
+        debug_assert!(n > 0);
+        // 128-bit multiply keeps bias below 2^-64 — negligible for simulation.
+        ((self.next_u64() as u128 * n as u128) >> 64) as usize
+    }
+
+    /// Standard normal deviate (Box–Muller, cached pair).
+    pub fn normal(&mut self) -> f64 {
+        if let Some(z) = self.gauss_cache.take() {
+            return z;
+        }
+        // Avoid u1 == 0 (log(0)).
+        let mut u1 = self.uniform();
+        while u1 <= f64::MIN_POSITIVE {
+            u1 = self.uniform();
+        }
+        let u2 = self.uniform();
+        let r = (-2.0 * u1.ln()).sqrt();
+        let theta = 2.0 * std::f64::consts::PI * u2;
+        self.gauss_cache = Some(r * theta.sin());
+        r * theta.cos()
+    }
+
+    /// Normal with given mean and standard deviation.
+    #[inline]
+    pub fn normal_with(&mut self, mean: f64, std: f64) -> f64 {
+        mean + std * self.normal()
+    }
+
+    /// Sample a multivariate normal `N(mean, L Lᵀ)` given the lower
+    /// Cholesky factor `L`. Used to draw correlated model performances
+    /// from a GP prior (paper §6.3 synthetic experiment).
+    pub fn mvn(&mut self, mean: &[f64], chol_lower: &Mat) -> Vec<f64> {
+        let n = mean.len();
+        assert_eq!(chol_lower.rows(), n);
+        assert_eq!(chol_lower.cols(), n);
+        let z: Vec<f64> = (0..n).map(|_| self.normal()).collect();
+        let mut out = vec![0.0; n];
+        for i in 0..n {
+            let mut acc = mean[i];
+            for j in 0..=i {
+                acc += chol_lower[(i, j)] * z[j];
+            }
+            out[i] = acc;
+        }
+        out
+    }
+
+    /// Fisher–Yates shuffle.
+    pub fn shuffle<T>(&mut self, xs: &mut [T]) {
+        for i in (1..xs.len()).rev() {
+            let j = self.below(i + 1);
+            xs.swap(i, j);
+        }
+    }
+
+    /// Choose `k` distinct indices out of `n` (partial shuffle).
+    pub fn choose_indices(&mut self, n: usize, k: usize) -> Vec<usize> {
+        assert!(k <= n);
+        let mut idx: Vec<usize> = (0..n).collect();
+        for i in 0..k {
+            let j = i + self.below(n - i);
+            idx.swap(i, j);
+        }
+        idx.truncate(k);
+        idx
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic_for_seed() {
+        let mut a = Rng::new(42);
+        let mut b = Rng::new(42);
+        for _ in 0..100 {
+            assert_eq!(a.next_u64(), b.next_u64());
+        }
+    }
+
+    #[test]
+    fn different_seeds_differ() {
+        let mut a = Rng::new(1);
+        let mut b = Rng::new(2);
+        let same = (0..64).filter(|_| a.next_u64() == b.next_u64()).count();
+        assert!(same < 2, "seeds 1 and 2 should produce different streams");
+    }
+
+    #[test]
+    fn uniform_in_unit_interval() {
+        let mut r = Rng::new(7);
+        for _ in 0..10_000 {
+            let u = r.uniform();
+            assert!((0.0..1.0).contains(&u));
+        }
+    }
+
+    #[test]
+    fn uniform_mean_and_variance() {
+        let mut r = Rng::new(11);
+        let n = 200_000;
+        let xs: Vec<f64> = (0..n).map(|_| r.uniform()).collect();
+        let mean = xs.iter().sum::<f64>() / n as f64;
+        let var = xs.iter().map(|x| (x - mean).powi(2)).sum::<f64>() / n as f64;
+        assert!((mean - 0.5).abs() < 0.005, "mean={mean}");
+        assert!((var - 1.0 / 12.0).abs() < 0.005, "var={var}");
+    }
+
+    #[test]
+    fn normal_moments() {
+        let mut r = Rng::new(13);
+        let n = 200_000;
+        let xs: Vec<f64> = (0..n).map(|_| r.normal()).collect();
+        let mean = xs.iter().sum::<f64>() / n as f64;
+        let var = xs.iter().map(|x| (x - mean).powi(2)).sum::<f64>() / n as f64;
+        let skew = xs.iter().map(|x| (x - mean).powi(3)).sum::<f64>() / n as f64;
+        assert!(mean.abs() < 0.01, "mean={mean}");
+        assert!((var - 1.0).abs() < 0.02, "var={var}");
+        assert!(skew.abs() < 0.03, "skew={skew}");
+    }
+
+    #[test]
+    fn below_is_in_range_and_covers() {
+        let mut r = Rng::new(17);
+        let mut seen = [false; 7];
+        for _ in 0..1000 {
+            let k = r.below(7);
+            assert!(k < 7);
+            seen[k] = true;
+        }
+        assert!(seen.iter().all(|&s| s), "all residues should appear");
+    }
+
+    #[test]
+    fn choose_indices_distinct() {
+        let mut r = Rng::new(19);
+        for _ in 0..100 {
+            let picked = r.choose_indices(22, 8);
+            assert_eq!(picked.len(), 8);
+            let mut sorted = picked.clone();
+            sorted.sort_unstable();
+            sorted.dedup();
+            assert_eq!(sorted.len(), 8, "indices must be distinct");
+            assert!(picked.iter().all(|&i| i < 22));
+        }
+    }
+
+    #[test]
+    fn shuffle_is_permutation() {
+        let mut r = Rng::new(23);
+        let mut xs: Vec<usize> = (0..50).collect();
+        r.shuffle(&mut xs);
+        let mut sorted = xs.clone();
+        sorted.sort_unstable();
+        assert_eq!(sorted, (0..50).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn mvn_identity_cov_moments() {
+        use crate::linalg::Mat;
+        let mut r = Rng::new(29);
+        let l = Mat::eye(3);
+        let mean = [1.0, -2.0, 0.5];
+        let n = 50_000;
+        let mut acc = [0.0; 3];
+        for _ in 0..n {
+            let x = r.mvn(&mean, &l);
+            for d in 0..3 {
+                acc[d] += x[d];
+            }
+        }
+        for d in 0..3 {
+            assert!((acc[d] / n as f64 - mean[d]).abs() < 0.02);
+        }
+    }
+
+    #[test]
+    fn mvn_correlated_cov() {
+        use crate::linalg::Mat;
+        // Cov = [[1, .8], [.8, 1]]; L = chol.
+        let cov = Mat::from_rows(&[&[1.0, 0.8], &[0.8, 1.0]]);
+        let l = crate::linalg::cholesky(&cov).unwrap();
+        let mut r = Rng::new(31);
+        let n = 100_000;
+        let (mut sxy, mut sx, mut sy, mut sxx, mut syy) = (0.0, 0.0, 0.0, 0.0, 0.0);
+        for _ in 0..n {
+            let v = r.mvn(&[0.0, 0.0], &l);
+            sx += v[0];
+            sy += v[1];
+            sxy += v[0] * v[1];
+            sxx += v[0] * v[0];
+            syy += v[1] * v[1];
+        }
+        let nf = n as f64;
+        let cov_xy = sxy / nf - (sx / nf) * (sy / nf);
+        assert!((cov_xy - 0.8).abs() < 0.02, "cov={cov_xy}");
+        assert!((sxx / nf - 1.0).abs() < 0.02);
+        assert!((syy / nf - 1.0).abs() < 0.02);
+    }
+
+    #[test]
+    fn fork_streams_are_independent() {
+        let mut parent = Rng::new(99);
+        let mut a = parent.fork(0);
+        let mut b = parent.fork(1);
+        let same = (0..64).filter(|_| a.next_u64() == b.next_u64()).count();
+        assert!(same < 2);
+    }
+}

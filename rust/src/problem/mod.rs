@@ -1,0 +1,217 @@
+//! Core problem types for the time-sensitive hierarchical bandit (TSHB)
+//! abstraction of multi-device, multi-tenant AutoML (paper §3.1).
+//!
+//! An *arm* is one (model, dataset) evaluation the service can schedule:
+//! running it occupies one device for `cost` time units and reveals a
+//! scalar performance `z`. Users own subsets of arms (possibly
+//! overlapping — the paper explicitly allows shared models).
+
+use crate::linalg::Mat;
+
+/// Index of an arm in the global arm set `𝓛 = 𝓛₁ ∪ … ∪ 𝓛_N`.
+pub type ArmId = usize;
+
+/// Index of a user (tenant).
+pub type UserId = usize;
+
+/// A multi-device, multi-tenant model-selection problem instance:
+/// everything the *scheduler* is allowed to see (costs, memberships, GP
+/// prior) — the true performances live in [`Truth`] and are revealed only
+/// through simulated execution.
+#[derive(Clone, Debug)]
+pub struct Problem {
+    /// Human-readable instance name (shows up in reports).
+    pub name: String,
+    /// Number of tenants N.
+    pub n_users: usize,
+    /// Per-arm execution cost `c(x)` in abstract time units (paper
+    /// Remark 1 assumes these known/estimated up front).
+    pub cost: Vec<f64>,
+    /// `user_arms[i]` = the candidate set `𝓛_i`.
+    pub user_arms: Vec<Vec<ArmId>>,
+    /// `arm_users[x]` = users whose candidate set contains `x`
+    /// (inverse of `user_arms`; the EI sum of Eq. 4 iterates this).
+    pub arm_users: Vec<Vec<UserId>>,
+    /// GP prior mean `μ(x)` per arm.
+    pub prior_mean: Vec<f64>,
+    /// GP prior covariance `k(x, x')` over all arms.
+    pub prior_cov: Mat,
+}
+
+impl Problem {
+    /// Number of arms `|𝓛|`.
+    pub fn n_arms(&self) -> usize {
+        self.cost.len()
+    }
+
+    /// Build the inverse membership map from `user_arms`.
+    pub fn compute_arm_users(n_arms: usize, user_arms: &[Vec<ArmId>]) -> Vec<Vec<UserId>> {
+        let mut arm_users = vec![Vec::new(); n_arms];
+        for (u, arms) in user_arms.iter().enumerate() {
+            for &a in arms {
+                arm_users[a].push(u);
+            }
+        }
+        arm_users
+    }
+
+    /// Validate internal consistency; panics with a description on error.
+    /// Called by workload constructors and property tests.
+    pub fn validate(&self) {
+        let l = self.n_arms();
+        assert_eq!(self.prior_mean.len(), l, "prior mean length");
+        assert_eq!(self.prior_cov.rows(), l, "prior cov rows");
+        assert_eq!(self.prior_cov.cols(), l, "prior cov cols");
+        assert_eq!(self.user_arms.len(), self.n_users, "user_arms length");
+        assert_eq!(self.arm_users.len(), l, "arm_users length");
+        for (u, arms) in self.user_arms.iter().enumerate() {
+            assert!(!arms.is_empty(), "user {u} has an empty candidate set");
+            for &a in arms {
+                assert!(a < l, "user {u} references out-of-range arm {a}");
+                assert!(self.arm_users[a].contains(&u), "membership maps disagree");
+            }
+        }
+        for (a, users) in self.arm_users.iter().enumerate() {
+            for &u in users {
+                assert!(self.user_arms[u].contains(&a), "membership maps disagree");
+            }
+        }
+        for (a, &c) in self.cost.iter().enumerate() {
+            assert!(c > 0.0 && c.is_finite(), "arm {a} has non-positive cost {c}");
+        }
+    }
+
+    /// The two cheapest arms of each user — the experiments' warm-start
+    /// protocol ("train the two fastest models for each user", §6.1).
+    /// Deduplicated across users (a shared arm is only run once).
+    pub fn warm_start_arms(&self, per_user: usize) -> Vec<ArmId> {
+        let mut picked = vec![false; self.n_arms()];
+        let mut out = Vec::new();
+        for arms in &self.user_arms {
+            let mut sorted: Vec<ArmId> = arms.clone();
+            sorted.sort_by(|&a, &b| {
+                self.cost[a].partial_cmp(&self.cost[b]).unwrap().then(a.cmp(&b))
+            });
+            for &a in sorted.iter().take(per_user) {
+                if !picked[a] {
+                    picked[a] = true;
+                    out.push(a);
+                }
+            }
+        }
+        out
+    }
+
+    /// Average cost of each user's best arm, `c̄` in Theorem 2.
+    pub fn mean_optimal_cost(&self, truth: &Truth) -> f64 {
+        let total: f64 = (0..self.n_users)
+            .map(|u| self.cost[truth.best_arm(self, u)])
+            .sum();
+        total / self.n_users as f64
+    }
+}
+
+/// Hidden ground truth: the performance `z(x)` of every arm, revealed to
+/// the scheduler only when the simulated execution finishes.
+#[derive(Clone, Debug)]
+pub struct Truth {
+    /// `z[x]` — e.g. final accuracy of model x on its dataset.
+    pub z: Vec<f64>,
+}
+
+impl Truth {
+    /// The best achievable value for user `u`: `z(x_u*)`.
+    pub fn best_value(&self, problem: &Problem, u: UserId) -> f64 {
+        problem.user_arms[u]
+            .iter()
+            .map(|&a| self.z[a])
+            .fold(f64::NEG_INFINITY, f64::max)
+    }
+
+    /// The best arm for user `u`: `x_u* = argmax z`.
+    pub fn best_arm(&self, problem: &Problem, u: UserId) -> ArmId {
+        *problem.user_arms[u]
+            .iter()
+            .max_by(|&&a, &&b| self.z[a].partial_cmp(&self.z[b]).unwrap())
+            .expect("non-empty candidate set")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny_problem() -> (Problem, Truth) {
+        // 2 users; user0 owns arms {0,1,2}, user1 owns {2,3} (arm 2 shared).
+        let user_arms = vec![vec![0, 1, 2], vec![2, 3]];
+        let arm_users = Problem::compute_arm_users(4, &user_arms);
+        let p = Problem {
+            name: "tiny".into(),
+            n_users: 2,
+            cost: vec![1.0, 2.0, 3.0, 0.5],
+            user_arms,
+            arm_users,
+            prior_mean: vec![0.0; 4],
+            prior_cov: Mat::eye(4),
+        };
+        let t = Truth { z: vec![0.5, 0.9, 0.7, 0.2] };
+        (p, t)
+    }
+
+    #[test]
+    fn validate_ok_for_consistent_problem() {
+        let (p, _) = tiny_problem();
+        p.validate();
+    }
+
+    #[test]
+    fn arm_users_inverse_of_user_arms() {
+        let (p, _) = tiny_problem();
+        assert_eq!(p.arm_users[0], vec![0]);
+        assert_eq!(p.arm_users[2], vec![0, 1]);
+        assert_eq!(p.arm_users[3], vec![1]);
+    }
+
+    #[test]
+    fn best_value_and_arm() {
+        let (p, t) = tiny_problem();
+        assert_eq!(t.best_value(&p, 0), 0.9);
+        assert_eq!(t.best_arm(&p, 0), 1);
+        assert_eq!(t.best_value(&p, 1), 0.7);
+        assert_eq!(t.best_arm(&p, 1), 2);
+    }
+
+    #[test]
+    fn warm_start_two_fastest_dedup() {
+        let (p, _) = tiny_problem();
+        // user0 fastest two: arms 0 (c=1) and 1 (c=2); user1: 3 (0.5), 2 (3).
+        let ws = p.warm_start_arms(2);
+        assert_eq!(ws, vec![0, 1, 3, 2]);
+        // With per_user=1: user0 → 0, user1 → 3.
+        assert_eq!(p.warm_start_arms(1), vec![0, 3]);
+    }
+
+    #[test]
+    fn mean_optimal_cost_matches() {
+        let (p, t) = tiny_problem();
+        // best arms: user0 → arm1 (c=2), user1 → arm2 (c=3); mean = 2.5
+        assert!((p.mean_optimal_cost(&t) - 2.5).abs() < 1e-12);
+    }
+
+    #[test]
+    #[should_panic(expected = "non-positive cost")]
+    fn validate_rejects_zero_cost() {
+        let (mut p, _) = tiny_problem();
+        p.cost[1] = 0.0;
+        p.validate();
+    }
+
+    #[test]
+    #[should_panic(expected = "empty candidate set")]
+    fn validate_rejects_empty_user() {
+        let (mut p, _) = tiny_problem();
+        p.user_arms[1].clear();
+        p.arm_users = Problem::compute_arm_users(4, &p.user_arms);
+        p.validate();
+    }
+}

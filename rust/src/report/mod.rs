@@ -1,0 +1,116 @@
+//! Report generation: CSV series, markdown tables, and terminal ASCII
+//! plots of regret curves (what the paper's figures show, rendered for a
+//! terminal).
+
+use crate::metrics::StepCurve;
+
+/// Render aggregated curves `(t, mean, std)` as a CSV string with one
+/// block per labelled series.
+pub fn curves_to_csv(series: &[(String, Vec<(f64, f64, f64)>)]) -> String {
+    let mut out = String::from("series,t,mean,std\n");
+    for (label, pts) in series {
+        for &(t, mean, std) in pts {
+            out.push_str(&format!("{label},{t:.6},{mean:.9},{std:.9}\n"));
+        }
+    }
+    out
+}
+
+/// ASCII line plot of several step curves on a shared time axis.
+///
+/// Each curve is sampled on a uniform grid and drawn with its own glyph;
+/// the y-axis is linear from 0 to the max initial value.
+pub fn ascii_plot(
+    title: &str,
+    curves: &[(String, StepCurve)],
+    width: usize,
+    height: usize,
+) -> String {
+    assert!(width >= 16 && height >= 4);
+    let glyphs = ['*', 'o', '+', 'x', '#', '@', '%', '&'];
+    let t_end = curves
+        .iter()
+        .map(|(_, c)| c.end_time())
+        .fold(0.0f64, f64::max)
+        .max(1e-12);
+    let y_max = curves
+        .iter()
+        .map(|(_, c)| c.points().iter().map(|p| p.1).fold(0.0f64, f64::max))
+        .fold(0.0f64, f64::max)
+        .max(1e-12);
+    let mut grid = vec![vec![' '; width]; height];
+    for (ci, (_, curve)) in curves.iter().enumerate() {
+        let glyph = glyphs[ci % glyphs.len()];
+        for col in 0..width {
+            let t = t_end * col as f64 / (width - 1) as f64;
+            let v = curve.value(t);
+            let row_f = (1.0 - (v / y_max).clamp(0.0, 1.0)) * (height - 1) as f64;
+            let row = row_f.round() as usize;
+            grid[row.min(height - 1)][col] = glyph;
+        }
+    }
+    let mut out = String::new();
+    out.push_str(&format!("{title}  (y: 0..{y_max:.3}, x: 0..{t_end:.1})\n"));
+    for (ri, row) in grid.iter().enumerate() {
+        let label = if ri == 0 {
+            format!("{y_max:8.3} |")
+        } else if ri == height - 1 {
+            format!("{:8.3} |", 0.0)
+        } else {
+            "         |".to_string()
+        };
+        out.push_str(&label);
+        out.extend(row.iter());
+        out.push('\n');
+    }
+    out.push_str(&format!("          +{}\n", "-".repeat(width)));
+    for (ci, (label, _)) in curves.iter().enumerate() {
+        out.push_str(&format!("          {} = {label}\n", glyphs[ci % glyphs.len()]));
+    }
+    out
+}
+
+/// Write a string to a file, creating parent directories.
+pub fn write_report(path: &str, content: &str) -> std::io::Result<()> {
+    if let Some(parent) = std::path::Path::new(path).parent() {
+        std::fs::create_dir_all(parent)?;
+    }
+    std::fs::write(path, content)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn csv_format() {
+        let csv = curves_to_csv(&[(
+            "mdmt".into(),
+            vec![(0.0, 1.0, 0.1), (1.0, 0.5, 0.05)],
+        )]);
+        let lines: Vec<&str> = csv.lines().collect();
+        assert_eq!(lines[0], "series,t,mean,std");
+        assert!(lines[1].starts_with("mdmt,0.000000,1.000000000,"));
+        assert_eq!(lines.len(), 3);
+    }
+
+    #[test]
+    fn ascii_plot_contains_series_and_axes() {
+        let a = StepCurve::from_points(vec![(0.0, 1.0), (5.0, 0.2)]);
+        let b = StepCurve::from_points(vec![(0.0, 0.8), (3.0, 0.0)]);
+        let plot = ascii_plot("regret", &[("mdmt".into(), a), ("rr".into(), b)], 40, 10);
+        assert!(plot.contains("regret"));
+        assert!(plot.contains("* = mdmt"));
+        assert!(plot.contains("o = rr"));
+        assert!(plot.lines().count() > 10);
+    }
+
+    #[test]
+    fn write_report_creates_dirs() {
+        let dir = std::env::temp_dir().join("mmgpei_report_test");
+        let _ = std::fs::remove_dir_all(&dir);
+        let path = dir.join("sub/report.csv");
+        write_report(path.to_str().unwrap(), "hello").unwrap();
+        assert_eq!(std::fs::read_to_string(path).unwrap(), "hello");
+    }
+}

@@ -1,0 +1,399 @@
+//! Baseline policies from the paper's §6.1 protocol plus reference
+//! policies used by the ablation benches.
+
+use super::{Incumbents, Policy, SchedContext};
+use crate::gp::Gp;
+use crate::linalg::principal_submatrix;
+use crate::prng::Rng;
+use crate::problem::{ArmId, Problem, Truth, UserId};
+
+/// A single user's private GP-EI instance: GP restricted to that user's
+/// candidate set, classic (single-tenant) expected-improvement selection.
+struct UserGpEi {
+    /// Arms of this user, in local order (local index → global ArmId).
+    arms: Vec<ArmId>,
+    /// Map global arm → local index (usize::MAX if not owned).
+    local: Vec<usize>,
+    gp: Gp,
+}
+
+impl UserGpEi {
+    fn new(problem: &Problem, user: UserId) -> Self {
+        let arms = problem.user_arms[user].clone();
+        let mean: Vec<f64> = arms.iter().map(|&a| problem.prior_mean[a]).collect();
+        let cov = principal_submatrix(&problem.prior_cov, &arms);
+        let mut local = vec![usize::MAX; problem.n_arms()];
+        for (i, &a) in arms.iter().enumerate() {
+            local[a] = i;
+        }
+        UserGpEi { arms, local, gp: Gp::new(mean, cov) }
+    }
+
+    /// Incorporate an observation if this user owns the arm.
+    fn observe(&mut self, arm: ArmId, z: f64) {
+        let li = self.local[arm];
+        if li != usize::MAX && !self.gp.is_observed(li) {
+            self.gp.observe(li, z);
+        }
+    }
+
+    /// Classic GP-EI pick among this user's unselected arms.
+    fn select(&self, selected: &[bool], best: f64) -> Option<ArmId> {
+        let mut best_arm = None;
+        let mut best_ei = f64::NEG_INFINITY;
+        for (li, &a) in self.arms.iter().enumerate() {
+            if selected[a] {
+                continue;
+            }
+            let ei = self.gp.ei(li, best);
+            if ei > best_ei {
+                best_ei = ei;
+                best_arm = Some(a);
+            }
+        }
+        best_arm
+    }
+
+    fn has_candidate(&self, selected: &[bool]) -> bool {
+        self.arms.iter().any(|&a| !selected[a])
+    }
+}
+
+/// Shared plumbing for the "pick a user, then run that user's GP-EI"
+/// baselines (GP-EI-Round-Robin and GP-EI-Random of §6.1).
+struct PerUserGpEi {
+    users: Vec<UserGpEi>,
+    incumbents: Incumbents,
+}
+
+impl PerUserGpEi {
+    fn new(problem: &Problem) -> Self {
+        PerUserGpEi {
+            users: (0..problem.n_users).map(|u| UserGpEi::new(problem, u)).collect(),
+            incumbents: Incumbents::new(problem.n_users),
+        }
+    }
+
+    fn observe(&mut self, problem: &Problem, arm: ArmId, z: f64) {
+        for user in self.users.iter_mut() {
+            user.observe(arm, z);
+        }
+        self.incumbents.update_arm(problem, arm, z);
+    }
+}
+
+/// **GP-EI-Round-Robin**: each user runs an independent GP-EI; the
+/// service serves users cyclically, skipping users with nothing left.
+pub struct GpEiRoundRobin {
+    inner: PerUserGpEi,
+    next_user: usize,
+}
+
+impl GpEiRoundRobin {
+    /// Build for a problem instance.
+    pub fn new(problem: &Problem) -> Self {
+        GpEiRoundRobin { inner: PerUserGpEi::new(problem), next_user: 0 }
+    }
+}
+
+impl Policy for GpEiRoundRobin {
+    fn name(&self) -> String {
+        "GP-EI-Round-Robin".into()
+    }
+
+    fn select(&mut self, ctx: &SchedContext) -> Option<ArmId> {
+        let n = self.inner.users.len();
+        for step in 0..n {
+            let u = (self.next_user + step) % n;
+            if self.inner.users[u].has_candidate(ctx.selected) {
+                let pick = self.inner.users[u].select(ctx.selected, self.inner.incumbents.value(u));
+                self.next_user = (u + 1) % n;
+                return pick;
+            }
+        }
+        None
+    }
+
+    fn observe(&mut self, problem: &Problem, arm: ArmId, z: f64) {
+        self.inner.observe(problem, arm, z);
+    }
+}
+
+/// **GP-EI-Random**: each user runs an independent GP-EI; the next user
+/// to serve is drawn uniformly among users with remaining candidates.
+pub struct GpEiRandom {
+    inner: PerUserGpEi,
+    rng: Rng,
+}
+
+impl GpEiRandom {
+    /// Build with an explicit seed (runs are deterministic per seed).
+    pub fn new(problem: &Problem, seed: u64) -> Self {
+        GpEiRandom { inner: PerUserGpEi::new(problem), rng: Rng::new(seed) }
+    }
+}
+
+impl Policy for GpEiRandom {
+    fn name(&self) -> String {
+        "GP-EI-Random".into()
+    }
+
+    fn select(&mut self, ctx: &SchedContext) -> Option<ArmId> {
+        let eligible: Vec<usize> = (0..self.inner.users.len())
+            .filter(|&u| self.inner.users[u].has_candidate(ctx.selected))
+            .collect();
+        if eligible.is_empty() {
+            return None;
+        }
+        let u = eligible[self.rng.below(eligible.len())];
+        self.inner.users[u].select(ctx.selected, self.inner.incumbents.value(u))
+    }
+
+    fn observe(&mut self, problem: &Problem, arm: ArmId, z: f64) {
+        self.inner.observe(problem, arm, z);
+    }
+}
+
+/// Ablation A2: **independent per-user GPs, global EIrate argmax**.
+///
+/// Uses the same device-allocation rule as MM-GP-EI (pick the globally
+/// best EIrate) but scores each arm with its owner's *private* GP —
+/// isolating the contribution of the shared prior/covariance from the
+/// contribution of the global allocation rule.
+pub struct MmGpEiIndep {
+    users: Vec<UserGpEi>,
+    incumbents: Incumbents,
+    cost: Vec<f64>,
+}
+
+impl MmGpEiIndep {
+    /// Build for a problem instance.
+    pub fn new(problem: &Problem) -> Self {
+        MmGpEiIndep {
+            users: (0..problem.n_users).map(|u| UserGpEi::new(problem, u)).collect(),
+            incumbents: Incumbents::new(problem.n_users),
+            cost: problem.cost.clone(),
+        }
+    }
+}
+
+impl Policy for MmGpEiIndep {
+    fn name(&self) -> String {
+        "GP-EI-MDMT[indep-gp]".into()
+    }
+
+    fn select(&mut self, ctx: &SchedContext) -> Option<ArmId> {
+        // EIrate per arm, summing each arm's EI across owning users, each
+        // scored by that user's private GP.
+        let mut best_arm = None;
+        let mut best_score = f64::NEG_INFINITY;
+        for a in ctx.candidates() {
+            let mut ei_sum = 0.0;
+            for &u in &ctx.problem.arm_users[a] {
+                let li = self.users[u].local[a];
+                ei_sum += self.users[u].gp.ei(li, self.incumbents.value(u));
+            }
+            let score = ei_sum / self.cost[a];
+            if score > best_score {
+                best_score = score;
+                best_arm = Some(a);
+            }
+        }
+        best_arm
+    }
+
+    fn observe(&mut self, problem: &Problem, arm: ArmId, z: f64) {
+        for user in self.users.iter_mut() {
+            user.observe(arm, z);
+        }
+        self.incumbents.update_arm(problem, arm, z);
+    }
+}
+
+/// Regret lower-bound reference: knows the ground truth and immediately
+/// runs every user's optimal arm (cheapest-first among optima), then
+/// fills with the remaining arms. Not part of the paper; used to sanity-
+/// check that no policy beats clairvoyance.
+pub struct Oracle {
+    /// Pre-computed dispatch order.
+    order: Vec<ArmId>,
+    cursor: usize,
+}
+
+impl Oracle {
+    /// Build from the hidden truth.
+    pub fn new(problem: &Problem, truth: &Truth) -> Self {
+        let mut optimal: Vec<ArmId> =
+            (0..problem.n_users).map(|u| truth.best_arm(problem, u)).collect();
+        optimal.sort_by(|&a, &b| problem.cost[a].partial_cmp(&problem.cost[b]).unwrap());
+        optimal.dedup();
+        let mut rest: Vec<ArmId> =
+            (0..problem.n_arms()).filter(|a| !optimal.contains(a)).collect();
+        rest.sort_by(|&a, &b| problem.cost[a].partial_cmp(&problem.cost[b]).unwrap());
+        let mut order = optimal;
+        order.extend(rest);
+        Oracle { order, cursor: 0 }
+    }
+}
+
+impl Policy for Oracle {
+    fn name(&self) -> String {
+        "Oracle".into()
+    }
+
+    fn select(&mut self, ctx: &SchedContext) -> Option<ArmId> {
+        while self.cursor < self.order.len() {
+            let a = self.order[self.cursor];
+            self.cursor += 1;
+            if !ctx.selected[a] {
+                return Some(a);
+            }
+        }
+        None
+    }
+
+    fn observe(&mut self, _problem: &Problem, _arm: ArmId, _z: f64) {}
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::Mat;
+
+    fn problem() -> Problem {
+        // 3 users × 2 arms, disjoint.
+        let user_arms = vec![vec![0, 1], vec![2, 3], vec![4, 5]];
+        let arm_users = Problem::compute_arm_users(6, &user_arms);
+        Problem {
+            name: "base".into(),
+            n_users: 3,
+            cost: vec![1.0, 2.0, 1.0, 2.0, 1.0, 2.0],
+            user_arms,
+            arm_users,
+            prior_mean: vec![0.5; 6],
+            prior_cov: Mat::eye(6),
+        }
+    }
+
+    #[test]
+    fn round_robin_cycles_users() {
+        let p = problem();
+        let mut pol = GpEiRoundRobin::new(&p);
+        let mut selected = vec![false; 6];
+        let observed = vec![false; 6];
+        let mut owners = Vec::new();
+        for _ in 0..3 {
+            let a = pol
+                .select(&SchedContext { problem: &p, selected: &selected, observed: &observed, now: 0.0 })
+                .unwrap();
+            selected[a] = true;
+            owners.push(p.arm_users[a][0]);
+        }
+        let mut sorted = owners.clone();
+        sorted.sort_unstable();
+        assert_eq!(sorted, vec![0, 1, 2], "three picks must hit three users: {owners:?}");
+    }
+
+    #[test]
+    fn round_robin_skips_exhausted_user() {
+        let p = problem();
+        let mut pol = GpEiRoundRobin::new(&p);
+        // User 0 fully selected.
+        let selected = vec![true, true, false, false, false, false];
+        let observed = vec![true, true, false, false, false, false];
+        for _ in 0..4 {
+            let a = pol
+                .select(&SchedContext { problem: &p, selected: &selected, observed: &observed, now: 0.0 })
+                .unwrap();
+            assert!(a >= 2, "user 0 has nothing left");
+        }
+    }
+
+    #[test]
+    fn random_is_seed_deterministic() {
+        let p = problem();
+        let selected = vec![false; 6];
+        let observed = vec![false; 6];
+        let picks_a: Vec<_> = {
+            let mut pol = GpEiRandom::new(&p, 7);
+            (0..5)
+                .map(|_| {
+                    pol.select(&SchedContext {
+                        problem: &p,
+                        selected: &selected,
+                        observed: &observed,
+                        now: 0.0,
+                    })
+                    .unwrap()
+                })
+                .collect()
+        };
+        let picks_b: Vec<_> = {
+            let mut pol = GpEiRandom::new(&p, 7);
+            (0..5)
+                .map(|_| {
+                    pol.select(&SchedContext {
+                        problem: &p,
+                        selected: &selected,
+                        observed: &observed,
+                        now: 0.0,
+                    })
+                    .unwrap()
+                })
+                .collect()
+        };
+        assert_eq!(picks_a, picks_b);
+    }
+
+    #[test]
+    fn indep_gp_never_picks_selected() {
+        let p = problem();
+        let mut pol = MmGpEiIndep::new(&p);
+        let mut selected = vec![false; 6];
+        let observed = vec![false; 6];
+        for _ in 0..6 {
+            let a = pol
+                .select(&SchedContext { problem: &p, selected: &selected, observed: &observed, now: 0.0 })
+                .unwrap();
+            assert!(!selected[a]);
+            selected[a] = true;
+            pol.observe(&p, a, 0.5);
+        }
+        assert!(pol
+            .select(&SchedContext { problem: &p, selected: &selected, observed: &selected, now: 0.0 })
+            .is_none());
+    }
+
+    #[test]
+    fn oracle_runs_optima_first() {
+        let p = problem();
+        let truth = Truth { z: vec![0.9, 0.1, 0.2, 0.8, 0.3, 0.7] };
+        let mut pol = Oracle::new(&p, &truth);
+        let mut selected = vec![false; 6];
+        let observed = vec![false; 6];
+        let mut first_three = Vec::new();
+        for _ in 0..3 {
+            let a = pol
+                .select(&SchedContext { problem: &p, selected: &selected, observed: &observed, now: 0.0 })
+                .unwrap();
+            selected[a] = true;
+            first_three.push(a);
+        }
+        let mut sorted = first_three.clone();
+        sorted.sort_unstable();
+        assert_eq!(sorted, vec![0, 3, 5], "optimal arms first: {first_three:?}");
+    }
+
+    #[test]
+    fn user_gp_shares_nothing_across_users() {
+        let p = problem();
+        let mut pol = GpEiRoundRobin::new(&p);
+        // Observation on user 0's arm must not alter user 1's GP.
+        let before = pol.inner.users[1].gp.posterior_mean(0);
+        pol.observe(&p, 0, 0.99);
+        let after = pol.inner.users[1].gp.posterior_mean(0);
+        assert_eq!(before, after, "independent GPs must not leak");
+        // But user 0's own GP updated.
+        assert!((pol.inner.users[0].gp.posterior_mean(0) - 0.99).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,238 @@
+//! GP-UCB policies — the acquisition family ease.ml (Li et al., 2018)
+//! built its single-device multi-tenant scheduler on, implemented here as
+//! a comparison family for MM-GP-EI (the paper positions itself against
+//! exactly this line of work).
+//!
+//! UCB value: `ucb_t(x) = μ_t(x) + √β_t · σ_t(x)` with the standard
+//! `β_t = 2·log(|𝓛|·t²·π²/6δ)` schedule (Srinivas et al., 2012). The
+//! multi-tenant variant ranks arms by the *summed incumbent-clipped* UCB
+//! improvement per unit cost — the closest UCB analogue of EIrate — while
+//! the per-user variant replicates classic single-tenant GP-UCB under a
+//! round-robin allocator.
+
+use super::{EiBackend, Incumbents, NativeBackend, Policy, SchedContext};
+use crate::problem::{ArmId, Problem};
+
+/// UCB exploration schedule `√β_t`.
+fn sqrt_beta(n_arms: usize, t: usize, delta: f64) -> f64 {
+    let t = (t.max(1)) as f64;
+    let l = n_arms as f64;
+    (2.0 * (l * t * t * std::f64::consts::PI * std::f64::consts::PI / (6.0 * delta)).ln())
+        .max(0.0)
+        .sqrt()
+}
+
+/// **GP-UCB-MDMT**: shared GP, global allocation by summed clipped-UCB
+/// improvement rate — the UCB analogue of Algorithm 1, representing the
+/// ease.ml lineage in the cross-acquisition benchmark.
+pub struct GpUcbMdmt {
+    backend: NativeBackend,
+    incumbents: Incumbents,
+    delta: f64,
+    t: usize,
+}
+
+impl GpUcbMdmt {
+    /// Build with confidence parameter δ (default 0.1).
+    pub fn new(problem: &Problem) -> Self {
+        GpUcbMdmt {
+            backend: NativeBackend::new(problem),
+            incumbents: Incumbents::new(problem.n_users),
+            delta: 0.1,
+            t: 0,
+        }
+    }
+}
+
+impl Policy for GpUcbMdmt {
+    fn name(&self) -> String {
+        "GP-UCB-MDMT".into()
+    }
+
+    fn select(&mut self, ctx: &SchedContext) -> Option<ArmId> {
+        let (mu, sd) = self.backend.posterior();
+        let sb = sqrt_beta(ctx.problem.n_arms(), self.t + 1, self.delta);
+        let mut best_arm = None;
+        let mut best_score = f64::NEG_INFINITY;
+        for x in ctx.candidates() {
+            let ucb = mu[x] + sb * sd[x];
+            // Summed improvement of the optimistic value over each
+            // owner's incumbent, per unit cost.
+            let mut gain = 0.0;
+            for &u in &ctx.problem.arm_users[x] {
+                gain += (ucb - self.incumbents.value(u)).max(0.0);
+            }
+            let score = gain / ctx.problem.cost[x];
+            if score > best_score {
+                best_score = score;
+                best_arm = Some(x);
+            }
+        }
+        best_arm
+    }
+
+    fn observe(&mut self, problem: &Problem, arm: ArmId, z: f64) {
+        self.t += 1;
+        self.backend.observe(arm, z);
+        self.incumbents.update_arm(problem, arm, z);
+    }
+}
+
+/// **GP-UCB-Round-Robin**: classic per-user single-tenant GP-UCB under a
+/// round-robin user allocator (the natural UCB twin of GP-EI-Round-Robin).
+pub struct GpUcbRoundRobin {
+    /// One shared-prior GP per user restricted to their arms.
+    users: Vec<UserUcb>,
+    next_user: usize,
+    delta: f64,
+    t: usize,
+}
+
+struct UserUcb {
+    arms: Vec<ArmId>,
+    gp: crate::gp::Gp,
+    local: Vec<usize>,
+}
+
+impl GpUcbRoundRobin {
+    /// Build for a problem instance.
+    pub fn new(problem: &Problem) -> Self {
+        let users = (0..problem.n_users)
+            .map(|u| {
+                let arms = problem.user_arms[u].clone();
+                let mean: Vec<f64> = arms.iter().map(|&a| problem.prior_mean[a]).collect();
+                let cov = crate::linalg::principal_submatrix(&problem.prior_cov, &arms);
+                let mut local = vec![usize::MAX; problem.n_arms()];
+                for (i, &a) in arms.iter().enumerate() {
+                    local[a] = i;
+                }
+                UserUcb { arms, gp: crate::gp::Gp::new(mean, cov), local }
+            })
+            .collect();
+        GpUcbRoundRobin { users, next_user: 0, delta: 0.1, t: 0 }
+    }
+}
+
+impl Policy for GpUcbRoundRobin {
+    fn name(&self) -> String {
+        "GP-UCB-Round-Robin".into()
+    }
+
+    fn select(&mut self, ctx: &SchedContext) -> Option<ArmId> {
+        let n = self.users.len();
+        for step in 0..n {
+            let u = (self.next_user + step) % n;
+            let user = &self.users[u];
+            let sb = sqrt_beta(user.arms.len(), self.t + 1, self.delta);
+            let mut best = None;
+            let mut best_ucb = f64::NEG_INFINITY;
+            for (li, &a) in user.arms.iter().enumerate() {
+                if ctx.selected[a] {
+                    continue;
+                }
+                let ucb = user.gp.posterior_mean(li) + sb * user.gp.posterior_std(li);
+                if ucb > best_ucb {
+                    best_ucb = ucb;
+                    best = Some(a);
+                }
+            }
+            if best.is_some() {
+                self.next_user = (u + 1) % n;
+                return best;
+            }
+        }
+        None
+    }
+
+    fn observe(&mut self, _problem: &Problem, arm: ArmId, z: f64) {
+        self.t += 1;
+        for user in self.users.iter_mut() {
+            let li = user.local[arm];
+            if li != usize::MAX && !user.gp.is_observed(li) {
+                user.gp.observe(li, z);
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::Mat;
+    use crate::sim::{simulate, SimConfig};
+
+    fn problem() -> (Problem, crate::problem::Truth) {
+        let user_arms = vec![vec![0, 1, 2], vec![3, 4, 5]];
+        let arm_users = Problem::compute_arm_users(6, &user_arms);
+        let p = Problem {
+            name: "ucb".into(),
+            n_users: 2,
+            cost: vec![1.0, 2.0, 1.5, 1.0, 2.0, 1.5],
+            user_arms,
+            arm_users,
+            prior_mean: vec![0.5; 6],
+            prior_cov: Mat::eye(6),
+        };
+        let t = crate::problem::Truth { z: vec![0.4, 0.8, 0.6, 0.7, 0.3, 0.9] };
+        (p, t)
+    }
+
+    #[test]
+    fn sqrt_beta_grows_with_time_and_arms() {
+        assert!(sqrt_beta(8, 2, 0.1) > sqrt_beta(8, 1, 0.1));
+        assert!(sqrt_beta(64, 5, 0.1) > sqrt_beta(8, 5, 0.1));
+        assert!(sqrt_beta(8, 5, 0.01) > sqrt_beta(8, 5, 0.1), "smaller δ explores more");
+    }
+
+    #[test]
+    fn ucb_mdmt_completes_and_converges() {
+        let (p, t) = problem();
+        let mut pol = GpUcbMdmt::new(&p);
+        let r = simulate(&p, &t, &mut pol, &SimConfig { n_devices: 2, ..Default::default() });
+        assert_eq!(r.observations.len(), 6);
+        assert_eq!(r.inst_regret.final_value(), 0.0);
+    }
+
+    #[test]
+    fn ucb_round_robin_completes() {
+        let (p, t) = problem();
+        let mut pol = GpUcbRoundRobin::new(&p);
+        let r = simulate(&p, &t, &mut pol, &SimConfig { n_devices: 1, ..Default::default() });
+        assert_eq!(r.observations.len(), 6);
+        assert_eq!(r.inst_regret.final_value(), 0.0);
+    }
+
+    #[test]
+    fn ucb_mdmt_prefers_uncertain_cheap_arms() {
+        let (p, _) = problem();
+        let mut pol = GpUcbMdmt::new(&p);
+        // Observe arm 1 high → user 0's incumbent rises.
+        pol.observe(&p, 1, 0.9);
+        let selected = vec![false, true, false, false, false, false];
+        let observed = selected.clone();
+        let ctx = SchedContext { problem: &p, selected: &selected, observed: &observed, now: 0.0 };
+        let pick = pol.select(&ctx).unwrap();
+        // User 1 has incumbent 0 → any of their arms dominates user 0's
+        // remaining arms; cheapest user-1 arm (3, cost 1.0) should win.
+        assert_eq!(pick, 3, "UCB gain/cost should favour user 1's cheap arm");
+    }
+
+    #[test]
+    fn ucb_never_selects_selected() {
+        let (p, t) = problem();
+        let mut pol = GpUcbMdmt::new(&p);
+        let mut selected = vec![false; 6];
+        let observed = vec![false; 6];
+        for _ in 0..6 {
+            let a = pol
+                .select(&SchedContext { problem: &p, selected: &selected, observed: &observed, now: 0.0 })
+                .unwrap();
+            assert!(!selected[a]);
+            selected[a] = true;
+            pol.observe(&p, a, t.z[a]);
+        }
+        assert!(pol
+            .select(&SchedContext { problem: &p, selected: &selected, observed: &selected, now: 0.0 })
+            .is_none());
+    }
+}

@@ -1,0 +1,172 @@
+//! Scheduling policies — the paper's §4 contribution and its baselines.
+//!
+//! A [`Policy`] is consulted by the driver (simulator or live coordinator)
+//! every time a device becomes free and is notified of every finished
+//! observation. The paper's experiments (§6.1) compare:
+//!
+//! * [`MmGpEi`] — **GP-EI-MDMT**, Algorithm 1: one shared GP over all
+//!   arms; whenever a device frees, run the unselected arm maximizing
+//!   `EIrate_t(x) = Σ_i 1(x∈𝓛_i)·EI_{i,t}(x) / c(x)`;
+//! * [`GpEiRoundRobin`] — each user runs an independent single-tenant
+//!   GP-EI; the service serves users in round-robin order;
+//! * [`GpEiRandom`] — same, but the next user is drawn uniformly;
+//! * [`Oracle`] — knows the ground truth; runs every user's optimal arm
+//!   first (regret lower-bound reference, not in the paper);
+//! * ablations: [`MmGpEi::cost_insensitive`] (rank by EI instead of
+//!   EIrate) and [`MmGpEiIndep`] (global EIrate argmax but *independent*
+//!   per-user GPs — isolates the value of the shared prior).
+
+mod backend;
+mod baselines;
+mod fantasy;
+mod gp_ucb;
+mod mm_gp_ei;
+
+pub use backend::{EiBackend, NativeBackend};
+pub use baselines::{GpEiRandom, GpEiRoundRobin, MmGpEiIndep, Oracle};
+pub use fantasy::MmGpEiFantasy;
+pub use gp_ucb::{GpUcbMdmt, GpUcbRoundRobin};
+pub use mm_gp_ei::MmGpEi;
+
+use crate::problem::{ArmId, Problem};
+
+/// Incumbent value used for a user with no observation yet.
+///
+/// The paper's protocol warm-starts two models per user, so the incumbent
+/// is always defined once a policy takes over; before that we floor at
+/// 0.0 — the natural "no model yet" value for accuracy-like metrics (all
+/// paper workloads are accuracies in [0,1] or shifted-non-negative GP
+/// samples).
+pub const EMPTY_INCUMBENT: f64 = 0.0;
+
+/// Scheduler-visible state at a decision point.
+pub struct SchedContext<'a> {
+    /// Problem instance (costs, memberships, prior).
+    pub problem: &'a Problem,
+    /// `selected[x]` — x has been dispatched (observed **or** running).
+    /// Algorithm 1 only considers `𝓛 \ 𝓛_ob ∖ running` as candidates.
+    pub selected: &'a [bool],
+    /// `observed[x]` — x has finished and its z is known.
+    pub observed: &'a [bool],
+    /// Current (virtual or wall-clock) time.
+    pub now: f64,
+}
+
+impl<'a> SchedContext<'a> {
+    /// Iterator over arms that may still be dispatched.
+    pub fn candidates(&self) -> impl Iterator<Item = ArmId> + '_ {
+        (0..self.problem.n_arms()).filter(move |&a| !self.selected[a])
+    }
+}
+
+/// A scheduling policy: decides which arm a freed device runs next.
+///
+/// Policies are *not* `Send`: the PJRT-backed [`EiBackend`] wraps
+/// non-thread-safe client handles. The live coordinator keeps the policy
+/// on the leader thread and fans work out to device worker threads.
+pub trait Policy {
+    /// Display name (used in reports and plots).
+    fn name(&self) -> String;
+
+    /// A device is free at `ctx.now`; return the arm to run, or `None`
+    /// to leave the device idle (only sensible when no candidate is
+    /// left). Must not return an already-selected arm.
+    fn select(&mut self, ctx: &SchedContext) -> Option<ArmId>;
+
+    /// Observation callback: arm `x` finished with performance `z`.
+    fn observe(&mut self, problem: &Problem, arm: ArmId, z: f64);
+}
+
+/// Per-user incumbent tracker `z(x_i*(t))` shared by several policies.
+#[derive(Clone, Debug)]
+pub struct Incumbents {
+    best: Vec<Option<f64>>,
+}
+
+impl Incumbents {
+    /// All-empty incumbents for `n_users`.
+    pub fn new(n_users: usize) -> Self {
+        Incumbents { best: vec![None; n_users] }
+    }
+
+    /// Current incumbent value for user `u` (floored for empty).
+    #[inline]
+    pub fn value(&self, u: usize) -> f64 {
+        self.best[u].unwrap_or(EMPTY_INCUMBENT)
+    }
+
+    /// Whether user `u` has at least one observation.
+    pub fn has_observation(&self, u: usize) -> bool {
+        self.best[u].is_some()
+    }
+
+    /// Fold in observation `z` of an arm owned by user `u`.
+    pub fn update(&mut self, u: usize, z: f64) {
+        let cur = self.best[u];
+        self.best[u] = Some(match cur {
+            Some(b) => b.max(z),
+            None => z,
+        });
+    }
+
+    /// Fold an arm observation into all owning users.
+    pub fn update_arm(&mut self, problem: &Problem, arm: ArmId, z: f64) {
+        for &u in &problem.arm_users[arm] {
+            self.update(u, z);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::Mat;
+
+    fn two_user_problem() -> Problem {
+        let user_arms = vec![vec![0, 1], vec![2, 3]];
+        let arm_users = Problem::compute_arm_users(4, &user_arms);
+        Problem {
+            name: "t".into(),
+            n_users: 2,
+            cost: vec![1.0; 4],
+            user_arms,
+            arm_users,
+            prior_mean: vec![0.0; 4],
+            prior_cov: Mat::eye(4),
+        }
+    }
+
+    #[test]
+    fn incumbents_track_max() {
+        let mut inc = Incumbents::new(2);
+        assert_eq!(inc.value(0), EMPTY_INCUMBENT);
+        assert!(!inc.has_observation(0));
+        inc.update(0, 0.4);
+        inc.update(0, 0.2);
+        assert_eq!(inc.value(0), 0.4);
+        assert!(inc.has_observation(0));
+        assert_eq!(inc.value(1), EMPTY_INCUMBENT);
+    }
+
+    #[test]
+    fn incumbents_update_arm_fans_out() {
+        let mut p = two_user_problem();
+        // Make arm 1 shared by both users.
+        p.user_arms[1].push(1);
+        p.arm_users = Problem::compute_arm_users(4, &p.user_arms);
+        let mut inc = Incumbents::new(2);
+        inc.update_arm(&p, 1, 0.9);
+        assert_eq!(inc.value(0), 0.9);
+        assert_eq!(inc.value(1), 0.9);
+    }
+
+    #[test]
+    fn context_candidates_filter_selected() {
+        let p = two_user_problem();
+        let selected = vec![true, false, false, true];
+        let observed = vec![true, false, false, false];
+        let ctx = SchedContext { problem: &p, selected: &selected, observed: &observed, now: 0.0 };
+        let cands: Vec<_> = ctx.candidates().collect();
+        assert_eq!(cands, vec![1, 2]);
+    }
+}

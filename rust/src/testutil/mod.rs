@@ -1,0 +1,173 @@
+//! Property-testing mini-framework.
+//!
+//! The offline environment provides no `proptest`/`quickcheck`, so this
+//! module supplies the pieces the test suite needs: seeded random-case
+//! generation over a configurable number of cases, value generators built
+//! on [`crate::prng::Rng`], and failure reports that include the seed of
+//! the offending case so it can be replayed deterministically.
+
+use crate::prng::Rng;
+
+/// Number of random cases per property (override with `MMGPEI_PROP_CASES`).
+pub fn default_cases() -> usize {
+    std::env::var("MMGPEI_PROP_CASES")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(32)
+}
+
+/// Run `property` against `cases` seeded RNGs; panics with the failing
+/// seed on the first violation (the property itself should panic/assert).
+pub fn for_all_seeds(name: &str, cases: usize, mut property: impl FnMut(&mut Rng)) {
+    for case in 0..cases {
+        let seed = 0xC0FFEE ^ (case as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15);
+        let mut rng = Rng::new(seed);
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            property(&mut rng);
+        }));
+        if let Err(payload) = result {
+            let msg = payload
+                .downcast_ref::<String>()
+                .cloned()
+                .or_else(|| payload.downcast_ref::<&str>().map(|s| s.to_string()))
+                .unwrap_or_else(|| "<non-string panic>".into());
+            panic!(
+                "property '{name}' failed on case {case} (seed {seed:#x}): {msg}"
+            );
+        }
+    }
+}
+
+/// Convenience wrapper with the default case count.
+pub fn check(name: &str, property: impl FnMut(&mut Rng)) {
+    for_all_seeds(name, default_cases(), property);
+}
+
+/// Generators for common structured inputs.
+pub mod gen {
+    use crate::kernels::{exchangeable_user_sim, kronecker_arm_cov};
+    use crate::linalg::Mat;
+    use crate::problem::{Problem, Truth};
+    use crate::prng::Rng;
+
+    /// Random SPD matrix `B Bᵀ + εI` of size `n`.
+    pub fn spd(rng: &mut Rng, n: usize) -> Mat {
+        let mut b = Mat::zeros(n, n);
+        for i in 0..n {
+            for j in 0..n {
+                b[(i, j)] = rng.normal();
+            }
+        }
+        let mut a = Mat::zeros(n, n);
+        for i in 0..n {
+            for j in 0..=i {
+                let mut acc = 0.0;
+                for k in 0..n {
+                    acc += b[(i, k)] * b[(j, k)];
+                }
+                let v = acc + if i == j { 0.5 * n as f64 } else { 0.0 };
+                a[(i, j)] = v;
+                a[(j, i)] = v;
+            }
+        }
+        a
+    }
+
+    /// Random correlation-scaled covariance (unit-ish diagonal).
+    pub fn covariance(rng: &mut Rng, n: usize) -> Mat {
+        let mut a = spd(rng, n);
+        let d: Vec<f64> = (0..n).map(|i| a[(i, i)].sqrt()).collect();
+        for i in 0..n {
+            for j in 0..n {
+                a[(i, j)] /= d[i] * d[j];
+            }
+        }
+        a
+    }
+
+    /// Random MDMT problem instance + ground truth, with disjoint per-user
+    /// arm blocks (the common case) and a Kronecker prior.
+    pub fn problem(rng: &mut Rng, n_users: usize, models_per_user: usize) -> (Problem, Truth) {
+        let n_arms = n_users * models_per_user;
+        let arms: Vec<(usize, usize)> = (0..n_users)
+            .flat_map(|u| (0..models_per_user).map(move |m| (u, m)))
+            .collect();
+        let rho = rng.uniform_in(0.1, 0.9);
+        let user_sim = exchangeable_user_sim(n_users, rho);
+        let model_cov = {
+            let mut c = covariance(rng, models_per_user);
+            for i in 0..models_per_user {
+                c[(i, i)] += 0.05;
+            }
+            c
+        };
+        let prior_cov = kronecker_arm_cov(&arms, &user_sim, &model_cov);
+        let prior_mean = vec![0.5; n_arms];
+        let user_arms: Vec<Vec<usize>> = (0..n_users)
+            .map(|u| (0..models_per_user).map(|m| u * models_per_user + m).collect())
+            .collect();
+        let arm_users = Problem::compute_arm_users(n_arms, &user_arms);
+        let cost: Vec<f64> = (0..n_arms).map(|_| rng.uniform_in(0.5, 4.0)).collect();
+        let p = Problem {
+            name: format!("prop-{n_users}x{models_per_user}"),
+            n_users,
+            cost,
+            user_arms,
+            arm_users,
+            prior_mean: prior_mean.clone(),
+            prior_cov: prior_cov.clone(),
+        };
+        p.validate();
+        // Draw the truth from the prior itself (well-specified case).
+        let (l, _) = crate::linalg::cholesky_jittered(&prior_cov, 1e-8).unwrap();
+        let z = rng.mvn(&prior_mean, &l);
+        (p, Truth { z })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn for_all_seeds_runs_every_case() {
+        let mut count = 0;
+        for_all_seeds("counting", 17, |_| {
+            count += 1;
+        });
+        assert_eq!(count, 17);
+    }
+
+    #[test]
+    #[should_panic(expected = "property 'failing' failed on case 0")]
+    fn failing_property_reports_seed() {
+        for_all_seeds("failing", 4, |_| panic!("boom"));
+    }
+
+    #[test]
+    fn spd_generator_is_pd() {
+        check("spd is positive definite", |rng| {
+            let a = gen::spd(rng, 6);
+            assert!(crate::linalg::cholesky(&a).is_ok());
+        });
+    }
+
+    #[test]
+    fn covariance_unit_diag() {
+        check("covariance has unit diagonal", |rng| {
+            let c = gen::covariance(rng, 5);
+            for i in 0..5 {
+                assert!((c[(i, i)] - 1.0).abs() < 1e-9);
+            }
+        });
+    }
+
+    #[test]
+    fn problem_generator_validates() {
+        check("generated problems validate", |rng| {
+            let (p, t) = gen::problem(rng, 4, 3);
+            assert_eq!(t.z.len(), p.n_arms());
+            p.validate();
+        });
+    }
+}

@@ -1,0 +1,287 @@
+//! Raw benchmark tables and the paper's §6.1 evaluation protocol.
+
+use crate::kernels::{empirical_model_cov, exchangeable_user_sim, kronecker_arm_cov};
+use crate::linalg::Mat;
+use crate::problem::{Problem, Truth};
+use crate::prng::Rng;
+
+/// A model-selection benchmark table: accuracy and runtime of every model
+/// on every user's dataset (what ease.ml collected and the paper replays).
+#[derive(Clone, Debug)]
+pub struct Dataset {
+    /// Dataset label ("deeplearning", "azure", ...).
+    pub name: String,
+    /// Model (architecture / classifier) names, length `n_models`.
+    pub model_names: Vec<String>,
+    /// `accuracy[(u, m)]` — performance of model m on user u's task.
+    pub accuracy: Mat,
+    /// `cost[(u, m)]` — training time of model m on user u's data
+    /// (abstract time units; Remark 1 treats these as known).
+    pub cost: Mat,
+}
+
+/// The paper's protocol split: 8 users isolated to estimate the prior,
+/// the rest served.
+#[derive(Clone, Debug)]
+pub struct ProtocolSplit {
+    /// Users used to estimate the GP prior.
+    pub holdout: Vec<usize>,
+    /// Users actually served by the scheduler.
+    pub serve: Vec<usize>,
+}
+
+impl Dataset {
+    /// Number of users (rows).
+    pub fn n_users(&self) -> usize {
+        self.accuracy.rows()
+    }
+
+    /// Number of models (columns).
+    pub fn n_models(&self) -> usize {
+        self.accuracy.cols()
+    }
+
+    /// Average over users of the per-user std of model accuracies — the
+    /// statistic the paper uses to contrast Azure (≈0.12) with
+    /// DeepLearning (≈0.04) in §6.2.
+    pub fn mean_per_user_accuracy_std(&self) -> f64 {
+        let m = self.n_models() as f64;
+        let mut acc = 0.0;
+        for u in 0..self.n_users() {
+            let row = self.accuracy.row(u);
+            let mean = row.iter().sum::<f64>() / m;
+            let var = row.iter().map(|a| (a - mean) * (a - mean)).sum::<f64>() / m;
+            acc += var.sqrt();
+        }
+        acc / self.n_users() as f64
+    }
+
+    /// Randomly split users into `n_holdout` prior-estimation users and
+    /// the served remainder (paper §6.1: `n_holdout = 8`).
+    pub fn protocol_split(&self, rng: &mut Rng, n_holdout: usize) -> ProtocolSplit {
+        assert!(n_holdout < self.n_users(), "must leave at least one served user");
+        let holdout = rng.choose_indices(self.n_users(), n_holdout);
+        let serve: Vec<usize> =
+            (0..self.n_users()).filter(|u| !holdout.contains(u)).collect();
+        ProtocolSplit { holdout, serve }
+    }
+
+    /// Estimate the cross-user correlation ρ from the holdout rows: the
+    /// average Pearson correlation between pairs of users' accuracy
+    /// vectors, clamped to a PD-safe range. This is the "similarity of
+    /// users' datasets" factor of the paper's §4.2 prior discussion.
+    pub fn estimate_user_rho(&self, holdout: &[usize]) -> f64 {
+        let m = self.n_models();
+        let center = |u: usize| -> Vec<f64> {
+            let row = self.accuracy.row(u);
+            let mean = row.iter().sum::<f64>() / m as f64;
+            row.iter().map(|a| a - mean).collect()
+        };
+        let mut acc = 0.0;
+        let mut count = 0usize;
+        for (i, &u) in holdout.iter().enumerate() {
+            let cu = center(u);
+            let nu = cu.iter().map(|v| v * v).sum::<f64>().sqrt();
+            for &v in &holdout[i + 1..] {
+                let cv = center(v);
+                let nv = cv.iter().map(|x| x * x).sum::<f64>().sqrt();
+                if nu > 1e-12 && nv > 1e-12 {
+                    acc += crate::linalg::dot(&cu, &cv) / (nu * nv);
+                    count += 1;
+                }
+            }
+        }
+        if count == 0 {
+            return 0.0;
+        }
+        (acc / count as f64).clamp(0.0, 0.9)
+    }
+
+    /// Apply the paper's protocol: estimate the GP prior (per-model mean,
+    /// model covariance via [`empirical_model_cov`], user similarity via
+    /// [`Dataset::estimate_user_rho`]) from the holdout rows and build the
+    /// MDMT problem over the served users. Arms are (served-user, model)
+    /// pairs in user-major order.
+    pub fn make_problem(&self, split: &ProtocolSplit) -> (Problem, Truth) {
+        let n_models = self.n_models();
+        let history: Vec<Vec<f64>> =
+            split.holdout.iter().map(|&u| self.accuracy.row(u).to_vec()).collect();
+        let (model_mean, model_cov) = empirical_model_cov(&history, 1e-6);
+        let rho = self.estimate_user_rho(&split.holdout);
+        let n_serve = split.serve.len();
+        let user_sim = exchangeable_user_sim(n_serve, rho);
+        let arms: Vec<(usize, usize)> = (0..n_serve)
+            .flat_map(|u| (0..n_models).map(move |m| (u, m)))
+            .collect();
+        let prior_cov = kronecker_arm_cov(&arms, &user_sim, &model_cov);
+        let prior_mean: Vec<f64> =
+            arms.iter().map(|&(_, m)| model_mean[m]).collect();
+        let cost: Vec<f64> = split
+            .serve
+            .iter()
+            .flat_map(|&u| (0..n_models).map(move |m| self.cost[(u, m)]))
+            .collect();
+        let z: Vec<f64> = split
+            .serve
+            .iter()
+            .flat_map(|&u| (0..n_models).map(move |m| self.accuracy[(u, m)]))
+            .collect();
+        let user_arms: Vec<Vec<usize>> = (0..n_serve)
+            .map(|u| (0..n_models).map(|m| u * n_models + m).collect())
+            .collect();
+        let arm_users = Problem::compute_arm_users(arms.len(), &user_arms);
+        let problem = Problem {
+            name: format!("{}[serve {} of {}]", self.name, n_serve, self.n_users()),
+            n_users: n_serve,
+            cost,
+            user_arms,
+            arm_users,
+            prior_mean,
+            prior_cov,
+        };
+        problem.validate();
+        (problem, Truth { z })
+    }
+
+    /// Serialize to CSV: header then one `user,model,accuracy,cost` row
+    /// per cell. Round-trips with [`Dataset::from_csv`].
+    pub fn to_csv(&self) -> String {
+        let mut out = String::from("user,model,accuracy,cost\n");
+        for u in 0..self.n_users() {
+            for m in 0..self.n_models() {
+                out.push_str(&format!(
+                    "{},{},{:.17},{:.17}\n",
+                    u, self.model_names[m], self.accuracy[(u, m)], self.cost[(u, m)]
+                ));
+            }
+        }
+        out
+    }
+
+    /// Parse the CSV format produced by [`Dataset::to_csv`].
+    pub fn from_csv(name: &str, text: &str) -> Result<Dataset, String> {
+        let mut lines = text.lines();
+        let header = lines.next().ok_or("empty csv")?;
+        if header.trim() != "user,model,accuracy,cost" {
+            return Err(format!("unexpected header: {header}"));
+        }
+        let mut model_names: Vec<String> = Vec::new();
+        let mut cells: Vec<(usize, usize, f64, f64)> = Vec::new();
+        let mut n_users = 0usize;
+        for (lineno, line) in lines.enumerate() {
+            if line.trim().is_empty() {
+                continue;
+            }
+            let parts: Vec<&str> = line.split(',').collect();
+            if parts.len() != 4 {
+                return Err(format!("line {}: expected 4 fields", lineno + 2));
+            }
+            let u: usize =
+                parts[0].trim().parse().map_err(|e| format!("line {}: {e}", lineno + 2))?;
+            let model = parts[1].trim().to_string();
+            let m = match model_names.iter().position(|n| *n == model) {
+                Some(i) => i,
+                None => {
+                    model_names.push(model);
+                    model_names.len() - 1
+                }
+            };
+            let acc: f64 =
+                parts[2].trim().parse().map_err(|e| format!("line {}: {e}", lineno + 2))?;
+            let cost: f64 =
+                parts[3].trim().parse().map_err(|e| format!("line {}: {e}", lineno + 2))?;
+            n_users = n_users.max(u + 1);
+            cells.push((u, m, acc, cost));
+        }
+        let n_models = model_names.len();
+        if n_users * n_models != cells.len() {
+            return Err(format!(
+                "expected {} cells for {}x{}, got {}",
+                n_users * n_models,
+                n_users,
+                n_models,
+                cells.len()
+            ));
+        }
+        let mut accuracy = Mat::zeros(n_users, n_models);
+        let mut cost = Mat::zeros(n_users, n_models);
+        for (u, m, a, c) in cells {
+            accuracy[(u, m)] = a;
+            cost[(u, m)] = c;
+        }
+        Ok(Dataset { name: name.to_string(), model_names, accuracy, cost })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny() -> Dataset {
+        Dataset {
+            name: "tiny".into(),
+            model_names: vec!["a".into(), "b".into()],
+            accuracy: Mat::from_rows(&[&[0.5, 0.7], &[0.6, 0.8], &[0.55, 0.75], &[0.5, 0.6]]),
+            cost: Mat::from_rows(&[&[1.0, 2.0], &[1.5, 2.5], &[1.2, 2.2], &[1.1, 2.1]]),
+        }
+    }
+
+    #[test]
+    fn csv_roundtrip() {
+        let d = tiny();
+        let csv = d.to_csv();
+        let back = Dataset::from_csv("tiny", &csv).unwrap();
+        assert_eq!(back.model_names, d.model_names);
+        assert_eq!(back.accuracy.as_slice(), d.accuracy.as_slice());
+        assert_eq!(back.cost.as_slice(), d.cost.as_slice());
+    }
+
+    #[test]
+    fn csv_rejects_bad_header() {
+        assert!(Dataset::from_csv("x", "nope\n").is_err());
+        assert!(Dataset::from_csv("x", "").is_err());
+    }
+
+    #[test]
+    fn csv_rejects_ragged() {
+        let bad = "user,model,accuracy,cost\n0,a,0.5,1.0\n0,b,0.6\n";
+        assert!(Dataset::from_csv("x", bad).is_err());
+    }
+
+    #[test]
+    fn rho_estimate_in_range() {
+        let d = tiny();
+        let rho = d.estimate_user_rho(&[0, 1, 2, 3]);
+        assert!((0.0..=0.9).contains(&rho));
+        // These users' accuracy profiles are strongly aligned (model b
+        // always better) → high estimated correlation.
+        assert!(rho > 0.5, "aligned users should correlate, got {rho}");
+    }
+
+    #[test]
+    fn per_user_std_hand_check() {
+        let d = Dataset {
+            name: "s".into(),
+            model_names: vec!["a".into(), "b".into()],
+            accuracy: Mat::from_rows(&[&[0.4, 0.6]]),
+            cost: Mat::from_rows(&[&[1.0, 1.0]]),
+        };
+        // std of {0.4, 0.6} (population) = 0.1
+        assert!((d.mean_per_user_accuracy_std() - 0.1).abs() < 1e-12);
+    }
+
+    #[test]
+    fn make_problem_shared_nothing_between_users() {
+        let d = tiny();
+        let split = ProtocolSplit { holdout: vec![0, 1], serve: vec![2, 3] };
+        let (p, t) = d.make_problem(&split);
+        p.validate();
+        assert_eq!(p.n_users, 2);
+        assert_eq!(p.n_arms(), 4);
+        assert_eq!(t.z[0], d.accuracy[(2, 0)]);
+        assert_eq!(t.z[3], d.accuracy[(3, 1)]);
+        // Kronecker structure: same-user same-model diag entries equal
+        // model variances.
+        assert!(p.prior_cov[(0, 0)] > 0.0);
+    }
+}

@@ -1,0 +1,170 @@
+//! The paper's Figure-5 synthetic workload: N users × L models, model
+//! performance drawn per user from a zero-mean GP with a Matérn ν = 5/2
+//! covariance, shifted upwards to be non-negative.
+
+use crate::kernels::{Kernel, Matern52};
+use crate::linalg::{cholesky_jittered, Mat};
+use crate::problem::{Problem, Truth};
+use crate::prng::Rng;
+
+/// Parameters of the synthetic GP workload.
+#[derive(Clone, Debug)]
+pub struct SyntheticConfig {
+    /// Number of users N (paper: 50).
+    pub n_users: usize,
+    /// Number of models per user (paper: 50).
+    pub n_models: usize,
+    /// Matérn output variance.
+    pub variance: f64,
+    /// Matérn lengthscale over the 1-D model embedding.
+    pub lengthscale: f64,
+    /// Cost range `[lo, hi)` for per-arm runtimes (the paper does not
+    /// specify synthetic runtimes; heterogeneous costs keep the EIrate
+    /// mechanism active — see DESIGN.md §3).
+    pub cost_range: (f64, f64),
+}
+
+impl Default for SyntheticConfig {
+    fn default() -> Self {
+        SyntheticConfig {
+            n_users: 50,
+            n_models: 50,
+            variance: 1.0,
+            lengthscale: 0.8,
+            cost_range: (0.5, 2.0),
+        }
+    }
+}
+
+/// Generate the synthetic instance.
+///
+/// Models are embedded at 1-D positions `m·0.25` and share one Matérn
+/// gram matrix `C`; each user's performance vector is an **independent**
+/// draw `z_u ~ N(0, C)` ("generate random samples independently for each
+/// user"), then the whole table is shifted by its global minimum so all
+/// values are non-negative. The scheduler's prior is exactly the
+/// generative model: block-diagonal `diag(C, …, C)` with the shift folded
+/// into the prior mean — the well-specified case the theory assumes.
+pub fn synthetic_gp(config: &SyntheticConfig, seed: u64) -> (Problem, Truth) {
+    let n = config.n_users;
+    let l = config.n_models;
+    let mut rng = Rng::new(seed);
+    let pts: Vec<Vec<f64>> = (0..l).map(|m| vec![m as f64 * 0.25]).collect();
+    let kern = Matern52 { variance: config.variance, lengthscale: config.lengthscale };
+    let c = kern.gram(&pts);
+    let (lchol, _) = cholesky_jittered(&c, 1e-10).expect("Matérn gram must be PSD");
+    // Independent per-user draws.
+    let zero = vec![0.0; l];
+    let mut draws: Vec<Vec<f64>> = (0..n).map(|_| rng.mvn(&zero, &lchol)).collect();
+    // Shift upwards to be non-negative (paper §6.3).
+    let min = draws
+        .iter()
+        .flat_map(|d| d.iter().copied())
+        .fold(f64::INFINITY, f64::min);
+    let shift = if min < 0.0 { -min } else { 0.0 };
+    for d in draws.iter_mut() {
+        for v in d.iter_mut() {
+            *v += shift;
+        }
+    }
+    // Arms user-major; block-diagonal prior covariance.
+    let n_arms = n * l;
+    let mut prior_cov = Mat::zeros(n_arms, n_arms);
+    for u in 0..n {
+        for i in 0..l {
+            for j in 0..l {
+                prior_cov[(u * l + i, u * l + j)] = c[(i, j)];
+            }
+        }
+    }
+    let prior_mean = vec![shift; n_arms];
+    let cost: Vec<f64> =
+        (0..n_arms).map(|_| rng.uniform_in(config.cost_range.0, config.cost_range.1)).collect();
+    let user_arms: Vec<Vec<usize>> =
+        (0..n).map(|u| (0..l).map(|m| u * l + m).collect()).collect();
+    let arm_users = Problem::compute_arm_users(n_arms, &user_arms);
+    let problem = Problem {
+        name: format!("synthetic-{n}x{l}"),
+        n_users: n,
+        cost,
+        user_arms,
+        arm_users,
+        prior_mean,
+        prior_cov,
+    };
+    let z: Vec<f64> = draws.into_iter().flatten().collect();
+    (problem, Truth { z })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_matches_paper_scale() {
+        let c = SyntheticConfig::default();
+        assert_eq!(c.n_users, 50);
+        assert_eq!(c.n_models, 50);
+    }
+
+    #[test]
+    fn deterministic_per_seed() {
+        let cfg = SyntheticConfig { n_users: 4, n_models: 6, ..Default::default() };
+        let (_, a) = synthetic_gp(&cfg, 9);
+        let (_, b) = synthetic_gp(&cfg, 9);
+        let (_, c) = synthetic_gp(&cfg, 10);
+        assert_eq!(a.z, b.z);
+        assert_ne!(a.z, c.z);
+    }
+
+    #[test]
+    fn prior_is_block_diagonal() {
+        let cfg = SyntheticConfig { n_users: 3, n_models: 4, ..Default::default() };
+        let (p, _) = synthetic_gp(&cfg, 1);
+        // Cross-user blocks are exactly zero.
+        for i in 0..4 {
+            for j in 4..8 {
+                assert_eq!(p.prior_cov[(i, j)], 0.0);
+            }
+        }
+        // Within-user block is the Matérn gram (same for all users).
+        for i in 0..4 {
+            for j in 0..4 {
+                assert_eq!(p.prior_cov[(i, j)], p.prior_cov[(4 + i, 4 + j)]);
+            }
+        }
+    }
+
+    #[test]
+    fn nearby_models_correlate() {
+        let cfg = SyntheticConfig { n_users: 1, n_models: 10, ..Default::default() };
+        let (p, _) = synthetic_gp(&cfg, 3);
+        assert!(p.prior_cov[(0, 1)] > p.prior_cov[(0, 5)]);
+        assert!(p.prior_cov[(0, 5)] > p.prior_cov[(0, 9)]);
+    }
+
+    #[test]
+    fn shift_folded_into_prior_mean() {
+        let cfg = SyntheticConfig { n_users: 5, n_models: 8, ..Default::default() };
+        let (p, t) = synthetic_gp(&cfg, 4);
+        // Prior mean equals the applied shift; the minimum sample is 0.
+        let min = t.z.iter().copied().fold(f64::INFINITY, f64::min);
+        assert!(min.abs() < 1e-12);
+        assert!(p.prior_mean.iter().all(|&m| (m - p.prior_mean[0]).abs() < 1e-12));
+        assert!(p.prior_mean[0] >= 0.0);
+    }
+
+    #[test]
+    fn costs_in_configured_range() {
+        let cfg = SyntheticConfig {
+            n_users: 3,
+            n_models: 3,
+            cost_range: (2.0, 3.0),
+            ..Default::default()
+        };
+        let (p, _) = synthetic_gp(&cfg, 5);
+        for &c in &p.cost {
+            assert!((2.0..3.0).contains(&c));
+        }
+    }
+}

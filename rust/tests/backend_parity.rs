@@ -1,0 +1,171 @@
+//! Native-vs-XLA backend parity: the AOT artifact (JAX + Pallas, lowered
+//! to HLO and executed through PJRT) must agree with the native
+//! incremental-Cholesky GP to tight numeric tolerance, and the full
+//! MM-GP-EI policy must make identical decisions with either backend.
+//!
+//! Requires `make artifacts`; tests are skipped (with a loud message)
+//! when the artifact directory is missing so `cargo test` stays runnable
+//! before the first build.
+
+use std::path::PathBuf;
+
+use mmgpei::prng::Rng;
+use mmgpei::runtime::{default_artifact_dir, XlaBackend};
+use mmgpei::sched::{EiBackend, MmGpEi, NativeBackend, Policy, SchedContext};
+use mmgpei::sim::{simulate, SimConfig};
+use mmgpei::workload::azure;
+
+fn artifact_dir() -> Option<PathBuf> {
+    let dir = default_artifact_dir();
+    if dir.join("manifest.txt").exists() {
+        Some(dir)
+    } else {
+        eprintln!("SKIP: no artifacts at {dir:?} — run `make artifacts`");
+        None
+    }
+}
+
+/// Build the paper's Azure protocol instance (9 users × 8 models).
+fn azure_instance(seed: u64) -> (mmgpei::problem::Problem, mmgpei::problem::Truth) {
+    let data = azure();
+    let mut rng = Rng::new(seed);
+    let split = data.protocol_split(&mut rng, 8);
+    data.make_problem(&split)
+}
+
+#[test]
+fn posterior_and_eirate_agree() {
+    let Some(dir) = artifact_dir() else { return };
+    let (problem, truth) = azure_instance(2024);
+    let mut native = NativeBackend::new(&problem);
+    let mut xla = XlaBackend::new(&problem, &dir).expect("load artifact");
+
+    // Feed identical observation streams.
+    let mut rng = Rng::new(7);
+    let mut selected = vec![false; problem.n_arms()];
+    let mut best = vec![0.0f64; problem.n_users];
+    for step in 0..10 {
+        let arm = loop {
+            let a = rng.below(problem.n_arms());
+            if !selected[a] {
+                break a;
+            }
+        };
+        selected[arm] = true;
+        let z = truth.z[arm];
+        native.observe(arm, z);
+        xla.observe(arm, z);
+        for &u in &problem.arm_users[arm] {
+            best[u] = best[u].max(z);
+        }
+
+        let (mu_n, sd_n) = native.posterior();
+        let (mu_x, sd_x) = xla.posterior();
+        for a in 0..problem.n_arms() {
+            assert!(
+                (mu_n[a] - mu_x[a]).abs() < 1e-6,
+                "step {step} arm {a}: mu native {} vs xla {}",
+                mu_n[a],
+                mu_x[a]
+            );
+            assert!(
+                (sd_n[a] - sd_x[a]).abs() < 1e-6,
+                "step {step} arm {a}: sigma native {} vs xla {}",
+                sd_n[a],
+                sd_x[a]
+            );
+        }
+
+        let e_n = native.eirate(&best, &selected, true);
+        let e_x = xla.eirate(&best, &selected, true);
+        for a in 0..problem.n_arms() {
+            if selected[a] {
+                assert!(e_n[a] == f64::NEG_INFINITY || e_n[a] <= -1e29);
+                assert!(e_x[a] <= -1e29);
+            } else {
+                assert!(
+                    (e_n[a] - e_x[a]).abs() < 1e-6 * (1.0 + e_n[a].abs()),
+                    "step {step} arm {a}: eirate native {} vs xla {}",
+                    e_n[a],
+                    e_x[a]
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn full_policy_runs_identically() {
+    let Some(dir) = artifact_dir() else { return };
+    let (problem, truth) = azure_instance(99);
+    let cfg = SimConfig { n_devices: 2, warm_start_per_user: 2, horizon: None, ..Default::default() };
+
+    let r_native = {
+        let mut p = MmGpEi::new(&problem);
+        simulate(&problem, &truth, &mut p, &cfg)
+    };
+    let r_xla = {
+        let backend = XlaBackend::new(&problem, &dir).expect("load artifact");
+        let mut p = MmGpEi::with_backend(&problem, Box::new(backend));
+        simulate(&problem, &truth, &mut p, &cfg)
+    };
+
+    // Same decisions → identical observation sequences and regret.
+    let arms_native: Vec<_> = r_native.observations.iter().map(|o| o.arm).collect();
+    let arms_xla: Vec<_> = r_xla.observations.iter().map(|o| o.arm).collect();
+    assert_eq!(arms_native, arms_xla, "backends must schedule identically");
+    assert!(
+        (r_native.cumulative_regret - r_xla.cumulative_regret).abs() < 1e-9,
+        "regret parity: {} vs {}",
+        r_native.cumulative_regret,
+        r_xla.cumulative_regret
+    );
+}
+
+#[test]
+fn ei_only_ablation_parity() {
+    let Some(dir) = artifact_dir() else { return };
+    let (problem, truth) = azure_instance(7);
+    let mut native = NativeBackend::new(&problem);
+    let mut xla = XlaBackend::new(&problem, &dir).expect("load artifact");
+    let selected = {
+        let mut s = vec![false; problem.n_arms()];
+        for a in 0..6 {
+            s[a] = true;
+            native.observe(a, truth.z[a]);
+            xla.observe(a, truth.z[a]);
+        }
+        s
+    };
+    let mut best = vec![0.0f64; problem.n_users];
+    for a in 0..6 {
+        for &u in &problem.arm_users[a] {
+            best[u] = best[u].max(truth.z[a]);
+        }
+    }
+    let e_n = native.eirate(&best, &selected, false);
+    let e_x = xla.eirate(&best, &selected, false);
+    for a in 6..problem.n_arms() {
+        assert!(
+            (e_n[a] - e_x[a]).abs() < 1e-6 * (1.0 + e_n[a].abs()),
+            "arm {a}: EI-only native {} vs xla {}",
+            e_n[a],
+            e_x[a]
+        );
+    }
+}
+
+#[test]
+fn xla_scores_match_policy_argmax_semantics() {
+    // The MmGpEi policy must pick the same arm whether scores come from
+    // native or xla, including at the very first decision (no obs).
+    let Some(dir) = artifact_dir() else { return };
+    let (problem, _) = azure_instance(1234);
+    let selected = vec![false; problem.n_arms()];
+    let observed = vec![false; problem.n_arms()];
+    let ctx = SchedContext { problem: &problem, selected: &selected, observed: &observed, now: 0.0 };
+    let pick_native = MmGpEi::new(&problem).select(&ctx).unwrap();
+    let backend = XlaBackend::new(&problem, &dir).expect("load artifact");
+    let pick_xla = MmGpEi::with_backend(&problem, Box::new(backend)).select(&ctx).unwrap();
+    assert_eq!(pick_native, pick_xla);
+}

@@ -1,0 +1,142 @@
+//! Integration tests asserting the *shape* of the paper's headline
+//! results (DESIGN.md §4): who wins, directionally by how much, and where
+//! the effects disappear. Absolute numbers differ from the paper (our
+//! substrate is a simulator over substituted tables); shapes must hold.
+
+use mmgpei::metrics::mean_std;
+use mmgpei::prng::Rng;
+use mmgpei::sched::{GpEiRandom, GpEiRoundRobin, MmGpEi, Policy};
+use mmgpei::sim::{simulate, SimConfig, SimResult};
+use mmgpei::workload::{azure, deeplearning, synthetic_gp, Dataset, SyntheticConfig};
+
+/// Run `make_policy` over `n_seeds` protocol resamplings; returns the
+/// per-seed cumulative regrets.
+fn run_seeds(
+    data: &Dataset,
+    n_devices: usize,
+    n_seeds: u64,
+    make_policy: impl Fn(&mmgpei::problem::Problem, u64) -> Box<dyn Policy>,
+) -> Vec<SimResult> {
+    (0..n_seeds)
+        .map(|seed| {
+            let mut rng = Rng::new(1000 + seed);
+            let split = data.protocol_split(&mut rng, 8);
+            let (problem, truth) = data.make_problem(&split);
+            let mut policy = make_policy(&problem, seed);
+            simulate(
+                &problem,
+                &truth,
+                policy.as_mut(),
+                &SimConfig { n_devices, warm_start_per_user: 2, horizon: None, ..Default::default() },
+            )
+        })
+        .collect()
+}
+
+fn mean_cumulative(results: &[SimResult]) -> f64 {
+    mean_std(&results.iter().map(|r| r.cumulative_regret).collect::<Vec<_>>()).0
+}
+
+/// Figure 2 (Azure panel): with a single device, GP-EI-MDMT beats both
+/// round-robin and random on cumulative regret.
+#[test]
+fn fig2_shape_azure_mdmt_wins_single_device() {
+    let data = azure();
+    let n_seeds = 8;
+    let mm = run_seeds(&data, 1, n_seeds, |p, _| Box::new(MmGpEi::new(p)));
+    let rr = run_seeds(&data, 1, n_seeds, |p, _| Box::new(GpEiRoundRobin::new(p)));
+    let rand = run_seeds(&data, 1, n_seeds, |p, s| Box::new(GpEiRandom::new(p, 77 + s)));
+    let (m_mm, m_rr, m_rand) = (mean_cumulative(&mm), mean_cumulative(&rr), mean_cumulative(&rand));
+    assert!(
+        m_mm < m_rr,
+        "Azure/1dev: MDMT ({m_mm:.2}) must beat round-robin ({m_rr:.2})"
+    );
+    assert!(
+        m_mm < m_rand,
+        "Azure/1dev: MDMT ({m_mm:.2}) must beat random ({m_rand:.2})"
+    );
+}
+
+/// Figure 2 (DeepLearning panel): the gap is small — the paper reports no
+/// significant speedup because warm-start already lands within σ≈0.04 of
+/// optimal. We assert MDMT is not significantly *worse* (within 25%).
+#[test]
+fn fig2_shape_deeplearning_near_parity() {
+    let data = deeplearning();
+    let n_seeds = 8;
+    let mm = run_seeds(&data, 1, n_seeds, |p, _| Box::new(MmGpEi::new(p)));
+    let rr = run_seeds(&data, 1, n_seeds, |p, _| Box::new(GpEiRoundRobin::new(p)));
+    let (m_mm, m_rr) = (mean_cumulative(&mm), mean_cumulative(&rr));
+    assert!(
+        m_mm < 1.25 * m_rr,
+        "DeepLearning/1dev: MDMT ({m_mm:.2}) should be ≈ round-robin ({m_rr:.2})"
+    );
+}
+
+/// Figure 3 shape: more devices → faster instantaneous-regret decay for
+/// MDMT (strictly smaller cumulative regret as M doubles).
+#[test]
+fn fig3_shape_more_devices_help() {
+    let data = azure();
+    let n_seeds = 6;
+    let m1 = mean_cumulative(&run_seeds(&data, 1, n_seeds, |p, _| Box::new(MmGpEi::new(p))));
+    let m2 = mean_cumulative(&run_seeds(&data, 2, n_seeds, |p, _| Box::new(MmGpEi::new(p))));
+    let m4 = mean_cumulative(&run_seeds(&data, 4, n_seeds, |p, _| Box::new(MmGpEi::new(p))));
+    assert!(m2 < m1, "2 devices ({m2:.2}) must beat 1 ({m1:.2})");
+    assert!(m4 < m2, "4 devices ({m4:.2}) must beat 2 ({m2:.2})");
+}
+
+/// Figure 4 shape: at M=8 on Azure (9 served users) MDMT and round-robin
+/// nearly coincide — with as many devices as users there is nothing to
+/// prioritize. The paper calls this out explicitly.
+#[test]
+fn fig4_shape_m8_parity_on_azure() {
+    let data = azure();
+    let n_seeds = 6;
+    let mm = mean_cumulative(&run_seeds(&data, 8, n_seeds, |p, _| Box::new(MmGpEi::new(p))));
+    let rr =
+        mean_cumulative(&run_seeds(&data, 8, n_seeds, |p, _| Box::new(GpEiRoundRobin::new(p))));
+    let ratio = mm / rr;
+    assert!(
+        (0.75..=1.25).contains(&ratio),
+        "Azure/8dev: MDMT vs RR should be near parity, ratio {ratio:.3}"
+    );
+    // …while at M=4 MDMT still wins.
+    let mm4 = mean_cumulative(&run_seeds(&data, 4, n_seeds, |p, _| Box::new(MmGpEi::new(p))));
+    let rr4 =
+        mean_cumulative(&run_seeds(&data, 4, n_seeds, |p, _| Box::new(GpEiRoundRobin::new(p))));
+    assert!(mm4 < rr4, "Azure/4dev: MDMT ({mm4:.2}) must beat RR ({rr4:.2})");
+}
+
+/// Figure 5 shape: near-linear speedup of time-to-cutoff while M ≪ N on
+/// the synthetic workload (small version for test speed; the bench runs
+/// the paper's 50×50).
+#[test]
+fn fig5_shape_near_linear_speedup() {
+    let cfg = SyntheticConfig { n_users: 16, n_models: 12, ..Default::default() };
+    let cutoff = 0.01;
+    let time_at = |m: usize| -> f64 {
+        let times: Vec<f64> = (0..3)
+            .map(|seed| {
+                let (p, t) = synthetic_gp(&cfg, 500 + seed);
+                let mut pol = MmGpEi::new(&p);
+                let r = simulate(
+                    &p,
+                    &t,
+                    &mut pol,
+                    &SimConfig { n_devices: m, warm_start_per_user: 2, horizon: None, ..Default::default() },
+                );
+                r.time_to(cutoff).expect("cutoff must be reached (all arms eventually run)")
+            })
+            .collect();
+        mean_std(&times).0
+    };
+    let t1 = time_at(1);
+    let t2 = time_at(2);
+    let t4 = time_at(4);
+    let s2 = t1 / t2;
+    let s4 = t1 / t4;
+    assert!(s2 > 1.4, "2-device speedup should be near-linear, got {s2:.2}");
+    assert!(s4 > 2.2, "4-device speedup should be near-linear, got {s4:.2}");
+    assert!(s4 > s2, "speedup must grow with devices");
+}

@@ -1,0 +1,230 @@
+//! Property-based tests over scheduler/simulator invariants, using the
+//! in-tree property harness (`mmgpei::testutil`) with randomized problem
+//! instances. These are the "routing, batching, state" invariants the
+//! coordinator relies on.
+
+use mmgpei::prng::Rng;
+use mmgpei::sched::{GpEiRandom, GpEiRoundRobin, MmGpEi, MmGpEiIndep, Policy};
+use mmgpei::sim::{simulate, SimConfig};
+use mmgpei::testutil::{check, gen};
+
+fn policies(p: &mmgpei::problem::Problem, seed: u64) -> Vec<Box<dyn Policy>> {
+    vec![
+        Box::new(MmGpEi::new(p)),
+        Box::new(MmGpEi::cost_insensitive(p)),
+        Box::new(MmGpEiIndep::new(p)),
+        Box::new(GpEiRoundRobin::new(p)),
+        Box::new(GpEiRandom::new(p, seed)),
+    ]
+}
+
+#[test]
+fn every_policy_observes_every_arm_exactly_once() {
+    check("exactly-once execution", |rng| {
+        let (nu, nm) = (2 + rng.below(4), 2 + rng.below(4));
+        let (p, t) = gen::problem(rng, nu, nm);
+        let m = 1 + rng.below(4);
+        for mut pol in policies(&p, rng.next_u64()) {
+            let r = simulate(
+                &p,
+                &t,
+                pol.as_mut(),
+                &SimConfig { n_devices: m, warm_start_per_user: 2, horizon: None, ..Default::default() },
+            );
+            let mut arms: Vec<_> = r.observations.iter().map(|o| o.arm).collect();
+            arms.sort_unstable();
+            let expect: Vec<usize> = (0..p.n_arms()).collect();
+            assert_eq!(arms, expect, "policy {} must run all arms once", r.policy);
+        }
+    });
+}
+
+#[test]
+fn devices_never_run_more_than_capacity() {
+    check("device capacity", |rng| {
+        let (p, t) = gen::problem(rng, 3, 4);
+        let m = 1 + rng.below(5);
+        let mut pol = MmGpEi::new(&p);
+        let r = simulate(
+            &p,
+            &t,
+            &mut pol,
+            &SimConfig { n_devices: m, warm_start_per_user: 2, horizon: None, ..Default::default() },
+        );
+        // At any completion boundary, count overlapping running intervals.
+        for probe in r.observations.iter().map(|o| o.start) {
+            let running = r
+                .observations
+                .iter()
+                .filter(|o| o.start <= probe && probe < o.finish)
+                .count();
+            assert!(running <= m, "{} arms running at t={probe} with M={m}", running);
+        }
+    });
+}
+
+#[test]
+fn regret_curve_is_monotone_and_nonnegative() {
+    check("regret monotone", |rng| {
+        let nu = 2 + rng.below(3);
+        let (p, t) = gen::problem(rng, nu, 3);
+        for mut pol in policies(&p, rng.next_u64()) {
+            let r = simulate(
+                &p,
+                &t,
+                pol.as_mut(),
+                &SimConfig { n_devices: 2, warm_start_per_user: 1, horizon: None, ..Default::default() },
+            );
+            let pts = r.inst_regret.points();
+            assert!(pts.iter().all(|&(_, v)| v >= -1e-12), "{}", r.policy);
+            for w in pts.windows(2) {
+                assert!(w[1].1 <= w[0].1 + 1e-12, "{} non-monotone", r.policy);
+            }
+            assert!(
+                r.inst_regret.final_value().abs() < 1e-12,
+                "{} must end at zero regret after exhausting arms",
+                r.policy
+            );
+            assert!(r.cumulative_regret >= -1e-12);
+        }
+    });
+}
+
+#[test]
+fn makespan_bounds() {
+    check("makespan bounds", |rng| {
+        let (p, t) = gen::problem(rng, 3, 3);
+        let m = 1 + rng.below(4);
+        let mut pol = MmGpEi::new(&p);
+        let r = simulate(
+            &p,
+            &t,
+            &mut pol,
+            &SimConfig { n_devices: m, warm_start_per_user: 2, horizon: None, ..Default::default() },
+        );
+        let total: f64 = p.cost.iter().sum();
+        let max_cost = p.cost.iter().cloned().fold(0.0, f64::max);
+        // Work conservation: makespan ∈ [total/M, total] and at least the
+        // longest single job.
+        assert!(r.makespan <= total + 1e-9);
+        assert!(r.makespan >= total / m as f64 - 1e-9);
+        assert!(r.makespan >= max_cost - 1e-9);
+    });
+}
+
+#[test]
+fn identical_seeds_reproduce_runs_exactly() {
+    check("determinism", |rng| {
+        let (p, t) = gen::problem(rng, 3, 3);
+        let seed = rng.next_u64();
+        let run = || {
+            let mut pol = GpEiRandom::new(&p, seed);
+            simulate(
+                &p,
+                &t,
+                &mut pol,
+                &SimConfig { n_devices: 2, warm_start_per_user: 2, horizon: None, ..Default::default() },
+            )
+        };
+        let a = run();
+        let b = run();
+        let arms_a: Vec<_> = a.observations.iter().map(|o| (o.arm, o.device)).collect();
+        let arms_b: Vec<_> = b.observations.iter().map(|o| (o.arm, o.device)).collect();
+        assert_eq!(arms_a, arms_b);
+        assert_eq!(a.cumulative_regret, b.cumulative_regret);
+    });
+}
+
+#[test]
+fn shared_arms_observed_once_but_credit_all_owners() {
+    check("shared arms", |rng| {
+        // Build a problem where one arm is shared by all users.
+        let (mut p, t) = gen::problem(rng, 3, 3);
+        let shared_arm = 0usize;
+        for u in 1..p.n_users {
+            if !p.user_arms[u].contains(&shared_arm) {
+                p.user_arms[u].push(shared_arm);
+            }
+        }
+        p.arm_users = mmgpei::problem::Problem::compute_arm_users(p.n_arms(), &p.user_arms);
+        p.validate();
+        let mut pol = MmGpEi::new(&p);
+        let r = simulate(
+            &p,
+            &t,
+            &mut pol,
+            &SimConfig { n_devices: 2, warm_start_per_user: 1, horizon: None, ..Default::default() },
+        );
+        let count = r.observations.iter().filter(|o| o.arm == shared_arm).count();
+        assert_eq!(count, 1, "shared arm must run exactly once");
+    });
+}
+
+#[test]
+fn warm_start_respects_selection_dedup() {
+    check("warm-start dedup", |rng| {
+        let (p, t) = gen::problem(rng, 4, 3);
+        // Warm start larger than candidate sets → must clamp gracefully.
+        let mut pol = MmGpEi::new(&p);
+        let r = simulate(
+            &p,
+            &t,
+            &mut pol,
+            &SimConfig { n_devices: 3, warm_start_per_user: 10, horizon: None, ..Default::default() },
+        );
+        assert_eq!(r.observations.len(), p.n_arms());
+    });
+}
+
+#[test]
+fn cost_estimate_noise_preserves_invariants() {
+    // Remark-1 setting: noisy ĉ(x) must not break exactly-once execution
+    // or regret accounting, and durations must reflect true costs.
+    check("cost-estimate noise", |rng| {
+        let (p, t) = gen::problem(rng, 3, 4);
+        let seed = rng.next_u64();
+        let mut noise_rng = Rng::new(seed);
+        let est = mmgpei::workload::noisy_cost_estimates(&p, 0.2, &mut noise_rng);
+        assert!(est.iter().all(|&c| c > 0.0));
+        let view = mmgpei::sim::with_cost_estimates(&p, &est);
+        let mut pol = MmGpEi::new(&view);
+        let r = mmgpei::sim::simulate_with_estimates(
+            &p,
+            &t,
+            &mut pol,
+            &SimConfig { n_devices: 2, ..Default::default() },
+            Some(&est),
+        );
+        assert_eq!(r.observations.len(), p.n_arms());
+        // Completion durations must reflect TRUE costs, not estimates.
+        for o in &r.observations {
+            assert!((o.finish - o.start - p.cost[o.arm]).abs() < 1e-12);
+        }
+        assert!(r.inst_regret.final_value().abs() < 1e-12);
+    });
+}
+
+#[test]
+fn more_devices_never_increase_time_to_any_cutoff() {
+    // Weak-monotonicity spot check on a fixed mid-size instance (full
+    // statistical version lives in the fig5 bench).
+    let mut rng = Rng::new(424242);
+    let (p, t) = gen::problem(&mut rng, 6, 4);
+    let run = |m: usize| {
+        let mut pol = MmGpEi::new(&p);
+        simulate(
+            &p,
+            &t,
+            &mut pol,
+            &SimConfig { n_devices: m, warm_start_per_user: 2, horizon: None, ..Default::default() },
+        )
+    };
+    let r1 = run(1);
+    let r4 = run(4);
+    let t1 = r1.time_to(1e-9).unwrap();
+    let t4 = r4.time_to(1e-9).unwrap();
+    assert!(
+        t4 <= t1 * 1.2 + 1e-9,
+        "4 devices should not be much slower to exhaust: {t4} vs {t1}"
+    );
+}
