@@ -5,17 +5,23 @@
 //!    and one full EIrate scoring pass;
 //!  * the naive O(t³) recompute the incremental path replaces (the
 //!    before/after of the §Perf iteration log);
+//!  * **cached vs rescan** (§Perf P1b): the dirty-set incremental EIrate
+//!    cache against the full per-decision rescan it replaces, on a
+//!    many-users workload — amortized per-decision cost over a whole
+//!    serving run, with an up-front bit-identical argmax check;
 //!  * the AOT XLA artifact: one full `scheduler_step` execution via PJRT
-//!    (requires `make artifacts`; skipped otherwise);
+//!    (requires `--features xla` + `make artifacts`; skipped otherwise);
 //!  * end-to-end decision latency inside the live coordinator.
 //!
 //! Run: `cargo bench --bench perf_hotpath`
 
 use mmgpei::bench::{Bencher, Table};
 use mmgpei::prng::Rng;
+use mmgpei::problem::{Problem, Truth};
 use mmgpei::runtime::{default_artifact_dir, XlaBackend};
-use mmgpei::sched::{EiBackend, NativeBackend};
+use mmgpei::sched::{rescan_eirate, EiBackend, NativeBackend};
 use mmgpei::testutil::gen;
+use mmgpei::workload::{synthetic_gp, SyntheticConfig};
 use std::hint::black_box;
 use std::time::Duration;
 
@@ -52,12 +58,36 @@ fn main() {
             })
             .collect();
 
-        // (a) EIrate scoring pass (reads cached posterior — O(L·N̄)).
-        let stats = bench.run("eirate", || {
-            black_box(native.eirate(black_box(&best), black_box(&selected), true))
+        // (a) full EIrate scoring pass — every arm rescored from the
+        // cached posterior, O(L·N̄) EI evaluations (the per-decision cost
+        // the dirty-set cache replaces; see §P1b for the serving-loop
+        // comparison).
+        let stats = bench.run("eirate-rescan", || {
+            black_box(rescan_eirate(
+                native.gp(),
+                black_box(&problem.arm_users),
+                black_box(&problem.cost),
+                black_box(&best),
+                black_box(&selected),
+                true,
+            ))
         });
         table.row(vec![
-            "native eirate scan".into(),
+            "eirate full rescan".into(),
+            l.to_string(),
+            t_obs.to_string(),
+            mmgpei::bench::fmt_duration(stats.mean),
+            mmgpei::bench::fmt_duration(stats.p99),
+        ]);
+
+        // (a') steady-state cached read — unchanged posterior and
+        // incumbents, so only the O(L) mask/cost assembly runs.
+        let stats = bench.run("eirate-cached", || {
+            let s = native.eirate(black_box(&best), black_box(&selected), true);
+            black_box(s[s.len() - 1])
+        });
+        table.row(vec![
+            "eirate cached (clean decision)".into(),
             l.to_string(),
             t_obs.to_string(),
             mmgpei::bench::fmt_duration(stats.mean),
@@ -99,7 +129,8 @@ fn main() {
                 xla.observe(a, truth.z[a]);
             }
             let stats = bench.run("xla", || {
-                black_box(xla.eirate(black_box(&best), black_box(&selected), true))
+                let s = xla.eirate(black_box(&best), black_box(&selected), true);
+                black_box(s[s.len() - 1])
             });
             table.row(vec![
                 "xla scheduler_step (PJRT)".into(),
@@ -111,6 +142,8 @@ fn main() {
         }
     }
     println!("{}", table.to_markdown());
+
+    cached_vs_rescan();
 
     // End-to-end: decision latency inside the live coordinator.
     println!("\n--- live coordinator decision latency (azure, 4 devices) ---");
@@ -124,7 +157,7 @@ fn main() {
             _ => match XlaBackend::new(&problem, &default_artifact_dir()) {
                 Ok(b) => Box::new(mmgpei::sched::MmGpEi::with_backend(&problem, Box::new(b))),
                 Err(_) => {
-                    println!("xla: skipped (run `make artifacts`)");
+                    println!("xla: skipped (build with --features xla and run `make artifacts`)");
                     continue;
                 }
             },
@@ -148,4 +181,137 @@ fn main() {
             report.makespan
         );
     }
+}
+
+/// One full serving run driven through the cached dirty-set scorer:
+/// observe → incumbent update → eirate, for every arm in `order`.
+/// Returns a fold of the scores (keeps the optimizer honest) and appends
+/// each decision's argmax to `picks` when provided.
+fn drive_cached(
+    problem: &Problem,
+    truth: &Truth,
+    order: &[usize],
+    mut picks: Option<&mut Vec<Option<usize>>>,
+) -> f64 {
+    let mut backend = NativeBackend::new(problem);
+    let mut selected = vec![false; problem.n_arms()];
+    let mut best = vec![0.0f64; problem.n_users];
+    let mut acc = 0.0;
+    for &a in order {
+        backend.observe(a, truth.z[a]);
+        selected[a] = true;
+        for &u in &problem.arm_users[a] {
+            best[u] = best[u].max(truth.z[a]);
+        }
+        let scores = backend.eirate(&best, &selected, true);
+        acc += scores[scores.len() - 1];
+        if let Some(p) = picks.as_mut() {
+            p.push(argmax(scores));
+        }
+    }
+    acc
+}
+
+/// The same serving run scored by the full per-decision rescan.
+fn drive_rescan(
+    problem: &Problem,
+    truth: &Truth,
+    order: &[usize],
+    mut picks: Option<&mut Vec<Option<usize>>>,
+) -> f64 {
+    let mut gp = mmgpei::gp::Gp::new(problem.prior_mean.clone(), problem.prior_cov.clone());
+    let mut selected = vec![false; problem.n_arms()];
+    let mut best = vec![0.0f64; problem.n_users];
+    let mut acc = 0.0;
+    for &a in order {
+        gp.observe(a, truth.z[a]);
+        selected[a] = true;
+        for &u in &problem.arm_users[a] {
+            best[u] = best[u].max(truth.z[a]);
+        }
+        let scores =
+            rescan_eirate(&gp, &problem.arm_users, &problem.cost, &best, &selected, true);
+        acc += scores[scores.len() - 1];
+        if let Some(p) = picks.as_mut() {
+            p.push(argmax(&scores));
+        }
+    }
+    acc
+}
+
+fn argmax(scores: &[f64]) -> Option<usize> {
+    let mut arg = None;
+    let mut best = f64::NEG_INFINITY;
+    for (x, &s) in scores.iter().enumerate() {
+        if s > best {
+            best = s;
+            arg = Some(x);
+        }
+    }
+    arg
+}
+
+/// §Perf P1b — the acceptance benchmark for the dirty-set cache: the
+/// many-users scenario (64 tenants × 16 models, per-user independent
+/// blocks), amortized per-decision cost of cached vs full-rescan scoring
+/// over a half-exhausting serving run, with bit-identical argmax
+/// verification up front.
+fn cached_vs_rescan() {
+    println!("\n=== §Perf P1b: cached (dirty-set) vs full-rescan EIrate, many users ===\n");
+    let bench = Bencher {
+        warmup: Duration::from_millis(100),
+        budget: Duration::from_millis(1200),
+        max_iters: 1_000,
+        min_iters: 3,
+    };
+    let mut table =
+        Table::new(&["scorer", "users", "L (arms)", "decisions", "mean/decision", "speedup"]);
+    for (n_users, n_models) in [(16usize, 16usize), (64, 16)] {
+        let cfg = SyntheticConfig { n_users, n_models, ..Default::default() };
+        let (problem, truth) = synthetic_gp(&cfg, 0xCACE);
+        let l = problem.n_arms();
+        let n_decisions = l / 2;
+        // A deterministic scattered half of the arm set (stride-7 picks,
+        // deduped), observed in ascending order.
+        let mut order: Vec<usize> = (0..n_decisions).map(|i| (i * 7 + 3) % l).collect();
+        order.sort_unstable();
+        order.dedup();
+        let n_decisions = order.len();
+
+        // Correctness gate: the cached scorer must pick bit-identically
+        // to the rescan scorer at every single decision.
+        let mut picks_cached = Vec::with_capacity(n_decisions);
+        let mut picks_rescan = Vec::with_capacity(n_decisions);
+        drive_cached(&problem, &truth, &order, Some(&mut picks_cached));
+        drive_rescan(&problem, &truth, &order, Some(&mut picks_rescan));
+        assert_eq!(
+            picks_cached, picks_rescan,
+            "cached scorer must select identically to the rescan scorer"
+        );
+
+        let s_cached =
+            bench.run("cached", || black_box(drive_cached(&problem, &truth, &order, None)));
+        let s_rescan =
+            bench.run("rescan", || black_box(drive_rescan(&problem, &truth, &order, None)));
+        let per = |d: Duration| d / n_decisions as u32;
+        let speedup = s_rescan.mean.as_secs_f64() / s_cached.mean.as_secs_f64();
+        table.row(vec![
+            "full rescan".into(),
+            n_users.to_string(),
+            l.to_string(),
+            n_decisions.to_string(),
+            mmgpei::bench::fmt_duration(per(s_rescan.mean)),
+            "1.00×".into(),
+        ]);
+        table.row(vec![
+            "dirty-set cache".into(),
+            n_users.to_string(),
+            l.to_string(),
+            n_decisions.to_string(),
+            mmgpei::bench::fmt_duration(per(s_cached.mean)),
+            format!("{speedup:.2}×"),
+        ]);
+    }
+    println!("{}", table.to_markdown());
+    println!("(selections verified bit-identical before timing; target ≥ 5× on 64 users)");
 }

@@ -30,11 +30,38 @@ mod stats;
 pub use fit::{fit_matern52, log_marginal_likelihood, nelder_mead, FittedMatern};
 pub use stats::{erf, erfc, expected_improvement, norm_cdf, norm_pdf, tau};
 
+use std::fmt;
+
 use crate::linalg::{cholesky_jittered, cholesky_solve, CholeskyFactor, Mat};
 use crate::problem::ArmId;
 
 /// Default base jitter for numerically singular kernel appends.
 pub const DEFAULT_JITTER: f64 = 1e-10;
+
+/// Minimum Cholesky pivot (σ floor) accepted when appending an
+/// observation. Pivots below this are floored by escalating jitter so the
+/// posterior update's `acc / ltt` division can never overflow into ±∞
+/// and emit NaN posteriors (a pivot of e.g. 1e-300 passes a plain `> 0`
+/// check but poisons every arm's mean).
+pub const MIN_PIVOT: f64 = 1e-8;
+
+/// Errors from [`Gp::try_observe`].
+#[derive(Clone, Debug, PartialEq)]
+pub enum GpError {
+    /// The arm was already observed; the paper's protocol observes each
+    /// model exactly once (noise-free), so a repeat is a scheduler bug.
+    AlreadyObserved(ArmId),
+}
+
+impl fmt::Display for GpError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            GpError::AlreadyObserved(x) => write!(f, "arm {x} observed twice"),
+        }
+    }
+}
+
+impl std::error::Error for GpError {}
 
 /// Incrementally updated GP posterior over a finite arm set.
 #[derive(Clone, Debug)]
@@ -56,6 +83,15 @@ pub struct Gp {
     /// Current posterior variance per arm (clamped at 0).
     var: Vec<f64>,
     observed: Vec<bool>,
+    /// Arms whose (μ, σ²) moved beyond `change_tol` in the most recent
+    /// successful observation — the dirty set incremental scorers
+    /// invalidate. Reused across calls to avoid per-observation allocs.
+    changed_arms: Vec<ArmId>,
+    /// Change-reporting tolerance. 0.0 (the default) reports every arm
+    /// whose posterior changed *at all*, which is what exact (bit-stable)
+    /// downstream caching requires; a positive tolerance trades exactness
+    /// for smaller dirty sets.
+    change_tol: f64,
 }
 
 impl Gp {
@@ -75,7 +111,21 @@ impl Gp {
             beta: Vec::new(),
             w: vec![0.0; n * n],
             observed: vec![false; n],
+            changed_arms: Vec::with_capacity(n),
+            change_tol: 0.0,
         }
+    }
+
+    /// Set the change-reporting tolerance (see [`Gp::observe`]). The
+    /// default of 0.0 reports every arm whose posterior moved at all.
+    pub fn set_change_tolerance(&mut self, tol: f64) {
+        assert!(tol >= 0.0 && tol.is_finite(), "tolerance must be finite and ≥ 0");
+        self.change_tol = tol;
+    }
+
+    /// Current change-reporting tolerance.
+    pub fn change_tolerance(&self) -> f64 {
+        self.change_tol
     }
 
     /// Number of arms.
@@ -112,23 +162,51 @@ impl Gp {
 
     /// Incorporate the observation `z(x)`. `O(|𝓛|·t)`.
     ///
+    /// Returns the arms whose posterior `(μ, σ²)` moved by more than the
+    /// change tolerance (default 0.0 = moved at all), the dirty set an
+    /// incremental scorer must invalidate. The borrow is valid until the
+    /// next mutation of the GP.
+    ///
     /// Repeated observation of the same arm is a scheduler bug (the paper
-    /// observes each model once, noise-free) — panics in debug, ignored in
-    /// release.
-    pub fn observe(&mut self, x: ArmId, z: f64) {
-        debug_assert!(!self.observed[x], "arm {x} observed twice");
+    /// observes each model once, noise-free) — logged to stderr and
+    /// skipped, identically in debug and release builds; the returned
+    /// dirty set is empty. Use [`Gp::try_observe`] to handle the error
+    /// explicitly.
+    pub fn observe(&mut self, x: ArmId, z: f64) -> &[ArmId] {
+        match self.observe_inner(x, z) {
+            Ok(()) => &self.changed_arms,
+            Err(e) => {
+                eprintln!("mmgpei::gp: ignoring observation: {e}");
+                &[]
+            }
+        }
+    }
+
+    /// Fallible form of [`Gp::observe`]: returns `Err` instead of
+    /// logging when the arm was already observed. On success the dirty
+    /// set is readable through the returned slice.
+    pub fn try_observe(&mut self, x: ArmId, z: f64) -> Result<&[ArmId], GpError> {
+        self.observe_inner(x, z)?;
+        Ok(&self.changed_arms)
+    }
+
+    /// Shared implementation of the observation update; populates
+    /// `self.changed_arms` on success.
+    fn observe_inner(&mut self, x: ArmId, z: f64) -> Result<(), GpError> {
         if self.observed[x] {
-            return;
+            return Err(GpError::AlreadyObserved(x));
         }
         let t = self.chol.dim();
         // Cross-covariances of the new observation against prior ones.
         let cross: Vec<f64> = self.obs_arms.iter().map(|&a| self.prior_cov[(x, a)]).collect();
         let diag = self.prior_cov[(x, x)];
-        let (_, jitter) = self
+        // Min-pivot append: guards the `acc / ltt` division below against
+        // a vanishing pivot (duplicated/near-duplicated arms) by floor-
+        // jittering instead of emitting NaN posteriors.
+        let (ltt, _jitter) = self
             .chol
-            .append_jittered(&cross, diag, DEFAULT_JITTER)
-            .expect("kernel matrix irrecoverably singular");
-        let _ = jitter;
+            .append_jittered_min_pivot(&cross, diag, DEFAULT_JITTER, MIN_PIVOT)
+            .expect("kernel append failed: prior covariance irrecoverably non-PSD");
         // New last entry of β: solve row t of L·β = (z − μ_obs).
         let resid = z - self.prior_mean[x];
         let row = self.chol.row(t);
@@ -136,20 +214,22 @@ impl Gp {
         for k in 0..t {
             acc -= row[k] * self.beta[k];
         }
-        let ltt = row[t];
         let beta_t = acc / ltt;
         // Copy row t of L once to release the borrow on self.chol.
         let lrow: Vec<f64> = row[..t].to_vec();
         self.beta.push(beta_t);
         self.observed[x] = true;
         self.obs_arms.push(x);
-        // Extend every arm's w by one entry and fold into μ/σ².
+        // Extend every arm's w by one entry and fold into μ/σ², recording
+        // which arms actually moved (the dirty set).
         // Hot loop of the native backend: per arm, one contiguous dot of
         // length t (flat `w` stride) against the cached L-row, reading
         // the cross-covariances from *row* x of the symmetric prior
         // (k(a,x) = k(x,a)) so the scan is fully sequential in memory.
         let n = self.n_arms();
         let covx = self.prior_cov.row(x);
+        let tol = self.change_tol;
+        self.changed_arms.clear();
         for a in 0..n {
             let wa = &self.w[a * n..a * n + t];
             let mut num = covx[a];
@@ -158,13 +238,21 @@ impl Gp {
             }
             let w_new = num / ltt;
             self.w[a * n + t] = w_new;
-            self.mu[a] += w_new * beta_t;
-            self.var[a] -= w_new * w_new;
+            let d_mu = w_new * beta_t;
+            let d_var = w_new * w_new;
+            self.mu[a] += d_mu;
+            self.var[a] -= d_var;
+            if a != x && (d_mu.abs() > tol || d_var > tol) {
+                self.changed_arms.push(a);
+            }
         }
         // The observed arm's posterior is exact: pin it (kills the jitter
-        // residue so incumbents computed from μ match observed z).
+        // residue so incumbents computed from μ match observed z). Always
+        // dirty — its σ collapsed to 0.
         self.mu[x] = z;
         self.var[x] = 0.0;
+        self.changed_arms.push(x);
+        Ok(())
     }
 
     /// Expected improvement of arm `x` over incumbent value `best`
@@ -312,6 +400,86 @@ mod tests {
     fn ei_positive_for_uncertain_arm() {
         let (gp, _) = gp_on_grid(8);
         assert!(gp.ei(0, 0.5) > 0.0, "uncertain arm always has positive EI");
+    }
+
+    #[test]
+    fn observe_reports_exactly_the_arms_that_moved() {
+        // Block-diagonal prior: two independent 3-arm blocks. Observing
+        // an arm in block 0 must dirty only block-0 arms.
+        let mut cov = Mat::eye(6);
+        for i in 0..3 {
+            for j in 0..3 {
+                cov[(i, j)] = if i == j { 1.0 } else { 0.6 };
+                cov[(3 + i, 3 + j)] = if i == j { 1.0 } else { 0.6 };
+            }
+        }
+        let mut gp = Gp::new(vec![0.0; 6], cov);
+        let before: Vec<(f64, f64)> =
+            (0..6).map(|a| (gp.posterior_mean(a), gp.posterior_std(a))).collect();
+        let changed: Vec<usize> = gp.observe(1, 0.8).to_vec();
+        let mut sorted = changed.clone();
+        sorted.sort_unstable();
+        assert_eq!(sorted, vec![0, 1, 2], "only block-0 arms move: {changed:?}");
+        // The report is exact: unreported arms are bit-identical.
+        for a in 3..6 {
+            assert_eq!(gp.posterior_mean(a), before[a].0, "arm {a} mean must not move");
+            assert_eq!(gp.posterior_std(a), before[a].1, "arm {a} std must not move");
+        }
+        for &a in &changed {
+            assert!(
+                gp.posterior_mean(a) != before[a].0 || gp.posterior_std(a) != before[a].1,
+                "reported arm {a} must actually have moved"
+            );
+        }
+    }
+
+    #[test]
+    fn double_observe_is_skipped_consistently() {
+        let (mut gp, z) = gp_on_grid(5);
+        gp.observe(2, z[2]);
+        let snapshot: Vec<f64> = (0..5).map(|a| gp.posterior_mean(a)).collect();
+        let n_obs = gp.n_observed();
+        // Second observation of the same arm: skipped (empty dirty set),
+        // state untouched — identically in debug and release builds.
+        let changed = gp.observe(2, 123.0).to_vec();
+        assert!(changed.is_empty());
+        assert_eq!(gp.n_observed(), n_obs);
+        for a in 0..5 {
+            assert_eq!(gp.posterior_mean(a), snapshot[a]);
+        }
+        // The fallible form surfaces the error explicitly.
+        assert_eq!(gp.try_observe(2, 123.0).unwrap_err(), GpError::AlreadyObserved(2));
+        // A fresh arm still works afterwards.
+        assert!(gp.try_observe(3, z[3]).is_ok());
+    }
+
+    #[test]
+    fn degenerate_pivot_never_emits_nan_posteriors() {
+        // Three perfectly correlated arms: every append after the first
+        // has a zero Schur complement. The min-pivot guard must keep all
+        // posteriors finite (the old `> 0` check let pivots like 1e-300
+        // through, overflowing β into ±∞).
+        let cov = Mat::from_fn(3, 3, |_, _| 1.0);
+        let mut gp = Gp::new(vec![0.0; 3], cov);
+        gp.observe(0, 0.4);
+        gp.observe(1, 0.4);
+        gp.observe(2, 0.4);
+        for a in 0..3 {
+            assert!(gp.posterior_mean(a).is_finite(), "mean[{a}] finite");
+            assert!(gp.posterior_std(a).is_finite(), "std[{a}] finite");
+            assert!((gp.posterior_mean(a) - 0.4).abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn change_tolerance_shrinks_the_dirty_set() {
+        let (mut gp, z) = gp_on_grid(10);
+        gp.set_change_tolerance(f64::MAX);
+        assert_eq!(gp.change_tolerance(), f64::MAX);
+        // With an effectively infinite tolerance only the observed arm
+        // (always dirty — its σ collapses) is reported.
+        let changed = gp.observe(4, z[4]).to_vec();
+        assert_eq!(changed, vec![4]);
     }
 
     #[test]

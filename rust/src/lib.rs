@@ -12,10 +12,14 @@
 //! every scheduling decision (GP posterior refresh + EIrate scoring) has
 //! two interchangeable backends:
 //!
-//! * [`gp`] — native rust incremental-Cholesky posterior (default), and
+//! * [`gp`] — native rust incremental-Cholesky posterior (default), with
+//!   a dirty-set change report driving [`sched::NativeBackend`]'s
+//!   incremental EIrate cache, and
 //! * [`runtime`] — an AOT-compiled JAX/Pallas `scheduler_step` artifact
 //!   executed through the PJRT C API (the `xla` crate); python never runs
-//!   at decision time.
+//!   at decision time. Compiled only with `--features xla`; the default
+//!   build substitutes a stub whose constructor errors, so no PJRT/XLA
+//!   toolchain is needed to build, test, or serve natively.
 //!
 //! See `DESIGN.md` for the system inventory and the per-figure experiment
 //! index, and `EXPERIMENTS.md` for reproduction results.

@@ -17,18 +17,32 @@ mod mat;
 
 pub use mat::Mat;
 
-use thiserror::Error;
+use std::fmt;
 
 /// Errors from factorizations.
-#[derive(Debug, Error, PartialEq)]
+///
+/// Display/Error are hand-implemented — the offline build environment
+/// ships no `thiserror`.
+#[derive(Clone, Debug, PartialEq)]
 pub enum LinalgError {
     /// The matrix is not positive definite (pivot ≤ 0 at the given index).
-    #[error("matrix not positive definite at pivot {0} (value {1})")]
     NotPositiveDefinite(usize, f64),
     /// Dimension mismatch between operands.
-    #[error("dimension mismatch: {0}")]
     DimensionMismatch(String),
 }
+
+impl fmt::Display for LinalgError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            LinalgError::NotPositiveDefinite(i, v) => {
+                write!(f, "matrix not positive definite at pivot {i} (value {v})")
+            }
+            LinalgError::DimensionMismatch(m) => write!(f, "dimension mismatch: {m}"),
+        }
+    }
+}
+
+impl std::error::Error for LinalgError {}
 
 /// Lower-triangular Cholesky factor `L` with `A = L Lᵀ`.
 ///
@@ -72,9 +86,8 @@ pub fn cholesky(a: &Mat) -> Result<Mat, LinalgError> {
 /// frequently rank-deficient; this mirrors the standard GP-library
 /// behaviour (GPy/GPyOpt/scikit-learn all do the same).
 pub fn cholesky_jittered(a: &Mat, base_jitter: f64) -> Result<(Mat, f64), LinalgError> {
-    match cholesky(a) {
-        Ok(l) => return Ok((l, 0.0)),
-        Err(_) => {}
+    if let Ok(l) = cholesky(a) {
+        return Ok((l, 0.0));
     }
     let n = a.rows();
     let mut jitter = base_jitter;
@@ -263,6 +276,75 @@ impl CholeskyFactor {
             jitter *= 10.0;
         }
         Err(LinalgError::NotPositiveDefinite(self.n, diag))
+    }
+
+    /// Append one row/column like [`CholeskyFactor::append_jittered`],
+    /// but guarantee the new diagonal pivot is at least `min_pivot`
+    /// (escalating the jitter from `base_jitter` by powers of ten until
+    /// the Schur complement clears `min_pivot²`). This is the scheduler
+    /// hot path's NaN guard: a pivot that merely squeaks past zero (e.g.
+    /// 1e-300 from a duplicated arm) would make the posterior update's
+    /// `acc / ltt` division overflow into ±∞ and poison every arm's mean
+    /// with NaN. Always succeeds on finite inputs; returns `(σ, jitter)`.
+    pub fn append_jittered_min_pivot(
+        &mut self,
+        cross: &[f64],
+        diag: f64,
+        base_jitter: f64,
+        min_pivot: f64,
+    ) -> Result<(f64, f64), LinalgError> {
+        if cross.len() != self.n {
+            return Err(LinalgError::DimensionMismatch(format!(
+                "append expected {} cross-covariances, got {}",
+                self.n,
+                cross.len()
+            )));
+        }
+        // w = L⁻¹ cross (forward substitution; independent of the jitter,
+        // which only perturbs the new diagonal entry).
+        let mut w = vec![0.0; self.n];
+        for i in 0..self.n {
+            let row = &self.data[i * self.cap..i * self.cap + i + 1];
+            let mut sum = cross[i];
+            for k in 0..i {
+                sum -= row[k] * w[k];
+            }
+            w[i] = sum / row[i];
+        }
+        let schur0 = diag - w.iter().map(|v| v * v).sum::<f64>();
+        if !schur0.is_finite() {
+            return Err(LinalgError::NotPositiveDefinite(self.n, schur0));
+        }
+        // Adding `jitter` to the diagonal shifts the Schur complement by
+        // exactly `jitter`, so the needed jitter is computable directly —
+        // rounded up onto the same ×10 escalation ladder `append_jittered`
+        // walks, for bit-compatibility with the historical behaviour.
+        let floor = min_pivot * min_pivot;
+        let jitter = if schur0 >= floor {
+            0.0
+        } else {
+            let needed = floor - schur0;
+            // Cap the escalation at 10^10 × base (the historical 10-step
+            // ladder's reach): a Schur complement this far below zero is
+            // a genuinely non-PSD prior, not numerical noise, and must
+            // fail loudly instead of quietly fabricating a posterior.
+            let cap = base_jitter.max(f64::MIN_POSITIVE) * 1e10;
+            if needed > cap {
+                return Err(LinalgError::NotPositiveDefinite(self.n, schur0));
+            }
+            let mut j = base_jitter.max(f64::MIN_POSITIVE);
+            while j < needed {
+                j *= 10.0;
+            }
+            j
+        };
+        let sigma = (schur0 + jitter).sqrt();
+        self.ensure_capacity(self.n + 1);
+        let base = self.n * self.cap;
+        self.data[base..base + self.n].copy_from_slice(&w);
+        self.data[base + self.n] = sigma;
+        self.n += 1;
+        Ok((sigma, jitter))
     }
 
     /// Solve `A x = b` with the current factor.
@@ -556,6 +638,45 @@ mod tests {
         let (sigma, jitter) = inc.append_jittered(&[1.0], 1.0, 1e-9).unwrap();
         assert!(jitter > 0.0);
         assert!(sigma > 0.0 && sigma < 1e-3);
+    }
+
+    #[test]
+    fn min_pivot_append_matches_plain_append_when_healthy() {
+        // Well-conditioned input: the guard must be a no-op (zero jitter,
+        // bit-identical factor to the plain append path).
+        let n = 10;
+        let a = random_spd(n, 314);
+        let mut plain = CholeskyFactor::new();
+        let mut guarded = CholeskyFactor::new();
+        for t in 0..n {
+            let cross: Vec<f64> = (0..t).map(|k| a[(t, k)]).collect();
+            let s1 = plain.append(&cross, a[(t, t)]).unwrap();
+            let (s2, jitter) = guarded
+                .append_jittered_min_pivot(&cross, a[(t, t)], 1e-10, 1e-8)
+                .unwrap();
+            assert_eq!(jitter, 0.0, "healthy pivot must not be jittered (t={t})");
+            assert_eq!(s1, s2, "t={t}");
+        }
+        for i in 0..n {
+            for j in 0..=i {
+                assert_eq!(plain.get(i, j), guarded.get(i, j), "({i},{j})");
+            }
+        }
+    }
+
+    #[test]
+    fn min_pivot_append_floors_degenerate_pivot() {
+        // Perfectly correlated second variable: Schur complement 0, which
+        // the plain append rejects; the guarded append floors the pivot.
+        let mut inc = CholeskyFactor::new();
+        inc.append(&[], 1.0).unwrap();
+        let (sigma, jitter) = inc.append_jittered_min_pivot(&[1.0], 1.0, 1e-10, 1e-8).unwrap();
+        assert!(jitter > 0.0);
+        assert!(sigma >= 1e-8, "pivot must clear the floor, got {sigma}");
+        assert!(sigma < 1e-3, "jitter escalation should stay minimal, got {sigma}");
+        // Solves stay finite through the floored pivot.
+        let x = inc.solve(&[1.0, 1.0]);
+        assert!(x.iter().all(|v| v.is_finite()));
     }
 
     #[test]

@@ -12,21 +12,54 @@
 //!    pads the live scheduler state into the bucket, executes the
 //!    artifact, and slices the EIrate / posterior back out.
 //!
+//! **Feature gating.** The PJRT pieces need the `xla` bindings crate and
+//! a PJRT CPU plugin, neither of which exists in the default offline
+//! build environment. They are therefore compiled only with
+//! `--features xla`; without it [`XlaBackend`] is a stub whose
+//! constructor returns an error, so every `--backend xla` call site
+//! (CLI, benches, examples) degrades gracefully at runtime instead of
+//! breaking the build. Manifest parsing and bucket selection are pure
+//! rust and stay available either way.
+//!
 //! The padding contract (mirrored by `python/tests/test_model.py::
 //! test_padding_arms_are_inert`): padded arms get an identity covariance
 //! row, zero membership, unit cost, `obs = 0`, `sel = 1`; padded users
 //! get zero membership. Padded arms therefore score `-1e30` and can never
 //! win the argmax.
 
+use std::fmt;
 use std::path::{Path, PathBuf};
-
-use anyhow::{anyhow, bail, Context, Result};
-
-use crate::problem::{ArmId, Problem};
-use crate::sched::EiBackend;
 
 /// Score the artifact assigns to masked (selected/padding) arms.
 pub const NEG_INF_SCORE: f64 = -1e30;
+
+/// Runtime-layer error: artifact discovery, compilation, or execution.
+///
+/// A plain message-carrying error type — the offline build ships no
+/// `anyhow`, and the runtime layer's callers only ever display or match
+/// on the message.
+#[derive(Clone, Debug)]
+pub struct RuntimeError {
+    msg: String,
+}
+
+impl RuntimeError {
+    /// Build from any displayable message.
+    pub fn new(msg: impl Into<String>) -> Self {
+        RuntimeError { msg: msg.into() }
+    }
+}
+
+impl fmt::Display for RuntimeError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.msg)
+    }
+}
+
+impl std::error::Error for RuntimeError {}
+
+/// Runtime-layer result.
+pub type Result<T> = std::result::Result<T, RuntimeError>;
 
 /// One artifact bucket from `manifest.txt`.
 #[derive(Clone, Debug)]
@@ -44,8 +77,9 @@ pub struct ArtifactSpec {
 /// Parse `artifacts/manifest.txt` (lines: `name N L relative-path`).
 pub fn load_manifest(dir: &Path) -> Result<Vec<ArtifactSpec>> {
     let manifest = dir.join("manifest.txt");
-    let text = std::fs::read_to_string(&manifest)
-        .with_context(|| format!("reading {manifest:?}; run `make artifacts` first"))?;
+    let text = std::fs::read_to_string(&manifest).map_err(|e| {
+        RuntimeError::new(format!("reading {manifest:?}: {e}; run `make artifacts` first"))
+    })?;
     let mut specs = Vec::new();
     for (lineno, line) in text.lines().enumerate() {
         if line.trim().is_empty() {
@@ -53,17 +87,25 @@ pub fn load_manifest(dir: &Path) -> Result<Vec<ArtifactSpec>> {
         }
         let parts: Vec<&str> = line.split_whitespace().collect();
         if parts.len() != 4 {
-            bail!("manifest line {}: expected 4 fields, got {line:?}", lineno + 1);
+            return Err(RuntimeError::new(format!(
+                "manifest line {}: expected 4 fields, got {line:?}",
+                lineno + 1
+            )));
         }
+        let parse_dim = |field: &str, what: &str| -> Result<usize> {
+            field
+                .parse()
+                .map_err(|e| RuntimeError::new(format!("manifest {what} {field:?}: {e}")))
+        };
         specs.push(ArtifactSpec {
             name: parts[0].to_string(),
-            n: parts[1].parse().context("manifest N")?,
-            l: parts[2].parse().context("manifest L")?,
+            n: parse_dim(parts[1], "N")?,
+            l: parse_dim(parts[2], "L")?,
             path: dir.join(parts[3]),
         });
     }
     if specs.is_empty() {
-        bail!("manifest {manifest:?} lists no artifacts");
+        return Err(RuntimeError::new(format!("manifest {manifest:?} lists no artifacts")));
     }
     Ok(specs)
 }
@@ -75,20 +117,11 @@ pub fn pick_bucket(specs: &[ArtifactSpec], n_users: usize, n_arms: usize) -> Res
         .filter(|s| s.n >= n_users && s.l >= n_arms)
         .min_by_key(|s| (s.l, s.n))
         .ok_or_else(|| {
-            anyhow!(
+            RuntimeError::new(format!(
                 "no artifact bucket fits N={n_users}, L={n_arms}; available: {:?}",
                 specs.iter().map(|s| (s.n, s.l)).collect::<Vec<_>>()
-            )
+            ))
         })
-}
-
-/// A compiled `scheduler_step` executable for one bucket.
-pub struct SchedulerStepExe {
-    exe: xla::PjRtLoadedExecutable,
-    /// Bucket user capacity.
-    pub n: usize,
-    /// Bucket arm capacity.
-    pub l: usize,
 }
 
 /// Outputs of one artifact execution, sliced to the live problem size.
@@ -104,207 +137,295 @@ pub struct StepOutputs {
     pub best: Vec<f64>,
 }
 
-impl SchedulerStepExe {
-    /// Load HLO text and compile it on the given PJRT client.
-    pub fn load(client: &xla::PjRtClient, spec: &ArtifactSpec) -> Result<Self> {
-        let proto = xla::HloModuleProto::from_text_file(
-            spec.path.to_str().ok_or_else(|| anyhow!("non-utf8 path"))?,
-        )
-        .map_err(|e| anyhow!("parsing {:?}: {e:?}", spec.path))?;
-        let comp = xla::XlaComputation::from_proto(&proto);
-        let exe = client.compile(&comp).map_err(|e| anyhow!("compiling {}: {e:?}", spec.name))?;
-        Ok(SchedulerStepExe { exe, n: spec.n, l: spec.l })
-    }
-
-    /// Execute with already-padded inputs (lengths must match the bucket).
-    #[allow(clippy::too_many_arguments)]
-    pub fn run_padded(
-        &self,
-        k: &[f64],
-        mu0: &[f64],
-        obs_mask: &[f64],
-        z: &[f64],
-        sel_mask: &[f64],
-        member: &[f64],
-        cost: &[f64],
-    ) -> Result<StepOutputs> {
-        let (n, l) = (self.n, self.l);
-        assert_eq!(k.len(), l * l);
-        assert_eq!(member.len(), n * l);
-        for (name, v) in
-            [("mu0", mu0), ("obs", obs_mask), ("z", z), ("sel", sel_mask), ("cost", cost)]
-        {
-            assert_eq!(v.len(), l, "padded input {name}");
-        }
-        let lit = |data: &[f64], dims: &[i64]| -> Result<xla::Literal> {
-            xla::Literal::vec1(data)
-                .reshape(dims)
-                .map_err(|e| anyhow!("reshape {dims:?}: {e:?}"))
-        };
-        let args = [
-            lit(k, &[l as i64, l as i64])?,
-            lit(mu0, &[l as i64])?,
-            lit(obs_mask, &[l as i64])?,
-            lit(z, &[l as i64])?,
-            lit(sel_mask, &[l as i64])?,
-            lit(member, &[n as i64, l as i64])?,
-            lit(cost, &[l as i64])?,
-        ];
-        let result = self
-            .exe
-            .execute::<xla::Literal>(&args)
-            .map_err(|e| anyhow!("execute: {e:?}"))?[0][0]
-            .to_literal_sync()
-            .map_err(|e| anyhow!("to_literal: {e:?}"))?;
-        let (eirate, mu, sigma, best) =
-            result.to_tuple4().map_err(|e| anyhow!("untuple: {e:?}"))?;
-        Ok(StepOutputs {
-            eirate: eirate.to_vec::<f64>().map_err(|e| anyhow!("{e:?}"))?,
-            mu: mu.to_vec::<f64>().map_err(|e| anyhow!("{e:?}"))?,
-            sigma: sigma.to_vec::<f64>().map_err(|e| anyhow!("{e:?}"))?,
-            best: best.to_vec::<f64>().map_err(|e| anyhow!("{e:?}"))?,
-        })
-    }
-}
-
-/// [`EiBackend`] that scores decisions by executing the AOT artifact.
-///
-/// Holds the padded prior (covariance, mean, membership, costs) as flat
-/// buffers and the mutable observation state; every `eirate` call is one
-/// PJRT execution.
-pub struct XlaBackend {
-    exe: SchedulerStepExe,
-    #[allow(dead_code)] n_users: usize,
-    n_arms: usize,
-    // Padded constant inputs.
-    k: Vec<f64>,
-    mu0: Vec<f64>,
-    member: Vec<f64>,
-    cost: Vec<f64>,
-    // Padded mutable state.
-    obs_mask: Vec<f64>,
-    z: Vec<f64>,
-    /// Cached outputs of the most recent execution (posterior snapshot).
-    last: Option<StepOutputs>,
-}
-
-impl XlaBackend {
-    /// Discover artifacts in `dir`, pick the bucket fitting `problem`,
-    /// compile, and pre-pad the problem constants.
-    pub fn new(problem: &Problem, dir: &Path) -> Result<Self> {
-        let specs = load_manifest(dir)?;
-        let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("PJRT cpu client: {e:?}"))?;
-        let spec = pick_bucket(&specs, problem.n_users, problem.n_arms())?;
-        let exe = SchedulerStepExe::load(&client, spec)?;
-        Ok(Self::with_exe(problem, exe))
-    }
-
-    /// Build from an already-compiled executable (shared across runs).
-    pub fn with_exe(problem: &Problem, exe: SchedulerStepExe) -> Self {
-        let (n, l) = (exe.n, exe.l);
-        let n_users = problem.n_users;
-        let n_arms = problem.n_arms();
-        assert!(n_users <= n && n_arms <= l, "bucket too small");
-        // K padded with identity rows (inert arms).
-        let mut k = vec![0.0; l * l];
-        for i in 0..l {
-            for j in 0..l {
-                k[i * l + j] = if i < n_arms && j < n_arms {
-                    problem.prior_cov[(i, j)]
-                } else if i == j {
-                    1.0
-                } else {
-                    0.0
-                };
-            }
-        }
-        let mut mu0 = vec![0.0; l];
-        mu0[..n_arms].copy_from_slice(&problem.prior_mean);
-        let mut cost = vec![1.0; l];
-        cost[..n_arms].copy_from_slice(&problem.cost);
-        let mut member = vec![0.0; n * l];
-        for (u, arms) in problem.user_arms.iter().enumerate() {
-            for &a in arms {
-                member[u * l + a] = 1.0;
-            }
-        }
-        XlaBackend {
-            exe,
-            n_users,
-            n_arms,
-            k,
-            mu0,
-            member,
-            cost,
-            obs_mask: vec![0.0; l],
-            z: vec![0.0; l],
-            last: None,
-        }
-    }
-
-    /// Execute the artifact against the current state.
-    fn step(&mut self, selected: &[bool]) -> StepOutputs {
-        let l = self.exe.l;
-        let mut sel = vec![1.0; l]; // padding arms masked
-        for (x, &s) in selected.iter().enumerate() {
-            sel[x] = if s { 1.0 } else { 0.0 };
-        }
-        let out = self
-            .exe
-            .run_padded(&self.k, &self.mu0, &self.obs_mask, &self.z, &sel, &self.member, &self.cost)
-            .expect("artifact execution failed");
-        self.last = Some(out.clone());
-        out
-    }
-}
-
-impl EiBackend for XlaBackend {
-    fn observe(&mut self, arm: ArmId, z: f64) {
-        assert!(arm < self.n_arms);
-        debug_assert!(
-            z >= 0.0,
-            "XlaBackend incumbents floor at 0; negative performances need the native backend"
-        );
-        self.obs_mask[arm] = 1.0;
-        self.z[arm] = z;
-        self.last = None;
-    }
-
-    fn eirate(&mut self, _best: &[f64], selected: &[bool], use_cost: bool) -> Vec<f64> {
-        // `best` is recomputed inside the artifact from (obs_mask, z) —
-        // identical to the caller's incumbents for non-negative z.
-        let out = self.step(selected);
-        let mut scores: Vec<f64> = out.eirate[..self.n_arms].to_vec();
-        if !use_cost {
-            // Undo the in-graph division for the EI-only ablation.
-            for (s, c) in scores.iter_mut().zip(&self.cost[..self.n_arms]) {
-                if *s > NEG_INF_SCORE {
-                    *s *= c;
-                }
-            }
-        }
-        scores
-    }
-
-    fn posterior(&mut self) -> (Vec<f64>, Vec<f64>) {
-        let selected: Vec<bool> =
-            self.obs_mask[..self.n_arms].iter().map(|&m| m > 0.5).collect();
-        let out = match &self.last {
-            Some(o) => o.clone(),
-            None => self.step(&selected),
-        };
-        (out.mu[..self.n_arms].to_vec(), out.sigma[..self.n_arms].to_vec())
-    }
-
-    fn label(&self) -> &'static str {
-        "xla"
-    }
-}
-
 /// Default artifact directory: `$MMGPEI_ARTIFACTS` or `./artifacts`.
 pub fn default_artifact_dir() -> PathBuf {
     std::env::var("MMGPEI_ARTIFACTS").map(PathBuf::from).unwrap_or_else(|_| "artifacts".into())
 }
+
+#[cfg(feature = "xla")]
+mod pjrt {
+    //! The real PJRT-backed executable and backend (`--features xla`).
+
+    use super::{load_manifest, pick_bucket, ArtifactSpec, Result, RuntimeError, StepOutputs};
+    use crate::problem::{ArmId, Problem};
+    use crate::sched::EiBackend;
+    use std::path::Path;
+
+    /// A compiled `scheduler_step` executable for one bucket.
+    pub struct SchedulerStepExe {
+        exe: xla::PjRtLoadedExecutable,
+        /// Bucket user capacity.
+        pub n: usize,
+        /// Bucket arm capacity.
+        pub l: usize,
+    }
+
+    impl SchedulerStepExe {
+        /// Load HLO text and compile it on the given PJRT client.
+        pub fn load(client: &xla::PjRtClient, spec: &ArtifactSpec) -> Result<Self> {
+            let path = spec
+                .path
+                .to_str()
+                .ok_or_else(|| RuntimeError::new("non-utf8 artifact path"))?;
+            let proto = xla::HloModuleProto::from_text_file(path)
+                .map_err(|e| RuntimeError::new(format!("parsing {:?}: {e:?}", spec.path)))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = client
+                .compile(&comp)
+                .map_err(|e| RuntimeError::new(format!("compiling {}: {e:?}", spec.name)))?;
+            Ok(SchedulerStepExe { exe, n: spec.n, l: spec.l })
+        }
+
+        /// Execute with already-padded inputs (lengths must match the bucket).
+        #[allow(clippy::too_many_arguments)]
+        pub fn run_padded(
+            &self,
+            k: &[f64],
+            mu0: &[f64],
+            obs_mask: &[f64],
+            z: &[f64],
+            sel_mask: &[f64],
+            member: &[f64],
+            cost: &[f64],
+        ) -> Result<StepOutputs> {
+            let (n, l) = (self.n, self.l);
+            assert_eq!(k.len(), l * l);
+            assert_eq!(member.len(), n * l);
+            for (name, v) in
+                [("mu0", mu0), ("obs", obs_mask), ("z", z), ("sel", sel_mask), ("cost", cost)]
+            {
+                assert_eq!(v.len(), l, "padded input {name}");
+            }
+            let lit = |data: &[f64], dims: &[i64]| -> Result<xla::Literal> {
+                xla::Literal::vec1(data)
+                    .reshape(dims)
+                    .map_err(|e| RuntimeError::new(format!("reshape {dims:?}: {e:?}")))
+            };
+            let args = [
+                lit(k, &[l as i64, l as i64])?,
+                lit(mu0, &[l as i64])?,
+                lit(obs_mask, &[l as i64])?,
+                lit(z, &[l as i64])?,
+                lit(sel_mask, &[l as i64])?,
+                lit(member, &[n as i64, l as i64])?,
+                lit(cost, &[l as i64])?,
+            ];
+            let result = self
+                .exe
+                .execute::<xla::Literal>(&args)
+                .map_err(|e| RuntimeError::new(format!("execute: {e:?}")))?[0][0]
+                .to_literal_sync()
+                .map_err(|e| RuntimeError::new(format!("to_literal: {e:?}")))?;
+            let (eirate, mu, sigma, best) = result
+                .to_tuple4()
+                .map_err(|e| RuntimeError::new(format!("untuple: {e:?}")))?;
+            let vec = |lit: xla::Literal, what: &str| -> Result<Vec<f64>> {
+                lit.to_vec::<f64>()
+                    .map_err(|e| RuntimeError::new(format!("{what}: {e:?}")))
+            };
+            Ok(StepOutputs {
+                eirate: vec(eirate, "eirate")?,
+                mu: vec(mu, "mu")?,
+                sigma: vec(sigma, "sigma")?,
+                best: vec(best, "best")?,
+            })
+        }
+    }
+
+    /// [`EiBackend`] that scores decisions by executing the AOT artifact.
+    ///
+    /// Holds the padded prior (covariance, mean, membership, costs) as flat
+    /// buffers and the mutable observation state; every `eirate` call is one
+    /// PJRT execution.
+    pub struct XlaBackend {
+        exe: SchedulerStepExe,
+        #[allow(dead_code)]
+        n_users: usize,
+        n_arms: usize,
+        // Padded constant inputs.
+        k: Vec<f64>,
+        mu0: Vec<f64>,
+        member: Vec<f64>,
+        cost: Vec<f64>,
+        // Padded mutable state.
+        obs_mask: Vec<f64>,
+        z: Vec<f64>,
+        /// Cached outputs of the most recent execution (posterior snapshot).
+        last: Option<StepOutputs>,
+        /// Preallocated score output buffer ([`EiBackend::eirate`] returns
+        /// a borrow of this).
+        score_buf: Vec<f64>,
+    }
+
+    impl XlaBackend {
+        /// Discover artifacts in `dir`, pick the bucket fitting `problem`,
+        /// compile, and pre-pad the problem constants.
+        pub fn new(problem: &Problem, dir: &Path) -> Result<Self> {
+            let specs = load_manifest(dir)?;
+            let client = xla::PjRtClient::cpu()
+                .map_err(|e| RuntimeError::new(format!("PJRT cpu client: {e:?}")))?;
+            let spec = pick_bucket(&specs, problem.n_users, problem.n_arms())?;
+            let exe = SchedulerStepExe::load(&client, spec)?;
+            Ok(Self::with_exe(problem, exe))
+        }
+
+        /// Build from an already-compiled executable (shared across runs).
+        pub fn with_exe(problem: &Problem, exe: SchedulerStepExe) -> Self {
+            let (n, l) = (exe.n, exe.l);
+            let n_users = problem.n_users;
+            let n_arms = problem.n_arms();
+            assert!(n_users <= n && n_arms <= l, "bucket too small");
+            // K padded with identity rows (inert arms).
+            let mut k = vec![0.0; l * l];
+            for i in 0..l {
+                for j in 0..l {
+                    k[i * l + j] = if i < n_arms && j < n_arms {
+                        problem.prior_cov[(i, j)]
+                    } else if i == j {
+                        1.0
+                    } else {
+                        0.0
+                    };
+                }
+            }
+            let mut mu0 = vec![0.0; l];
+            mu0[..n_arms].copy_from_slice(&problem.prior_mean);
+            let mut cost = vec![1.0; l];
+            cost[..n_arms].copy_from_slice(&problem.cost);
+            let mut member = vec![0.0; n * l];
+            for (u, arms) in problem.user_arms.iter().enumerate() {
+                for &a in arms {
+                    member[u * l + a] = 1.0;
+                }
+            }
+            XlaBackend {
+                exe,
+                n_users,
+                n_arms,
+                k,
+                mu0,
+                member,
+                cost,
+                obs_mask: vec![0.0; l],
+                z: vec![0.0; l],
+                last: None,
+                score_buf: vec![super::NEG_INF_SCORE; n_arms],
+            }
+        }
+
+        /// Execute the artifact against the current state.
+        fn step(&mut self, selected: &[bool]) -> StepOutputs {
+            let l = self.exe.l;
+            let mut sel = vec![1.0; l]; // padding arms masked
+            for (x, &s) in selected.iter().enumerate() {
+                sel[x] = if s { 1.0 } else { 0.0 };
+            }
+            let out = self
+                .exe
+                .run_padded(&self.k, &self.mu0, &self.obs_mask, &self.z, &sel, &self.member, &self.cost)
+                .expect("artifact execution failed");
+            self.last = Some(out.clone());
+            out
+        }
+    }
+
+    impl EiBackend for XlaBackend {
+        fn observe(&mut self, arm: ArmId, z: f64) {
+            assert!(arm < self.n_arms);
+            debug_assert!(
+                z >= 0.0,
+                "XlaBackend incumbents floor at 0; negative performances need the native backend"
+            );
+            self.obs_mask[arm] = 1.0;
+            self.z[arm] = z;
+            self.last = None;
+        }
+
+        fn eirate(&mut self, _best: &[f64], selected: &[bool], use_cost: bool) -> &[f64] {
+            // `best` is recomputed inside the artifact from (obs_mask, z) —
+            // identical to the caller's incumbents for non-negative z.
+            let out = self.step(selected);
+            self.score_buf.copy_from_slice(&out.eirate[..self.n_arms]);
+            if !use_cost {
+                // Undo the in-graph division for the EI-only ablation.
+                for (s, c) in self.score_buf.iter_mut().zip(&self.cost[..self.n_arms]) {
+                    if *s > super::NEG_INF_SCORE {
+                        *s *= c;
+                    }
+                }
+            }
+            &self.score_buf
+        }
+
+        fn posterior(&mut self) -> (Vec<f64>, Vec<f64>) {
+            let selected: Vec<bool> =
+                self.obs_mask[..self.n_arms].iter().map(|&m| m > 0.5).collect();
+            let out = match &self.last {
+                Some(o) => o.clone(),
+                None => self.step(&selected),
+            };
+            (out.mu[..self.n_arms].to_vec(), out.sigma[..self.n_arms].to_vec())
+        }
+
+        fn label(&self) -> &'static str {
+            "xla"
+        }
+    }
+}
+
+#[cfg(feature = "xla")]
+pub use pjrt::{SchedulerStepExe, XlaBackend};
+
+#[cfg(not(feature = "xla"))]
+mod stub {
+    //! Default-build stand-in for the PJRT backend: constructible never,
+    //! so call sites compile unchanged and fail gracefully at runtime.
+
+    use super::{Result, RuntimeError};
+    use crate::problem::{ArmId, Problem};
+    use crate::sched::EiBackend;
+    use std::path::Path;
+
+    /// Stub [`EiBackend`]: the crate was built without the `xla` feature,
+    /// so [`XlaBackend::new`] always returns an error and no value of
+    /// this type can exist.
+    pub struct XlaBackend {
+        _unconstructible: std::convert::Infallible,
+    }
+
+    impl XlaBackend {
+        /// Always fails: rebuild with `--features xla` (plus the PJRT
+        /// toolchain — see `rust/Cargo.toml`) to enable the artifact path.
+        pub fn new(_problem: &Problem, _dir: &Path) -> Result<Self> {
+            Err(RuntimeError::new(
+                "built without the `xla` feature: the PJRT scheduler_step backend is \
+                 unavailable; rebuild with `cargo build --features xla` (requires the \
+                 xla bindings crate and a PJRT CPU plugin — see rust/Cargo.toml)",
+            ))
+        }
+    }
+
+    impl EiBackend for XlaBackend {
+        fn observe(&mut self, _arm: ArmId, _z: f64) {
+            match self._unconstructible {}
+        }
+
+        fn eirate(&mut self, _best: &[f64], _selected: &[bool], _use_cost: bool) -> &[f64] {
+            match self._unconstructible {}
+        }
+
+        fn posterior(&mut self) -> (Vec<f64>, Vec<f64>) {
+            match self._unconstructible {}
+        }
+
+        fn label(&self) -> &'static str {
+            match self._unconstructible {}
+        }
+    }
+}
+
+#[cfg(not(feature = "xla"))]
+pub use stub::XlaBackend;
 
 #[cfg(test)]
 mod tests {
@@ -337,5 +458,34 @@ mod tests {
         let missing = std::env::temp_dir().join("mmgpei_manifest_missing");
         let _ = std::fs::remove_dir_all(&missing);
         assert!(load_manifest(&missing).is_err());
+    }
+
+    #[test]
+    fn manifest_rejects_non_numeric_dims() {
+        let dir = std::env::temp_dir().join("mmgpei_manifest_nan");
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(dir.join("manifest.txt"), "a sixteen 128 a.hlo.txt\n").unwrap();
+        let err = load_manifest(&dir).unwrap_err();
+        assert!(err.to_string().contains("N"), "{err}");
+    }
+
+    #[cfg(not(feature = "xla"))]
+    #[test]
+    fn stub_backend_reports_missing_feature() {
+        use crate::linalg::Mat;
+        use crate::problem::Problem;
+        let user_arms = vec![vec![0]];
+        let arm_users = Problem::compute_arm_users(1, &user_arms);
+        let p = Problem {
+            name: "stub".into(),
+            n_users: 1,
+            cost: vec![1.0],
+            user_arms,
+            arm_users,
+            prior_mean: vec![0.0],
+            prior_cov: Mat::eye(1),
+        };
+        let err = XlaBackend::new(&p, std::path::Path::new("artifacts")).err().unwrap();
+        assert!(err.to_string().contains("xla"), "{err}");
     }
 }

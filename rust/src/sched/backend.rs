@@ -5,8 +5,21 @@
 //! abstracted behind [`EiBackend`] so it can be served either by the
 //! native rust incremental-Cholesky GP ([`NativeBackend`]) or by the
 //! AOT-compiled JAX/Pallas `scheduler_step` artifact executed via PJRT
-//! ([`crate::runtime::XlaBackend`]). The two are cross-verified by the
-//! integration tests in `rust/tests/backend_parity.rs`.
+//! ([`crate::runtime::XlaBackend`], `--features xla`). The two are
+//! cross-verified by the integration tests in
+//! `rust/tests/backend_parity.rs`.
+//!
+//! **Incremental scoring.** The naive implementation rescans every arm on
+//! every device-free event — `O(|𝓛| · owners)` EI evaluations per
+//! decision, the multi-tenant scheduling overhead Ease.ml-style services
+//! must keep far below training time. [`NativeBackend`] instead keeps a
+//! per-arm EIrate cache invalidated by a *dirty set*: [`crate::gp::Gp`]
+//! reports which arms' `(μ, σ)` actually moved on each observation, and
+//! incumbent updates invalidate only the arms owned by the affected
+//! users, so a decision rescores `O(|dirty|)` arms and the rest are
+//! served from cache — with *bit-identical* scores to a full rescan
+//! (the cache is only ever skipped for arms whose inputs are unchanged,
+//! for which a recompute would reproduce the exact same floats).
 
 use crate::gp::{expected_improvement, Gp};
 use crate::problem::{ArmId, Problem};
@@ -23,7 +36,11 @@ pub trait EiBackend {
     /// and `selected[x]` marks arms that must score `−∞` (already
     /// dispatched). `use_cost = false` gives the cost-insensitive EI
     /// ablation (rank by Eq. 4 instead of Eq. 5).
-    fn eirate(&mut self, best: &[f64], selected: &[bool], use_cost: bool) -> Vec<f64>;
+    ///
+    /// Returns a borrow of the backend's preallocated score buffer — no
+    /// allocation on the per-decision hot path. The slice is valid until
+    /// the next call on the backend.
+    fn eirate(&mut self, best: &[f64], selected: &[bool], use_cost: bool) -> &[f64];
 
     /// Posterior (mean, std) snapshot for diagnostics/tests.
     fn posterior(&mut self) -> (Vec<f64>, Vec<f64>);
@@ -33,22 +50,47 @@ pub trait EiBackend {
 }
 
 /// Native rust backend: incremental-Cholesky GP posterior, O(1)-read
-/// mean/std at decision time (see [`crate::gp::Gp`]).
+/// mean/std at decision time (see [`crate::gp::Gp`]), and a dirty-set
+/// EIrate cache so each decision rescores only the arms whose posterior
+/// or owner incumbents moved since the last decision.
 pub struct NativeBackend {
     gp: Gp,
     /// Flattened membership (arm → owning users) copied from the problem
     /// so scoring needs no `Problem` borrow.
     arm_users: Vec<Vec<usize>>,
+    /// Inverse membership (user → owned arms) for incumbent-driven cache
+    /// invalidation.
+    user_arms: Vec<Vec<ArmId>>,
     cost: Vec<f64>,
+    /// Cached per-arm summed EI `Σ_i 1(x∈𝓛_i)·EI_{i,t}(x)` (cost division
+    /// and the selected-mask are applied at output time).
+    ei_cache: Vec<f64>,
+    /// Incumbent vector the cache was computed against (bit-compared).
+    last_best: Vec<f64>,
+    /// `dirty[x]` — arm x needs rescoring before the next read.
+    dirty: Vec<bool>,
+    /// Dense list of dirty arms (avoids an O(|𝓛|) flag scan per decision).
+    dirty_arms: Vec<ArmId>,
+    /// Preallocated output buffer for [`EiBackend::eirate`].
+    score_buf: Vec<f64>,
 }
 
 impl NativeBackend {
     /// Build from a problem's prior and membership structure.
     pub fn new(problem: &Problem) -> Self {
+        let n = problem.n_arms();
         NativeBackend {
             gp: Gp::new(problem.prior_mean.clone(), problem.prior_cov.clone()),
             arm_users: problem.arm_users.clone(),
+            user_arms: problem.user_arms.clone(),
             cost: problem.cost.clone(),
+            ei_cache: vec![0.0; n],
+            // NaN sentinel: no incumbent vector bit-matches it, so the
+            // first decision scores every arm.
+            last_best: vec![f64::NAN; problem.n_users],
+            dirty: vec![true; n],
+            dirty_arms: (0..n).collect(),
+            score_buf: vec![f64::NEG_INFINITY; n],
         }
     }
 
@@ -56,29 +98,73 @@ impl NativeBackend {
     pub fn gp(&self) -> &Gp {
         &self.gp
     }
+
+    /// Number of arms the next decision will rescore (tests/metrics).
+    pub fn pending_dirty(&self) -> usize {
+        self.dirty_arms.len()
+    }
+
+    /// Mark one arm dirty (idempotent).
+    #[inline]
+    fn mark_dirty(dirty: &mut [bool], dirty_arms: &mut Vec<ArmId>, x: ArmId) {
+        if !dirty[x] {
+            dirty[x] = true;
+            dirty_arms.push(x);
+        }
+    }
 }
 
 impl EiBackend for NativeBackend {
     fn observe(&mut self, arm: ArmId, z: f64) {
-        self.gp.observe(arm, z);
+        // The GP reports exactly the arms whose (μ, σ) moved; only those
+        // can change their EI under an unchanged incumbent vector.
+        let changed = self.gp.observe(arm, z);
+        for &x in changed {
+            Self::mark_dirty(&mut self.dirty, &mut self.dirty_arms, x);
+        }
     }
 
-    fn eirate(&mut self, best: &[f64], selected: &[bool], use_cost: bool) -> Vec<f64> {
-        let n = self.gp.n_arms();
-        let mut out = vec![f64::NEG_INFINITY; n];
-        for x in 0..n {
-            if selected[x] {
-                continue;
+    fn eirate(&mut self, best: &[f64], selected: &[bool], use_cost: bool) -> &[f64] {
+        debug_assert_eq!(best.len(), self.user_arms.len());
+        let n = self.ei_cache.len();
+        debug_assert_eq!(selected.len(), n);
+        // 1. Incumbent-driven invalidation: a user whose incumbent moved
+        //    dirties every arm they own. Bit-compare so the cache is
+        //    only trusted when a recompute would be a float-for-float
+        //    no-op.
+        for u in 0..best.len() {
+            if best[u].to_bits() != self.last_best[u].to_bits() {
+                self.last_best[u] = best[u];
+                for &x in &self.user_arms[u] {
+                    Self::mark_dirty(&mut self.dirty, &mut self.dirty_arms, x);
+                }
             }
+        }
+        // 2. Rescore the dirty set — O(|dirty| · owners) instead of the
+        //    full O(|𝓛| · owners) rescan.
+        for &x in &self.dirty_arms {
             let mu = self.gp.posterior_mean(x);
             let sigma = self.gp.posterior_std(x);
             let mut ei_sum = 0.0;
             for &u in &self.arm_users[x] {
                 ei_sum += expected_improvement(mu, sigma, best[u]);
             }
-            out[x] = if use_cost { ei_sum / self.cost[x] } else { ei_sum };
+            self.ei_cache[x] = ei_sum;
+            self.dirty[x] = false;
         }
-        out
+        self.dirty_arms.clear();
+        // 3. Assemble the masked, cost-normalized scores into the
+        //    preallocated buffer.
+        for x in 0..n {
+            self.score_buf[x] = if selected[x] {
+                f64::NEG_INFINITY
+            } else if use_cost {
+                self.ei_cache[x] / self.cost[x]
+            } else {
+                self.ei_cache[x]
+            };
+        }
+        &self.score_buf
     }
 
     fn posterior(&mut self) -> (Vec<f64>, Vec<f64>) {
@@ -92,6 +178,36 @@ impl EiBackend for NativeBackend {
     fn label(&self) -> &'static str {
         "native"
     }
+}
+
+/// Reference scorer: the full `O(|𝓛| · owners)` rescan [`NativeBackend`]
+/// replaces. Recomputes every arm's EIrate from the GP posterior with no
+/// caching — the correctness oracle for the dirty-set cache (property
+/// tests, `benches/perf_hotpath.rs`) and the before/after baseline of the
+/// §Perf iteration log.
+pub fn rescan_eirate(
+    gp: &Gp,
+    arm_users: &[Vec<usize>],
+    cost: &[f64],
+    best: &[f64],
+    selected: &[bool],
+    use_cost: bool,
+) -> Vec<f64> {
+    let n = gp.n_arms();
+    let mut out = vec![f64::NEG_INFINITY; n];
+    for (x, slot) in out.iter_mut().enumerate() {
+        if selected[x] {
+            continue;
+        }
+        let mu = gp.posterior_mean(x);
+        let sigma = gp.posterior_std(x);
+        let mut ei_sum = 0.0;
+        for &u in &arm_users[x] {
+            ei_sum += expected_improvement(mu, sigma, best[u]);
+        }
+        *slot = if use_cost { ei_sum / cost[x] } else { ei_sum };
+    }
+    out
 }
 
 #[cfg(test)]
@@ -135,17 +251,17 @@ mod tests {
     #[test]
     fn cost_divides_score() {
         let mut b = NativeBackend::new(&problem());
-        let with_cost = b.eirate(&[0.2, 0.2], &[false; 3], true);
-        let without = b.eirate(&[0.2, 0.2], &[false; 3], false);
+        let with_cost = b.eirate(&[0.2, 0.2], &[false; 3], true).to_vec();
+        let without = b.eirate(&[0.2, 0.2], &[false; 3], false).to_vec();
         assert!((with_cost[2] - without[2] / 4.0).abs() < 1e-12);
     }
 
     #[test]
     fn observe_shifts_scores() {
         let mut b = NativeBackend::new(&problem());
-        let before = b.eirate(&[0.0, 0.0], &[false; 3], true);
+        let before = b.eirate(&[0.0, 0.0], &[false; 3], true).to_vec();
         b.observe(0, 0.9);
-        let after = b.eirate(&[0.9, 0.0], &[true, false, false], true);
+        let after = b.eirate(&[0.9, 0.0], &[true, false, false], true).to_vec();
         // Incumbent rose for user 0; arm 1's score must drop (same prior,
         // higher bar for one of its users).
         assert!(after[1] < before[1]);
@@ -159,5 +275,72 @@ mod tests {
         assert!((mu[1] - 0.8).abs() < 1e-12);
         assert_eq!(sd[1], 0.0);
         assert_eq!(b.label(), "native");
+    }
+
+    #[test]
+    fn cache_matches_rescan_bit_for_bit() {
+        // Drive a full observation sequence with evolving incumbents and
+        // masks; at every step the cached scores must equal the
+        // uncached rescan exactly (same floats, same argmax).
+        let p = problem();
+        let mut b = NativeBackend::new(&p);
+        let mut selected = vec![false; 3];
+        let mut best = vec![0.0f64; 2];
+        let zs = [0.7, 0.4, 0.9];
+        for step in 0..3 {
+            for use_cost in [true, false] {
+                let cached = b.eirate(&best, &selected, use_cost).to_vec();
+                let oracle =
+                    rescan_eirate(b.gp(), &p.arm_users, &p.cost, &best, &selected, use_cost);
+                for x in 0..3 {
+                    assert!(
+                        cached[x] == oracle[x],
+                        "step {step} use_cost {use_cost} arm {x}: {} vs {}",
+                        cached[x],
+                        oracle[x]
+                    );
+                }
+            }
+            b.observe(step, zs[step]);
+            selected[step] = true;
+            for &u in &p.arm_users[step] {
+                best[u] = best[u].max(zs[step]);
+            }
+        }
+    }
+
+    #[test]
+    fn clean_decisions_rescore_nothing() {
+        // Identity prior: observing arm 0 moves only arm 0's posterior;
+        // with unchanged incumbents a repeat decision rescores 0 arms.
+        let p = problem();
+        let mut b = NativeBackend::new(&p);
+        let best = [0.0, 0.0];
+        let _ = b.eirate(&best, &[false; 3], true);
+        assert_eq!(b.pending_dirty(), 0);
+        let _ = b.eirate(&best, &[false; 3], true);
+        assert_eq!(b.pending_dirty(), 0);
+        // An observation dirties exactly the moved arm (identity prior)…
+        b.observe(0, 0.3);
+        assert_eq!(b.pending_dirty(), 1);
+        // …and an incumbent move dirties exactly that user's arms.
+        let _ = b.eirate(&[0.3, 0.0], &[true, false, false], true);
+        assert_eq!(b.pending_dirty(), 0);
+        let _ = b.eirate(&[0.4, 0.0], &[true, false, false], true);
+        // user 0 owns arms {0, 1}: both were rescored and drained.
+        assert_eq!(b.pending_dirty(), 0);
+    }
+
+    #[test]
+    fn incumbent_move_invalidates_owned_arms_only() {
+        let p = problem();
+        let mut b = NativeBackend::new(&p);
+        let first = b.eirate(&[0.0, 0.0], &[false; 3], true).to_vec();
+        // Raise user 1's incumbent: arms 1 and 2 (owned by user 1) must
+        // drop; arm 0 (user 0 only) must be byte-identical from cache.
+        let second = b.eirate(&[0.0, 0.5], &[false; 3], true).to_vec();
+        assert_eq!(first[0], second[0], "unowned arm served from cache");
+        assert!(second[1] < first[1]);
+        assert!(second[2] < first[2]);
     }
 }

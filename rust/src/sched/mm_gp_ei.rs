@@ -50,12 +50,18 @@ impl MmGpEi {
         &self.incumbents
     }
 
+    /// Incumbent vector `best[u] = z(x_u*(t))` the backend scores against.
+    fn best_vec(&self, problem: &Problem) -> Vec<f64> {
+        (0..problem.n_users).map(|u| self.incumbents.value(u)).collect()
+    }
+
     /// Current EIrate scores for all arms (−∞ for selected arms).
     /// Exposed for tests and for the live coordinator's metrics endpoint.
+    /// (Copies the backend's score buffer; the hot path in
+    /// [`Policy::select`] reads the buffer in place instead.)
     pub fn scores(&mut self, ctx: &SchedContext) -> Vec<f64> {
-        let best: Vec<f64> =
-            (0..ctx.problem.n_users).map(|u| self.incumbents.value(u)).collect();
-        self.backend.eirate(&best, ctx.selected, self.use_cost)
+        let best = self.best_vec(ctx.problem);
+        self.backend.eirate(&best, ctx.selected, self.use_cost).to_vec()
     }
 }
 
@@ -65,7 +71,8 @@ impl Policy for MmGpEi {
     }
 
     fn select(&mut self, ctx: &SchedContext) -> Option<ArmId> {
-        let scores = self.scores(ctx);
+        let best = self.best_vec(ctx.problem);
+        let scores = self.backend.eirate(&best, ctx.selected, self.use_cost);
         let mut best_arm = None;
         let mut best_score = f64::NEG_INFINITY;
         for (x, &s) in scores.iter().enumerate() {

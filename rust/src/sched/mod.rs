@@ -22,7 +22,7 @@ mod fantasy;
 mod gp_ucb;
 mod mm_gp_ei;
 
-pub use backend::{EiBackend, NativeBackend};
+pub use backend::{rescan_eirate, EiBackend, NativeBackend};
 pub use baselines::{GpEiRandom, GpEiRoundRobin, MmGpEiIndep, Oracle};
 pub use fantasy::MmGpEiFantasy;
 pub use gp_ucb::{GpUcbMdmt, GpUcbRoundRobin};

@@ -110,7 +110,7 @@ struct Completion {
 
 impl PartialEq for Completion {
     fn eq(&self, other: &Self) -> bool {
-        self.finish == other.finish && self.device == other.device
+        self.cmp(other) == Ordering::Equal
     }
 }
 impl Eq for Completion {}
@@ -121,13 +121,17 @@ impl PartialOrd for Completion {
 }
 impl Ord for Completion {
     fn cmp(&self, other: &Self) -> Ordering {
-        // Reversed: BinaryHeap is a max-heap, we want earliest first;
-        // ties broken by device index for determinism.
+        // Reversed: BinaryHeap is a max-heap, we want earliest first.
+        // `total_cmp` makes the order *total* (no NaN panic, no
+        // platform-dependent partial_cmp escape hatch), and equal finish
+        // times break deterministically by device index so identical
+        // seeds replay identical schedules everywhere — the same-cost
+        // warm-start burst at t = 0 would otherwise leave the completion
+        // order to heap internals.
         other
             .finish
-            .partial_cmp(&self.finish)
-            .unwrap()
-            .then(other.device.cmp(&self.device))
+            .total_cmp(&self.finish)
+            .then_with(|| other.device.cmp(&self.device))
     }
 }
 
@@ -454,6 +458,52 @@ mod tests {
             &SimConfig { n_devices: 1, warm_start_per_user: 2, horizon: Some(full.makespan / 2.0), ..Default::default() },
         );
         assert!(half.cumulative_regret <= full.cumulative_regret + 1e-9);
+    }
+
+    #[test]
+    fn tied_completions_pop_in_device_order() {
+        // All costs equal → every completion wave is one big tie. The
+        // tie-break must hand events back in ascending device order, and
+        // the whole schedule must replay identically run over run.
+        let user_arms = vec![vec![0, 1, 2, 3], vec![4, 5, 6, 7]];
+        let arm_users = Problem::compute_arm_users(8, &user_arms);
+        let p = Problem {
+            name: "ties".into(),
+            n_users: 2,
+            cost: vec![1.0; 8],
+            user_arms,
+            arm_users,
+            prior_mean: vec![0.5; 8],
+            prior_cov: crate::linalg::Mat::eye(8),
+        };
+        let t = Truth { z: vec![0.1, 0.9, 0.3, 0.7, 0.2, 0.8, 0.4, 0.6] };
+        let run = || {
+            let mut pol = MmGpEi::new(&p);
+            simulate(
+                &p,
+                &t,
+                &mut pol,
+                &SimConfig { n_devices: 4, warm_start_per_user: 2, horizon: None, ..Default::default() },
+            )
+        };
+        let a = run();
+        let b = run();
+        let key = |r: &SimResult| -> Vec<(usize, usize, u64)> {
+            r.observations.iter().map(|o| (o.arm, o.device, o.finish.to_bits())).collect()
+        };
+        assert_eq!(key(&a), key(&b), "identical seeds must replay identical schedules");
+        // Within each tied completion wave, devices drain in index order.
+        for w in a.observations.windows(2) {
+            if w[0].finish == w[1].finish {
+                assert!(
+                    w[0].device < w[1].device,
+                    "tie at t={} popped device {} before {}",
+                    w[0].finish,
+                    w[0].device,
+                    w[1].device
+                );
+            }
+        }
     }
 
     #[test]

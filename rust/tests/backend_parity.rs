@@ -3,9 +3,12 @@
 //! incremental-Cholesky GP to tight numeric tolerance, and the full
 //! MM-GP-EI policy must make identical decisions with either backend.
 //!
-//! Requires `make artifacts`; tests are skipped (with a loud message)
-//! when the artifact directory is missing so `cargo test` stays runnable
-//! before the first build.
+//! Requires the `xla` feature (the whole file is compiled out of the
+//! default build — the stub backend can never load an artifact) plus
+//! `make artifacts`; with the feature on, tests are skipped (with a loud
+//! message) when the artifact directory is missing so `cargo test` stays
+//! runnable before the first artifact build.
+#![cfg(feature = "xla")]
 
 use std::path::PathBuf;
 

@@ -4,7 +4,10 @@
 //! coordinator relies on.
 
 use mmgpei::prng::Rng;
-use mmgpei::sched::{GpEiRandom, GpEiRoundRobin, MmGpEi, MmGpEiIndep, Policy};
+use mmgpei::sched::{
+    rescan_eirate, EiBackend, GpEiRandom, GpEiRoundRobin, MmGpEi, MmGpEiIndep, NativeBackend,
+    Policy,
+};
 use mmgpei::sim::{simulate, SimConfig};
 use mmgpei::testutil::{check, gen};
 
@@ -201,6 +204,109 @@ fn cost_estimate_noise_preserves_invariants() {
             assert!((o.finish - o.start - p.cost[o.arm]).abs() < 1e-12);
         }
         assert!(r.inst_regret.final_value().abs() < 1e-12);
+    });
+}
+
+#[test]
+fn cached_eirate_matches_brute_force_oracle() {
+    // The dirty-set incremental scorer must be indistinguishable — float
+    // for float, argmax for argmax — from a brute-force recompute, over
+    // randomized membership structures (including arms shared across
+    // users), observation orders, evolving incumbents, masks, and both
+    // cost modes.
+    check("cached eirate equals brute-force oracle", |rng| {
+        let (nu, nm) = (2 + rng.below(4), 2 + rng.below(4));
+        let (mut p, t) = gen::problem(rng, nu, nm);
+        // Randomly share some arms across extra users so the membership
+        // structure is not a clean partition.
+        for _ in 0..1 + rng.below(4) {
+            let u = rng.below(p.n_users);
+            let a = rng.below(p.n_arms());
+            if !p.user_arms[u].contains(&a) {
+                p.user_arms[u].push(a);
+            }
+        }
+        p.arm_users = mmgpei::problem::Problem::compute_arm_users(p.n_arms(), &p.user_arms);
+        p.validate();
+
+        let n = p.n_arms();
+        let mut backend = NativeBackend::new(&p);
+        let mut selected = vec![false; n];
+        let mut best = vec![0.0f64; p.n_users];
+        let mut order: Vec<usize> = (0..n).collect();
+        rng.shuffle(&mut order);
+
+        let compare = |backend: &mut NativeBackend,
+                       best: &[f64],
+                       selected: &[bool],
+                       use_cost: bool,
+                       step: usize| {
+            let cached = backend.eirate(best, selected, use_cost).to_vec();
+            let oracle = rescan_eirate(backend.gp(), &p.arm_users, &p.cost, best, selected, use_cost);
+            let mut arg_c = None;
+            let mut arg_o = None;
+            let mut max_c = f64::NEG_INFINITY;
+            let mut max_o = f64::NEG_INFINITY;
+            for x in 0..cached.len() {
+                assert!(
+                    cached[x] == oracle[x],
+                    "step {step} use_cost {use_cost} arm {x}: cached {} vs oracle {}",
+                    cached[x],
+                    oracle[x]
+                );
+                if cached[x] > max_c {
+                    max_c = cached[x];
+                    arg_c = Some(x);
+                }
+                if oracle[x] > max_o {
+                    max_o = oracle[x];
+                    arg_o = Some(x);
+                }
+            }
+            assert_eq!(arg_c, arg_o, "step {step}: argmax must agree");
+        };
+
+        for (step, &a) in order.iter().enumerate() {
+            // Score (both cost modes) before the observation; repeated
+            // clean reads must also stay exact (pure cache hits).
+            compare(&mut backend, &best, &selected, true, step);
+            compare(&mut backend, &best, &selected, false, step);
+            compare(&mut backend, &best, &selected, true, step);
+            backend.observe(a, t.z[a]);
+            selected[a] = true;
+            for &u in &p.arm_users[a] {
+                best[u] = best[u].max(t.z[a]);
+            }
+        }
+        // Exhausted state: everything masked.
+        compare(&mut backend, &best, &selected, true, n);
+    });
+}
+
+#[test]
+fn double_observation_is_ignored_not_corrupting() {
+    // A buggy driver feeding the same completion twice must not corrupt
+    // the cached scorer: the duplicate is skipped and scores stay equal
+    // to the oracle's.
+    check("double observe ignored", |rng| {
+        let (p, t) = gen::problem(rng, 3, 3);
+        let mut backend = NativeBackend::new(&p);
+        let n = p.n_arms();
+        let mut selected = vec![false; n];
+        let mut best = vec![0.0f64; p.n_users];
+        let a = rng.below(n);
+        backend.observe(a, t.z[a]);
+        backend.observe(a, 0.123); // duplicate, different value: ignored
+        selected[a] = true;
+        for &u in &p.arm_users[a] {
+            best[u] = best[u].max(t.z[a]);
+        }
+        let cached = backend.eirate(&best, &selected, true).to_vec();
+        let oracle = rescan_eirate(backend.gp(), &p.arm_users, &p.cost, &best, &selected, true);
+        for x in 0..n {
+            assert!(cached[x] == oracle[x], "arm {x}: {} vs {}", cached[x], oracle[x]);
+        }
+        assert!((backend.gp().posterior_mean(a) - t.z[a]).abs() < 1e-12, "first value wins");
     });
 }
 
