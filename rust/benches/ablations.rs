@@ -10,16 +10,17 @@
 //!   holdout-estimated covariance).
 //!
 //! Run: `cargo bench --bench ablations`
+//! CI:  `cargo bench --bench ablations -- --smoke --json reports/BENCH_ablations.json`
 
-use mmgpei::bench::Table;
+use mmgpei::bench::{BenchOpts, Table};
 use mmgpei::cli::run_experiment;
 use mmgpei::config::ExperimentConfig;
-
-fn seeds() -> u64 {
-    std::env::var("MMGPEI_SEEDS").ok().and_then(|s| s.parse().ok()).unwrap_or(8)
-}
+use mmgpei::report::{Direction, RunReport};
 
 fn main() {
+    let opts = BenchOpts::from_env_args();
+    let seeds = opts.seeds("MMGPEI_SEEDS", 8, 2);
+    let mut report = RunReport::new("ablations", 0, opts.smoke);
     for dataset in ["azure", "deeplearning"] {
         let cfg = ExperimentConfig {
             name: format!("ablations-{dataset}"),
@@ -34,10 +35,11 @@ fn main() {
                 "oracle".into(),
             ],
             devices: vec![1],
-            seeds: seeds(),
+            seeds,
             ..Default::default()
         };
         let res = run_experiment(&cfg).expect("ablation sweep");
+        res.push_kpis(&mut report, &format!("{dataset}/"), &[0.05]);
         println!("\n=== Ablations [{dataset}, M=1, {} seeds] ===", cfg.seeds);
         let mut table = Table::new(&[
             "variant",
@@ -67,12 +69,14 @@ fn main() {
     // A3 — Remark-1 robustness: the scheduler sees log-normally noisy
     // cost estimates ĉ(x); devices charge the true c(x). The paper
     // claims the approximation "does not degrade the performance".
-    println!("\n=== Ablation A3 — cost-estimate noise (azure, M=1, {} seeds) ===", seeds());
+    println!("\n=== Ablation A3 — cost-estimate noise (azure, M=1, {seeds} seeds) ===");
+    let noise_levels: &[f64] = if opts.smoke { &[0.0, 0.3] } else { &[0.0, 0.1, 0.3, 0.5] };
+    report.fold_config(&format!("a3 noise_levels={noise_levels:?} seeds={seeds}"));
     let mut table = Table::new(&["ĉ rel. noise σ", "cumulative regret", "vs exact costs"]);
     let mut exact = f64::NAN;
-    for rel_std in [0.0, 0.1, 0.3, 0.5] {
+    for &rel_std in noise_levels {
         let mut regrets = Vec::new();
-        for seed in 0..seeds() {
+        for seed in 0..seeds {
             let cfg = ExperimentConfig {
                 dataset: "azure".into(),
                 policies: vec!["mdmt".into()],
@@ -98,6 +102,7 @@ fn main() {
         if rel_std == 0.0 {
             exact = mean;
         }
+        report.push_kpi(format!("a3/noise_{rel_std}/cumulative_regret"), mean, Direction::LowerIsBetter);
         table.row(vec![
             format!("{rel_std:.1}"),
             format!("{mean:.2} ± {std:.2}"),
@@ -112,17 +117,19 @@ fn main() {
     // identical by construction; the benefit (if any) appears as the
     // pending set grows.
     println!("\n=== Ablation A5 — kriging-believer fantasies vs plain MDMT ===");
+    let a5_devices: &[usize] = if opts.smoke { &[2] } else { &[2, 4, 8] };
     let mut table = Table::new(&["dataset", "devices", "mdmt t ≤ 0.05", "fantasy t ≤ 0.05"]);
     for dataset in ["azure", "deeplearning"] {
-        for m in [2usize, 4, 8] {
+        for &m in a5_devices {
             let cfg = ExperimentConfig {
                 dataset: dataset.into(),
                 policies: vec!["mdmt".into(), "mdmt-fantasy".into()],
                 devices: vec![m],
-                seeds: seeds(),
+                seeds,
                 ..Default::default()
             };
             let res = run_experiment(&cfg).expect("A5 sweep");
+            res.push_kpis(&mut report, &format!("a5-{dataset}/"), &[0.05]);
             let tt = |policy: &str| {
                 let cell = res.cell(policy, m).unwrap();
                 let hits: Vec<f64> = cell.runs.iter().filter_map(|r| r.time_to(0.05)).collect();
@@ -148,6 +155,7 @@ fn main() {
     use mmgpei::kernels::{Kernel, Matern52};
     use mmgpei::workload::{synthetic_gp, SyntheticConfig};
     let syn = SyntheticConfig { n_users: 16, n_models: 12, ..Default::default() };
+    report.fold_config(&format!("a4 n_users={} n_models={} seeds={seeds}", syn.n_users, syn.n_models));
     let pts: Vec<Vec<f64>> = (0..syn.n_models).map(|m| vec![m as f64 * 0.25]).collect();
     let true_kern = Matern52 { variance: syn.variance, lengthscale: syn.lengthscale };
     // Fit hyperparameters on 8 independent historical paths (joint LML).
@@ -172,12 +180,14 @@ fn main() {
     let wrong_kern =
         Matern52 { variance: syn.variance / 4.0, lengthscale: syn.lengthscale * 4.0 };
     let mut table = Table::new(&["prior", "cumulative regret", "t ≤ 0.05"]);
-    for (label, kern) in
-        [("true", &true_kern), ("fitted (gp::fit)", &fitted_kern), ("wrong (ℓ×4, σ²/4)", &wrong_kern)]
-    {
+    for (label, kpi_key, kern) in [
+        ("true", "true", &true_kern),
+        ("fitted (gp::fit)", "fitted", &fitted_kern),
+        ("wrong (ℓ×4, σ²/4)", "wrong", &wrong_kern),
+    ] {
         let mut regrets = Vec::new();
         let mut hits = Vec::new();
-        for seed in 0..seeds() {
+        for seed in 0..seeds {
             let (mut problem, truth) = synthetic_gp(&syn, 0x517 + seed);
             // Swap the scheduler's prior covariance for this variant's
             // block-diagonal gram (per-user independence preserved).
@@ -204,8 +214,10 @@ fn main() {
         }
         let (rm, rs) = mmgpei::metrics::mean_std(&regrets);
         let (hm, _) = mmgpei::metrics::mean_std(&hits);
+        report.push_kpi(format!("a4/{kpi_key}/cumulative_regret"), rm, Direction::LowerIsBetter);
         table.row(vec![label.into(), format!("{rm:.2} ± {rs:.2}"), format!("{hm:.2}")]);
     }
     println!("{}", table.to_markdown());
     println!("expected: fitted ≈ true (the §4.2 recipe works); wrong prior costs regret.");
+    opts.finish(&report);
 }

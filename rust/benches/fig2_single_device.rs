@@ -8,26 +8,28 @@
 //! 5× faster than round robin" claim on Azure.
 //!
 //! Run: `cargo bench --bench fig2_single_device`
+//! CI:  `cargo bench --bench fig2_single_device -- --smoke --json reports/BENCH_fig2_single_device.json`
 
-use mmgpei::bench::Table;
+use mmgpei::bench::{BenchOpts, Table};
 use mmgpei::cli::run_experiment;
 use mmgpei::config::ExperimentConfig;
-
-fn seeds() -> u64 {
-    std::env::var("MMGPEI_SEEDS").ok().and_then(|s| s.parse().ok()).unwrap_or(10)
-}
+use mmgpei::report::{Direction, RunReport};
 
 fn main() {
+    let opts = BenchOpts::from_env_args();
+    let seeds = opts.seeds("MMGPEI_SEEDS", 10, 2);
+    let mut report = RunReport::new("fig2_single_device", 0, opts.smoke);
     for dataset in ["azure", "deeplearning"] {
         let cfg = ExperimentConfig {
             name: format!("fig2-{dataset}"),
             dataset: dataset.into(),
             policies: vec!["mdmt".into(), "round-robin".into(), "random".into()],
             devices: vec![1],
-            seeds: seeds(),
+            seeds,
             ..Default::default()
         };
         let res = run_experiment(&cfg).expect("fig2 sweep");
+        res.push_kpis(&mut report, &format!("{dataset}/"), &[0.05, 0.01]);
         println!("\n=== Figure 2 [{dataset}] — single device, {} seeds ===", cfg.seeds);
         let mut table = Table::new(&["policy", "cumulative regret", "t: regret ≤ 0.05", "t: regret ≤ 0.01"]);
         let mut t_mm = (f64::NAN, f64::NAN);
@@ -62,6 +64,18 @@ fn main() {
             t_rr.0 / t_mm.0,
             t_rr.1 / t_mm.1
         );
+        // The paper's headline claim as gated KPIs (NaN speedups — a
+        // cutoff some seed never reached — are dropped by push_kpi).
+        report.push_kpi(
+            format!("{dataset}/speedup_mdmt_vs_rr_t0.05"),
+            t_rr.0 / t_mm.0,
+            Direction::HigherIsBetter,
+        );
+        report.push_kpi(
+            format!("{dataset}/speedup_mdmt_vs_rr_t0.01"),
+            t_rr.1 / t_mm.1,
+            Direction::HigherIsBetter,
+        );
         // Mean-curve series (what the shaded plot shows), downsampled.
         println!("\nseries (t, mean inst. regret, σ):");
         for cell in &res.cells {
@@ -75,4 +89,5 @@ fn main() {
         }
     }
     println!("\npaper shape: MDMT ≫ baselines on Azure; ≈ parity on DeepLearning (σ=0.04)");
+    opts.finish(&report);
 }

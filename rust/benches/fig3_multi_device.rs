@@ -6,26 +6,28 @@
 //! users vs Azure's 9).
 //!
 //! Run: `cargo bench --bench fig3_multi_device`
+//! CI:  `cargo bench --bench fig3_multi_device -- --smoke --json reports/BENCH_fig3_multi_device.json`
 
-use mmgpei::bench::Table;
+use mmgpei::bench::{BenchOpts, Table};
 use mmgpei::cli::run_experiment;
 use mmgpei::config::ExperimentConfig;
-
-fn seeds() -> u64 {
-    std::env::var("MMGPEI_SEEDS").ok().and_then(|s| s.parse().ok()).unwrap_or(8)
-}
+use mmgpei::report::RunReport;
 
 fn main() {
+    let opts = BenchOpts::from_env_args();
+    let seeds = opts.seeds("MMGPEI_SEEDS", 8, 2);
+    let mut report = RunReport::new("fig3_multi_device", 0, opts.smoke);
     for dataset in ["azure", "deeplearning"] {
         let cfg = ExperimentConfig {
             name: format!("fig3-{dataset}"),
             dataset: dataset.into(),
             policies: vec!["mdmt".into()],
             devices: vec![1, 2, 4, 8],
-            seeds: seeds(),
+            seeds,
             ..Default::default()
         };
         let res = run_experiment(&cfg).expect("fig3 sweep");
+        res.push_kpis(&mut report, &format!("{dataset}/"), &[0.05, 0.01]);
         println!("\n=== Figure 3 [{dataset}] — MDMT × devices, {} seeds ===", cfg.seeds);
         let mut table = Table::new(&[
             "devices",
@@ -54,4 +56,5 @@ fn main() {
     }
     println!("\npaper shape: regret decays strictly faster as devices double; larger effect");
     println!("on DeepLearning (14 users) than Azure (9 users).");
+    opts.finish(&report);
 }

@@ -6,25 +6,24 @@
 //! users — nothing left to prioritize.
 //!
 //! Run: `cargo bench --bench fig4_four_devices`
+//! CI:  `cargo bench --bench fig4_four_devices -- --smoke --json reports/BENCH_fig4_four_devices.json`
 
-use mmgpei::bench::Table;
+use mmgpei::bench::{BenchOpts, Table};
 use mmgpei::cli::run_experiment;
 use mmgpei::config::ExperimentConfig;
+use mmgpei::report::{Direction, RunReport};
 
-fn seeds() -> u64 {
-    std::env::var("MMGPEI_SEEDS").ok().and_then(|s| s.parse().ok()).unwrap_or(8)
-}
-
-fn run(dataset: &str, devices: usize) {
+fn run(dataset: &str, devices: usize, seeds: u64, report: &mut RunReport) {
     let cfg = ExperimentConfig {
         name: format!("fig4-{dataset}-m{devices}"),
         dataset: dataset.into(),
         policies: vec!["mdmt".into(), "round-robin".into(), "random".into()],
         devices: vec![devices],
-        seeds: seeds(),
+        seeds,
         ..Default::default()
     };
     let res = run_experiment(&cfg).expect("fig4 sweep");
+    res.push_kpis(report, &format!("{dataset}/"), &[0.05, 0.01]);
     println!("\n=== Figure 4 [{dataset}, M={devices}] — {} seeds ===", cfg.seeds);
     let mut table =
         Table::new(&["policy", "cumulative regret", "t: regret ≤ 0.05", "t: regret ≤ 0.01"]);
@@ -50,12 +49,22 @@ fn run(dataset: &str, devices: usize) {
     }
     println!("{}", table.to_markdown());
     println!("MDMT / round-robin cumulative-regret ratio: {:.3}", mm / rr);
+    // The paper's M=4 win / M=8 saturation observation as a gated KPI.
+    report.push_kpi(
+        format!("{dataset}/mdmt_vs_rr_cumulative_ratio@M{devices}"),
+        mm / rr,
+        Direction::LowerIsBetter,
+    );
 }
 
 fn main() {
-    run("azure", 4);
-    run("deeplearning", 4);
+    let opts = BenchOpts::from_env_args();
+    let seeds = opts.seeds("MMGPEI_SEEDS", 8, 2);
+    let mut report = RunReport::new("fig4_four_devices", 0, opts.smoke);
+    run("azure", 4, seeds, &mut report);
+    run("deeplearning", 4, seeds, &mut report);
     // The paper's saturation observation: M = 8 on Azure (9 users).
-    run("azure", 8);
+    run("azure", 8, seeds, &mut report);
     println!("\npaper shape: MDMT wins at M=4 on Azure; ratio → ≈1 at M=8 (9 users only).");
+    opts.finish(&report);
 }

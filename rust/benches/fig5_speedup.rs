@@ -8,12 +8,15 @@
 //! Expected shape: near-linear drop in convergence time.
 //!
 //! Full-size run is a few minutes; scale down with
-//! `MMGPEI_FIG5_USERS/MODELS/SEEDS`.
+//! `MMGPEI_FIG5_USERS/MODELS/SEEDS`. `--smoke` presets a 16×12 instance
+//! with 2 repeats over M ∈ {1, 2, 4}.
 //!
 //! Run: `cargo bench --bench fig5_speedup`
+//! CI:  `cargo bench --bench fig5_speedup -- --smoke --json reports/BENCH_fig5_speedup.json`
 
-use mmgpei::bench::Table;
+use mmgpei::bench::{BenchOpts, Table};
 use mmgpei::metrics::mean_std;
+use mmgpei::report::{Direction, RunReport};
 use mmgpei::sched::MmGpEi;
 use mmgpei::sim::{simulate, SimConfig};
 use mmgpei::workload::{synthetic_gp, SyntheticConfig};
@@ -23,13 +26,22 @@ fn env_usize(key: &str, default: usize) -> usize {
 }
 
 fn main() {
+    let opts = BenchOpts::from_env_args();
+    // Smoke pins the instance size and ignores the env knobs — the CI
+    // preset must be identical everywhere or baselines would never match.
     let cfg = SyntheticConfig {
-        n_users: env_usize("MMGPEI_FIG5_USERS", 50),
-        n_models: env_usize("MMGPEI_FIG5_MODELS", 50),
+        n_users: if opts.smoke { 16 } else { env_usize("MMGPEI_FIG5_USERS", 50) },
+        n_models: if opts.smoke { 12 } else { env_usize("MMGPEI_FIG5_MODELS", 50) },
         ..Default::default()
     };
-    let repeats = env_usize("MMGPEI_FIG5_SEEDS", 5);
+    let repeats = opts.seeds("MMGPEI_FIG5_SEEDS", 5, 2) as usize;
+    let device_counts: &[usize] = if opts.smoke { &[1, 2, 4] } else { &[1, 2, 4, 8, 16, 32] };
     let cutoff = 0.01;
+    let mut report = RunReport::new("fig5_speedup", 9000, opts.smoke);
+    report.fold_config(&format!(
+        "fig5 synthetic n_users={} n_models={} repeats={repeats} cutoff={cutoff} devices={device_counts:?}",
+        cfg.n_users, cfg.n_models
+    ));
     println!(
         "=== Figure 5 — synthetic {}×{}, Matérn ν=5/2, cutoff {cutoff}, {repeats} repeats ===",
         cfg.n_users, cfg.n_models
@@ -42,7 +54,7 @@ fn main() {
         "arms run (mean)",
     ]);
     let mut base = None;
-    for m in [1usize, 2, 4, 8, 16, 32] {
+    for &m in device_counts {
         let mut times = Vec::with_capacity(repeats);
         let mut arms_run = Vec::with_capacity(repeats);
         for seed in 0..repeats {
@@ -69,6 +81,9 @@ fn main() {
         }
         let (mean, std) = mean_std(&times);
         let b = *base.get_or_insert(mean);
+        report.push_kpi(format!("t_le_{cutoff}@M{m}"), mean, Direction::LowerIsBetter);
+        report.push_kpi(format!("speedup@M{m}"), b / mean, Direction::HigherIsBetter);
+        report.push_kpi(format!("arms_run@M{m}"), mean_std(&arms_run).0, Direction::LowerIsBetter);
         table.row(vec![
             m.to_string(),
             format!("{mean:.2} ± {std:.2}"),
@@ -79,4 +94,5 @@ fn main() {
     }
     println!("{}", table.to_markdown());
     println!("paper shape: convergence time drops at a near-linear rate while M ≪ N.");
+    opts.finish(&report);
 }

@@ -13,11 +13,18 @@
 //!    (requires `--features xla` + `make artifacts`; skipped otherwise);
 //!  * end-to-end decision latency inside the live coordinator.
 //!
+//! With `--json` the wall-clock numbers land in the report's `timings`
+//! section (warn-only in CI) and the P1b argmax-parity check lands in
+//! `kpis` as a mismatch count (hard-gated at 0). `--smoke` skips the
+//! timing loops entirely and emits only the deterministic parity KPIs.
+//!
 //! Run: `cargo bench --bench perf_hotpath`
+//! CI:  `cargo bench --bench perf_hotpath -- --smoke --json reports/BENCH_perf_hotpath.json`
 
-use mmgpei::bench::{Bencher, Table};
+use mmgpei::bench::{BenchOpts, Bencher, Table};
 use mmgpei::prng::Rng;
 use mmgpei::problem::{Problem, Truth};
+use mmgpei::report::{Direction, RunReport, TimingEntry};
 use mmgpei::runtime::{default_artifact_dir, XlaBackend};
 use mmgpei::sched::{rescan_eirate, EiBackend, NativeBackend};
 use mmgpei::testutil::gen;
@@ -26,6 +33,28 @@ use std::hint::black_box;
 use std::time::Duration;
 
 fn main() {
+    let opts = BenchOpts::from_env_args();
+    let mut report = RunReport::new("perf_hotpath", 42, opts.smoke);
+    if !opts.smoke {
+        micro_benches(&mut report);
+    }
+
+    let mismatches = cached_vs_rescan(&mut report, opts.smoke);
+
+    if !opts.smoke {
+        coordinator_latency(&mut report);
+    }
+    // Write the report first (the mismatch KPI is evidence worth keeping),
+    // then hard-fail: parity is a correctness invariant, not a preference,
+    // and it must break CI with or without a checked-in baseline.
+    opts.finish(&report);
+    if mismatches > 0 {
+        eprintln!("FAIL: {mismatches} cached-vs-rescan argmax mismatches (must be 0)");
+        std::process::exit(1);
+    }
+}
+
+fn micro_benches(report: &mut RunReport) {
     let bench = Bencher {
         warmup: Duration::from_millis(100),
         budget: Duration::from_millis(800),
@@ -58,6 +87,20 @@ fn main() {
             })
             .collect();
 
+        let mut record = |stats: &mmgpei::bench::BenchStats, row_label: &str, table: &mut Table| {
+            report.push_timing(TimingEntry::from(&mmgpei::bench::BenchStats {
+                name: format!("{}/L{l}", stats.name),
+                ..stats.clone()
+            }));
+            table.row(vec![
+                row_label.into(),
+                l.to_string(),
+                t_obs.to_string(),
+                mmgpei::bench::fmt_duration(stats.mean),
+                mmgpei::bench::fmt_duration(stats.p99),
+            ]);
+        };
+
         // (a) full EIrate scoring pass — every arm rescored from the
         // cached posterior, O(L·N̄) EI evaluations (the per-decision cost
         // the dirty-set cache replaces; see §P1b for the serving-loop
@@ -72,13 +115,7 @@ fn main() {
                 true,
             ))
         });
-        table.row(vec![
-            "eirate full rescan".into(),
-            l.to_string(),
-            t_obs.to_string(),
-            mmgpei::bench::fmt_duration(stats.mean),
-            mmgpei::bench::fmt_duration(stats.p99),
-        ]);
+        record(&stats, "eirate full rescan", &mut table);
 
         // (a') steady-state cached read — unchanged posterior and
         // incumbents, so only the O(L) mask/cost assembly runs.
@@ -86,13 +123,7 @@ fn main() {
             let s = native.eirate(black_box(&best), black_box(&selected), true);
             black_box(s[s.len() - 1])
         });
-        table.row(vec![
-            "eirate cached (clean decision)".into(),
-            l.to_string(),
-            t_obs.to_string(),
-            mmgpei::bench::fmt_duration(stats.mean),
-            mmgpei::bench::fmt_duration(stats.p99),
-        ]);
+        record(&stats, "eirate cached (clean decision)", &mut table);
 
         // (b) incremental observe, amortized over a fresh sequential run
         // of t_obs observations (what the simulator actually pays; a
@@ -105,23 +136,21 @@ fn main() {
             }
             black_box(gp.posterior_mean(0))
         });
-        table.row(vec![
-            "native observe (amortized/obs)".into(),
-            l.to_string(),
-            t_obs.to_string(),
-            mmgpei::bench::fmt_duration(stats.mean / t_obs as u32),
-            mmgpei::bench::fmt_duration(stats.p99 / t_obs as u32),
-        ]);
+        let amortized = mmgpei::bench::BenchStats {
+            name: stats.name.clone(),
+            iters: stats.iters,
+            mean: stats.mean / t_obs as u32,
+            p50: stats.p50 / t_obs as u32,
+            p95: stats.p95 / t_obs as u32,
+            p99: stats.p99 / t_obs as u32,
+            min: stats.min / t_obs as u32,
+            max: stats.max / t_obs as u32,
+        };
+        record(&amortized, "native observe (amortized/obs)", &mut table);
 
         // (c) the naive full recompute the incremental path replaces.
         let stats = bench.run("recompute", || black_box(native.gp().recompute_posterior_slow()));
-        table.row(vec![
-            "naive posterior recompute".into(),
-            l.to_string(),
-            t_obs.to_string(),
-            mmgpei::bench::fmt_duration(stats.mean),
-            mmgpei::bench::fmt_duration(stats.p99),
-        ]);
+        record(&stats, "naive posterior recompute", &mut table);
 
         // (d) XLA artifact scheduler_step (if artifacts exist and fit).
         if let Ok(mut xla) = XlaBackend::new(&problem, &default_artifact_dir()) {
@@ -132,55 +161,10 @@ fn main() {
                 let s = xla.eirate(black_box(&best), black_box(&selected), true);
                 black_box(s[s.len() - 1])
             });
-            table.row(vec![
-                "xla scheduler_step (PJRT)".into(),
-                l.to_string(),
-                t_obs.to_string(),
-                mmgpei::bench::fmt_duration(stats.mean),
-                mmgpei::bench::fmt_duration(stats.p99),
-            ]);
+            record(&stats, "xla scheduler_step (PJRT)", &mut table);
         }
     }
     println!("{}", table.to_markdown());
-
-    cached_vs_rescan();
-
-    // End-to-end: decision latency inside the live coordinator.
-    println!("\n--- live coordinator decision latency (azure, 4 devices) ---");
-    let data = mmgpei::workload::azure();
-    let mut rng = Rng::new(5);
-    let split = data.protocol_split(&mut rng, 8);
-    let (problem, truth) = data.make_problem(&split);
-    for backend in ["native", "xla"] {
-        let mut policy: Box<dyn mmgpei::sched::Policy> = match backend {
-            "native" => Box::new(mmgpei::sched::MmGpEi::new(&problem)),
-            _ => match XlaBackend::new(&problem, &default_artifact_dir()) {
-                Ok(b) => Box::new(mmgpei::sched::MmGpEi::with_backend(&problem, Box::new(b))),
-                Err(_) => {
-                    println!("xla: skipped (build with --features xla and run `make artifacts`)");
-                    continue;
-                }
-            },
-        };
-        let report = mmgpei::coordinator::serve(
-            &problem,
-            &truth,
-            policy.as_mut(),
-            &mmgpei::coordinator::ServeConfig {
-                n_devices: 4,
-                time_scale: 0.0005,
-                warm_start_per_user: 2,
-                verbose: false,
-            },
-        );
-        println!(
-            "{backend:>7}: mean {:?}, max {:?} over {} decisions (makespan {:?})",
-            report.mean_decision_latency(),
-            report.max_decision_latency(),
-            report.decision_latencies.len(),
-            report.makespan
-        );
-    }
 }
 
 /// One full serving run driven through the cached dirty-set scorer:
@@ -255,8 +239,10 @@ fn argmax(scores: &[f64]) -> Option<usize> {
 /// many-users scenario (64 tenants × 16 models, per-user independent
 /// blocks), amortized per-decision cost of cached vs full-rescan scoring
 /// over a half-exhausting serving run, with bit-identical argmax
-/// verification up front.
-fn cached_vs_rescan() {
+/// verification up front. The mismatch count lands in the report as a
+/// parity KPI *and* is returned to `main`, which exits non-zero on any
+/// divergence — the invariant holds in every mode, baseline or not.
+fn cached_vs_rescan(report: &mut RunReport, smoke: bool) -> usize {
     println!("\n=== §Perf P1b: cached (dirty-set) vs full-rescan EIrate, many users ===\n");
     let bench = Bencher {
         warmup: Duration::from_millis(100),
@@ -266,8 +252,10 @@ fn cached_vs_rescan() {
     };
     let mut table =
         Table::new(&["scorer", "users", "L (arms)", "decisions", "mean/decision", "speedup"]);
+    let mut total_mismatches = 0usize;
     for (n_users, n_models) in [(16usize, 16usize), (64, 16)] {
         let cfg = SyntheticConfig { n_users, n_models, ..Default::default() };
+        report.fold_config(&format!("p1b n_users={n_users} n_models={n_models}"));
         let (problem, truth) = synthetic_gp(&cfg, 0xCACE);
         let l = problem.n_arms();
         let n_decisions = l / 2;
@@ -284,17 +272,36 @@ fn cached_vs_rescan() {
         let mut picks_rescan = Vec::with_capacity(n_decisions);
         drive_cached(&problem, &truth, &order, Some(&mut picks_cached));
         drive_rescan(&problem, &truth, &order, Some(&mut picks_rescan));
-        assert_eq!(
-            picks_cached, picks_rescan,
-            "cached scorer must select identically to the rescan scorer"
+        let mismatches = picks_cached.iter().zip(&picks_rescan).filter(|(c, r)| c != r).count();
+        total_mismatches += mismatches;
+        report.push_kpi(
+            format!("parity/cached_vs_rescan_mismatches@u{n_users}x{n_models}"),
+            mismatches as f64,
+            Direction::LowerIsBetter,
+        );
+        println!(
+            "parity u{n_users}x{n_models}: {mismatches}/{n_decisions} diverging argmax decisions (must be 0)"
         );
 
+        if smoke {
+            continue; // Timing loops are wall-clock noise; smoke wants determinism.
+        }
         let s_cached =
             bench.run("cached", || black_box(drive_cached(&problem, &truth, &order, None)));
         let s_rescan =
             bench.run("rescan", || black_box(drive_rescan(&problem, &truth, &order, None)));
         let per = |d: Duration| d / n_decisions as u32;
         let speedup = s_rescan.mean.as_secs_f64() / s_cached.mean.as_secs_f64();
+        report.push_timing(TimingEntry::flat(
+            format!("p1b/cached_per_decision@u{n_users}x{n_models}"),
+            n_decisions as u64,
+            per(s_cached.mean).as_nanos() as f64,
+        ));
+        report.push_timing(TimingEntry::flat(
+            format!("p1b/rescan_per_decision@u{n_users}x{n_models}"),
+            n_decisions as u64,
+            per(s_rescan.mean).as_nanos() as f64,
+        ));
         table.row(vec![
             "full rescan".into(),
             n_users.to_string(),
@@ -314,4 +321,49 @@ fn cached_vs_rescan() {
     }
     println!("{}", table.to_markdown());
     println!("(selections verified bit-identical before timing; target ≥ 5× on 64 users)");
+    total_mismatches
+}
+
+/// End-to-end: decision latency inside the live coordinator.
+fn coordinator_latency(report: &mut RunReport) {
+    println!("\n--- live coordinator decision latency (azure, 4 devices) ---");
+    let data = mmgpei::workload::azure();
+    let mut rng = Rng::new(5);
+    let split = data.protocol_split(&mut rng, 8);
+    let (problem, truth) = data.make_problem(&split);
+    for backend in ["native", "xla"] {
+        let mut policy: Box<dyn mmgpei::sched::Policy> = match backend {
+            "native" => Box::new(mmgpei::sched::MmGpEi::new(&problem)),
+            _ => match XlaBackend::new(&problem, &default_artifact_dir()) {
+                Ok(b) => Box::new(mmgpei::sched::MmGpEi::with_backend(&problem, Box::new(b))),
+                Err(_) => {
+                    println!("xla: skipped (build with --features xla and run `make artifacts`)");
+                    continue;
+                }
+            },
+        };
+        let serve_report = mmgpei::coordinator::serve(
+            &problem,
+            &truth,
+            policy.as_mut(),
+            &mmgpei::coordinator::ServeConfig {
+                n_devices: 4,
+                time_scale: 0.0005,
+                warm_start_per_user: 2,
+                verbose: false,
+            },
+        );
+        report.push_timing(TimingEntry::flat(
+            format!("coordinator/decision_latency/{backend}"),
+            serve_report.decision_latencies.len() as u64,
+            serve_report.mean_decision_latency().as_nanos() as f64,
+        ));
+        println!(
+            "{backend:>7}: mean {:?}, max {:?} over {} decisions (makespan {:?})",
+            serve_report.mean_decision_latency(),
+            serve_report.max_decision_latency(),
+            serve_report.decision_latencies.len(),
+            serve_report.makespan
+        );
+    }
 }

@@ -127,6 +127,103 @@ impl Bencher {
     }
 }
 
+/// Shared command-line surface of the `harness = false` bench binaries:
+/// `--smoke` (reduced deterministic run), `--json <path>` (write a
+/// `report::RunReport`), `--seeds <n>` (explicit seed-count override).
+///
+/// Construct with [`BenchOpts::from_env_args`]; the stray `--bench`
+/// token some cargo versions forward to bench executables is ignored.
+#[derive(Clone, Debug, Default)]
+pub struct BenchOpts {
+    /// Reduced deterministic CI mode: fewer seeds, smaller instances,
+    /// wall-clock timings excluded from the report.
+    pub smoke: bool,
+    /// Where to write the `BENCH_*.json` report, if anywhere.
+    pub json: Option<String>,
+    /// `--seeds` override (takes precedence over env defaults).
+    pub seeds_override: Option<u64>,
+}
+
+impl BenchOpts {
+    /// Parse from the process arguments; exits with a usage message on
+    /// malformed input (these are terminal binaries, not a library path).
+    pub fn from_env_args() -> BenchOpts {
+        let tokens = std::env::args().skip(1).filter(|t| t != "--bench");
+        match Self::from_tokens(tokens) {
+            Ok(opts) => opts,
+            Err(e) => {
+                eprintln!("error: {e}\nusage: <bench> [--smoke] [--json PATH] [--seeds N]");
+                std::process::exit(2);
+            }
+        }
+    }
+
+    /// Parse from explicit tokens (testable core of [`Self::from_env_args`]).
+    pub fn from_tokens(tokens: impl IntoIterator<Item = String>) -> Result<BenchOpts, String> {
+        let args = crate::cli::Args::parse(tokens)?;
+        // The Args grammar degrades a valueless `--json` to a bare flag
+        // and binds `--smoke azure` as an option — both would silently run
+        // the wrong mode, so the whole vocabulary is checked strictly.
+        for key in args.options.keys() {
+            match key.as_str() {
+                "json" | "seeds" => {}
+                "smoke" => return Err("--smoke takes no value".into()),
+                other => return Err(format!("unknown option --{other}")),
+            }
+        }
+        for flag in &args.flags {
+            match flag.as_str() {
+                "smoke" => {}
+                "json" | "seeds" => return Err(format!("--{flag} requires a value")),
+                other => return Err(format!("unknown flag --{other}")),
+            }
+        }
+        // Args::parse files the first bare token under `command` and the
+        // rest under `positionals`; benches take none.
+        if let Some(stray) = args.command.as_ref().or_else(|| args.positionals.first()) {
+            return Err(format!("unexpected positional argument {stray:?}"));
+        }
+        Ok(BenchOpts {
+            smoke: args.has_flag("smoke"),
+            json: args.get("json").map(str::to_string),
+            seeds_override: match args.get("seeds") {
+                Some(raw) => Some(raw.parse().map_err(|e| format!("--seeds {raw:?}: {e}"))?),
+                None => None,
+            },
+        })
+    }
+
+    /// Seed count for a figure sweep: an explicit `--seeds` wins; smoke
+    /// mode then pins the smoke default and **ignores** the bench's env
+    /// knob (e.g. `MMGPEI_SEEDS`) — the CI preset must be identical on
+    /// every machine or locally-refreshed baselines would never match CI;
+    /// full runs honor the env knob, then the full default.
+    pub fn seeds(&self, env_key: &str, full: u64, smoke: u64) -> u64 {
+        let env = std::env::var(env_key).ok().and_then(|v| v.parse().ok());
+        self.seeds_from(env, full, smoke)
+    }
+
+    /// Pure precedence core of [`Self::seeds`] (testable without touching
+    /// the process environment): `--seeds` > smoke preset > env knob > full.
+    fn seeds_from(&self, env_override: Option<u64>, full: u64, smoke: u64) -> u64 {
+        if let Some(s) = self.seeds_override {
+            return s;
+        }
+        if self.smoke {
+            return smoke;
+        }
+        env_override.unwrap_or(full)
+    }
+
+    /// Write `report` to `--json` if requested (no-op otherwise).
+    pub fn finish(&self, report: &crate::report::RunReport) {
+        if let Some(path) = &self.json {
+            report.write(path).unwrap_or_else(|e| panic!("writing report {path}: {e}"));
+            eprintln!("wrote {path}");
+        }
+    }
+}
+
 /// A simple markdown/ASCII table builder used by bench binaries to print
 /// figure-shaped outputs (rows = series the paper plots).
 pub struct Table {
@@ -222,6 +319,42 @@ mod tests {
         assert_eq!(fmt_duration(Duration::from_nanos(500)), "500 ns");
         assert_eq!(fmt_duration(Duration::from_micros(1500)), "1.50 ms");
         assert!(fmt_duration(Duration::from_secs(2)).ends_with(" s"));
+    }
+
+    #[test]
+    fn bench_opts_parse() {
+        let toks = |s: &str| s.split_whitespace().map(str::to_string).collect::<Vec<_>>();
+        let o = BenchOpts::from_tokens(toks("--smoke --json reports/BENCH_fig2.json --seeds 3")).unwrap();
+        assert!(o.smoke);
+        assert_eq!(o.json.as_deref(), Some("reports/BENCH_fig2.json"));
+        assert_eq!(o.seeds_override, Some(3));
+        assert_eq!(o.seeds("MMGPEI_NO_SUCH_ENV", 10, 2), 3);
+        let d = BenchOpts::from_tokens(toks("")).unwrap();
+        assert!(!d.smoke && d.json.is_none());
+        assert_eq!(d.seeds("MMGPEI_NO_SUCH_ENV", 10, 2), 10);
+        let s = BenchOpts::from_tokens(toks("--smoke")).unwrap();
+        assert_eq!(s.seeds("MMGPEI_NO_SUCH_ENV", 10, 2), 2);
+        assert!(BenchOpts::from_tokens(toks("--seeds nope")).is_err());
+        assert!(BenchOpts::from_tokens(toks("--json --smoke")).is_err(), "valueless --json must not silently no-op");
+        assert!(BenchOpts::from_tokens(toks("--smoke --seeds")).is_err());
+        assert!(BenchOpts::from_tokens(toks("stray")).is_err());
+        assert!(BenchOpts::from_tokens(toks("--smoke stray extra")).is_err(), "--smoke must not swallow a token");
+        assert!(BenchOpts::from_tokens(toks("--jsn out.json")).is_err(), "typoed keys must not be dropped");
+        assert!(BenchOpts::from_tokens(toks("--verbose")).is_err());
+    }
+
+    #[test]
+    fn smoke_mode_ignores_env_seed_knob() {
+        // Exercises the pure precedence core — no set_var (racy under
+        // cargo test's parallel threads).
+        let toks = |s: &str| s.split_whitespace().map(str::to_string).collect::<Vec<_>>();
+        let smoke = BenchOpts::from_tokens(toks("--smoke")).unwrap();
+        assert_eq!(smoke.seeds_from(Some(99), 10, 2), 2, "smoke must pin the CI preset over the env knob");
+        let full = BenchOpts::from_tokens(toks("")).unwrap();
+        assert_eq!(full.seeds_from(Some(99), 10, 2), 99, "full runs honor the env knob");
+        assert_eq!(full.seeds_from(None, 10, 2), 10);
+        let explicit = BenchOpts::from_tokens(toks("--smoke --seeds 5")).unwrap();
+        assert_eq!(explicit.seeds_from(Some(99), 10, 2), 5, "--seeds beats everything");
     }
 
     #[test]

@@ -7,6 +7,7 @@ use crate::config::{Backend, ExperimentConfig};
 use crate::metrics::{aggregate_curves, mean_std, time_grid, StepCurve};
 use crate::prng::Rng;
 use crate::problem::{Problem, Truth};
+use crate::report::{Direction, RunReport, TimingEntry};
 use crate::runtime::{default_artifact_dir, XlaBackend};
 use crate::sched::{GpEiRandom, GpEiRoundRobin, MmGpEi, MmGpEiIndep, Oracle, Policy};
 use crate::sim::{simulate, SimConfig, SimResult};
@@ -98,6 +99,37 @@ impl ExperimentResults {
     /// Find a cell.
     pub fn cell(&self, policy: &str, devices: usize) -> Option<&CellResult> {
         self.cells.iter().find(|c| c.policy == policy && c.devices == devices)
+    }
+
+    /// Fold this sweep into `report`: the config fingerprint, one KPI set
+    /// per cell under `prefix` (e.g. `azure/`), and — outside smoke mode
+    /// — the per-decision scheduler wall time as a timing entry.
+    ///
+    /// Per-cell KPIs (all virtual-time, hence seed-deterministic):
+    /// `cumulative_regret`, `final_regret`, `makespan`, and `t_le_<cut>`
+    /// for each cutoff that **every** seed reached (partially-reached
+    /// cutoffs are omitted rather than averaged over a varying subset).
+    pub fn push_kpis(&self, report: &mut RunReport, prefix: &str, cutoffs: &[f64]) {
+        report.fold_config(&self.config.canonical_string());
+        for cell in &self.cells {
+            let key = |metric: &str| format!("{prefix}{}@M{}/{metric}", cell.policy, cell.devices);
+            report.push_kpi(key("cumulative_regret"), cell.cumulative.0, Direction::LowerIsBetter);
+            let finals: Vec<f64> = cell.runs.iter().map(|r| r.inst_regret.final_value()).collect();
+            report.push_kpi(key("final_regret"), mean_std(&finals).0, Direction::LowerIsBetter);
+            let makespans: Vec<f64> = cell.runs.iter().map(|r| r.makespan).collect();
+            report.push_kpi(key("makespan"), mean_std(&makespans).0, Direction::LowerIsBetter);
+            for &cut in cutoffs {
+                let hits: Vec<f64> = cell.runs.iter().filter_map(|r| r.time_to(cut)).collect();
+                if hits.len() == cell.runs.len() {
+                    report.push_kpi(key(&format!("t_le_{cut}")), mean_std(&hits).0, Direction::LowerIsBetter);
+                }
+            }
+            let decisions: u64 = cell.runs.iter().map(|r| r.n_decisions as u64).sum();
+            if decisions > 0 {
+                let total_ns: f64 = cell.runs.iter().map(|r| r.decision_wall_time.as_nanos() as f64).sum();
+                report.push_timing(TimingEntry::flat(key("decision_wall"), decisions, total_ns / decisions as f64));
+            }
+        }
     }
 }
 
@@ -212,6 +244,24 @@ mod tests {
         assert_eq!(p1.cost, p2.cost);
         let (_, t3) = make_instance(&cfg, 4).unwrap();
         assert_ne!(t1.z, t3.z);
+    }
+
+    #[test]
+    fn push_kpis_covers_every_cell_and_respects_smoke() {
+        let cfg = quick_cfg();
+        let res = run_experiment(&cfg).unwrap();
+        let mut smoke = RunReport::new("test", 0, true);
+        res.push_kpis(&mut smoke, "azure/", &[1e9]);
+        // 4 cells × (cumulative, final, makespan, t_le_1000000000 — the
+        // huge cutoff is hit at t=0 by every run).
+        assert_eq!(smoke.kpis.len(), 16);
+        assert!(smoke.kpis.iter().all(|k| k.name.starts_with("azure/")));
+        assert!(smoke.kpis.iter().any(|k| k.name == "azure/mdmt@M1/cumulative_regret"));
+        assert!(smoke.timings.is_empty(), "smoke reports must exclude wall-clock timings");
+        assert_ne!(smoke.provenance.config_hash, format!("{:016x}", crate::report::fnv1a64(b"")));
+        let mut full = RunReport::new("test", 0, false);
+        res.push_kpis(&mut full, "azure/", &[]);
+        assert_eq!(full.timings.len(), 4, "one decision_wall timing per cell");
     }
 
     #[test]

@@ -14,6 +14,9 @@ use std::collections::BTreeMap;
 pub struct Args {
     /// First positional token (the subcommand).
     pub command: Option<String>,
+    /// Positional tokens after the subcommand (e.g. the two report paths
+    /// of `compare a.json b.json`).
+    pub positionals: Vec<String>,
     /// `--key value` pairs.
     pub options: BTreeMap<String, String>,
     /// Bare `--flag` switches.
@@ -23,9 +26,10 @@ pub struct Args {
 impl Args {
     /// Parse from an iterator of tokens (usually `std::env::args().skip(1)`).
     ///
-    /// Grammar: the first non-dash token is the subcommand; `--key value`
-    /// binds the next token unless it also starts with `--`; a trailing
-    /// or value-less `--key` becomes a flag.
+    /// Grammar: the first non-dash token is the subcommand and later
+    /// non-dash tokens are its positionals; `--key value` binds the next
+    /// token unless it also starts with `--`; a trailing or value-less
+    /// `--key` becomes a flag.
     pub fn parse(tokens: impl IntoIterator<Item = String>) -> Result<Args, String> {
         let mut args = Args::default();
         let mut it = tokens.into_iter().peekable();
@@ -44,7 +48,7 @@ impl Args {
             } else if args.command.is_none() {
                 args.command = Some(tok);
             } else {
-                return Err(format!("unexpected positional argument {tok:?}"));
+                args.positionals.push(tok);
             }
         }
         Ok(args)
@@ -117,8 +121,12 @@ mod tests {
     }
 
     #[test]
-    fn rejects_extra_positionals() {
-        assert!(Args::parse(["a".into(), "b".into()]).is_err());
+    fn collects_extra_positionals() {
+        let a = parse("compare baselines/BENCH_fig2.json reports/BENCH_fig2.json --rel-tol 0.05");
+        assert_eq!(a.command.as_deref(), Some("compare"));
+        assert_eq!(a.positionals, vec!["baselines/BENCH_fig2.json", "reports/BENCH_fig2.json"]);
+        assert_eq!(a.get("rel-tol"), Some("0.05"));
+        assert!(parse("theory").positionals.is_empty());
     }
 
     #[test]

@@ -144,6 +144,52 @@ impl ExperimentConfig {
         Ok(cfg)
     }
 
+    /// Canonical one-line-per-field rendering of every knob that affects
+    /// results — the input to [`Self::config_hash`]. Field order is fixed;
+    /// floats render through Rust's shortest-roundtrip `Display`, so the
+    /// same config always produces the same string.
+    pub fn canonical_string(&self) -> String {
+        format!(
+            "name={}\ndataset={}\npolicies={}\ndevices={:?}\nseeds={}\nwarm_start={}\nholdout={}\n\
+             horizon={:?}\ncutoff={}\nbackend={:?}\nsynthetic.n_users={}\nsynthetic.n_models={}\n\
+             synthetic.variance={}\nsynthetic.lengthscale={}\nsynthetic.cost_range=({},{})\n",
+            self.name,
+            self.dataset,
+            self.policies.join(","),
+            self.devices,
+            self.seeds,
+            self.warm_start,
+            self.holdout,
+            self.horizon,
+            self.cutoff,
+            self.backend,
+            self.synthetic.n_users,
+            self.synthetic.n_models,
+            self.synthetic.variance,
+            self.synthetic.lengthscale,
+            self.synthetic.cost_range.0,
+            self.synthetic.cost_range.1,
+        )
+    }
+
+    /// FNV-1a fingerprint of [`Self::canonical_string`] as 16 hex chars —
+    /// stamped into report provenance so `compare` can tell whether two
+    /// reports measured the same experiment.
+    pub fn config_hash(&self) -> String {
+        format!("{:016x}", crate::report::fnv1a64(self.canonical_string().as_bytes()))
+    }
+
+    /// Reduced deterministic preset for CI smoke runs (`--smoke`): few
+    /// seeds and a small synthetic instance, everything else untouched.
+    /// Azure/DeepLearning workloads are already small; the seed count is
+    /// what dominates sweep cost.
+    pub fn smoke(mut self) -> Self {
+        self.seeds = self.seeds.min(2);
+        self.synthetic.n_users = self.synthetic.n_users.min(12);
+        self.synthetic.n_models = self.synthetic.n_models.min(10);
+        self
+    }
+
     /// Sanity-check field combinations.
     pub fn validate(&self) -> Result<(), String> {
         if !["azure", "deeplearning", "synthetic"].contains(&self.dataset.as_str()) {
@@ -221,6 +267,35 @@ n_models = 50
         )
         .unwrap_err();
         assert!(err.contains("devices"), "{err}");
+    }
+
+    #[test]
+    fn config_hash_separates_configs_and_is_stable() {
+        let a = ExperimentConfig::from_toml_str(SAMPLE).unwrap();
+        let b = ExperimentConfig::from_toml_str(SAMPLE).unwrap();
+        assert_eq!(a.config_hash(), b.config_hash());
+        assert_eq!(a.config_hash().len(), 16);
+        let mut c = a.clone();
+        c.seeds += 1;
+        assert_ne!(a.config_hash(), c.config_hash());
+        let mut d = a.clone();
+        d.synthetic.lengthscale *= 2.0;
+        assert_ne!(a.config_hash(), d.config_hash());
+    }
+
+    #[test]
+    fn smoke_preset_shrinks_but_stays_valid() {
+        let mut cfg = ExperimentConfig::from_toml_str(SAMPLE).unwrap();
+        cfg.synthetic.n_users = 50;
+        let s = cfg.clone().smoke();
+        assert_eq!(s.seeds, 2);
+        assert_eq!(s.synthetic.n_users, 12);
+        assert_eq!(s.devices, cfg.devices);
+        s.validate().unwrap();
+        // Already-small configs are untouched.
+        let mut tiny = cfg.clone();
+        tiny.seeds = 1;
+        assert_eq!(tiny.clone().smoke().seeds, 1);
     }
 
     #[test]

@@ -19,7 +19,7 @@ use mmgpei::config::{Backend, ExperimentConfig};
 use mmgpei::coordinator::{serve, ServeConfig};
 use mmgpei::metrics::StepCurve;
 use mmgpei::miu::{miu_diag_bound, miu_exact, miu_greedy, miu_total, theorem2_bound};
-use mmgpei::report::{ascii_plot, curves_to_csv, write_report};
+use mmgpei::report::{ascii_plot, compare_reports, curves_to_csv, write_report, RunReport, Tolerances};
 use mmgpei::sim::{simulate, SimConfig};
 use mmgpei::workload::{azure, deeplearning};
 
@@ -34,6 +34,7 @@ COMMANDS
              --policies mdmt,round-robin,random[,mdmt-nocost,mdmt-indep,oracle]
              --devices 1,2,4  --seeds 10  --backend native|xla
              --cutoff 0.01  [--csv reports/out.csv]  [--plot]
+             [--json reports/BENCH_name.json]  [--smoke]
   serve      live threaded coordinator (wall clock)
              --dataset azure --policy mdmt --devices 4 --time-scale 0.005
              --backend native|xla --seed 0 [--verbose]
@@ -43,6 +44,9 @@ COMMANDS
              --dataset azure [--max-s 8] [--seed 0]
   dataset    export generated tables
              --name azure|deeplearning --out data/azure.csv
+  compare    diff two BENCH_*.json reports; exit 1 on KPI regression
+             compare baseline.json candidate.json
+             [--rel-tol 0.05] [--abs-tol 1e-9] [--timing-tol 0.5]
   help       this text
 ";
 
@@ -54,12 +58,21 @@ fn main() {
             std::process::exit(2);
         }
     };
+    // Only `compare` takes positionals (its two report paths); everywhere
+    // else a stray positional is almost certainly a forgotten `--flag`
+    // (e.g. `simulate azure` instead of `simulate --dataset azure`) and
+    // silently ignoring it would run the wrong experiment.
+    if args.command.as_deref() != Some("compare") && !args.positionals.is_empty() {
+        eprintln!("error: unexpected positional argument {:?}\n\n{HELP}", args.positionals[0]);
+        std::process::exit(2);
+    }
     let result = match args.command.as_deref() {
         Some("simulate") => cmd_simulate(&args),
         Some("serve") => cmd_serve(&args),
         Some("theory") => cmd_theory(&args),
         Some("miu") => cmd_miu(&args),
         Some("dataset") => cmd_dataset(&args),
+        Some("compare") => cmd_compare(&args),
         Some("help") | None => {
             println!("{HELP}");
             Ok(())
@@ -107,7 +120,11 @@ fn config_from_args(args: &Args) -> Result<ExperimentConfig, String> {
 }
 
 fn cmd_simulate(args: &Args) -> Result<(), String> {
-    let cfg = config_from_args(args)?;
+    let mut cfg = config_from_args(args)?;
+    let smoke = args.has_flag("smoke");
+    if smoke {
+        cfg = cfg.smoke();
+    }
     eprintln!(
         "simulate: dataset={} policies={:?} devices={:?} seeds={} backend={:?}",
         cfg.dataset, cfg.policies, cfg.devices, cfg.seeds, cfg.backend
@@ -157,6 +174,53 @@ fn cmd_simulate(args: &Args) -> Result<(), String> {
         write_report(path, &curves_to_csv(&series)).map_err(|e| e.to_string())?;
         eprintln!("wrote {path}");
     }
+    if let Some(path) = args.get("json") {
+        let mut report = RunReport::new(cfg.name.clone(), 0, smoke);
+        let mut cutoffs = vec![0.05, cfg.cutoff];
+        cutoffs.sort_by(f64::total_cmp);
+        cutoffs.dedup();
+        results.push_kpis(&mut report, "", &cutoffs);
+        report.write(path).map_err(|e| e.to_string())?;
+        eprintln!("wrote {path}");
+    }
+    Ok(())
+}
+
+fn cmd_compare(args: &Args) -> Result<(), String> {
+    let [baseline_path, candidate_path] = args.positionals.as_slice() else {
+        return Err("compare needs exactly two positional report paths: compare baseline.json candidate.json".into());
+    };
+    // This is the CI gate: a typoed `--reltol 0.01` or a valueless
+    // `--rel-tol` silently running with default tolerances is worse than
+    // refusing, so the vocabulary is checked strictly.
+    for key in args.options.keys() {
+        if !["rel-tol", "abs-tol", "timing-tol"].contains(&key.as_str()) {
+            return Err(format!("unknown option --{key}"));
+        }
+    }
+    if let Some(flag) = args.flags.first() {
+        return Err(match flag.as_str() {
+            "rel-tol" | "abs-tol" | "timing-tol" => format!("--{flag} requires a value"),
+            other => format!("unknown flag --{other}"),
+        });
+    }
+    let tol = Tolerances {
+        rel: args.get_parsed_or("rel-tol", Tolerances::default().rel)?,
+        abs: args.get_parsed_or("abs-tol", Tolerances::default().abs)?,
+        timing_rel: args.get_parsed_or("timing-tol", Tolerances::default().timing_rel)?,
+    };
+    let baseline = RunReport::from_file(baseline_path)?;
+    let candidate = RunReport::from_file(candidate_path)?;
+    let outcome = compare_reports(&baseline, &candidate, &tol);
+    print!("{}", outcome.render());
+    if outcome.failed() {
+        return Err(format!(
+            "{} KPI regression(s) in {candidate_path} vs {baseline_path} (rel tol {})",
+            outcome.n_failures(),
+            tol.rel
+        ));
+    }
+    println!("ok: no KPI regressions in {candidate_path} vs {baseline_path}");
     Ok(())
 }
 

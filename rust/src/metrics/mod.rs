@@ -112,6 +112,15 @@ pub fn time_grid(t_end: f64, n: usize) -> Vec<f64> {
     (0..n).map(|i| t_end * i as f64 / (n - 1) as f64).collect()
 }
 
+/// Signed relative change from `baseline` to `candidate` as a fraction
+/// of `|baseline|` (the report `compare` gate's unit). The denominator is
+/// floored at `f64::MIN_POSITIVE` so an exact-zero baseline yields a
+/// huge-but-finite ratio instead of NaN/∞ — absolute tolerances then
+/// decide (see `report::compare`).
+pub fn rel_change(baseline: f64, candidate: f64) -> f64 {
+    (candidate - baseline) / baseline.abs().max(f64::MIN_POSITIVE)
+}
+
 /// Mean and sample-std of a slice (speedup tables).
 pub fn mean_std(xs: &[f64]) -> (f64, f64) {
     let n = xs.len() as f64;
@@ -188,6 +197,16 @@ mod tests {
         assert_eq!(m, 2.0);
         assert!((s - 2f64.sqrt()).abs() < 1e-12);
         assert_eq!(mean_std(&[5.0]).1, 0.0);
+    }
+
+    #[test]
+    fn rel_change_signed_and_zero_safe() {
+        assert!((rel_change(10.0, 12.0) - 0.2).abs() < 1e-12);
+        assert!((rel_change(10.0, 9.0) + 0.1).abs() < 1e-12);
+        assert!((rel_change(-10.0, -9.0) - 0.1).abs() < 1e-12);
+        assert_eq!(rel_change(5.0, 5.0), 0.0);
+        let z = rel_change(0.0, 1e-12);
+        assert!(z.is_finite() && z > 0.0);
     }
 
     #[test]

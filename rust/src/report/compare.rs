@@ -1,0 +1,303 @@
+//! Report comparison — the CI quality/perf gate.
+//!
+//! `mmgpei compare baseline.json candidate.json` loads two
+//! [`RunReport`]s and checks every KPI for a regression beyond the
+//! configured tolerances. KPI regressions (regret up, speedup/parity
+//! down) are **hard failures**; wall-clock timing growth is **warn-only**
+//! because CI runners are noisy; a KPI that disappears from the candidate
+//! is a hard failure (a gated metric must not silently vanish).
+
+use super::run::{Direction, RunReport};
+use crate::metrics::rel_change;
+
+/// Per-metric tolerances for [`compare_reports`].
+#[derive(Clone, Copy, Debug)]
+pub struct Tolerances {
+    /// Allowed relative worsening of a KPI (fraction of |baseline|).
+    pub rel: f64,
+    /// Absolute slack added on top (guards near-zero baselines).
+    pub abs: f64,
+    /// Allowed relative growth of a timing mean before warning.
+    pub timing_rel: f64,
+}
+
+impl Default for Tolerances {
+    fn default() -> Self {
+        Tolerances { rel: 0.05, abs: 1e-9, timing_rel: 0.5 }
+    }
+}
+
+/// Severity of one comparison finding.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Severity {
+    /// Gate-breaking regression.
+    Fail,
+    /// Noted but non-blocking.
+    Warn,
+}
+
+/// One comparison finding.
+#[derive(Clone, Debug)]
+pub struct Finding {
+    /// Fail or warn.
+    pub severity: Severity,
+    /// Metric (or provenance field) the finding is about.
+    pub metric: String,
+    /// Human-readable explanation with both values.
+    pub detail: String,
+}
+
+/// Outcome of one report comparison.
+#[derive(Clone, Debug, Default)]
+pub struct CompareOutcome {
+    /// All findings, failures first.
+    pub findings: Vec<Finding>,
+    /// KPIs present in both reports.
+    pub n_kpis_compared: usize,
+    /// Timing entries present in both reports.
+    pub n_timings_compared: usize,
+}
+
+impl CompareOutcome {
+    /// Whether the gate should fail.
+    pub fn failed(&self) -> bool {
+        self.findings.iter().any(|f| f.severity == Severity::Fail)
+    }
+
+    /// Number of hard failures.
+    pub fn n_failures(&self) -> usize {
+        self.findings.iter().filter(|f| f.severity == Severity::Fail).count()
+    }
+
+    /// Render for terminal/CI logs.
+    pub fn render(&self) -> String {
+        let mut out = String::new();
+        for f in &self.findings {
+            let tag = match f.severity {
+                Severity::Fail => "FAIL",
+                Severity::Warn => "warn",
+            };
+            out.push_str(&format!("[{tag}] {}: {}\n", f.metric, f.detail));
+        }
+        out.push_str(&format!(
+            "compared {} KPIs, {} timings: {} failure(s), {} warning(s)\n",
+            self.n_kpis_compared,
+            self.n_timings_compared,
+            self.n_failures(),
+            self.findings.len() - self.n_failures()
+        ));
+        out
+    }
+
+    fn push(&mut self, severity: Severity, metric: &str, detail: String) {
+        self.findings.push(Finding { severity, metric: metric.to_string(), detail });
+    }
+}
+
+/// How much `candidate` worsened over `baseline` for a KPI, as a signed
+/// fraction of |baseline| (positive = worse in the KPI's direction).
+fn worsening(better: Direction, baseline: f64, candidate: f64) -> f64 {
+    match better {
+        Direction::LowerIsBetter => rel_change(baseline, candidate),
+        Direction::HigherIsBetter => -rel_change(baseline, candidate),
+    }
+}
+
+/// Compare `candidate` against `baseline`. Pure and deterministic; the
+/// CLI wrapper turns `failed()` into a non-zero exit code.
+pub fn compare_reports(baseline: &RunReport, candidate: &RunReport, tol: &Tolerances) -> CompareOutcome {
+    let mut out = CompareOutcome::default();
+    if baseline.name != candidate.name {
+        out.push(
+            Severity::Fail,
+            "report",
+            format!("name mismatch: baseline {:?} vs candidate {:?}", baseline.name, candidate.name),
+        );
+        return out;
+    }
+    if baseline.provenance.config_hash != candidate.provenance.config_hash {
+        out.push(
+            Severity::Warn,
+            "provenance/config_hash",
+            format!(
+                "configs differ ({} vs {}): KPIs may not be comparable — refresh the baseline if the \
+                 experiment changed intentionally",
+                baseline.provenance.config_hash, candidate.provenance.config_hash
+            ),
+        );
+    }
+    if baseline.provenance.smoke != candidate.provenance.smoke {
+        out.push(
+            Severity::Warn,
+            "provenance/smoke",
+            format!("smoke={} baseline vs smoke={} candidate", baseline.provenance.smoke, candidate.provenance.smoke),
+        );
+    }
+
+    // KPIs: hard gate.
+    for base in &baseline.kpis {
+        let Some(cand) = candidate.kpis.iter().find(|k| k.name == base.name) else {
+            out.push(Severity::Fail, &base.name, format!("KPI missing from candidate (baseline {})", base.value));
+            continue;
+        };
+        out.n_kpis_compared += 1;
+        if cand.better != base.better {
+            out.push(
+                Severity::Fail,
+                &base.name,
+                format!("direction changed ({:?} vs {:?})", base.better, cand.better),
+            );
+            continue;
+        }
+        let worse = worsening(base.better, base.value, cand.value);
+        let slack = tol.rel + tol.abs / base.value.abs().max(f64::MIN_POSITIVE);
+        if worse > slack {
+            out.push(
+                Severity::Fail,
+                &base.name,
+                format!("regressed {:+.1}% ({} → {}, tol {:.1}%)", 100.0 * worse, base.value, cand.value, 100.0 * tol.rel),
+            );
+        }
+    }
+    for cand in &candidate.kpis {
+        if !baseline.kpis.iter().any(|k| k.name == cand.name) {
+            out.push(Severity::Warn, &cand.name, format!("new KPI not in baseline (value {})", cand.value));
+        }
+    }
+
+    // Timings: warn-only (runners are noisy).
+    for base in &baseline.timings {
+        let Some(cand) = candidate.timings.iter().find(|t| t.name == base.name) else {
+            out.push(Severity::Warn, &base.name, "timing missing from candidate".to_string());
+            continue;
+        };
+        out.n_timings_compared += 1;
+        let growth = rel_change(base.mean_ns, cand.mean_ns);
+        if growth > tol.timing_rel {
+            out.push(
+                Severity::Warn,
+                &base.name,
+                format!(
+                    "mean time grew {:+.0}% ({:.0} ns → {:.0} ns, warn threshold {:.0}%)",
+                    100.0 * growth,
+                    base.mean_ns,
+                    cand.mean_ns,
+                    100.0 * tol.timing_rel
+                ),
+            );
+        }
+    }
+
+    out.findings.sort_by_key(|f| match f.severity {
+        Severity::Fail => 0,
+        Severity::Warn => 1,
+    });
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::report::{Provenance, TimingEntry};
+
+    fn report() -> RunReport {
+        let mut r = RunReport {
+            name: "fig2".into(),
+            provenance: Provenance {
+                commit: "abc".into(),
+                seed: 0,
+                config_hash: "1111111111111111".into(),
+                smoke: false,
+            },
+            kpis: Vec::new(),
+            timings: Vec::new(),
+        };
+        r.push_kpi("azure/mdmt@M1/cumulative_regret", 10.0, Direction::LowerIsBetter);
+        r.push_kpi("azure/speedup_t0.05", 4.0, Direction::HigherIsBetter);
+        r.push_timing(TimingEntry::flat("decision", 100, 1000.0));
+        r
+    }
+
+    #[test]
+    fn identical_reports_pass() {
+        let r = report();
+        let out = compare_reports(&r, &r, &Tolerances::default());
+        assert!(!out.failed(), "{}", out.render());
+        assert_eq!(out.n_kpis_compared, 2);
+        assert_eq!(out.n_timings_compared, 1);
+    }
+
+    #[test]
+    fn within_tolerance_passes() {
+        let base = report();
+        let mut cand = report();
+        cand.kpis[0].value = 10.4; // +4% < 5%
+        cand.kpis[1].value = 3.9; // -2.5% < 5%
+        assert!(!compare_reports(&base, &cand, &Tolerances::default()).failed());
+    }
+
+    #[test]
+    fn regret_increase_fails() {
+        let base = report();
+        let mut cand = report();
+        cand.kpis[0].value = 12.0; // +20%
+        let out = compare_reports(&base, &cand, &Tolerances::default());
+        assert!(out.failed());
+        assert_eq!(out.n_failures(), 1);
+        assert!(out.render().contains("cumulative_regret"));
+    }
+
+    #[test]
+    fn speedup_drop_fails_but_speedup_gain_passes() {
+        let base = report();
+        let mut cand = report();
+        cand.kpis[1].value = 3.0; // -25% of a higher-is-better KPI
+        assert!(compare_reports(&base, &cand, &Tolerances::default()).failed());
+        cand.kpis[1].value = 8.0; // improvement: never a regression
+        cand.kpis[0].value = 5.0;
+        assert!(!compare_reports(&base, &cand, &Tolerances::default()).failed());
+    }
+
+    #[test]
+    fn missing_kpi_fails_new_kpi_warns() {
+        let base = report();
+        let mut cand = report();
+        cand.kpis.remove(1);
+        cand.push_kpi("azure/new_metric", 1.0, Direction::LowerIsBetter);
+        let out = compare_reports(&base, &cand, &Tolerances::default());
+        assert!(out.failed());
+        assert_eq!(out.n_failures(), 1);
+        assert!(out.render().contains("new KPI"));
+    }
+
+    #[test]
+    fn timing_growth_warns_only() {
+        let base = report();
+        let mut cand = report();
+        cand.timings[0].mean_ns = 5000.0; // 5× slower
+        let out = compare_reports(&base, &cand, &Tolerances::default());
+        assert!(!out.failed());
+        assert!(out.render().contains("grew"));
+    }
+
+    #[test]
+    fn near_zero_baseline_uses_absolute_slack() {
+        let mut base = report();
+        base.kpis[0].value = 0.0;
+        let mut cand = base.clone();
+        cand.kpis[0].value = 1e-12; // within abs tolerance of an exact-zero baseline
+        assert!(!compare_reports(&base, &cand, &Tolerances::default()).failed());
+        cand.kpis[0].value = 0.5; // a real regression from zero
+        assert!(compare_reports(&base, &cand, &Tolerances::default()).failed());
+    }
+
+    #[test]
+    fn name_mismatch_fails_fast() {
+        let base = report();
+        let mut cand = report();
+        cand.name = "fig3".into();
+        let out = compare_reports(&base, &cand, &Tolerances::default());
+        assert!(out.failed());
+        assert_eq!(out.n_kpis_compared, 0);
+    }
+}

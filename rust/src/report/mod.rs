@@ -1,6 +1,15 @@
-//! Report generation: CSV series, markdown tables, and terminal ASCII
-//! plots of regret curves (what the paper's figures show, rendered for a
+//! Report generation: machine-readable experiment reports
+//! (`BENCH_*.json` — see [`run`] for the schema and [`compare`] for the
+//! CI gate), CSV series, markdown tables, and terminal ASCII plots of
+//! regret curves (what the paper's figures show, rendered for a
 //! terminal).
+
+pub mod compare;
+pub mod json;
+pub mod run;
+
+pub use compare::{compare_reports, CompareOutcome, Finding, Severity, Tolerances};
+pub use run::{detect_commit, fnv1a64, Direction, Kpi, Provenance, RunReport, TimingEntry, SCHEMA_VERSION};
 
 use crate::metrics::StepCurve;
 
@@ -19,7 +28,10 @@ pub fn curves_to_csv(series: &[(String, Vec<(f64, f64, f64)>)]) -> String {
 /// ASCII line plot of several step curves on a shared time axis.
 ///
 /// Each curve is sampled on a uniform grid and drawn with its own glyph;
-/// the y-axis is linear from 0 to the max initial value.
+/// the y-axis is linear from 0 to the **global** max over every curve's
+/// breakpoints — not just the initial values — so curves that rise above
+/// where they start (e.g. regret under a growing tenant population)
+/// render unclipped.
 pub fn ascii_plot(
     title: &str,
     curves: &[(String, StepCurve)],
@@ -103,6 +115,23 @@ mod tests {
         assert!(plot.contains("* = mdmt"));
         assert!(plot.contains("o = rr"));
         assert!(plot.lines().count() > 10);
+    }
+
+    #[test]
+    fn ascii_plot_scales_to_global_max_not_initial_values() {
+        // A curve that rises to 4× its initial value: the y-axis must
+        // cover the peak (glyph lands on the top row at the peak, not
+        // clipped at the initial value's height).
+        let rising = StepCurve::from_points(vec![(0.0, 1.0), (5.0, 4.0), (9.0, 4.0)]);
+        let flat = StepCurve::from_points(vec![(0.0, 1.0), (9.0, 1.0)]);
+        let plot = ascii_plot("load spike", &[("rising".into(), rising), ("flat".into(), flat)], 40, 10);
+        let lines: Vec<&str> = plot.lines().collect();
+        // Header advertises the global max...
+        assert!(lines[0].contains("0..4.000"), "{}", lines[0]);
+        // ...the top row carries the peak of the rising curve...
+        assert!(lines[1].contains('*'), "top row must show the rising curve's peak:\n{plot}");
+        // ...and the flat curve sits low (at 1/4 height), not on the top row.
+        assert!(!lines[1].contains('o'), "flat curve must not touch the top row:\n{plot}");
     }
 
     #[test]

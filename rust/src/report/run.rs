@@ -1,0 +1,393 @@
+//! Machine-readable experiment reports (`BENCH_*.json`).
+//!
+//! Every figure harness and the CLI sweep can emit a [`RunReport`]: a
+//! schema-stable, provenance-stamped JSON document with the KPIs the
+//! paper's figures plot (regret, time-to-cutoff, speedup, parity) plus
+//! optional wall-clock timing percentiles. CI diffs a fresh report
+//! against a checked-in baseline with [`super::compare`].
+//!
+//! **Determinism contract:** KPIs are pure functions of `(config, seed)`
+//! — the simulator runs in virtual time and the PRNG/`total_cmp` replay
+//! guarantees make them bit-stable — so a *smoke* report (the CI mode)
+//! serializes byte-identically across same-seed runs. Wall-clock timings
+//! are inherently non-reproducible, so [`RunReport::push_timing`] drops
+//! them in smoke mode; full runs carry them and `compare` treats them as
+//! warn-only.
+
+use super::json::{parse, Json, JsonError};
+use crate::bench::BenchStats;
+
+/// Version stamp written into every report; bump on breaking schema
+/// changes (the golden test in `tests/report_golden.rs` pins the layout).
+pub const SCHEMA_VERSION: u64 = 1;
+
+/// Which direction of change is an improvement for a KPI.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Direction {
+    /// Smaller is better (regret, time-to-cutoff, makespan).
+    LowerIsBetter,
+    /// Larger is better (speedup, parity fractions).
+    HigherIsBetter,
+}
+
+impl Direction {
+    fn as_str(self) -> &'static str {
+        match self {
+            Direction::LowerIsBetter => "lower",
+            Direction::HigherIsBetter => "higher",
+        }
+    }
+
+    fn from_str(s: &str) -> Result<Direction, String> {
+        match s {
+            "lower" => Ok(Direction::LowerIsBetter),
+            "higher" => Ok(Direction::HigherIsBetter),
+            other => Err(format!("unknown KPI direction {other:?}")),
+        }
+    }
+}
+
+/// One named scalar quality metric.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Kpi {
+    /// Hierarchical name, e.g. `azure/mdmt@M1/cumulative_regret`.
+    pub name: String,
+    /// The measured value (always finite; non-finite pushes are dropped).
+    pub value: f64,
+    /// Which direction is an improvement.
+    pub better: Direction,
+}
+
+/// One wall-clock timing entry (nanosecond percentiles).
+#[derive(Clone, Debug, PartialEq)]
+pub struct TimingEntry {
+    /// Benchmark label.
+    pub name: String,
+    /// Timed iterations behind the percentiles.
+    pub iters: u64,
+    /// Mean iteration time in ns.
+    pub mean_ns: f64,
+    /// Median in ns.
+    pub p50_ns: f64,
+    /// 95th percentile in ns.
+    pub p95_ns: f64,
+    /// 99th percentile in ns.
+    pub p99_ns: f64,
+}
+
+impl TimingEntry {
+    /// Mean-only entry (percentiles collapsed onto the mean) for sources
+    /// that track totals rather than samples, e.g. the simulator's
+    /// per-decision wall time.
+    pub fn flat(name: impl Into<String>, iters: u64, mean_ns: f64) -> TimingEntry {
+        TimingEntry { name: name.into(), iters, mean_ns, p50_ns: mean_ns, p95_ns: mean_ns, p99_ns: mean_ns }
+    }
+}
+
+impl From<&BenchStats> for TimingEntry {
+    fn from(s: &BenchStats) -> TimingEntry {
+        TimingEntry {
+            name: s.name.clone(),
+            iters: s.iters as u64,
+            mean_ns: s.mean.as_nanos() as f64,
+            p50_ns: s.p50.as_nanos() as f64,
+            p95_ns: s.p95.as_nanos() as f64,
+            p99_ns: s.p99.as_nanos() as f64,
+        }
+    }
+}
+
+/// Where the numbers came from.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Provenance {
+    /// Git commit (env `MMGPEI_COMMIT`/`GITHUB_SHA`, else `git rev-parse`,
+    /// else `"unknown"`).
+    pub commit: String,
+    /// Base seed of the sweep.
+    pub seed: u64,
+    /// FNV-1a hash of the canonical config string(s); folded with
+    /// [`RunReport::fold_config`].
+    pub config_hash: String,
+    /// Whether this was a reduced deterministic smoke run.
+    pub smoke: bool,
+}
+
+/// A full experiment report: provenance + KPIs + timings.
+#[derive(Clone, Debug, PartialEq)]
+pub struct RunReport {
+    /// Report name (the figure/bench it came from, e.g. `fig2`).
+    pub name: String,
+    /// Provenance stamp.
+    pub provenance: Provenance,
+    /// Quality metrics — hard-gated by `compare`.
+    pub kpis: Vec<Kpi>,
+    /// Wall-clock timings — warn-only in `compare`, empty in smoke mode.
+    pub timings: Vec<TimingEntry>,
+}
+
+/// 64-bit FNV-1a over bytes: tiny, stable, dependency-free — exactly
+/// what a config fingerprint needs (not cryptographic).
+pub fn fnv1a64(bytes: &[u8]) -> u64 {
+    let mut hash: u64 = 0xcbf29ce484222325;
+    for &b in bytes {
+        hash ^= b as u64;
+        hash = hash.wrapping_mul(0x100000001b3);
+    }
+    hash
+}
+
+/// Discover the current commit without failing: explicit env override,
+/// then the CI-provided sha, then asking git, then `"unknown"`.
+pub fn detect_commit() -> String {
+    for key in ["MMGPEI_COMMIT", "GITHUB_SHA"] {
+        if let Ok(v) = std::env::var(key) {
+            if !v.is_empty() {
+                return v;
+            }
+        }
+    }
+    if let Ok(out) = std::process::Command::new("git").args(["rev-parse", "HEAD"]).output() {
+        if out.status.success() {
+            if let Ok(s) = String::from_utf8(out.stdout) {
+                return s.trim().to_string();
+            }
+        }
+    }
+    "unknown".to_string()
+}
+
+impl RunReport {
+    /// New empty report; the commit is auto-detected.
+    pub fn new(name: impl Into<String>, seed: u64, smoke: bool) -> RunReport {
+        RunReport {
+            name: name.into(),
+            provenance: Provenance {
+                commit: detect_commit(),
+                seed,
+                config_hash: format!("{:016x}", fnv1a64(b"")),
+                smoke,
+            },
+            kpis: Vec::new(),
+            timings: Vec::new(),
+        }
+    }
+
+    /// Fold a canonical config string into the provenance hash. Benches
+    /// that sweep several configs call this once per config, in a fixed
+    /// order, so the hash fingerprints the whole run.
+    pub fn fold_config(&mut self, canonical: &str) {
+        let prior = u64::from_str_radix(&self.provenance.config_hash, 16).unwrap_or(0);
+        let mut bytes = prior.to_be_bytes().to_vec();
+        bytes.extend_from_slice(canonical.as_bytes());
+        self.provenance.config_hash = format!("{:016x}", fnv1a64(&bytes));
+    }
+
+    /// Append a KPI. Non-finite values are dropped (a `t ≤ cutoff` that
+    /// was never reached is "absent", not "NaN") — `compare` flags KPIs
+    /// that disappear relative to the baseline.
+    pub fn push_kpi(&mut self, name: impl Into<String>, value: f64, better: Direction) {
+        if value.is_finite() {
+            self.kpis.push(Kpi { name: name.into(), value, better });
+        }
+    }
+
+    /// Append a wall-clock timing entry — dropped in smoke mode so
+    /// same-seed smoke reports stay byte-identical.
+    pub fn push_timing(&mut self, entry: TimingEntry) {
+        if !self.provenance.smoke {
+            self.timings.push(entry);
+        }
+    }
+
+    /// Serialize to the canonical JSON document.
+    pub fn to_json(&self) -> Json {
+        Json::Obj(vec![
+            ("schema_version".into(), Json::Num(SCHEMA_VERSION as f64)),
+            ("name".into(), Json::str(&self.name)),
+            (
+                "provenance".into(),
+                Json::Obj(vec![
+                    ("commit".into(), Json::str(&self.provenance.commit)),
+                    ("seed".into(), Json::Num(self.provenance.seed as f64)),
+                    ("config_hash".into(), Json::str(&self.provenance.config_hash)),
+                    ("smoke".into(), Json::Bool(self.provenance.smoke)),
+                ]),
+            ),
+            (
+                "kpis".into(),
+                Json::Arr(
+                    self.kpis
+                        .iter()
+                        .map(|k| {
+                            Json::Obj(vec![
+                                ("name".into(), Json::str(&k.name)),
+                                ("value".into(), Json::num(k.value)),
+                                ("better".into(), Json::str(k.better.as_str())),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ),
+            (
+                "timings".into(),
+                Json::Arr(
+                    self.timings
+                        .iter()
+                        .map(|t| {
+                            Json::Obj(vec![
+                                ("name".into(), Json::str(&t.name)),
+                                ("iters".into(), Json::num(t.iters as f64)),
+                                ("mean_ns".into(), Json::num(t.mean_ns)),
+                                ("p50_ns".into(), Json::num(t.p50_ns)),
+                                ("p95_ns".into(), Json::num(t.p95_ns)),
+                                ("p99_ns".into(), Json::num(t.p99_ns)),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ),
+        ])
+    }
+
+    /// Canonical serialized form (what `--json` writes).
+    pub fn to_json_string(&self) -> String {
+        self.to_json().to_pretty()
+    }
+
+    /// Write to `path`, creating parent directories.
+    pub fn write(&self, path: &str) -> std::io::Result<()> {
+        super::write_report(path, &self.to_json_string())
+    }
+
+    /// Parse a report back from JSON text (the `compare` entry point).
+    pub fn from_json_str(text: &str) -> Result<RunReport, String> {
+        let doc = parse(text).map_err(|e: JsonError| e.to_string())?;
+        let version = doc
+            .get("schema_version")
+            .and_then(Json::as_u64)
+            .ok_or("missing schema_version")?;
+        if version != SCHEMA_VERSION {
+            return Err(format!("unsupported schema_version {version} (expected {SCHEMA_VERSION})"));
+        }
+        let name = doc.get("name").and_then(Json::as_str).ok_or("missing name")?.to_string();
+        let prov = doc.get("provenance").ok_or("missing provenance")?;
+        let provenance = Provenance {
+            commit: prov.get("commit").and_then(Json::as_str).ok_or("missing provenance.commit")?.to_string(),
+            seed: prov.get("seed").and_then(Json::as_u64).ok_or("missing provenance.seed")?,
+            config_hash: prov
+                .get("config_hash")
+                .and_then(Json::as_str)
+                .ok_or("missing provenance.config_hash")?
+                .to_string(),
+            smoke: prov.get("smoke").and_then(Json::as_bool).ok_or("missing provenance.smoke")?,
+        };
+        let mut kpis = Vec::new();
+        for k in doc.get("kpis").and_then(Json::as_arr).ok_or("missing kpis")? {
+            kpis.push(Kpi {
+                name: k.get("name").and_then(Json::as_str).ok_or("kpi missing name")?.to_string(),
+                value: k.get("value").and_then(Json::as_f64).ok_or("kpi missing value")?,
+                better: Direction::from_str(k.get("better").and_then(Json::as_str).ok_or("kpi missing better")?)?,
+            });
+        }
+        let mut timings = Vec::new();
+        for t in doc.get("timings").and_then(Json::as_arr).ok_or("missing timings")? {
+            let field = |key: &str| t.get(key).and_then(Json::as_f64).ok_or_else(|| format!("timing missing {key}"));
+            timings.push(TimingEntry {
+                name: t.get("name").and_then(Json::as_str).ok_or("timing missing name")?.to_string(),
+                iters: t.get("iters").and_then(Json::as_u64).ok_or("timing missing iters")?,
+                mean_ns: field("mean_ns")?,
+                p50_ns: field("p50_ns")?,
+                p95_ns: field("p95_ns")?,
+                p99_ns: field("p99_ns")?,
+            });
+        }
+        Ok(RunReport { name, provenance, kpis, timings })
+    }
+
+    /// Read a report from a file.
+    pub fn from_file(path: &str) -> Result<RunReport, String> {
+        let text = std::fs::read_to_string(path).map_err(|e| format!("reading {path}: {e}"))?;
+        Self::from_json_str(&text).map_err(|e| format!("{path}: {e}"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> RunReport {
+        let mut r = RunReport {
+            name: "figX".into(),
+            provenance: Provenance {
+                commit: "deadbeef".into(),
+                seed: 0,
+                config_hash: "0000000000000000".into(),
+                smoke: true,
+            },
+            kpis: Vec::new(),
+            timings: Vec::new(),
+        };
+        r.fold_config("dataset=azure");
+        r.push_kpi("azure/mdmt@M1/cumulative_regret", 12.5, Direction::LowerIsBetter);
+        r.push_kpi("azure/speedup_t0.05", 3.25, Direction::HigherIsBetter);
+        r
+    }
+
+    #[test]
+    fn roundtrips_through_json() {
+        let r = sample();
+        let parsed = RunReport::from_json_str(&r.to_json_string()).unwrap();
+        assert_eq!(parsed, r);
+    }
+
+    #[test]
+    fn non_finite_kpis_are_dropped() {
+        let mut r = sample();
+        let n = r.kpis.len();
+        r.push_kpi("nan", f64::NAN, Direction::LowerIsBetter);
+        r.push_kpi("inf", f64::INFINITY, Direction::LowerIsBetter);
+        assert_eq!(r.kpis.len(), n);
+    }
+
+    #[test]
+    fn smoke_mode_drops_wall_clock_timings() {
+        let mut r = sample();
+        assert!(r.provenance.smoke);
+        r.push_timing(TimingEntry::flat("decision", 10, 1000.0));
+        assert!(r.timings.is_empty());
+        r.provenance.smoke = false;
+        r.push_timing(TimingEntry::flat("decision", 10, 1000.0));
+        assert_eq!(r.timings.len(), 1);
+        assert_eq!(r.timings[0].p99_ns, 1000.0);
+    }
+
+    #[test]
+    fn fold_config_is_order_sensitive_and_stable() {
+        let mut a = RunReport::new("x", 0, true);
+        let mut b = RunReport::new("x", 0, true);
+        a.fold_config("one");
+        a.fold_config("two");
+        b.fold_config("one");
+        b.fold_config("two");
+        assert_eq!(a.provenance.config_hash, b.provenance.config_hash);
+        let mut c = RunReport::new("x", 0, true);
+        c.fold_config("two");
+        c.fold_config("one");
+        assert_ne!(a.provenance.config_hash, c.provenance.config_hash);
+    }
+
+    #[test]
+    fn schema_version_is_enforced() {
+        let text = sample().to_json_string().replace("\"schema_version\": 1", "\"schema_version\": 99");
+        let err = RunReport::from_json_str(&text).unwrap_err();
+        assert!(err.contains("schema_version"), "{err}");
+    }
+
+    #[test]
+    fn fnv_matches_reference_vectors() {
+        // Published FNV-1a 64-bit test vectors.
+        assert_eq!(fnv1a64(b""), 0xcbf29ce484222325);
+        assert_eq!(fnv1a64(b"a"), 0xaf63dc4c8601ec8c);
+        assert_eq!(fnv1a64(b"foobar"), 0x85944171f73967e8);
+    }
+}

@@ -1,0 +1,133 @@
+//! Report-layer contract tests: the `BENCH_*.json` schema is pinned by a
+//! golden file, same-seed smoke runs must serialize byte-identically, and
+//! the `compare` gate must catch an injected KPI regression end-to-end
+//! (serialize → perturb → parse → compare), mirroring what CI's
+//! `bench-smoke` job does with the real bench binaries.
+
+use mmgpei::cli::run_experiment;
+use mmgpei::config::ExperimentConfig;
+use mmgpei::report::{compare_reports, Direction, Provenance, RunReport, TimingEntry, Tolerances};
+
+/// The pinned schema. If this test fails because the layout changed on
+/// purpose, bump `report::SCHEMA_VERSION`, update this golden, and
+/// refresh `baselines/` (see baselines/README.md).
+const GOLDEN: &str = r#"{
+  "schema_version": 1,
+  "name": "golden",
+  "provenance": {
+    "commit": "0000abcd",
+    "seed": 7,
+    "config_hash": "00000000deadbeef",
+    "smoke": true
+  },
+  "kpis": [
+    {
+      "name": "azure/mdmt@M1/cumulative_regret",
+      "value": 12.25,
+      "better": "lower"
+    },
+    {
+      "name": "speedup@M4",
+      "value": 3.5,
+      "better": "higher"
+    }
+  ],
+  "timings": [
+    {
+      "name": "decision_wall",
+      "iters": 64,
+      "mean_ns": 1532.5,
+      "p50_ns": 1532.5,
+      "p95_ns": 1532.5,
+      "p99_ns": 1532.5
+    }
+  ]
+}
+"#;
+
+fn golden_report() -> RunReport {
+    let mut r = RunReport {
+        name: "golden".into(),
+        provenance: Provenance {
+            commit: "0000abcd".into(),
+            seed: 7,
+            config_hash: "00000000deadbeef".into(),
+            smoke: true,
+        },
+        kpis: Vec::new(),
+        // Constructed directly: push_timing would (correctly) drop
+        // wall-clock entries from a smoke report, but the golden must pin
+        // the timing schema too.
+        timings: vec![TimingEntry::flat("decision_wall", 64, 1532.5)],
+    };
+    r.push_kpi("azure/mdmt@M1/cumulative_regret", 12.25, Direction::LowerIsBetter);
+    r.push_kpi("speedup@M4", 3.5, Direction::HigherIsBetter);
+    r
+}
+
+#[test]
+fn schema_matches_golden_file() {
+    assert_eq!(golden_report().to_json_string(), GOLDEN, "BENCH_*.json schema drifted — see this test's doc");
+}
+
+#[test]
+fn golden_parses_back_to_the_same_report() {
+    assert_eq!(RunReport::from_json_str(GOLDEN).unwrap(), golden_report());
+}
+
+fn tiny_cfg() -> ExperimentConfig {
+    let mut cfg = ExperimentConfig {
+        name: "determinism-probe".into(),
+        dataset: "synthetic".into(),
+        policies: vec!["mdmt".into(), "round-robin".into()],
+        devices: vec![1, 2],
+        seeds: 2,
+        ..Default::default()
+    };
+    cfg.synthetic.n_users = 6;
+    cfg.synthetic.n_models = 5;
+    cfg
+}
+
+/// One full smoke-report production pass: sweep → KPIs → canonical JSON.
+fn produce_report() -> String {
+    let cfg = tiny_cfg();
+    let results = run_experiment(&cfg).expect("tiny sweep");
+    let mut report = RunReport::new(cfg.name.clone(), 0, true);
+    results.push_kpis(&mut report, "synthetic/", &[0.05, 0.01]);
+    report.to_json_string()
+}
+
+#[test]
+fn same_seed_smoke_runs_serialize_byte_identically() {
+    let a = produce_report();
+    let b = produce_report();
+    assert_eq!(a, b, "two same-seed smoke runs must produce byte-identical reports");
+    // And the report is non-trivial: it carries real KPIs.
+    let parsed = RunReport::from_json_str(&a).unwrap();
+    assert!(parsed.kpis.len() >= 8, "expected KPIs for 4 cells, got {}", parsed.kpis.len());
+    assert!(parsed.timings.is_empty(), "smoke reports must not carry wall-clock timings");
+}
+
+#[test]
+fn injected_regression_fails_compare_end_to_end() {
+    let baseline_text = produce_report();
+    let baseline = RunReport::from_json_str(&baseline_text).unwrap();
+
+    // Identical candidate passes.
+    let candidate = RunReport::from_json_str(&baseline_text).unwrap();
+    let ok = compare_reports(&baseline, &candidate, &Tolerances::default());
+    assert!(!ok.failed(), "{}", ok.render());
+
+    // Perturb one regret KPI by +50% *in the serialized text* — the same
+    // injection CI's gate self-test performs on a real BENCH_*.json.
+    let kpi = baseline.kpis.iter().find(|k| k.name.ends_with("/cumulative_regret")).expect("regret KPI present");
+    let old = format!("\"value\": {}", kpi.value);
+    let new = format!("\"value\": {}", kpi.value * 1.5);
+    let perturbed_text = baseline_text.replacen(&old, &new, 1);
+    assert_ne!(perturbed_text, baseline_text, "perturbation must hit the serialized value");
+    let perturbed = RunReport::from_json_str(&perturbed_text).unwrap();
+    let out = compare_reports(&baseline, &perturbed, &Tolerances::default());
+    assert!(out.failed(), "injected +50% regret must fail the gate:\n{}", out.render());
+    assert!(out.render().contains("cumulative_regret"), "{}", out.render());
+}

@@ -1,0 +1,10 @@
+#!/usr/bin/env bash
+# Single source of truth for the figure-bench list, derived from the
+# [[bench]] targets declared in rust/Cargo.toml. Both CI's bench-smoke
+# job and scripts/refresh_baselines.sh iterate over this output, so a
+# new bench target is automatically gated the moment it is declared.
+set -euo pipefail
+cd "$(dirname "$0")/.."
+awk '/^\[\[bench\]\]/ { in_bench = 1; next }
+     /^\[/            { in_bench = 0 }
+     in_bench && /^name = / { gsub(/"/, "", $3); print $3 }' rust/Cargo.toml

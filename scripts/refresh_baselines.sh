@@ -1,0 +1,27 @@
+#!/usr/bin/env bash
+# Regenerate the checked-in CI smoke baselines (baselines/BENCH_*.json).
+#
+# Runs every figure harness twice in --smoke --json mode, verifies the
+# two same-seed reports are byte-identical (the determinism contract the
+# CI gate relies on), then installs them under baselines/. Commit the
+# result. See baselines/README.md for when refreshing is appropriate.
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+BENCHES="$(scripts/bench_list.sh)"
+TMP="$(mktemp -d)"
+trap 'rm -rf "$TMP"' EXIT
+
+for b in $BENCHES; do
+  echo "== $b =="
+  cargo bench --bench "$b" -- --smoke --json "$TMP/BENCH_$b.json"
+  cargo bench --bench "$b" -- --smoke --json "$TMP/second/BENCH_$b.json"
+  cmp "$TMP/BENCH_$b.json" "$TMP/second/BENCH_$b.json" || {
+    echo "error: $b smoke report is not deterministic" >&2
+    exit 1
+  }
+  install -D "$TMP/BENCH_$b.json" "baselines/BENCH_$b.json"
+done
+
+git --no-pager diff --stat -- baselines/ || true
+echo "baselines refreshed; review and commit baselines/BENCH_*.json"
