@@ -20,6 +20,8 @@ use mmgpei::report::{Direction, RunReport};
 fn main() {
     let opts = BenchOpts::from_env_args();
     let seeds = opts.seeds("MMGPEI_SEEDS", 8, 2);
+    let threads = opts.threads();
+    let pool = mmgpei::pool::WorkerPool::new(threads);
     let mut report = RunReport::new("ablations", 0, opts.smoke);
     for dataset in ["azure", "deeplearning"] {
         let cfg = ExperimentConfig {
@@ -36,6 +38,8 @@ fn main() {
             ],
             devices: vec![1],
             seeds,
+            // Seed-sweep pool width; byte-identical output at any value.
+            threads,
             ..Default::default()
         };
         let res = run_experiment(&cfg).expect("ablation sweep");
@@ -75,8 +79,9 @@ fn main() {
     let mut table = Table::new(&["ĉ rel. noise σ", "cumulative regret", "vs exact costs"]);
     let mut exact = f64::NAN;
     for &rel_std in noise_levels {
-        let mut regrets = Vec::new();
-        for seed in 0..seeds {
+        // Independent seeds → pool shards, merged in seed order.
+        let regrets = pool.map_indexed(seeds as usize, |seed| {
+            let seed = seed as u64;
             let cfg = ExperimentConfig {
                 dataset: "azure".into(),
                 policies: vec!["mdmt".into()],
@@ -96,8 +101,8 @@ fn main() {
                 &mmgpei::sim::SimConfig::default(),
                 Some(&est),
             );
-            regrets.push(r.cumulative_regret);
-        }
+            r.cumulative_regret
+        });
         let (mean, std) = mmgpei::metrics::mean_std(&regrets);
         if rel_std == 0.0 {
             exact = mean;
@@ -126,6 +131,7 @@ fn main() {
                 policies: vec!["mdmt".into(), "mdmt-fantasy".into()],
                 devices: vec![m],
                 seeds,
+                threads,
                 ..Default::default()
             };
             let res = run_experiment(&cfg).expect("A5 sweep");
@@ -185,10 +191,8 @@ fn main() {
         ("fitted (gp::fit)", "fitted", &fitted_kern),
         ("wrong (ℓ×4, σ²/4)", "wrong", &wrong_kern),
     ] {
-        let mut regrets = Vec::new();
-        let mut hits = Vec::new();
-        for seed in 0..seeds {
-            let (mut problem, truth) = synthetic_gp(&syn, 0x517 + seed);
+        let per_seed = pool.map_indexed(seeds as usize, |seed| {
+            let (mut problem, truth) = synthetic_gp(&syn, 0x517 + seed as u64);
             // Swap the scheduler's prior covariance for this variant's
             // block-diagonal gram (per-user independence preserved).
             let gram = kern.gram(&pts);
@@ -207,11 +211,10 @@ fn main() {
                 &mut policy,
                 &mmgpei::sim::SimConfig { n_devices: 2, ..Default::default() },
             );
-            regrets.push(r.cumulative_regret);
-            if let Some(t) = r.time_to(0.05) {
-                hits.push(t);
-            }
-        }
+            (r.cumulative_regret, r.time_to(0.05))
+        });
+        let regrets: Vec<f64> = per_seed.iter().map(|&(r, _)| r).collect();
+        let hits: Vec<f64> = per_seed.iter().filter_map(|&(_, t)| t).collect();
         let (rm, rs) = mmgpei::metrics::mean_std(&regrets);
         let (hm, _) = mmgpei::metrics::mean_std(&hits);
         report.push_kpi(format!("a4/{kpi_key}/cumulative_regret"), rm, Direction::LowerIsBetter);

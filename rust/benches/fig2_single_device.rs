@@ -26,6 +26,8 @@ fn main() {
             policies: vec!["mdmt".into(), "round-robin".into(), "random".into()],
             devices: vec![1],
             seeds,
+            // Seed-sweep pool width; byte-identical output at any value.
+            threads: opts.threads(),
             ..Default::default()
         };
         let res = run_experiment(&cfg).expect("fig2 sweep");

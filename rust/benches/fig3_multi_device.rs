@@ -24,6 +24,8 @@ fn main() {
             policies: vec!["mdmt".into()],
             devices: vec![1, 2, 4, 8],
             seeds,
+            // Seed-sweep pool width; byte-identical output at any value.
+            threads: opts.threads(),
             ..Default::default()
         };
         let res = run_experiment(&cfg).expect("fig3 sweep");

@@ -13,13 +13,15 @@ use mmgpei::cli::run_experiment;
 use mmgpei::config::ExperimentConfig;
 use mmgpei::report::{Direction, RunReport};
 
-fn run(dataset: &str, devices: usize, seeds: u64, report: &mut RunReport) {
+fn run(dataset: &str, devices: usize, seeds: u64, threads: usize, report: &mut RunReport) {
     let cfg = ExperimentConfig {
         name: format!("fig4-{dataset}-m{devices}"),
         dataset: dataset.into(),
         policies: vec!["mdmt".into(), "round-robin".into(), "random".into()],
         devices: vec![devices],
         seeds,
+        // Seed-sweep pool width; byte-identical output at any value.
+        threads,
         ..Default::default()
     };
     let res = run_experiment(&cfg).expect("fig4 sweep");
@@ -61,10 +63,11 @@ fn main() {
     let opts = BenchOpts::from_env_args();
     let seeds = opts.seeds("MMGPEI_SEEDS", 8, 2);
     let mut report = RunReport::new("fig4_four_devices", 0, opts.smoke);
-    run("azure", 4, seeds, &mut report);
-    run("deeplearning", 4, seeds, &mut report);
+    let threads = opts.threads();
+    run("azure", 4, seeds, threads, &mut report);
+    run("deeplearning", 4, seeds, threads, &mut report);
     // The paper's saturation observation: M = 8 on Azure (9 users).
-    run("azure", 8, seeds, &mut report);
+    run("azure", 8, seeds, threads, &mut report);
     println!("\npaper shape: MDMT wins at M=4 on Azure; ratio → ≈1 at M=8 (9 users only).");
     opts.finish(&report);
 }

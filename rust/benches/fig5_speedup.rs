@@ -16,6 +16,7 @@
 
 use mmgpei::bench::{BenchOpts, Table};
 use mmgpei::metrics::mean_std;
+use mmgpei::pool::WorkerPool;
 use mmgpei::report::{Direction, RunReport};
 use mmgpei::sched::MmGpEi;
 use mmgpei::sim::{simulate, SimConfig};
@@ -54,10 +55,12 @@ fn main() {
         "arms run (mean)",
     ]);
     let mut base = None;
+    // Repeats are independent simulations: shard them across the worker
+    // pool (fixed seed→slot mapping, merged in seed order → the report is
+    // byte-identical at any MMGPEI_THREADS).
+    let pool = WorkerPool::new(opts.threads());
     for &m in device_counts {
-        let mut times = Vec::with_capacity(repeats);
-        let mut arms_run = Vec::with_capacity(repeats);
-        for seed in 0..repeats {
+        let per_seed = pool.map_indexed(repeats, |seed| {
             let (problem, truth) = synthetic_gp(&cfg, 9000 + seed as u64);
             let mut policy = MmGpEi::new(&problem);
             let r = simulate(
@@ -73,12 +76,14 @@ fn main() {
                     stop_at_cutoff: Some(cutoff),
                 },
             );
-            times.push(r.time_to(cutoff).expect("cutoff reached"));
+            let t_hit = r.time_to(cutoff).expect("cutoff reached");
             // Count how many arms had been *dispatched* by the cutoff time
             // (the exploration cost of convergence).
-            let t_hit = r.time_to(cutoff).unwrap();
-            arms_run.push(r.observations.iter().filter(|o| o.start <= t_hit).count() as f64);
-        }
+            let dispatched = r.observations.iter().filter(|o| o.start <= t_hit).count() as f64;
+            (t_hit, dispatched)
+        });
+        let times: Vec<f64> = per_seed.iter().map(|&(t, _)| t).collect();
+        let arms_run: Vec<f64> = per_seed.iter().map(|&(_, a)| a).collect();
         let (mean, std) = mean_std(&times);
         let b = *base.get_or_insert(mean);
         report.push_kpi(format!("t_le_{cutoff}@M{m}"), mean, Direction::LowerIsBetter);

@@ -9,6 +9,9 @@
 //!    cache against the full per-decision rescan it replaces, on a
 //!    many-users workload — amortized per-decision cost over a whole
 //!    serving run, with an up-front bit-identical argmax check;
+//!  * **scaling sweep** (§Perf P2): ns/decision and ns/observe across
+//!    tenant counts for the fused observe kernels + tournament argmax,
+//!    with tournament-vs-rescan parity hard-gated at every size;
 //!  * the AOT XLA artifact: one full `scheduler_step` execution via PJRT
 //!    (requires `--features xla` + `make artifacts`; skipped otherwise);
 //!  * end-to-end decision latency inside the live coordinator.
@@ -39,7 +42,8 @@ fn main() {
         micro_benches(&mut report);
     }
 
-    let mismatches = cached_vs_rescan(&mut report, opts.smoke);
+    let mut mismatches = cached_vs_rescan(&mut report, opts.smoke);
+    mismatches += scaling_sweep(&mut report, opts.smoke);
 
     if !opts.smoke {
         coordinator_latency(&mut report);
@@ -49,7 +53,7 @@ fn main() {
     // and it must break CI with or without a checked-in baseline.
     opts.finish(&report);
     if mismatches > 0 {
-        eprintln!("FAIL: {mismatches} cached-vs-rescan argmax mismatches (must be 0)");
+        eprintln!("FAIL: {mismatches} argmax parity mismatches vs the rescan oracle (must be 0)");
         std::process::exit(1);
     }
 }
@@ -168,9 +172,11 @@ fn micro_benches(report: &mut RunReport) {
 }
 
 /// One full serving run driven through the cached dirty-set scorer:
-/// observe → incumbent update → eirate, for every arm in `order`.
-/// Returns a fold of the scores (keeps the optimizer honest) and appends
-/// each decision's argmax to `picks` when provided.
+/// observe → incumbent update → eirate + tournament-tree argmax, for
+/// every arm in `order`. Returns a fold of the scores (keeps the
+/// optimizer honest) and appends each decision's tree-served argmax to
+/// `picks` when provided — the picks the rescan oracle's linear scan
+/// must reproduce bit for bit.
 fn drive_cached(
     problem: &Problem,
     truth: &Truth,
@@ -190,7 +196,7 @@ fn drive_cached(
         let scores = backend.eirate(&best, &selected, true);
         acc += scores[scores.len() - 1];
         if let Some(p) = picks.as_mut() {
-            p.push(argmax(scores));
+            p.push(backend.select_arm(&best, &selected, true));
         }
     }
     acc
@@ -239,7 +245,9 @@ fn argmax(scores: &[f64]) -> Option<usize> {
 /// many-users scenario (64 tenants × 16 models, per-user independent
 /// blocks), amortized per-decision cost of cached vs full-rescan scoring
 /// over a half-exhausting serving run, with bit-identical argmax
-/// verification up front. The mismatch count lands in the report as a
+/// verification up front (the cached side's picks come from the
+/// tournament-tree index, so this gate also pins the tree against the
+/// linear-scan oracle). The mismatch count lands in the report as a
 /// parity KPI *and* is returned to `main`, which exits non-zero on any
 /// divergence — the invariant holds in every mode, baseline or not.
 fn cached_vs_rescan(report: &mut RunReport, smoke: bool) -> usize {
@@ -321,6 +329,100 @@ fn cached_vs_rescan(report: &mut RunReport, smoke: bool) -> usize {
     }
     println!("{}", table.to_markdown());
     println!("(selections verified bit-identical before timing; target ≥ 5× on 64 users)");
+    total_mismatches
+}
+
+/// §Perf P2 — user-count scaling sweep: how the fused observe kernels and
+/// the tournament argmax hold up as the tenant count grows. Per size:
+///
+/// * **parity gate** (every mode, incl. `--smoke`): the tree-served picks
+///   of a half-exhausting serving run must match the rescan oracle's
+///   linear scan bit for bit; mismatches land as a hard-gated KPI and in
+///   `main`'s exit code;
+/// * **ns/decision** and **ns/observe** (full runs only): amortized
+///   serving cost per decision (observe + incumbent fold + dirty rescore
+///   + tree argmax) and per fused GP observation, as both KPIs
+///   (`scaling/ns_per_*` — regressions flagged by `mmgpei compare`) and
+///   timing entries. Smoke reports stay byte-identical because wall-clock
+///   numbers are excluded there by construction.
+fn scaling_sweep(report: &mut RunReport, smoke: bool) -> usize {
+    println!("\n=== §Perf P2: user-count scaling (fused observe + tournament argmax) ===\n");
+    let sizes: &[(usize, usize)] = if smoke { &[(8, 8), (16, 8)] } else { &[(16, 16), (32, 16), (64, 16), (96, 16)] };
+    let bench = Bencher {
+        warmup: Duration::from_millis(100),
+        budget: Duration::from_millis(1000),
+        max_iters: 10_000,
+        min_iters: 3,
+    };
+    let mut table = Table::new(&["users", "L (arms)", "decisions", "ns/decision", "ns/observe"]);
+    let mut total_mismatches = 0usize;
+    for &(n_users, n_models) in sizes {
+        let cfg = SyntheticConfig { n_users, n_models, ..Default::default() };
+        report.fold_config(&format!("p2 n_users={n_users} n_models={n_models}"));
+        let (problem, truth) = synthetic_gp(&cfg, 0x5CA1E);
+        let l = problem.n_arms();
+        let mut order: Vec<usize> = (0..l / 2).map(|i| (i * 7 + 3) % l).collect();
+        order.sort_unstable();
+        order.dedup();
+        let n_decisions = order.len();
+
+        // Parity gate: tournament-tree picks vs the rescan oracle.
+        let mut picks_tree = Vec::with_capacity(n_decisions);
+        let mut picks_rescan = Vec::with_capacity(n_decisions);
+        drive_cached(&problem, &truth, &order, Some(&mut picks_tree));
+        drive_rescan(&problem, &truth, &order, Some(&mut picks_rescan));
+        let mismatches = picks_tree.iter().zip(&picks_rescan).filter(|(t, r)| t != r).count();
+        total_mismatches += mismatches;
+        report.push_kpi(
+            format!("parity/tournament_vs_rescan_mismatches@u{n_users}x{n_models}"),
+            mismatches as f64,
+            Direction::LowerIsBetter,
+        );
+        println!(
+            "parity u{n_users}x{n_models}: {mismatches}/{n_decisions} diverging tournament-vs-rescan picks (must be 0)"
+        );
+        if smoke {
+            continue; // Wall-clock numbers are noise; smoke gates parity only.
+        }
+
+        // ns/decision: one full serving run (observe → incumbent fold →
+        // dirty rescore → tree argmax per decision), amortized.
+        let s_drive = bench.run("drive", || black_box(drive_cached(&problem, &truth, &order, None)));
+        let ns_decision = s_drive.mean.as_nanos() as f64 / n_decisions as f64;
+        // ns/observe: the fused GP observation pass alone, amortized over
+        // a fresh sequential run (same protocol as §P1's observe group).
+        let s_obs = bench.run("observe", || {
+            let mut gp = mmgpei::gp::Gp::new(problem.prior_mean.clone(), problem.prior_cov.clone());
+            for &a in &order {
+                gp.observe(a, truth.z[a]);
+            }
+            black_box(gp.posterior_mean(0))
+        });
+        let ns_observe = s_obs.mean.as_nanos() as f64 / n_decisions as f64;
+        report.push_kpi(format!("scaling/ns_per_decision@u{n_users}x{n_models}"), ns_decision, Direction::LowerIsBetter);
+        report.push_kpi(format!("scaling/ns_per_observe@u{n_users}x{n_models}"), ns_observe, Direction::LowerIsBetter);
+        report.push_timing(TimingEntry::flat(
+            format!("p2/ns_per_decision@u{n_users}x{n_models}"),
+            n_decisions as u64,
+            ns_decision,
+        ));
+        report.push_timing(TimingEntry::flat(
+            format!("p2/ns_per_observe@u{n_users}x{n_models}"),
+            n_decisions as u64,
+            ns_observe,
+        ));
+        table.row(vec![
+            n_users.to_string(),
+            l.to_string(),
+            n_decisions.to_string(),
+            format!("{ns_decision:.0}"),
+            format!("{ns_observe:.0}"),
+        ]);
+    }
+    if !smoke {
+        println!("{}", table.to_markdown());
+        println!("(ns/decision should grow sub-linearly in users: dirty sets are per-user blocks)");
+    }
     total_mismatches
 }
 

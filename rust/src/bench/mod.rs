@@ -215,6 +215,16 @@ impl BenchOpts {
         env_override.unwrap_or(full)
     }
 
+    /// Worker-pool width for this bench run: `MMGPEI_THREADS` wins, else
+    /// 1 in smoke mode (the CI preset) or the machine's parallelism
+    /// (capped) for full runs. Unlike `MMGPEI_SEEDS`, the env knob *is*
+    /// honored in smoke mode — thread count cannot change any report
+    /// byte (the pool's determinism contract, which CI enforces by
+    /// `cmp`-ing `MMGPEI_THREADS=1` vs `=4` smoke reports).
+    pub fn threads(&self) -> usize {
+        crate::pool::resolve_threads(self.smoke)
+    }
+
     /// Write `report` to `--json` if requested (no-op otherwise).
     pub fn finish(&self, report: &crate::report::RunReport) {
         if let Some(path) = &self.json {

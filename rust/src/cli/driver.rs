@@ -5,6 +5,7 @@
 
 use crate::config::{Backend, ExperimentConfig};
 use crate::metrics::{aggregate_curves, mean_std, time_grid, StepCurve};
+use crate::pool::WorkerPool;
 use crate::prng::Rng;
 use crate::problem::{Problem, Truth};
 use crate::report::{Direction, RunReport, TimingEntry};
@@ -18,12 +19,18 @@ use crate::workload::{azure, deeplearning, synthetic_gp};
 /// Vocabulary: `mdmt` (Algorithm 1), `mdmt-nocost` (EI-only ablation),
 /// `mdmt-indep` (independent-GP ablation), `round-robin`, `random`,
 /// `oracle`.
+///
+/// `policy_pool` is the worker pool handed to the per-user-GP policies'
+/// internal shards; pass `WorkerPool::new(1)` when the caller already
+/// parallelizes at a coarser level (e.g. the seed sweep) so thread
+/// counts don't multiply.
 pub fn make_policy(
     name: &str,
     problem: &Problem,
     truth: &Truth,
     seed: u64,
     backend: Backend,
+    policy_pool: &WorkerPool,
 ) -> Result<Box<dyn Policy>, String> {
     Ok(match name {
         "mdmt" => match backend {
@@ -35,12 +42,12 @@ pub fn make_policy(
             }
         },
         "mdmt-nocost" => Box::new(MmGpEi::cost_insensitive(problem)),
-        "mdmt-indep" => Box::new(MmGpEiIndep::new(problem)),
+        "mdmt-indep" => Box::new(MmGpEiIndep::with_pool(problem, policy_pool.clone())),
         "mdmt-fantasy" => Box::new(crate::sched::MmGpEiFantasy::new(problem)),
         "ucb-mdmt" => Box::new(crate::sched::GpUcbMdmt::new(problem)),
-        "ucb-round-robin" => Box::new(crate::sched::GpUcbRoundRobin::new(problem)),
-        "round-robin" => Box::new(GpEiRoundRobin::new(problem)),
-        "random" => Box::new(GpEiRandom::new(problem, seed ^ 0x5EED)),
+        "ucb-round-robin" => Box::new(crate::sched::GpUcbRoundRobin::with_pool(problem, policy_pool.clone())),
+        "round-robin" => Box::new(GpEiRoundRobin::with_pool(problem, policy_pool.clone())),
+        "random" => Box::new(GpEiRandom::with_pool(problem, seed ^ 0x5EED, policy_pool.clone())),
         "oracle" => Box::new(Oracle::new(problem, truth)),
         other => return Err(format!("unknown policy {other:?}")),
     })
@@ -134,17 +141,30 @@ impl ExperimentResults {
 }
 
 /// Run the full sweep described by `cfg`.
+///
+/// Seeds within each (policy, devices) cell are independent simulations,
+/// so they shard across the worker pool (`cfg.threads` /
+/// `MMGPEI_THREADS`); each worker builds, runs, and drops its own policy
+/// instance, and the per-seed results merge in seed order — the sweep's
+/// KPIs are byte-identical at any thread count.
 pub fn run_experiment(cfg: &ExperimentConfig) -> Result<ExperimentResults, String> {
     cfg.validate()?;
+    let pool = WorkerPool::new(cfg.effective_threads());
+    // One level of parallelism: the sweep owns it, so every policy it
+    // constructs gets a serial pool (thread counts must not multiply,
+    // and an explicit `threads = 1` config means *serial*, full stop).
+    // Policy-internal sharding is for the single-run serving paths —
+    // `mmgpei serve`, the coordinator examples — which construct
+    // policies against the env-resolved pool directly.
+    let policy_pool = WorkerPool::new(1);
     let mut cells = Vec::new();
     for policy_name in &cfg.policies {
         for &devices in &cfg.devices {
-            let mut runs = Vec::with_capacity(cfg.seeds as usize);
-            for seed in 0..cfg.seeds {
+            let seed_runs = pool.map_indexed(cfg.seeds as usize, |seed| {
+                let seed = seed as u64;
                 let (problem, truth) = make_instance(cfg, seed)?;
-                let mut policy =
-                    make_policy(policy_name, &problem, &truth, seed, cfg.backend)?;
-                runs.push(simulate(
+                let mut policy = make_policy(policy_name, &problem, &truth, seed, cfg.backend, &policy_pool)?;
+                Ok::<SimResult, String>(simulate(
                     &problem,
                     &truth,
                     policy.as_mut(),
@@ -154,7 +174,11 @@ pub fn run_experiment(cfg: &ExperimentConfig) -> Result<ExperimentResults, Strin
                         horizon: cfg.horizon,
                         stop_at_cutoff: None,
                     },
-                ));
+                ))
+            });
+            let mut runs = Vec::with_capacity(cfg.seeds as usize);
+            for run in seed_runs {
+                runs.push(run?);
             }
             cells.push(aggregate_cell(policy_name, devices, runs, cfg.cutoff));
         }
@@ -229,10 +253,10 @@ mod tests {
             "random",
             "oracle",
         ] {
-            let pol = make_policy(name, &p, &t, 0, Backend::Native).unwrap();
+            let pol = make_policy(name, &p, &t, 0, Backend::Native, &WorkerPool::new(1)).unwrap();
             assert!(!pol.name().is_empty());
         }
-        assert!(make_policy("ucb", &p, &t, 0, Backend::Native).is_err());
+        assert!(make_policy("ucb", &p, &t, 0, Backend::Native, &WorkerPool::new(1)).is_err());
     }
 
     #[test]

@@ -57,6 +57,13 @@ pub struct ExperimentConfig {
     pub cutoff: f64,
     /// Scoring backend for MM-GP-EI.
     pub backend: Backend,
+    /// Worker threads for the seed sweep and policy-internal shard pools
+    /// (`0` = resolve from `MMGPEI_THREADS`, serial when unset). An
+    /// *execution* knob, not an experiment knob: results are byte-
+    /// identical at any thread count (see `crate::pool`), so it is
+    /// deliberately excluded from [`Self::canonical_string`] and the
+    /// config hash.
+    pub threads: usize,
     /// Synthetic workload parameters (used when dataset == "synthetic").
     pub synthetic: SyntheticConfig,
 }
@@ -74,6 +81,7 @@ impl Default for ExperimentConfig {
             horizon: None,
             cutoff: 0.01,
             backend: Backend::Native,
+            threads: 0,
             synthetic: SyntheticConfig::default(),
         }
     }
@@ -120,6 +128,13 @@ impl ExperimentConfig {
         }
         if let Some(v) = exp.get("backend") {
             cfg.backend = v.as_str()?.parse()?;
+        }
+        if let Some(v) = exp.get("threads") {
+            let t = v.as_int()?;
+            if t < 0 {
+                return Err(format!("threads must be ≥ 0 (0 = resolve from MMGPEI_THREADS), got {t}"));
+            }
+            cfg.threads = t as usize;
         }
         let syn = doc.section("synthetic");
         if let Some(v) = syn.get("n_users") {
@@ -177,6 +192,17 @@ impl ExperimentConfig {
     /// reports measured the same experiment.
     pub fn config_hash(&self) -> String {
         format!("{:016x}", crate::report::fnv1a64(self.canonical_string().as_bytes()))
+    }
+
+    /// Effective worker-pool width for the seed sweep: an explicit
+    /// `threads` wins; `0` defers to `MMGPEI_THREADS` (serial when
+    /// unset). Never affects results — only wall-clock time.
+    pub fn effective_threads(&self) -> usize {
+        if self.threads > 0 {
+            self.threads
+        } else {
+            crate::pool::env_threads().unwrap_or(1)
+        }
     }
 
     /// Reduced deterministic preset for CI smoke runs (`--smoke`): few
@@ -281,6 +307,24 @@ n_models = 50
         let mut d = a.clone();
         d.synthetic.lengthscale *= 2.0;
         assert_ne!(a.config_hash(), d.config_hash());
+    }
+
+    #[test]
+    fn threads_is_an_execution_knob_outside_the_config_hash() {
+        // Thread count cannot change results (pool determinism contract),
+        // so two configs differing only in `threads` must fingerprint —
+        // and therefore compare — as the same experiment.
+        let a = ExperimentConfig::from_toml_str(SAMPLE).unwrap();
+        let mut b = a.clone();
+        b.threads = 4;
+        assert_eq!(a.config_hash(), b.config_hash());
+        assert_eq!(b.effective_threads(), 4);
+        let parsed =
+            ExperimentConfig::from_toml_str("[experiment]\ndataset = \"azure\"\nthreads = 3\n").unwrap();
+        assert_eq!(parsed.threads, 3);
+        // A negative count must error, not wrap through `as usize`.
+        let err = ExperimentConfig::from_toml_str("[experiment]\nthreads = -1\n").unwrap_err();
+        assert!(err.contains("threads"), "{err}");
     }
 
     #[test]

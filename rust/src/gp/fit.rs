@@ -6,19 +6,38 @@
 //! environment — this is another substrate built from scratch).
 
 use crate::kernels::{Kernel, Matern52};
-use crate::linalg::{cholesky_jittered, cholesky_solve, logdet_from_cholesky, Mat};
+use crate::linalg::{cholesky_jittered, cholesky_solve_into, logdet_from_cholesky, Mat};
+
+/// Reusable buffers for repeated [`log_marginal_likelihood_scratch`]
+/// evaluations. The Nelder–Mead fit loop evaluates the LML hundreds of
+/// times at a fixed problem size; routing the triangular solves through
+/// one scratch keeps the loop free of per-evaluation `Vec` churn.
+#[derive(Clone, Debug, Default)]
+pub struct LmlScratch {
+    /// Intermediate forward-substitution result `L⁻¹ y`.
+    fwd: Vec<f64>,
+    /// Solution `α = K⁻¹ y`.
+    alpha: Vec<f64>,
+}
 
 /// Log marginal likelihood of observations `y` under a zero-mean GP with
 /// covariance `k`: `−½ yᵀK⁻¹y − ½ log|K| − n/2·log 2π`.
 pub fn log_marginal_likelihood(k: &Mat, y: &[f64]) -> f64 {
+    log_marginal_likelihood_scratch(k, y, &mut LmlScratch::default())
+}
+
+/// Buffer-reusing form of [`log_marginal_likelihood`]: identical floats,
+/// but the triangular solves write into `scratch` instead of allocating
+/// fresh `Vec`s — the form the Nelder–Mead refit loop calls.
+pub fn log_marginal_likelihood_scratch(k: &Mat, y: &[f64], scratch: &mut LmlScratch) -> f64 {
     let n = y.len();
     assert_eq!(k.rows(), n);
     let (l, _) = match cholesky_jittered(k, 1e-10) {
         Ok(ok) => ok,
         Err(_) => return f64::NEG_INFINITY,
     };
-    let alpha = cholesky_solve(&l, y);
-    let fit: f64 = y.iter().zip(&alpha).map(|(a, b)| a * b).sum();
+    cholesky_solve_into(&l, y, &mut scratch.fwd, &mut scratch.alpha);
+    let fit: f64 = y.iter().zip(&scratch.alpha).map(|(a, b)| a * b).sum();
     -0.5 * fit - 0.5 * logdet_from_cholesky(&l)
         - 0.5 * n as f64 * (2.0 * std::f64::consts::PI).ln()
 }
@@ -28,8 +47,10 @@ pub fn log_marginal_likelihood(k: &Mat, y: &[f64]) -> f64 {
 /// Standard coefficients (reflection 1, expansion 2, contraction ½,
 /// shrink ½); terminates when the simplex's objective spread drops below
 /// `tol` or after `max_iter` iterations. Returns `(argmin, min)`.
+/// Takes `FnMut` so objectives can carry reusable scratch buffers (see
+/// [`LmlScratch`]).
 pub fn nelder_mead(
-    f: impl Fn(&[f64]) -> f64,
+    mut f: impl FnMut(&[f64]) -> f64,
     x0: &[f64],
     step: f64,
     tol: f64,
@@ -114,13 +135,17 @@ pub struct FittedMatern {
 /// log-parameter space to keep both positive).
 pub fn fit_matern52(points: &[Vec<f64>], y: &[f64], init: &Matern52) -> FittedMatern {
     assert_eq!(points.len(), y.len());
-    let objective = |log_params: &[f64]| -> f64 {
+    // One scratch for the whole optimization: the solver re-evaluates the
+    // LML hundreds of times at fixed size, so the triangular-solve
+    // buffers are paid for once instead of twice per evaluation.
+    let mut scratch = LmlScratch::default();
+    let objective = move |log_params: &[f64]| -> f64 {
         let kern = Matern52 { variance: log_params[0].exp(), lengthscale: log_params[1].exp() };
         // Guard absurd scales that make the gram matrix degenerate.
         if !(1e-8..1e8).contains(&kern.variance) || !(1e-8..1e8).contains(&kern.lengthscale) {
             return f64::INFINITY;
         }
-        -log_marginal_likelihood(&kern.gram(points), y)
+        -log_marginal_likelihood_scratch(&kern.gram(points), y, &mut scratch)
     };
     let x0 = [init.variance.ln(), init.lengthscale.ln()];
     let (best, neg_lml) = nelder_mead(objective, &x0, 0.4, 1e-8, 200);
@@ -197,6 +222,23 @@ mod tests {
             &y,
         );
         assert!(fitted.log_marginal >= init_lml - 1e-9);
+    }
+
+    #[test]
+    fn scratch_lml_matches_and_reuses_buffers() {
+        let pts: Vec<Vec<f64>> = (0..20).map(|i| vec![i as f64 * 0.3]).collect();
+        let kern = Matern52 { variance: 1.3, lengthscale: 0.9 };
+        let gram = kern.gram(&pts);
+        let (l, _) = cholesky_jittered(&gram, 1e-10).unwrap();
+        let mut rng = Rng::new(55);
+        let y = rng.mvn(&vec![0.0; 20], &l);
+        let mut scratch = LmlScratch::default();
+        let first = log_marginal_likelihood_scratch(&gram, &y, &mut scratch);
+        assert_eq!(first, log_marginal_likelihood(&gram, &y), "scratch form must be bit-identical");
+        let ptrs = (scratch.fwd.as_ptr(), scratch.alpha.as_ptr());
+        let second = log_marginal_likelihood_scratch(&gram, &y, &mut scratch);
+        assert_eq!(first, second);
+        assert_eq!(ptrs, (scratch.fwd.as_ptr(), scratch.alpha.as_ptr()), "buffers must be reused");
     }
 
     #[test]

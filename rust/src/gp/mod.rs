@@ -27,7 +27,8 @@
 mod fit;
 mod stats;
 
-pub use fit::{fit_matern52, log_marginal_likelihood, nelder_mead, FittedMatern};
+pub use fit::{fit_matern52, log_marginal_likelihood, log_marginal_likelihood_scratch, nelder_mead};
+pub use fit::{FittedMatern, LmlScratch};
 pub use stats::{erf, erfc, expected_improvement, norm_cdf, norm_pdf, tau};
 
 use std::fmt;
@@ -92,6 +93,9 @@ pub struct Gp {
     /// downstream caching requires; a positive tolerance trades exactness
     /// for smaller dirty sets.
     change_tol: f64,
+    /// Scratch for the new observation's cross-covariance vector, reused
+    /// across observations (zero-allocation observe contract).
+    cross_buf: Vec<f64>,
 }
 
 impl Gp {
@@ -106,13 +110,18 @@ impl Gp {
             var,
             prior_mean,
             prior_cov,
-            chol: CholeskyFactor::new(),
-            obs_arms: Vec::new(),
-            beta: Vec::new(),
+            // Every buffer an observation touches is sized for the worst
+            // case (each arm observed once) up front, so the fused
+            // observe pass never allocates — see the counting-allocator
+            // audit in `rust/tests/alloc_counter.rs`.
+            chol: CholeskyFactor::with_capacity(n),
+            obs_arms: Vec::with_capacity(n),
+            beta: Vec::with_capacity(n),
             w: vec![0.0; n * n],
             observed: vec![false; n],
             changed_arms: Vec::with_capacity(n),
             change_tol: 0.0,
+            cross_buf: Vec::with_capacity(n),
         }
     }
 
@@ -192,49 +201,57 @@ impl Gp {
 
     /// Shared implementation of the observation update; populates
     /// `self.changed_arms` on success.
+    ///
+    /// **Fused, allocation-free pass** (§Perf L3 iteration 3): the
+    /// L-append (forward substitution in place in the factor's storage),
+    /// the β extension, the per-arm `w` sweep, the μ/σ² fold, and the
+    /// dirty-set detection run as one pipeline over preallocated buffers
+    /// — no heap allocation per observation (audited by
+    /// `rust/tests/alloc_counter.rs`). Inner products use `f64::mul_add`.
     fn observe_inner(&mut self, x: ArmId, z: f64) -> Result<(), GpError> {
         if self.observed[x] {
             return Err(GpError::AlreadyObserved(x));
         }
         let t = self.chol.dim();
-        // Cross-covariances of the new observation against prior ones.
-        let cross: Vec<f64> = self.obs_arms.iter().map(|&a| self.prior_cov[(x, a)]).collect();
-        let diag = self.prior_cov[(x, x)];
+        let n = self.prior_mean.len();
+        // Cross-covariances of the new observation against prior ones,
+        // read sequentially from row x of the symmetric prior into the
+        // reusable scratch (k(a, x) = k(x, a)).
+        let covx = self.prior_cov.row(x);
+        self.cross_buf.clear();
+        self.cross_buf.extend(self.obs_arms.iter().map(|&a| covx[a]));
+        let diag = covx[x];
         // Min-pivot append: guards the `acc / ltt` division below against
         // a vanishing pivot (duplicated/near-duplicated arms) by floor-
-        // jittering instead of emitting NaN posteriors.
+        // jittering instead of emitting NaN posteriors. The substitution
+        // writes the new L-row in place (no scratch vector).
         let (ltt, _jitter) = self
             .chol
-            .append_jittered_min_pivot(&cross, diag, DEFAULT_JITTER, MIN_PIVOT)
+            .append_jittered_min_pivot(&self.cross_buf, diag, DEFAULT_JITTER, MIN_PIVOT)
             .expect("kernel append failed: prior covariance irrecoverably non-PSD");
-        // New last entry of β: solve row t of L·β = (z − μ_obs).
-        let resid = z - self.prior_mean[x];
-        let row = self.chol.row(t);
-        let mut acc = resid;
-        for k in 0..t {
-            acc -= row[k] * self.beta[k];
+        // New last entry of β: solve row t of L·β = (z − μ_obs). The
+        // L-row is borrowed straight out of the factor (disjoint fields —
+        // no copy needed to satisfy the borrow checker).
+        let lrow = &self.chol.row(t)[..t];
+        let mut acc = z - self.prior_mean[x];
+        for (l, b) in lrow.iter().zip(&self.beta) {
+            acc = l.mul_add(-b, acc);
         }
         let beta_t = acc / ltt;
-        // Copy row t of L once to release the borrow on self.chol.
-        let lrow: Vec<f64> = row[..t].to_vec();
         self.beta.push(beta_t);
         self.observed[x] = true;
         self.obs_arms.push(x);
         // Extend every arm's w by one entry and fold into μ/σ², recording
-        // which arms actually moved (the dirty set).
-        // Hot loop of the native backend: per arm, one contiguous dot of
-        // length t (flat `w` stride) against the cached L-row, reading
-        // the cross-covariances from *row* x of the symmetric prior
-        // (k(a,x) = k(x,a)) so the scan is fully sequential in memory.
-        let n = self.n_arms();
-        let covx = self.prior_cov.row(x);
+        // which arms actually moved (the dirty set) — the hot loop of the
+        // native backend: per arm, one contiguous dot of length t (flat
+        // `w` stride) against the in-place L-row.
         let tol = self.change_tol;
         self.changed_arms.clear();
         for a in 0..n {
             let wa = &self.w[a * n..a * n + t];
             let mut num = covx[a];
             for (l, w) in lrow.iter().zip(wa) {
-                num -= l * w;
+                num = l.mul_add(-w, num);
             }
             let w_new = num / ltt;
             self.w[a * n + t] = w_new;

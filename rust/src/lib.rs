@@ -35,6 +35,7 @@ pub mod kernels;
 pub mod linalg;
 pub mod metrics;
 pub mod miu;
+pub mod pool;
 pub mod prng;
 pub mod problem;
 pub mod report;

@@ -63,7 +63,7 @@ pub fn cholesky(a: &Mat) -> Result<Mat, LinalgError> {
             let mut sum = a[(i, j)];
             let (ri, rj) = (l.row(i), l.row(j));
             for k in 0..j {
-                sum -= ri[k] * rj[k];
+                sum = ri[k].mul_add(-rj[k], sum);
             }
             if i == j {
                 if sum <= 0.0 {
@@ -106,39 +106,66 @@ pub fn cholesky_jittered(a: &Mat, base_jitter: f64) -> Result<(Mat, f64), Linalg
 
 /// Solve `L y = b` for lower-triangular `L` (forward substitution).
 pub fn solve_lower(l: &Mat, b: &[f64]) -> Vec<f64> {
+    let mut y = Vec::new();
+    solve_lower_into(l, b, &mut y);
+    y
+}
+
+/// Buffer-reusing form of [`solve_lower`]: writes the solution into `y`,
+/// reusing its capacity. Hot paths that solve repeatedly (Nelder–Mead
+/// refits, the scheduler decision loop) call this to stay allocation-free
+/// after warm-up.
+pub fn solve_lower_into(l: &Mat, b: &[f64], y: &mut Vec<f64>) {
     let n = l.rows();
     debug_assert_eq!(b.len(), n);
-    let mut y = vec![0.0; n];
+    y.clear();
+    y.resize(n, 0.0);
     for i in 0..n {
         let row = l.row(i);
         let mut sum = b[i];
         for k in 0..i {
-            sum -= row[k] * y[k];
+            sum = row[k].mul_add(-y[k], sum);
         }
         y[i] = sum / row[i];
     }
-    y
 }
 
 /// Solve `Lᵀ x = y` for lower-triangular `L` (backward substitution).
 pub fn solve_lower_transpose(l: &Mat, y: &[f64]) -> Vec<f64> {
+    let mut x = Vec::new();
+    solve_lower_transpose_into(l, y, &mut x);
+    x
+}
+
+/// Buffer-reusing form of [`solve_lower_transpose`] (see
+/// [`solve_lower_into`] for the contract).
+pub fn solve_lower_transpose_into(l: &Mat, y: &[f64], x: &mut Vec<f64>) {
     let n = l.rows();
     debug_assert_eq!(y.len(), n);
-    let mut x = vec![0.0; n];
+    x.clear();
+    x.resize(n, 0.0);
     for i in (0..n).rev() {
         let mut sum = y[i];
         for k in (i + 1)..n {
-            sum -= l[(k, i)] * x[k];
+            sum = l[(k, i)].mul_add(-x[k], sum);
         }
         x[i] = sum / l[(i, i)];
     }
-    x
 }
 
 /// Solve `A x = b` given the Cholesky factor `L` of `A`.
 pub fn cholesky_solve(l: &Mat, b: &[f64]) -> Vec<f64> {
-    let y = solve_lower(l, b);
-    solve_lower_transpose(l, &y)
+    let mut scratch = Vec::new();
+    let mut x = Vec::new();
+    cholesky_solve_into(l, b, &mut scratch, &mut x);
+    x
+}
+
+/// Buffer-reusing form of [`cholesky_solve`]: `scratch` holds the
+/// intermediate forward solve, `x` the solution; both reuse capacity.
+pub fn cholesky_solve_into(l: &Mat, b: &[f64], scratch: &mut Vec<f64>, x: &mut Vec<f64>) {
+    solve_lower_into(l, b, scratch);
+    solve_lower_transpose_into(l, scratch, x);
 }
 
 /// `log det A` from its Cholesky factor.
@@ -217,11 +244,40 @@ impl CholeskyFactor {
         self.cap = new_cap;
     }
 
+    /// Fused forward substitution for an append: solves `w = L⁻¹ cross`
+    /// writing `w` *directly into the new row's storage* (no scratch
+    /// vector — the hot path's zero-allocation contract) and returns
+    /// `‖w‖²`. The caller has already run `ensure_capacity(n + 1)`, so
+    /// `self.data` splits into the prior rows and the new row at
+    /// `n · cap`. Inner products use `f64::mul_add` (one rounding per
+    /// term) — both append variants share this helper, so their factors
+    /// stay bit-identical on healthy pivots.
+    fn substitute_new_row(&mut self, cross: &[f64]) -> f64 {
+        let (cap, n) = (self.cap, self.n);
+        let (prior, new_row) = self.data.split_at_mut(n * cap);
+        let mut sumsq = 0.0;
+        for i in 0..n {
+            let row = &prior[i * cap..i * cap + i + 1];
+            let mut sum = cross[i];
+            for k in 0..i {
+                sum = row[k].mul_add(-new_row[k], sum);
+            }
+            let wi = sum / row[i];
+            new_row[i] = wi;
+            sumsq = wi.mul_add(wi, sumsq);
+        }
+        sumsq
+    }
+
     /// Append one row/column: `cross[k] = A[new, k]` for existing k, and
     /// `diag = A[new, new]`. Returns the conditional standard deviation
     /// `sqrt(diag − ‖w‖²)` of the appended variable given the existing
     /// ones — exactly the `σ̂` quantity from the paper's Theorem-2 proof
     /// (Lemma 5). Errors if the Schur complement is not positive.
+    ///
+    /// Allocation-free once capacity covers the new dimension (reserve
+    /// with [`CholeskyFactor::with_capacity`]): the forward substitution
+    /// writes straight into the new row's storage.
     pub fn append(&mut self, cross: &[f64], diag: f64) -> Result<f64, LinalgError> {
         if cross.len() != self.n {
             return Err(LinalgError::DimensionMismatch(format!(
@@ -230,27 +286,15 @@ impl CholeskyFactor {
                 cross.len()
             )));
         }
-        // w = L⁻¹ cross  (forward substitution against current factor)
-        let mut w = vec![0.0; self.n];
-        for i in 0..self.n {
-            let row = &self.data[i * self.cap..i * self.cap + i + 1];
-            let mut sum = cross[i];
-            for k in 0..i {
-                sum -= row[k] * w[k];
-            }
-            w[i] = sum / row[i];
-        }
-        let schur = diag - w.iter().map(|v| v * v).sum::<f64>();
+        self.ensure_capacity(self.n + 1);
+        let schur = diag - self.substitute_new_row(cross);
         if schur <= 0.0 {
             return Err(LinalgError::NotPositiveDefinite(self.n, schur));
         }
-        // Write [w, sqrt(schur)] as the new last row (amortized growth).
-        self.ensure_capacity(self.n + 1);
-        let base = self.n * self.cap;
-        self.data[base..base + self.n].copy_from_slice(&w);
-        self.data[base + self.n] = schur.sqrt();
+        let sigma = schur.sqrt();
+        self.data[self.n * self.cap + self.n] = sigma;
         self.n += 1;
-        Ok(schur.sqrt())
+        Ok(sigma)
     }
 
     /// Append with jitter escalation on the diagonal (for numerically
@@ -300,18 +344,11 @@ impl CholeskyFactor {
                 cross.len()
             )));
         }
-        // w = L⁻¹ cross (forward substitution; independent of the jitter,
-        // which only perturbs the new diagonal entry).
-        let mut w = vec![0.0; self.n];
-        for i in 0..self.n {
-            let row = &self.data[i * self.cap..i * self.cap + i + 1];
-            let mut sum = cross[i];
-            for k in 0..i {
-                sum -= row[k] * w[k];
-            }
-            w[i] = sum / row[i];
-        }
-        let schur0 = diag - w.iter().map(|v| v * v).sum::<f64>();
+        // w = L⁻¹ cross, substituted in place into the new row's storage
+        // (the jitter only perturbs the new diagonal entry, so w is
+        // independent of it and never needs recomputing).
+        self.ensure_capacity(self.n + 1);
+        let schur0 = diag - self.substitute_new_row(cross);
         if !schur0.is_finite() {
             return Err(LinalgError::NotPositiveDefinite(self.n, schur0));
         }
@@ -339,10 +376,7 @@ impl CholeskyFactor {
             j
         };
         let sigma = (schur0 + jitter).sqrt();
-        self.ensure_capacity(self.n + 1);
-        let base = self.n * self.cap;
-        self.data[base..base + self.n].copy_from_slice(&w);
-        self.data[base + self.n] = sigma;
+        self.data[self.n * self.cap + self.n] = sigma;
         self.n += 1;
         Ok((sigma, jitter))
     }
@@ -361,7 +395,7 @@ impl CholeskyFactor {
             let row = &self.data[i * self.cap..i * self.cap + i + 1];
             let mut sum = b[i];
             for k in 0..i {
-                sum -= row[k] * y[k];
+                sum = row[k].mul_add(-y[k], sum);
             }
             y[i] = sum / row[i];
         }
@@ -374,7 +408,7 @@ impl CholeskyFactor {
         for i in (0..self.n).rev() {
             let mut sum = y[i];
             for k in (i + 1)..self.n {
-                sum -= self.data[k * self.cap + i] * x[k];
+                sum = self.data[k * self.cap + i].mul_add(-x[k], sum);
             }
             x[i] = sum / self.data[i * self.cap + i];
         }
@@ -677,6 +711,50 @@ mod tests {
         // Solves stay finite through the floored pivot.
         let x = inc.solve(&[1.0, 1.0]);
         assert!(x.iter().all(|v| v.is_finite()));
+    }
+
+    #[test]
+    fn into_solves_match_allocating_forms_bit_for_bit() {
+        // The `_into` variants are the same arithmetic as the allocating
+        // forms (which delegate to them) — and they must reuse capacity,
+        // not reallocate, when called repeatedly at the same size.
+        let n = 11;
+        let a = random_spd(n, 33);
+        let l = cholesky(&a).unwrap();
+        let mut rng = Rng::new(34);
+        let mut scratch = Vec::new();
+        let mut x = Vec::new();
+        let mut y = Vec::new();
+        for _ in 0..4 {
+            let b: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
+            solve_lower_into(&l, &b, &mut y);
+            assert_eq!(y, solve_lower(&l, &b));
+            cholesky_solve_into(&l, &b, &mut scratch, &mut x);
+            assert_eq!(x, cholesky_solve(&l, &b));
+            let ptr_before = (scratch.as_ptr(), x.as_ptr(), y.as_ptr());
+            solve_lower_into(&l, &b, &mut y);
+            cholesky_solve_into(&l, &b, &mut scratch, &mut x);
+            assert_eq!(ptr_before, (scratch.as_ptr(), x.as_ptr(), y.as_ptr()), "buffers must be reused");
+        }
+    }
+
+    #[test]
+    fn preallocated_append_does_not_relayout() {
+        // with_capacity(n) must make every append write in place (the
+        // zero-allocation contract the GP hot path relies on).
+        let n = 12;
+        let a = random_spd(n, 66);
+        let mut inc = CholeskyFactor::with_capacity(n);
+        let batch = cholesky(&a).unwrap();
+        for t in 0..n {
+            let cross: Vec<f64> = (0..t).map(|k| a[(t, k)]).collect();
+            inc.append(&cross, a[(t, t)]).unwrap();
+        }
+        for i in 0..n {
+            for j in 0..=i {
+                assert!((inc.get(i, j) - batch[(i, j)]).abs() < 1e-9, "({i},{j})");
+            }
+        }
     }
 
     #[test]

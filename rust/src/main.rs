@@ -231,7 +231,10 @@ fn cmd_serve(args: &Args) -> Result<(), String> {
     let time_scale: f64 = args.get_parsed_or("time-scale", 0.005f64)?;
     let seed: u64 = args.get_parsed_or("seed", 0u64)?;
     let (problem, truth) = mmgpei::cli::make_instance(&cfg, seed)?;
-    let mut policy = make_policy(&policy_name, &problem, &truth, seed, cfg.backend)?;
+    // Live serving is a single run: the policy gets the env-resolved pool
+    // so MMGPEI_THREADS shards the per-user GP work.
+    let pool = mmgpei::pool::WorkerPool::from_env();
+    let mut policy = make_policy(&policy_name, &problem, &truth, seed, cfg.backend, &pool)?;
     eprintln!(
         "serving {} with {} devices (time scale {}s/unit, backend {:?})",
         problem.name, devices, time_scale, cfg.backend
@@ -277,7 +280,8 @@ fn cmd_theory(args: &Args) -> Result<(), String> {
         let mut bound = Vec::new();
         for seed in 0..cfg.seeds {
             let (problem, truth) = mmgpei::cli::make_instance(&cfg, seed)?;
-            let mut policy = make_policy("mdmt", &problem, &truth, seed, Backend::Native)?;
+            let pool = mmgpei::pool::WorkerPool::new(1);
+            let mut policy = make_policy("mdmt", &problem, &truth, seed, Backend::Native, &pool)?;
             let r = simulate(
                 &problem,
                 &truth,

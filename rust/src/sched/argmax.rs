@@ -1,0 +1,221 @@
+//! Incremental argmax over per-arm scores: a tournament (segment-max)
+//! tree.
+//!
+//! The scheduler's decision rule is `argmax_x EIrate_t(x)`, and after the
+//! dirty-set cache of PR 1 only `O(|dirty|)` scores change per decision —
+//! but the selection itself still paid a full `O(|𝓛|)` linear scan. The
+//! [`TournamentTree`] maintains a binary max-tree over the score vector:
+//! updating one leaf repairs its root path in `O(log |𝓛|)`, and the
+//! current argmax is an `O(1)` read of the root, so the scoring/repair
+//! work per decision drops to `O(|dirty| · log |𝓛|)` (the backend keeps
+//! one linear byte-compare of the selected mask — see
+//! `sched::backend`).
+//!
+//! **Determinism contract.** Ties break toward the *lowest index* — the
+//! tree's combine step prefers the left child on equality, which is
+//! exactly what the linear scan's `score > best` comparison yields — so
+//! the tree is bit-for-bit interchangeable with the brute-force scan
+//! (property-tested in `rust/tests/properties.rs` and hard-gated against
+//! the rescan oracle in `benches/perf_hotpath.rs`). Scores must not be
+//! NaN; the scheduler's scores are sums of finite EI values divided by
+//! positive costs, with `-∞` as the dispatched-arm mask, so NaN can never
+//! reach a leaf.
+
+/// Segment-max tree over a fixed-size score vector with lowest-index
+/// tie-breaking. All storage is preallocated at construction; updates and
+/// reads never allocate.
+#[derive(Clone, Debug)]
+pub struct TournamentTree {
+    /// Number of real leaves (arms).
+    n: usize,
+    /// Power-of-two leaf span; leaf `i` lives at node `m + i`.
+    m: usize,
+    /// Per-node best score (1-based heap layout; `score[1]` is the root).
+    score: Vec<f64>,
+    /// Per-node argmax leaf index for `score`.
+    arg: Vec<u32>,
+}
+
+impl TournamentTree {
+    /// Tree over `n` leaves, all initialized to `-∞`.
+    ///
+    /// Padding leaves (indices `n..m`) also hold `-∞`; because ties
+    /// prefer the left child, a padding leaf can only surface at the root
+    /// when `n == 0`.
+    pub fn new(n: usize) -> Self {
+        assert!(n <= u32::MAX as usize, "tournament tree index space is u32");
+        let m = n.next_power_of_two().max(1);
+        let mut arg = vec![0u32; 2 * m];
+        // Leaves carry their own index; internal nodes of an all-(−∞)
+        // tree resolve to their leftmost leaf.
+        for i in 0..m {
+            arg[m + i] = i as u32;
+        }
+        for i in (1..m).rev() {
+            arg[i] = arg[2 * i];
+        }
+        TournamentTree { n, m, score: vec![f64::NEG_INFINITY; 2 * m], arg }
+    }
+
+    /// Number of real leaves.
+    pub fn len(&self) -> usize {
+        self.n
+    }
+
+    /// Whether the tree has no leaves.
+    pub fn is_empty(&self) -> bool {
+        self.n == 0
+    }
+
+    /// Recombine internal node `node` from its children. The single copy
+    /// of the determinism-critical comparison: **left-preferring**, so
+    /// equality keeps the lower leaf index (both the incremental repair
+    /// and the bulk rebuild must break ties identically).
+    #[inline]
+    fn pull_up(&mut self, node: usize) {
+        let (l, r) = (2 * node, 2 * node + 1);
+        if self.score[l] >= self.score[r] {
+            self.score[node] = self.score[l];
+            self.arg[node] = self.arg[l];
+        } else {
+            self.score[node] = self.score[r];
+            self.arg[node] = self.arg[r];
+        }
+    }
+
+    /// Set leaf `i` to `s` and repair the path to the root — `O(log n)`.
+    #[inline]
+    pub fn update(&mut self, i: usize, s: f64) {
+        debug_assert!(i < self.n, "leaf {i} out of range (n = {})", self.n);
+        debug_assert!(!s.is_nan(), "tournament scores must not be NaN");
+        let mut node = self.m + i;
+        self.score[node] = s;
+        while node > 1 {
+            node /= 2;
+            self.pull_up(node);
+        }
+    }
+
+    /// Bulk-load every leaf from `scores` and rebuild bottom-up — `O(n)`,
+    /// the path taken when a mode flip (e.g. `use_cost`) invalidates the
+    /// whole score vector at once.
+    pub fn rebuild_from(&mut self, scores: &[f64]) {
+        assert_eq!(scores.len(), self.n, "rebuild size mismatch");
+        debug_assert!(scores.iter().all(|s| !s.is_nan()), "tournament scores must not be NaN");
+        self.score[self.m..self.m + self.n].copy_from_slice(scores);
+        for s in &mut self.score[self.m + self.n..] {
+            *s = f64::NEG_INFINITY;
+        }
+        for node in (1..self.m).rev() {
+            self.pull_up(node);
+        }
+    }
+
+    /// Current `(score, argmax)` — `O(1)`. The argmax is the lowest index
+    /// attaining the maximum; when every leaf is `-∞` the score is `-∞`
+    /// (callers treat that as "no candidate").
+    #[inline]
+    pub fn best(&self) -> (f64, usize) {
+        // Node 1 is the root (for a 1-leaf tree it is also the leaf).
+        (self.score[1], self.arg[1] as usize)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Linear-scan oracle with the scheduler's exact comparison (`>`,
+    /// first maximum wins).
+    fn linear_argmax(scores: &[f64]) -> (f64, Option<usize>) {
+        let mut best = f64::NEG_INFINITY;
+        let mut arg = None;
+        for (i, &s) in scores.iter().enumerate() {
+            if s > best {
+                best = s;
+                arg = Some(i);
+            }
+        }
+        (best, arg)
+    }
+
+    #[test]
+    fn matches_linear_scan_across_sizes() {
+        for n in [1usize, 2, 3, 5, 8, 17, 33, 100] {
+            let mut tree = TournamentTree::new(n);
+            let mut scores = vec![f64::NEG_INFINITY; n];
+            assert_eq!(tree.len(), n);
+            assert!(!tree.is_empty());
+            // Deterministic pseudo-random update sequence with many ties.
+            let mut state = 0x9E3779B97F4A7C15u64 ^ n as u64;
+            for step in 0..400 {
+                state = state.wrapping_mul(6364136223846793005).wrapping_add(1442695040888963407);
+                let i = (state >> 33) as usize % n;
+                let s = match state % 5 {
+                    0 => f64::NEG_INFINITY,
+                    1 => 0.0,
+                    2 => ((state >> 7) % 8) as f64 * 0.25,
+                    3 => ((state >> 11) % 3) as f64 - 1.0,
+                    _ => ((state >> 17) % 1000) as f64 / 64.0,
+                };
+                scores[i] = s;
+                tree.update(i, s);
+                let (want_s, want_i) = linear_argmax(&scores);
+                let (got_s, got_i) = tree.best();
+                assert_eq!(got_s.to_bits(), want_s.to_bits(), "n={n} step={step} score");
+                if let Some(wi) = want_i {
+                    assert_eq!(got_i, wi, "n={n} step={step} argmax");
+                } else {
+                    assert_eq!(got_s, f64::NEG_INFINITY, "n={n} step={step} empty");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn ties_break_to_lowest_index() {
+        let mut tree = TournamentTree::new(6);
+        for i in 0..6 {
+            tree.update(i, 1.0);
+        }
+        assert_eq!(tree.best(), (1.0, 0));
+        tree.update(0, 0.5);
+        assert_eq!(tree.best(), (1.0, 1));
+        tree.update(3, 2.0);
+        tree.update(5, 2.0);
+        assert_eq!(tree.best(), (2.0, 3));
+    }
+
+    #[test]
+    fn rebuild_matches_incremental_updates() {
+        let scores: Vec<f64> = (0..13).map(|i| ((i * 7) % 5) as f64).collect();
+        let mut bulk = TournamentTree::new(13);
+        bulk.rebuild_from(&scores);
+        let mut inc = TournamentTree::new(13);
+        for (i, &s) in scores.iter().enumerate() {
+            inc.update(i, s);
+        }
+        assert_eq!(bulk.best(), inc.best());
+        assert_eq!(bulk.score, inc.score);
+        assert_eq!(bulk.arg, inc.arg);
+    }
+
+    #[test]
+    fn all_masked_reads_neg_infinity() {
+        let mut tree = TournamentTree::new(4);
+        for i in 0..4 {
+            tree.update(i, f64::NEG_INFINITY);
+        }
+        let (s, i) = tree.best();
+        assert_eq!(s, f64::NEG_INFINITY);
+        assert!(i < 4, "argmax stays a real leaf even when all are masked");
+    }
+
+    #[test]
+    fn single_leaf_tree() {
+        let mut tree = TournamentTree::new(1);
+        assert_eq!(tree.best().0, f64::NEG_INFINITY);
+        tree.update(0, 3.5);
+        assert_eq!(tree.best(), (3.5, 0));
+    }
+}

@@ -20,7 +20,20 @@
 //! served from cache — with *bit-identical* scores to a full rescan
 //! (the cache is only ever skipped for arms whose inputs are unchanged,
 //! for which a recompute would reproduce the exact same floats).
+//!
+//! **Incremental argmax.** Selection is served by a [`TournamentTree`]
+//! (segment-max index) over the masked scores, repaired only at leaves
+//! whose inputs moved: `O(|dirty| · owners)` EI work plus
+//! `O(|dirty| · log |𝓛|)` tree repair per decision, with the same
+//! deterministic lowest-index tie-breaking as the linear scan it
+//! replaces (hard-gated against the rescan oracle in
+//! `benches/perf_hotpath.rs`). One linear pass remains — a branch-
+//! friendly byte-compare of the `selected` mask against the last call's
+//! (the trait API passes whole masks, not deltas) — but it does no EI
+//! math and is orders of magnitude cheaper than the full-scoring scan
+//! it replaced.
 
+use super::argmax::TournamentTree;
 use crate::gp::{expected_improvement, Gp};
 use crate::problem::{ArmId, Problem};
 
@@ -41,6 +54,29 @@ pub trait EiBackend {
     /// allocation on the per-decision hot path. The slice is valid until
     /// the next call on the backend.
     fn eirate(&mut self, best: &[f64], selected: &[bool], use_cost: bool) -> &[f64];
+
+    /// Argmax of the current EIrate over unselected arms, with
+    /// deterministic lowest-index tie-breaking; `None` when every arm is
+    /// masked. The default implementation linearly scans
+    /// [`EiBackend::eirate`] (skipping selected arms regardless of the
+    /// backend's mask convention — native uses `−∞`, the XLA artifact
+    /// `−1e30`); [`NativeBackend`] overrides it with an `O(1)` read of
+    /// its tournament-tree index.
+    fn select_arm(&mut self, best: &[f64], selected: &[bool], use_cost: bool) -> Option<ArmId> {
+        let scores = self.eirate(best, selected, use_cost);
+        let mut best_arm = None;
+        let mut best_score = f64::NEG_INFINITY;
+        for (x, &s) in scores.iter().enumerate() {
+            if selected[x] {
+                continue;
+            }
+            if s > best_score {
+                best_score = s;
+                best_arm = Some(x);
+            }
+        }
+        best_arm
+    }
 
     /// Posterior (mean, std) snapshot for diagnostics/tests.
     fn posterior(&mut self) -> (Vec<f64>, Vec<f64>);
@@ -71,8 +107,19 @@ pub struct NativeBackend {
     dirty: Vec<bool>,
     /// Dense list of dirty arms (avoids an O(|𝓛|) flag scan per decision).
     dirty_arms: Vec<ArmId>,
-    /// Preallocated output buffer for [`EiBackend::eirate`].
+    /// Preallocated output buffer for [`EiBackend::eirate`]. Assembled
+    /// *incrementally*: an entry is rewritten only when its inputs
+    /// (EI cache, selected bit, cost mode) changed since the last call.
     score_buf: Vec<f64>,
+    /// Tournament-tree argmax index over `score_buf`, repaired leaf-by-
+    /// leaf alongside the incremental assembly — decisions read the
+    /// argmax from the root instead of scanning `O(|𝓛|)` scores.
+    tree: TournamentTree,
+    /// Selected mask `score_buf`/`tree` were assembled against.
+    last_selected: Vec<bool>,
+    /// Cost mode of the last assembly; `None` forces the first call to
+    /// assemble every arm.
+    last_use_cost: Option<bool>,
 }
 
 impl NativeBackend {
@@ -91,6 +138,9 @@ impl NativeBackend {
             dirty: vec![true; n],
             dirty_arms: (0..n).collect(),
             score_buf: vec![f64::NEG_INFINITY; n],
+            tree: TournamentTree::new(n),
+            last_selected: vec![false; n],
+            last_use_cost: None,
         }
     }
 
@@ -112,19 +162,33 @@ impl NativeBackend {
             dirty_arms.push(x);
         }
     }
-}
 
-impl EiBackend for NativeBackend {
-    fn observe(&mut self, arm: ArmId, z: f64) {
-        // The GP reports exactly the arms whose (μ, σ) moved; only those
-        // can change their EI under an unchanged incumbent vector.
-        let changed = self.gp.observe(arm, z);
-        for &x in changed {
-            Self::mark_dirty(&mut self.dirty, &mut self.dirty_arms, x);
+    /// Masked, cost-normalized score of arm `x` from the EI cache.
+    #[inline]
+    fn assemble_score(&self, x: ArmId, selected: &[bool], use_cost: bool) -> f64 {
+        if selected[x] {
+            f64::NEG_INFINITY
+        } else if use_cost {
+            self.ei_cache[x] / self.cost[x]
+        } else {
+            self.ei_cache[x]
         }
     }
 
-    fn eirate(&mut self, best: &[f64], selected: &[bool], use_cost: bool) -> &[f64] {
+    /// Bring `ei_cache`, `score_buf`, and the tournament tree up to date
+    /// with `(best, selected, use_cost)` — the shared core of
+    /// [`EiBackend::eirate`] and [`EiBackend::select_arm`]. Work done:
+    ///
+    /// 1. incumbent-driven invalidation (bit-compared per user);
+    /// 2. EI rescoring of the dirty set, `O(|dirty| · owners)`;
+    /// 3. score assembly + `O(log |𝓛|)` tree repair for exactly the arms
+    ///    whose inputs moved: dirty arms, arms whose `selected` bit
+    ///    flipped (found by a cheap bool-diff sweep), or — on a cost-mode
+    ///    flip / first call — everything at once via an `O(|𝓛|)` bulk
+    ///    tree rebuild.
+    ///
+    /// No allocation in any path (all buffers are preallocated).
+    fn refresh(&mut self, best: &[f64], selected: &[bool], use_cost: bool) {
         debug_assert_eq!(best.len(), self.user_arms.len());
         let n = self.ei_cache.len();
         debug_assert_eq!(selected.len(), n);
@@ -142,6 +206,7 @@ impl EiBackend for NativeBackend {
         }
         // 2. Rescore the dirty set — O(|dirty| · owners) instead of the
         //    full O(|𝓛| · owners) rescan.
+        let rebuild_all = self.last_use_cost != Some(use_cost);
         for &x in &self.dirty_arms {
             let mu = self.gp.posterior_mean(x);
             let sigma = self.gp.posterior_std(x);
@@ -151,20 +216,66 @@ impl EiBackend for NativeBackend {
             }
             self.ei_cache[x] = ei_sum;
             self.dirty[x] = false;
+            // 3a. Re-assemble the dirty arm's masked score and repair its
+            //     tree path (skipped when a bulk rebuild is coming).
+            if !rebuild_all {
+                let s = self.assemble_score(x, selected, use_cost);
+                self.score_buf[x] = s;
+                self.tree.update(x, s);
+            }
         }
         self.dirty_arms.clear();
-        // 3. Assemble the masked, cost-normalized scores into the
-        //    preallocated buffer.
-        for x in 0..n {
-            self.score_buf[x] = if selected[x] {
-                f64::NEG_INFINITY
-            } else if use_cost {
-                self.ei_cache[x] / self.cost[x]
-            } else {
-                self.ei_cache[x]
-            };
+        if rebuild_all {
+            // 3b. Cost-mode flip or first call: every masked score is
+            //     stale at once — assemble the whole buffer and rebuild
+            //     the tree bottom-up in O(|𝓛|).
+            for x in 0..n {
+                self.score_buf[x] = self.assemble_score(x, selected, use_cost);
+            }
+            self.last_selected.copy_from_slice(selected);
+            self.last_use_cost = Some(use_cost);
+            self.tree.rebuild_from(&self.score_buf);
+            return;
         }
+        // 3c. Mask-driven re-assembly: arms whose selected bit flipped
+        //     since the last call (a cheap bool-diff sweep — no EI work).
+        for x in 0..n {
+            if self.last_selected[x] != selected[x] {
+                self.last_selected[x] = selected[x];
+                let s = self.assemble_score(x, selected, use_cost);
+                self.score_buf[x] = s;
+                self.tree.update(x, s);
+            }
+        }
+    }
+}
+
+impl EiBackend for NativeBackend {
+    fn observe(&mut self, arm: ArmId, z: f64) {
+        // The GP reports exactly the arms whose (μ, σ) moved; only those
+        // can change their EI under an unchanged incumbent vector.
+        let changed = self.gp.observe(arm, z);
+        for &x in changed {
+            Self::mark_dirty(&mut self.dirty, &mut self.dirty_arms, x);
+        }
+    }
+
+    fn eirate(&mut self, best: &[f64], selected: &[bool], use_cost: bool) -> &[f64] {
+        self.refresh(best, selected, use_cost);
         &self.score_buf
+    }
+
+    fn select_arm(&mut self, best: &[f64], selected: &[bool], use_cost: bool) -> Option<ArmId> {
+        self.refresh(best, selected, use_cost);
+        // O(1) argmax read off the tournament tree. −∞ means every arm is
+        // masked (unselected arms always score ≥ 0: EI ≥ 0, cost > 0).
+        let (score, arm) = self.tree.best();
+        if score == f64::NEG_INFINITY {
+            None
+        } else {
+            debug_assert!(!selected[arm], "tree argmax must respect the mask");
+            Some(arm)
+        }
     }
 
     fn posterior(&mut self) -> (Vec<f64>, Vec<f64>) {
@@ -329,6 +440,85 @@ mod tests {
         let _ = b.eirate(&[0.4, 0.0], &[true, false, false], true);
         // user 0 owns arms {0, 1}: both were rescored and drained.
         assert_eq!(b.pending_dirty(), 0);
+    }
+
+    #[test]
+    fn select_arm_matches_linear_scan_at_every_step() {
+        // The tournament-tree argmax must agree with the linear scan of
+        // the (oracle-verified) score buffer at every decision, through
+        // observations, incumbent moves, mask growth, and cost-mode
+        // flips.
+        let p = problem();
+        let mut b = NativeBackend::new(&p);
+        let mut selected = vec![false; 3];
+        let mut best = vec![0.0f64; 2];
+        let zs = [0.7, 0.4, 0.9];
+        for step in 0..3 {
+            for use_cost in [true, false] {
+                let scan = {
+                    let scores = b.eirate(&best, &selected, use_cost);
+                    let mut arg = None;
+                    let mut max = f64::NEG_INFINITY;
+                    for (x, &s) in scores.iter().enumerate() {
+                        if !selected[x] && s > max {
+                            max = s;
+                            arg = Some(x);
+                        }
+                    }
+                    arg
+                };
+                let tree = b.select_arm(&best, &selected, use_cost);
+                assert_eq!(tree, scan, "step {step} use_cost {use_cost}");
+            }
+            b.observe(step, zs[step]);
+            selected[step] = true;
+            for &u in &p.arm_users[step] {
+                best[u] = best[u].max(zs[step]);
+            }
+        }
+        // Exhausted: every arm masked → no candidate.
+        assert_eq!(b.select_arm(&best, &selected, true), None);
+    }
+
+    #[test]
+    fn default_select_arm_matches_native_override() {
+        // The trait's default (linear-scan) implementation and the
+        // native tournament override must be interchangeable.
+        struct Linear(NativeBackend);
+        impl EiBackend for Linear {
+            fn observe(&mut self, arm: ArmId, z: f64) {
+                self.0.observe(arm, z);
+            }
+            fn eirate(&mut self, best: &[f64], selected: &[bool], use_cost: bool) -> &[f64] {
+                self.0.eirate(best, selected, use_cost)
+            }
+            // select_arm: default linear scan.
+            fn posterior(&mut self) -> (Vec<f64>, Vec<f64>) {
+                self.0.posterior()
+            }
+            fn label(&self) -> &'static str {
+                "linear"
+            }
+        }
+        let p = problem();
+        let mut tree = NativeBackend::new(&p);
+        let mut lin = Linear(NativeBackend::new(&p));
+        let mut selected = vec![false; 3];
+        let mut best = vec![0.0f64; 2];
+        let zs = [0.6, 0.8, 0.2];
+        for step in 0..3 {
+            assert_eq!(
+                tree.select_arm(&best, &selected, true),
+                lin.select_arm(&best, &selected, true),
+                "step {step}"
+            );
+            tree.observe(step, zs[step]);
+            lin.observe(step, zs[step]);
+            selected[step] = true;
+            for &u in &p.arm_users[step] {
+                best[u] = best[u].max(zs[step]);
+            }
+        }
     }
 
     #[test]

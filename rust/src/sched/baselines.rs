@@ -4,6 +4,7 @@
 use super::{Incumbents, Policy, SchedContext};
 use crate::gp::Gp;
 use crate::linalg::principal_submatrix;
+use crate::pool::WorkerPool;
 use crate::prng::Rng;
 use crate::problem::{ArmId, Problem, Truth, UserId};
 
@@ -61,23 +62,32 @@ impl UserGpEi {
 
 /// Shared plumbing for the "pick a user, then run that user's GP-EI"
 /// baselines (GP-EI-Round-Robin and GP-EI-Random of §6.1).
+///
+/// Per-user GPs are fully independent state (SoA: one `UserGpEi` per
+/// tenant), so the per-completion posterior updates shard across the
+/// worker pool — each user is touched by exactly one thread and the
+/// floats are identical to the serial loop at any `MMGPEI_THREADS`.
 struct PerUserGpEi {
     users: Vec<UserGpEi>,
     incumbents: Incumbents,
+    pool: WorkerPool,
 }
 
 impl PerUserGpEi {
-    fn new(problem: &Problem) -> Self {
+    fn new(problem: &Problem, pool: WorkerPool) -> Self {
         PerUserGpEi {
             users: (0..problem.n_users).map(|u| UserGpEi::new(problem, u)).collect(),
             incumbents: Incumbents::new(problem.n_users),
+            pool,
         }
     }
 
     fn observe(&mut self, problem: &Problem, arm: ArmId, z: f64) {
-        for user in self.users.iter_mut() {
-            user.observe(arm, z);
-        }
+        self.pool.for_each_chunk_mut(&mut self.users, |chunk| {
+            for user in chunk {
+                user.observe(arm, z);
+            }
+        });
         self.incumbents.update_arm(problem, arm, z);
     }
 }
@@ -90,9 +100,14 @@ pub struct GpEiRoundRobin {
 }
 
 impl GpEiRoundRobin {
-    /// Build for a problem instance.
+    /// Build for a problem instance (pool width from `MMGPEI_THREADS`).
     pub fn new(problem: &Problem) -> Self {
-        GpEiRoundRobin { inner: PerUserGpEi::new(problem), next_user: 0 }
+        Self::with_pool(problem, WorkerPool::from_env())
+    }
+
+    /// Build with an explicit worker pool for the per-user GP shards.
+    pub fn with_pool(problem: &Problem, pool: WorkerPool) -> Self {
+        GpEiRoundRobin { inner: PerUserGpEi::new(problem, pool), next_user: 0 }
     }
 }
 
@@ -127,9 +142,15 @@ pub struct GpEiRandom {
 }
 
 impl GpEiRandom {
-    /// Build with an explicit seed (runs are deterministic per seed).
+    /// Build with an explicit seed (runs are deterministic per seed;
+    /// pool width from `MMGPEI_THREADS`).
     pub fn new(problem: &Problem, seed: u64) -> Self {
-        GpEiRandom { inner: PerUserGpEi::new(problem), rng: Rng::new(seed) }
+        Self::with_pool(problem, seed, WorkerPool::from_env())
+    }
+
+    /// Build with an explicit worker pool for the per-user GP shards.
+    pub fn with_pool(problem: &Problem, seed: u64, pool: WorkerPool) -> Self {
+        GpEiRandom { inner: PerUserGpEi::new(problem, pool), rng: Rng::new(seed) }
     }
 }
 
@@ -164,15 +185,23 @@ pub struct MmGpEiIndep {
     users: Vec<UserGpEi>,
     incumbents: Incumbents,
     cost: Vec<f64>,
+    pool: WorkerPool,
 }
 
 impl MmGpEiIndep {
-    /// Build for a problem instance.
+    /// Build for a problem instance (pool width from `MMGPEI_THREADS`).
     pub fn new(problem: &Problem) -> Self {
+        Self::with_pool(problem, WorkerPool::from_env())
+    }
+
+    /// Build with an explicit worker pool: shards both the per-user GP
+    /// updates and the per-decision EI rescoring.
+    pub fn with_pool(problem: &Problem, pool: WorkerPool) -> Self {
         MmGpEiIndep {
             users: (0..problem.n_users).map(|u| UserGpEi::new(problem, u)).collect(),
             incumbents: Incumbents::new(problem.n_users),
             cost: problem.cost.clone(),
+            pool,
         }
     }
 }
@@ -184,28 +213,58 @@ impl Policy for MmGpEiIndep {
 
     fn select(&mut self, ctx: &SchedContext) -> Option<ArmId> {
         // EIrate per arm, summing each arm's EI across owning users, each
-        // scored by that user's private GP.
+        // scored by that user's private GP. The O(|𝓛| · owners) EI sweep
+        // shards across the pool by contiguous arm ranges; each shard
+        // reports its lowest-index argmax and the fixed-order merge below
+        // reproduces the serial scan's result exactly — at any thread
+        // count (per-arm scores are independent, so shard boundaries
+        // cannot change any float).
+        let users = &self.users;
+        let incumbents = &self.incumbents;
+        let cost = &self.cost;
+        let n = ctx.problem.n_arms();
+        let shard = |range: std::ops::Range<usize>| {
+            let mut best_arm = None;
+            let mut best_score = f64::NEG_INFINITY;
+            for a in range {
+                if ctx.selected[a] {
+                    continue;
+                }
+                let mut ei_sum = 0.0;
+                for &u in &ctx.problem.arm_users[a] {
+                    let li = users[u].local[a];
+                    ei_sum += users[u].gp.ei(li, incumbents.value(u));
+                }
+                let score = ei_sum / cost[a];
+                if score > best_score {
+                    best_score = score;
+                    best_arm = Some(a);
+                }
+            }
+            (best_score, best_arm)
+        };
+        if !self.pool.engages(n) {
+            // Serial fast path: the plain linear scan, allocation-free.
+            return shard(0..n).1;
+        }
+        let shards = self.pool.map_chunks(n, shard);
         let mut best_arm = None;
         let mut best_score = f64::NEG_INFINITY;
-        for a in ctx.candidates() {
-            let mut ei_sum = 0.0;
-            for &u in &ctx.problem.arm_users[a] {
-                let li = self.users[u].local[a];
-                ei_sum += self.users[u].gp.ei(li, self.incumbents.value(u));
-            }
-            let score = ei_sum / self.cost[a];
-            if score > best_score {
+        for (score, arm) in shards {
+            if arm.is_some() && score > best_score {
                 best_score = score;
-                best_arm = Some(a);
+                best_arm = arm;
             }
         }
         best_arm
     }
 
     fn observe(&mut self, problem: &Problem, arm: ArmId, z: f64) {
-        for user in self.users.iter_mut() {
-            user.observe(arm, z);
-        }
+        self.pool.for_each_chunk_mut(&mut self.users, |chunk| {
+            for user in chunk {
+                user.observe(arm, z);
+            }
+        });
         self.incumbents.update_arm(problem, arm, z);
     }
 }

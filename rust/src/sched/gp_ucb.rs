@@ -11,6 +11,7 @@
 //! round-robin allocator.
 
 use super::{EiBackend, Incumbents, NativeBackend, Policy, SchedContext};
+use crate::pool::WorkerPool;
 use crate::problem::{ArmId, Problem};
 
 /// UCB exploration schedule `√β_t`.
@@ -86,6 +87,8 @@ pub struct GpUcbRoundRobin {
     next_user: usize,
     delta: f64,
     t: usize,
+    /// Shards the independent per-user GP updates (`MMGPEI_THREADS`).
+    pool: WorkerPool,
 }
 
 struct UserUcb {
@@ -95,8 +98,13 @@ struct UserUcb {
 }
 
 impl GpUcbRoundRobin {
-    /// Build for a problem instance.
+    /// Build for a problem instance (pool width from `MMGPEI_THREADS`).
     pub fn new(problem: &Problem) -> Self {
+        Self::with_pool(problem, WorkerPool::from_env())
+    }
+
+    /// Build with an explicit worker pool for the per-user GP shards.
+    pub fn with_pool(problem: &Problem, pool: WorkerPool) -> Self {
         let users = (0..problem.n_users)
             .map(|u| {
                 let arms = problem.user_arms[u].clone();
@@ -109,7 +117,7 @@ impl GpUcbRoundRobin {
                 UserUcb { arms, gp: crate::gp::Gp::new(mean, cov), local }
             })
             .collect();
-        GpUcbRoundRobin { users, next_user: 0, delta: 0.1, t: 0 }
+        GpUcbRoundRobin { users, next_user: 0, delta: 0.1, t: 0, pool }
     }
 }
 
@@ -146,12 +154,14 @@ impl Policy for GpUcbRoundRobin {
 
     fn observe(&mut self, _problem: &Problem, arm: ArmId, z: f64) {
         self.t += 1;
-        for user in self.users.iter_mut() {
-            let li = user.local[arm];
-            if li != usize::MAX && !user.gp.is_observed(li) {
-                user.gp.observe(li, z);
+        self.pool.for_each_chunk_mut(&mut self.users, |chunk| {
+            for user in chunk {
+                let li = user.local[arm];
+                if li != usize::MAX && !user.gp.is_observed(li) {
+                    user.gp.observe(li, z);
+                }
             }
-        }
+        });
     }
 }
 

@@ -17,6 +17,8 @@ pub struct MmGpEi {
     incumbents: Incumbents,
     use_cost: bool,
     name: String,
+    /// Reusable incumbent-vector buffer (zero-allocation select path).
+    best_buf: Vec<f64>,
 }
 
 impl MmGpEi {
@@ -34,6 +36,7 @@ impl MmGpEi {
             incumbents: Incumbents::new(problem.n_users),
             use_cost: true,
             name,
+            best_buf: Vec::with_capacity(problem.n_users),
         }
     }
 
@@ -50,18 +53,21 @@ impl MmGpEi {
         &self.incumbents
     }
 
-    /// Incumbent vector `best[u] = z(x_u*(t))` the backend scores against.
-    fn best_vec(&self, problem: &Problem) -> Vec<f64> {
-        (0..problem.n_users).map(|u| self.incumbents.value(u)).collect()
+    /// Refresh the reusable incumbent vector `best[u] = z(x_u*(t))` the
+    /// backend scores against (no allocation after construction).
+    fn fill_best(&mut self, problem: &Problem) {
+        self.best_buf.clear();
+        let incumbents = &self.incumbents;
+        self.best_buf.extend((0..problem.n_users).map(|u| incumbents.value(u)));
     }
 
     /// Current EIrate scores for all arms (−∞ for selected arms).
     /// Exposed for tests and for the live coordinator's metrics endpoint.
     /// (Copies the backend's score buffer; the hot path in
-    /// [`Policy::select`] reads the buffer in place instead.)
+    /// [`Policy::select`] reads the backend's argmax index instead.)
     pub fn scores(&mut self, ctx: &SchedContext) -> Vec<f64> {
-        let best = self.best_vec(ctx.problem);
-        self.backend.eirate(&best, ctx.selected, self.use_cost).to_vec()
+        self.fill_best(ctx.problem);
+        self.backend.eirate(&self.best_buf, ctx.selected, self.use_cost).to_vec()
     }
 }
 
@@ -71,22 +77,13 @@ impl Policy for MmGpEi {
     }
 
     fn select(&mut self, ctx: &SchedContext) -> Option<ArmId> {
-        let best = self.best_vec(ctx.problem);
-        let scores = self.backend.eirate(&best, ctx.selected, self.use_cost);
-        let mut best_arm = None;
-        let mut best_score = f64::NEG_INFINITY;
-        for (x, &s) in scores.iter().enumerate() {
-            // Skip dispatched arms regardless of the backend's mask
-            // convention (native uses −∞, the XLA artifact −1e30).
-            if ctx.selected[x] {
-                continue;
-            }
-            if s > best_score {
-                best_score = s;
-                best_arm = Some(x);
-            }
-        }
-        best_arm
+        self.fill_best(ctx.problem);
+        // Tournament-tree argmax on the native backend (O(dirty·log |𝓛|)
+        // scoring/repair work plus a linear mask byte-diff — see the
+        // `sched::backend` module docs); the trait's default linear scan
+        // elsewhere. Both skip dispatched arms regardless of the
+        // backend's mask convention (native −∞, the XLA artifact −1e30).
+        self.backend.select_arm(&self.best_buf, ctx.selected, self.use_cost)
     }
 
     fn observe(&mut self, problem: &Problem, arm: ArmId, z: f64) {

@@ -16,12 +16,14 @@
 //!   EIrate) and [`MmGpEiIndep`] (global EIrate argmax but *independent*
 //!   per-user GPs — isolates the value of the shared prior).
 
+mod argmax;
 mod backend;
 mod baselines;
 mod fantasy;
 mod gp_ucb;
 mod mm_gp_ei;
 
+pub use argmax::TournamentTree;
 pub use backend::{rescan_eirate, EiBackend, NativeBackend};
 pub use baselines::{GpEiRandom, GpEiRoundRobin, MmGpEiIndep, Oracle};
 pub use fantasy::MmGpEiFantasy;

@@ -6,7 +6,7 @@
 use mmgpei::prng::Rng;
 use mmgpei::sched::{
     rescan_eirate, EiBackend, GpEiRandom, GpEiRoundRobin, MmGpEi, MmGpEiIndep, NativeBackend,
-    Policy,
+    Policy, TournamentTree,
 };
 use mmgpei::sim::{simulate, SimConfig};
 use mmgpei::testutil::{check, gen};
@@ -280,6 +280,95 @@ fn cached_eirate_matches_brute_force_oracle() {
         }
         // Exhausted state: everything masked.
         compare(&mut backend, &best, &selected, true, n);
+        assert_eq!(backend.select_arm(&best, &selected, true), None, "exhausted → no candidate");
+    });
+}
+
+#[test]
+fn tournament_select_matches_oracle_argmax() {
+    // The tournament-tree select path must pick exactly the arm the
+    // brute-force rescan's linear scan picks — value and index — over
+    // randomized memberships, observation orders, incumbent evolution,
+    // masks, and both cost modes.
+    check("tournament select equals oracle argmax", |rng| {
+        let (nu, nm) = (2 + rng.below(4), 2 + rng.below(4));
+        let (mut p, t) = gen::problem(rng, nu, nm);
+        for _ in 0..rng.below(4) {
+            let u = rng.below(p.n_users);
+            let a = rng.below(p.n_arms());
+            if !p.user_arms[u].contains(&a) {
+                p.user_arms[u].push(a);
+            }
+        }
+        p.arm_users = mmgpei::problem::Problem::compute_arm_users(p.n_arms(), &p.user_arms);
+        p.validate();
+
+        let n = p.n_arms();
+        let mut backend = NativeBackend::new(&p);
+        let mut selected = vec![false; n];
+        let mut best = vec![0.0f64; p.n_users];
+        let mut order: Vec<usize> = (0..n).collect();
+        rng.shuffle(&mut order);
+        for (step, &a) in order.iter().enumerate() {
+            for use_cost in [true, false] {
+                let oracle = rescan_eirate(backend.gp(), &p.arm_users, &p.cost, &best, &selected, use_cost);
+                let mut want = None;
+                let mut max = f64::NEG_INFINITY;
+                for (x, &s) in oracle.iter().enumerate() {
+                    if !selected[x] && s > max {
+                        max = s;
+                        want = Some(x);
+                    }
+                }
+                let got = backend.select_arm(&best, &selected, use_cost);
+                assert_eq!(got, want, "step {step} use_cost {use_cost}");
+            }
+            backend.observe(a, t.z[a]);
+            selected[a] = true;
+            for &u in &p.arm_users[a] {
+                best[u] = best[u].max(t.z[a]);
+            }
+        }
+        assert_eq!(backend.select_arm(&best, &selected, true), None);
+    });
+}
+
+#[test]
+fn tournament_tree_matches_linear_scan_under_random_updates() {
+    // Raw data-structure property: after any sequence of leaf updates and
+    // invalidations (−∞ masking), the tree's (value, index) equals the
+    // brute-force linear scan exactly — including quantized tie pileups
+    // (NaN-free by construction; the scheduler can never score NaN).
+    check("tournament tree equals linear scan", |rng| {
+        let n = 1 + rng.below(96);
+        let mut tree = TournamentTree::new(n);
+        let mut scores = vec![f64::NEG_INFINITY; n];
+        for step in 0..300 {
+            let i = rng.below(n);
+            let s = match rng.below(5) {
+                0 => f64::NEG_INFINITY, // invalidate/mask
+                1 => 0.0,               // exhausted-EI tie pileup
+                2 => rng.below(6) as f64 * 0.5, // quantized ties
+                _ => rng.normal().abs(),
+            };
+            scores[i] = s;
+            tree.update(i, s);
+            let mut want_i = None;
+            let mut want_s = f64::NEG_INFINITY;
+            for (x, &v) in scores.iter().enumerate() {
+                if v > want_s {
+                    want_s = v;
+                    want_i = Some(x);
+                }
+            }
+            let (got_s, got_i) = tree.best();
+            assert_eq!(got_s.to_bits(), want_s.to_bits(), "step {step} value (n={n})");
+            if let Some(wi) = want_i {
+                assert_eq!(got_i, wi, "step {step} index (n={n})");
+            } else {
+                assert_eq!(got_s, f64::NEG_INFINITY, "step {step}: all masked (n={n})");
+            }
+        }
     });
 }
 

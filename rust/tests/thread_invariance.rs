@@ -1,0 +1,126 @@
+//! Thread-count invariance: the worker pool's determinism contract.
+//!
+//! Everything the pool shards — seed sweeps in `cli::run_experiment`,
+//! per-user GP updates and EI rescoring inside the independent-GP
+//! policies — must produce **byte-identical** results at any thread
+//! count. These tests run the same workloads at width 1 and width 4 and
+//! compare down to the bit level (serialized report bytes, `f64` bit
+//! patterns). CI enforces the same contract end-to-end by `cmp`-ing the
+//! whole figure suite's smoke reports at `MMGPEI_THREADS=1` vs `=4`.
+
+use mmgpei::config::ExperimentConfig;
+use mmgpei::pool::WorkerPool;
+use mmgpei::report::RunReport;
+use mmgpei::sched::{GpEiRandom, GpEiRoundRobin, GpUcbRoundRobin, MmGpEiIndep, Policy};
+use mmgpei::sim::{simulate, SimConfig, SimResult};
+use mmgpei::workload::{synthetic_gp, SyntheticConfig};
+
+/// Bit-level fingerprint of everything a simulation result feeds into
+/// reports: schedule, revealed values, and regret accounting.
+fn sim_key(r: &SimResult) -> (Vec<(usize, usize, u64, u64)>, u64, u64) {
+    (
+        r.observations.iter().map(|o| (o.arm, o.device, o.start.to_bits(), o.finish.to_bits())).collect(),
+        r.cumulative_regret.to_bits(),
+        r.makespan.to_bits(),
+    )
+}
+
+#[test]
+fn experiment_report_bytes_are_identical_across_thread_counts() {
+    // The figure-suite smoke path in miniature: a multi-policy sweep on
+    // the synthetic workload, serialized through the same RunReport
+    // machinery the bench binaries emit. Width 1 vs width 4 must agree
+    // byte for byte.
+    let run = |threads: usize| -> String {
+        let cfg = ExperimentConfig {
+            name: "thread-invariance".into(),
+            dataset: "synthetic".into(),
+            policies: vec!["mdmt".into(), "mdmt-indep".into(), "round-robin".into(), "random".into()],
+            devices: vec![1, 2],
+            seeds: 3,
+            threads,
+            synthetic: SyntheticConfig { n_users: 6, n_models: 5, ..Default::default() },
+            ..Default::default()
+        };
+        let res = mmgpei::cli::run_experiment(&cfg).expect("sweep");
+        let mut report = RunReport::new("thread_invariance", 0, true);
+        report.provenance.commit = "pinned".into(); // not thread-related
+        res.push_kpis(&mut report, "syn/", &[0.05, 0.01]);
+        report.to_json_string()
+    };
+    let serial = run(1);
+    let pooled = run(4);
+    assert_eq!(serial, pooled, "pooled seed sweep must serialize byte-identically");
+    assert!(serial.contains("cumulative_regret"), "report must actually carry KPIs");
+}
+
+/// Run the same simulation with a width-1 and a width-4 policy and
+/// assert bit-identical results.
+fn assert_width_invariant<P: Policy>(
+    name: &str,
+    problem: &mmgpei::problem::Problem,
+    truth: &mmgpei::problem::Truth,
+    sim_cfg: &SimConfig,
+    make: impl Fn(WorkerPool) -> P,
+) {
+    let serial = {
+        let mut pol = make(WorkerPool::new(1));
+        simulate(problem, truth, &mut pol, sim_cfg)
+    };
+    let pooled = {
+        let mut pol = make(WorkerPool::new(4));
+        simulate(problem, truth, &mut pol, sim_cfg)
+    };
+    assert_eq!(sim_key(&serial), sim_key(&pooled), "{name}: width 4 must replay width 1 exactly");
+}
+
+#[test]
+fn sharded_policies_replay_serial_runs_bit_for_bit() {
+    // Policy-internal sharding (per-user GP observes, indep EI
+    // rescoring): the same simulation driven by a width-1 and a width-4
+    // policy must produce identical schedules and identical regret bits.
+    // 36 tenants clears pool::FINE_SHARD_MIN_ITEMS, so the width-4 run
+    // genuinely exercises the threaded shard paths.
+    let cfg = SyntheticConfig { n_users: 36, n_models: 4, ..Default::default() };
+    let (problem, truth) = synthetic_gp(&cfg, 0x7123AD);
+    let sim_cfg = SimConfig { n_devices: 3, ..Default::default() };
+    assert_width_invariant("round-robin", &problem, &truth, &sim_cfg, |pool| {
+        GpEiRoundRobin::with_pool(&problem, pool)
+    });
+    assert_width_invariant("random", &problem, &truth, &sim_cfg, |pool| {
+        GpEiRandom::with_pool(&problem, 77, pool)
+    });
+    assert_width_invariant("indep", &problem, &truth, &sim_cfg, |pool| {
+        MmGpEiIndep::with_pool(&problem, pool)
+    });
+    assert_width_invariant("ucb-rr", &problem, &truth, &sim_cfg, |pool| {
+        GpUcbRoundRobin::with_pool(&problem, pool)
+    });
+}
+
+#[test]
+fn shared_arm_fanout_is_width_invariant() {
+    // Shared arms make several user GPs update on one completion — the
+    // case where per-user sharding actually fans out. Still bit-stable.
+    // (36 tenants: above the fine-shard threshold, threads engage.)
+    let cfg = SyntheticConfig { n_users: 36, n_models: 4, ..Default::default() };
+    let (mut problem, truth) = synthetic_gp(&cfg, 0x5AAE);
+    // Give every user a stake in arm 0.
+    for u in 1..problem.n_users {
+        if !problem.user_arms[u].contains(&0) {
+            problem.user_arms[u].push(0);
+        }
+    }
+    problem.arm_users = mmgpei::problem::Problem::compute_arm_users(problem.n_arms(), &problem.user_arms);
+    problem.validate();
+    let sim_cfg = SimConfig { n_devices: 2, ..Default::default() };
+    let serial = {
+        let mut pol = MmGpEiIndep::with_pool(&problem, WorkerPool::new(1));
+        simulate(&problem, &truth, &mut pol, &sim_cfg)
+    };
+    let pooled = {
+        let mut pol = MmGpEiIndep::with_pool(&problem, WorkerPool::new(4));
+        simulate(&problem, &truth, &mut pol, &sim_cfg)
+    };
+    assert_eq!(sim_key(&serial), sim_key(&pooled));
+}
