@@ -1,0 +1,191 @@
+//! Figure 6 (extension) — **the service under tenant churn**: arrival/
+//! departure traffic replayed through the churn scheduler stack.
+//!
+//! Not a paper figure: the paper freezes the tenant cohort, but the
+//! service framing it opens with (and the ease.ml line of work it builds
+//! on) is defined by churn. This harness measures, per policy:
+//!
+//! * **per-tenant regret at exit** — Eq. 2 integrated over each tenant's
+//!   active window(s);
+//! * **p99 join-to-first-decision latency** — virtual time from a
+//!   tenant's arrival to the first dispatch of one of its arms;
+//! * **ns/decision under churn** (full runs only) — scheduler overhead
+//!   while the cohort turns over;
+//! * **churn parity** (every mode, hard-gated): the incremental
+//!   join/leave implementation (MM-GP-EI applying `user_joined`/
+//!   `user_left` in place) must replay **bit-identical** schedules,
+//!   regret, and join latencies to the from-scratch rebuild oracle
+//!   (`ForceRebuild` + history replay at every event). Any divergence
+//!   exits non-zero — with or without a checked-in baseline.
+//!
+//! Run: `cargo bench --bench fig6_churn`
+//! CI:  `cargo bench --bench fig6_churn -- --smoke --json reports/BENCH_fig6_churn.json`
+
+use mmgpei::bench::{BenchOpts, Table};
+use mmgpei::cli::run_churn_experiment;
+use mmgpei::config::ExperimentConfig;
+use mmgpei::problem::Problem;
+use mmgpei::report::{Direction, RunReport, TimingEntry};
+use mmgpei::sched::{ForceRebuild, MmGpEi, Policy};
+use mmgpei::sim::{simulate_churn, ChurnResult, SimConfig};
+use mmgpei::workload::{churn_workload, ChurnConfig};
+
+fn main() {
+    let opts = BenchOpts::from_env_args();
+    let churn_cfg = if opts.smoke {
+        // Pinned CI preset (must be identical on every machine).
+        ChurnConfig {
+            n_users: 10,
+            n_models: 6,
+            initial_users: 4,
+            arrival_gap: 3.0,
+            sojourn: (20.0, 50.0),
+            rejoin_prob: 0.5,
+            rejoin_gap: 8.0,
+            ..Default::default()
+        }
+    } else {
+        ChurnConfig { n_users: 32, n_models: 8, initial_users: 10, ..Default::default() }
+    };
+    let seeds = opts.seeds("MMGPEI_FIG6_SEEDS", 5, 2);
+    let devices: Vec<usize> = if opts.smoke { vec![2] } else { vec![2, 4] };
+
+    let cfg = ExperimentConfig {
+        name: "fig6-churn".into(),
+        dataset: "synthetic".into(), // unused: churn runs its own generator
+        policies: vec!["mdmt".into(), "round-robin".into(), "random".into()],
+        devices: devices.clone(),
+        seeds,
+        threads: opts.threads(),
+        churn: true,
+        churn_cfg: churn_cfg.clone(),
+        ..Default::default()
+    };
+
+    let mut report = RunReport::new("fig6_churn", 0, opts.smoke);
+    println!(
+        "=== Figure 6 (ext) — tenant churn: {} tenants ({} initial) × {} models, ρ = {}, {} seeds ===",
+        churn_cfg.n_users, churn_cfg.initial_users, churn_cfg.n_models, churn_cfg.user_corr, seeds
+    );
+
+    // ------------------------------------------------------------------
+    // Churn parity gate: incremental join/leave vs from-scratch rebuild.
+    // ------------------------------------------------------------------
+    let mut mismatches = 0usize;
+    for seed in 0..seeds {
+        for &m in &devices {
+            let (problem, truth, schedule) = churn_workload(&churn_cfg, 0x6C0 + seed);
+            let sim_cfg = SimConfig {
+                n_devices: m,
+                warm_start_per_user: cfg.warm_start,
+                horizon: None,
+                stop_at_cutoff: None,
+            };
+            let inc_factory = |p: &Problem| -> Box<dyn Policy> { Box::new(MmGpEi::new(p)) };
+            let oracle_factory =
+                |p: &Problem| -> Box<dyn Policy> { Box::new(ForceRebuild(MmGpEi::new(p))) };
+            let inc = simulate_churn(&problem, &truth, &schedule, &inc_factory, &sim_cfg);
+            let oracle = simulate_churn(&problem, &truth, &schedule, &oracle_factory, &sim_cfg);
+            assert_eq!(inc.n_rebuilds, 0, "incremental path must never rebuild");
+            assert!(oracle.n_rebuilds > 0, "oracle must exercise the rebuild path");
+            if !runs_bit_identical(&inc, &oracle) {
+                mismatches += 1;
+                eprintln!("parity FAIL: seed {seed} M{m} — incremental ≠ rebuild oracle");
+            }
+        }
+    }
+    report.push_kpi(
+        "parity/churn_incremental_vs_rebuild_mismatches",
+        mismatches as f64,
+        Direction::LowerIsBetter,
+    );
+    println!(
+        "parity: {mismatches}/{} diverging (seed, devices) churn runs (must be 0)",
+        seeds as usize * devices.len()
+    );
+
+    // ------------------------------------------------------------------
+    // The churn sweep: per-tenant exit regret + join latency per policy.
+    // ------------------------------------------------------------------
+    let results = run_churn_experiment(&cfg).expect("fig6 churn sweep");
+    results.push_kpis(&mut report, "churn/");
+    let mut table = Table::new(&[
+        "policy",
+        "devices",
+        "mean exit regret/tenant",
+        "p99 join latency",
+        "served",
+        "rebuilds",
+    ]);
+    for cell in &results.cells {
+        table.row(vec![
+            cell.policy.clone(),
+            cell.devices.to_string(),
+            format!("{:.3}", cell.mean_exit_regret),
+            if cell.p99_join_latency.is_finite() {
+                format!("{:.2}", cell.p99_join_latency)
+            } else {
+                "n/a".into()
+            },
+            format!("{:.0}%", 100.0 * cell.served_fraction),
+            cell.n_rebuilds.to_string(),
+        ]);
+    }
+    println!("{}", table.to_markdown());
+
+    // ns/decision under churn (wall clock — full runs only; smoke keeps
+    // the report byte-stable).
+    if !opts.smoke {
+        for cell in &results.cells {
+            let decisions: u64 = cell.runs.iter().map(|r| r.n_decisions as u64).sum();
+            if decisions == 0 {
+                continue;
+            }
+            let total_ns: f64 =
+                cell.runs.iter().map(|r| r.decision_wall_time.as_nanos() as f64).sum();
+            let ns = total_ns / decisions as f64;
+            report.push_kpi(
+                format!("churn/{}@M{}/ns_per_decision", cell.policy, cell.devices),
+                ns,
+                Direction::LowerIsBetter,
+            );
+            report.push_timing(TimingEntry::flat(
+                format!("churn/{}@M{}/ns_per_decision", cell.policy, cell.devices),
+                decisions,
+                ns,
+            ));
+            println!(
+                "{:>14}@M{}: {:.0} ns/decision over {} churn decisions",
+                cell.policy, cell.devices, ns, decisions
+            );
+        }
+    }
+
+    println!("expected shape: MDMT's shared prior warm-starts late arrivals — lower exit regret than per-user baselines.");
+    // Write the report first (the mismatch KPI is evidence worth
+    // keeping), then hard-fail: churn parity is a correctness invariant.
+    opts.finish(&report);
+    if mismatches > 0 {
+        eprintln!("FAIL: {mismatches} churn parity mismatches vs the rebuild oracle (must be 0)");
+        std::process::exit(1);
+    }
+}
+
+/// Bit-exact run equality: schedule, regret accounting, join latencies.
+fn runs_bit_identical(a: &ChurnResult, b: &ChurnResult) -> bool {
+    let obs = |r: &ChurnResult| -> Vec<(usize, usize, u64, u64)> {
+        r.observations
+            .iter()
+            .map(|o| (o.arm, o.device, o.finish.to_bits(), o.z.to_bits()))
+            .collect()
+    };
+    let bits = |xs: &[f64]| xs.iter().map(|x| x.to_bits()).collect::<Vec<_>>();
+    let lat = |r: &ChurnResult| -> Vec<Option<u64>> {
+        r.join_latency.iter().map(|l| l.map(f64::to_bits)).collect()
+    };
+    obs(a) == obs(b)
+        && bits(&a.per_user_regret) == bits(&b.per_user_regret)
+        && lat(a) == lat(b)
+        && a.cumulative_regret.to_bits() == b.cumulative_regret.to_bits()
+        && a.inst_regret == b.inst_regret
+}

@@ -11,8 +11,8 @@ use crate::problem::{Problem, Truth};
 use crate::report::{Direction, RunReport, TimingEntry};
 use crate::runtime::{default_artifact_dir, XlaBackend};
 use crate::sched::{GpEiRandom, GpEiRoundRobin, MmGpEi, MmGpEiIndep, Oracle, Policy};
-use crate::sim::{simulate, SimConfig, SimResult};
-use crate::workload::{azure, deeplearning, synthetic_gp};
+use crate::sim::{simulate, simulate_churn, ChurnResult, SimConfig, SimResult};
+use crate::workload::{azure, churn_workload, deeplearning, synthetic_gp};
 
 /// Instantiate a policy by CLI name.
 ///
@@ -186,6 +186,145 @@ pub fn run_experiment(cfg: &ExperimentConfig) -> Result<ExperimentResults, Strin
     Ok(ExperimentResults { config: cfg.clone(), cells })
 }
 
+/// Aggregated results for one (policy, device-count) cell of a **churn**
+/// sweep (`--churn` / a `[churn]` config section).
+#[derive(Clone, Debug)]
+pub struct ChurnCell {
+    /// Policy name.
+    pub policy: String,
+    /// Device count.
+    pub devices: usize,
+    /// Per-seed raw churn runs.
+    pub runs: Vec<ChurnResult>,
+    /// Mean ± std of cumulative (all-tenant) regret over seeds.
+    pub cumulative: (f64, f64),
+    /// Mean per-tenant regret at exit, over every (seed, tenant) pair.
+    pub mean_exit_regret: f64,
+    /// p99 of the join-to-first-decision latency over every served
+    /// (seed, tenant) pair (virtual time — deterministic).
+    pub p99_join_latency: f64,
+    /// Fraction of (seed, tenant) pairs that were ever served.
+    pub served_fraction: f64,
+    /// Total driver-side policy rebuilds across seeds (0 when the policy
+    /// implements the churn hooks in place).
+    pub n_rebuilds: usize,
+}
+
+/// Full churn-sweep output.
+#[derive(Clone, Debug)]
+pub struct ChurnExperimentResults {
+    /// Config used.
+    pub config: ExperimentConfig,
+    /// One cell per (policy, devices) pair, in sweep order.
+    pub cells: Vec<ChurnCell>,
+}
+
+impl ChurnExperimentResults {
+    /// Find a cell.
+    pub fn cell(&self, policy: &str, devices: usize) -> Option<&ChurnCell> {
+        self.cells.iter().find(|c| c.policy == policy && c.devices == devices)
+    }
+
+    /// Fold this sweep into `report`: config fingerprint + per-cell churn
+    /// KPIs (all virtual-time, hence seed-deterministic), and — outside
+    /// smoke mode — per-decision scheduler wall time.
+    pub fn push_kpis(&self, report: &mut RunReport, prefix: &str) {
+        report.fold_config(&self.config.canonical_string());
+        for cell in &self.cells {
+            let key = |metric: &str| format!("{prefix}{}@M{}/{metric}", cell.policy, cell.devices);
+            report.push_kpi(key("cumulative_regret"), cell.cumulative.0, Direction::LowerIsBetter);
+            report.push_kpi(key("mean_exit_regret"), cell.mean_exit_regret, Direction::LowerIsBetter);
+            report.push_kpi(key("p99_join_latency"), cell.p99_join_latency, Direction::LowerIsBetter);
+            report.push_kpi(key("served_fraction"), cell.served_fraction, Direction::HigherIsBetter);
+            report.push_kpi(key("rebuilds"), cell.n_rebuilds as f64, Direction::LowerIsBetter);
+            let decisions: u64 = cell.runs.iter().map(|r| r.n_decisions as u64).sum();
+            if decisions > 0 {
+                let total_ns: f64 =
+                    cell.runs.iter().map(|r| r.decision_wall_time.as_nanos() as f64).sum();
+                report.push_timing(TimingEntry::flat(key("decision_wall"), decisions, total_ns / decisions as f64));
+            }
+        }
+    }
+}
+
+/// Run the churn sweep described by `cfg` (requires `cfg.churn`): for
+/// each (policy × devices × seed), generate the churn workload and
+/// replay its arrival/departure timeline through the churn event loop.
+/// Seeds shard across the worker pool exactly like [`run_experiment`].
+pub fn run_churn_experiment(cfg: &ExperimentConfig) -> Result<ChurnExperimentResults, String> {
+    cfg.validate()?;
+    if !cfg.churn {
+        return Err("run_churn_experiment requires churn to be enabled (--churn / [churn])".into());
+    }
+    let pool = WorkerPool::new(cfg.effective_threads());
+    let policy_pool = WorkerPool::new(1);
+    // Surface construction errors (unknown policy, missing XLA artifacts)
+    // once, up front, instead of panicking inside the factory closure.
+    {
+        let (p0, t0, _) = churn_workload(&cfg.churn_cfg, 0x6C0);
+        for name in &cfg.policies {
+            make_policy(name, &p0, &t0, 0, cfg.backend, &policy_pool)?;
+        }
+    }
+    let mut cells = Vec::new();
+    for policy_name in &cfg.policies {
+        for &devices in &cfg.devices {
+            let seed_runs = pool.map_indexed(cfg.seeds as usize, |seed| {
+                let seed = seed as u64;
+                let (problem, truth, schedule) = churn_workload(&cfg.churn_cfg, 0x6C0 + seed);
+                let factory = |p: &Problem| -> Box<dyn Policy> {
+                    make_policy(policy_name, p, &truth, seed, cfg.backend, &policy_pool)
+                        .expect("policy construction validated above")
+                };
+                simulate_churn(
+                    &problem,
+                    &truth,
+                    &schedule,
+                    &factory,
+                    &SimConfig {
+                        n_devices: devices,
+                        warm_start_per_user: cfg.warm_start,
+                        horizon: cfg.horizon,
+                        stop_at_cutoff: None,
+                    },
+                )
+            });
+            cells.push(aggregate_churn_cell(policy_name, devices, seed_runs));
+        }
+    }
+    Ok(ChurnExperimentResults { config: cfg.clone(), cells })
+}
+
+/// Aggregate per-seed churn runs into a cell.
+pub fn aggregate_churn_cell(policy: &str, devices: usize, runs: Vec<ChurnResult>) -> ChurnCell {
+    let cumulative = mean_std(&runs.iter().map(|r| r.cumulative_regret).collect::<Vec<_>>());
+    let per_tenant: Vec<f64> =
+        runs.iter().flat_map(|r| r.per_user_regret.iter().copied()).collect();
+    let mean_exit_regret = if per_tenant.is_empty() { 0.0 } else { mean_std(&per_tenant).0 };
+    let mut latencies: Vec<f64> =
+        runs.iter().flat_map(|r| r.join_latency.iter().flatten().copied()).collect();
+    latencies.sort_by(f64::total_cmp);
+    let p99_join_latency = if latencies.is_empty() {
+        f64::NAN // dropped by push_kpi: nobody was served
+    } else {
+        latencies[((latencies.len() as f64 - 1.0) * 0.99) as usize]
+    };
+    let tenant_slots: usize = runs.iter().map(|r| r.join_latency.len()).sum();
+    let served_fraction =
+        if tenant_slots == 0 { 0.0 } else { latencies.len() as f64 / tenant_slots as f64 };
+    let n_rebuilds = runs.iter().map(|r| r.n_rebuilds).sum();
+    ChurnCell {
+        policy: policy.to_string(),
+        devices,
+        runs,
+        cumulative,
+        mean_exit_regret,
+        p99_join_latency,
+        served_fraction,
+        n_rebuilds,
+    }
+}
+
 /// Aggregate per-seed runs into a cell.
 pub fn aggregate_cell(
     policy: &str,
@@ -286,6 +425,36 @@ mod tests {
         let mut full = RunReport::new("test", 0, false);
         res.push_kpis(&mut full, "azure/", &[]);
         assert_eq!(full.timings.len(), 4, "one decision_wall timing per cell");
+    }
+
+    #[test]
+    fn churn_sweep_produces_cells_and_kpis() {
+        let mut cfg = quick_cfg();
+        cfg.churn = true;
+        cfg.churn_cfg = crate::workload::ChurnConfig {
+            n_users: 6,
+            n_models: 4,
+            initial_users: 2,
+            ..Default::default()
+        };
+        cfg.policies = vec!["mdmt".into(), "round-robin".into()];
+        cfg.devices = vec![2];
+        cfg.seeds = 2;
+        let res = run_churn_experiment(&cfg).unwrap();
+        assert_eq!(res.cells.len(), 2);
+        let mdmt = res.cell("mdmt", 2).unwrap();
+        assert_eq!(mdmt.runs.len(), 2);
+        assert_eq!(mdmt.n_rebuilds, 0, "mdmt serves churn in place");
+        let rr = res.cell("round-robin", 2).unwrap();
+        assert!(rr.n_rebuilds > 0, "baselines churn through the rebuild path");
+        assert!(mdmt.served_fraction > 0.0 && mdmt.served_fraction <= 1.0);
+        let mut report = RunReport::new("churn-test", 0, true);
+        res.push_kpis(&mut report, "churn/");
+        assert!(report.kpis.iter().any(|k| k.name == "churn/mdmt@M2/mean_exit_regret"));
+        assert!(report.kpis.iter().any(|k| k.name == "churn/round-robin@M2/p99_join_latency"));
+        assert!(report.timings.is_empty(), "smoke reports exclude wall-clock timings");
+        // Churn-disabled configs must refuse the churn driver.
+        assert!(run_churn_experiment(&quick_cfg()).is_err());
     }
 
     #[test]

@@ -4,7 +4,10 @@
 
 mod driver;
 
-pub use driver::{aggregate_cell, make_instance, make_policy, run_experiment, CellResult, ExperimentResults};
+pub use driver::{
+    aggregate_cell, aggregate_churn_cell, make_instance, make_policy, run_churn_experiment,
+    run_experiment, CellResult, ChurnCell, ChurnExperimentResults, ExperimentResults,
+};
 
 use std::collections::BTreeMap;
 

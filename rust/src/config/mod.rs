@@ -11,7 +11,7 @@ mod toml;
 
 pub use toml::{ParseError, TomlDoc, TomlValue};
 
-use crate::workload::SyntheticConfig;
+use crate::workload::{ChurnConfig, SyntheticConfig};
 
 /// Which posterior/EI backend drives MM-GP-EI.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -66,6 +66,15 @@ pub struct ExperimentConfig {
     pub threads: usize,
     /// Synthetic workload parameters (used when dataset == "synthetic").
     pub synthetic: SyntheticConfig,
+    /// Tenant-churn scenario toggle (CLI `--churn` / a `[churn]` TOML
+    /// section): the sweep runs the churn workload generator through the
+    /// churn event loop instead of the static-tenancy simulator.
+    pub churn: bool,
+    /// Churn workload knobs (used when `churn` is set). Folded into
+    /// [`Self::canonical_string`] **only when enabled**, so churn-free
+    /// configs keep their pre-churn `config_hash` and existing baseline
+    /// reports stay byte-identical.
+    pub churn_cfg: ChurnConfig,
 }
 
 impl Default for ExperimentConfig {
@@ -83,6 +92,8 @@ impl Default for ExperimentConfig {
             backend: Backend::Native,
             threads: 0,
             synthetic: SyntheticConfig::default(),
+            churn: false,
+            churn_cfg: ChurnConfig::default(),
         }
     }
 }
@@ -136,6 +147,51 @@ impl ExperimentConfig {
             }
             cfg.threads = t as usize;
         }
+        // A `[churn]` section opts the experiment into the churn
+        // scenario; its keys override the `ChurnConfig` defaults.
+        if doc.section_names().any(|s| s == "churn") {
+            cfg.churn = true;
+            let ch = doc.section("churn");
+            if let Some(v) = ch.get("n_users") {
+                cfg.churn_cfg.n_users = v.as_int()? as usize;
+            }
+            if let Some(v) = ch.get("n_models") {
+                cfg.churn_cfg.n_models = v.as_int()? as usize;
+            }
+            if let Some(v) = ch.get("initial_users") {
+                cfg.churn_cfg.initial_users = v.as_int()? as usize;
+            }
+            if let Some(v) = ch.get("arrival_gap") {
+                cfg.churn_cfg.arrival_gap = v.as_float()?;
+            }
+            if let Some(v) = ch.get("sojourn_lo") {
+                cfg.churn_cfg.sojourn.0 = v.as_float()?;
+            }
+            if let Some(v) = ch.get("sojourn_hi") {
+                cfg.churn_cfg.sojourn.1 = v.as_float()?;
+            }
+            if let Some(v) = ch.get("rejoin_prob") {
+                cfg.churn_cfg.rejoin_prob = v.as_float()?;
+            }
+            if let Some(v) = ch.get("rejoin_gap") {
+                cfg.churn_cfg.rejoin_gap = v.as_float()?;
+            }
+            if let Some(v) = ch.get("user_corr") {
+                cfg.churn_cfg.user_corr = v.as_float()?;
+            }
+            if let Some(v) = ch.get("variance") {
+                cfg.churn_cfg.variance = v.as_float()?;
+            }
+            if let Some(v) = ch.get("lengthscale") {
+                cfg.churn_cfg.lengthscale = v.as_float()?;
+            }
+            if let Some(v) = ch.get("cost_lo") {
+                cfg.churn_cfg.cost_range.0 = v.as_float()?;
+            }
+            if let Some(v) = ch.get("cost_hi") {
+                cfg.churn_cfg.cost_range.1 = v.as_float()?;
+            }
+        }
         let syn = doc.section("synthetic");
         if let Some(v) = syn.get("n_users") {
             cfg.synthetic.n_users = v.as_int()? as usize;
@@ -162,9 +218,11 @@ impl ExperimentConfig {
     /// Canonical one-line-per-field rendering of every knob that affects
     /// results — the input to [`Self::config_hash`]. Field order is fixed;
     /// floats render through Rust's shortest-roundtrip `Display`, so the
-    /// same config always produces the same string.
+    /// same config always produces the same string. The churn block is
+    /// appended **only when churn is enabled** — churn-free configs keep
+    /// their historical hash, so pre-churn baseline reports still match.
     pub fn canonical_string(&self) -> String {
-        format!(
+        let mut s = format!(
             "name={}\ndataset={}\npolicies={}\ndevices={:?}\nseeds={}\nwarm_start={}\nholdout={}\n\
              horizon={:?}\ncutoff={}\nbackend={:?}\nsynthetic.n_users={}\nsynthetic.n_models={}\n\
              synthetic.variance={}\nsynthetic.lengthscale={}\nsynthetic.cost_range=({},{})\n",
@@ -184,7 +242,29 @@ impl ExperimentConfig {
             self.synthetic.lengthscale,
             self.synthetic.cost_range.0,
             self.synthetic.cost_range.1,
-        )
+        );
+        if self.churn {
+            let c = &self.churn_cfg;
+            s.push_str(&format!(
+                "churn.n_users={}\nchurn.n_models={}\nchurn.initial_users={}\nchurn.arrival_gap={}\n\
+                 churn.sojourn=({},{})\nchurn.rejoin_prob={}\nchurn.rejoin_gap={}\nchurn.user_corr={}\n\
+                 churn.variance={}\nchurn.lengthscale={}\nchurn.cost_range=({},{})\n",
+                c.n_users,
+                c.n_models,
+                c.initial_users,
+                c.arrival_gap,
+                c.sojourn.0,
+                c.sojourn.1,
+                c.rejoin_prob,
+                c.rejoin_gap,
+                c.user_corr,
+                c.variance,
+                c.lengthscale,
+                c.cost_range.0,
+                c.cost_range.1,
+            ));
+        }
+        s
     }
 
     /// FNV-1a fingerprint of [`Self::canonical_string`] as 16 hex chars —
@@ -213,6 +293,9 @@ impl ExperimentConfig {
         self.seeds = self.seeds.min(2);
         self.synthetic.n_users = self.synthetic.n_users.min(12);
         self.synthetic.n_models = self.synthetic.n_models.min(10);
+        self.churn_cfg.n_users = self.churn_cfg.n_users.min(10);
+        self.churn_cfg.n_models = self.churn_cfg.n_models.min(6);
+        self.churn_cfg.initial_users = self.churn_cfg.initial_users.min(self.churn_cfg.n_users);
         self
     }
 
@@ -232,6 +315,9 @@ impl ExperimentConfig {
         }
         if !(self.cutoff > 0.0) {
             return Err("cutoff must be positive".into());
+        }
+        if self.churn {
+            self.churn_cfg.validate()?;
         }
         Ok(())
     }
@@ -340,6 +426,55 @@ n_models = 50
         let mut tiny = cfg.clone();
         tiny.seeds = 1;
         assert_eq!(tiny.clone().smoke().seeds, 1);
+    }
+
+    #[test]
+    fn churn_section_opts_in_and_hashes_conditionally() {
+        // No [churn] section → churn off, and — critically — the
+        // canonical string is unchanged, so churn-free configs keep the
+        // config_hash their checked-in baselines were stamped with.
+        let plain = ExperimentConfig::from_toml_str(SAMPLE).unwrap();
+        assert!(!plain.churn);
+        assert!(!plain.canonical_string().contains("churn."));
+        let churned = ExperimentConfig::from_toml_str(&format!(
+            "{SAMPLE}\n[churn]\nn_users = 12\nn_models = 5\ninitial_users = 4\nrejoin_prob = 0.5\n"
+        ))
+        .unwrap();
+        assert!(churned.churn);
+        assert_eq!(churned.churn_cfg.n_users, 12);
+        assert_eq!(churned.churn_cfg.n_models, 5);
+        assert_eq!(churned.churn_cfg.initial_users, 4);
+        assert_eq!(churned.churn_cfg.rejoin_prob, 0.5);
+        assert!(churned.canonical_string().contains("churn.n_users=12"));
+        assert_ne!(plain.config_hash(), churned.config_hash());
+        // Churn knobs are experiment knobs: changing one moves the hash.
+        let mut c2 = churned.clone();
+        c2.churn_cfg.user_corr = 0.7;
+        assert_ne!(churned.config_hash(), c2.config_hash());
+    }
+
+    #[test]
+    fn churn_knobs_are_validated() {
+        let err = ExperimentConfig::from_toml_str(
+            "[experiment]\ndataset = \"azure\"\n[churn]\ninitial_users = 0\n",
+        )
+        .unwrap_err();
+        assert!(err.contains("initial_users"), "{err}");
+        let err = ExperimentConfig::from_toml_str(
+            "[experiment]\ndataset = \"azure\"\n[churn]\nuser_corr = 1.5\n",
+        )
+        .unwrap_err();
+        assert!(err.contains("user_corr"), "{err}");
+    }
+
+    #[test]
+    fn smoke_shrinks_churn_but_keeps_it_valid() {
+        let mut cfg = ExperimentConfig::from_toml_str(SAMPLE).unwrap();
+        cfg.churn = true;
+        let s = cfg.smoke();
+        assert!(s.churn_cfg.n_users <= 10 && s.churn_cfg.n_models <= 6);
+        assert!(s.churn_cfg.initial_users <= s.churn_cfg.n_users);
+        s.validate().unwrap();
     }
 
     #[test]

@@ -17,6 +17,10 @@
 //! far below `min c(x) × time_scale` for the scheduler never to become
 //! the bottleneck (§Perf L3 target).
 
+mod churn;
+
+pub use churn::{serve_churn, ChurnServeReport};
+
 use std::collections::VecDeque;
 use std::sync::mpsc;
 use std::thread;
@@ -24,7 +28,7 @@ use std::time::{Duration, Instant};
 
 use crate::metrics::StepCurve;
 use crate::problem::{ArmId, Problem, Truth};
-use crate::sched::{Policy, SchedContext, EMPTY_INCUMBENT};
+use crate::sched::{Incumbents, Policy, SchedContext};
 
 /// Serving parameters.
 #[derive(Clone, Debug)]
@@ -90,18 +94,19 @@ impl ServeReport {
     }
 }
 
-/// Job message to a device worker.
-struct Job {
-    arm: ArmId,
-    sleep: Duration,
-    z: f64,
+/// Job message to a device worker. Shared with the churn loop
+/// (`coordinator::churn`).
+pub(crate) struct Job {
+    pub(crate) arm: ArmId,
+    pub(crate) sleep: Duration,
+    pub(crate) z: f64,
 }
 
 /// Completion message back to the leader.
-struct Done {
-    device: usize,
-    arm: ArmId,
-    z: f64,
+pub(crate) struct Done {
+    pub(crate) device: usize,
+    pub(crate) arm: ArmId,
+    pub(crate) z: f64,
 }
 
 /// Run a live serving session of `policy` over `(problem, truth)`.
@@ -140,12 +145,27 @@ pub fn serve(
     let mut selected = vec![false; n_arms];
     let mut observed = vec![false; n_arms];
     let mut warm: VecDeque<ArmId> = problem.warm_start_arms(config.warm_start_per_user).into();
+    // Option-based incumbents with the per-user empty reference — same
+    // accounting as `sim` (fixes silently-vanishing regret for negative-
+    // valued optima; byte-identical for the paper's non-negative tables).
     let z_star: Vec<f64> = (0..n_users).map(|u| truth.best_value(problem, u)).collect();
-    let mut incumbent = vec![EMPTY_INCUMBENT; n_users];
-    let gap_avg = |inc: &[f64]| -> f64 {
-        inc.iter().zip(&z_star).map(|(&b, &s)| (s - b).max(0.0)).sum::<f64>() / n_users as f64
+    let empty_ref: Vec<f64> = (0..n_users)
+        .map(|u| problem.user_arms[u].iter().map(|&a| truth.z[a]).fold(0.0f64, f64::min))
+        .collect();
+    let mut incumbents = Incumbents::new(n_users);
+    let gap_avg = |inc: &Incumbents| -> f64 {
+        z_star
+            .iter()
+            .zip(&empty_ref)
+            .enumerate()
+            .map(|(u, (&s, &e))| {
+                let b = if inc.has_observation(u) { inc.value(u) } else { e };
+                (s - b).max(0.0)
+            })
+            .sum::<f64>()
+            / n_users as f64
     };
-    let mut inst_regret = StepCurve::new(gap_avg(&incumbent));
+    let mut inst_regret = StepCurve::new(gap_avg(&incumbents));
     let mut decision_latencies = Vec::new();
     let mut jobs = Vec::with_capacity(n_arms);
     let mut in_flight = 0usize;
@@ -206,10 +226,8 @@ pub fn serve(
         let finish = t0.elapsed();
         observed[done.arm] = true;
         policy.observe(problem, done.arm, done.z);
-        for &u in &problem.arm_users[done.arm] {
-            incumbent[u] = incumbent[u].max(done.z);
-        }
-        inst_regret.push(finish.as_secs_f64(), gap_avg(&incumbent));
+        incumbents.update_arm(problem, done.arm, done.z);
+        inst_regret.push(finish.as_secs_f64(), gap_avg(&incumbents));
         jobs.push(ServedJob {
             arm: done.arm,
             start: Duration::ZERO, // filled below from cost
@@ -228,7 +246,7 @@ pub fn serve(
                 done.device,
                 done.arm,
                 done.z,
-                gap_avg(&incumbent)
+                gap_avg(&incumbents)
             );
         }
         dispatch(

@@ -84,6 +84,18 @@ pub struct Gp {
     /// Current posterior variance per arm (clamped at 0).
     var: Vec<f64>,
     observed: Vec<bool>,
+    /// Per-arm posterior-maintenance flag (tenant churn). A *disabled*
+    /// arm's `(w, μ, σ²)` are frozen and the observation sweep skips it;
+    /// [`Gp::enable_arm`] catches a re-enabled arm up bit-exactly on the
+    /// observations that arrived while it was out (see `w_len`).
+    enabled: Vec<bool>,
+    /// Dense ascending list of enabled arms — the observation sweep's
+    /// domain. Preallocated at full capacity so churn never reallocates.
+    enabled_arms: Vec<ArmId>,
+    /// Observation rows already folded into each arm's `(w, μ, σ²)`.
+    /// Enabled arms are always fully caught up, so this is only recorded
+    /// when an arm is disabled and consumed when it is re-enabled.
+    w_len: Vec<usize>,
     /// Arms whose (μ, σ²) moved beyond `change_tol` in the most recent
     /// successful observation — the dirty set incremental scorers
     /// invalidate. Reused across calls to avoid per-observation allocs.
@@ -119,6 +131,9 @@ impl Gp {
             beta: Vec::with_capacity(n),
             w: vec![0.0; n * n],
             observed: vec![false; n],
+            enabled: vec![true; n],
+            enabled_arms: (0..n).collect(),
+            w_len: vec![0; n],
             changed_arms: Vec::with_capacity(n),
             change_tol: 0.0,
             cross_buf: Vec::with_capacity(n),
@@ -169,6 +184,76 @@ impl Gp {
         self.prior_mean[x]
     }
 
+    /// Whether arm `x`'s posterior is being maintained (see
+    /// [`Gp::disable_arm`] / [`Gp::enable_arm`]).
+    pub fn is_enabled(&self, x: ArmId) -> bool {
+        self.enabled[x]
+    }
+
+    /// Number of arms the observation sweep currently maintains.
+    pub fn n_enabled(&self) -> usize {
+        self.enabled_arms.len()
+    }
+
+    /// Stop maintaining arm `x`'s posterior (tenant departure): its
+    /// `(w, μ, σ²)` freeze at their current values and the per-observation
+    /// sweep skips it, so observe cost tracks the *active* arm count.
+    /// Idempotent. The arm's observations (if any) stay in the factor —
+    /// the shared posterior keeps the knowledge.
+    pub fn disable_arm(&mut self, x: ArmId) {
+        if !self.enabled[x] {
+            return;
+        }
+        self.enabled[x] = false;
+        let pos = self.enabled_arms.binary_search(&x).expect("enabled list out of sync");
+        self.enabled_arms.remove(pos);
+        self.w_len[x] = self.chol.dim();
+    }
+
+    /// Resume maintaining arm `x`'s posterior (tenant join/rejoin),
+    /// catching its `(w, μ, σ²)` up on every observation that arrived
+    /// while it was disabled. Idempotent.
+    ///
+    /// **Bit-exactness contract.** The catch-up replays, row by row,
+    /// exactly the float operations the live observation sweep would have
+    /// performed (same covariance element, same `mul_add` forward
+    /// substitution against the same stored factor row and pivot, same
+    /// `μ += wβ` / `σ² −= w²` fold order), so an arm enabled late is
+    /// bit-identical to one that was enabled all along — the property the
+    /// churn parity gates in `rust/tests/churn.rs` and
+    /// `benches/fig6_churn.rs` pin against a from-scratch rebuild oracle.
+    /// Cost: `O(t²)` per arm (one forward solve), versus `O(t³ + |𝓛|t²)`
+    /// for a from-scratch rebuild of the whole posterior.
+    pub fn enable_arm(&mut self, x: ArmId) {
+        if self.enabled[x] {
+            return;
+        }
+        self.enabled[x] = true;
+        let pos = self.enabled_arms.binary_search(&x).expect_err("enabled list out of sync");
+        self.enabled_arms.insert(pos, x);
+        let t = self.chol.dim();
+        let n = self.prior_mean.len();
+        for k in self.w_len[x]..t {
+            // Row k of the factor and the pivot stored when observation k
+            // was appended — the identical floats the live sweep used.
+            let lrow = &self.chol.row(k)[..k];
+            let ltt = self.chol.get(k, k);
+            // Same storage element the live sweep read: row(obs_k)[x].
+            let mut num = self.prior_cov.row(self.obs_arms[k])[x];
+            let wa = &self.w[x * n..x * n + k];
+            for (l, w) in lrow.iter().zip(wa) {
+                num = l.mul_add(-w, num);
+            }
+            let w_new = num / ltt;
+            self.w[x * n + k] = w_new;
+            let d_mu = w_new * self.beta[k];
+            let d_var = w_new * w_new;
+            self.mu[x] += d_mu;
+            self.var[x] -= d_var;
+        }
+        self.w_len[x] = t;
+    }
+
     /// Incorporate the observation `z(x)`. `O(|𝓛|·t)`.
     ///
     /// Returns the arms whose posterior `(μ, σ²)` moved by more than the
@@ -212,6 +297,10 @@ impl Gp {
         if self.observed[x] {
             return Err(GpError::AlreadyObserved(x));
         }
+        assert!(
+            self.enabled[x],
+            "observation of disabled arm {x}: the driver must not dispatch a departed tenant's arms"
+        );
         let t = self.chol.dim();
         let n = self.prior_mean.len();
         // Cross-covariances of the new observation against prior ones,
@@ -241,13 +330,15 @@ impl Gp {
         self.beta.push(beta_t);
         self.observed[x] = true;
         self.obs_arms.push(x);
-        // Extend every arm's w by one entry and fold into μ/σ², recording
-        // which arms actually moved (the dirty set) — the hot loop of the
-        // native backend: per arm, one contiguous dot of length t (flat
-        // `w` stride) against the in-place L-row.
+        // Extend every *enabled* arm's w by one entry and fold into μ/σ²,
+        // recording which arms actually moved (the dirty set) — the hot
+        // loop of the native backend: per arm, one contiguous dot of
+        // length t (flat `w` stride) against the in-place L-row. Disabled
+        // arms (departed tenants) are skipped and caught up bit-exactly
+        // by [`Gp::enable_arm`] if their tenant rejoins.
         let tol = self.change_tol;
         self.changed_arms.clear();
-        for a in 0..n {
+        for &a in &self.enabled_arms {
             let wa = &self.w[a * n..a * n + t];
             let mut num = covx[a];
             for (l, w) in lrow.iter().zip(wa) {
@@ -510,6 +601,91 @@ mod tests {
         assert!(gp.posterior_std(1) < 1e-4);
         gp.observe(1, 0.7);
         assert!((gp.posterior_mean(1) - 0.7).abs() < 1e-9);
+    }
+
+    #[test]
+    fn late_enabled_arm_matches_always_enabled_bitwise() {
+        // Tenant-churn contract: an arm disabled before any observation
+        // and enabled after several must carry *bit-identical* (w-driven)
+        // μ/σ to a GP that maintained it the whole time.
+        let (mut full, z) = gp_on_grid(10);
+        let (mut churned, _) = gp_on_grid(10);
+        for x in [7usize, 8, 9] {
+            churned.disable_arm(x);
+        }
+        assert_eq!(churned.n_enabled(), 7);
+        assert!(!churned.is_enabled(8));
+        let order = [2usize, 5, 0, 3];
+        for &x in &order {
+            full.observe(x, z[x]);
+            churned.observe(x, z[x]);
+        }
+        for x in [7usize, 8, 9] {
+            churned.enable_arm(x);
+        }
+        assert_eq!(churned.n_enabled(), 10);
+        for a in 0..10 {
+            assert_eq!(
+                churned.posterior_mean(a).to_bits(),
+                full.posterior_mean(a).to_bits(),
+                "mean bits diverge at arm {a}"
+            );
+            assert_eq!(
+                churned.posterior_std(a).to_bits(),
+                full.posterior_std(a).to_bits(),
+                "std bits diverge at arm {a}"
+            );
+        }
+    }
+
+    #[test]
+    fn disable_enable_round_trip_catches_up_mid_run() {
+        // Leave-then-rejoin: freeze an arm mid-run (after it moved), keep
+        // observing, re-enable — still bit-identical to always-enabled,
+        // including for an arm that was itself observed before leaving.
+        let (mut full, z) = gp_on_grid(9);
+        let (mut churned, _) = gp_on_grid(9);
+        full.observe(1, z[1]);
+        churned.observe(1, z[1]);
+        churned.disable_arm(1); // observed arm departs
+        churned.disable_arm(4); // unobserved arm departs
+        for &x in &[6usize, 2, 8] {
+            full.observe(x, z[x]);
+            churned.observe(x, z[x]);
+        }
+        churned.enable_arm(1);
+        churned.enable_arm(4);
+        churned.enable_arm(4); // idempotent
+        for a in 0..9 {
+            assert_eq!(churned.posterior_mean(a).to_bits(), full.posterior_mean(a).to_bits());
+            assert_eq!(churned.posterior_std(a).to_bits(), full.posterior_std(a).to_bits());
+        }
+        // And the caught-up GP keeps evolving identically.
+        full.observe(4, z[4]);
+        churned.observe(4, z[4]);
+        for a in 0..9 {
+            assert_eq!(churned.posterior_mean(a).to_bits(), full.posterior_mean(a).to_bits());
+        }
+    }
+
+    #[test]
+    fn disabled_arm_posterior_is_frozen() {
+        let (mut gp, z) = gp_on_grid(6);
+        gp.disable_arm(3);
+        let before = (gp.posterior_mean(3), gp.posterior_std(3));
+        gp.observe(2, z[2]);
+        assert_eq!((gp.posterior_mean(3), gp.posterior_std(3)), before);
+        // The dirty set never reports a disabled arm.
+        let changed = gp.observe(4, z[4]).to_vec();
+        assert!(!changed.contains(&3));
+    }
+
+    #[test]
+    #[should_panic(expected = "disabled arm")]
+    fn observing_a_disabled_arm_is_a_driver_bug() {
+        let (mut gp, z) = gp_on_grid(4);
+        gp.disable_arm(2);
+        gp.observe(2, z[2]);
     }
 
     #[test]

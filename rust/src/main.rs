@@ -35,6 +35,9 @@ COMMANDS
              --devices 1,2,4  --seeds 10  --backend native|xla
              --cutoff 0.01  [--csv reports/out.csv]  [--plot]
              [--json reports/BENCH_name.json]  [--smoke]
+             [--churn]  tenant-churn scenario: seeded arrival/departure
+             timeline through the churn event loop (knobs via a [churn]
+             config section; per-tenant exit regret + join latency KPIs)
   serve      live threaded coordinator (wall clock)
              --dataset azure --policy mdmt --devices 4 --time-scale 0.005
              --backend native|xla --seed 0 [--verbose]
@@ -125,6 +128,13 @@ fn cmd_simulate(args: &Args) -> Result<(), String> {
     if smoke {
         cfg = cfg.smoke();
     }
+    if args.has_flag("churn") {
+        cfg.churn = true;
+        cfg.validate()?;
+    }
+    if cfg.churn {
+        return cmd_simulate_churn(&cfg, args, smoke);
+    }
     eprintln!(
         "simulate: dataset={} policies={:?} devices={:?} seeds={} backend={:?}",
         cfg.dataset, cfg.policies, cfg.devices, cfg.seeds, cfg.backend
@@ -180,6 +190,83 @@ fn cmd_simulate(args: &Args) -> Result<(), String> {
         cutoffs.sort_by(f64::total_cmp);
         cutoffs.dedup();
         results.push_kpis(&mut report, "", &cutoffs);
+        report.write(path).map_err(|e| e.to_string())?;
+        eprintln!("wrote {path}");
+    }
+    Ok(())
+}
+
+/// The churn branch of `simulate`: sweep (policy × devices × seeds) over
+/// the seeded arrival/departure timeline and print per-tenant service
+/// KPIs (exit regret, p99 join-to-first-decision latency).
+fn cmd_simulate_churn(
+    cfg: &mmgpei::config::ExperimentConfig,
+    args: &Args,
+    smoke: bool,
+) -> Result<(), String> {
+    let c = &cfg.churn_cfg;
+    eprintln!(
+        "simulate --churn: {} tenants ({} initial) × {} models, ρ={}, policies={:?} devices={:?} seeds={}",
+        c.n_users, c.initial_users, c.n_models, c.user_corr, cfg.policies, cfg.devices, cfg.seeds
+    );
+    let results = mmgpei::cli::run_churn_experiment(cfg)?;
+    let mut table = Table::new(&[
+        "policy",
+        "devices",
+        "cumulative regret (mean±σ)",
+        "mean exit regret/tenant",
+        "p99 join latency",
+        "served",
+        "rebuilds",
+    ]);
+    for cell in &results.cells {
+        table.row(vec![
+            cell.policy.clone(),
+            cell.devices.to_string(),
+            format!("{:.2} ± {:.2}", cell.cumulative.0, cell.cumulative.1),
+            format!("{:.3}", cell.mean_exit_regret),
+            if cell.p99_join_latency.is_finite() {
+                format!("{:.2}", cell.p99_join_latency)
+            } else {
+                "n/a".into()
+            },
+            format!("{:.0}%", 100.0 * cell.served_fraction),
+            cell.n_rebuilds.to_string(),
+        ]);
+    }
+    println!("{}", table.to_markdown());
+    if args.has_flag("plot") {
+        let m = cfg.devices[0];
+        let curves: Vec<(String, StepCurve)> = results
+            .cells
+            .iter()
+            .filter(|c| c.devices == m)
+            .map(|c| (c.policy.clone(), c.runs[0].inst_regret.clone()))
+            .collect();
+        println!("{}", ascii_plot(&format!("avg active-tenant regret, M={m}"), &curves, 72, 16));
+    }
+    if let Some(path) = args.get("csv") {
+        // Mean ± σ active-tenant regret curves, same shape as the static
+        // sweep's CSV (so `simulate --churn --csv` works identically).
+        let series: Vec<(String, Vec<(f64, f64, f64)>)> = results
+            .cells
+            .iter()
+            .map(|c| {
+                let t_end = c.runs.iter().map(|r| r.makespan).fold(0.0f64, f64::max).max(1e-9);
+                let curves: Vec<StepCurve> = c.runs.iter().map(|r| r.inst_regret.clone()).collect();
+                let grid = mmgpei::metrics::time_grid(t_end, 120);
+                (
+                    format!("{}@M{}", c.policy, c.devices),
+                    mmgpei::metrics::aggregate_curves(&curves, &grid),
+                )
+            })
+            .collect();
+        write_report(path, &curves_to_csv(&series)).map_err(|e| e.to_string())?;
+        eprintln!("wrote {path}");
+    }
+    if let Some(path) = args.get("json") {
+        let mut report = RunReport::new(cfg.name.clone(), 0, smoke);
+        results.push_kpis(&mut report, "churn/");
         report.write(path).map_err(|e| e.to_string())?;
         eprintln!("wrote {path}");
     }

@@ -22,12 +22,24 @@ impl StepCurve {
     }
 
     /// Build directly from breakpoints (first must be at t = 0).
+    ///
+    /// Duplicate breakpoint times are collapsed **last-wins** — the same
+    /// rule [`StepCurve::push`] applies — so [`StepCurve::value`]'s binary
+    /// search can never land on a stale duplicate and violate
+    /// right-continuity.
     pub fn from_points(points: Vec<(f64, f64)>) -> Self {
         assert!(!points.is_empty() && points[0].0 == 0.0, "curve must start at t=0");
         for w in points.windows(2) {
             assert!(w[0].0 <= w[1].0, "breakpoints must be sorted");
         }
-        StepCurve { points }
+        let mut dedup: Vec<(f64, f64)> = Vec::with_capacity(points.len());
+        for p in points {
+            match dedup.last_mut() {
+                Some(last) if last.0 == p.0 => last.1 = p.1,
+                _ => dedup.push(p),
+            }
+        }
+        StepCurve { points: dedup }
     }
 
     /// Append a new value from time `t` on.
@@ -46,9 +58,11 @@ impl StepCurve {
         &self.points
     }
 
-    /// Value at time `t` (right-continuous).
+    /// Value at time `t` (right-continuous). The search uses the total
+    /// order on `f64`, so a NaN query returns the final value instead of
+    /// panicking inside `partial_cmp` (NaN sorts after every breakpoint).
     pub fn value(&self, t: f64) -> f64 {
-        match self.points.binary_search_by(|p| p.0.partial_cmp(&t).unwrap()) {
+        match self.points.binary_search_by(|p| p.0.total_cmp(&t)) {
             Ok(i) => self.points[i].1,
             Err(0) => self.points[0].1,
             Err(i) => self.points[i - 1].1,
@@ -87,6 +101,16 @@ impl StepCurve {
     /// Scale all values by `factor` (e.g. sum-gap → average-gap).
     pub fn scaled(&self, factor: f64) -> StepCurve {
         StepCurve { points: self.points.iter().map(|&(t, v)| (t, v * factor)).collect() }
+    }
+
+    /// Restrict the curve to `[0, t_end]`: breakpoints after `t_end` are
+    /// dropped (the value at `t_end` carries rightward, as for any step
+    /// curve). Used when a report horizon cuts a run short, so the
+    /// returned curve and the re-integrated cumulative regret agree.
+    pub fn truncated(&self, t_end: f64) -> StepCurve {
+        assert!(t_end >= 0.0, "truncation horizon must be non-negative");
+        let keep = self.points.partition_point(|p| p.0 <= t_end).max(1);
+        StepCurve { points: self.points[..keep].to_vec() }
     }
 }
 
@@ -221,5 +245,44 @@ mod tests {
     #[should_panic(expected = "start at t=0")]
     fn from_points_requires_origin() {
         let _ = StepCurve::from_points(vec![(1.0, 2.0)]);
+    }
+
+    #[test]
+    fn from_points_dedupes_duplicate_times_last_wins() {
+        // A duplicate breakpoint time must collapse to its final value —
+        // the same rule `push` applies. Before the fix, `value(1.0)`
+        // could land on the stale (1.0, 5.0) entry via binary search.
+        let c = StepCurve::from_points(vec![(0.0, 2.0), (1.0, 5.0), (1.0, 1.0), (3.0, 0.0)]);
+        assert_eq!(c.points().len(), 3);
+        assert_eq!(c.value(1.0), 1.0, "right-continuity at a deduped breakpoint");
+        assert_eq!(c.value(2.0), 1.0);
+        // The integral sees the last-wins value over [1, 3): 2·1 + 1·2 = 4.
+        assert!((c.integral_to(3.0) - 4.0).abs() < 1e-12);
+        // Duplicates at t = 0 collapse too.
+        let d = StepCurve::from_points(vec![(0.0, 9.0), (0.0, 4.0)]);
+        assert_eq!(d.points(), &[(0.0, 4.0)]);
+    }
+
+    #[test]
+    fn value_handles_nan_query_without_panicking() {
+        let c = StepCurve::from_points(vec![(0.0, 2.0), (1.0, 1.0)]);
+        // total_cmp sorts NaN after every breakpoint → final value, no
+        // panic (partial_cmp().unwrap() used to abort here).
+        assert_eq!(c.value(f64::NAN), 1.0);
+    }
+
+    #[test]
+    fn truncated_restricts_domain() {
+        let c = StepCurve::from_points(vec![(0.0, 3.0), (1.0, 2.0), (2.0, 1.0), (4.0, 0.0)]);
+        let t = c.truncated(2.5);
+        assert_eq!(t.points(), &[(0.0, 3.0), (1.0, 2.0), (2.0, 1.0)]);
+        assert_eq!(t.final_value(), 1.0);
+        // A breakpoint exactly at the horizon is kept (right-continuous
+        // value at the cut instant).
+        assert_eq!(c.truncated(2.0).points().len(), 3);
+        // Truncating before the first post-origin breakpoint keeps t=0.
+        assert_eq!(c.truncated(0.0).points(), &[(0.0, 3.0)]);
+        // Truncating past the end is a no-op.
+        assert_eq!(c.truncated(99.0).points(), c.points());
     }
 }

@@ -6,6 +6,10 @@
 //! scalar performance `z`. Users own subsets of arms (possibly
 //! overlapping — the paper explicitly allows shared models).
 
+mod tenancy;
+
+pub use tenancy::{ChurnEvent, ChurnEventKind, ChurnSchedule, TenantSet};
+
 use crate::linalg::Mat;
 
 /// Index of an arm in the global arm set `𝓛 = 𝓛₁ ∪ … ∪ 𝓛_N`.

@@ -1,0 +1,317 @@
+//! Dynamic tenancy: which users are *currently* being served.
+//!
+//! The paper freezes the tenant set at policy-construction time, but a
+//! real service (the ROADMAP's north star; ease.ml's resource-sharing
+//! regime) sees tenants **arrive and depart mid-run**. This module holds
+//! the driver-side vocabulary for that scenario:
+//!
+//! * [`TenantSet`] — the active-user mask over a [`Problem`], with the
+//!   derived per-arm "retired" view (an arm is retired when none of its
+//!   owners is active, so it must not be dispatched);
+//! * [`ChurnEvent`] / [`ChurnSchedule`] — a validated, deterministically
+//!   ordered arrival/departure timeline the event loops replay.
+//!
+//! Convention: **every user starts inactive** and becomes active only
+//! through an [`ChurnEventKind::Arrival`] event (the t = 0 cohort arrives
+//! at time 0). Regret accrues only over a user's active windows (Eq. 2
+//! with per-user entry/exit integration limits — see `sim::churn`).
+
+use super::{ArmId, Problem, UserId};
+
+/// Active-user mask over a problem's tenants.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct TenantSet {
+    active: Vec<bool>,
+    n_active: usize,
+}
+
+impl TenantSet {
+    /// All `n_users` tenants inactive (the churn-loop starting state).
+    pub fn none_active(n_users: usize) -> Self {
+        TenantSet { active: vec![false; n_users], n_active: 0 }
+    }
+
+    /// All `n_users` tenants active (the paper's static setting).
+    pub fn all_active(n_users: usize) -> Self {
+        TenantSet { active: vec![true; n_users], n_active: n_users }
+    }
+
+    /// Total tenants (active or not).
+    pub fn n_users(&self) -> usize {
+        self.active.len()
+    }
+
+    /// Currently active tenant count.
+    pub fn n_active(&self) -> usize {
+        self.n_active
+    }
+
+    /// Whether tenant `u` is active.
+    #[inline]
+    pub fn is_active(&self, u: UserId) -> bool {
+        self.active[u]
+    }
+
+    /// Mark tenant `u` active; returns whether the state changed.
+    pub fn activate(&mut self, u: UserId) -> bool {
+        if self.active[u] {
+            return false;
+        }
+        self.active[u] = true;
+        self.n_active += 1;
+        true
+    }
+
+    /// Mark tenant `u` inactive; returns whether the state changed.
+    pub fn deactivate(&mut self, u: UserId) -> bool {
+        if !self.active[u] {
+            return false;
+        }
+        self.active[u] = false;
+        self.n_active -= 1;
+        true
+    }
+
+    /// Iterator over the active tenants, in ascending id order.
+    pub fn active_users(&self) -> impl Iterator<Item = UserId> + '_ {
+        self.active.iter().enumerate().filter(|(_, &a)| a).map(|(u, _)| u)
+    }
+
+    /// Whether arm `x` is retired under this tenant set: retired iff
+    /// **no** owning user is active (a shared arm stays live while any
+    /// owner is). Retired arms must not be dispatched.
+    pub fn arm_retired(&self, problem: &Problem, x: ArmId) -> bool {
+        !problem.arm_users[x].iter().any(|&u| self.active[u])
+    }
+
+    /// Refresh a preallocated per-arm retired mask (see
+    /// [`TenantSet::arm_retired`]) after the arms of `user` changed
+    /// eligibility — only that user's arms are re-derived.
+    pub fn refresh_retired_for_user(&self, problem: &Problem, user: UserId, retired: &mut [bool]) {
+        for &x in &problem.user_arms[user] {
+            retired[x] = self.arm_retired(problem, x);
+        }
+    }
+}
+
+/// What a churn event does to its tenant.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ChurnEventKind {
+    /// The tenant enters (or re-enters) the service.
+    Arrival,
+    /// The tenant exits; its unstarted arms are retired.
+    Departure,
+}
+
+impl ChurnEventKind {
+    /// Deterministic tie-break rank: at equal times departures apply
+    /// before arrivals, so a device freed by a departure sees the
+    /// arriving tenant's arms in the same decision.
+    fn rank(self) -> u8 {
+        match self {
+            ChurnEventKind::Departure => 0,
+            ChurnEventKind::Arrival => 1,
+        }
+    }
+}
+
+/// One tenant lifecycle event in (virtual or scaled wall-clock) time.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct ChurnEvent {
+    /// Event time (same unit as arm costs).
+    pub time: f64,
+    /// Affected tenant.
+    pub user: UserId,
+    /// Arrival or departure.
+    pub kind: ChurnEventKind,
+}
+
+/// A validated arrival/departure timeline.
+///
+/// Invariants enforced by [`ChurnSchedule::new`]: finite non-negative
+/// times; events totally ordered by `(time, kind rank, user)`; each
+/// user's events strictly alternate Arrival → Departure → Arrival → …
+/// starting with an Arrival (a user may re-enter any number of times —
+/// the "leave-then-rejoin" case the churn parity tests pin).
+#[derive(Clone, Debug, PartialEq)]
+pub struct ChurnSchedule {
+    events: Vec<ChurnEvent>,
+}
+
+impl ChurnSchedule {
+    /// Sort and validate a raw event list. Panics with a description on
+    /// an inconsistent timeline (generator bug, not a runtime condition).
+    pub fn new(mut events: Vec<ChurnEvent>) -> Self {
+        for e in &events {
+            assert!(
+                e.time.is_finite() && e.time >= 0.0,
+                "churn event time must be finite and non-negative, got {} for user {}",
+                e.time,
+                e.user
+            );
+        }
+        events.sort_by(|a, b| {
+            a.time
+                .total_cmp(&b.time)
+                .then_with(|| a.kind.rank().cmp(&b.kind.rank()))
+                .then_with(|| a.user.cmp(&b.user))
+        });
+        let n_users = events.iter().map(|e| e.user + 1).max().unwrap_or(0);
+        let mut active = vec![false; n_users];
+        let mut last_time = vec![f64::NEG_INFINITY; n_users];
+        for e in &events {
+            match e.kind {
+                ChurnEventKind::Arrival => {
+                    assert!(!active[e.user], "user {} arrives while already active", e.user)
+                }
+                ChurnEventKind::Departure => {
+                    assert!(active[e.user], "user {} departs while inactive", e.user)
+                }
+            }
+            assert!(
+                e.time > last_time[e.user] || last_time[e.user] == f64::NEG_INFINITY,
+                "user {} has two events at the same time {}",
+                e.user,
+                e.time
+            );
+            active[e.user] = e.kind == ChurnEventKind::Arrival;
+            last_time[e.user] = e.time;
+        }
+        ChurnSchedule { events }
+    }
+
+    /// The ordered event list.
+    pub fn events(&self) -> &[ChurnEvent] {
+        &self.events
+    }
+
+    /// Number of events.
+    pub fn len(&self) -> usize {
+        self.events.len()
+    }
+
+    /// Whether the timeline is empty (static tenancy).
+    pub fn is_empty(&self) -> bool {
+        self.events.is_empty()
+    }
+
+    /// Last event time (0 when empty).
+    pub fn end_time(&self) -> f64 {
+        self.events.last().map(|e| e.time).unwrap_or(0.0)
+    }
+
+    /// Users that are ever part of the timeline.
+    pub fn n_users_seen(&self) -> usize {
+        self.events.iter().map(|e| e.user + 1).max().unwrap_or(0)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::Mat;
+
+    fn problem() -> Problem {
+        // User 0 owns {0,1}, user 1 owns {1,2}: arm 1 is shared.
+        let user_arms = vec![vec![0, 1], vec![1, 2]];
+        let arm_users = Problem::compute_arm_users(3, &user_arms);
+        Problem {
+            name: "tenancy".into(),
+            n_users: 2,
+            cost: vec![1.0; 3],
+            user_arms,
+            arm_users,
+            prior_mean: vec![0.0; 3],
+            prior_cov: Mat::eye(3),
+        }
+    }
+
+    #[test]
+    fn activate_deactivate_track_counts() {
+        let mut ts = TenantSet::none_active(3);
+        assert_eq!(ts.n_active(), 0);
+        assert!(ts.activate(1));
+        assert!(!ts.activate(1), "re-activation is a no-op");
+        assert!(ts.is_active(1));
+        assert_eq!(ts.n_active(), 1);
+        assert_eq!(ts.active_users().collect::<Vec<_>>(), vec![1]);
+        assert!(ts.deactivate(1));
+        assert!(!ts.deactivate(1));
+        assert_eq!(ts.n_active(), 0);
+        assert_eq!(TenantSet::all_active(4).n_active(), 4);
+    }
+
+    #[test]
+    fn shared_arm_retires_only_when_all_owners_leave() {
+        let p = problem();
+        let mut ts = TenantSet::all_active(2);
+        let mut retired = vec![false; 3];
+        ts.deactivate(0);
+        ts.refresh_retired_for_user(&p, 0, &mut retired);
+        assert!(retired[0], "user 0's private arm retires");
+        assert!(!retired[1], "shared arm stays while user 1 is active");
+        ts.deactivate(1);
+        ts.refresh_retired_for_user(&p, 1, &mut retired);
+        assert!(retired[1] && retired[2]);
+        ts.activate(1);
+        ts.refresh_retired_for_user(&p, 1, &mut retired);
+        assert!(!retired[1] && !retired[2], "rejoin un-retires");
+        assert!(retired[0], "the absent tenant's private arm stays retired");
+    }
+
+    #[test]
+    fn schedule_orders_and_validates() {
+        let s = ChurnSchedule::new(vec![
+            ChurnEvent { time: 5.0, user: 0, kind: ChurnEventKind::Departure },
+            ChurnEvent { time: 0.0, user: 0, kind: ChurnEventKind::Arrival },
+            ChurnEvent { time: 5.0, user: 1, kind: ChurnEventKind::Arrival },
+            ChurnEvent { time: 9.0, user: 1, kind: ChurnEventKind::Departure },
+        ]);
+        let kinds: Vec<_> = s.events().iter().map(|e| (e.time, e.user, e.kind)).collect();
+        // At t = 5 the departure applies before the arrival.
+        assert_eq!(
+            kinds,
+            vec![
+                (0.0, 0, ChurnEventKind::Arrival),
+                (5.0, 0, ChurnEventKind::Departure),
+                (5.0, 1, ChurnEventKind::Arrival),
+                (9.0, 1, ChurnEventKind::Departure),
+            ]
+        );
+        assert_eq!(s.len(), 4);
+        assert!(!s.is_empty());
+        assert_eq!(s.end_time(), 9.0);
+        assert_eq!(s.n_users_seen(), 2);
+        assert!(ChurnSchedule::new(vec![]).is_empty());
+    }
+
+    #[test]
+    fn schedule_allows_leave_then_rejoin() {
+        let s = ChurnSchedule::new(vec![
+            ChurnEvent { time: 0.0, user: 0, kind: ChurnEventKind::Arrival },
+            ChurnEvent { time: 2.0, user: 0, kind: ChurnEventKind::Departure },
+            ChurnEvent { time: 6.0, user: 0, kind: ChurnEventKind::Arrival },
+            ChurnEvent { time: 8.0, user: 0, kind: ChurnEventKind::Departure },
+        ]);
+        assert_eq!(s.len(), 4);
+    }
+
+    #[test]
+    #[should_panic(expected = "arrives while already active")]
+    fn schedule_rejects_double_arrival() {
+        let _ = ChurnSchedule::new(vec![
+            ChurnEvent { time: 0.0, user: 0, kind: ChurnEventKind::Arrival },
+            ChurnEvent { time: 1.0, user: 0, kind: ChurnEventKind::Arrival },
+        ]);
+    }
+
+    #[test]
+    #[should_panic(expected = "departs while inactive")]
+    fn schedule_rejects_orphan_departure() {
+        let _ = ChurnSchedule::new(vec![ChurnEvent {
+            time: 1.0,
+            user: 0,
+            kind: ChurnEventKind::Departure,
+        }]);
+    }
+}

@@ -35,7 +35,7 @@
 
 use super::argmax::TournamentTree;
 use crate::gp::{expected_improvement, Gp};
-use crate::problem::{ArmId, Problem};
+use crate::problem::{ArmId, Problem, UserId};
 
 /// Scoring backend: consumes observations, produces per-arm EIrate.
 ///
@@ -83,6 +83,29 @@ pub trait EiBackend {
 
     /// Backend label for reports.
     fn label(&self) -> &'static str;
+
+    /// Tenant churn: `user` joined/rejoined — bring its arms back into
+    /// the live scoring state. Returns whether the backend applied the
+    /// change in place; the default `false` (taken by the XLA artifact,
+    /// whose AOT shapes are fixed) makes [`super::MmGpEi`] report the
+    /// event unsupported so the driver rebuilds.
+    fn user_joined(&mut self, _problem: &Problem, _user: UserId) -> bool {
+        false
+    }
+
+    /// Tenant churn: `user` left — stop paying for its arms. Same
+    /// in-place/rebuild contract as [`EiBackend::user_joined`].
+    fn user_left(&mut self, _problem: &Problem, _user: UserId) -> bool {
+        false
+    }
+
+    /// The revealed value of `arm` if it has finished, else `None`.
+    /// Churn drivers use this to restore a rejoining tenant's incumbent
+    /// from its already-finished arms; backends that cannot answer
+    /// (default) return `None`, which leaves the incumbent empty.
+    fn observed_value(&self, _arm: ArmId) -> Option<f64> {
+        None
+    }
 }
 
 /// Native rust backend: incremental-Cholesky GP posterior, O(1)-read
@@ -120,6 +143,15 @@ pub struct NativeBackend {
     /// Cost mode of the last assembly; `None` forces the first call to
     /// assemble every arm.
     last_use_cost: Option<bool>,
+    /// Tenant churn: which users are currently active. A shared arm's GP
+    /// maintenance is dropped only once *every* owner has left.
+    active_users: Vec<bool>,
+    /// Revealed `z(x)` per finished arm (NaN = not finished). Kept
+    /// verbatim — the GP's pinned mean picks up float residue from later
+    /// sweeps, and incumbent restoration on a tenant rejoin must use the
+    /// *exact* observed values to stay bit-identical to a rebuild that
+    /// replays the observation history.
+    observed_z: Vec<f64>,
 }
 
 impl NativeBackend {
@@ -141,6 +173,8 @@ impl NativeBackend {
             tree: TournamentTree::new(n),
             last_selected: vec![false; n],
             last_use_cost: None,
+            active_users: vec![true; problem.n_users],
+            observed_z: vec![f64::NAN; n],
         }
     }
 
@@ -252,11 +286,29 @@ impl NativeBackend {
 
 impl EiBackend for NativeBackend {
     fn observe(&mut self, arm: ArmId, z: f64) {
+        // Tenant churn: an arm dispatched before its tenant departed can
+        // complete afterwards. Bring it back just long enough to fold the
+        // observation into the shared posterior (the knowledge must not
+        // be dropped — it prices every correlated arm), then freeze it
+        // again. The enable/disable round trip is bit-exact (see
+        // `Gp::enable_arm`), so this leaves the posterior identical to a
+        // from-scratch replay of the same observation sequence.
+        let was_disabled = !self.gp.is_enabled(arm);
+        if was_disabled {
+            self.gp.enable_arm(arm);
+        }
+        let first = !self.gp.is_observed(arm);
         // The GP reports exactly the arms whose (μ, σ) moved; only those
         // can change their EI under an unchanged incumbent vector.
         let changed = self.gp.observe(arm, z);
         for &x in changed {
             Self::mark_dirty(&mut self.dirty, &mut self.dirty_arms, x);
+        }
+        if first && self.gp.is_observed(arm) {
+            self.observed_z[arm] = z;
+        }
+        if was_disabled {
+            self.gp.disable_arm(arm);
         }
     }
 
@@ -288,6 +340,43 @@ impl EiBackend for NativeBackend {
 
     fn label(&self) -> &'static str {
         "native"
+    }
+
+    /// Incremental join: re-enable the tenant's arms in the live GP
+    /// (bit-exact catch-up on the observations that arrived while it was
+    /// away — see [`Gp::enable_arm`]) and mark them dirty so the next
+    /// decision rescoring folds them back into the score buffer and
+    /// repairs their tournament-tree leaves. `O(arms · t²)` instead of a
+    /// from-scratch rebuild.
+    fn user_joined(&mut self, _problem: &Problem, user: UserId) -> bool {
+        self.active_users[user] = true;
+        for &x in &self.user_arms[user] {
+            self.gp.enable_arm(x);
+            Self::mark_dirty(&mut self.dirty, &mut self.dirty_arms, x);
+        }
+        true
+    }
+
+    /// Incremental leave: freeze the GP maintenance of every arm whose
+    /// owners have now *all* departed. The arms themselves are masked out
+    /// of the score buffer/tree by the driver (retirement is folded into
+    /// the `selected` mask), so scoring needs no extra work here.
+    fn user_left(&mut self, _problem: &Problem, user: UserId) -> bool {
+        self.active_users[user] = false;
+        for &x in &self.user_arms[user] {
+            if !self.arm_users[x].iter().any(|&u| self.active_users[u]) {
+                self.gp.disable_arm(x);
+            }
+        }
+        true
+    }
+
+    fn observed_value(&self, arm: ArmId) -> Option<f64> {
+        if self.gp.is_observed(arm) {
+            Some(self.observed_z[arm])
+        } else {
+            None
+        }
     }
 }
 

@@ -1,7 +1,7 @@
 //! The paper's Algorithm 1: **MM-GP-EI** (GP-EI-MDMT in the experiments).
 
 use super::{EiBackend, Incumbents, NativeBackend, Policy, SchedContext};
-use crate::problem::{ArmId, Problem};
+use crate::problem::{ArmId, Problem, UserId};
 
 /// Multi-device, multi-tenant GP-EI.
 ///
@@ -19,6 +19,12 @@ pub struct MmGpEi {
     name: String,
     /// Reusable incumbent-vector buffer (zero-allocation select path).
     best_buf: Vec<f64>,
+    /// Tenant churn: active-user mask (all true in the static setting).
+    /// A departed tenant's incumbent stays dropped even if one of its
+    /// in-flight arms completes after the leave — matching the
+    /// from-scratch rebuild oracle, which replays history and then
+    /// re-clears absent tenants.
+    active_users: Vec<bool>,
 }
 
 impl MmGpEi {
@@ -37,6 +43,7 @@ impl MmGpEi {
             use_cost: true,
             name,
             best_buf: Vec::with_capacity(problem.n_users),
+            active_users: vec![true; problem.n_users],
         }
     }
 
@@ -88,7 +95,48 @@ impl Policy for MmGpEi {
 
     fn observe(&mut self, problem: &Problem, arm: ArmId, z: f64) {
         self.backend.observe(arm, z);
-        self.incumbents.update_arm(problem, arm, z);
+        // Fold the observation into every *active* owner's incumbent. In
+        // the static setting every user is active, so this is exactly
+        // `update_arm`; under churn a departed tenant's incumbent stays
+        // dropped (a rejoin restores it from the finished arms).
+        for &u in &problem.arm_users[arm] {
+            if self.active_users[u] {
+                self.incumbents.update(u, z);
+            }
+        }
+    }
+
+    /// Incremental tenant join: the backend re-enables the tenant's arms
+    /// (bit-exact GP catch-up + dirty marking), and the incumbent is
+    /// restored from the tenant's already-finished arms — so a
+    /// leave-then-rejoin makes decisions bit-identical to a from-scratch
+    /// rebuild that replayed the whole observation history (the churn
+    /// parity gates pin this).
+    fn user_joined(&mut self, problem: &Problem, user: UserId) -> bool {
+        if !self.backend.user_joined(problem, user) {
+            return false;
+        }
+        self.active_users[user] = true;
+        self.incumbents.clear(user);
+        for &a in &problem.user_arms[user] {
+            if let Some(z) = self.backend.observed_value(a) {
+                self.incumbents.update(user, z);
+            }
+        }
+        true
+    }
+
+    /// Incremental tenant leave: freeze the backend's per-arm GP work
+    /// for the departed tenant and drop its incumbent (its arms are
+    /// masked out of scoring by the driver, so the stale bar can never
+    /// influence another tenant's decision).
+    fn user_left(&mut self, problem: &Problem, user: UserId) -> bool {
+        if !self.backend.user_left(problem, user) {
+            return false;
+        }
+        self.active_users[user] = false;
+        self.incumbents.clear(user);
+        true
     }
 }
 

@@ -30,7 +30,7 @@ pub use fantasy::MmGpEiFantasy;
 pub use gp_ucb::{GpUcbMdmt, GpUcbRoundRobin};
 pub use mm_gp_ei::MmGpEi;
 
-use crate::problem::{ArmId, Problem};
+use crate::problem::{ArmId, Problem, UserId};
 
 /// Incumbent value used for a user with no observation yet.
 ///
@@ -45,8 +45,13 @@ pub const EMPTY_INCUMBENT: f64 = 0.0;
 pub struct SchedContext<'a> {
     /// Problem instance (costs, memberships, prior).
     pub problem: &'a Problem,
-    /// `selected[x]` — x has been dispatched (observed **or** running).
-    /// Algorithm 1 only considers `𝓛 \ 𝓛_ob ∖ running` as candidates.
+    /// `selected[x]` — x is not dispatchable: already dispatched
+    /// (observed **or** running), or — under tenant churn — *retired*
+    /// because every owning tenant has departed (the churn drivers fold
+    /// retirement into this mask, so every policy's candidate filter is
+    /// churn-correct without changes; a rejoining tenant's unselected
+    /// arms flip back to `false`). Algorithm 1 only considers
+    /// `𝓛 \ 𝓛_ob ∖ running` as candidates.
     pub selected: &'a [bool],
     /// `observed[x]` — x has finished and its z is known.
     pub observed: &'a [bool],
@@ -77,6 +82,53 @@ pub trait Policy {
 
     /// Observation callback: arm `x` finished with performance `z`.
     fn observe(&mut self, problem: &Problem, arm: ArmId, z: f64);
+
+    /// Tenant churn: `user` joined (or rejoined) the service. Returns
+    /// whether the policy applied the change **in place**; the default
+    /// `false` tells the driver to fall back to a from-scratch rebuild
+    /// (reconstruct the policy and replay the observation history), so
+    /// baselines keep working under churn without any code. [`MmGpEi`]
+    /// overrides this with an incremental join — the tenant's arms are
+    /// appended to the live GP/score state in `O(arms · t²)` instead of
+    /// the rebuild's `O(t³ + |𝓛|t²)` — validated bit-exact against the
+    /// rebuild path by the churn parity gates.
+    fn user_joined(&mut self, _problem: &Problem, _user: UserId) -> bool {
+        false
+    }
+
+    /// Tenant churn: `user` left the service. Same in-place/rebuild
+    /// contract as [`Policy::user_joined`]. Note the *driver* owns arm
+    /// retirement (folded into `SchedContext::selected`); this callback
+    /// lets a policy additionally stop paying for the departed tenant
+    /// (freeze its GP sweeps, drop its incumbent).
+    fn user_left(&mut self, _problem: &Problem, _user: UserId) -> bool {
+        false
+    }
+}
+
+/// Adapter that forces the driver's **rebuild** path on every churn
+/// event by reporting both hooks unsupported — the from-scratch oracle
+/// the incremental join/leave implementations are gated against
+/// (`rust/tests/churn.rs`, `benches/fig6_churn.rs`).
+pub struct ForceRebuild<P: Policy>(
+    /// The wrapped policy.
+    pub P,
+);
+
+impl<P: Policy> Policy for ForceRebuild<P> {
+    fn name(&self) -> String {
+        self.0.name()
+    }
+
+    fn select(&mut self, ctx: &SchedContext) -> Option<ArmId> {
+        self.0.select(ctx)
+    }
+
+    fn observe(&mut self, problem: &Problem, arm: ArmId, z: f64) {
+        self.0.observe(problem, arm, z);
+    }
+
+    // user_joined / user_left: trait defaults (false) — always rebuild.
 }
 
 /// Per-user incumbent tracker `z(x_i*(t))` shared by several policies.
@@ -100,6 +152,14 @@ impl Incumbents {
     /// Whether user `u` has at least one observation.
     pub fn has_observation(&self, u: usize) -> bool {
         self.best[u].is_some()
+    }
+
+    /// Drop user `u`'s incumbent (tenant departure): subsequent
+    /// [`Incumbents::value`] reads fall back to [`EMPTY_INCUMBENT`] until
+    /// a new observation — or until a rejoin restores it from the user's
+    /// already-finished arms (see [`MmGpEi`]'s churn hooks).
+    pub fn clear(&mut self, u: usize) {
+        self.best[u] = None;
     }
 
     /// Fold in observation `z` of an arm owned by user `u`.

@@ -13,13 +13,17 @@
 //! over; each device, upon becoming free, immediately asks the policy for
 //! the next arm.
 
+pub(crate) mod churn;
+
+pub use churn::{simulate_churn, ChurnResult};
+
 use std::cmp::Ordering;
 use std::collections::BinaryHeap;
 use std::time::{Duration, Instant};
 
 use crate::metrics::StepCurve;
 use crate::problem::{ArmId, Problem, Truth};
-use crate::sched::{Policy, SchedContext, EMPTY_INCUMBENT};
+use crate::sched::{Incumbents, Policy, SchedContext};
 
 /// Simulation parameters.
 #[derive(Clone, Debug)]
@@ -101,11 +105,12 @@ pub fn with_cost_estimates(problem: &Problem, estimated: &[f64]) -> Problem {
 }
 
 /// Completion event ordered by time (min-heap via `Reverse`-style cmp).
-struct Completion {
-    finish: f64,
-    device: usize,
-    arm: ArmId,
-    start: f64,
+/// Shared with the churn event loop (`sim::churn`).
+pub(crate) struct Completion {
+    pub(crate) finish: f64,
+    pub(crate) device: usize,
+    pub(crate) arm: ArmId,
+    pub(crate) start: f64,
 }
 
 impl PartialEq for Completion {
@@ -182,11 +187,29 @@ pub fn simulate_with_estimates(
     let mut warm: std::collections::VecDeque<ArmId> =
         problem.warm_start_arms(config.warm_start_per_user).into();
 
-    // Per-user optimum and current incumbent for regret accounting.
+    // Per-user optimum and current incumbent for regret accounting. The
+    // incumbents are Option-based ([`crate::sched::Incumbents`]): a user
+    // with no observation yet is accounted against `empty_ref` — the
+    // accuracy-zero convention floored at the user's worst arm — so
+    // workloads with negative-valued optima keep a positive gap (the old
+    // raw `EMPTY_INCUMBENT = 0.0` floor silently zeroed regret whenever
+    // `z* < 0`). For the paper's non-negative workloads `empty_ref` is
+    // exactly 0.0, so reports are byte-identical to the old accounting.
     let z_star: Vec<f64> = (0..n_users).map(|u| truth.best_value(problem, u)).collect();
-    let mut incumbent: Vec<f64> = vec![EMPTY_INCUMBENT; n_users];
-    let gap_sum = |inc: &[f64]| -> f64 {
-        inc.iter().zip(&z_star).map(|(&b, &s)| (s - b).max(0.0)).sum()
+    let empty_ref: Vec<f64> = (0..n_users)
+        .map(|u| problem.user_arms[u].iter().map(|&a| truth.z[a]).fold(0.0f64, f64::min))
+        .collect();
+    let mut incumbents = Incumbents::new(n_users);
+    let gap_sum = |inc: &Incumbents| -> f64 {
+        z_star
+            .iter()
+            .zip(&empty_ref)
+            .enumerate()
+            .map(|(u, (&s, &e))| {
+                let b = if inc.has_observation(u) { inc.value(u) } else { e };
+                (s - b).max(0.0)
+            })
+            .sum()
     };
 
     let mut events: BinaryHeap<Completion> = BinaryHeap::new();
@@ -195,7 +218,7 @@ pub fn simulate_with_estimates(
     let mut n_decisions = 0usize;
 
     // Sum-gap step curve; converted to avg at the end.
-    let mut sum_gap_curve = StepCurve::new(gap_sum(&incumbent));
+    let mut sum_gap_curve = StepCurve::new(gap_sum(&incumbents));
     let mut cumulative = 0.0;
     let mut t_prev = 0.0;
 
@@ -254,7 +277,7 @@ pub fn simulate_with_estimates(
     while let Some(c) = events.pop() {
         let now = c.finish;
         // Integrate regret over [t_prev, now).
-        cumulative += gap_sum(&incumbent) * (now - t_prev);
+        cumulative += gap_sum(&incumbents) * (now - t_prev);
         t_prev = now;
 
         // Observe.
@@ -264,16 +287,12 @@ pub fn simulate_with_estimates(
         policy.observe(view, c.arm, z);
         decision_wall += t0.elapsed();
         observations.push(Observation { arm: c.arm, start: c.start, finish: now, z, device: c.device });
-        for &u in &problem.arm_users[c.arm] {
-            if z > incumbent[u] || (incumbent[u] == EMPTY_INCUMBENT && z >= EMPTY_INCUMBENT) {
-                incumbent[u] = incumbent[u].max(z);
-            }
-        }
-        sum_gap_curve.push(now, gap_sum(&incumbent));
+        incumbents.update_arm(problem, c.arm, z);
+        sum_gap_curve.push(now, gap_sum(&incumbents));
 
         // Early stop at the convergence cutoff (Figure-5 protocol).
         if let Some(cut) = config.stop_at_cutoff {
-            if gap_sum(&incumbent) / n_users as f64 <= cut {
+            if gap_sum(&incumbents) / n_users as f64 <= cut {
                 break;
             }
         }
@@ -296,10 +315,14 @@ pub fn simulate_with_estimates(
     let horizon = config.horizon.unwrap_or(makespan);
     // Extend the integral to the horizon with the final gap.
     if horizon > t_prev {
-        cumulative += gap_sum(&incumbent) * (horizon - t_prev);
+        cumulative += gap_sum(&incumbents) * (horizon - t_prev);
     } else if horizon < t_prev {
-        // Re-integrate exactly over [0, horizon] from the curve.
+        // Re-integrate exactly over [0, horizon] from the curve, and
+        // truncate the curve itself so the report KPIs (e.g.
+        // `final_regret`) and the plotted series agree with the
+        // truncated integral instead of leaking post-horizon tail.
         cumulative = sum_gap_curve.integral_to(horizon);
+        sum_gap_curve = sum_gap_curve.truncated(horizon);
     }
 
     SimResult {
@@ -445,6 +468,71 @@ mod tests {
         let m6 = mk(6);
         assert!(m2 <= m1 + 1e-9);
         assert!(m6 <= m2 + 1e-9);
+    }
+
+    #[test]
+    fn negative_optima_still_accrue_regret() {
+        // Satellite fix: with the raw EMPTY_INCUMBENT = 0.0 floor, a
+        // workload whose optima are negative reported zero gap until the
+        // first observation (and forever, if all z < 0). The Option-based
+        // incumbents + per-user empty reference must keep regret positive
+        // and make the post-observation curve shift-invariant.
+        let (p, t) = problem_and_truth();
+        let shift = 5.0;
+        let mut p_neg = p.clone();
+        let t_neg = Truth { z: t.z.iter().map(|z| z - shift).collect() };
+        for m in p_neg.prior_mean.iter_mut() {
+            *m -= shift;
+        }
+        let cfg = SimConfig { n_devices: 1, ..Default::default() };
+        let r_pos = simulate(&p, &t, &mut MmGpEi::new(&p), &cfg);
+        let r_neg = simulate(&p_neg, &t_neg, &mut MmGpEi::new(&p_neg), &cfg);
+        assert!(
+            r_neg.cumulative_regret > 0.0,
+            "negative-valued optima must not silently zero the regret"
+        );
+        // The shifted GP makes identical decisions (EI is shift-invariant
+        // when prior and incumbents shift together), so once every user
+        // has an incumbent the gap curves must match exactly.
+        let arms_pos: Vec<_> = r_pos.observations.iter().map(|o| o.arm).collect();
+        let arms_neg: Vec<_> = r_neg.observations.iter().map(|o| o.arm).collect();
+        assert_eq!(arms_pos, arms_neg, "schedules must match under a constant shift");
+        assert!(
+            (r_pos.inst_regret.final_value() - r_neg.inst_regret.final_value()).abs() < 1e-9
+        );
+        let probe = r_pos.makespan * 0.9; // late: every user has observed
+        assert!(
+            (r_pos.inst_regret.value(probe) - r_neg.inst_regret.value(probe)).abs() < 1e-9,
+            "gap is shift-invariant once incumbents exist"
+        );
+    }
+
+    #[test]
+    fn horizon_truncates_curve_and_integral_agree() {
+        // Satellite fix: with horizon < makespan the returned inst_regret
+        // curve must stop at the horizon, and re-integrating it must give
+        // exactly the reported cumulative regret.
+        let (p, t) = problem_and_truth();
+        let full = simulate(&p, &t, &mut MmGpEi::new(&p), &SimConfig { n_devices: 1, ..Default::default() });
+        let h = full.makespan / 2.0;
+        let half = simulate(
+            &p,
+            &t,
+            &mut MmGpEi::new(&p),
+            &SimConfig { n_devices: 1, warm_start_per_user: 2, horizon: Some(h), ..Default::default() },
+        );
+        assert!(half.inst_regret.end_time() <= h, "curve must not extend past the horizon");
+        // inst_regret is the sum-gap curve scaled by 1/n_users.
+        let reintegrated = half.inst_regret.integral_to(h) * p.n_users as f64;
+        assert!(
+            (reintegrated - half.cumulative_regret).abs() < 1e-9,
+            "curve and KPI disagree: {reintegrated} vs {}",
+            half.cumulative_regret
+        );
+        assert!(
+            half.inst_regret.final_value() >= full.inst_regret.final_value(),
+            "mid-run truncation must not report the exhausted end state"
+        );
     }
 
     #[test]

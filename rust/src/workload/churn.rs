@@ -1,0 +1,318 @@
+//! Tenant-churn workload: the service-under-traffic scenario.
+//!
+//! The paper's experiments freeze the tenant cohort; a *service* (the
+//! ease.ml regime PAPERS.md describes) sees tenants arrive and depart
+//! continuously. This generator produces, from one seed:
+//!
+//! * a [`Problem`] over the **full tenant universe** (every tenant that
+//!   will ever appear), user-major disjoint arm blocks, with a
+//!   **shared-prior cross-covariance**: `K[(u,i),(v,j)] = B[u][v]·C[i][j]`
+//!   where `C` is a Matérn ν = 5/2 gram over the model embedding and `B`
+//!   an exchangeable user-similarity matrix (`B[u][v] = ρ` off-diagonal)
+//!   — so observations of one tenant's models transfer to later arrivals;
+//! * a [`Truth`] drawn from exactly that prior (Kronecker-factored
+//!   sampling: `Z = L_B · G · L_Cᵀ`, `G` i.i.d. standard normal), shifted
+//!   non-negative with the shift folded into the prior mean (the paper's
+//!   §6.3 convention, keeping the well-specified-prior regime);
+//! * a [`ChurnSchedule`]: an initial cohort arriving at t = 0, later
+//!   tenants with Poisson-like (exponential-gap) arrivals, bounded
+//!   uniform sojourns, and an optional single rejoin per tenant (the
+//!   leave-then-rejoin case the parity tests pin).
+
+use crate::kernels::{exchangeable_user_sim, kronecker_arm_cov, Kernel, Matern52};
+use crate::linalg::cholesky_jittered;
+use crate::problem::{ChurnEvent, ChurnEventKind, ChurnSchedule, Problem, Truth};
+use crate::prng::Rng;
+
+/// Parameters of the churn workload.
+#[derive(Clone, Debug)]
+pub struct ChurnConfig {
+    /// Total tenants that ever appear (the problem's user universe).
+    pub n_users: usize,
+    /// Models (arms) per tenant.
+    pub n_models: usize,
+    /// Cohort already present at t = 0.
+    pub initial_users: usize,
+    /// Mean gap between later arrivals (exponential, i.e. Poisson-like
+    /// arrival process).
+    pub arrival_gap: f64,
+    /// Sojourn bounds `[lo, hi)`: each tenant stays a uniform draw from
+    /// this range (bounded — no tenant lingers forever).
+    pub sojourn: (f64, f64),
+    /// Probability a departed tenant rejoins once.
+    pub rejoin_prob: f64,
+    /// Mean away-time before a rejoin (exponential gap).
+    pub rejoin_gap: f64,
+    /// Cross-tenant prior correlation ρ ∈ [0, 1) (the shared prior that
+    /// lets the service warm-start late arrivals).
+    pub user_corr: f64,
+    /// Matérn output variance.
+    pub variance: f64,
+    /// Matérn lengthscale over the 1-D model embedding.
+    pub lengthscale: f64,
+    /// Cost range `[lo, hi)` for per-arm runtimes.
+    pub cost_range: (f64, f64),
+}
+
+impl Default for ChurnConfig {
+    fn default() -> Self {
+        ChurnConfig {
+            n_users: 24,
+            n_models: 8,
+            initial_users: 8,
+            arrival_gap: 4.0,
+            sojourn: (30.0, 90.0),
+            rejoin_prob: 0.25,
+            rejoin_gap: 10.0,
+            user_corr: 0.3,
+            variance: 1.0,
+            lengthscale: 0.8,
+            cost_range: (0.5, 2.0),
+        }
+    }
+}
+
+impl ChurnConfig {
+    /// Sanity-check the knob ranges (mirrors `ExperimentConfig::validate`).
+    pub fn validate(&self) -> Result<(), String> {
+        if self.n_users == 0 || self.n_models == 0 {
+            return Err("churn: n_users and n_models must be ≥ 1".into());
+        }
+        if self.initial_users == 0 || self.initial_users > self.n_users {
+            return Err(format!(
+                "churn: initial_users must be in 1..={}, got {}",
+                self.n_users, self.initial_users
+            ));
+        }
+        if !(self.arrival_gap > 0.0) || !(self.rejoin_gap > 0.0) {
+            return Err("churn: arrival_gap and rejoin_gap must be positive".into());
+        }
+        if !(self.sojourn.0 > 0.0) || !(self.sojourn.1 > self.sojourn.0) {
+            return Err(format!("churn: sojourn range must satisfy 0 < lo < hi, got {:?}", self.sojourn));
+        }
+        if !(0.0..=1.0).contains(&self.rejoin_prob) {
+            return Err(format!("churn: rejoin_prob must be in [0, 1], got {}", self.rejoin_prob));
+        }
+        if !(0.0..1.0).contains(&self.user_corr) {
+            return Err(format!("churn: user_corr must be in [0, 1), got {}", self.user_corr));
+        }
+        if !(self.variance > 0.0) || !(self.lengthscale > 0.0) {
+            return Err("churn: variance and lengthscale must be positive".into());
+        }
+        if !(self.cost_range.0 > 0.0) || !(self.cost_range.1 > self.cost_range.0) {
+            return Err(format!("churn: cost range must satisfy 0 < lo < hi, got {:?}", self.cost_range));
+        }
+        Ok(())
+    }
+}
+
+/// Exponential gap with the given mean (inverse-CDF; the `u = 0` corner
+/// is rejected so `ln` stays finite).
+fn exp_gap(rng: &mut Rng, mean: f64) -> f64 {
+    let mut u = rng.uniform();
+    while u <= f64::MIN_POSITIVE {
+        u = rng.uniform();
+    }
+    -mean * u.ln()
+}
+
+/// Generate the churn instance: `(problem, truth, schedule)`.
+///
+/// Deterministic per `(config, seed)`. The problem spans the full tenant
+/// universe; the schedule decides who is being *served* when — drivers
+/// replay it through `sim::simulate_churn` / `coordinator::serve_churn`.
+pub fn churn_workload(config: &ChurnConfig, seed: u64) -> (Problem, Truth, ChurnSchedule) {
+    config.validate().expect("invalid churn config");
+    let n = config.n_users;
+    let l = config.n_models;
+    let n_arms = n * l;
+    let mut rng = Rng::new(seed);
+
+    // Shared prior: B ⊗ C over user-major (u, m) arms.
+    let pts: Vec<Vec<f64>> = (0..l).map(|m| vec![m as f64 * 0.25]).collect();
+    let kern = Matern52 { variance: config.variance, lengthscale: config.lengthscale };
+    let model_cov = kern.gram(&pts);
+    let user_sim = exchangeable_user_sim(n, config.user_corr);
+    let arms: Vec<(usize, usize)> =
+        (0..n).flat_map(|u| (0..l).map(move |m| (u, m))).collect();
+    let prior_cov = kronecker_arm_cov(&arms, &user_sim, &model_cov);
+
+    // Truth ~ N(0, B ⊗ C) via the Kronecker factor: Z = L_B · G · L_Cᵀ.
+    // (Row-major vec(Z) then has covariance B ⊗ C — one O(n²l + nl²)
+    // pass instead of factorizing the nl × nl matrix.)
+    let (lb, _) = cholesky_jittered(&user_sim, 1e-10).expect("user similarity must be PSD");
+    let (lc, _) = cholesky_jittered(&model_cov, 1e-10).expect("Matérn gram must be PSD");
+    let mut g = vec![0.0; n_arms];
+    for slot in g.iter_mut() {
+        *slot = rng.normal();
+    }
+    // H = G · L_Cᵀ  (H[u][j] = Σ_i G[u][i] · L_C[j][i]).
+    let mut h = vec![0.0; n_arms];
+    for u in 0..n {
+        for j in 0..l {
+            let mut acc = 0.0;
+            for i in 0..=j {
+                acc += g[u * l + i] * lc[(j, i)];
+            }
+            h[u * l + j] = acc;
+        }
+    }
+    // Z = L_B · H  (Z[u][j] = Σ_v L_B[u][v] · H[v][j]).
+    let mut z = vec![0.0; n_arms];
+    for u in 0..n {
+        for j in 0..l {
+            let mut acc = 0.0;
+            for v in 0..=u {
+                acc += lb[(u, v)] * h[v * l + j];
+            }
+            z[u * l + j] = acc;
+        }
+    }
+    // Shift non-negative, folding the shift into the prior mean (§6.3).
+    let min = z.iter().copied().fold(f64::INFINITY, f64::min);
+    let shift = if min < 0.0 { -min } else { 0.0 };
+    for v in z.iter_mut() {
+        *v += shift;
+    }
+    let prior_mean = vec![shift; n_arms];
+
+    let cost: Vec<f64> =
+        (0..n_arms).map(|_| rng.uniform_in(config.cost_range.0, config.cost_range.1)).collect();
+    let user_arms: Vec<Vec<usize>> =
+        (0..n).map(|u| (0..l).map(|m| u * l + m).collect()).collect();
+    let arm_users = Problem::compute_arm_users(n_arms, &user_arms);
+    let problem = Problem {
+        name: format!("churn-{n}x{l}"),
+        n_users: n,
+        cost,
+        user_arms,
+        arm_users,
+        prior_mean,
+        prior_cov,
+    };
+    problem.validate();
+
+    // Arrival/departure timeline: initial cohort at t = 0, later tenants
+    // with exponential inter-arrival gaps, bounded uniform sojourns, and
+    // an optional single rejoin per tenant.
+    let mut events = Vec::with_capacity(2 * n);
+    let mut t_arrive = 0.0;
+    for u in 0..n {
+        let arrival = if u < config.initial_users {
+            0.0
+        } else {
+            t_arrive += exp_gap(&mut rng, config.arrival_gap);
+            t_arrive
+        };
+        let sojourn = rng.uniform_in(config.sojourn.0, config.sojourn.1);
+        let departure = arrival + sojourn;
+        events.push(ChurnEvent { time: arrival, user: u, kind: ChurnEventKind::Arrival });
+        events.push(ChurnEvent { time: departure, user: u, kind: ChurnEventKind::Departure });
+        if rng.uniform() < config.rejoin_prob {
+            let back = departure + exp_gap(&mut rng, config.rejoin_gap).max(1e-6);
+            let second = rng.uniform_in(config.sojourn.0, config.sojourn.1);
+            events.push(ChurnEvent { time: back, user: u, kind: ChurnEventKind::Arrival });
+            events.push(ChurnEvent { time: back + second, user: u, kind: ChurnEventKind::Departure });
+        }
+    }
+    (problem, Truth { z }, ChurnSchedule::new(events))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn small() -> ChurnConfig {
+        ChurnConfig { n_users: 6, n_models: 4, initial_users: 2, ..Default::default() }
+    }
+
+    #[test]
+    fn deterministic_per_seed() {
+        let (pa, ta, sa) = churn_workload(&small(), 11);
+        let (pb, tb, sb) = churn_workload(&small(), 11);
+        let (_, tc, _) = churn_workload(&small(), 12);
+        assert_eq!(ta.z, tb.z);
+        assert_eq!(pa.cost, pb.cost);
+        assert_eq!(sa, sb);
+        assert_ne!(ta.z, tc.z);
+    }
+
+    #[test]
+    fn prior_has_kronecker_cross_covariance() {
+        let cfg = small();
+        let (p, _, _) = churn_workload(&cfg, 3);
+        let kern = Matern52 { variance: cfg.variance, lengthscale: cfg.lengthscale };
+        let pts: Vec<Vec<f64>> = (0..cfg.n_models).map(|m| vec![m as f64 * 0.25]).collect();
+        let c = kern.gram(&pts);
+        let l = cfg.n_models;
+        // Same-user block is the Matérn gram; cross-user blocks are the
+        // ρ-scaled gram — the shared prior that transfers knowledge.
+        for i in 0..l {
+            for j in 0..l {
+                assert!((p.prior_cov[(i, j)] - c[(i, j)]).abs() < 1e-12);
+                assert!(
+                    (p.prior_cov[(i, l + j)] - cfg.user_corr * c[(i, j)]).abs() < 1e-12,
+                    "cross-tenant covariance must be ρ·C"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn truth_is_shifted_non_negative_with_mean_folded() {
+        let (p, t, _) = churn_workload(&small(), 7);
+        let min = t.z.iter().copied().fold(f64::INFINITY, f64::min);
+        assert!(min.abs() < 1e-12, "global minimum shifts to exactly 0");
+        assert!(p.prior_mean.iter().all(|&m| m == p.prior_mean[0] && m >= 0.0));
+    }
+
+    #[test]
+    fn schedule_covers_every_tenant_with_initial_cohort_at_zero() {
+        let cfg = small();
+        let (_, _, s) = churn_workload(&cfg, 5);
+        let at_zero = s
+            .events()
+            .iter()
+            .filter(|e| e.time == 0.0 && e.kind == ChurnEventKind::Arrival)
+            .count();
+        assert_eq!(at_zero, cfg.initial_users);
+        let mut seen = vec![false; cfg.n_users];
+        for e in s.events() {
+            seen[e.user] = true;
+        }
+        assert!(seen.iter().all(|&s| s), "every tenant appears in the timeline");
+        // Balanced: equal arrivals and departures per tenant (sojourns
+        // are bounded — everyone leaves).
+        for u in 0..cfg.n_users {
+            let arr = s
+                .events()
+                .iter()
+                .filter(|e| e.user == u && e.kind == ChurnEventKind::Arrival)
+                .count();
+            let dep = s
+                .events()
+                .iter()
+                .filter(|e| e.user == u && e.kind == ChurnEventKind::Departure)
+                .count();
+            assert_eq!(arr, dep, "tenant {u} must depart as often as it arrives");
+        }
+    }
+
+    #[test]
+    fn rejoins_appear_with_high_probability_knob() {
+        let cfg = ChurnConfig { rejoin_prob: 1.0, ..small() };
+        let (_, _, s) = churn_workload(&cfg, 9);
+        // Every tenant rejoins once → 4 events each.
+        assert_eq!(s.len(), 4 * cfg.n_users);
+    }
+
+    #[test]
+    fn validate_rejects_bad_knobs() {
+        assert!(ChurnConfig { initial_users: 0, ..small() }.validate().is_err());
+        assert!(ChurnConfig { initial_users: 99, ..small() }.validate().is_err());
+        assert!(ChurnConfig { user_corr: 1.0, ..small() }.validate().is_err());
+        assert!(ChurnConfig { sojourn: (5.0, 5.0), ..small() }.validate().is_err());
+        assert!(ChurnConfig { rejoin_prob: 1.5, ..small() }.validate().is_err());
+        assert!(small().validate().is_ok());
+    }
+}

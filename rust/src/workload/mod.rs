@@ -14,10 +14,12 @@
 //! [`Dataset::make_problem`] applies the paper's §6.1 protocol — isolate
 //! holdout users, estimate the GP prior from their rows, serve the rest.
 
+mod churn;
 mod dataset;
 mod generators;
 mod synthetic;
 
+pub use churn::{churn_workload, ChurnConfig};
 pub use dataset::{Dataset, ProtocolSplit};
 pub use generators::{azure, deeplearning, AZURE_MODELS, DEEPLEARNING_MODELS};
 pub use synthetic::{synthetic_gp, SyntheticConfig};

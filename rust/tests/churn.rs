@@ -1,0 +1,304 @@
+//! Tenant-churn invariants: the incremental join/leave path must be
+//! **bit-identical** to the from-scratch rebuild oracle — for any seeded
+//! join/leave/observe sequence, including leave-then-rejoin — at every
+//! layer: backend scores, selections, full simulated runs, and the
+//! serialized report bytes.
+
+use mmgpei::config::ExperimentConfig;
+use mmgpei::prng::Rng;
+use mmgpei::problem::{ChurnEvent, ChurnEventKind, ChurnSchedule, Problem};
+use mmgpei::report::RunReport;
+use mmgpei::sched::{rescan_eirate, EiBackend, ForceRebuild, MmGpEi, NativeBackend, Policy};
+use mmgpei::sim::{simulate_churn, ChurnResult, SimConfig};
+use mmgpei::testutil::check;
+use mmgpei::workload::{churn_workload, ChurnConfig};
+
+fn rand_churn_cfg(rng: &mut Rng) -> ChurnConfig {
+    let n_users = 4 + rng.below(5);
+    ChurnConfig {
+        n_users,
+        n_models: 3 + rng.below(3),
+        initial_users: 1 + rng.below(n_users),
+        arrival_gap: 1.0 + rng.uniform() * 4.0,
+        sojourn: (5.0 + rng.uniform() * 5.0, 15.0 + rng.uniform() * 20.0),
+        // High rejoin probability: the leave-then-rejoin case must be
+        // exercised constantly, not occasionally.
+        rejoin_prob: 0.75,
+        rejoin_gap: 2.0 + rng.uniform() * 4.0,
+        user_corr: rng.uniform() * 0.8,
+        ..Default::default()
+    }
+}
+
+fn bit_key(r: &ChurnResult) -> (Vec<(usize, usize, u64, u64)>, Vec<u64>, Vec<Option<u64>>, u64) {
+    (
+        r.observations
+            .iter()
+            .map(|o| (o.arm, o.device, o.finish.to_bits(), o.z.to_bits()))
+            .collect(),
+        r.per_user_regret.iter().map(|x| x.to_bits()).collect(),
+        r.join_latency.iter().map(|l| l.map(f64::to_bits)).collect(),
+        r.cumulative_regret.to_bits(),
+    )
+}
+
+#[test]
+fn any_seeded_churn_sequence_replays_bit_identical_to_rebuild_oracle() {
+    // The acceptance property: incremental join/leave (MM-GP-EI applying
+    // the hooks in place) vs the driver's from-scratch rebuild at every
+    // event — same schedule bits, same per-tenant regret bits, same join
+    // latencies, same curve, over randomized churn configs, seeds, and
+    // device counts.
+    check("churn incremental ≡ rebuild oracle", |rng| {
+        let cfg = rand_churn_cfg(rng);
+        let seed = rng.next_u64() % 1000;
+        let devices = 1 + rng.below(4);
+        let (p, t, s) = churn_workload(&cfg, seed);
+        let sim_cfg = SimConfig {
+            n_devices: devices,
+            warm_start_per_user: 2,
+            horizon: None,
+            stop_at_cutoff: None,
+        };
+        let inc_factory = |p: &Problem| -> Box<dyn Policy> { Box::new(MmGpEi::new(p)) };
+        let oracle_factory =
+            |p: &Problem| -> Box<dyn Policy> { Box::new(ForceRebuild(MmGpEi::new(p))) };
+        let inc = simulate_churn(&p, &t, &s, &inc_factory, &sim_cfg);
+        let oracle = simulate_churn(&p, &t, &s, &oracle_factory, &sim_cfg);
+        assert_eq!(inc.n_rebuilds, 0, "hooks must be applied in place");
+        assert!(oracle.n_rebuilds > 0, "oracle must rebuild");
+        assert_eq!(bit_key(&inc), bit_key(&oracle), "seed {seed} M{devices}");
+        assert_eq!(inc.inst_regret, oracle.inst_regret);
+    });
+}
+
+#[test]
+fn leave_then_rejoin_of_the_same_tenant_is_bit_exact() {
+    // Deterministic pin of the rejoin case: a tenant leaves mid-run (with
+    // observations on the books and correlated neighbours still active)
+    // and rejoins later; the incremental path must restore its GP state
+    // and incumbent bit-exactly.
+    let cfg = ChurnConfig {
+        n_users: 5,
+        n_models: 4,
+        initial_users: 5,
+        user_corr: 0.5,
+        ..Default::default()
+    };
+    let (p, t, _) = churn_workload(&cfg, 42);
+    // Hand-written timeline: everyone starts; tenant 2 leaves at t=3 and
+    // rejoins at t=9; tenant 0 leaves at t=9 (same instant — departure
+    // applies first) and never returns; everyone out by t=40.
+    let s = ChurnSchedule::new(vec![
+        ChurnEvent { time: 0.0, user: 0, kind: ChurnEventKind::Arrival },
+        ChurnEvent { time: 0.0, user: 1, kind: ChurnEventKind::Arrival },
+        ChurnEvent { time: 0.0, user: 2, kind: ChurnEventKind::Arrival },
+        ChurnEvent { time: 0.0, user: 3, kind: ChurnEventKind::Arrival },
+        ChurnEvent { time: 0.0, user: 4, kind: ChurnEventKind::Arrival },
+        ChurnEvent { time: 3.0, user: 2, kind: ChurnEventKind::Departure },
+        ChurnEvent { time: 9.0, user: 0, kind: ChurnEventKind::Departure },
+        ChurnEvent { time: 9.0, user: 2, kind: ChurnEventKind::Arrival },
+        ChurnEvent { time: 40.0, user: 1, kind: ChurnEventKind::Departure },
+        ChurnEvent { time: 40.0, user: 2, kind: ChurnEventKind::Departure },
+        ChurnEvent { time: 40.0, user: 3, kind: ChurnEventKind::Departure },
+        ChurnEvent { time: 40.0, user: 4, kind: ChurnEventKind::Departure },
+    ]);
+    let sim_cfg =
+        SimConfig { n_devices: 2, warm_start_per_user: 2, horizon: None, stop_at_cutoff: None };
+    let inc_factory = |p: &Problem| -> Box<dyn Policy> { Box::new(MmGpEi::new(p)) };
+    let oracle_factory =
+        |p: &Problem| -> Box<dyn Policy> { Box::new(ForceRebuild(MmGpEi::new(p))) };
+    let inc = simulate_churn(&p, &t, &s, &inc_factory, &sim_cfg);
+    let oracle = simulate_churn(&p, &t, &s, &oracle_factory, &sim_cfg);
+    assert_eq!(bit_key(&inc), bit_key(&oracle));
+    // The rejoining tenant is actually served after its return.
+    let rejoin_served = inc
+        .observations
+        .iter()
+        .any(|o| p.arm_users[o.arm][0] == 2 && o.start >= 9.0);
+    assert!(rejoin_served, "tenant 2 must be served after rejoining");
+}
+
+#[test]
+fn incremental_backend_scores_match_rebuilt_oracle_at_every_step() {
+    // Backend-level granularity: through a random join/leave/observe
+    // sequence, the incremental NativeBackend's scores and selections
+    // must equal, float for float, a from-scratch GP replay scored by the
+    // brute-force rescan.
+    check("churn backend scores ≡ rebuilt rescan", |rng| {
+        let cfg = ChurnConfig {
+            n_users: 3 + rng.below(3),
+            n_models: 3 + rng.below(3),
+            initial_users: 1,
+            user_corr: rng.uniform() * 0.8,
+            ..Default::default()
+        };
+        let (p, t, _) = churn_workload(&cfg, rng.next_u64() % 512);
+        let n = p.n_arms();
+        let nu = p.n_users;
+
+        let mut backend = NativeBackend::new(&p);
+        let mut active = vec![true; nu];
+        let mut selected = vec![false; n];
+        let mut blocked = vec![false; n];
+        let mut best = vec![0.0f64; nu];
+        let mut obs_order: Vec<(usize, f64)> = Vec::new();
+        let mut observed_of: Vec<Vec<usize>> = vec![Vec::new(); nu];
+
+        let refresh_blocked = |blocked: &mut [bool], selected: &[bool], active: &[bool], p: &Problem| {
+            for x in 0..p.n_arms() {
+                let retired = !p.arm_users[x].iter().any(|&u| active[u]);
+                blocked[x] = selected[x] || retired;
+            }
+        };
+
+        for _step in 0..40 {
+            match rng.below(4) {
+                // Leave a random active user.
+                0 => {
+                    let u = rng.below(nu);
+                    if active[u] {
+                        active[u] = false;
+                        assert!(backend.user_left(&p, u));
+                        best[u] = 0.0; // dropped incumbent
+                        refresh_blocked(&mut blocked, &selected, &active, &p);
+                    }
+                }
+                // (Re)join a random inactive user.
+                1 => {
+                    let u = rng.below(nu);
+                    if !active[u] {
+                        active[u] = true;
+                        assert!(backend.user_joined(&p, u));
+                        // Restore the incumbent from its finished arms.
+                        best[u] = observed_of[u]
+                            .iter()
+                            .map(|&a| t.z[a])
+                            .fold(0.0f64, f64::max);
+                        refresh_blocked(&mut blocked, &selected, &active, &p);
+                    }
+                }
+                // Observe a random unselected arm of an active user.
+                _ => {
+                    let candidates: Vec<usize> =
+                        (0..n).filter(|&x| !blocked[x]).collect();
+                    if let Some(&a) = candidates.get(rng.below(candidates.len().max(1))) {
+                        backend.observe(a, t.z[a]);
+                        selected[a] = true;
+                        blocked[a] = true;
+                        obs_order.push((a, t.z[a]));
+                        for &u in &p.arm_users[a] {
+                            observed_of[u].push(a);
+                            if active[u] {
+                                best[u] = best[u].max(t.z[a]);
+                            }
+                        }
+                    }
+                }
+            }
+            // Oracle: fresh always-enabled GP replaying the observation
+            // history, scored by the brute-force rescan.
+            let mut gp = mmgpei::gp::Gp::new(p.prior_mean.clone(), p.prior_cov.clone());
+            for &(a, z) in &obs_order {
+                gp.observe(a, z);
+            }
+            let cached = backend.eirate(&best, &blocked, true).to_vec();
+            let oracle = rescan_eirate(&gp, &p.arm_users, &p.cost, &best, &blocked, true);
+            for x in 0..n {
+                assert!(
+                    cached[x] == oracle[x],
+                    "arm {x}: cached {} vs oracle {} (step {_step})",
+                    cached[x],
+                    oracle[x]
+                );
+            }
+            // Selection parity (lowest-index argmax over unblocked arms).
+            let scan = {
+                let mut arg = None;
+                let mut max = f64::NEG_INFINITY;
+                for (x, &s) in oracle.iter().enumerate() {
+                    if !blocked[x] && s > max {
+                        max = s;
+                        arg = Some(x);
+                    }
+                }
+                arg
+            };
+            assert_eq!(backend.select_arm(&best, &blocked, true), scan);
+        }
+    });
+}
+
+#[test]
+fn churn_report_bytes_are_deterministic() {
+    // Same (config, seed) → byte-identical serialized churn report: the
+    // property CI's determinism/thread-invariance gate relies on for
+    // BENCH_fig6_churn.json.
+    let mut cfg = ExperimentConfig {
+        churn: true,
+        policies: vec!["mdmt".into(), "round-robin".into()],
+        devices: vec![2],
+        seeds: 2,
+        ..Default::default()
+    };
+    cfg.churn_cfg =
+        ChurnConfig { n_users: 6, n_models: 4, initial_users: 2, ..Default::default() };
+    let render = || -> String {
+        let results = mmgpei::cli::run_churn_experiment(&cfg).unwrap();
+        let mut report = RunReport::new("fig6_churn", 0, true);
+        report.provenance.commit = "test".into(); // pin the env-dependent field
+        results.push_kpis(&mut report, "churn/");
+        report.to_json_string()
+    };
+    let a = render();
+    let b = render();
+    assert_eq!(a, b, "churn smoke reports must serialize byte-identically");
+    assert!(a.contains("churn/mdmt@M2/mean_exit_regret"));
+    assert!(a.contains("churn/mdmt@M2/p99_join_latency"));
+}
+
+#[test]
+fn departed_tenants_in_flight_completion_keeps_parity() {
+    // A tenant departs while its arm is still running: the completion
+    // lands after the leave. Both paths must stay bit-identical (the
+    // incremental backend briefly re-enables the arm to fold the
+    // observation into the shared posterior).
+    let cfg = ChurnConfig {
+        n_users: 4,
+        n_models: 3,
+        initial_users: 4,
+        user_corr: 0.6,
+        cost_range: (2.0, 4.0), // long jobs → departures overtake runs
+        ..Default::default()
+    };
+    let (p, t, _) = churn_workload(&cfg, 7);
+    let s = ChurnSchedule::new(vec![
+        ChurnEvent { time: 0.0, user: 0, kind: ChurnEventKind::Arrival },
+        ChurnEvent { time: 0.0, user: 1, kind: ChurnEventKind::Arrival },
+        ChurnEvent { time: 0.0, user: 2, kind: ChurnEventKind::Arrival },
+        ChurnEvent { time: 0.0, user: 3, kind: ChurnEventKind::Arrival },
+        // Departures inside the very first wave of 2–4-unit jobs.
+        ChurnEvent { time: 0.5, user: 0, kind: ChurnEventKind::Departure },
+        ChurnEvent { time: 1.0, user: 1, kind: ChurnEventKind::Departure },
+        // Tenant 0 rejoins after its in-flight arm completed.
+        ChurnEvent { time: 8.0, user: 0, kind: ChurnEventKind::Arrival },
+        ChurnEvent { time: 30.0, user: 0, kind: ChurnEventKind::Departure },
+        ChurnEvent { time: 30.0, user: 2, kind: ChurnEventKind::Departure },
+        ChurnEvent { time: 30.0, user: 3, kind: ChurnEventKind::Departure },
+    ]);
+    let sim_cfg =
+        SimConfig { n_devices: 4, warm_start_per_user: 1, horizon: None, stop_at_cutoff: None };
+    let inc_factory = |p: &Problem| -> Box<dyn Policy> { Box::new(MmGpEi::new(p)) };
+    let oracle_factory =
+        |p: &Problem| -> Box<dyn Policy> { Box::new(ForceRebuild(MmGpEi::new(p))) };
+    let inc = simulate_churn(&p, &t, &s, &inc_factory, &sim_cfg);
+    let oracle = simulate_churn(&p, &t, &s, &oracle_factory, &sim_cfg);
+    // The scenario really happens: some observation finishes after its
+    // owner's departure window closed.
+    let some_post_departure = inc.observations.iter().any(|o| {
+        let u = p.arm_users[o.arm][0];
+        (u == 0 && o.finish > 0.5 && o.start < 0.5) || (u == 1 && o.finish > 1.0 && o.start < 1.0)
+    });
+    assert!(some_post_departure, "schedule must produce an in-flight departure completion");
+    assert_eq!(bit_key(&inc), bit_key(&oracle));
+}

@@ -2,7 +2,9 @@
 # Single source of truth for the figure-bench list, derived from the
 # [[bench]] targets declared in rust/Cargo.toml. Both CI's bench-smoke
 # job and scripts/refresh_baselines.sh iterate over this output, so a
-# new bench target is automatically gated the moment it is declared.
+# new bench target is automatically gated the moment it is declared —
+# e.g. fig6_churn (tenant churn) entered the determinism + thread-
+# invariance + baseline gates the moment its [[bench]] block landed.
 set -euo pipefail
 cd "$(dirname "$0")/.."
 awk '/^\[\[bench\]\]/ { in_bench = 1; next }
