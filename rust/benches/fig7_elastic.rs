@@ -1,0 +1,273 @@
+//! Figure 7 (extension) — **elastic heterogeneous device fleets**: mixed
+//! device speeds plus spot-style availability churn replayed through the
+//! unified scheduling engine.
+//!
+//! Not a paper figure: the paper's model (§3) fixes `M` identical
+//! always-on devices, but the service-provider setting it motivates —
+//! mixed GPU generations, preemptible capacity — is an elastic fleet.
+//! This harness measures, per policy:
+//!
+//! * **cumulative regret** on the elastic fleet vs a **unit-speed
+//!   always-on fleet of equal aggregate capacity** (`round(Σ s_d)`
+//!   devices) — the price of elasticity (`regret_vs_unit_capacity`,
+//!   a deterministic ratio);
+//! * **preemption count** and **p99 requeue latency** — how often jobs
+//!   are cancelled by departing devices and how long the requeued
+//!   decisions wait;
+//! * **ns/decision** under fleet churn (full runs only);
+//! * two hard gates (every mode, non-zero exit on failure):
+//!   - **unit parity**: a unit-speed always-on fleet through the engine
+//!     replays the plain simulator **bit-identically** (the refactor's
+//!     acceptance criterion in executable form);
+//!   - **device-churn parity**: MM-GP-EI's in-place device hooks vs the
+//!     `ForceRebuild` from-scratch oracle, bit-identical schedules and
+//!     regret.
+//!
+//! Run: `cargo bench --bench fig7_elastic`
+//! CI:  `cargo bench --bench fig7_elastic -- --smoke --json reports/BENCH_fig7_elastic.json`
+
+use mmgpei::bench::{BenchOpts, Table};
+use mmgpei::cli::{make_instance, run_fleet_experiment};
+use mmgpei::config::ExperimentConfig;
+use mmgpei::problem::{DeviceFleet, Problem, Truth};
+use mmgpei::report::{Direction, RunReport, TimingEntry};
+use mmgpei::sched::{ForceRebuild, MmGpEi, Policy};
+use mmgpei::sim::{simulate, simulate_fleet, SimConfig, SimResult};
+use mmgpei::workload::{fleet_schedule, FleetConfig, SyntheticConfig};
+
+fn main() {
+    let opts = BenchOpts::from_env_args();
+    let (synthetic, fleet_cfg) = if opts.smoke {
+        // Pinned CI preset (must be identical on every machine).
+        (
+            SyntheticConfig { n_users: 8, n_models: 6, ..Default::default() },
+            FleetConfig {
+                n_devices: 4,
+                initial_online: 3,
+                speed_range: (0.5, 2.0),
+                arrival_gap: 6.0,
+                uptime: (15.0, 40.0),
+                outage: (4.0, 10.0),
+                horizon: 80.0,
+            },
+        )
+    } else {
+        (
+            SyntheticConfig { n_users: 16, n_models: 10, ..Default::default() },
+            FleetConfig { n_devices: 6, initial_online: 4, ..Default::default() },
+        )
+    };
+    let seeds = opts.seeds("MMGPEI_FIG7_SEEDS", 5, 2);
+
+    let cfg = ExperimentConfig {
+        name: "fig7-elastic".into(),
+        dataset: "synthetic".into(),
+        policies: vec!["mdmt".into(), "round-robin".into(), "random".into()],
+        devices: vec![1], // unused: the fleet is the device dimension
+        seeds,
+        threads: opts.threads(),
+        synthetic: synthetic.clone(),
+        fleet: true,
+        fleet_cfg: fleet_cfg.clone(),
+        ..Default::default()
+    };
+
+    let mut report = RunReport::new("fig7_elastic", 0, opts.smoke);
+    // Per-seed (instance, fleet): built once, shared by both parity
+    // gates and the unit-capacity control (the sweep itself re-derives
+    // them inside `run_fleet_experiment`, identically seeded).
+    let instances: Vec<(Problem, Truth, DeviceFleet)> = (0..seeds)
+        .map(|seed| {
+            let (problem, truth) = make_instance(&cfg, seed).expect("instance");
+            let fleet = fleet_schedule(&fleet_cfg, 0xF1EE7 + seed);
+            (problem, truth, fleet)
+        })
+        .collect();
+    println!(
+        "=== Figure 7 (ext) — elastic fleet: {} devices ({} at t=0), speeds [{}, {}), {} seeds ===",
+        fleet_cfg.n_devices,
+        fleet_cfg.initial_online,
+        fleet_cfg.speed_range.0,
+        fleet_cfg.speed_range.1,
+        seeds
+    );
+
+    // ------------------------------------------------------------------
+    // Gate 1 — unit parity: a unit-speed always-on fleet through the
+    // engine must replay the plain simulator bit for bit.
+    // ------------------------------------------------------------------
+    let mut unit_mismatches = 0usize;
+    for (seed, (problem, truth, _)) in instances.iter().enumerate() {
+        let sim_cfg = SimConfig { n_devices: 2, ..Default::default() };
+        let mut pol = MmGpEi::new(problem);
+        let plain = simulate(problem, truth, &mut pol, &sim_cfg);
+        let factory = |p: &Problem| -> Box<dyn Policy> { Box::new(MmGpEi::new(p)) };
+        let unit = simulate_fleet(problem, truth, &DeviceFleet::uniform(2), &factory, &sim_cfg);
+        if unit.n_preemptions != 0
+            || unit.n_rebuilds != 0
+            || !sim_runs_bit_identical(&plain, &unit.sim)
+        {
+            unit_mismatches += 1;
+            eprintln!("unit parity FAIL: seed {seed} — unit fleet ≠ plain simulator");
+        }
+    }
+    report.push_kpi(
+        "parity/unit_fleet_vs_simulate_mismatches",
+        unit_mismatches as f64,
+        Direction::LowerIsBetter,
+    );
+    println!("unit parity: {unit_mismatches}/{seeds} diverging seeds (must be 0)");
+
+    // ------------------------------------------------------------------
+    // Gate 2 — device-churn parity: in-place device hooks vs the
+    // from-scratch rebuild oracle over the elastic fleet.
+    // ------------------------------------------------------------------
+    let mut churn_mismatches = 0usize;
+    for (seed, (problem, truth, fleet)) in instances.iter().enumerate() {
+        let sim_cfg = SimConfig {
+            n_devices: fleet.n_devices(),
+            warm_start_per_user: cfg.warm_start,
+            horizon: None,
+            stop_at_cutoff: None,
+        };
+        let inc = |p: &Problem| -> Box<dyn Policy> { Box::new(MmGpEi::new(p)) };
+        let oracle = |p: &Problem| -> Box<dyn Policy> { Box::new(ForceRebuild(MmGpEi::new(p))) };
+        let a = simulate_fleet(problem, truth, fleet, &inc, &sim_cfg);
+        let b = simulate_fleet(problem, truth, fleet, &oracle, &sim_cfg);
+        assert_eq!(a.n_rebuilds, 0, "in-place path must never rebuild");
+        if a.n_preemptions != b.n_preemptions || !sim_runs_bit_identical(&a.sim, &b.sim) {
+            churn_mismatches += 1;
+            eprintln!("device-churn parity FAIL: seed {seed} — in-place ≠ rebuild oracle");
+        }
+    }
+    report.push_kpi(
+        "parity/device_churn_inplace_vs_rebuild_mismatches",
+        churn_mismatches as f64,
+        Direction::LowerIsBetter,
+    );
+    println!("device-churn parity: {churn_mismatches}/{seeds} diverging seeds (must be 0)");
+
+    // ------------------------------------------------------------------
+    // The fleet sweep + the equal-aggregate-capacity control.
+    // ------------------------------------------------------------------
+    let results = run_fleet_experiment(&cfg).expect("fig7 fleet sweep");
+    results.push_kpis(&mut report, "fleet/");
+    let mut table = Table::new(&[
+        "policy",
+        "elastic regret (mean±σ)",
+        "unit-capacity regret",
+        "ratio",
+        "preemptions",
+        "p99 requeue latency",
+        "rebuilds",
+    ]);
+    for cell in &results.cells {
+        // Control: unit-speed always-on fleet of round(Σ s_d) devices,
+        // same instances, same policy — the paper's setting at matched
+        // aggregate capacity.
+        let mut unit_cums = Vec::with_capacity(seeds as usize);
+        for (seed, (problem, truth, fleet)) in instances.iter().enumerate() {
+            let m_eq = (fleet.total_speed().round().max(1.0)) as usize;
+            let policy_pool = mmgpei::pool::WorkerPool::new(1);
+            let mut pol = mmgpei::cli::make_policy(
+                &cell.policy,
+                problem,
+                truth,
+                seed as u64,
+                cfg.backend,
+                &policy_pool,
+            )
+            .expect("policy");
+            let r = simulate(
+                problem,
+                truth,
+                pol.as_mut(),
+                &SimConfig {
+                    n_devices: m_eq,
+                    warm_start_per_user: cfg.warm_start,
+                    horizon: None,
+                    stop_at_cutoff: None,
+                },
+            );
+            unit_cums.push(r.cumulative_regret);
+        }
+        let unit_mean = mmgpei::metrics::mean_std(&unit_cums).0;
+        let ratio = if unit_mean > 0.0 { cell.cumulative.0 / unit_mean } else { f64::NAN };
+        report.push_kpi(
+            format!("fleet/{}@F{}/regret_vs_unit_capacity", cell.policy, fleet_cfg.n_devices),
+            ratio,
+            Direction::LowerIsBetter,
+        );
+        table.row(vec![
+            cell.policy.clone(),
+            format!("{:.2} ± {:.2}", cell.cumulative.0, cell.cumulative.1),
+            format!("{unit_mean:.2}"),
+            if ratio.is_finite() { format!("{ratio:.2}×") } else { "n/a".into() },
+            cell.n_preemptions.to_string(),
+            if cell.p99_requeue_latency.is_finite() {
+                format!("{:.2}", cell.p99_requeue_latency)
+            } else {
+                "n/a".into()
+            },
+            cell.n_rebuilds.to_string(),
+        ]);
+    }
+    println!("{}", table.to_markdown());
+
+    // ns/decision under fleet churn (wall clock — full runs only; smoke
+    // keeps the report byte-stable).
+    if !opts.smoke {
+        for cell in &results.cells {
+            let decisions: u64 = cell.runs.iter().map(|r| r.sim.n_decisions as u64).sum();
+            if decisions == 0 {
+                continue;
+            }
+            let total_ns: f64 =
+                cell.runs.iter().map(|r| r.sim.decision_wall_time.as_nanos() as f64).sum();
+            let ns = total_ns / decisions as f64;
+            report.push_kpi(
+                format!("fleet/{}@F{}/ns_per_decision", cell.policy, fleet_cfg.n_devices),
+                ns,
+                Direction::LowerIsBetter,
+            );
+            report.push_timing(TimingEntry::flat(
+                format!("fleet/{}@F{}/ns_per_decision", cell.policy, fleet_cfg.n_devices),
+                decisions,
+                ns,
+            ));
+            println!(
+                "{:>14}@F{}: {:.0} ns/decision over {} fleet decisions",
+                cell.policy, fleet_cfg.n_devices, ns, decisions
+            );
+        }
+    }
+
+    println!(
+        "expected shape: elasticity costs regret (offline windows + preemptions) at matched \
+         aggregate capacity; MDMT's shared prior keeps the penalty smallest."
+    );
+    // Write the report first (the mismatch KPIs are evidence worth
+    // keeping), then hard-fail: both parities are correctness invariants.
+    opts.finish(&report);
+    if unit_mismatches > 0 || churn_mismatches > 0 {
+        eprintln!(
+            "FAIL: {unit_mismatches} unit-parity + {churn_mismatches} device-churn-parity \
+             mismatches (must be 0)"
+        );
+        std::process::exit(1);
+    }
+}
+
+/// Bit-exact run equality: schedule, regret accounting, curve.
+fn sim_runs_bit_identical(a: &SimResult, b: &SimResult) -> bool {
+    let obs = |r: &SimResult| -> Vec<(usize, usize, u64, u64, u64)> {
+        r.observations
+            .iter()
+            .map(|o| (o.arm, o.device, o.start.to_bits(), o.finish.to_bits(), o.z.to_bits()))
+            .collect()
+    };
+    obs(a) == obs(b)
+        && a.cumulative_regret.to_bits() == b.cumulative_regret.to_bits()
+        && a.makespan.to_bits() == b.makespan.to_bits()
+        && a.inst_regret == b.inst_regret
+}

@@ -4,15 +4,17 @@
 //! and the `cargo bench` figure harnesses.
 
 use crate::config::{Backend, ExperimentConfig};
-use crate::metrics::{aggregate_curves, mean_std, time_grid, StepCurve};
+use crate::metrics::{aggregate_curves, mean_std, p99, time_grid, StepCurve};
 use crate::pool::WorkerPool;
 use crate::prng::Rng;
 use crate::problem::{Problem, Truth};
 use crate::report::{Direction, RunReport, TimingEntry};
 use crate::runtime::{default_artifact_dir, XlaBackend};
 use crate::sched::{GpEiRandom, GpEiRoundRobin, MmGpEi, MmGpEiIndep, Oracle, Policy};
-use crate::sim::{simulate, simulate_churn, ChurnResult, SimConfig, SimResult};
-use crate::workload::{azure, churn_workload, deeplearning, synthetic_gp};
+use crate::sim::{
+    simulate, simulate_churn, simulate_fleet, ChurnResult, FleetResult, SimConfig, SimResult,
+};
+use crate::workload::{azure, churn_workload, deeplearning, fleet_schedule, synthetic_gp};
 
 /// Instantiate a policy by CLI name.
 ///
@@ -295,23 +297,165 @@ pub fn run_churn_experiment(cfg: &ExperimentConfig) -> Result<ChurnExperimentRes
     Ok(ChurnExperimentResults { config: cfg.clone(), cells })
 }
 
+/// Aggregated results for one policy of an **elastic fleet** sweep
+/// (`--fleet` / a `[fleet]` config section). The fleet is the sweep's
+/// device dimension, so cells are keyed by policy only.
+#[derive(Clone, Debug)]
+pub struct FleetCell {
+    /// Policy name.
+    pub policy: String,
+    /// Per-seed raw fleet runs.
+    pub runs: Vec<FleetResult>,
+    /// Mean ± std of cumulative regret over seeds.
+    pub cumulative: (f64, f64),
+    /// Total preempted jobs across seeds (workload-determined but
+    /// deterministic — gated so the scenario itself cannot drift).
+    pub n_preemptions: usize,
+    /// p99 of the preemption → re-dispatch delay over every
+    /// (seed, preemption) pair (NaN when nothing was requeued — dropped
+    /// by `push_kpi`).
+    pub p99_requeue_latency: f64,
+    /// Total engine-side policy rebuilds across seeds (0 when the policy
+    /// implements the device hooks in place).
+    pub n_rebuilds: usize,
+}
+
+/// Full elastic-fleet sweep output.
+#[derive(Clone, Debug)]
+pub struct FleetExperimentResults {
+    /// Config used.
+    pub config: ExperimentConfig,
+    /// One cell per policy, in sweep order.
+    pub cells: Vec<FleetCell>,
+}
+
+impl FleetExperimentResults {
+    /// Find a cell.
+    pub fn cell(&self, policy: &str) -> Option<&FleetCell> {
+        self.cells.iter().find(|c| c.policy == policy)
+    }
+
+    /// Fold this sweep into `report`: config fingerprint + per-policy
+    /// fleet KPIs (all virtual-time, hence seed-deterministic), and —
+    /// outside smoke mode — per-decision scheduler wall time.
+    pub fn push_kpis(&self, report: &mut RunReport, prefix: &str) {
+        report.fold_config(&self.config.canonical_string());
+        let f = self.config.fleet_cfg.n_devices;
+        for cell in &self.cells {
+            let key = |metric: &str| format!("{prefix}{}@F{f}/{metric}", cell.policy);
+            report.push_kpi(key("cumulative_regret"), cell.cumulative.0, Direction::LowerIsBetter);
+            let finals: Vec<f64> =
+                cell.runs.iter().map(|r| r.sim.inst_regret.final_value()).collect();
+            report.push_kpi(key("final_regret"), mean_std(&finals).0, Direction::LowerIsBetter);
+            let makespans: Vec<f64> = cell.runs.iter().map(|r| r.sim.makespan).collect();
+            report.push_kpi(key("makespan"), mean_std(&makespans).0, Direction::LowerIsBetter);
+            report.push_kpi(key("preemptions"), cell.n_preemptions as f64, Direction::LowerIsBetter);
+            report.push_kpi(
+                key("p99_requeue_latency"),
+                cell.p99_requeue_latency,
+                Direction::LowerIsBetter,
+            );
+            report.push_kpi(key("rebuilds"), cell.n_rebuilds as f64, Direction::LowerIsBetter);
+            let decisions: u64 = cell.runs.iter().map(|r| r.sim.n_decisions as u64).sum();
+            if decisions > 0 {
+                let total_ns: f64 =
+                    cell.runs.iter().map(|r| r.sim.decision_wall_time.as_nanos() as f64).sum();
+                report.push_timing(TimingEntry::flat(
+                    key("decision_wall"),
+                    decisions,
+                    total_ns / decisions as f64,
+                ));
+            }
+        }
+    }
+}
+
+/// Run the elastic-fleet sweep described by `cfg` (requires
+/// `cfg.fleet`): for each (policy × seed), build the dataset instance
+/// and the seeded heterogeneous fleet, then replay the availability
+/// timeline through the unified engine. Seeds shard across the worker
+/// pool exactly like [`run_experiment`]; `cfg.devices` is ignored — the
+/// fleet is the device dimension.
+pub fn run_fleet_experiment(cfg: &ExperimentConfig) -> Result<FleetExperimentResults, String> {
+    cfg.validate()?;
+    if !cfg.fleet {
+        return Err("run_fleet_experiment requires fleet to be enabled (--fleet / [fleet])".into());
+    }
+    let pool = WorkerPool::new(cfg.effective_threads());
+    let policy_pool = WorkerPool::new(1);
+    // Surface construction errors (unknown policy, missing XLA artifacts)
+    // once, up front, instead of panicking inside the factory closure.
+    {
+        let (p0, t0) = make_instance(cfg, 0)?;
+        for name in &cfg.policies {
+            make_policy(name, &p0, &t0, 0, cfg.backend, &policy_pool)?;
+        }
+    }
+    let mut cells = Vec::new();
+    for policy_name in &cfg.policies {
+        let seed_runs = pool.map_indexed(cfg.seeds as usize, |seed| {
+            let seed = seed as u64;
+            let (problem, truth) = make_instance(cfg, seed)?;
+            let fleet = fleet_schedule(&cfg.fleet_cfg, 0xF1EE7 + seed);
+            let factory = |p: &Problem| -> Box<dyn Policy> {
+                make_policy(policy_name, p, &truth, seed, cfg.backend, &policy_pool)
+                    .expect("policy construction validated above")
+            };
+            Ok::<FleetResult, String>(simulate_fleet(
+                &problem,
+                &truth,
+                &fleet,
+                &factory,
+                &SimConfig {
+                    n_devices: fleet.n_devices(),
+                    warm_start_per_user: cfg.warm_start,
+                    horizon: cfg.horizon,
+                    stop_at_cutoff: None,
+                },
+            ))
+        });
+        let mut runs = Vec::with_capacity(cfg.seeds as usize);
+        for run in seed_runs {
+            runs.push(run?);
+        }
+        cells.push(aggregate_fleet_cell(policy_name, runs));
+    }
+    Ok(FleetExperimentResults { config: cfg.clone(), cells })
+}
+
+/// Aggregate per-seed fleet runs into a cell.
+pub fn aggregate_fleet_cell(policy: &str, runs: Vec<FleetResult>) -> FleetCell {
+    let cumulative =
+        mean_std(&runs.iter().map(|r| r.sim.cumulative_regret).collect::<Vec<_>>());
+    let n_preemptions = runs.iter().map(|r| r.n_preemptions).sum();
+    // NaN when nothing was requeued — dropped by push_kpi.
+    let p99_requeue_latency =
+        p99(runs.iter().flat_map(|r| r.requeue_latency.iter().copied()).collect());
+    let n_rebuilds = runs.iter().map(|r| r.n_rebuilds).sum();
+    FleetCell {
+        policy: policy.to_string(),
+        runs,
+        cumulative,
+        n_preemptions,
+        p99_requeue_latency,
+        n_rebuilds,
+    }
+}
+
 /// Aggregate per-seed churn runs into a cell.
 pub fn aggregate_churn_cell(policy: &str, devices: usize, runs: Vec<ChurnResult>) -> ChurnCell {
     let cumulative = mean_std(&runs.iter().map(|r| r.cumulative_regret).collect::<Vec<_>>());
     let per_tenant: Vec<f64> =
         runs.iter().flat_map(|r| r.per_user_regret.iter().copied()).collect();
     let mean_exit_regret = if per_tenant.is_empty() { 0.0 } else { mean_std(&per_tenant).0 };
-    let mut latencies: Vec<f64> =
+    let latencies: Vec<f64> =
         runs.iter().flat_map(|r| r.join_latency.iter().flatten().copied()).collect();
-    latencies.sort_by(f64::total_cmp);
-    let p99_join_latency = if latencies.is_empty() {
-        f64::NAN // dropped by push_kpi: nobody was served
-    } else {
-        latencies[((latencies.len() as f64 - 1.0) * 0.99) as usize]
-    };
+    let n_served = latencies.len();
+    // NaN when nobody was served — dropped by push_kpi.
+    let p99_join_latency = p99(latencies);
     let tenant_slots: usize = runs.iter().map(|r| r.join_latency.len()).sum();
     let served_fraction =
-        if tenant_slots == 0 { 0.0 } else { latencies.len() as f64 / tenant_slots as f64 };
+        if tenant_slots == 0 { 0.0 } else { n_served as f64 / tenant_slots as f64 };
     let n_rebuilds = runs.iter().map(|r| r.n_rebuilds).sum();
     ChurnCell {
         policy: policy.to_string(),
@@ -455,6 +599,36 @@ mod tests {
         assert!(report.timings.is_empty(), "smoke reports exclude wall-clock timings");
         // Churn-disabled configs must refuse the churn driver.
         assert!(run_churn_experiment(&quick_cfg()).is_err());
+    }
+
+    #[test]
+    fn fleet_sweep_produces_cells_and_kpis() {
+        let mut cfg = quick_cfg();
+        cfg.fleet = true;
+        cfg.fleet_cfg = crate::workload::FleetConfig {
+            n_devices: 3,
+            initial_online: 2,
+            arrival_gap: 4.0,
+            uptime: (8.0, 20.0),
+            outage: (2.0, 6.0),
+            horizon: 60.0,
+            ..Default::default()
+        };
+        cfg.policies = vec!["mdmt".into(), "round-robin".into()];
+        cfg.seeds = 2;
+        let res = run_fleet_experiment(&cfg).unwrap();
+        assert_eq!(res.cells.len(), 2);
+        let mdmt = res.cell("mdmt").unwrap();
+        assert_eq!(mdmt.runs.len(), 2);
+        assert_eq!(mdmt.n_rebuilds, 0, "mdmt applies device churn in place");
+        assert!(mdmt.cumulative.0 >= 0.0);
+        let mut report = RunReport::new("fleet-test", 0, true);
+        res.push_kpis(&mut report, "fleet/");
+        assert!(report.kpis.iter().any(|k| k.name == "fleet/mdmt@F3/cumulative_regret"));
+        assert!(report.kpis.iter().any(|k| k.name == "fleet/round-robin@F3/preemptions"));
+        assert!(report.timings.is_empty(), "smoke reports exclude wall-clock timings");
+        // Fleet-disabled configs must refuse the fleet driver.
+        assert!(run_fleet_experiment(&quick_cfg()).is_err());
     }
 
     #[test]

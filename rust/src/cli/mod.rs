@@ -5,8 +5,9 @@
 mod driver;
 
 pub use driver::{
-    aggregate_cell, aggregate_churn_cell, make_instance, make_policy, run_churn_experiment,
-    run_experiment, CellResult, ChurnCell, ChurnExperimentResults, ExperimentResults,
+    aggregate_cell, aggregate_churn_cell, aggregate_fleet_cell, make_instance, make_policy,
+    run_churn_experiment, run_experiment, run_fleet_experiment, CellResult, ChurnCell,
+    ChurnExperimentResults, ExperimentResults, FleetCell, FleetExperimentResults,
 };
 
 use std::collections::BTreeMap;

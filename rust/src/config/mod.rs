@@ -11,7 +11,7 @@ mod toml;
 
 pub use toml::{ParseError, TomlDoc, TomlValue};
 
-use crate::workload::{ChurnConfig, SyntheticConfig};
+use crate::workload::{ChurnConfig, FleetConfig, SyntheticConfig};
 
 /// Which posterior/EI backend drives MM-GP-EI.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -75,6 +75,15 @@ pub struct ExperimentConfig {
     /// configs keep their pre-churn `config_hash` and existing baseline
     /// reports stay byte-identical.
     pub churn_cfg: ChurnConfig,
+    /// Elastic-fleet scenario toggle (CLI `--fleet` / a `[fleet]` TOML
+    /// section): the sweep runs over a seeded heterogeneous device
+    /// fleet (per-device speeds + availability churn) through the
+    /// unified engine instead of `devices` identical always-on slots.
+    pub fleet: bool,
+    /// Fleet workload knobs (used when `fleet` is set). Folded into
+    /// [`Self::canonical_string`] **only when enabled** — same
+    /// hash-stability contract as the churn block.
+    pub fleet_cfg: FleetConfig,
 }
 
 impl Default for ExperimentConfig {
@@ -94,6 +103,8 @@ impl Default for ExperimentConfig {
             synthetic: SyntheticConfig::default(),
             churn: false,
             churn_cfg: ChurnConfig::default(),
+            fleet: false,
+            fleet_cfg: FleetConfig::default(),
         }
     }
 }
@@ -192,6 +203,52 @@ impl ExperimentConfig {
                 cfg.churn_cfg.cost_range.1 = v.as_float()?;
             }
         }
+        // A `[fleet]` section opts the experiment into the elastic-fleet
+        // scenario; its keys override the `FleetConfig` defaults.
+        if doc.section_names().any(|s| s == "fleet") {
+            cfg.fleet = true;
+            let fl = doc.section("fleet");
+            if let Some(v) = fl.get("n_devices") {
+                let x = v.as_int()?;
+                if x < 1 {
+                    // Same guard class as `threads` (PR 3): a negative
+                    // count must error, not wrap through `as usize`.
+                    return Err(format!("fleet.n_devices must be ≥ 1, got {x}"));
+                }
+                cfg.fleet_cfg.n_devices = x as usize;
+            }
+            if let Some(v) = fl.get("initial_online") {
+                let x = v.as_int()?;
+                if x < 1 {
+                    return Err(format!("fleet.initial_online must be ≥ 1, got {x}"));
+                }
+                cfg.fleet_cfg.initial_online = x as usize;
+            }
+            if let Some(v) = fl.get("speed_lo") {
+                cfg.fleet_cfg.speed_range.0 = v.as_float()?;
+            }
+            if let Some(v) = fl.get("speed_hi") {
+                cfg.fleet_cfg.speed_range.1 = v.as_float()?;
+            }
+            if let Some(v) = fl.get("arrival_gap") {
+                cfg.fleet_cfg.arrival_gap = v.as_float()?;
+            }
+            if let Some(v) = fl.get("uptime_lo") {
+                cfg.fleet_cfg.uptime.0 = v.as_float()?;
+            }
+            if let Some(v) = fl.get("uptime_hi") {
+                cfg.fleet_cfg.uptime.1 = v.as_float()?;
+            }
+            if let Some(v) = fl.get("outage_lo") {
+                cfg.fleet_cfg.outage.0 = v.as_float()?;
+            }
+            if let Some(v) = fl.get("outage_hi") {
+                cfg.fleet_cfg.outage.1 = v.as_float()?;
+            }
+            if let Some(v) = fl.get("horizon") {
+                cfg.fleet_cfg.horizon = v.as_float()?;
+            }
+        }
         let syn = doc.section("synthetic");
         if let Some(v) = syn.get("n_users") {
             cfg.synthetic.n_users = v.as_int()? as usize;
@@ -218,9 +275,10 @@ impl ExperimentConfig {
     /// Canonical one-line-per-field rendering of every knob that affects
     /// results — the input to [`Self::config_hash`]. Field order is fixed;
     /// floats render through Rust's shortest-roundtrip `Display`, so the
-    /// same config always produces the same string. The churn block is
-    /// appended **only when churn is enabled** — churn-free configs keep
-    /// their historical hash, so pre-churn baseline reports still match.
+    /// same config always produces the same string. The churn and fleet
+    /// blocks are appended **only when the scenario is enabled** —
+    /// churn-free/fleet-free configs keep their historical hash, so
+    /// existing baseline reports still match.
     pub fn canonical_string(&self) -> String {
         let mut s = format!(
             "name={}\ndataset={}\npolicies={}\ndevices={:?}\nseeds={}\nwarm_start={}\nholdout={}\n\
@@ -264,6 +322,23 @@ impl ExperimentConfig {
                 c.cost_range.1,
             ));
         }
+        if self.fleet {
+            let f = &self.fleet_cfg;
+            s.push_str(&format!(
+                "fleet.n_devices={}\nfleet.initial_online={}\nfleet.speed_range=({},{})\n\
+                 fleet.arrival_gap={}\nfleet.uptime=({},{})\nfleet.outage=({},{})\nfleet.horizon={}\n",
+                f.n_devices,
+                f.initial_online,
+                f.speed_range.0,
+                f.speed_range.1,
+                f.arrival_gap,
+                f.uptime.0,
+                f.uptime.1,
+                f.outage.0,
+                f.outage.1,
+                f.horizon,
+            ));
+        }
         s
     }
 
@@ -296,6 +371,9 @@ impl ExperimentConfig {
         self.churn_cfg.n_users = self.churn_cfg.n_users.min(10);
         self.churn_cfg.n_models = self.churn_cfg.n_models.min(6);
         self.churn_cfg.initial_users = self.churn_cfg.initial_users.min(self.churn_cfg.n_users);
+        self.fleet_cfg.n_devices = self.fleet_cfg.n_devices.min(4);
+        self.fleet_cfg.initial_online = self.fleet_cfg.initial_online.min(self.fleet_cfg.n_devices);
+        self.fleet_cfg.horizon = self.fleet_cfg.horizon.min(120.0);
         self
     }
 
@@ -318,6 +396,16 @@ impl ExperimentConfig {
         }
         if self.churn {
             self.churn_cfg.validate()?;
+        }
+        if self.fleet {
+            self.fleet_cfg.validate()?;
+            if self.churn {
+                return Err(
+                    "fleet + churn cannot be combined yet (the engine supports both event \
+                     streams; the driver surface is a ROADMAP open item)"
+                        .into(),
+                );
+            }
         }
         Ok(())
     }
@@ -474,6 +562,71 @@ n_models = 50
         let s = cfg.smoke();
         assert!(s.churn_cfg.n_users <= 10 && s.churn_cfg.n_models <= 6);
         assert!(s.churn_cfg.initial_users <= s.churn_cfg.n_users);
+        s.validate().unwrap();
+    }
+
+    #[test]
+    fn fleet_section_opts_in_and_hashes_conditionally() {
+        // No [fleet] section → fleet off and — critically — the
+        // canonical string is unchanged, so fleet-free configs keep the
+        // config_hash their checked-in baselines were stamped with.
+        let plain = ExperimentConfig::from_toml_str(SAMPLE).unwrap();
+        assert!(!plain.fleet);
+        assert!(!plain.canonical_string().contains("fleet."));
+        let fleeted = ExperimentConfig::from_toml_str(&format!(
+            "{SAMPLE}\n[fleet]\nn_devices = 5\ninitial_online = 3\nspeed_lo = 0.25\nspeed_hi = 4.0\nhorizon = 60.0\n"
+        ))
+        .unwrap();
+        assert!(fleeted.fleet);
+        assert_eq!(fleeted.fleet_cfg.n_devices, 5);
+        assert_eq!(fleeted.fleet_cfg.initial_online, 3);
+        assert_eq!(fleeted.fleet_cfg.speed_range, (0.25, 4.0));
+        assert_eq!(fleeted.fleet_cfg.horizon, 60.0);
+        assert!(fleeted.canonical_string().contains("fleet.n_devices=5"));
+        assert_ne!(plain.config_hash(), fleeted.config_hash());
+        // Fleet knobs are experiment knobs: changing one moves the hash.
+        let mut f2 = fleeted.clone();
+        f2.fleet_cfg.arrival_gap = 99.0;
+        assert_ne!(fleeted.config_hash(), f2.config_hash());
+    }
+
+    #[test]
+    fn fleet_knobs_are_validated_and_exclusive_with_churn() {
+        let err = ExperimentConfig::from_toml_str(
+            "[experiment]\ndataset = \"azure\"\n[fleet]\ninitial_online = 0\n",
+        )
+        .unwrap_err();
+        assert!(err.contains("initial_online"), "{err}");
+        let err = ExperimentConfig::from_toml_str(
+            "[experiment]\ndataset = \"azure\"\n[fleet]\nspeed_lo = 0.0\n",
+        )
+        .unwrap_err();
+        assert!(err.contains("speed"), "{err}");
+        // A negative count must error, not wrap through `as usize`.
+        let err = ExperimentConfig::from_toml_str(
+            "[experiment]\ndataset = \"azure\"\n[fleet]\nn_devices = -1\n",
+        )
+        .unwrap_err();
+        assert!(err.contains("n_devices"), "{err}");
+        // fleet + churn in one config is rejected (ROADMAP open item).
+        let err = ExperimentConfig::from_toml_str(
+            "[experiment]\ndataset = \"azure\"\n[churn]\nn_users = 8\n[fleet]\nn_devices = 4\n",
+        )
+        .unwrap_err();
+        assert!(err.contains("fleet + churn"), "{err}");
+    }
+
+    #[test]
+    fn smoke_shrinks_fleet_but_keeps_it_valid() {
+        let mut cfg = ExperimentConfig::from_toml_str(SAMPLE).unwrap();
+        cfg.fleet = true;
+        cfg.fleet_cfg.n_devices = 16;
+        cfg.fleet_cfg.initial_online = 12;
+        cfg.fleet_cfg.horizon = 500.0;
+        let s = cfg.smoke();
+        assert!(s.fleet_cfg.n_devices <= 4);
+        assert!(s.fleet_cfg.initial_online <= s.fleet_cfg.n_devices);
+        assert!(s.fleet_cfg.horizon <= 120.0);
         s.validate().unwrap();
     }
 

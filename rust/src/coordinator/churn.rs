@@ -1,26 +1,27 @@
-//! Live serving with **tenant churn**: the leader's event loop gains
-//! Arrival/Departure event kinds alongside worker completions.
+//! Live serving with **tenant churn**: the wall-clock churn adapter over
+//! the unified engine.
 //!
 //! Completions arrive over the worker channel; churn events fire on the
 //! wall clock (`schedule time × time_scale` seconds after start) via a
 //! `recv_timeout` deadline on the completion channel — the leader wakes
 //! for whichever comes first, exactly like the virtual-time loop in
-//! `sim::churn` but under real asynchrony. The policy contract is the
-//! same: arm retirement is folded into the mask handed to
-//! [`Policy::select`]; churn-capable policies apply joins/leaves in
-//! place, everything else goes through the from-scratch rebuild
-//! (`sim::churn`'s `rebuild_policy`).
+//! `sim::simulate_churn` but under real asynchrony. The policy contract
+//! is identical because it *is* the same engine: arm retirement folded
+//! into the mask handed to [`crate::sched::Policy::select`],
+//! churn-capable policies applying joins/leaves in place, everything
+//! else rebuilt from scratch.
+//!
+//! [`serve_churn_deterministic`] runs the very same adapter on the
+//! engine's [`MockClock`] — wall-clock semantics, virtual delivery — so
+//! the cross-loop parity tests can compare the two adapters bit for bit
+//! over one trace (`rust/tests/engine_parity.rs`).
 
-use std::collections::VecDeque;
-use std::sync::mpsc::{self, RecvTimeoutError};
-use std::thread;
-use std::time::{Duration, Instant};
+use std::time::Duration;
 
-use super::{Done, Job, ServeConfig, ServedJob};
+use super::{jobs_from, ServeConfig, ServedJob};
+use crate::engine::{self, Clock, EngineParams, MockClock, PolicyFactory, PolicyHost, Tenancy, WallClock};
 use crate::metrics::StepCurve;
-use crate::problem::{ArmId, ChurnEventKind, ChurnSchedule, Problem, TenantSet, Truth, UserId};
-use crate::sched::{Incumbents, Policy, SchedContext};
-use crate::sim::churn::{assert_disjoint_tenancy, enqueue_warm_arms, rebuild_policy};
+use crate::problem::{ChurnSchedule, DeviceFleet, Problem, Truth};
 
 /// Result of a live churn serving session.
 #[derive(Clone, Debug)]
@@ -38,7 +39,7 @@ pub struct ChurnServeReport {
     pub join_latency: Vec<Option<Duration>>,
     /// Wall-clock latency of every scheduling decision.
     pub decision_latencies: Vec<Duration>,
-    /// Total session duration.
+    /// Total session duration (last event offset).
     pub makespan: Duration,
     /// Churn events served through the rebuild fallback (0 for MM-GP-EI).
     pub n_rebuilds: usize,
@@ -51,346 +52,80 @@ pub fn serve_churn(
     problem: &Problem,
     truth: &Truth,
     schedule: &ChurnSchedule,
-    factory: &dyn Fn(&Problem) -> Box<dyn Policy>,
+    factory: &PolicyFactory,
     config: &ServeConfig,
 ) -> ChurnServeReport {
     assert!(config.n_devices >= 1);
+    let mut clock = WallClock::spawn(config.n_devices);
+    serve_churn_on(problem, truth, schedule, factory, config, &mut clock)
+}
+
+/// The wall-clock churn adapter on the engine's deterministic
+/// [`MockClock`]: identical code path and report shape as
+/// [`serve_churn`], but completions are delivered in exact virtual time
+/// — so the run is bit-replayable and directly comparable against
+/// `sim::simulate_churn` (the cross-loop parity gate uses exactly this).
+pub fn serve_churn_deterministic(
+    problem: &Problem,
+    truth: &Truth,
+    schedule: &ChurnSchedule,
+    factory: &PolicyFactory,
+    config: &ServeConfig,
+) -> ChurnServeReport {
+    assert!(config.n_devices >= 1);
+    let mut clock = MockClock::new(config.n_devices);
+    serve_churn_on(problem, truth, schedule, factory, config, &mut clock)
+}
+
+/// The shared adapter body: configure the engine in churn-accounting
+/// mode (no horizon — live sessions report what actually ran) and
+/// reshape the run into a [`ChurnServeReport`].
+fn serve_churn_on(
+    problem: &Problem,
+    truth: &Truth,
+    schedule: &ChurnSchedule,
+    factory: &PolicyFactory,
+    config: &ServeConfig,
+    clock: &mut dyn Clock,
+) -> ChurnServeReport {
+    assert!(config.n_devices >= 1);
     assert!(config.time_scale > 0.0);
-    let n_arms = problem.n_arms();
-    let n_users = problem.n_users;
-    assert!(schedule.n_users_seen() <= n_users);
-    assert_disjoint_tenancy(problem);
-
-    let (done_tx, done_rx) = mpsc::channel::<Done>();
-    let mut job_txs = Vec::with_capacity(config.n_devices);
-    let mut workers = Vec::with_capacity(config.n_devices);
-    for device in 0..config.n_devices {
-        let (tx, rx) = mpsc::channel::<Job>();
-        let done_tx = done_tx.clone();
-        job_txs.push(tx);
-        workers.push(thread::spawn(move || {
-            while let Ok(job) = rx.recv() {
-                thread::sleep(job.sleep);
-                if done_tx.send(Done { device, arm: job.arm, z: job.z }).is_err() {
-                    break;
-                }
-            }
-        }));
-    }
-    drop(done_tx);
-
-    let t0 = Instant::now();
-    let mut policy = factory(problem);
-    // Everyone starts inactive (fresh policy + empty history ≡ rebuilt).
-    for u in 0..n_users {
-        let _ = policy.user_left(problem, u);
-    }
-    let mut tenants = TenantSet::none_active(n_users);
-    let mut retired = vec![true; n_arms];
-    let mut selected = vec![false; n_arms];
-    let mut blocked = vec![true; n_arms];
-    let mut observed = vec![false; n_arms];
-    let mut warm: VecDeque<ArmId> = VecDeque::new();
-    let mut history: Vec<(ArmId, f64)> = Vec::new();
-    let mut n_rebuilds = 0usize;
-
-    let z_star: Vec<f64> = (0..n_users).map(|u| truth.best_value(problem, u)).collect();
-    let empty_ref: Vec<f64> = (0..n_users)
-        .map(|u| problem.user_arms[u].iter().map(|&a| truth.z[a]).fold(0.0f64, f64::min))
-        .collect();
-    let mut incumbents = Incumbents::new(n_users);
-    let user_gap = |inc: &Incumbents, u: UserId| -> f64 {
-        let b = if inc.has_observation(u) { inc.value(u) } else { empty_ref[u] };
-        (z_star[u] - b).max(0.0)
+    let fleet = DeviceFleet::uniform(config.n_devices);
+    let params = EngineParams {
+        problem,
+        truth,
+        sched_view: None,
+        fleet: &fleet,
+        tenancy: Tenancy::Churn(schedule),
+        warm_start_per_user: config.warm_start_per_user,
+        horizon: None,
+        stop_at_cutoff: None,
+        time_scale: config.time_scale,
+        collect_decision_latencies: true,
+        verbose: config.verbose,
     };
-    let avg_active_gap = |inc: &Incumbents, tenants: &TenantSet| -> f64 {
-        if tenants.n_active() == 0 {
-            0.0
-        } else {
-            tenants.active_users().map(|u| user_gap(inc, u)).sum::<f64>()
-                / tenants.n_active() as f64
-        }
-    };
-
-    let mut per_user_regret = vec![0.0; n_users];
-    let mut arrival_wall = vec![Duration::ZERO; n_users];
-    let mut waiting_first_dispatch = vec![false; n_users];
-    let mut join_latency: Vec<Option<Duration>> = vec![None; n_users];
-    let mut inst_regret = StepCurve::new(0.0);
-    let mut t_prev = 0.0f64;
-    let mut decision_latencies = Vec::new();
-    let mut jobs: Vec<ServedJob> = Vec::with_capacity(n_arms);
-    let mut idle: Vec<usize> = Vec::new();
-    let mut in_flight = 0usize;
-
-    // Dispatch helper — mirrors `serve`'s, plus the blocked mask, idle
-    // parking, and join-latency capture.
-    let dispatch = |now: Duration,
-                        device: usize,
-                        selected: &mut [bool],
-                        blocked: &mut [bool],
-                        observed: &[bool],
-                        warm: &mut VecDeque<ArmId>,
-                        policy: &mut dyn Policy,
-                        idle: &mut Vec<usize>,
-                        waiting: &mut [bool],
-                        join_latency: &mut [Option<Duration>],
-                        arrival_wall: &[Duration],
-                        decision_latencies: &mut Vec<Duration>,
-                        in_flight: &mut usize| {
-        while let Some(&a) = warm.front() {
-            if blocked[a] {
-                warm.pop_front();
-            } else {
-                break;
-            }
-        }
-        let arm = if let Some(a) = warm.pop_front() {
-            Some(a)
-        } else {
-            let ctx =
-                SchedContext { problem, selected: blocked, observed, now: now.as_secs_f64() };
-            let d0 = Instant::now();
-            let pick = policy.select(&ctx);
-            decision_latencies.push(d0.elapsed());
-            pick
-        };
-        if let Some(a) = arm {
-            assert!(!blocked[a], "policy returned a blocked arm {a}");
-            selected[a] = true;
-            blocked[a] = true;
-            for &u in &problem.arm_users[a] {
-                if waiting[u] {
-                    waiting[u] = false;
-                    join_latency[u] = Some(now.saturating_sub(arrival_wall[u]));
-                }
-            }
-            *in_flight += 1;
-            job_txs[device]
-                .send(Job {
-                    arm: a,
-                    sleep: Duration::from_secs_f64(problem.cost[a] * config.time_scale),
-                    z: truth.z[a],
-                })
-                .expect("worker hung up");
-        } else {
-            idle.push(device);
-            idle.sort_unstable();
-        }
-    };
-
-    let events = schedule.events();
-    let mut next_evt = 0usize;
-
-    // Apply every churn event whose wall deadline has passed, integrate
-    // regret up to now, and wake idle devices after arrivals. A macro —
-    // not a closure — because it reassigns `policy` and touches most of
-    // the loop state.
-    macro_rules! process_due_events {
-        () => {{
-            let now = t0.elapsed();
-            let now_s = now.as_secs_f64();
-            let dt = (now_s - t_prev).max(0.0);
-            if dt > 0.0 {
-                for u in tenants.active_users() {
-                    per_user_regret[u] += user_gap(&incumbents, u) * dt;
-                }
-            }
-            t_prev = now_s;
-            let mut any_arrival = false;
-            while next_evt < events.len() && events[next_evt].time * config.time_scale <= now_s {
-                let e = events[next_evt];
-                next_evt += 1;
-                match e.kind {
-                    ChurnEventKind::Arrival => {
-                        if !tenants.activate(e.user) {
-                            continue;
-                        }
-                        if !policy.user_joined(problem, e.user) && !history.is_empty() {
-                            n_rebuilds += 1;
-                            policy = rebuild_policy(factory, problem, &tenants, &history);
-                        }
-                        tenants.refresh_retired_for_user(problem, e.user, &mut retired);
-                        for &x in &problem.user_arms[e.user] {
-                            blocked[x] = selected[x] || retired[x];
-                        }
-                        enqueue_warm_arms(
-                            problem,
-                            e.user,
-                            config.warm_start_per_user,
-                            &selected,
-                            &mut warm,
-                        );
-                        if join_latency[e.user].is_none() {
-                            arrival_wall[e.user] = now;
-                            waiting_first_dispatch[e.user] = true;
-                        }
-                        any_arrival = true;
-                        if config.verbose {
-                            eprintln!("[{now_s:8.3}s] tenant {} joined", e.user);
-                        }
-                    }
-                    ChurnEventKind::Departure => {
-                        if !tenants.deactivate(e.user) {
-                            continue;
-                        }
-                        if !policy.user_left(problem, e.user) && !history.is_empty() {
-                            n_rebuilds += 1;
-                            policy = rebuild_policy(factory, problem, &tenants, &history);
-                        }
-                        tenants.refresh_retired_for_user(problem, e.user, &mut retired);
-                        for &x in &problem.user_arms[e.user] {
-                            blocked[x] = selected[x] || retired[x];
-                        }
-                        waiting_first_dispatch[e.user] = false;
-                        if config.verbose {
-                            eprintln!("[{now_s:8.3}s] tenant {} left", e.user);
-                        }
-                    }
-                }
-            }
-            inst_regret.push(now_s, avg_active_gap(&incumbents, &tenants));
-            if any_arrival {
-                let woken = std::mem::take(&mut idle);
-                for d in woken {
-                    dispatch(
-                        t0.elapsed(),
-                        d,
-                        &mut selected,
-                        &mut blocked,
-                        &observed,
-                        &mut warm,
-                        policy.as_mut(),
-                        &mut idle,
-                        &mut waiting_first_dispatch,
-                        &mut join_latency,
-                        &arrival_wall,
-                        &mut decision_latencies,
-                        &mut in_flight,
-                    );
-                }
-            }
-        }};
-    }
-
-    // t = 0 cohort, then every device asks for work.
-    process_due_events!();
-    for device in 0..config.n_devices {
-        dispatch(
-            t0.elapsed(),
-            device,
-            &mut selected,
-            &mut blocked,
-            &observed,
-            &mut warm,
-            policy.as_mut(),
-            &mut idle,
-            &mut waiting_first_dispatch,
-            &mut join_latency,
-            &arrival_wall,
-            &mut decision_latencies,
-            &mut in_flight,
-        );
-    }
-
-    loop {
-        if in_flight == 0 && next_evt >= events.len() {
-            break;
-        }
-        let msg: Option<Done> = if next_evt < events.len() {
-            let deadline = Duration::from_secs_f64(events[next_evt].time * config.time_scale);
-            let timeout = deadline.saturating_sub(t0.elapsed());
-            match done_rx.recv_timeout(timeout) {
-                Ok(d) => Some(d),
-                Err(RecvTimeoutError::Timeout) => None,
-                Err(RecvTimeoutError::Disconnected) => break,
-            }
-        } else {
-            match done_rx.recv() {
-                Ok(d) => Some(d),
-                Err(_) => break,
-            }
-        };
-        match msg {
-            None => process_due_events!(),
-            Some(done) => {
-                in_flight -= 1;
-                let finish = t0.elapsed();
-                let now_s = finish.as_secs_f64();
-                let dt = (now_s - t_prev).max(0.0);
-                if dt > 0.0 {
-                    for u in tenants.active_users() {
-                        per_user_regret[u] += user_gap(&incumbents, u) * dt;
-                    }
-                }
-                t_prev = now_s;
-                observed[done.arm] = true;
-                policy.observe(problem, done.arm, done.z);
-                history.push((done.arm, done.z));
-                // Driver-side incumbents fold unconditionally — exactly
-                // like the virtual-time loop: the service remembers the
-                // best model found for a tenant even if the completion
-                // lands after its departure, so a rejoined tenant's gap
-                // (and the live KPIs) match `sim::simulate_churn`'s for
-                // the same schedule. (Only the *policy's* incumbent is
-                // dropped on leave.)
-                incumbents.update_arm(problem, done.arm, done.z);
-                inst_regret.push(now_s, avg_active_gap(&incumbents, &tenants));
-                let run = Duration::from_secs_f64(problem.cost[done.arm] * config.time_scale);
-                jobs.push(ServedJob {
-                    arm: done.arm,
-                    start: finish.saturating_sub(run),
-                    finish,
-                    z: done.z,
-                    device: done.device,
-                });
-                if config.verbose {
-                    eprintln!(
-                        "[{now_s:8.3}s] device {} finished arm {} (z = {:.4})",
-                        done.device, done.arm, done.z
-                    );
-                }
-                dispatch(
-                    t0.elapsed(),
-                    done.device,
-                    &mut selected,
-                    &mut blocked,
-                    &observed,
-                    &mut warm,
-                    policy.as_mut(),
-                    &mut idle,
-                    &mut waiting_first_dispatch,
-                    &mut join_latency,
-                    &arrival_wall,
-                    &mut decision_latencies,
-                    &mut in_flight,
-                );
-            }
-        }
-    }
-
-    drop(job_txs);
-    for w in workers {
-        let _ = w.join();
-    }
-
+    let run = engine::run(&params, PolicyHost::from_factory(factory), clock);
     ChurnServeReport {
-        policy: policy.name(),
-        jobs,
-        inst_regret,
-        per_user_regret,
-        join_latency,
-        decision_latencies,
-        makespan: t0.elapsed(),
-        n_rebuilds,
+        policy: run.policy,
+        jobs: jobs_from(&run.observations),
+        inst_regret: run.curve,
+        per_user_regret: run.per_user_regret,
+        join_latency: run
+            .join_latency
+            .iter()
+            .map(|l| l.map(|x| Duration::from_secs_f64(x.max(0.0))))
+            .collect(),
+        decision_latencies: run.decision_latencies,
+        makespan: Duration::from_secs_f64(run.makespan.max(0.0)),
+        n_rebuilds: run.n_rebuilds,
     }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::problem::ChurnEvent;
-    use crate::sched::MmGpEi;
+    use crate::problem::{ChurnEvent, ChurnEventKind};
+    use crate::sched::{MmGpEi, Policy};
 
     #[test]
     fn live_churn_serves_arrivals_and_respects_departures() {
@@ -442,5 +177,39 @@ mod tests {
         assert!(report.join_latency[0].is_some() && report.join_latency[1].is_some());
         assert!(report.per_user_regret.iter().all(|&r| r >= 0.0));
         assert!(!report.decision_latencies.is_empty());
+    }
+
+    #[test]
+    fn deterministic_variant_is_bit_replayable() {
+        let user_arms = vec![vec![0, 1], vec![2, 3]];
+        let arm_users = Problem::compute_arm_users(4, &user_arms);
+        let p = Problem {
+            name: "serve-churn-det".into(),
+            n_users: 2,
+            cost: vec![1.0, 2.0, 1.5, 0.5],
+            user_arms,
+            arm_users,
+            prior_mean: vec![0.5; 4],
+            prior_cov: crate::linalg::Mat::eye(4),
+        };
+        let t = Truth { z: vec![0.6, 0.7, 0.8, 0.9] };
+        let s = ChurnSchedule::new(vec![
+            ChurnEvent { time: 0.0, user: 0, kind: ChurnEventKind::Arrival },
+            ChurnEvent { time: 1.5, user: 1, kind: ChurnEventKind::Arrival },
+            ChurnEvent { time: 9.0, user: 0, kind: ChurnEventKind::Departure },
+            ChurnEvent { time: 9.0, user: 1, kind: ChurnEventKind::Departure },
+        ]);
+        let factory = |p: &Problem| -> Box<dyn Policy> { Box::new(MmGpEi::new(p)) };
+        let cfg = ServeConfig { n_devices: 2, time_scale: 1.0, warm_start_per_user: 1, verbose: false };
+        let a = serve_churn_deterministic(&p, &t, &s, &factory, &cfg);
+        let b = serve_churn_deterministic(&p, &t, &s, &factory, &cfg);
+        let key = |r: &ChurnServeReport| -> Vec<(usize, usize, Duration)> {
+            r.jobs.iter().map(|j| (j.arm, j.device, j.finish)).collect()
+        };
+        assert_eq!(key(&a), key(&b));
+        let bits = |xs: &[f64]| xs.iter().map(|x| x.to_bits()).collect::<Vec<_>>();
+        assert_eq!(bits(&a.per_user_regret), bits(&b.per_user_regret));
+        assert_eq!(a.inst_regret, b.inst_regret);
+        assert_eq!(a.join_latency, b.join_latency);
     }
 }

@@ -1,17 +1,18 @@
 //! Live serving coordinator: the paper's service deployed as a real
 //! multi-threaded leader/worker system (wall-clock time, real
-//! asynchrony), as opposed to the deterministic virtual-time simulator
-//! in [`crate::sim`].
+//! asynchrony) — the **wall-clock adapters** over the unified scheduling
+//! engine ([`crate::engine`]), as opposed to the deterministic
+//! virtual-time adapters in [`crate::sim`].
 //!
 //! Topology: the **leader** (caller thread) owns the policy — including a
 //! PJRT-backed [`crate::runtime::XlaBackend`], which is not thread-safe —
 //! and the regret accounting. Each **device** is a worker thread with its
-//! own job channel; running a model is simulated by sleeping
-//! `c(x) × time_scale` seconds (the substitution for real training, see
-//! DESIGN.md §3: regret depends only on the schedule). Completions flow
-//! back over a shared channel; every completion triggers one scheduling
-//! decision, exactly like Algorithm 1's "while there is a device
-//! available".
+//! own job channel (spawned by [`crate::engine::WallClock`]); running a
+//! model is simulated by sleeping `c(x) × time_scale` seconds (the
+//! substitution for real training, see DESIGN.md §3: regret depends only
+//! on the schedule). Completions flow back over a shared channel; every
+//! completion triggers one scheduling decision, exactly like
+//! Algorithm 1's "while there is a device available".
 //!
 //! The report includes per-decision latencies — the number that must stay
 //! far below `min c(x) × time_scale` for the scheduler never to become
@@ -19,16 +20,14 @@
 
 mod churn;
 
-pub use churn::{serve_churn, ChurnServeReport};
+pub use churn::{serve_churn, serve_churn_deterministic, ChurnServeReport};
 
-use std::collections::VecDeque;
-use std::sync::mpsc;
-use std::thread;
-use std::time::{Duration, Instant};
+use std::time::Duration;
 
+use crate::engine::{self, EngineParams, Observation, PolicyHost, Tenancy, WallClock};
 use crate::metrics::StepCurve;
-use crate::problem::{ArmId, Problem, Truth};
-use crate::sched::{Incumbents, Policy, SchedContext};
+use crate::problem::{ArmId, DeviceFleet, Problem, Truth};
+use crate::sched::Policy;
 
 /// Serving parameters.
 #[derive(Clone, Debug)]
@@ -64,6 +63,20 @@ pub struct ServedJob {
     pub device: usize,
 }
 
+/// Convert engine observations (wall seconds) into served-job records.
+pub(crate) fn jobs_from(observations: &[Observation]) -> Vec<ServedJob> {
+    observations
+        .iter()
+        .map(|o| ServedJob {
+            arm: o.arm,
+            start: Duration::from_secs_f64(o.start.max(0.0)),
+            finish: Duration::from_secs_f64(o.finish.max(0.0)),
+            z: o.z,
+            device: o.device,
+        })
+        .collect()
+}
+
 /// Result of a serve session.
 #[derive(Clone, Debug)]
 pub struct ServeReport {
@@ -75,7 +88,7 @@ pub struct ServeReport {
     pub inst_regret: StepCurve,
     /// Wall-clock latency of every scheduling decision.
     pub decision_latencies: Vec<Duration>,
-    /// Total session duration.
+    /// Total session duration (last completion offset).
     pub makespan: Duration,
 }
 
@@ -94,21 +107,6 @@ impl ServeReport {
     }
 }
 
-/// Job message to a device worker. Shared with the churn loop
-/// (`coordinator::churn`).
-pub(crate) struct Job {
-    pub(crate) arm: ArmId,
-    pub(crate) sleep: Duration,
-    pub(crate) z: f64,
-}
-
-/// Completion message back to the leader.
-pub(crate) struct Done {
-    pub(crate) device: usize,
-    pub(crate) arm: ArmId,
-    pub(crate) z: f64,
-}
-
 /// Run a live serving session of `policy` over `(problem, truth)`.
 pub fn serve(
     problem: &Problem,
@@ -118,160 +116,29 @@ pub fn serve(
 ) -> ServeReport {
     assert!(config.n_devices >= 1);
     assert!(config.time_scale > 0.0);
-    let n_arms = problem.n_arms();
-    let n_users = problem.n_users;
-
-    let (done_tx, done_rx) = mpsc::channel::<Done>();
-    let mut job_txs = Vec::with_capacity(config.n_devices);
-    let mut workers = Vec::with_capacity(config.n_devices);
-    for device in 0..config.n_devices {
-        let (tx, rx) = mpsc::channel::<Job>();
-        let done_tx = done_tx.clone();
-        job_txs.push(tx);
-        workers.push(thread::spawn(move || {
-            // Device worker: "train" each model by sleeping its cost,
-            // then report the observed performance.
-            while let Ok(job) = rx.recv() {
-                thread::sleep(job.sleep);
-                if done_tx.send(Done { device, arm: job.arm, z: job.z }).is_err() {
-                    break; // leader gone
-                }
-            }
-        }));
-    }
-    drop(done_tx);
-
-    let t0 = Instant::now();
-    let mut selected = vec![false; n_arms];
-    let mut observed = vec![false; n_arms];
-    let mut warm: VecDeque<ArmId> = problem.warm_start_arms(config.warm_start_per_user).into();
-    // Option-based incumbents with the per-user empty reference — same
-    // accounting as `sim` (fixes silently-vanishing regret for negative-
-    // valued optima; byte-identical for the paper's non-negative tables).
-    let z_star: Vec<f64> = (0..n_users).map(|u| truth.best_value(problem, u)).collect();
-    let empty_ref: Vec<f64> = (0..n_users)
-        .map(|u| problem.user_arms[u].iter().map(|&a| truth.z[a]).fold(0.0f64, f64::min))
-        .collect();
-    let mut incumbents = Incumbents::new(n_users);
-    let gap_avg = |inc: &Incumbents| -> f64 {
-        z_star
-            .iter()
-            .zip(&empty_ref)
-            .enumerate()
-            .map(|(u, (&s, &e))| {
-                let b = if inc.has_observation(u) { inc.value(u) } else { e };
-                (s - b).max(0.0)
-            })
-            .sum::<f64>()
-            / n_users as f64
+    let fleet = DeviceFleet::uniform(config.n_devices);
+    let mut clock = WallClock::spawn(config.n_devices);
+    let params = EngineParams {
+        problem,
+        truth,
+        sched_view: None,
+        fleet: &fleet,
+        tenancy: Tenancy::Static,
+        warm_start_per_user: config.warm_start_per_user,
+        horizon: None,
+        stop_at_cutoff: None,
+        time_scale: config.time_scale,
+        collect_decision_latencies: true,
+        verbose: config.verbose,
     };
-    let mut inst_regret = StepCurve::new(gap_avg(&incumbents));
-    let mut decision_latencies = Vec::new();
-    let mut jobs = Vec::with_capacity(n_arms);
-    let mut in_flight = 0usize;
-
-    let dispatch = |device: usize,
-                        selected: &mut Vec<bool>,
-                        observed: &[bool],
-                        warm: &mut VecDeque<ArmId>,
-                        policy: &mut dyn Policy,
-                        decision_latencies: &mut Vec<Duration>,
-                        in_flight: &mut usize| {
-        while let Some(&a) = warm.front() {
-            if selected[a] {
-                warm.pop_front();
-            } else {
-                break;
-            }
-        }
-        let arm = if let Some(a) = warm.pop_front() {
-            Some(a)
-        } else {
-            let now = t0.elapsed().as_secs_f64();
-            let ctx = SchedContext { problem, selected, observed, now };
-            let d0 = Instant::now();
-            let pick = policy.select(&ctx);
-            decision_latencies.push(d0.elapsed());
-            pick
-        };
-        if let Some(a) = arm {
-            assert!(!selected[a], "policy returned already-selected arm {a}");
-            selected[a] = true;
-            *in_flight += 1;
-            job_txs[device]
-                .send(Job {
-                    arm: a,
-                    sleep: Duration::from_secs_f64(problem.cost[a] * config.time_scale),
-                    z: truth.z[a],
-                })
-                .expect("worker hung up");
-        }
-    };
-
-    for device in 0..config.n_devices {
-        dispatch(
-            device,
-            &mut selected,
-            &observed,
-            &mut warm,
-            policy,
-            &mut decision_latencies,
-            &mut in_flight,
-        );
-    }
-
-    while in_flight > 0 {
-        let done = done_rx.recv().expect("all workers died");
-        in_flight -= 1;
-        let finish = t0.elapsed();
-        observed[done.arm] = true;
-        policy.observe(problem, done.arm, done.z);
-        incumbents.update_arm(problem, done.arm, done.z);
-        inst_regret.push(finish.as_secs_f64(), gap_avg(&incumbents));
-        jobs.push(ServedJob {
-            arm: done.arm,
-            start: Duration::ZERO, // filled below from cost
-            finish,
-            z: done.z,
-            device: done.device,
-        });
-        if let Some(last) = jobs.last_mut() {
-            let run = Duration::from_secs_f64(problem.cost[last.arm] * config.time_scale);
-            last.start = finish.saturating_sub(run);
-        }
-        if config.verbose {
-            eprintln!(
-                "[{:8.3}s] device {} finished arm {} (z = {:.4}); avg regret {:.4}",
-                finish.as_secs_f64(),
-                done.device,
-                done.arm,
-                done.z,
-                gap_avg(&incumbents)
-            );
-        }
-        dispatch(
-            done.device,
-            &mut selected,
-            &observed,
-            &mut warm,
-            policy,
-            &mut decision_latencies,
-            &mut in_flight,
-        );
-    }
-
-    // Shut workers down.
-    drop(job_txs);
-    for w in workers {
-        let _ = w.join();
-    }
-
+    let run = engine::run(&params, PolicyHost::borrowed(policy), &mut clock);
+    drop(clock); // hang up the job channels and join the workers
     ServeReport {
-        policy: policy.name(),
-        jobs,
-        inst_regret,
-        decision_latencies,
-        makespan: t0.elapsed(),
+        policy: run.policy,
+        jobs: jobs_from(&run.observations),
+        inst_regret: run.curve.scaled(1.0 / problem.n_users as f64),
+        decision_latencies: run.decision_latencies,
+        makespan: Duration::from_secs_f64(run.makespan.max(0.0)),
     }
 }
 

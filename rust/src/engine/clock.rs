@@ -1,0 +1,479 @@
+//! Time sources for the scheduling engine.
+//!
+//! The engine's event loop is written once and parameterized over a
+//! [`Clock`]: the thing that runs dispatched jobs and hands back the
+//! next event. Three implementations:
+//!
+//! * [`VirtualClock`] — deterministic discrete-event time: a min-heap of
+//!   completions with the historical `(finish, device)` total order, so
+//!   identical seeds replay identical schedules (the simulator's
+//!   substrate);
+//! * [`WallClock`] — real asynchrony: one worker thread per device that
+//!   "trains" a model by sleeping its scaled cost and reports back over
+//!   a channel; timed-event deadlines are served by `recv_timeout` (the
+//!   live coordinator's substrate);
+//! * [`MockClock`] — the wall clock's deterministic stand-in: same
+//!   adapter-facing semantics (deadline handling, start reconstruction)
+//!   but virtual delivery, used by the cross-loop parity tests to drive
+//!   the wall-clock adapters over an exactly replayable trace.
+//!
+//! Device preemption (elastic fleets) uses **lazy cancellation**: every
+//! dispatch carries a job id; a cancelled job's completion is dropped at
+//! delivery time ([`VirtualClock`] filters stale heap entries,
+//! [`WallClock`] stale channel messages), so the revealed-on-completion
+//! contract is preserved — a preempted arm reveals nothing.
+
+use std::cmp::Ordering;
+use std::collections::BinaryHeap;
+use std::sync::mpsc::{self, RecvTimeoutError};
+use std::thread::{self, JoinHandle};
+use std::time::{Duration, Instant};
+
+use crate::problem::ArmId;
+
+/// One finished job delivered by a [`Clock`].
+#[derive(Clone, Copy, Debug)]
+pub struct Completion {
+    /// Completion time in clock units.
+    pub finish: f64,
+    /// Device that ran the job.
+    pub device: usize,
+    /// Arm that ran.
+    pub arm: ArmId,
+    /// Dispatch time in clock units.
+    pub start: f64,
+    /// Job id (engine-issued, used for lazy cancellation).
+    pub job: u64,
+}
+
+impl PartialEq for Completion {
+    fn eq(&self, other: &Self) -> bool {
+        self.cmp(other) == Ordering::Equal
+    }
+}
+impl Eq for Completion {}
+impl PartialOrd for Completion {
+    fn partial_cmp(&self, other: &Self) -> Option<Ordering> {
+        Some(self.cmp(other))
+    }
+}
+impl Ord for Completion {
+    fn cmp(&self, other: &Self) -> Ordering {
+        // Reversed: BinaryHeap is a max-heap, we want earliest first.
+        // `total_cmp` makes the order *total* (no NaN panic, no
+        // platform-dependent partial_cmp escape hatch), and equal finish
+        // times break deterministically by device index so identical
+        // seeds replay identical schedules everywhere — the same-cost
+        // warm-start burst at t = 0 would otherwise leave the completion
+        // order to heap internals.
+        other
+            .finish
+            .total_cmp(&self.finish)
+            .then_with(|| other.device.cmp(&self.device))
+    }
+}
+
+/// What [`Clock::next_event`] hands back.
+#[derive(Debug)]
+pub enum Step {
+    /// A live (non-cancelled) job finished.
+    Completed(Completion),
+    /// The timed-event deadline fired before any completion; the payload
+    /// is the clock's current time (the deadline itself in virtual time,
+    /// the measured wake-up time on the wall clock).
+    TimedDue(f64),
+    /// No live jobs and no deadline — the run is over.
+    Exhausted,
+}
+
+/// A job runner + time source the engine drives.
+///
+/// Times are in *clock units*: abstract cost units for the virtual and
+/// mock clocks, wall seconds for [`WallClock`] (the engine pre-scales
+/// durations and deadlines by its `time_scale`).
+pub trait Clock {
+    /// Current time.
+    fn now(&self) -> f64;
+
+    /// Start a job: `arm` on `device`, occupying `dur` clock units.
+    fn dispatch(&mut self, device: usize, arm: ArmId, dur: f64, job: u64);
+
+    /// Cancel the in-flight job `job` on `device` (fleet preemption).
+    /// The job's completion will never be delivered.
+    fn cancel(&mut self, device: usize, job: u64);
+
+    /// Block until the next event: the earliest live completion, or —
+    /// when `deadline` is `Some` and due no later — a timed-event tick.
+    /// Ties go to the timed event, matching the historical churn loop.
+    fn next_event(&mut self, deadline: Option<f64>) -> Step;
+}
+
+/// Deterministic virtual time: completions from a min-heap, `now` is the
+/// time of the last delivered event.
+pub struct VirtualClock {
+    heap: BinaryHeap<Completion>,
+    /// Live job id per device (`None` = idle/cancelled); lazily filters
+    /// stale heap entries after a preemption.
+    live: Vec<Option<u64>>,
+    n_live: usize,
+    now: f64,
+}
+
+impl VirtualClock {
+    /// New virtual clock over `n_devices` device slots, at t = 0.
+    pub fn new(n_devices: usize) -> Self {
+        VirtualClock { heap: BinaryHeap::new(), live: vec![None; n_devices], n_live: 0, now: 0.0 }
+    }
+
+    /// Number of live (non-cancelled) in-flight jobs (tests/diagnostics).
+    pub fn in_flight(&self) -> usize {
+        self.n_live
+    }
+
+    /// Drop cancelled completions off the top of the heap.
+    fn skim_stale(&mut self) {
+        while let Some(c) = self.heap.peek() {
+            if self.live[c.device] == Some(c.job) {
+                break;
+            }
+            self.heap.pop();
+        }
+    }
+}
+
+impl Clock for VirtualClock {
+    fn now(&self) -> f64 {
+        self.now
+    }
+
+    fn dispatch(&mut self, device: usize, arm: ArmId, dur: f64, job: u64) {
+        debug_assert!(self.live[device].is_none(), "device {device} already busy");
+        self.live[device] = Some(job);
+        self.n_live += 1;
+        self.heap.push(Completion { finish: self.now + dur, device, arm, start: self.now, job });
+    }
+
+    fn cancel(&mut self, device: usize, job: u64) {
+        if self.live[device] == Some(job) {
+            self.live[device] = None;
+            self.n_live -= 1;
+        }
+    }
+
+    fn next_event(&mut self, deadline: Option<f64>) -> Step {
+        self.skim_stale();
+        match (self.heap.peek().map(|c| c.finish), deadline) {
+            (None, None) => Step::Exhausted,
+            (None, Some(d)) => {
+                self.now = d;
+                Step::TimedDue(d)
+            }
+            (Some(_), None) => {
+                let c = self.heap.pop().expect("peeked above");
+                self.live[c.device] = None;
+                self.n_live -= 1;
+                self.now = c.finish;
+                Step::Completed(c)
+            }
+            (Some(f), Some(d)) => {
+                if d <= f {
+                    self.now = d;
+                    Step::TimedDue(d)
+                } else {
+                    let c = self.heap.pop().expect("peeked above");
+                    self.live[c.device] = None;
+                    self.n_live -= 1;
+                    self.now = c.finish;
+                    Step::Completed(c)
+                }
+            }
+        }
+    }
+}
+
+/// The wall clock's deterministic stand-in for parity tests: delegates
+/// to a [`VirtualClock`] so the *adapter* code path (per-tenant
+/// accounting, report conversion, deadline handling) can be driven over
+/// an exactly replayable trace and compared bit-for-bit against the
+/// virtual-time adapter — see `rust/tests/engine_parity.rs`.
+pub struct MockClock(VirtualClock);
+
+impl MockClock {
+    /// New mock clock over `n_devices` device slots.
+    pub fn new(n_devices: usize) -> Self {
+        MockClock(VirtualClock::new(n_devices))
+    }
+
+    /// Number of live in-flight jobs (tests/diagnostics).
+    pub fn in_flight(&self) -> usize {
+        self.0.in_flight()
+    }
+}
+
+impl Clock for MockClock {
+    fn now(&self) -> f64 {
+        self.0.now()
+    }
+    fn dispatch(&mut self, device: usize, arm: ArmId, dur: f64, job: u64) {
+        self.0.dispatch(device, arm, dur, job)
+    }
+    fn cancel(&mut self, device: usize, job: u64) {
+        self.0.cancel(device, job)
+    }
+    fn next_event(&mut self, deadline: Option<f64>) -> Step {
+        self.0.next_event(deadline)
+    }
+}
+
+/// Job message to a device worker thread.
+struct WallJob {
+    arm: ArmId,
+    job: u64,
+    sleep: Duration,
+}
+
+/// Completion message back to the leader.
+struct WallDone {
+    device: usize,
+    arm: ArmId,
+    job: u64,
+}
+
+/// Real wall-clock time over a pool of device worker threads. Running a
+/// model is simulated by sleeping its (speed- and scale-adjusted) cost;
+/// the completion flows back over a shared channel. Timed-event
+/// deadlines are served by `recv_timeout` — the leader wakes for
+/// whichever comes first, exactly like the virtual loop but under real
+/// asynchrony.
+pub struct WallClock {
+    t0: Instant,
+    job_txs: Vec<mpsc::Sender<WallJob>>,
+    done_rx: mpsc::Receiver<WallDone>,
+    workers: Vec<JoinHandle<()>>,
+    live: Vec<Option<u64>>,
+    /// Duration (seconds) of the job running on each device — used to
+    /// reconstruct `Completion::start` from the measured finish, the
+    /// historical `ServeReport` convention.
+    dur: Vec<f64>,
+    n_live: usize,
+}
+
+impl WallClock {
+    /// Spawn one worker thread per device slot (offline fleet devices
+    /// simply never receive jobs) and start the clock.
+    pub fn spawn(n_devices: usize) -> Self {
+        let (done_tx, done_rx) = mpsc::channel::<WallDone>();
+        let mut job_txs = Vec::with_capacity(n_devices);
+        let mut workers = Vec::with_capacity(n_devices);
+        for device in 0..n_devices {
+            let (tx, rx) = mpsc::channel::<WallJob>();
+            let done_tx = done_tx.clone();
+            job_txs.push(tx);
+            workers.push(thread::spawn(move || {
+                // Device worker: "train" each model by sleeping its
+                // cost, then report completion.
+                while let Ok(job) = rx.recv() {
+                    thread::sleep(job.sleep);
+                    if done_tx.send(WallDone { device, arm: job.arm, job: job.job }).is_err() {
+                        break; // leader gone
+                    }
+                }
+            }));
+        }
+        WallClock {
+            t0: Instant::now(),
+            job_txs,
+            done_rx,
+            workers,
+            live: vec![None; n_devices],
+            dur: vec![0.0; n_devices],
+            n_live: 0,
+        }
+    }
+
+    /// Number of live (non-cancelled) in-flight jobs (tests/diagnostics).
+    pub fn in_flight(&self) -> usize {
+        self.n_live
+    }
+
+    fn deliver(&mut self, m: WallDone) -> Option<Completion> {
+        // Stale (preempted) jobs are dropped: nothing is revealed.
+        if self.live[m.device] != Some(m.job) {
+            return None;
+        }
+        self.live[m.device] = None;
+        self.n_live -= 1;
+        let finish = self.now();
+        let start = (finish - self.dur[m.device]).max(0.0);
+        Some(Completion { finish, device: m.device, arm: m.arm, start, job: m.job })
+    }
+}
+
+impl Clock for WallClock {
+    fn now(&self) -> f64 {
+        self.t0.elapsed().as_secs_f64()
+    }
+
+    fn dispatch(&mut self, device: usize, arm: ArmId, dur: f64, job: u64) {
+        debug_assert!(self.live[device].is_none(), "device {device} already busy");
+        self.live[device] = Some(job);
+        self.dur[device] = dur;
+        self.n_live += 1;
+        self.job_txs[device]
+            .send(WallJob { arm, job, sleep: Duration::from_secs_f64(dur) })
+            .expect("worker hung up");
+    }
+
+    /// Lazy cancellation only: the completion is suppressed, but the
+    /// worker thread keeps sleeping out the cancelled job's cost — a job
+    /// dispatched to the same device afterwards queues behind that
+    /// residual sleep. Fine for the current adapters (fleet preemption
+    /// runs only on the virtual clock); a real wall-clock fleet adapter
+    /// needs interruptible workers (e.g. a condvar wait with a cancel
+    /// flag) before its schedules mean anything — see the ROADMAP's
+    /// wall-clock fleet serving item.
+    fn cancel(&mut self, device: usize, job: u64) {
+        if self.live[device] == Some(job) {
+            self.live[device] = None;
+            self.n_live -= 1;
+        }
+    }
+
+    fn next_event(&mut self, deadline: Option<f64>) -> Step {
+        loop {
+            let msg = match deadline {
+                Some(d) => {
+                    let timeout =
+                        Duration::from_secs_f64(d.max(0.0)).saturating_sub(self.t0.elapsed());
+                    match self.done_rx.recv_timeout(timeout) {
+                        Ok(m) => m,
+                        Err(RecvTimeoutError::Timeout) => return Step::TimedDue(self.now()),
+                        Err(RecvTimeoutError::Disconnected) => return Step::Exhausted,
+                    }
+                }
+                None => {
+                    if self.n_live == 0 {
+                        return Step::Exhausted;
+                    }
+                    match self.done_rx.recv() {
+                        Ok(m) => m,
+                        Err(_) => return Step::Exhausted,
+                    }
+                }
+            };
+            if let Some(c) = self.deliver(msg) {
+                return Step::Completed(c);
+            }
+            // Stale completion of a preempted job — keep waiting.
+        }
+    }
+}
+
+impl Drop for WallClock {
+    fn drop(&mut self) {
+        // Hang up the job channels so workers exit their recv loop, then
+        // join them (a preempted job's worker finishes its sleep first —
+        // bounded by the longest job).
+        self.job_txs.clear();
+        for w in self.workers.drain(..) {
+            let _ = w.join();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn virtual_clock_delivers_in_time_then_device_order() {
+        let mut c = VirtualClock::new(3);
+        c.dispatch(1, 10, 2.0, 1);
+        c.dispatch(0, 11, 2.0, 2);
+        c.dispatch(2, 12, 1.0, 3);
+        let mut order = Vec::new();
+        while let Step::Completed(done) = c.next_event(None) {
+            order.push((done.device, done.arm, done.finish));
+        }
+        assert_eq!(order, vec![(2, 12, 1.0), (0, 11, 2.0), (1, 10, 2.0)]);
+        assert!(matches!(c.next_event(None), Step::Exhausted));
+    }
+
+    #[test]
+    fn virtual_clock_timed_deadline_wins_ties() {
+        let mut c = VirtualClock::new(1);
+        c.dispatch(0, 5, 2.0, 1);
+        match c.next_event(Some(2.0)) {
+            Step::TimedDue(t) => assert_eq!(t, 2.0),
+            other => panic!("expected TimedDue, got {other:?}"),
+        }
+        // The completion is still pending afterwards.
+        assert!(matches!(c.next_event(None), Step::Completed(_)));
+    }
+
+    #[test]
+    fn virtual_clock_cancellation_is_lazy_and_silent() {
+        let mut c = VirtualClock::new(2);
+        c.dispatch(0, 5, 1.0, 1);
+        c.dispatch(1, 6, 2.0, 2);
+        assert_eq!(c.in_flight(), 2);
+        c.cancel(0, 1);
+        assert_eq!(c.in_flight(), 1);
+        match c.next_event(None) {
+            Step::Completed(done) => assert_eq!((done.device, done.arm), (1, 6)),
+            other => panic!("cancelled job must not deliver, got {other:?}"),
+        }
+        assert!(matches!(c.next_event(None), Step::Exhausted));
+    }
+
+    #[test]
+    fn virtual_clock_timed_only_advances_time() {
+        let mut c = VirtualClock::new(1);
+        assert!(matches!(c.next_event(Some(4.0)), Step::TimedDue(_)));
+        assert_eq!(c.now(), 4.0);
+        c.dispatch(0, 3, 1.5, 1);
+        match c.next_event(None) {
+            Step::Completed(done) => {
+                assert_eq!(done.start, 4.0);
+                assert_eq!(done.finish, 5.5);
+            }
+            other => panic!("{other:?}"),
+        }
+    }
+
+    #[test]
+    fn wall_clock_runs_and_reports() {
+        let mut c = WallClock::spawn(2);
+        c.dispatch(0, 7, 0.002, 1);
+        c.dispatch(1, 8, 0.001, 2);
+        let mut arms = Vec::new();
+        while let Step::Completed(done) = c.next_event(None) {
+            assert!(done.finish >= done.start);
+            arms.push(done.arm);
+        }
+        arms.sort_unstable();
+        assert_eq!(arms, vec![7, 8]);
+        assert_eq!(c.in_flight(), 0);
+    }
+
+    #[test]
+    fn wall_clock_deadline_fires_when_idle() {
+        let mut c = WallClock::spawn(1);
+        match c.next_event(Some(0.002)) {
+            Step::TimedDue(t) => assert!(t >= 0.0),
+            other => panic!("expected TimedDue, got {other:?}"),
+        }
+        assert!(matches!(c.next_event(None), Step::Exhausted));
+    }
+
+    #[test]
+    fn wall_clock_drops_cancelled_completions() {
+        let mut c = WallClock::spawn(1);
+        c.dispatch(0, 9, 0.001, 1);
+        c.cancel(0, 1);
+        assert_eq!(c.in_flight(), 0);
+        // The worker's Done message for the preempted job must be
+        // discarded, not delivered.
+        assert!(matches!(c.next_event(None), Step::Exhausted));
+    }
+}

@@ -1,0 +1,1121 @@
+//! The unified discrete-event scheduling engine.
+//!
+//! Before this module, the event-loop logic was copy-adapted across four
+//! files (`sim/mod.rs`, `sim/churn.rs`, `coordinator/mod.rs`,
+//! `coordinator/churn.rs`): every new scenario cost two more loop forks.
+//! The engine owns the loop **once** — event heap / channel wake-ups
+//! (behind the [`Clock`] trait), device states, the tenant mask,
+//! warm-start, dispatch, Eq.-2 regret accounting, and horizon clipping —
+//! and the four public entry points are thin adapters over [`run`]:
+//!
+//! ```text
+//!                       ┌─────────────────────────┐
+//!  sim::simulate ─────► │                         │ ◄──── coordinator::serve
+//!  sim::simulate_churn ►│      engine::run        │ ◄──── coordinator::serve_churn
+//!  sim::simulate_fleet ►│  (one event loop, one   │
+//!                       │   accounting substrate) │
+//!                       └───────────┬─────────────┘
+//!                 Clock: VirtualClock │ WallClock │ MockClock
+//! ```
+//!
+//! The engine is parameterized over two event streams beyond
+//! completions: **tenant churn** ([`Tenancy::Churn`], PR 4's
+//! arrival/departure timeline) and **device fleet availability**
+//! ([`crate::problem::DeviceFleet`] — elastic heterogeneous capacity,
+//! new in this layer). The merged timed-event order is deterministic:
+//! `(time, rank, id)` with rank `DeviceLeave < TenantDeparture <
+//! TenantArrival < DeviceJoin` — capacity shrinks first, the cohort
+//! turns over, and a joining device asks for work against the
+//! post-churn arm set.
+//!
+//! **Heterogeneous speeds.** A job on device `d` occupies it for
+//! `c(x)/s_d` time units; the *policy* still sees the (estimated) costs
+//! of Remark 1 — speed is a property of the device, not the arm.
+//! Free-device wake order is (speed desc, index asc); with unit speeds
+//! this is the historical ascending-index order, which is what keeps
+//! fleet-free runs **byte-identical** to the pre-engine loops (pinned by
+//! `rust/tests/engine_parity.rs` and the CI determinism gate).
+//!
+//! **Preemption.** A device that leaves mid-job cancels the job (lazy
+//! cancellation in the clock) and requeues the in-flight arm's decision
+//! into a FIFO consulted *before* the warm-start queue — the decision
+//! was already made, it just never ran. Nothing is revealed: the
+//! revealed-on-completion contract holds, a preempted arm is simply
+//! unselected again.
+//!
+//! **Regret accounting.** Two modes, bit-compatible with the historical
+//! loops: the static paper setting integrates the all-user gap sum
+//! (scaled to an average by the adapters), tenant churn integrates per
+//! user over active windows only, with exact horizon clipping.
+
+mod clock;
+
+pub use clock::{Clock, Completion, MockClock, Step, VirtualClock, WallClock};
+
+use std::collections::VecDeque;
+use std::time::{Duration, Instant};
+
+use crate::metrics::StepCurve;
+use crate::problem::{
+    ArmId, ChurnEventKind, ChurnSchedule, DeviceFleet, FleetEventKind, Problem, TenantSet, Truth,
+    UserId,
+};
+use crate::sched::{Incumbents, Policy, SchedContext};
+
+/// One finished evaluation (driver-side record; the policy learns the
+/// same `z` through [`Policy::observe`]).
+#[derive(Clone, Debug)]
+pub struct Observation {
+    /// Which arm.
+    pub arm: ArmId,
+    /// Dispatch time.
+    pub start: f64,
+    /// Completion time: `start + c(arm)/s_d` in virtual time, where
+    /// `s_d` is the running device's speed (1 for the paper's uniform
+    /// fleets, so the historical `start + c(arm)` holds there); on the
+    /// wall clock, the measured completion offset.
+    pub finish: f64,
+    /// Revealed performance.
+    pub z: f64,
+    /// Device index that ran it.
+    pub device: usize,
+}
+
+/// A policy factory: how the engine reconstructs a policy for the
+/// from-scratch rebuild fallback (churn/fleet events a policy cannot
+/// apply in place).
+pub type PolicyFactory = dyn Fn(&Problem) -> Box<dyn Policy>;
+
+/// Who owns the tenant timeline.
+pub enum Tenancy<'a> {
+    /// The paper's static cohort: every user active from t = 0.
+    Static,
+    /// PR 4's dynamic tenancy: everyone starts inactive and the
+    /// validated timeline drives arrivals/departures.
+    Churn(&'a ChurnSchedule),
+}
+
+/// Everything [`run`] needs beyond the policy and the clock.
+pub struct EngineParams<'a> {
+    /// Problem instance (true costs — what devices charge).
+    pub problem: &'a Problem,
+    /// Hidden ground truth, revealed on completion.
+    pub truth: &'a Truth,
+    /// Scheduler-visible cost view (Remark 1 estimated costs); `None`
+    /// means the policy sees the true problem.
+    pub sched_view: Option<&'a Problem>,
+    /// The device fleet (speeds + availability schedule). The clock must
+    /// have been constructed over `fleet.n_devices()` device slots.
+    pub fleet: &'a DeviceFleet,
+    /// Static cohort or churn timeline.
+    pub tenancy: Tenancy<'a>,
+    /// Warm-start arms per user (paper protocol: 2 fastest). 0 disables.
+    pub warm_start_per_user: usize,
+    /// Report horizon `T` for Eq. 2; defaults to the makespan.
+    pub horizon: Option<f64>,
+    /// Static mode only: stop once the average instantaneous regret
+    /// drops to this cutoff (the Figure-5 hitting-time protocol).
+    pub stop_at_cutoff: Option<f64>,
+    /// Clock units per cost unit: 1 for virtual time, the coordinator's
+    /// `time_scale` (wall seconds per cost unit) for live serving. Job
+    /// durations and timed-event deadlines are scaled by it.
+    pub time_scale: f64,
+    /// Collect the per-decision latency vector (the serve reports'
+    /// metric). Virtual-time adapters leave this off — they only need
+    /// the decision count and the accumulated wall total, so the
+    /// dominant bench-sweep path does not grow a throwaway `Vec`.
+    pub collect_decision_latencies: bool,
+    /// Print progress lines to stderr (live serving).
+    pub verbose: bool,
+}
+
+/// The engine's policy handle: either a caller-owned borrow (static
+/// entry points — no rebuild possible, none needed) or a factory-owned
+/// policy with the observation history needed for the from-scratch
+/// rebuild fallback when a churn/fleet hook reports "not applied in
+/// place".
+pub struct PolicyHost<'a> {
+    inner: HostInner<'a>,
+    history: Vec<(ArmId, f64)>,
+    n_rebuilds: usize,
+}
+
+enum HostInner<'a> {
+    Borrowed(&'a mut dyn Policy),
+    /// `policy` is `None` until the engine initializes it against the
+    /// scheduler-visible view — construction is deferred so the initial
+    /// policy and every rebuild are *structurally* guaranteed to see
+    /// the same (possibly estimated-cost) problem.
+    Factory { policy: Option<Box<dyn Policy>>, factory: &'a PolicyFactory },
+}
+
+impl<'a> PolicyHost<'a> {
+    /// Host a caller-owned policy. Events the policy cannot apply in
+    /// place panic (there is no factory to rebuild from) — use
+    /// [`PolicyHost::from_factory`] for churn/fleet runs.
+    pub fn borrowed(policy: &'a mut dyn Policy) -> Self {
+        PolicyHost { inner: HostInner::Borrowed(policy), history: Vec::new(), n_rebuilds: 0 }
+    }
+
+    /// Keep `factory` for the initial construction and for rebuilds.
+    /// The engine constructs the policy at run start against the
+    /// scheduler-visible problem (`EngineParams::sched_view` when set),
+    /// so the initial policy and every rebuilt policy are guaranteed to
+    /// see the same cost view — the invariant the in-place-vs-rebuild
+    /// parity oracle depends on.
+    pub fn from_factory(factory: &'a PolicyFactory) -> Self {
+        PolicyHost {
+            inner: HostInner::Factory { policy: None, factory },
+            history: Vec::new(),
+            n_rebuilds: 0,
+        }
+    }
+
+    /// Construct the factory-owned policy against `view` (no-op for a
+    /// borrowed policy or if already initialized). Called once by the
+    /// engine before any policy interaction.
+    fn init(&mut self, view: &Problem) {
+        if let HostInner::Factory { policy, factory } = &mut self.inner {
+            if policy.is_none() {
+                *policy = Some((*factory)(view));
+            }
+        }
+    }
+
+    fn policy_mut(&mut self) -> &mut dyn Policy {
+        match &mut self.inner {
+            HostInner::Borrowed(p) => &mut **p,
+            HostInner::Factory { policy, .. } => {
+                policy.as_mut().expect("engine initializes the policy before use").as_mut()
+            }
+        }
+    }
+
+    fn policy_ref(&self) -> &dyn Policy {
+        match &self.inner {
+            HostInner::Borrowed(p) => &**p,
+            HostInner::Factory { policy, .. } => {
+                policy.as_deref().expect("engine initializes the policy before use")
+            }
+        }
+    }
+
+    /// Feed an observation through the policy, recording it for replay
+    /// (factory mode only — a borrowed policy can never be rebuilt).
+    fn observe(&mut self, view: &Problem, arm: ArmId, z: f64) {
+        self.policy_mut().observe(view, arm, z);
+        if matches!(self.inner, HostInner::Factory { .. }) {
+            self.history.push((arm, z));
+        }
+    }
+
+    /// From-scratch rebuild: reconstruct via the factory, replay the
+    /// observation history in completion order, then replay the current
+    /// tenant set (so churn-capable policies freeze absent tenants).
+    /// A fresh policy with an empty history is already "rebuilt", so the
+    /// call is a no-op then — the same rule both historical loops
+    /// applied, keeping the `rebuilds` KPI comparable.
+    ///
+    /// `view` is the *scheduler-visible* problem (the Remark-1 estimated
+    /// cost view when one is set): the rebuild must construct and replay
+    /// against exactly what the live policy saw, or a rebuilt policy's
+    /// cost-sensitive state would silently diverge from the in-place
+    /// path.
+    fn rebuild(&mut self, view: &Problem, tenants: &TenantSet) {
+        if self.history.is_empty() {
+            return;
+        }
+        match &mut self.inner {
+            HostInner::Factory { policy, factory } => {
+                self.n_rebuilds += 1;
+                let mut fresh = (*factory)(view);
+                for &(a, z) in &self.history {
+                    fresh.observe(view, a, z);
+                }
+                for u in 0..view.n_users {
+                    if !tenants.is_active(u) {
+                        let _ = fresh.user_left(view, u);
+                    }
+                }
+                *policy = Some(fresh);
+            }
+            HostInner::Borrowed(_) => panic!(
+                "policy cannot apply a churn/fleet event in place and the engine holds a \
+                 borrowed policy (no factory to rebuild from) — use a factory-based entry point"
+            ),
+        }
+    }
+
+    fn user_joined(&mut self, view: &Problem, tenants: &TenantSet, user: UserId) {
+        if !self.policy_mut().user_joined(view, user) {
+            self.rebuild(view, tenants);
+        }
+    }
+
+    fn user_left(&mut self, view: &Problem, tenants: &TenantSet, user: UserId) {
+        if !self.policy_mut().user_left(view, user) {
+            self.rebuild(view, tenants);
+        }
+    }
+
+    fn device_joined(&mut self, view: &Problem, tenants: &TenantSet, device: usize) {
+        if !self.policy_mut().device_joined(view, device) {
+            self.rebuild(view, tenants);
+        }
+    }
+
+    fn device_left(&mut self, view: &Problem, tenants: &TenantSet, device: usize) {
+        if !self.policy_mut().device_left(view, device) {
+            self.rebuild(view, tenants);
+        }
+    }
+}
+
+/// Raw engine output; the `sim`/`coordinator` adapters reshape it into
+/// their historical result types.
+#[derive(Clone, Debug)]
+pub struct EngineRun {
+    /// Policy display name (of the final policy — rebuilds keep it).
+    pub policy: String,
+    /// All completions in completion order (preempted jobs excluded —
+    /// they never complete).
+    pub observations: Vec<Observation>,
+    /// Regret step curve in clock units: the all-user **gap sum** in
+    /// static mode (adapters scale to the average), the active-tenant
+    /// **average** under churn.
+    pub curve: StepCurve,
+    /// Eq. 2 at the horizon: the gap-sum integral (static) or the sum of
+    /// [`EngineRun::per_user_regret`] (churn).
+    pub cumulative_regret: f64,
+    /// Per-tenant `∫ gap_u(t) dt` over active windows (churn mode; empty
+    /// in static mode).
+    pub per_user_regret: Vec<f64>,
+    /// Time from a tenant's (first unserved) arrival to the first
+    /// dispatch of one of its arms (churn mode; `None` = never served).
+    pub join_latency: Vec<Option<f64>>,
+    /// Report horizon actually used.
+    pub horizon: f64,
+    /// Static mode: last completion time (trailing fleet availability
+    /// events are not service). Churn mode: last event time (the cohort
+    /// timeline is part of the run — the historical convention).
+    pub makespan: f64,
+    /// Wall-clock latency of every [`Policy::select`] call (empty
+    /// unless `EngineParams::collect_decision_latencies` was set).
+    pub decision_latencies: Vec<Duration>,
+    /// Total wall time inside the policy (`select` + `observe`).
+    pub decision_wall_time: Duration,
+    /// Number of `select` calls answered.
+    pub n_decisions: usize,
+    /// Churn/fleet events served through the rebuild fallback.
+    pub n_rebuilds: usize,
+    /// Jobs cancelled by a device leaving mid-run.
+    pub n_preemptions: usize,
+    /// Per re-dispatched preempted arm: preemption → re-dispatch delay.
+    /// (An arm whose tenant retired before re-dispatch never reappears
+    /// here.)
+    pub requeue_latency: Vec<f64>,
+}
+
+/// Merged timed-event kinds, in deterministic tie-break order.
+#[derive(Clone, Copy, Debug)]
+enum TimedKind {
+    DeviceLeave(usize),
+    TenantDeparture(UserId),
+    TenantArrival(UserId),
+    DeviceJoin(usize),
+}
+
+impl TimedKind {
+    fn rank(self) -> u8 {
+        match self {
+            TimedKind::DeviceLeave(_) => 0,
+            TimedKind::TenantDeparture(_) => 1,
+            TimedKind::TenantArrival(_) => 2,
+            TimedKind::DeviceJoin(_) => 3,
+        }
+    }
+
+    fn id(self) -> usize {
+        match self {
+            TimedKind::DeviceLeave(d) | TimedKind::DeviceJoin(d) => d,
+            TimedKind::TenantDeparture(u) | TimedKind::TenantArrival(u) => u,
+        }
+    }
+}
+
+#[derive(Clone, Copy, Debug)]
+struct Timed {
+    time: f64,
+    kind: TimedKind,
+}
+
+/// Per-device engine state.
+struct DeviceState {
+    speed: f64,
+    online: bool,
+    /// `(job id, arm)` of the in-flight job, if any.
+    job: Option<(u64, ArmId)>,
+}
+
+/// Drive one full run of the engine. The clock must have been
+/// constructed over `params.fleet.n_devices()` device slots.
+///
+/// Panics on inconsistent inputs (mismatched truth length, churn over
+/// shared arm blocks, a borrowed policy hitting a rebuild) — driver
+/// bugs, not runtime conditions.
+pub fn run(params: &EngineParams<'_>, host: PolicyHost<'_>, clock: &mut dyn Clock) -> EngineRun {
+    Engine::new(params, host, clock).run()
+}
+
+struct Engine<'a, 'c> {
+    problem: &'a Problem,
+    view: &'a Problem,
+    truth: &'a Truth,
+    clock: &'c mut dyn Clock,
+    host: PolicyHost<'a>,
+    static_mode: bool,
+    horizon: Option<f64>,
+    stop_at_cutoff: Option<f64>,
+    time_scale: f64,
+    warm_start_per_user: usize,
+    verbose: bool,
+    collect_decision_latencies: bool,
+
+    devices: Vec<DeviceState>,
+    wake_order: Vec<usize>,
+    next_job: u64,
+
+    tenants: TenantSet,
+    retired: Vec<bool>,
+    selected: Vec<bool>,
+    /// The mask policies see: `selected ∪ retired`.
+    blocked: Vec<bool>,
+    observed: Vec<bool>,
+    warm: VecDeque<ArmId>,
+    requeue: VecDeque<(ArmId, f64)>,
+
+    timed: Vec<Timed>,
+    next_timed: usize,
+
+    z_star: Vec<f64>,
+    empty_ref: Vec<f64>,
+    incumbents: Incumbents,
+    curve: StepCurve,
+    cumulative: f64,
+    per_user_regret: Vec<f64>,
+    t_prev: f64,
+
+    arrival_time: Vec<f64>,
+    waiting_first_dispatch: Vec<bool>,
+    join_latency: Vec<Option<f64>>,
+
+    observations: Vec<Observation>,
+    decision_latencies: Vec<Duration>,
+    decision_wall: Duration,
+    n_decisions: usize,
+    n_preemptions: usize,
+    requeue_latency: Vec<f64>,
+    stopped: bool,
+}
+
+impl<'a, 'c> Engine<'a, 'c> {
+    fn new(params: &EngineParams<'a>, mut host: PolicyHost<'a>, clock: &'c mut dyn Clock) -> Self {
+        let problem = params.problem;
+        let n_arms = problem.n_arms();
+        let n_users = problem.n_users;
+        assert_eq!(params.truth.z.len(), n_arms, "truth length must match the arm set");
+        assert!(params.time_scale > 0.0, "time scale must be positive");
+        let view = match params.sched_view {
+            Some(v) => {
+                assert_eq!(v.n_arms(), n_arms, "cost-estimate view must match the arm set");
+                v
+            }
+            None => problem,
+        };
+        host.init(view);
+        let static_mode = matches!(params.tenancy, Tenancy::Static);
+        if let Tenancy::Churn(schedule) = params.tenancy {
+            assert!(
+                schedule.n_users_seen() <= n_users,
+                "schedule references user {} but the problem has {} users",
+                schedule.n_users_seen().saturating_sub(1),
+                n_users
+            );
+            assert_disjoint_tenancy(problem);
+        }
+
+        // Merged deterministic timed-event timeline.
+        let mut timed: Vec<Timed> = Vec::new();
+        if let Tenancy::Churn(schedule) = params.tenancy {
+            for e in schedule.events() {
+                let kind = match e.kind {
+                    ChurnEventKind::Arrival => TimedKind::TenantArrival(e.user),
+                    ChurnEventKind::Departure => TimedKind::TenantDeparture(e.user),
+                };
+                timed.push(Timed { time: e.time, kind });
+            }
+        }
+        for e in params.fleet.events() {
+            let kind = match e.kind {
+                FleetEventKind::Join => TimedKind::DeviceJoin(e.device),
+                FleetEventKind::Leave => TimedKind::DeviceLeave(e.device),
+            };
+            timed.push(Timed { time: e.time, kind });
+        }
+        timed.sort_by(|a, b| {
+            a.time
+                .total_cmp(&b.time)
+                .then_with(|| a.kind.rank().cmp(&b.kind.rank()))
+                .then_with(|| a.kind.id().cmp(&b.kind.id()))
+        });
+
+        let tenants =
+            if static_mode { TenantSet::all_active(n_users) } else { TenantSet::none_active(n_users) };
+        let retired = vec![!static_mode; n_arms];
+        let blocked = retired.clone();
+        let warm: VecDeque<ArmId> = if static_mode {
+            problem.warm_start_arms(params.warm_start_per_user).into()
+        } else {
+            VecDeque::new()
+        };
+
+        let devices: Vec<DeviceState> = (0..params.fleet.n_devices())
+            .map(|d| DeviceState {
+                speed: params.fleet.speed(d),
+                online: params.fleet.online_at_start(d),
+                job: None,
+            })
+            .collect();
+
+        // Per-user optimum and the accuracy-zero empty reference floored
+        // at the user's worst arm — the Option-based incumbent
+        // accounting shared by every adapter (see `sched::Incumbents`).
+        let z_star: Vec<f64> =
+            (0..n_users).map(|u| params.truth.best_value(problem, u)).collect();
+        let empty_ref: Vec<f64> = (0..n_users)
+            .map(|u| {
+                problem.user_arms[u].iter().map(|&a| params.truth.z[a]).fold(0.0f64, f64::min)
+            })
+            .collect();
+        let incumbents = Incumbents::new(n_users);
+
+        let mut engine = Engine {
+            problem,
+            view,
+            truth: params.truth,
+            clock,
+            host,
+            static_mode,
+            horizon: params.horizon,
+            stop_at_cutoff: if static_mode { params.stop_at_cutoff } else { None },
+            time_scale: params.time_scale,
+            warm_start_per_user: params.warm_start_per_user,
+            verbose: params.verbose,
+            collect_decision_latencies: params.collect_decision_latencies,
+            devices,
+            wake_order: params.fleet.wake_order(),
+            next_job: 0,
+            tenants,
+            retired,
+            selected: vec![false; n_arms],
+            blocked,
+            observed: vec![false; n_arms],
+            warm,
+            requeue: VecDeque::new(),
+            timed,
+            next_timed: 0,
+            z_star,
+            empty_ref,
+            incumbents,
+            curve: StepCurve::new(0.0),
+            cumulative: 0.0,
+            per_user_regret: vec![0.0; n_users],
+            t_prev: 0.0,
+            arrival_time: vec![0.0; n_users],
+            waiting_first_dispatch: vec![false; n_users],
+            join_latency: vec![None; n_users],
+            observations: Vec::with_capacity(n_arms),
+            decision_latencies: Vec::new(),
+            decision_wall: Duration::ZERO,
+            n_decisions: 0,
+            n_preemptions: 0,
+            requeue_latency: Vec::new(),
+            stopped: false,
+        };
+        if engine.static_mode {
+            // Historical static curve: starts at the empty-incumbent gap
+            // sum (all users active from t = 0).
+            engine.curve = StepCurve::new(engine.gap_sum());
+        }
+        engine
+    }
+
+    /// All-user gap sum `Σ_u (z* − incumbent)⁺` — the static-mode regret
+    /// integrand (float order identical to the pre-engine loop).
+    fn gap_sum(&self) -> f64 {
+        let incumbents = &self.incumbents;
+        self.z_star
+            .iter()
+            .zip(&self.empty_ref)
+            .enumerate()
+            .map(|(u, (&s, &e))| {
+                let b = if incumbents.has_observation(u) { incumbents.value(u) } else { e };
+                (s - b).max(0.0)
+            })
+            .sum()
+    }
+
+    /// One tenant's current gap.
+    fn user_gap(&self, u: UserId) -> f64 {
+        let b = if self.incumbents.has_observation(u) {
+            self.incumbents.value(u)
+        } else {
+            self.empty_ref[u]
+        };
+        (self.z_star[u] - b).max(0.0)
+    }
+
+    /// Average gap over the currently active tenants (0 when none) — the
+    /// churn-mode curve value.
+    fn avg_active_gap(&self) -> f64 {
+        if self.tenants.n_active() == 0 {
+            0.0
+        } else {
+            self.tenants.active_users().map(|u| self.user_gap(u)).sum::<f64>()
+                / self.tenants.n_active() as f64
+        }
+    }
+
+    /// Integrate regret over `[t_prev, now)` and advance `t_prev`.
+    /// Static mode: the gap-sum integral, unclipped during the loop (the
+    /// horizon is applied at the end, exactly like the historical
+    /// simulator). Churn mode: per tenant over active windows, clipped
+    /// at the horizon.
+    fn integrate_to(&mut self, now: f64) {
+        if self.static_mode {
+            self.cumulative += self.gap_sum() * (now - self.t_prev);
+        } else {
+            let (lo, hi) = match self.horizon {
+                Some(h) => (self.t_prev.min(h), now.min(h)),
+                None => (self.t_prev, now),
+            };
+            let dt = (hi - lo).max(0.0);
+            if dt > 0.0 {
+                for u in 0..self.problem.n_users {
+                    if self.tenants.is_active(u) {
+                        self.per_user_regret[u] += self.user_gap(u) * dt;
+                    }
+                }
+            }
+        }
+        self.t_prev = now;
+    }
+
+    /// Push the mode-appropriate curve value at `now`.
+    fn push_curve(&mut self, now: f64) {
+        let v = if self.static_mode { self.gap_sum() } else { self.avg_active_gap() };
+        self.curve.push(now, v);
+    }
+
+    /// Ask `device` for work at `now`: requeued preempted decisions
+    /// first, then the warm-start queue, then the policy. A device with
+    /// no candidate parks (idle devices are re-asked after every timed
+    /// tick; in the static paper setting no tick ever comes, so an
+    /// exhausted device simply retires — the historical behavior).
+    fn dispatch_device(&mut self, device: usize, now: f64) {
+        let problem = self.problem;
+        while let Some(&(a, _)) = self.requeue.front() {
+            if self.blocked[a] {
+                self.requeue.pop_front();
+            } else {
+                break;
+            }
+        }
+        let mut requeued_at = None;
+        let arm = if let Some((a, t_pre)) = self.requeue.pop_front() {
+            requeued_at = Some(t_pre);
+            Some(a)
+        } else {
+            while let Some(&a) = self.warm.front() {
+                if self.blocked[a] {
+                    self.warm.pop_front();
+                } else {
+                    break;
+                }
+            }
+            if let Some(a) = self.warm.pop_front() {
+                Some(a)
+            } else {
+                let ctx = SchedContext {
+                    problem: self.view,
+                    selected: &self.blocked,
+                    observed: &self.observed,
+                    now,
+                };
+                let t0 = Instant::now();
+                let pick = self.host.policy_mut().select(&ctx);
+                let dt = t0.elapsed();
+                if self.collect_decision_latencies {
+                    self.decision_latencies.push(dt);
+                }
+                self.n_decisions += 1;
+                self.decision_wall += dt;
+                pick
+            }
+        };
+        if let Some(a) = arm {
+            assert!(!self.blocked[a], "policy returned a blocked (selected/retired) arm {a}");
+            self.selected[a] = true;
+            self.blocked[a] = true;
+            if let Some(t_pre) = requeued_at {
+                self.requeue_latency.push(now - t_pre);
+            }
+            for &u in &problem.arm_users[a] {
+                if self.waiting_first_dispatch[u] {
+                    self.waiting_first_dispatch[u] = false;
+                    self.join_latency[u] = Some(now - self.arrival_time[u]);
+                }
+            }
+            self.next_job += 1;
+            let job = self.next_job;
+            self.devices[device].job = Some((job, a));
+            let dur = (problem.cost[a] / self.devices[device].speed) * self.time_scale;
+            self.clock.dispatch(device, a, dur, job);
+        }
+    }
+
+    /// Ask every idle online device for work, in fleet wake order
+    /// (speed desc, index asc).
+    fn wake_idle(&mut self, now: f64) {
+        // Temporarily take the order out so the loop can borrow `self`
+        // mutably per dispatch.
+        let order = std::mem::take(&mut self.wake_order);
+        for &d in &order {
+            if self.devices[d].online && self.devices[d].job.is_none() {
+                self.dispatch_device(d, now);
+            }
+        }
+        self.wake_order = order;
+    }
+
+    /// Apply every timed event whose (scaled) deadline is ≤ `now`, in
+    /// the merged deterministic order.
+    fn drain_due_events(&mut self, now: f64) {
+        let problem = self.problem;
+        let view = self.view;
+        while self.next_timed < self.timed.len()
+            && self.timed[self.next_timed].time * self.time_scale <= now
+        {
+            let ev = self.timed[self.next_timed];
+            self.next_timed += 1;
+            match ev.kind {
+                TimedKind::TenantArrival(u) => {
+                    if !self.tenants.activate(u) {
+                        continue;
+                    }
+                    self.host.user_joined(view, &self.tenants, u);
+                    self.tenants.refresh_retired_for_user(problem, u, &mut self.retired);
+                    for &x in &problem.user_arms[u] {
+                        self.blocked[x] = self.selected[x] || self.retired[x];
+                    }
+                    enqueue_warm_arms(
+                        problem,
+                        u,
+                        self.warm_start_per_user,
+                        &self.selected,
+                        &mut self.warm,
+                    );
+                    if self.join_latency[u].is_none() {
+                        self.arrival_time[u] = now;
+                        self.waiting_first_dispatch[u] = true;
+                    }
+                    if self.verbose {
+                        eprintln!("[{now:8.3}s] tenant {u} joined");
+                    }
+                }
+                TimedKind::TenantDeparture(u) => {
+                    if !self.tenants.deactivate(u) {
+                        continue;
+                    }
+                    self.host.user_left(view, &self.tenants, u);
+                    self.tenants.refresh_retired_for_user(problem, u, &mut self.retired);
+                    for &x in &problem.user_arms[u] {
+                        self.blocked[x] = self.selected[x] || self.retired[x];
+                    }
+                    self.waiting_first_dispatch[u] = false;
+                    if self.verbose {
+                        eprintln!("[{now:8.3}s] tenant {u} left");
+                    }
+                }
+                TimedKind::DeviceJoin(d) => {
+                    debug_assert!(!self.devices[d].online, "fleet schedule is validated");
+                    self.devices[d].online = true;
+                    self.host.device_joined(view, &self.tenants, d);
+                    if self.verbose {
+                        eprintln!("[{now:8.3}s] device {d} joined (speed {})", self.devices[d].speed);
+                    }
+                }
+                TimedKind::DeviceLeave(d) => {
+                    debug_assert!(self.devices[d].online, "fleet schedule is validated");
+                    self.devices[d].online = false;
+                    if let Some((job, arm)) = self.devices[d].job.take() {
+                        // Preemption: cancel the job (nothing is
+                        // revealed) and requeue the arm's decision.
+                        self.clock.cancel(d, job);
+                        self.selected[arm] = false;
+                        self.blocked[arm] = self.retired[arm];
+                        self.requeue.push_back((arm, now));
+                        self.n_preemptions += 1;
+                        if self.verbose {
+                            eprintln!("[{now:8.3}s] device {d} left; arm {arm} preempted");
+                        }
+                    } else if self.verbose {
+                        eprintln!("[{now:8.3}s] device {d} left");
+                    }
+                    self.host.device_left(view, &self.tenants, d);
+                }
+            }
+        }
+    }
+
+    /// One completed job: integrate regret, reveal `z`, feed the policy
+    /// and incumbents, push the curve, check the cutoff.
+    fn handle_completion(&mut self, c: Completion) {
+        let problem = self.problem;
+        let now = c.finish;
+        self.devices[c.device].job = None;
+        let z = self.truth.z[c.arm];
+        self.observed[c.arm] = true;
+        let t0 = Instant::now();
+        self.host.observe(self.view, c.arm, z);
+        self.decision_wall += t0.elapsed();
+        self.observations.push(Observation {
+            arm: c.arm,
+            start: c.start,
+            finish: now,
+            z,
+            device: c.device,
+        });
+        self.incumbents.update_arm(problem, c.arm, z);
+        self.push_curve(now);
+        if self.verbose {
+            let avg = if self.static_mode {
+                self.gap_sum() / problem.n_users as f64
+            } else {
+                self.avg_active_gap()
+            };
+            eprintln!(
+                "[{now:8.3}s] device {} finished arm {} (z = {z:.4}); avg regret {avg:.4}",
+                c.device, c.arm
+            );
+        }
+        if let Some(cut) = self.stop_at_cutoff {
+            if self.gap_sum() / problem.n_users as f64 <= cut {
+                self.stopped = true;
+            }
+        }
+    }
+
+    fn run(mut self) -> EngineRun {
+        // t = 0: churn mode starts with everyone inactive (a fresh
+        // policy with an empty history is already "rebuilt", so
+        // unsupported hooks are simply ignored here).
+        if !self.static_mode {
+            for u in 0..self.problem.n_users {
+                let _ = self.host.policy_mut().user_left(self.view, u);
+            }
+        }
+        // Apply due t = 0 events (initial cohort, t = 0 fleet changes),
+        // seed the curve, then every online device asks for work. The
+        // pre-drain integration is a no-op in virtual time (now0 = 0)
+        // and advances `t_prev` past the startup jitter on the wall
+        // clock, matching the historical serve loop.
+        let now0 = self.clock.now();
+        self.integrate_to(now0);
+        self.drain_due_events(now0);
+        if !self.static_mode {
+            self.push_curve(now0);
+        }
+        self.wake_idle(now0);
+
+        // Main event loop: next event is the earlier of the next timed
+        // deadline and the next completion; timed events apply first on
+        // ties.
+        loop {
+            let deadline =
+                self.timed.get(self.next_timed).map(|e| e.time * self.time_scale);
+            match self.clock.next_event(deadline) {
+                Step::Exhausted => break,
+                Step::TimedDue(now) => {
+                    self.integrate_to(now);
+                    self.drain_due_events(now);
+                    if !self.static_mode {
+                        self.push_curve(now);
+                    }
+                    self.wake_idle(now);
+                }
+                Step::Completed(c) => {
+                    let device = c.device;
+                    let now = c.finish;
+                    self.integrate_to(now);
+                    self.handle_completion(c);
+                    if self.stopped {
+                        break;
+                    }
+                    if self.devices[device].online {
+                        self.dispatch_device(device, now);
+                    }
+                }
+            }
+        }
+        self.finish()
+    }
+
+    fn finish(mut self) -> EngineRun {
+        // Static mode reports the last *completion* time (trailing fleet
+        // availability events after the work is done are not service —
+        // and for a unit fleet there are none, so this is exactly the
+        // historical `t_prev`). Churn mode keeps the historical
+        // last-event convention: the cohort timeline is part of the run.
+        let makespan = if self.static_mode {
+            self.observations.last().map(|o| o.finish).unwrap_or(0.0)
+        } else {
+            self.t_prev
+        };
+        let horizon = self.horizon.unwrap_or(makespan);
+        if self.static_mode {
+            if horizon > self.t_prev {
+                // Extend the integral to the horizon with the final gap.
+                self.cumulative += self.gap_sum() * (horizon - self.t_prev);
+            }
+            if horizon < self.t_prev {
+                // Re-integrate exactly over [0, horizon] from the curve
+                // and truncate the curve itself, so the report KPIs and
+                // the plotted series agree with the truncated integral.
+                self.cumulative = self.curve.integral_to(horizon);
+                let truncated = self.curve.truncated(horizon);
+                self.curve = truncated;
+            }
+        } else {
+            if horizon > makespan {
+                // Extend each still-active tenant's window with its
+                // final gap.
+                for u in 0..self.problem.n_users {
+                    if self.tenants.is_active(u) {
+                        self.per_user_regret[u] += self.user_gap(u) * (horizon - makespan);
+                    }
+                }
+            }
+            if horizon < makespan {
+                let truncated = self.curve.truncated(horizon);
+                self.curve = truncated;
+            }
+            self.cumulative = self.per_user_regret.iter().sum();
+        }
+        let n_decisions = self.n_decisions;
+        EngineRun {
+            policy: self.host.policy_ref().name(),
+            observations: self.observations,
+            curve: self.curve,
+            cumulative_regret: self.cumulative,
+            per_user_regret: if self.static_mode { Vec::new() } else { self.per_user_regret },
+            join_latency: self.join_latency,
+            horizon,
+            makespan,
+            decision_latencies: self.decision_latencies,
+            decision_wall_time: self.decision_wall,
+            n_decisions,
+            n_rebuilds: self.host.n_rebuilds,
+            n_preemptions: self.n_preemptions,
+            requeue_latency: self.requeue_latency,
+        }
+    }
+}
+
+/// Churn requires **disjoint per-tenant arm blocks**: an arm shared by
+/// tenants that churn independently has no well-defined incremental
+/// semantics (the departed owner's dropped incumbent would still price
+/// the arm for the remaining owner, diverging from the rebuild oracle).
+/// The engine fails loudly instead of silently diverging.
+fn assert_disjoint_tenancy(problem: &Problem) {
+    for (x, owners) in problem.arm_users.iter().enumerate() {
+        assert!(
+            owners.len() == 1,
+            "churn requires disjoint per-tenant arm blocks; arm {x} is shared by users {owners:?}"
+        );
+    }
+}
+
+/// Enqueue `per_user` cheapest not-yet-run arms of `user` (ties broken
+/// by arm id — the same order `Problem::warm_start_arms` uses), the
+/// paper's warm-start protocol applied at each arrival.
+fn enqueue_warm_arms(
+    problem: &Problem,
+    user: UserId,
+    per_user: usize,
+    selected: &[bool],
+    warm: &mut VecDeque<ArmId>,
+) {
+    if per_user == 0 {
+        return;
+    }
+    let mut arms: Vec<ArmId> =
+        problem.user_arms[user].iter().copied().filter(|&a| !selected[a]).collect();
+    arms.sort_by(|&a, &b| problem.cost[a].partial_cmp(&problem.cost[b]).unwrap().then(a.cmp(&b)));
+    for &a in arms.iter().take(per_user) {
+        warm.push_back(a);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::Mat;
+    use crate::problem::FleetEvent;
+    use crate::sched::MmGpEi;
+
+    fn problem_and_truth() -> (Problem, Truth) {
+        let user_arms = vec![vec![0, 1, 2], vec![3, 4, 5]];
+        let arm_users = Problem::compute_arm_users(6, &user_arms);
+        let p = Problem {
+            name: "engine".into(),
+            n_users: 2,
+            cost: vec![1.0, 2.0, 3.0, 1.0, 2.0, 3.0],
+            user_arms,
+            arm_users,
+            prior_mean: vec![0.5; 6],
+            prior_cov: Mat::eye(6),
+        };
+        let t = Truth { z: vec![0.3, 0.9, 0.5, 0.7, 0.2, 0.8] };
+        (p, t)
+    }
+
+    fn static_params<'a>(p: &'a Problem, t: &'a Truth, fleet: &'a DeviceFleet) -> EngineParams<'a> {
+        EngineParams {
+            problem: p,
+            truth: t,
+            sched_view: None,
+            fleet,
+            tenancy: Tenancy::Static,
+            warm_start_per_user: 2,
+            horizon: None,
+            stop_at_cutoff: None,
+            time_scale: 1.0,
+            collect_decision_latencies: false,
+            verbose: false,
+        }
+    }
+
+    #[test]
+    fn static_unit_fleet_serves_every_arm() {
+        let (p, t) = problem_and_truth();
+        let fleet = DeviceFleet::uniform(2);
+        let factory = |p: &Problem| -> Box<dyn Policy> { Box::new(MmGpEi::new(p)) };
+        let mut clock = VirtualClock::new(2);
+        let run = run(
+            &static_params(&p, &t, &fleet),
+            PolicyHost::from_factory(&factory),
+            &mut clock,
+        );
+        assert_eq!(run.observations.len(), 6);
+        assert_eq!(run.n_preemptions, 0);
+        assert_eq!(run.n_rebuilds, 0);
+        assert_eq!(run.curve.final_value(), 0.0);
+    }
+
+    #[test]
+    fn speeds_scale_completion_times() {
+        let (p, t) = problem_and_truth();
+        // One double-speed device: every job takes c/2, sequentially.
+        let fleet = DeviceFleet::new(vec![2.0], vec![true], Vec::new());
+        let mut pol = MmGpEi::new(&p);
+        let mut clock = VirtualClock::new(1);
+        let run = run(&static_params(&p, &t, &fleet), PolicyHost::borrowed(&mut pol), &mut clock);
+        for o in &run.observations {
+            assert!((o.finish - o.start - p.cost[o.arm] / 2.0).abs() < 1e-12);
+        }
+        let total: f64 = p.cost.iter().sum();
+        assert!((run.makespan - total / 2.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn preemption_requeues_without_revealing() {
+        let (p, t) = problem_and_truth();
+        // Device 0 leaves at t = 0.5 mid-job and device 1 joins at the
+        // same instant: the preempted arm is requeued and re-dispatched;
+        // every arm is still revealed exactly once, on completion.
+        let fleet = DeviceFleet::new(
+            vec![1.0, 1.0],
+            vec![true, false],
+            vec![
+                FleetEvent { time: 0.5, device: 0, kind: FleetEventKind::Leave },
+                FleetEvent { time: 0.5, device: 1, kind: FleetEventKind::Join },
+            ],
+        );
+        let factory = |p: &Problem| -> Box<dyn Policy> { Box::new(MmGpEi::new(p)) };
+        let mut clock = VirtualClock::new(2);
+        let run = run(
+            &static_params(&p, &t, &fleet),
+            PolicyHost::from_factory(&factory),
+            &mut clock,
+        );
+        assert_eq!(run.n_preemptions, 1);
+        assert_eq!(run.requeue_latency.len(), 1);
+        assert!(run.requeue_latency[0] >= 0.0);
+        // The preempted arm's eventual observation starts at/after the
+        // preemption instant, and every arm completes exactly once.
+        let mut arms: Vec<_> = run.observations.iter().map(|o| o.arm).collect();
+        arms.sort_unstable();
+        assert_eq!(arms, vec![0, 1, 2, 3, 4, 5]);
+        // No observation can have been produced by device 0 after 0.5.
+        for o in &run.observations {
+            if o.device == 0 {
+                assert!(o.finish <= 0.5 + 1e-12, "device 0 was offline after t = 0.5");
+            }
+        }
+        assert_eq!(run.n_rebuilds, 0, "MM-GP-EI applies device churn in place");
+    }
+
+    #[test]
+    fn borrowed_policy_panics_on_rebuild_demand() {
+        let (p, t) = problem_and_truth();
+        // The leave at t = 3.5 lands after completions exist (non-empty
+        // replay history), so the default (rebuild) device hook demands a
+        // rebuild the borrowed host cannot perform.
+        let fleet = DeviceFleet::new(
+            vec![1.0],
+            vec![true],
+            vec![
+                FleetEvent { time: 0.5, device: 0, kind: FleetEventKind::Leave },
+                FleetEvent { time: 1.0, device: 0, kind: FleetEventKind::Join },
+                FleetEvent { time: 3.5, device: 0, kind: FleetEventKind::Leave },
+            ],
+        );
+        // GpEiRoundRobin keeps the default (rebuild) device hooks; with a
+        // borrowed host and a non-empty history the engine must fail
+        // loudly instead of silently continuing with stale state.
+        let mut pol = crate::sched::GpEiRoundRobin::new(&p);
+        let mut clock = VirtualClock::new(1);
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            run(&static_params(&p, &t, &fleet), PolicyHost::borrowed(&mut pol), &mut clock)
+        }));
+        assert!(result.is_err(), "borrowed host must refuse the rebuild fallback");
+    }
+
+    #[test]
+    fn fast_devices_wake_first() {
+        let (p, t) = problem_and_truth();
+        // Two devices, device 1 faster: at t = 0 the warm-start arms
+        // must go to device 1 first (speed desc, index asc).
+        let fleet = DeviceFleet::new(vec![1.0, 2.0], vec![true, true], Vec::new());
+        let mut pol = MmGpEi::new(&p);
+        let mut clock = VirtualClock::new(2);
+        let run = run(&static_params(&p, &t, &fleet), PolicyHost::borrowed(&mut pol), &mut clock);
+        // Both devices start at t = 0; the warm queue head (arm 0) must
+        // have gone to the faster device 1, the second warm arm to
+        // device 0.
+        let arm0 = run.observations.iter().find(|o| o.arm == 0).unwrap();
+        assert_eq!(arm0.device, 1, "fastest device asks first");
+        assert_eq!(arm0.start, 0.0);
+    }
+}

@@ -8,7 +8,10 @@
 //! devices to `N` AutoML tenants by maximizing the expected-improvement
 //! *rate* summed over tenants — lives in [`sched`] and is driven either by
 //! the deterministic discrete-event simulator ([`sim`]) or the real-time
-//! threaded serving coordinator ([`coordinator`]). The numeric hot spot of
+//! threaded serving coordinator ([`coordinator`]); both are thin adapters
+//! over the unified scheduling [`engine`], which owns the one event loop
+//! (completions, tenant churn, elastic device fleets) behind a virtual-
+//! vs wall-clock [`engine::Clock`]. The numeric hot spot of
 //! every scheduling decision (GP posterior refresh + EIrate scoring) has
 //! two interchangeable backends:
 //!
@@ -30,6 +33,7 @@ pub mod bench;
 pub mod cli;
 pub mod config;
 pub mod coordinator;
+pub mod engine;
 pub mod gp;
 pub mod kernels;
 pub mod linalg;

@@ -36,8 +36,12 @@ COMMANDS
              --cutoff 0.01  [--csv reports/out.csv]  [--plot]
              [--json reports/BENCH_name.json]  [--smoke]
              [--churn]  tenant-churn scenario: seeded arrival/departure
-             timeline through the churn event loop (knobs via a [churn]
+             timeline through the unified engine (knobs via a [churn]
              config section; per-tenant exit regret + join latency KPIs)
+             [--fleet]  elastic heterogeneous fleet: per-device speeds +
+             availability churn with deterministic preemption/requeue
+             (knobs via a [fleet] config section, see
+             configs/fig7_elastic.toml)
   serve      live threaded coordinator (wall clock)
              --dataset azure --policy mdmt --devices 4 --time-scale 0.005
              --backend native|xla --seed 0 [--verbose]
@@ -132,8 +136,15 @@ fn cmd_simulate(args: &Args) -> Result<(), String> {
         cfg.churn = true;
         cfg.validate()?;
     }
+    if args.has_flag("fleet") {
+        cfg.fleet = true;
+        cfg.validate()?;
+    }
     if cfg.churn {
         return cmd_simulate_churn(&cfg, args, smoke);
+    }
+    if cfg.fleet {
+        return cmd_simulate_fleet(&cfg, args, smoke);
     }
     eprintln!(
         "simulate: dataset={} policies={:?} devices={:?} seeds={} backend={:?}",
@@ -267,6 +278,66 @@ fn cmd_simulate_churn(
     if let Some(path) = args.get("json") {
         let mut report = RunReport::new(cfg.name.clone(), 0, smoke);
         results.push_kpis(&mut report, "churn/");
+        report.write(path).map_err(|e| e.to_string())?;
+        eprintln!("wrote {path}");
+    }
+    Ok(())
+}
+
+/// The fleet branch of `simulate`: sweep (policy × seeds) over the
+/// seeded heterogeneous elastic fleet and print per-policy service KPIs
+/// (cumulative regret, preemptions, p99 requeue latency, rebuilds).
+fn cmd_simulate_fleet(
+    cfg: &mmgpei::config::ExperimentConfig,
+    args: &Args,
+    smoke: bool,
+) -> Result<(), String> {
+    let f = &cfg.fleet_cfg;
+    eprintln!(
+        "simulate --fleet: {} devices ({} online at t=0), speeds [{}, {}), policies={:?} seeds={}",
+        f.n_devices, f.initial_online, f.speed_range.0, f.speed_range.1, cfg.policies, cfg.seeds
+    );
+    let results = mmgpei::cli::run_fleet_experiment(cfg)?;
+    let mut table = Table::new(&[
+        "policy",
+        "cumulative regret (mean±σ)",
+        "makespan",
+        "preemptions",
+        "p99 requeue latency",
+        "rebuilds",
+    ]);
+    for cell in &results.cells {
+        let mk = mmgpei::metrics::mean_std(
+            &cell.runs.iter().map(|r| r.sim.makespan).collect::<Vec<_>>(),
+        );
+        table.row(vec![
+            cell.policy.clone(),
+            format!("{:.2} ± {:.2}", cell.cumulative.0, cell.cumulative.1),
+            format!("{:.1}", mk.0),
+            cell.n_preemptions.to_string(),
+            if cell.p99_requeue_latency.is_finite() {
+                format!("{:.2}", cell.p99_requeue_latency)
+            } else {
+                "n/a".into()
+            },
+            cell.n_rebuilds.to_string(),
+        ]);
+    }
+    println!("{}", table.to_markdown());
+    if args.has_flag("plot") {
+        let curves: Vec<(String, StepCurve)> = results
+            .cells
+            .iter()
+            .map(|c| (c.policy.clone(), c.runs[0].sim.inst_regret.clone()))
+            .collect();
+        println!(
+            "{}",
+            ascii_plot(&format!("instantaneous regret, elastic F={}", f.n_devices), &curves, 72, 16)
+        );
+    }
+    if let Some(path) = args.get("json") {
+        let mut report = RunReport::new(cfg.name.clone(), 0, smoke);
+        results.push_kpis(&mut report, "fleet/");
         report.write(path).map_err(|e| e.to_string())?;
         eprintln!("wrote {path}");
     }

@@ -145,6 +145,21 @@ pub fn rel_change(baseline: f64, candidate: f64) -> f64 {
     (candidate - baseline) / baseline.abs().max(f64::MIN_POSITIVE)
 }
 
+/// Nearest-rank p99 of a sample set (consumed: sorted in place with the
+/// NaN-safe total order). Returns NaN when empty — callers feed the
+/// result to `report::RunReport::push_kpi`, which drops non-finite
+/// values. One definition shared by every sweep aggregator (churn join
+/// latency, fleet requeue latency) so the percentile convention cannot
+/// drift between KPIs.
+pub fn p99(mut samples: Vec<f64>) -> f64 {
+    samples.sort_by(f64::total_cmp);
+    if samples.is_empty() {
+        f64::NAN
+    } else {
+        samples[((samples.len() as f64 - 1.0) * 0.99) as usize]
+    }
+}
+
 /// Mean and sample-std of a slice (speedup tables).
 pub fn mean_std(xs: &[f64]) -> (f64, f64) {
     let n = xs.len() as f64;
@@ -221,6 +236,18 @@ mod tests {
         assert_eq!(m, 2.0);
         assert!((s - 2f64.sqrt()).abs() < 1e-12);
         assert_eq!(mean_std(&[5.0]).1, 0.0);
+    }
+
+    #[test]
+    fn p99_nearest_rank_and_empty() {
+        assert!(p99(Vec::new()).is_nan());
+        assert_eq!(p99(vec![5.0]), 5.0);
+        // 100 samples 0..100: nearest-rank index (99 * 0.99) as usize = 98.
+        let xs: Vec<f64> = (0..100).map(|i| i as f64).collect();
+        assert_eq!(p99(xs), 98.0);
+        // Unsorted input is sorted internally with the NaN-safe order;
+        // nearest-rank index for 3 samples is (2 · 0.99) as usize = 1.
+        assert_eq!(p99(vec![3.0, 1.0, 2.0]), 2.0);
     }
 
     #[test]

@@ -1,0 +1,299 @@
+//! Elastic heterogeneous device fleets.
+//!
+//! The paper's model (§3) assumes `M` identical, always-on devices. The
+//! service-provider setting it motivates — mixed GPU generations plus
+//! spot/preemptible capacity — is a fleet of *heterogeneous, elastic*
+//! devices. This module holds the driver-side vocabulary:
+//!
+//! * a per-device **speed** `s_d > 0`: running arm `x` on device `d`
+//!   occupies it for `c(x)/s_d` time units (the *policy* still sees the
+//!   estimated costs of Remark 1 — speeds are an execution property of
+//!   the device, not of the arm);
+//! * a validated, deterministically ordered **availability schedule**
+//!   ([`FleetEvent`]): devices join and leave mid-run. A device that
+//!   leaves while running **preempts** its job — the in-flight arm's
+//!   decision is requeued deterministically (FIFO, ahead of the
+//!   warm-start queue) and nothing is revealed (the revealed-on-
+//!   completion contract of the simulator is preserved).
+//!
+//! Free-device tie-breaking is extended to **(speed desc, index asc)**:
+//! when several idle devices could take work, the fastest (lowest index
+//! on ties) asks first, so schedules stay bit-replayable. With all
+//! speeds equal this degenerates to the historical ascending-index
+//! order, which is what keeps unit-speed fleets byte-identical to the
+//! pre-fleet event loops.
+
+/// What a fleet event does to its device.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum FleetEventKind {
+    /// The device comes online (or back online) and asks for work.
+    Join,
+    /// The device goes offline; a running job is preempted and its arm
+    /// requeued, an idle device simply stops asking for work.
+    Leave,
+}
+
+impl FleetEventKind {
+    /// Deterministic tie-break rank: at equal times capacity shrinks
+    /// before it grows (and, in the engine's merged timeline, device
+    /// leaves apply before tenant churn while device joins apply after —
+    /// a joining device asks for work against the post-churn arm set).
+    pub(crate) fn rank(self) -> u8 {
+        match self {
+            FleetEventKind::Leave => 0,
+            FleetEventKind::Join => 1,
+        }
+    }
+}
+
+/// One device availability event in (virtual or scaled wall-clock) time.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct FleetEvent {
+    /// Event time (same unit as arm costs).
+    pub time: f64,
+    /// Affected device index.
+    pub device: usize,
+    /// Join or leave.
+    pub kind: FleetEventKind,
+}
+
+/// A heterogeneous, elastic device fleet: per-device speeds, the set of
+/// devices online at t = 0, and a validated availability timeline.
+///
+/// Invariants enforced by [`DeviceFleet::new`]: at least one device;
+/// finite positive speeds; finite non-negative event times; events
+/// totally ordered by `(time, kind rank, device)`; each device's events
+/// strictly alternate with its starting state (an initially-online
+/// device's first event must be a [`FleetEventKind::Leave`], an
+/// initially-offline device's a [`FleetEventKind::Join`]); and at least
+/// one device is ever online (online at start, or joining later).
+#[derive(Clone, Debug, PartialEq)]
+pub struct DeviceFleet {
+    speeds: Vec<f64>,
+    online_at_start: Vec<bool>,
+    events: Vec<FleetEvent>,
+}
+
+impl DeviceFleet {
+    /// Sort and validate a fleet description. Panics with a description
+    /// on an inconsistent timeline (generator bug, not a runtime
+    /// condition — mirroring `ChurnSchedule::new`).
+    pub fn new(speeds: Vec<f64>, online_at_start: Vec<bool>, mut events: Vec<FleetEvent>) -> Self {
+        let n = speeds.len();
+        assert!(n >= 1, "a fleet needs at least one device");
+        assert_eq!(online_at_start.len(), n, "online_at_start length must match speeds");
+        for (d, &s) in speeds.iter().enumerate() {
+            assert!(s.is_finite() && s > 0.0, "device {d} has non-positive speed {s}");
+        }
+        for e in &events {
+            assert!(
+                e.time.is_finite() && e.time >= 0.0,
+                "fleet event time must be finite and non-negative, got {} for device {}",
+                e.time,
+                e.device
+            );
+            assert!(e.device < n, "fleet event references out-of-range device {}", e.device);
+        }
+        events.sort_by(|a, b| {
+            a.time
+                .total_cmp(&b.time)
+                .then_with(|| a.kind.rank().cmp(&b.kind.rank()))
+                .then_with(|| a.device.cmp(&b.device))
+        });
+        let mut online = online_at_start.clone();
+        let mut last_time = vec![f64::NEG_INFINITY; n];
+        for e in &events {
+            match e.kind {
+                FleetEventKind::Join => {
+                    assert!(!online[e.device], "device {} joins while already online", e.device)
+                }
+                FleetEventKind::Leave => {
+                    assert!(online[e.device], "device {} leaves while offline", e.device)
+                }
+            }
+            assert!(
+                e.time > last_time[e.device] || last_time[e.device] == f64::NEG_INFINITY,
+                "device {} has two events at the same time {}",
+                e.device,
+                e.time
+            );
+            online[e.device] = e.kind == FleetEventKind::Join;
+            last_time[e.device] = e.time;
+        }
+        assert!(
+            online_at_start.iter().any(|&o| o)
+                || events.iter().any(|e| e.kind == FleetEventKind::Join),
+            "fleet has no device that is ever online"
+        );
+        DeviceFleet { speeds, online_at_start, events }
+    }
+
+    /// The paper's fleet: `n` identical unit-speed devices, online from
+    /// t = 0, no availability events. Runs through the engine are
+    /// byte-identical to the pre-fleet event loops (the unit-speed
+    /// parity the CI determinism gate and `rust/tests/engine_parity.rs`
+    /// pin).
+    pub fn uniform(n: usize) -> Self {
+        DeviceFleet::new(vec![1.0; n], vec![true; n], Vec::new())
+    }
+
+    /// Number of devices that ever exist (online or not).
+    pub fn n_devices(&self) -> usize {
+        self.speeds.len()
+    }
+
+    /// Speed `s_d` of device `d`.
+    #[inline]
+    pub fn speed(&self, d: usize) -> f64 {
+        self.speeds[d]
+    }
+
+    /// Whether device `d` is online at t = 0.
+    pub fn online_at_start(&self, d: usize) -> bool {
+        self.online_at_start[d]
+    }
+
+    /// Count of devices online at t = 0.
+    pub fn n_online_at_start(&self) -> usize {
+        self.online_at_start.iter().filter(|&&o| o).count()
+    }
+
+    /// The ordered availability timeline.
+    pub fn events(&self) -> &[FleetEvent] {
+        &self.events
+    }
+
+    /// Whether the fleet is the static paper setting: unit speeds, all
+    /// online, no availability events.
+    pub fn is_static_unit(&self) -> bool {
+        self.events.is_empty()
+            && self.online_at_start.iter().all(|&o| o)
+            && self.speeds.iter().all(|&s| s == 1.0)
+    }
+
+    /// Aggregate capacity `Σ_d s_d` over the whole fleet (ignoring
+    /// availability) — the yardstick the `fig7_elastic` bench compares
+    /// against: a unit-speed always-on fleet of `round(Σ s_d)` devices.
+    pub fn total_speed(&self) -> f64 {
+        self.speeds.iter().sum()
+    }
+
+    /// Device indices in free-device wake order: speed descending, index
+    /// ascending on ties. With all speeds equal this is `0..n` — the
+    /// historical ascending-index order.
+    pub fn wake_order(&self) -> Vec<usize> {
+        let mut order: Vec<usize> = (0..self.speeds.len()).collect();
+        order.sort_by(|&a, &b| {
+            self.speeds[b].total_cmp(&self.speeds[a]).then_with(|| a.cmp(&b))
+        });
+        order
+    }
+
+    /// Last availability-event time (0 when the timeline is empty).
+    pub fn end_time(&self) -> f64 {
+        self.events.last().map(|e| e.time).unwrap_or(0.0)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn uniform_fleet_is_static_unit() {
+        let f = DeviceFleet::uniform(3);
+        assert_eq!(f.n_devices(), 3);
+        assert!(f.is_static_unit());
+        assert_eq!(f.n_online_at_start(), 3);
+        assert_eq!(f.total_speed(), 3.0);
+        assert_eq!(f.wake_order(), vec![0, 1, 2]);
+        assert_eq!(f.end_time(), 0.0);
+    }
+
+    #[test]
+    fn wake_order_is_speed_desc_index_asc() {
+        let f = DeviceFleet::new(vec![1.0, 2.0, 2.0, 0.5], vec![true; 4], Vec::new());
+        assert_eq!(f.wake_order(), vec![1, 2, 0, 3]);
+        assert!(!f.is_static_unit());
+    }
+
+    #[test]
+    fn events_sort_leave_before_join_on_ties() {
+        let f = DeviceFleet::new(
+            vec![1.0, 1.0],
+            vec![true, false],
+            vec![
+                FleetEvent { time: 5.0, device: 1, kind: FleetEventKind::Join },
+                FleetEvent { time: 5.0, device: 0, kind: FleetEventKind::Leave },
+                FleetEvent { time: 9.0, device: 1, kind: FleetEventKind::Leave },
+            ],
+        );
+        let kinds: Vec<_> = f.events().iter().map(|e| (e.time, e.device, e.kind)).collect();
+        assert_eq!(
+            kinds,
+            vec![
+                (5.0, 0, FleetEventKind::Leave),
+                (5.0, 1, FleetEventKind::Join),
+                (9.0, 1, FleetEventKind::Leave),
+            ]
+        );
+        assert_eq!(f.end_time(), 9.0);
+    }
+
+    #[test]
+    fn alternation_allows_leave_then_rejoin() {
+        let f = DeviceFleet::new(
+            vec![2.0],
+            vec![true],
+            vec![
+                FleetEvent { time: 1.0, device: 0, kind: FleetEventKind::Leave },
+                FleetEvent { time: 3.0, device: 0, kind: FleetEventKind::Join },
+                FleetEvent { time: 7.0, device: 0, kind: FleetEventKind::Leave },
+            ],
+        );
+        assert_eq!(f.events().len(), 3);
+        assert_eq!(f.speed(0), 2.0);
+    }
+
+    #[test]
+    #[should_panic(expected = "joins while already online")]
+    fn rejects_join_of_online_device() {
+        let _ = DeviceFleet::new(
+            vec![1.0],
+            vec![true],
+            vec![FleetEvent { time: 1.0, device: 0, kind: FleetEventKind::Join }],
+        );
+    }
+
+    #[test]
+    #[should_panic(expected = "leaves while offline")]
+    fn rejects_leave_of_offline_device() {
+        let _ = DeviceFleet::new(
+            vec![1.0],
+            vec![false],
+            vec![FleetEvent { time: 1.0, device: 0, kind: FleetEventKind::Leave }],
+        );
+    }
+
+    #[test]
+    #[should_panic(expected = "non-positive speed")]
+    fn rejects_bad_speed() {
+        let _ = DeviceFleet::new(vec![0.0], vec![true], Vec::new());
+    }
+
+    #[test]
+    #[should_panic(expected = "no device that is ever online")]
+    fn rejects_forever_offline_fleet() {
+        let _ = DeviceFleet::new(vec![1.0, 1.0], vec![false, false], Vec::new());
+    }
+
+    #[test]
+    #[should_panic(expected = "out-of-range device")]
+    fn rejects_out_of_range_event() {
+        let _ = DeviceFleet::new(
+            vec![1.0],
+            vec![true],
+            vec![FleetEvent { time: 1.0, device: 7, kind: FleetEventKind::Leave }],
+        );
+    }
+}

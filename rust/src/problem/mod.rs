@@ -6,8 +6,10 @@
 //! scalar performance `z`. Users own subsets of arms (possibly
 //! overlapping — the paper explicitly allows shared models).
 
+mod fleet;
 mod tenancy;
 
+pub use fleet::{DeviceFleet, FleetEvent, FleetEventKind};
 pub use tenancy::{ChurnEvent, ChurnEventKind, ChurnSchedule, TenantSet};
 
 use crate::linalg::Mat;

@@ -138,6 +138,21 @@ impl Policy for MmGpEi {
         self.incumbents.clear(user);
         true
     }
+
+    /// Device fleet churn is a no-op for MM-GP-EI: the shared posterior,
+    /// incumbents, and EIrate scores are functions of the *arm* history
+    /// only — which devices are online never enters Eqs. 4–5 — so the
+    /// in-place "change" is trivially bit-identical to the from-scratch
+    /// rebuild oracle (the fleet parity gates pin this).
+    fn device_joined(&mut self, _problem: &Problem, _device: usize) -> bool {
+        true
+    }
+
+    /// See `device_joined` above: same no-op contract on a device
+    /// leave.
+    fn device_left(&mut self, _problem: &Problem, _device: usize) -> bool {
+        true
+    }
 }
 
 #[cfg(test)]

@@ -104,6 +104,29 @@ pub trait Policy {
     fn user_left(&mut self, _problem: &Problem, _user: UserId) -> bool {
         false
     }
+
+    /// Device fleet churn: `device` joined (or rejoined) the fleet.
+    /// Same in-place/rebuild contract as the tenant hooks: the default
+    /// `false` routes through the engine's from-scratch rebuild, so
+    /// every policy is fleet-correct without changes. [`MmGpEi`]
+    /// overrides this with a trivially-true no-op — neither the shared
+    /// posterior, the incumbents, nor the EIrate scores depend on which
+    /// devices are online (EIrate ranks arms, not devices) — so the
+    /// in-place path is bit-identical to the rebuild oracle (pinned by
+    /// the fleet parity gates in `rust/tests/engine_parity.rs` and
+    /// `benches/fig7_elastic.rs`). A future device-aware policy (e.g.
+    /// speed-aware EIrate) would do real work here.
+    fn device_joined(&mut self, _problem: &Problem, _device: usize) -> bool {
+        false
+    }
+
+    /// Device fleet churn: `device` left the fleet (its in-flight job,
+    /// if any, was preempted and the arm's decision requeued by the
+    /// engine before this callback). Same contract as
+    /// [`Policy::device_joined`].
+    fn device_left(&mut self, _problem: &Problem, _device: usize) -> bool {
+        false
+    }
 }
 
 /// Adapter that forces the driver's **rebuild** path on every churn
@@ -128,7 +151,8 @@ impl<P: Policy> Policy for ForceRebuild<P> {
         self.0.observe(problem, arm, z);
     }
 
-    // user_joined / user_left: trait defaults (false) — always rebuild.
+    // user_joined / user_left / device_joined / device_left: trait
+    // defaults (false) — always rebuild.
 }
 
 /// Per-user incumbent tracker `z(x_i*(t))` shared by several policies.

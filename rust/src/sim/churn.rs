@@ -1,31 +1,32 @@
-//! Discrete-event simulation with **tenant churn**: the event loop gains
-//! [`ChurnEventKind::Arrival`] / [`ChurnEventKind::Departure`] event
-//! kinds alongside completions, regret is integrated per user over each
-//! tenant's *active windows* only (Eq. 2 with entry/exit integration
-//! limits), and the service keeps running as the cohort turns over.
+//! Virtual-time **tenant churn** adapter: [`simulate_churn`] replays an
+//! arrival/departure timeline through the unified engine
+//! ([`crate::engine`]) with [`Tenancy::Churn`] accounting — regret is
+//! integrated per user over each tenant's *active windows* only (Eq. 2
+//! with entry/exit integration limits), and the service keeps running
+//! as the cohort turns over.
 //!
-//! **Policy churn contract.** The driver owns arm retirement: a departed
+//! **Policy churn contract.** The engine owns arm retirement: a departed
 //! tenant's unstarted arms are folded into the `selected` mask handed to
-//! [`Policy::select`], so every policy is churn-*correct* without
-//! changes. Policies that also implement [`Policy::user_joined`] /
-//! [`Policy::user_left`] (MM-GP-EI) apply the tenant change *in place*;
-//! for the rest the driver falls back to the from-scratch rebuild —
-//! reconstruct via the factory, replay the observation history, replay
-//! the current tenant set — which is also the oracle the incremental
-//! path is gated against (`rust/tests/churn.rs`, `benches/fig6_churn.rs`).
+//! [`crate::sched::Policy::select`], so every policy is churn-*correct*
+//! without changes. Policies that also implement the
+//! `user_joined`/`user_left` hooks (MM-GP-EI) apply the tenant change
+//! *in place*; for the rest the engine falls back to the from-scratch
+//! rebuild — reconstruct via the factory, replay the observation
+//! history, replay the current tenant set — which is also the oracle the
+//! incremental path is gated against (`rust/tests/churn.rs`,
+//! `benches/fig6_churn.rs`).
 //!
 //! Determinism: virtual time, total event order (churn events before
 //! completions at equal times; see `problem::tenancy` for the intra-tick
 //! order), device-index tie-breaks — identical seeds replay identical
 //! schedules, so churn reports are byte-stable.
 
-use std::collections::{BinaryHeap, VecDeque};
-use std::time::{Duration, Instant};
+use std::time::Duration;
 
-use super::{Completion, Observation, SimConfig};
+use super::{Observation, SimConfig};
+use crate::engine::{self, EngineParams, PolicyFactory, PolicyHost, Tenancy, VirtualClock};
 use crate::metrics::StepCurve;
-use crate::problem::{ArmId, ChurnEventKind, ChurnSchedule, Problem, TenantSet, Truth, UserId};
-use crate::sched::{Incumbents, Policy, SchedContext};
+use crate::problem::{ChurnSchedule, DeviceFleet, Problem, Truth};
 
 /// Result of one simulated churn run.
 #[derive(Clone, Debug)]
@@ -58,29 +59,6 @@ pub struct ChurnResult {
     pub n_rebuilds: usize,
 }
 
-/// From-scratch rebuild: reconstruct the policy, replay the observation
-/// history in completion order, then replay the current tenant set (so
-/// churn-capable policies freeze the absent tenants' state). This is the
-/// fallback for policies whose churn hooks return `false` — and the
-/// oracle the incremental hooks are validated against.
-pub(crate) fn rebuild_policy(
-    factory: &dyn Fn(&Problem) -> Box<dyn Policy>,
-    problem: &Problem,
-    tenants: &TenantSet,
-    history: &[(ArmId, f64)],
-) -> Box<dyn Policy> {
-    let mut policy = factory(problem);
-    for &(a, z) in history {
-        policy.observe(problem, a, z);
-    }
-    for u in 0..problem.n_users {
-        if !tenants.is_active(u) {
-            let _ = policy.user_left(problem, u);
-        }
-    }
-    policy
-}
-
 /// Run one churn simulation of the factory's policy on
 /// `(problem, truth, schedule)`.
 ///
@@ -95,372 +73,46 @@ pub fn simulate_churn(
     problem: &Problem,
     truth: &Truth,
     schedule: &ChurnSchedule,
-    factory: &dyn Fn(&Problem) -> Box<dyn Policy>,
+    factory: &PolicyFactory,
     config: &SimConfig,
 ) -> ChurnResult {
     assert!(config.n_devices >= 1, "need at least one device");
-    let n_arms = problem.n_arms();
-    let n_users = problem.n_users;
-    assert_eq!(truth.z.len(), n_arms);
-    assert!(
-        schedule.n_users_seen() <= n_users,
-        "schedule references user {} but the problem has {} users",
-        schedule.n_users_seen().saturating_sub(1),
-        n_users
-    );
-    assert_disjoint_tenancy(problem);
-
-    let mut policy = factory(problem);
-    // Everyone starts inactive. A fresh policy with an empty history is
-    // already "rebuilt", so unsupported hooks are simply ignored here.
-    for u in 0..n_users {
-        let _ = policy.user_left(problem, u);
-    }
-    let mut tenants = TenantSet::none_active(n_users);
-    let mut retired = vec![true; n_arms];
-    let mut selected = vec![false; n_arms];
-    // The mask policies see: selected ∪ retired.
-    let mut blocked = vec![true; n_arms];
-    let mut observed = vec![false; n_arms];
-    let mut warm: VecDeque<ArmId> = VecDeque::new();
-    let mut history: Vec<(ArmId, f64)> = Vec::new();
-    let mut n_rebuilds = 0usize;
-
-    // Regret accounting (same empty-incumbent reference as `simulate`).
-    let z_star: Vec<f64> = (0..n_users).map(|u| truth.best_value(problem, u)).collect();
-    let empty_ref: Vec<f64> = (0..n_users)
-        .map(|u| problem.user_arms[u].iter().map(|&a| truth.z[a]).fold(0.0f64, f64::min))
-        .collect();
-    let mut incumbents = Incumbents::new(n_users);
-    let user_gap = |inc: &Incumbents, u: UserId| -> f64 {
-        let b = if inc.has_observation(u) { inc.value(u) } else { empty_ref[u] };
-        (z_star[u] - b).max(0.0)
+    let fleet = DeviceFleet::uniform(config.n_devices);
+    let mut clock = VirtualClock::new(config.n_devices);
+    let params = EngineParams {
+        problem,
+        truth,
+        sched_view: None,
+        fleet: &fleet,
+        tenancy: Tenancy::Churn(schedule),
+        warm_start_per_user: config.warm_start_per_user,
+        horizon: config.horizon,
+        stop_at_cutoff: None,
+        time_scale: 1.0,
+        collect_decision_latencies: false,
+        verbose: false,
     };
-    let avg_active_gap = |inc: &Incumbents, tenants: &TenantSet| -> f64 {
-        if tenants.n_active() == 0 {
-            0.0
-        } else {
-            tenants.active_users().map(|u| user_gap(inc, u)).sum::<f64>()
-                / tenants.n_active() as f64
-        }
-    };
-
-    let mut per_user_regret = vec![0.0; n_users];
-    let mut arrival_time = vec![0.0f64; n_users];
-    let mut waiting_first_dispatch = vec![false; n_users];
-    let mut join_latency: Vec<Option<f64>> = vec![None; n_users];
-
-    let mut completions: BinaryHeap<Completion> = BinaryHeap::new();
-    let mut idle: Vec<usize> = Vec::new();
-    let mut observations = Vec::with_capacity(n_arms);
-    let mut decision_wall = Duration::ZERO;
-    let mut n_decisions = 0usize;
-    let mut inst_curve = StepCurve::new(0.0);
-    let mut t_prev = 0.0f64;
-
-    // Dispatch helper: next arm for a free device at time `now`; the
-    // device parks in `idle` when no candidate is dispatchable.
-    let dispatch = |now: f64,
-                        device: usize,
-                        selected: &mut [bool],
-                        blocked: &mut [bool],
-                        observed: &[bool],
-                        warm: &mut VecDeque<ArmId>,
-                        policy: &mut dyn Policy,
-                        completions: &mut BinaryHeap<Completion>,
-                        idle: &mut Vec<usize>,
-                        waiting: &mut [bool],
-                        join_latency: &mut [Option<f64>],
-                        arrival_time: &[f64],
-                        decision_wall: &mut Duration,
-                        n_decisions: &mut usize| {
-        while let Some(&a) = warm.front() {
-            if blocked[a] {
-                warm.pop_front();
-            } else {
-                break;
-            }
-        }
-        let arm = if let Some(a) = warm.pop_front() {
-            Some(a)
-        } else {
-            let ctx = SchedContext { problem, selected: blocked, observed, now };
-            let t0 = Instant::now();
-            let pick = policy.select(&ctx);
-            *decision_wall += t0.elapsed();
-            *n_decisions += 1;
-            pick
-        };
-        if let Some(a) = arm {
-            assert!(!blocked[a], "policy returned a blocked (selected/retired) arm {a}");
-            selected[a] = true;
-            blocked[a] = true;
-            for &u in &problem.arm_users[a] {
-                if waiting[u] {
-                    waiting[u] = false;
-                    join_latency[u] = Some(now - arrival_time[u]);
-                }
-            }
-            completions.push(Completion { finish: now + problem.cost[a], device, arm: a, start: now });
-        } else {
-            idle.push(device);
-            idle.sort_unstable();
-        }
-    };
-
-    let churn_events = schedule.events();
-    let mut next_evt = 0usize;
-
-    // Apply the t = 0 events (the initial cohort arrives) before the
-    // devices first ask for work.
-    while next_evt < churn_events.len() && churn_events[next_evt].time == 0.0 {
-        let e = churn_events[next_evt];
-        next_evt += 1;
-        debug_assert_eq!(e.kind, ChurnEventKind::Arrival, "schedule starts everyone inactive");
-        if tenants.activate(e.user) {
-            if !policy.user_joined(problem, e.user) {
-                // Fresh policy + empty history: already equivalent to a
-                // rebuild — no work to replay.
-                debug_assert!(history.is_empty());
-            }
-            tenants.refresh_retired_for_user(problem, e.user, &mut retired);
-            for &x in &problem.user_arms[e.user] {
-                blocked[x] = selected[x] || retired[x];
-            }
-            enqueue_warm_arms(problem, e.user, config.warm_start_per_user, &selected, &mut warm);
-            arrival_time[e.user] = 0.0;
-            waiting_first_dispatch[e.user] = true;
-        }
-    }
-    inst_curve.push(0.0, avg_active_gap(&incumbents, &tenants));
-    for d in 0..config.n_devices {
-        dispatch(
-            0.0,
-            d,
-            &mut selected,
-            &mut blocked,
-            &observed,
-            &mut warm,
-            policy.as_mut(),
-            &mut completions,
-            &mut idle,
-            &mut waiting_first_dispatch,
-            &mut join_latency,
-            &arrival_time,
-            &mut decision_wall,
-            &mut n_decisions,
-        );
-    }
-
-    // Unified event loop: next event is the earlier of the next churn
-    // event and the next completion; churn applies first on ties.
-    loop {
-        let next_completion = completions.peek().map(|c| c.finish);
-        let next_churn = churn_events.get(next_evt).map(|e| e.time);
-        let (now, churn_first) = match (next_completion, next_churn) {
-            (None, None) => break,
-            (Some(c), None) => (c, false),
-            (None, Some(e)) => (e, true),
-            (Some(c), Some(e)) => {
-                if e <= c {
-                    (e, true)
-                } else {
-                    (c, false)
-                }
-            }
-        };
-
-        // Integrate per-user regret over [t_prev, now), clipped at the
-        // horizon (exact Eq. 2 truncation per active window).
-        let (lo, hi) = match config.horizon {
-            Some(h) => (t_prev.min(h), now.min(h)),
-            None => (t_prev, now),
-        };
-        let dt = (hi - lo).max(0.0);
-        if dt > 0.0 {
-            for u in tenants.active_users() {
-                per_user_regret[u] += user_gap(&incumbents, u) * dt;
-            }
-        }
-        t_prev = now;
-
-        if churn_first {
-            // Drain every churn event scheduled at this instant
-            // (departures first — the schedule is pre-ordered).
-            while next_evt < churn_events.len() && churn_events[next_evt].time == now {
-                let e = churn_events[next_evt];
-                next_evt += 1;
-                match e.kind {
-                    ChurnEventKind::Arrival => {
-                        if !tenants.activate(e.user) {
-                            continue;
-                        }
-                        // With an empty history a fresh policy is already
-                        // the rebuilt policy — skip the reconstruction
-                        // (same rule as `coordinator::serve_churn`, so
-                        // the `rebuilds` KPI is comparable across loops).
-                        if !policy.user_joined(problem, e.user) && !history.is_empty() {
-                            n_rebuilds += 1;
-                            policy = rebuild_policy(factory, problem, &tenants, &history);
-                        }
-                        tenants.refresh_retired_for_user(problem, e.user, &mut retired);
-                        for &x in &problem.user_arms[e.user] {
-                            blocked[x] = selected[x] || retired[x];
-                        }
-                        enqueue_warm_arms(
-                            problem,
-                            e.user,
-                            config.warm_start_per_user,
-                            &selected,
-                            &mut warm,
-                        );
-                        if join_latency[e.user].is_none() {
-                            arrival_time[e.user] = now;
-                            waiting_first_dispatch[e.user] = true;
-                        }
-                    }
-                    ChurnEventKind::Departure => {
-                        if !tenants.deactivate(e.user) {
-                            continue;
-                        }
-                        if !policy.user_left(problem, e.user) && !history.is_empty() {
-                            n_rebuilds += 1;
-                            policy = rebuild_policy(factory, problem, &tenants, &history);
-                        }
-                        tenants.refresh_retired_for_user(problem, e.user, &mut retired);
-                        for &x in &problem.user_arms[e.user] {
-                            blocked[x] = selected[x] || retired[x];
-                        }
-                        waiting_first_dispatch[e.user] = false;
-                    }
-                }
-            }
-            inst_curve.push(now, avg_active_gap(&incumbents, &tenants));
-            // Arrivals may have made arms dispatchable: wake every idle
-            // device, in ascending index order (determinism).
-            let woken = std::mem::take(&mut idle);
-            for d in woken {
-                dispatch(
-                    now,
-                    d,
-                    &mut selected,
-                    &mut blocked,
-                    &observed,
-                    &mut warm,
-                    policy.as_mut(),
-                    &mut completions,
-                    &mut idle,
-                    &mut waiting_first_dispatch,
-                    &mut join_latency,
-                    &arrival_time,
-                    &mut decision_wall,
-                    &mut n_decisions,
-                );
-            }
-        } else {
-            let c = completions.pop().expect("completion peeked above");
-            let z = truth.z[c.arm];
-            observed[c.arm] = true;
-            let t0 = Instant::now();
-            policy.observe(problem, c.arm, z);
-            decision_wall += t0.elapsed();
-            history.push((c.arm, z));
-            observations.push(Observation {
-                arm: c.arm,
-                start: c.start,
-                finish: now,
-                z,
-                device: c.device,
-            });
-            incumbents.update_arm(problem, c.arm, z);
-            inst_curve.push(now, avg_active_gap(&incumbents, &tenants));
-            dispatch(
-                now,
-                c.device,
-                &mut selected,
-                &mut blocked,
-                &observed,
-                &mut warm,
-                policy.as_mut(),
-                &mut completions,
-                &mut idle,
-                &mut waiting_first_dispatch,
-                &mut join_latency,
-                &arrival_time,
-                &mut decision_wall,
-                &mut n_decisions,
-            );
-        }
-    }
-
-    let makespan = t_prev;
-    let horizon = config.horizon.unwrap_or(makespan);
-    if horizon > makespan {
-        // Extend each still-active tenant's window with its final gap.
-        for u in tenants.active_users() {
-            per_user_regret[u] += user_gap(&incumbents, u) * (horizon - makespan);
-        }
-    } else if horizon < makespan {
-        inst_curve = inst_curve.truncated(horizon);
-    }
-    let cumulative_regret = per_user_regret.iter().sum();
-
+    let run = engine::run(&params, PolicyHost::from_factory(factory), &mut clock);
     ChurnResult {
-        policy: policy.name(),
-        observations,
-        inst_regret: inst_curve,
-        cumulative_regret,
-        per_user_regret,
-        join_latency,
-        horizon,
-        makespan,
-        decision_wall_time: decision_wall,
-        n_decisions,
-        n_rebuilds,
-    }
-}
-
-/// Churn requires **disjoint per-tenant arm blocks**: an arm shared by
-/// tenants that churn independently has no well-defined incremental
-/// semantics (the departed owner's dropped incumbent would still price
-/// the arm for the remaining owner, diverging from the rebuild oracle).
-/// Both churn drivers fail loudly instead of silently diverging.
-pub(crate) fn assert_disjoint_tenancy(problem: &Problem) {
-    for (x, owners) in problem.arm_users.iter().enumerate() {
-        assert!(
-            owners.len() == 1,
-            "churn requires disjoint per-tenant arm blocks; arm {x} is shared by users {owners:?}"
-        );
-    }
-}
-
-/// Enqueue `per_user` cheapest not-yet-run arms of `user` (ties broken
-/// by arm id — the same order [`Problem::warm_start_arms`] uses), the
-/// paper's warm-start protocol applied at each arrival. Shared with the
-/// live loop (`coordinator::serve_churn`).
-pub(crate) fn enqueue_warm_arms(
-    problem: &Problem,
-    user: UserId,
-    per_user: usize,
-    selected: &[bool],
-    warm: &mut VecDeque<ArmId>,
-) {
-    if per_user == 0 {
-        return;
-    }
-    let mut arms: Vec<ArmId> =
-        problem.user_arms[user].iter().copied().filter(|&a| !selected[a]).collect();
-    arms.sort_by(|&a, &b| problem.cost[a].partial_cmp(&problem.cost[b]).unwrap().then(a.cmp(&b)));
-    for &a in arms.iter().take(per_user) {
-        warm.push_back(a);
+        policy: run.policy,
+        observations: run.observations,
+        inst_regret: run.curve,
+        cumulative_regret: run.cumulative_regret,
+        per_user_regret: run.per_user_regret,
+        join_latency: run.join_latency,
+        horizon: run.horizon,
+        makespan: run.makespan,
+        decision_wall_time: run.decision_wall_time,
+        n_decisions: run.n_decisions,
+        n_rebuilds: run.n_rebuilds,
     }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::problem::ChurnEvent;
-    use crate::sched::{ForceRebuild, GpEiRoundRobin, MmGpEi};
+    use crate::problem::{ChurnEvent, ChurnEventKind};
+    use crate::sched::{ForceRebuild, GpEiRoundRobin, MmGpEi, Policy};
     use crate::workload::{churn_workload, ChurnConfig};
 
     fn small_cfg() -> ChurnConfig {

@@ -1,34 +1,47 @@
-//! Discrete-event simulation of the multi-device AutoML service.
+//! Discrete-event simulation of the multi-device AutoML service —
+//! virtual-time **adapters** over the unified scheduling engine
+//! ([`crate::engine`]).
 //!
 //! The paper's testbed runs real training jobs on real machines; for a
 //! reproducible reproduction we simulate in **virtual time** (DESIGN.md
-//! §3): devices are slots in an event queue, running arm `x` occupies a
-//! device for exactly `c(x)` time units, and the completion reveals the
+//! §3): devices are slots in an event queue, running arm `x` on device
+//! `d` occupies it for `c(x)/s_d` time units (`s_d` is the device's
+//! speed — 1 for the paper's uniform fleets, so the historical "exactly
+//! `c(x)` time units" holds there), and the completion reveals the
 //! hidden `z(x)`. Regret is a function of the schedule only, so virtual
 //! time preserves every quantity the paper plots while making runs
 //! deterministic.
 //!
-//! The driver implements the paper's §6.1 protocol: an optional warm-start
-//! phase (the two cheapest models per user) runs before the policy takes
-//! over; each device, upon becoming free, immediately asks the policy for
-//! the next arm.
+//! The drivers implement the paper's §6.1 protocol: an optional
+//! warm-start phase (the two cheapest models per user) runs before the
+//! policy takes over; each device, upon becoming free, immediately asks
+//! the policy for the next arm. Three scenario entry points share the
+//! one engine event loop:
+//!
+//! * [`simulate`] — the paper's static setting (`M` identical always-on
+//!   devices);
+//! * [`simulate_churn`] — dynamic tenancy (arrival/departure traffic);
+//! * [`simulate_fleet`] — elastic heterogeneous fleets (per-device
+//!   speeds, devices joining/leaving mid-run, preemption + requeue).
 
-pub(crate) mod churn;
+mod churn;
 
 pub use churn::{simulate_churn, ChurnResult};
 
-use std::cmp::Ordering;
-use std::collections::BinaryHeap;
-use std::time::{Duration, Instant};
+use std::time::Duration;
 
+use crate::engine::{self, EngineParams, PolicyFactory, PolicyHost, Tenancy, VirtualClock};
 use crate::metrics::StepCurve;
-use crate::problem::{ArmId, Problem, Truth};
-use crate::sched::{Incumbents, Policy, SchedContext};
+use crate::problem::{DeviceFleet, Problem, Truth};
+use crate::sched::Policy;
+
+pub use crate::engine::Observation;
 
 /// Simulation parameters.
 #[derive(Clone, Debug)]
 pub struct SimConfig {
-    /// Number of devices `M`.
+    /// Number of devices `M` (ignored by [`simulate_fleet`], where the
+    /// fleet defines the device set).
     pub n_devices: usize,
     /// Warm-start arms per user (paper protocol: 2 fastest). 0 disables.
     pub warm_start_per_user: usize,
@@ -47,21 +60,6 @@ impl Default for SimConfig {
     fn default() -> Self {
         SimConfig { n_devices: 1, warm_start_per_user: 2, horizon: None, stop_at_cutoff: None }
     }
-}
-
-/// One finished evaluation.
-#[derive(Clone, Debug)]
-pub struct Observation {
-    /// Which arm.
-    pub arm: ArmId,
-    /// Dispatch time.
-    pub start: f64,
-    /// Completion time (`start + c(arm)`).
-    pub finish: f64,
-    /// Revealed performance.
-    pub z: f64,
-    /// Device index that ran it.
-    pub device: usize,
 }
 
 /// Result of one simulated run.
@@ -93,6 +91,24 @@ impl SimResult {
     }
 }
 
+/// Result of one simulated **elastic fleet** run ([`simulate_fleet`]):
+/// the static-tenancy regret accounting of [`SimResult`] plus the
+/// fleet-specific service metrics.
+#[derive(Clone, Debug)]
+pub struct FleetResult {
+    /// The schedule and regret accounting (identical in meaning — and,
+    /// for a unit-speed always-on fleet, identical in bytes — to a
+    /// [`simulate`] run).
+    pub sim: SimResult,
+    /// Jobs cancelled because their device left mid-run.
+    pub n_preemptions: usize,
+    /// Per re-dispatched preempted arm: preemption → re-dispatch delay.
+    pub requeue_latency: Vec<f64>,
+    /// Fleet events the policy could not apply in place (each one cost a
+    /// from-scratch rebuild + history replay). 0 for MM-GP-EI.
+    pub n_rebuilds: usize,
+}
+
 /// Clone `problem` with the scheduler-visible costs replaced by the
 /// estimates `ĉ(x)` (Remark 1). Construct policies against this view
 /// when driving [`simulate_with_estimates`].
@@ -104,39 +120,18 @@ pub fn with_cost_estimates(problem: &Problem, estimated: &[f64]) -> Problem {
     view
 }
 
-/// Completion event ordered by time (min-heap via `Reverse`-style cmp).
-/// Shared with the churn event loop (`sim::churn`).
-pub(crate) struct Completion {
-    pub(crate) finish: f64,
-    pub(crate) device: usize,
-    pub(crate) arm: ArmId,
-    pub(crate) start: f64,
-}
-
-impl PartialEq for Completion {
-    fn eq(&self, other: &Self) -> bool {
-        self.cmp(other) == Ordering::Equal
-    }
-}
-impl Eq for Completion {}
-impl PartialOrd for Completion {
-    fn partial_cmp(&self, other: &Self) -> Option<Ordering> {
-        Some(self.cmp(other))
-    }
-}
-impl Ord for Completion {
-    fn cmp(&self, other: &Self) -> Ordering {
-        // Reversed: BinaryHeap is a max-heap, we want earliest first.
-        // `total_cmp` makes the order *total* (no NaN panic, no
-        // platform-dependent partial_cmp escape hatch), and equal finish
-        // times break deterministically by device index so identical
-        // seeds replay identical schedules everywhere — the same-cost
-        // warm-start burst at t = 0 would otherwise leave the completion
-        // order to heap internals.
-        other
-            .finish
-            .total_cmp(&self.finish)
-            .then_with(|| other.device.cmp(&self.device))
+/// Reshape an engine run in static-accounting mode into a [`SimResult`]
+/// (the gap-sum curve becomes the per-user average).
+pub(crate) fn sim_result_from(run: engine::EngineRun, n_users: usize) -> SimResult {
+    SimResult {
+        policy: run.policy,
+        observations: run.observations,
+        inst_regret: run.curve.scaled(1.0 / n_users as f64),
+        cumulative_regret: run.cumulative_regret,
+        horizon: run.horizon,
+        makespan: run.makespan,
+        decision_wall_time: run.decision_wall_time,
+        n_decisions: run.n_decisions,
     }
 }
 
@@ -167,173 +162,76 @@ pub fn simulate_with_estimates(
     estimated_cost: Option<&[f64]>,
 ) -> SimResult {
     let view_storage;
-    let view: &Problem = match estimated_cost {
+    let view: Option<&Problem> = match estimated_cost {
         Some(est) => {
             assert_eq!(est.len(), problem.n_arms());
             view_storage = with_cost_estimates(problem, est);
-            &view_storage
+            Some(&view_storage)
         }
-        None => problem,
+        None => None,
     };
     assert!(config.n_devices >= 1, "need at least one device");
-    assert_eq!(truth.z.len(), problem.n_arms());
-
-    let n_arms = problem.n_arms();
-    let n_users = problem.n_users;
-    let mut selected = vec![false; n_arms];
-    let mut observed = vec![false; n_arms];
-
-    // Warm-start queue (paper §6.1: the two fastest models per user).
-    let mut warm: std::collections::VecDeque<ArmId> =
-        problem.warm_start_arms(config.warm_start_per_user).into();
-
-    // Per-user optimum and current incumbent for regret accounting. The
-    // incumbents are Option-based ([`crate::sched::Incumbents`]): a user
-    // with no observation yet is accounted against `empty_ref` — the
-    // accuracy-zero convention floored at the user's worst arm — so
-    // workloads with negative-valued optima keep a positive gap (the old
-    // raw `EMPTY_INCUMBENT = 0.0` floor silently zeroed regret whenever
-    // `z* < 0`). For the paper's non-negative workloads `empty_ref` is
-    // exactly 0.0, so reports are byte-identical to the old accounting.
-    let z_star: Vec<f64> = (0..n_users).map(|u| truth.best_value(problem, u)).collect();
-    let empty_ref: Vec<f64> = (0..n_users)
-        .map(|u| problem.user_arms[u].iter().map(|&a| truth.z[a]).fold(0.0f64, f64::min))
-        .collect();
-    let mut incumbents = Incumbents::new(n_users);
-    let gap_sum = |inc: &Incumbents| -> f64 {
-        z_star
-            .iter()
-            .zip(&empty_ref)
-            .enumerate()
-            .map(|(u, (&s, &e))| {
-                let b = if inc.has_observation(u) { inc.value(u) } else { e };
-                (s - b).max(0.0)
-            })
-            .sum()
+    let fleet = DeviceFleet::uniform(config.n_devices);
+    let mut clock = VirtualClock::new(config.n_devices);
+    let params = EngineParams {
+        problem,
+        truth,
+        sched_view: view,
+        fleet: &fleet,
+        tenancy: Tenancy::Static,
+        warm_start_per_user: config.warm_start_per_user,
+        horizon: config.horizon,
+        stop_at_cutoff: config.stop_at_cutoff,
+        time_scale: 1.0,
+        collect_decision_latencies: false,
+        verbose: false,
     };
+    let run = engine::run(&params, PolicyHost::borrowed(policy), &mut clock);
+    sim_result_from(run, problem.n_users)
+}
 
-    let mut events: BinaryHeap<Completion> = BinaryHeap::new();
-    let mut observations = Vec::with_capacity(n_arms);
-    let mut decision_wall = Duration::ZERO;
-    let mut n_decisions = 0usize;
-
-    // Sum-gap step curve; converted to avg at the end.
-    let mut sum_gap_curve = StepCurve::new(gap_sum(&incumbents));
-    let mut cumulative = 0.0;
-    let mut t_prev = 0.0;
-
-    // Dispatch helper: next arm for a free device at time `now`.
-    let dispatch = |now: f64,
-                        device: usize,
-                        selected: &mut Vec<bool>,
-                        observed: &[bool],
-                        warm: &mut std::collections::VecDeque<ArmId>,
-                        policy: &mut dyn Policy,
-                        events: &mut BinaryHeap<Completion>,
-                        decision_wall: &mut Duration,
-                        n_decisions: &mut usize| {
-        // Drain warm-start queue first (skip anything already selected).
-        while let Some(&a) = warm.front() {
-            if selected[a] {
-                warm.pop_front();
-            } else {
-                break;
-            }
-        }
-        let arm = if let Some(a) = warm.pop_front() {
-            Some(a)
-        } else {
-            let ctx = SchedContext { problem: view, selected, observed, now };
-            let t0 = Instant::now();
-            let pick = policy.select(&ctx);
-            *decision_wall += t0.elapsed();
-            *n_decisions += 1;
-            pick
-        };
-        if let Some(a) = arm {
-            assert!(!selected[a], "policy returned already-selected arm {a}");
-            selected[a] = true;
-            events.push(Completion { finish: now + problem.cost[a], device, arm: a, start: now });
-        }
-        // None → device retires (no candidates left).
+/// Run one simulation over an **elastic heterogeneous fleet**: devices
+/// have speeds (`c(x)/s_d` occupancy) and join/leave per the fleet's
+/// availability schedule; a device leaving mid-job preempts it and the
+/// engine requeues the arm's decision (nothing is revealed).
+///
+/// Takes a policy *factory* (like [`simulate_churn`]) because fleet
+/// events a policy cannot apply in place fall back to a from-scratch
+/// rebuild — the oracle [`crate::sched::ForceRebuild`] pins the
+/// in-place hooks against. `config.n_devices` is ignored: the fleet
+/// defines the device set. With a unit-speed always-on fleet
+/// ([`DeviceFleet::uniform`]) the result is byte-identical to
+/// [`simulate`] (see `rust/tests/engine_parity.rs`).
+pub fn simulate_fleet(
+    problem: &Problem,
+    truth: &Truth,
+    fleet: &DeviceFleet,
+    factory: &PolicyFactory,
+    config: &SimConfig,
+) -> FleetResult {
+    let mut clock = VirtualClock::new(fleet.n_devices());
+    let params = EngineParams {
+        problem,
+        truth,
+        sched_view: None,
+        fleet,
+        tenancy: Tenancy::Static,
+        warm_start_per_user: config.warm_start_per_user,
+        horizon: config.horizon,
+        stop_at_cutoff: config.stop_at_cutoff,
+        time_scale: 1.0,
+        collect_decision_latencies: false,
+        verbose: false,
     };
-
-    // t = 0: all devices ask for work.
-    for d in 0..config.n_devices {
-        dispatch(
-            0.0,
-            d,
-            &mut selected,
-            &observed,
-            &mut warm,
-            policy,
-            &mut events,
-            &mut decision_wall,
-            &mut n_decisions,
-        );
-    }
-
-    // Main event loop.
-    while let Some(c) = events.pop() {
-        let now = c.finish;
-        // Integrate regret over [t_prev, now).
-        cumulative += gap_sum(&incumbents) * (now - t_prev);
-        t_prev = now;
-
-        // Observe.
-        let z = truth.z[c.arm];
-        observed[c.arm] = true;
-        let t0 = Instant::now();
-        policy.observe(view, c.arm, z);
-        decision_wall += t0.elapsed();
-        observations.push(Observation { arm: c.arm, start: c.start, finish: now, z, device: c.device });
-        incumbents.update_arm(problem, c.arm, z);
-        sum_gap_curve.push(now, gap_sum(&incumbents));
-
-        // Early stop at the convergence cutoff (Figure-5 protocol).
-        if let Some(cut) = config.stop_at_cutoff {
-            if gap_sum(&incumbents) / n_users as f64 <= cut {
-                break;
-            }
-        }
-
-        // The freed device asks for more work.
-        dispatch(
-            now,
-            c.device,
-            &mut selected,
-            &observed,
-            &mut warm,
-            policy,
-            &mut events,
-            &mut decision_wall,
-            &mut n_decisions,
-        );
-    }
-
-    let makespan = t_prev;
-    let horizon = config.horizon.unwrap_or(makespan);
-    // Extend the integral to the horizon with the final gap.
-    if horizon > t_prev {
-        cumulative += gap_sum(&incumbents) * (horizon - t_prev);
-    } else if horizon < t_prev {
-        // Re-integrate exactly over [0, horizon] from the curve, and
-        // truncate the curve itself so the report KPIs (e.g.
-        // `final_regret`) and the plotted series agree with the
-        // truncated integral instead of leaking post-horizon tail.
-        cumulative = sum_gap_curve.integral_to(horizon);
-        sum_gap_curve = sum_gap_curve.truncated(horizon);
-    }
-
-    SimResult {
-        policy: policy.name(),
-        observations,
-        inst_regret: sum_gap_curve.scaled(1.0 / n_users as f64),
-        cumulative_regret: cumulative,
-        horizon,
-        makespan,
-        decision_wall_time: decision_wall,
-        n_decisions,
+    let mut run = engine::run(&params, PolicyHost::from_factory(factory), &mut clock);
+    let n_preemptions = run.n_preemptions;
+    let requeue_latency = std::mem::take(&mut run.requeue_latency);
+    let n_rebuilds = run.n_rebuilds;
+    FleetResult {
+        sim: sim_result_from(run, problem.n_users),
+        n_preemptions,
+        requeue_latency,
+        n_rebuilds,
     }
 }
 
@@ -472,8 +370,8 @@ mod tests {
 
     #[test]
     fn negative_optima_still_accrue_regret() {
-        // Satellite fix: with the raw EMPTY_INCUMBENT = 0.0 floor, a
-        // workload whose optima are negative reported zero gap until the
+        // Satellite fix (PR 4): with the raw EMPTY_INCUMBENT = 0.0 floor,
+        // a workload whose optima are negative reported zero gap until the
         // first observation (and forever, if all z < 0). The Option-based
         // incumbents + per-user empty reference must keep regret positive
         // and make the post-observation curve shift-invariant.
@@ -509,9 +407,9 @@ mod tests {
 
     #[test]
     fn horizon_truncates_curve_and_integral_agree() {
-        // Satellite fix: with horizon < makespan the returned inst_regret
-        // curve must stop at the horizon, and re-integrating it must give
-        // exactly the reported cumulative regret.
+        // With horizon < makespan the returned inst_regret curve must
+        // stop at the horizon, and re-integrating it must give exactly
+        // the reported cumulative regret.
         let (p, t) = problem_and_truth();
         let full = simulate(&p, &t, &mut MmGpEi::new(&p), &SimConfig { n_devices: 1, ..Default::default() });
         let h = full.makespan / 2.0;
@@ -599,5 +497,26 @@ mod tests {
         let (p, t) = problem_and_truth();
         let r = simulate(&p, &t, &mut MmGpEi::new(&p), &SimConfig { n_devices: 2, ..Default::default() });
         assert!(r.n_decisions >= 2, "policy consulted after warm start");
+    }
+
+    #[test]
+    fn unit_fleet_matches_plain_simulate_bitwise() {
+        // The acceptance gate in miniature (the full version lives in
+        // rust/tests/engine_parity.rs): a unit-speed always-on fleet must
+        // replay the plain simulator bit-for-bit.
+        let (p, t) = problem_and_truth();
+        let plain = simulate(&p, &t, &mut MmGpEi::new(&p), &SimConfig { n_devices: 2, ..Default::default() });
+        let factory = |p: &Problem| -> Box<dyn Policy> { Box::new(MmGpEi::new(p)) };
+        let fleet = DeviceFleet::uniform(2);
+        let elastic =
+            simulate_fleet(&p, &t, &fleet, &factory, &SimConfig { n_devices: 2, ..Default::default() });
+        assert_eq!(elastic.n_preemptions, 0);
+        assert_eq!(elastic.n_rebuilds, 0);
+        let key = |r: &SimResult| -> Vec<(usize, usize, u64)> {
+            r.observations.iter().map(|o| (o.arm, o.device, o.finish.to_bits())).collect()
+        };
+        assert_eq!(key(&plain), key(&elastic.sim));
+        assert_eq!(plain.cumulative_regret.to_bits(), elastic.sim.cumulative_regret.to_bits());
+        assert_eq!(plain.inst_regret, elastic.sim.inst_regret);
     }
 }

@@ -16,11 +16,13 @@
 
 mod churn;
 mod dataset;
+mod fleet;
 mod generators;
 mod synthetic;
 
 pub use churn::{churn_workload, ChurnConfig};
 pub use dataset::{Dataset, ProtocolSplit};
+pub use fleet::{fleet_schedule, FleetConfig};
 pub use generators::{azure, deeplearning, AZURE_MODELS, DEEPLEARNING_MODELS};
 pub use synthetic::{synthetic_gp, SyntheticConfig};
 

@@ -1,0 +1,444 @@
+//! Cross-loop and cross-scenario parity gates for the unified engine.
+//!
+//! The engine refactor's acceptance criteria in executable form:
+//!
+//! 1. **Unit-fleet oracle**: with all speeds = 1 and no fleet churn, the
+//!    engine's fleet path replays the plain simulator **byte-for-byte**
+//!    (schedules, regret floats, curves) for every policy family — i.e.
+//!    the refactor cannot have moved a single bit of the paper's
+//!    figures. (CI additionally `cmp`s whole smoke reports; this is the
+//!    in-repo, always-on version.)
+//! 2. **Cross-loop parity**: the *wall-clock adapter* driven by the
+//!    deterministic mock clock and the *virtual-time adapter* replay the
+//!    same churn trace identically — schedules, per-tenant regret,
+//!    curves, join latencies, and the serialized report bytes. Before
+//!    the engine, `sim` and `coordinator` were only ever tested
+//!    separately.
+//! 3. **Preemption semantics**: speeds obey `c(x)/s_d`, a preempted arm
+//!    reveals nothing and is re-served, and the in-place device hooks
+//!    match the `ForceRebuild` oracle bit-for-bit.
+
+use std::time::Duration;
+
+use mmgpei::coordinator::{serve_churn_deterministic, ChurnServeReport, ServeConfig};
+use mmgpei::problem::{DeviceFleet, FleetEvent, FleetEventKind, Problem};
+use mmgpei::report::{Direction, RunReport};
+use mmgpei::sched::{ForceRebuild, GpEiRandom, GpEiRoundRobin, MmGpEi, Policy};
+use mmgpei::sim::{simulate, simulate_churn, simulate_fleet, ChurnResult, SimConfig, SimResult};
+use mmgpei::workload::{
+    churn_workload, fleet_schedule, synthetic_gp, ChurnConfig, FleetConfig, SyntheticConfig,
+};
+
+fn synthetic_instance(seed: u64) -> (Problem, mmgpei::problem::Truth) {
+    synthetic_gp(&SyntheticConfig { n_users: 6, n_models: 5, ..Default::default() }, seed)
+}
+
+fn sim_key(r: &SimResult) -> Vec<(usize, usize, u64, u64, u64)> {
+    r.observations
+        .iter()
+        .map(|o| (o.arm, o.device, o.start.to_bits(), o.finish.to_bits(), o.z.to_bits()))
+        .collect()
+}
+
+// ---------------------------------------------------------------------
+// 1. Unit-fleet oracle: the engine's fleet path == the plain simulator.
+// ---------------------------------------------------------------------
+
+/// Assert the unit-fleet engine path bit-matches the plain simulator
+/// for one (policy factory, device count) pair.
+fn assert_unit_fleet_parity(
+    name: &str,
+    factory: &dyn Fn(&Problem) -> Box<dyn Policy>,
+    p: &Problem,
+    t: &mmgpei::problem::Truth,
+    devices: usize,
+    seed: u64,
+) {
+    let cfg = SimConfig { n_devices: devices, ..Default::default() };
+    let mut plain_policy = factory(p);
+    let plain = simulate(p, t, plain_policy.as_mut(), &cfg);
+    let fleet = DeviceFleet::uniform(devices);
+    let elastic = simulate_fleet(p, t, &fleet, factory, &cfg);
+    assert_eq!(elastic.n_preemptions, 0);
+    assert_eq!(elastic.n_rebuilds, 0);
+    assert_eq!(
+        sim_key(&plain),
+        sim_key(&elastic.sim),
+        "{name} @M{devices} seed {seed}: schedule diverged"
+    );
+    assert_eq!(
+        plain.cumulative_regret.to_bits(),
+        elastic.sim.cumulative_regret.to_bits(),
+        "{name} @M{devices} seed {seed}: regret diverged"
+    );
+    assert_eq!(plain.inst_regret, elastic.sim.inst_regret);
+    assert_eq!(plain.makespan.to_bits(), elastic.sim.makespan.to_bits());
+    assert_eq!(plain.n_decisions, elastic.sim.n_decisions);
+}
+
+#[test]
+fn unit_fleet_replays_plain_simulate_for_every_policy_family() {
+    for seed in [0u64, 3, 9] {
+        let (p, t) = synthetic_instance(0x517 + seed);
+        for devices in [1usize, 2, 4] {
+            assert_unit_fleet_parity(
+                "mdmt",
+                &|p: &Problem| -> Box<dyn Policy> { Box::new(MmGpEi::new(p)) },
+                &p,
+                &t,
+                devices,
+                seed,
+            );
+            assert_unit_fleet_parity(
+                "round-robin",
+                &|p: &Problem| -> Box<dyn Policy> { Box::new(GpEiRoundRobin::new(p)) },
+                &p,
+                &t,
+                devices,
+                seed,
+            );
+            assert_unit_fleet_parity(
+                "random",
+                &move |p: &Problem| -> Box<dyn Policy> {
+                    Box::new(GpEiRandom::new(p, seed ^ 0x5EED))
+                },
+                &p,
+                &t,
+                devices,
+                seed,
+            );
+        }
+    }
+}
+
+#[test]
+fn unit_fleet_oracle_with_horizon_and_cutoff_knobs() {
+    // The engine owns horizon extension/truncation and the Figure-5
+    // cutoff; the unit-fleet path must agree with the plain simulator
+    // under those knobs too.
+    let (p, t) = synthetic_instance(0x517);
+    let factory = |p: &Problem| -> Box<dyn Policy> { Box::new(MmGpEi::new(p)) };
+    for cfg in [
+        SimConfig { n_devices: 2, horizon: Some(4.0), ..Default::default() },
+        SimConfig { n_devices: 2, horizon: Some(1e4), ..Default::default() },
+        SimConfig { n_devices: 2, stop_at_cutoff: Some(0.05), ..Default::default() },
+    ] {
+        let mut pol = MmGpEi::new(&p);
+        let plain = simulate(&p, &t, &mut pol, &cfg);
+        let elastic = simulate_fleet(&p, &t, &DeviceFleet::uniform(2), &factory, &cfg);
+        assert_eq!(sim_key(&plain), sim_key(&elastic.sim));
+        assert_eq!(plain.cumulative_regret.to_bits(), elastic.sim.cumulative_regret.to_bits());
+        assert_eq!(plain.horizon.to_bits(), elastic.sim.horizon.to_bits());
+        assert_eq!(plain.inst_regret, elastic.sim.inst_regret);
+    }
+}
+
+// ---------------------------------------------------------------------
+// 2. Cross-loop parity: mock-clock wall adapter vs virtual adapter.
+// ---------------------------------------------------------------------
+
+fn churn_trace() -> (Problem, mmgpei::problem::Truth, mmgpei::problem::ChurnSchedule) {
+    churn_workload(
+        &ChurnConfig {
+            n_users: 6,
+            n_models: 4,
+            initial_users: 2,
+            arrival_gap: 2.0,
+            sojourn: (6.0, 14.0),
+            rejoin_prob: 0.5,
+            rejoin_gap: 3.0,
+            ..Default::default()
+        },
+        23,
+    )
+}
+
+/// Fold a churn run into a smoke report: one KPI per deterministic
+/// quantity, so two runs serialize identically iff they agree float for
+/// float.
+fn churn_report(
+    name: &str,
+    cumulative: f64,
+    per_user: &[f64],
+    join_latency_secs: &[Option<f64>],
+    n_rebuilds: usize,
+    n_decisions: usize,
+) -> String {
+    let mut r = RunReport::new(name, 0, true);
+    r.push_kpi("cumulative_regret", cumulative, Direction::LowerIsBetter);
+    for (u, &x) in per_user.iter().enumerate() {
+        r.push_kpi(format!("per_user_regret/u{u}"), x, Direction::LowerIsBetter);
+    }
+    for (u, l) in join_latency_secs.iter().enumerate() {
+        if let Some(l) = l {
+            r.push_kpi(format!("join_latency/u{u}"), *l, Direction::LowerIsBetter);
+        }
+    }
+    r.push_kpi("rebuilds", n_rebuilds as f64, Direction::LowerIsBetter);
+    r.push_kpi("decisions", n_decisions as f64, Direction::LowerIsBetter);
+    r.to_json_string()
+}
+
+#[test]
+fn wall_adapter_on_mock_clock_matches_virtual_adapter_bitwise() {
+    let (p, t, s) = churn_trace();
+    let factory = |p: &Problem| -> Box<dyn Policy> { Box::new(MmGpEi::new(p)) };
+    let devices = 2usize;
+    let virtual_run: ChurnResult = simulate_churn(
+        &p,
+        &t,
+        &s,
+        &factory,
+        // No horizon: live sessions report what actually ran, so the
+        // virtual side must use the same accounting.
+        &SimConfig { n_devices: devices, warm_start_per_user: 2, horizon: None, stop_at_cutoff: None },
+    );
+    let wall_run: ChurnServeReport = serve_churn_deterministic(
+        &p,
+        &t,
+        &s,
+        &factory,
+        &ServeConfig { n_devices: devices, time_scale: 1.0, warm_start_per_user: 2, verbose: false },
+    );
+
+    // Schedules: same arms on the same devices at the same instants.
+    let v_key: Vec<(usize, usize, Duration, Duration)> = virtual_run
+        .observations
+        .iter()
+        .map(|o| {
+            (
+                o.arm,
+                o.device,
+                Duration::from_secs_f64(o.start.max(0.0)),
+                Duration::from_secs_f64(o.finish.max(0.0)),
+            )
+        })
+        .collect();
+    let w_key: Vec<(usize, usize, Duration, Duration)> =
+        wall_run.jobs.iter().map(|j| (j.arm, j.device, j.start, j.finish)).collect();
+    assert_eq!(v_key, w_key, "wall and virtual adapters must replay one schedule");
+
+    // Regret accounting: identical floats.
+    let bits = |xs: &[f64]| xs.iter().map(|x| x.to_bits()).collect::<Vec<_>>();
+    assert_eq!(bits(&virtual_run.per_user_regret), bits(&wall_run.per_user_regret));
+    assert_eq!(
+        virtual_run.cumulative_regret.to_bits(),
+        wall_run.per_user_regret.iter().sum::<f64>().to_bits()
+    );
+    assert_eq!(virtual_run.inst_regret, wall_run.inst_regret, "regret curves must be identical");
+
+    // Join latencies (Duration on the wall side — compare through the
+    // same conversion).
+    let v_lat: Vec<Option<Duration>> = virtual_run
+        .join_latency
+        .iter()
+        .map(|l| l.map(|x| Duration::from_secs_f64(x.max(0.0))))
+        .collect();
+    assert_eq!(v_lat, wall_run.join_latency);
+
+    assert_eq!(virtual_run.n_rebuilds, wall_run.n_rebuilds);
+    assert_eq!(virtual_run.n_decisions, wall_run.decision_latencies.len());
+
+    // Report bytes: folding both runs' deterministic quantities into the
+    // report schema must serialize byte-identically. Join latencies are
+    // compared through the same Duration conversion on both sides (the
+    // wall report type stores them nanosecond-quantized).
+    let w_lat_secs: Vec<Option<f64>> =
+        wall_run.join_latency.iter().map(|l| l.map(|d| d.as_secs_f64())).collect();
+    let v_lat_secs: Vec<Option<f64>> = virtual_run
+        .join_latency
+        .iter()
+        .map(|l| l.map(|x| Duration::from_secs_f64(x.max(0.0)).as_secs_f64()))
+        .collect();
+    assert_eq!(v_lat_secs, w_lat_secs);
+    let v_report = churn_report(
+        "cross-loop",
+        virtual_run.cumulative_regret,
+        &virtual_run.per_user_regret,
+        &v_lat_secs,
+        virtual_run.n_rebuilds,
+        virtual_run.n_decisions,
+    );
+    let w_report = churn_report(
+        "cross-loop",
+        wall_run.per_user_regret.iter().sum(),
+        &wall_run.per_user_regret,
+        &w_lat_secs,
+        wall_run.n_rebuilds,
+        wall_run.decision_latencies.len(),
+    );
+    assert_eq!(v_report, w_report, "cross-loop report bytes must be identical");
+}
+
+#[test]
+fn wall_adapter_rebuild_fallback_matches_virtual_adapter() {
+    // Same cross-loop parity through the *rebuild* path (baselines keep
+    // the default hooks).
+    let (p, t, s) = churn_trace();
+    let factory = |p: &Problem| -> Box<dyn Policy> { Box::new(GpEiRoundRobin::new(p)) };
+    let v = simulate_churn(&p, &t, &s, &factory, &SimConfig { n_devices: 2, ..Default::default() });
+    let w = serve_churn_deterministic(
+        &p,
+        &t,
+        &s,
+        &factory,
+        &ServeConfig { n_devices: 2, time_scale: 1.0, warm_start_per_user: 2, verbose: false },
+    );
+    assert!(v.n_rebuilds > 0, "round-robin churns through the rebuild path");
+    assert_eq!(v.n_rebuilds, w.n_rebuilds);
+    let v_arms: Vec<(usize, usize)> = v.observations.iter().map(|o| (o.arm, o.device)).collect();
+    let w_arms: Vec<(usize, usize)> = w.jobs.iter().map(|j| (j.arm, j.device)).collect();
+    assert_eq!(v_arms, w_arms);
+    let bits = |xs: &[f64]| xs.iter().map(|x| x.to_bits()).collect::<Vec<_>>();
+    assert_eq!(bits(&v.per_user_regret), bits(&w.per_user_regret));
+}
+
+// ---------------------------------------------------------------------
+// 3. Elastic-fleet semantics.
+// ---------------------------------------------------------------------
+
+#[test]
+fn speeds_obey_cost_over_speed_rule() {
+    let (p, t) = synthetic_instance(0x99);
+    let fleet = fleet_schedule(
+        &FleetConfig {
+            n_devices: 4,
+            initial_online: 3,
+            uptime: (10.0, 25.0),
+            outage: (3.0, 8.0),
+            horizon: 60.0,
+            ..Default::default()
+        },
+        7,
+    );
+    let factory = |p: &Problem| -> Box<dyn Policy> { Box::new(MmGpEi::new(p)) };
+    let r = simulate_fleet(&p, &t, &fleet, &factory, &SimConfig::default());
+    assert!(!r.sim.observations.is_empty());
+    for o in &r.sim.observations {
+        let expected = p.cost[o.arm] / fleet.speed(o.device);
+        assert!(
+            (o.finish - o.start - expected).abs() < 1e-9,
+            "arm {} on device {} took {} (expected {expected})",
+            o.arm,
+            o.device,
+            o.finish - o.start
+        );
+    }
+}
+
+#[test]
+fn preempted_arms_reveal_nothing_and_are_reserved() {
+    // Aggressive churn so preemptions actually happen, across seeds.
+    let cfg = FleetConfig {
+        n_devices: 3,
+        initial_online: 3,
+        uptime: (2.0, 6.0),
+        outage: (1.0, 3.0),
+        horizon: 80.0,
+        ..Default::default()
+    };
+    let mut any_preempt = false;
+    for seed in 0..6u64 {
+        let (p, t) = synthetic_instance(0x200 + seed);
+        let fleet = fleet_schedule(&cfg, seed);
+        let factory = |p: &Problem| -> Box<dyn Policy> { Box::new(MmGpEi::new(p)) };
+        let r = simulate_fleet(&p, &t, &fleet, &factory, &SimConfig::default());
+        any_preempt |= r.n_preemptions > 0;
+        // Revealed-on-completion: every observation is a real completion
+        // with the true z, and no arm completes twice.
+        let mut seen = vec![false; p.n_arms()];
+        for o in &r.sim.observations {
+            assert!(!seen[o.arm], "arm {} observed twice", o.arm);
+            seen[o.arm] = true;
+            assert_eq!(o.z.to_bits(), t.z[o.arm].to_bits());
+        }
+        // Requeue latencies are finite and non-negative.
+        for &l in &r.requeue_latency {
+            assert!(l.is_finite() && l >= 0.0);
+        }
+        assert!(r.requeue_latency.len() <= r.n_preemptions);
+        // Deterministic replay of the whole elastic run.
+        let r2 = simulate_fleet(&p, &t, &fleet, &factory, &SimConfig::default());
+        assert_eq!(sim_key(&r.sim), sim_key(&r2.sim));
+        assert_eq!(r.n_preemptions, r2.n_preemptions);
+    }
+    assert!(any_preempt, "the aggressive schedule must preempt at least once across seeds");
+}
+
+#[test]
+fn inplace_device_hooks_match_force_rebuild_oracle() {
+    let cfg = FleetConfig {
+        n_devices: 3,
+        initial_online: 2,
+        uptime: (4.0, 10.0),
+        outage: (2.0, 5.0),
+        horizon: 50.0,
+        ..Default::default()
+    };
+    for seed in 0..4u64 {
+        let (p, t) = synthetic_instance(0x300 + seed);
+        let fleet = fleet_schedule(&cfg, 100 + seed);
+        let inc = |p: &Problem| -> Box<dyn Policy> { Box::new(MmGpEi::new(p)) };
+        let oracle = |p: &Problem| -> Box<dyn Policy> { Box::new(ForceRebuild(MmGpEi::new(p))) };
+        let a = simulate_fleet(&p, &t, &fleet, &inc, &SimConfig::default());
+        let b = simulate_fleet(&p, &t, &fleet, &oracle, &SimConfig::default());
+        assert_eq!(a.n_rebuilds, 0, "in-place path never rebuilds");
+        if !fleet.events().is_empty() && !b.sim.observations.is_empty() {
+            // The oracle rebuilds on every device event that lands after
+            // the first completion.
+            assert!(
+                b.n_rebuilds > 0 || fleet.events().iter().all(|e| e.time == 0.0),
+                "oracle must exercise the rebuild path (seed {seed})"
+            );
+        }
+        assert_eq!(sim_key(&a.sim), sim_key(&b.sim), "seed {seed}: schedules diverged");
+        assert_eq!(a.sim.cumulative_regret.to_bits(), b.sim.cumulative_regret.to_bits());
+        assert_eq!(a.sim.inst_regret, b.sim.inst_regret);
+        assert_eq!(a.n_preemptions, b.n_preemptions);
+    }
+}
+
+#[test]
+fn handcrafted_outage_window_blocks_service() {
+    // One device, one outage window [2, 5): nothing can complete inside
+    // it, and the in-flight job at t = 2 is preempted and re-served.
+    let user_arms = vec![vec![0, 1, 2]];
+    let arm_users = Problem::compute_arm_users(3, &user_arms);
+    let p = Problem {
+        name: "outage".into(),
+        n_users: 1,
+        cost: vec![1.0, 1.5, 2.0],
+        user_arms,
+        arm_users,
+        prior_mean: vec![0.5; 3],
+        prior_cov: mmgpei::linalg::Mat::eye(3),
+    };
+    let t = mmgpei::problem::Truth { z: vec![0.4, 0.9, 0.6] };
+    let fleet = DeviceFleet::new(
+        vec![1.0],
+        vec![true],
+        vec![
+            FleetEvent { time: 2.0, device: 0, kind: FleetEventKind::Leave },
+            FleetEvent { time: 5.0, device: 0, kind: FleetEventKind::Join },
+        ],
+    );
+    let factory = |p: &Problem| -> Box<dyn Policy> { Box::new(MmGpEi::new(p)) };
+    let r = simulate_fleet(&p, &t, &fleet, &factory, &SimConfig::default());
+    // Warm start runs arms 0 (c=1, finishes at 1) then 1 (c=1.5, would
+    // finish at 2.5 → preempted at 2, re-dispatched at 5).
+    assert_eq!(r.n_preemptions, 1);
+    assert_eq!(r.requeue_latency.len(), 1);
+    assert!((r.requeue_latency[0] - 3.0).abs() < 1e-9, "requeued at the rejoin");
+    let mut arms: Vec<_> = r.sim.observations.iter().map(|o| o.arm).collect();
+    arms.sort_unstable();
+    assert_eq!(arms, vec![0, 1, 2], "every arm is eventually served");
+    for o in &r.sim.observations {
+        let inside_outage = o.finish > 2.0 + 1e-12 && o.finish < 5.0 - 1e-12;
+        assert!(!inside_outage, "arm {} completed during the outage", o.arm);
+        assert!(
+            !(o.start > 2.0 - 1e-12 && o.start < 5.0 - 1e-12),
+            "arm {} dispatched during the outage",
+            o.arm
+        );
+    }
+}
