@@ -13,6 +13,14 @@ pub use toml::{ParseError, TomlDoc, TomlValue};
 
 use crate::workload::{ChurnConfig, FleetConfig, SyntheticConfig};
 
+/// Convert a TOML integer into a non-negative count. `usize::try_from`
+/// rejects negatives — which `as usize` would wrap into enormous
+/// counts — and, on 32-bit hosts, values beyond the address space.
+fn count(v: &TomlValue, key: &str) -> Result<usize, String> {
+    let x = v.as_int()?;
+    usize::try_from(x).map_err(|_| format!("{key} must be a non-negative count, got {x}"))
+}
+
 /// Which posterior/EI backend drives MM-GP-EI.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum Backend {
@@ -134,13 +142,15 @@ impl ExperimentConfig {
             cfg.devices = v.as_usize_array()?;
         }
         if let Some(v) = exp.get("seeds") {
-            cfg.seeds = v.as_int()? as u64;
+            let x = v.as_int()?;
+            cfg.seeds =
+                u64::try_from(x).map_err(|_| format!("seeds must be ≥ 0, got {x}"))?;
         }
         if let Some(v) = exp.get("warm_start") {
-            cfg.warm_start = v.as_int()? as usize;
+            cfg.warm_start = count(v, "warm_start")?;
         }
         if let Some(v) = exp.get("holdout") {
-            cfg.holdout = v.as_int()? as usize;
+            cfg.holdout = count(v, "holdout")?;
         }
         if let Some(v) = exp.get("horizon") {
             cfg.horizon = Some(v.as_float()?);
@@ -153,10 +163,9 @@ impl ExperimentConfig {
         }
         if let Some(v) = exp.get("threads") {
             let t = v.as_int()?;
-            if t < 0 {
-                return Err(format!("threads must be ≥ 0 (0 = resolve from MMGPEI_THREADS), got {t}"));
-            }
-            cfg.threads = t as usize;
+            cfg.threads = usize::try_from(t).map_err(|_| {
+                format!("threads must be ≥ 0 (0 = resolve from MMGPEI_THREADS), got {t}")
+            })?;
         }
         // A `[churn]` section opts the experiment into the churn
         // scenario; its keys override the `ChurnConfig` defaults.
@@ -164,13 +173,13 @@ impl ExperimentConfig {
             cfg.churn = true;
             let ch = doc.section("churn");
             if let Some(v) = ch.get("n_users") {
-                cfg.churn_cfg.n_users = v.as_int()? as usize;
+                cfg.churn_cfg.n_users = count(v, "churn.n_users")?;
             }
             if let Some(v) = ch.get("n_models") {
-                cfg.churn_cfg.n_models = v.as_int()? as usize;
+                cfg.churn_cfg.n_models = count(v, "churn.n_models")?;
             }
             if let Some(v) = ch.get("initial_users") {
-                cfg.churn_cfg.initial_users = v.as_int()? as usize;
+                cfg.churn_cfg.initial_users = count(v, "churn.initial_users")?;
             }
             if let Some(v) = ch.get("arrival_gap") {
                 cfg.churn_cfg.arrival_gap = v.as_float()?;
@@ -209,20 +218,18 @@ impl ExperimentConfig {
             cfg.fleet = true;
             let fl = doc.section("fleet");
             if let Some(v) = fl.get("n_devices") {
-                let x = v.as_int()?;
+                let x = count(v, "fleet.n_devices")?;
                 if x < 1 {
-                    // Same guard class as `threads` (PR 3): a negative
-                    // count must error, not wrap through `as usize`.
                     return Err(format!("fleet.n_devices must be ≥ 1, got {x}"));
                 }
-                cfg.fleet_cfg.n_devices = x as usize;
+                cfg.fleet_cfg.n_devices = x;
             }
             if let Some(v) = fl.get("initial_online") {
-                let x = v.as_int()?;
+                let x = count(v, "fleet.initial_online")?;
                 if x < 1 {
                     return Err(format!("fleet.initial_online must be ≥ 1, got {x}"));
                 }
-                cfg.fleet_cfg.initial_online = x as usize;
+                cfg.fleet_cfg.initial_online = x;
             }
             if let Some(v) = fl.get("speed_lo") {
                 cfg.fleet_cfg.speed_range.0 = v.as_float()?;
@@ -251,10 +258,10 @@ impl ExperimentConfig {
         }
         let syn = doc.section("synthetic");
         if let Some(v) = syn.get("n_users") {
-            cfg.synthetic.n_users = v.as_int()? as usize;
+            cfg.synthetic.n_users = count(v, "synthetic.n_users")?;
         }
         if let Some(v) = syn.get("n_models") {
-            cfg.synthetic.n_models = v.as_int()? as usize;
+            cfg.synthetic.n_models = count(v, "synthetic.n_models")?;
         }
         if let Some(v) = syn.get("variance") {
             cfg.synthetic.variance = v.as_float()?;
@@ -499,6 +506,30 @@ n_models = 50
         // A negative count must error, not wrap through `as usize`.
         let err = ExperimentConfig::from_toml_str("[experiment]\nthreads = -1\n").unwrap_err();
         assert!(err.contains("threads"), "{err}");
+    }
+
+    #[test]
+    fn negative_counts_error_instead_of_wrapping() {
+        // The pallas-lint R4 class: every config-derived integer must go
+        // through `try_from`, so a negative TOML value produces a named
+        // error instead of wrapping into an enormous count (or, for
+        // `seeds`, a garbage RNG stream).
+        let cases = [
+            ("[experiment]\nseeds = -1\n", "seeds"),
+            ("[experiment]\nwarm_start = -2\n", "warm_start"),
+            ("[experiment]\nholdout = -3\n", "holdout"),
+            ("[churn]\nn_users = -4\n", "churn.n_users"),
+            ("[churn]\nn_models = -5\n", "churn.n_models"),
+            ("[churn]\ninitial_users = -6\n", "churn.initial_users"),
+            ("[fleet]\nn_devices = -7\n", "fleet.n_devices"),
+            ("[fleet]\ninitial_online = -8\n", "fleet.initial_online"),
+            ("[synthetic]\nn_users = -9\n", "synthetic.n_users"),
+            ("[synthetic]\nn_models = -10\n", "synthetic.n_models"),
+        ];
+        for (toml, key) in cases {
+            let err = ExperimentConfig::from_toml_str(toml).unwrap_err();
+            assert!(err.contains(key), "{toml:?} should name {key}: {err}");
+        }
     }
 
     #[test]

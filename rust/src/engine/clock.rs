@@ -169,6 +169,7 @@ impl Clock for VirtualClock {
                 Step::TimedDue(d)
             }
             (Some(_), None) => {
+                // pallas-lint: allow(R5) — the match arm is only reachable when `peek` returned Some.
                 let c = self.heap.pop().expect("peeked above");
                 self.live[c.device] = None;
                 self.n_live -= 1;
@@ -180,6 +181,7 @@ impl Clock for VirtualClock {
                     self.now = d;
                     Step::TimedDue(d)
                 } else {
+                    // pallas-lint: allow(R5) — the match arm is only reachable when `peek` returned Some.
                     let c = self.heap.pop().expect("peeked above");
                     self.live[c.device] = None;
                     self.n_live -= 1;
@@ -321,6 +323,7 @@ impl Clock for WallClock {
         self.n_live += 1;
         self.job_txs[device]
             .send(WallJob { arm, job, sleep: Duration::from_secs_f64(dur) })
+            // pallas-lint: allow(R5) — workers live until `Drop` closes the channel; a hung-up worker mid-run means a worker panicked, which this re-raises.
             .expect("worker hung up");
     }
 

@@ -186,6 +186,7 @@ impl<'a> PolicyHost<'a> {
         match &mut self.inner {
             HostInner::Borrowed(p) => &mut **p,
             HostInner::Factory { policy, .. } => {
+                // pallas-lint: allow(R5) — `ensure_policy` runs in every engine entry point before this accessor; a None here is an internal ordering bug worth aborting on.
                 policy.as_mut().expect("engine initializes the policy before use").as_mut()
             }
         }
@@ -195,6 +196,7 @@ impl<'a> PolicyHost<'a> {
         match &self.inner {
             HostInner::Borrowed(p) => &**p,
             HostInner::Factory { policy, .. } => {
+                // pallas-lint: allow(R5) — same invariant as `policy_mut`: the factory is instantiated before any read.
                 policy.as_deref().expect("engine initializes the policy before use")
             }
         }
@@ -652,6 +654,7 @@ impl<'a, 'c> Engine<'a, 'c> {
                     observed: &self.observed,
                     now,
                 };
+                // pallas-lint: allow(R3) — measures decision latency for the ns/decision KPI; the reading never feeds scheduling or virtual time.
                 let t0 = Instant::now();
                 let pick = self.host.policy_mut().select(&ctx);
                 let dt = t0.elapsed();
@@ -786,6 +789,7 @@ impl<'a, 'c> Engine<'a, 'c> {
         self.devices[c.device].job = None;
         let z = self.truth.z[c.arm];
         self.observed[c.arm] = true;
+        // pallas-lint: allow(R3) — measures observe latency for the decision-wall KPI; never read by scheduling or virtual time.
         let t0 = Instant::now();
         self.host.observe(self.view, c.arm, z);
         self.decision_wall += t0.elapsed();
@@ -961,7 +965,7 @@ fn enqueue_warm_arms(
     }
     let mut arms: Vec<ArmId> =
         problem.user_arms[user].iter().copied().filter(|&a| !selected[a]).collect();
-    arms.sort_by(|&a, &b| problem.cost[a].partial_cmp(&problem.cost[b]).unwrap().then(a.cmp(&b)));
+    arms.sort_by(|&a, &b| problem.cost[a].total_cmp(&problem.cost[b]).then(a.cmp(&b)));
     for &a in arms.iter().take(per_user) {
         warm.push_back(a);
     }

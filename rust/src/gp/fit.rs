@@ -68,7 +68,7 @@ pub fn nelder_mead(
         simplex.push((v, fv));
     }
     for _ in 0..max_iter {
-        simplex.sort_by(|a, b| a.1.partial_cmp(&b.1).unwrap());
+        simplex.sort_by(|a, b| a.1.total_cmp(&b.1));
         let spread = simplex[dim].1 - simplex[0].1;
         if spread.abs() < tol {
             break;
@@ -115,7 +115,7 @@ pub fn nelder_mead(
             }
         }
     }
-    simplex.sort_by(|a, b| a.1.partial_cmp(&b.1).unwrap());
+    simplex.sort_by(|a, b| a.1.total_cmp(&b.1));
     simplex[0].clone().into()
 }
 

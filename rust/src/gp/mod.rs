@@ -205,6 +205,7 @@ impl Gp {
             return;
         }
         self.enabled[x] = false;
+        // pallas-lint: allow(R5) — `enabled[x]` was true, so x is in `enabled_arms` (the two are updated together); divergence is state corruption worth aborting on.
         let pos = self.enabled_arms.binary_search(&x).expect("enabled list out of sync");
         self.enabled_arms.remove(pos);
         self.w_len[x] = self.chol.dim();
@@ -317,6 +318,7 @@ impl Gp {
         let (ltt, _jitter) = self
             .chol
             .append_jittered_min_pivot(&self.cross_buf, diag, DEFAULT_JITTER, MIN_PIVOT)
+            // pallas-lint: allow(R5) — `Problem::validate` guarantees a PSD prior and min-pivot jittering absorbs rank deficiency; failure here means the prior itself is broken. `try_observe` is the fallible twin for untrusted priors.
             .expect("kernel append failed: prior covariance irrecoverably non-PSD");
         // New last entry of β: solve row t of L·β = (z − μ_obs). The
         // L-row is borrowed straight out of the factor (disjoint fields —
@@ -383,6 +385,7 @@ impl Gp {
         let kt = Mat::from_fn(t, t, |i, j| {
             self.prior_cov[(self.obs_arms[i], self.obs_arms[j])]
         });
+        // pallas-lint: allow(R5) — slow-path oracle used by tests/diagnostics; K_t is a principal submatrix of the validated PSD prior, so jittered factorization cannot fail.
         let (l, _) = cholesky_jittered(&kt, DEFAULT_JITTER).expect("singular K_t");
         let resid: Vec<f64> = self
             .obs_arms

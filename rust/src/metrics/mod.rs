@@ -44,13 +44,22 @@ impl StepCurve {
 
     /// Append a new value from time `t` on.
     pub fn push(&mut self, t: f64, value: f64) {
-        let last = self.points.last().unwrap();
-        assert!(t >= last.0, "time must be non-decreasing");
-        if t == last.0 {
-            self.points.last_mut().unwrap().1 = value;
-        } else {
-            self.points.push((t, value));
+        match self.points.last_mut() {
+            Some(last) if t == last.0 => last.1 = value,
+            Some(last) => {
+                assert!(t > last.0, "time must be non-decreasing");
+                self.points.push((t, value));
+            }
+            None => self.points.push((t, value)),
         }
+    }
+
+    /// The final breakpoint. Every constructor leaves at least one point
+    /// (`new` seeds `t = 0`, `from_points` asserts non-emptiness,
+    /// `truncated` keeps ≥ 1), so the accessor is total in practice.
+    fn last_point(&self) -> (f64, f64) {
+        // pallas-lint: allow(R5) — the non-empty invariant is maintained by every constructor; an empty curve is unreachable without unsafe field access.
+        *self.points.last().expect("StepCurve is never empty")
     }
 
     /// Breakpoints view.
@@ -90,12 +99,12 @@ impl StepCurve {
 
     /// Final value.
     pub fn final_value(&self) -> f64 {
-        self.points.last().unwrap().1
+        self.last_point().1
     }
 
     /// Last breakpoint time.
     pub fn end_time(&self) -> f64 {
-        self.points.last().unwrap().0
+        self.last_point().0
     }
 
     /// Scale all values by `factor` (e.g. sum-gap → average-gap).

@@ -32,6 +32,7 @@ pub fn conditional_variance(k: &Mat, idx: &[usize], x: usize) -> f64 {
         return k[(x, x)];
     }
     let sub = crate::linalg::principal_submatrix(k, idx);
+    // pallas-lint: allow(R5) — callers pass PSD kernel matrices (every principal submatrix of a PSD matrix is PSD, and the jitter absorbs roundoff); a failure means the input was not a kernel matrix.
     let (l, _) = cholesky_jittered(&sub, 1e-12).expect("submatrix not PSD");
     let v: Vec<f64> = idx.iter().map(|&i| k[(x, i)]).collect();
     let w = solve_lower(&l, &v);
@@ -121,7 +122,7 @@ pub fn miu_total(k: &Mat, n_observed: usize, scorer: impl Fn(&Mat, usize) -> f64
 /// `MIU(T,K) ≤ Σ over the top |𝓛(t)| diagonal entries of sqrt(K_ii)`.
 pub fn miu_diag_bound(k: &Mat, n_observed: usize) -> f64 {
     let mut diags: Vec<f64> = (0..k.rows()).map(|i| k[(i, i)].max(0.0).sqrt()).collect();
-    diags.sort_by(|a, b| b.partial_cmp(a).unwrap());
+    diags.sort_by(|a, b| b.total_cmp(a));
     diags.iter().take(n_observed).sum()
 }
 

@@ -128,12 +128,14 @@ impl WorkerPool {
                         break;
                     }
                     let value = f(i);
+                    // pallas-lint: allow(R5) — a poisoned slot means a sibling worker panicked; propagating that panic is the contract.
                     *slots[i].lock().expect("result slot poisoned") = Some(value);
                 });
             }
         });
         slots
             .into_iter()
+            // pallas-lint: allow(R5) — the scope join guarantees every index was written; a poisoned slot re-raises a worker panic.
             .map(|m| m.into_inner().expect("result slot poisoned").expect("worker filled every slot"))
             .collect()
     }
@@ -163,12 +165,14 @@ impl WorkerPool {
                 let slot = &slots[c];
                 let f = &f;
                 s.spawn(move || {
+                    // pallas-lint: allow(R5) — each chunk slot is touched by exactly one worker; poison re-raises that worker's panic.
                     *slot.lock().expect("chunk slot poisoned") = Some(f(range));
                 });
             }
         });
         slots
             .into_iter()
+            // pallas-lint: allow(R5) — scope join guarantees every chunk ran; poison re-raises the worker panic.
             .map(|m| m.into_inner().expect("chunk slot poisoned").expect("chunk computed"))
             .collect()
     }

@@ -96,7 +96,7 @@ impl Problem {
         for arms in &self.user_arms {
             let mut sorted: Vec<ArmId> = arms.clone();
             sorted.sort_by(|&a, &b| {
-                self.cost[a].partial_cmp(&self.cost[b]).unwrap().then(a.cmp(&b))
+                self.cost[a].total_cmp(&self.cost[b]).then(a.cmp(&b))
             });
             for &a in sorted.iter().take(per_user) {
                 if !picked[a] {
@@ -138,7 +138,8 @@ impl Truth {
     pub fn best_arm(&self, problem: &Problem, u: UserId) -> ArmId {
         *problem.user_arms[u]
             .iter()
-            .max_by(|&&a, &&b| self.z[a].partial_cmp(&self.z[b]).unwrap())
+            .max_by(|&&a, &&b| self.z[a].total_cmp(&self.z[b]))
+            // pallas-lint: allow(R5) — `Problem::validate` rejects empty candidate sets, so the argmax always has at least one element.
             .expect("non-empty candidate set")
     }
 }

@@ -284,11 +284,11 @@ impl Oracle {
     pub fn new(problem: &Problem, truth: &Truth) -> Self {
         let mut optimal: Vec<ArmId> =
             (0..problem.n_users).map(|u| truth.best_arm(problem, u)).collect();
-        optimal.sort_by(|&a, &b| problem.cost[a].partial_cmp(&problem.cost[b]).unwrap());
+        optimal.sort_by(|&a, &b| problem.cost[a].total_cmp(&problem.cost[b]));
         optimal.dedup();
         let mut rest: Vec<ArmId> =
             (0..problem.n_arms()).filter(|a| !optimal.contains(a)).collect();
-        rest.sort_by(|&a, &b| problem.cost[a].partial_cmp(&problem.cost[b]).unwrap());
+        rest.sort_by(|&a, &b| problem.cost[a].total_cmp(&problem.cost[b]));
         let mut order = optimal;
         order.extend(rest);
         Oracle { order, cursor: 0 }

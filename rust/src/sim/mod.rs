@@ -282,7 +282,7 @@ mod tests {
                 .filter(|o| o.device == d)
                 .map(|o| (o.start, o.finish))
                 .collect();
-            spans.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap());
+            spans.sort_by(|a, b| a.0.total_cmp(&b.0));
             for w in spans.windows(2) {
                 assert!(w[0].1 <= w[1].0 + 1e-12, "device {d} overlaps: {w:?}");
             }
@@ -330,7 +330,7 @@ mod tests {
         // First four dispatches must be the warm-start arms {0,1,3,4}.
         let first4: Vec<_> = {
             let mut obs = r.observations.clone();
-            obs.sort_by(|a, b| a.start.partial_cmp(&b.start).unwrap());
+            obs.sort_by(|a, b| a.start.total_cmp(&b.start));
             obs.iter().take(4).map(|o| o.arm).collect()
         };
         let mut sorted = first4.clone();

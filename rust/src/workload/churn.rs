@@ -122,6 +122,7 @@ fn exp_gap(rng: &mut Rng, mean: f64) -> f64 {
 /// universe; the schedule decides who is being *served* when — drivers
 /// replay it through `sim::simulate_churn` / `coordinator::serve_churn`.
 pub fn churn_workload(config: &ChurnConfig, seed: u64) -> (Problem, Truth, ChurnSchedule) {
+    // pallas-lint: allow(R5) — generator precondition: configs are validated TOML or test literals; failing fast at workload build time is the contract.
     config.validate().expect("invalid churn config");
     let n = config.n_users;
     let l = config.n_models;
@@ -140,7 +141,9 @@ pub fn churn_workload(config: &ChurnConfig, seed: u64) -> (Problem, Truth, Churn
     // Truth ~ N(0, B ⊗ C) via the Kronecker factor: Z = L_B · G · L_Cᵀ.
     // (Row-major vec(Z) then has covariance B ⊗ C — one O(n²l + nl²)
     // pass instead of factorizing the nl × nl matrix.)
+    // pallas-lint: allow(R5) — both factors are PSD by construction (exchangeable similarity with ρ ∈ [0,1); Matérn gram) and jitter absorbs roundoff.
     let (lb, _) = cholesky_jittered(&user_sim, 1e-10).expect("user similarity must be PSD");
+    // pallas-lint: allow(R5) — same argument as the user-similarity factor above.
     let (lc, _) = cholesky_jittered(&model_cov, 1e-10).expect("Matérn gram must be PSD");
     let mut g = vec![0.0; n_arms];
     for slot in g.iter_mut() {

@@ -97,6 +97,7 @@ fn exp_gap(rng: &mut Rng, mean: f64) -> f64 {
 /// then each device's availability timeline in index order, so adding
 /// knobs later cannot silently reshuffle earlier draws.
 pub fn fleet_schedule(config: &FleetConfig, seed: u64) -> DeviceFleet {
+    // pallas-lint: allow(R5) — generator precondition: configs come from `ExperimentConfig::validate`d TOML or test literals; an invalid one is a caller bug surfaced at startup, not at serve time.
     config.validate().expect("invalid fleet config");
     let n = config.n_devices;
     let mut rng = Rng::new(seed);

@@ -185,12 +185,12 @@ mod tests {
             .map(|m| (0..d.n_users()).map(|u| d.accuracy[(u, m)]).sum::<f64>() / 22.0)
             .collect();
         let best_model = (0..n_models)
-            .max_by(|&a, &b| avg_acc[a].partial_cmp(&avg_acc[b]).unwrap())
+            .max_by(|&a, &b| avg_acc[a].total_cmp(&avg_acc[b]))
             .unwrap();
         let mut top2_hits = 0;
         for u in 0..d.n_users() {
             let mut order: Vec<usize> = (0..n_models).collect();
-            order.sort_by(|&a, &b| d.accuracy[(u, b)].partial_cmp(&d.accuracy[(u, a)]).unwrap());
+            order.sort_by(|&a, &b| d.accuracy[(u, b)].total_cmp(&d.accuracy[(u, a)]));
             if order[..2].contains(&best_model) {
                 top2_hits += 1;
             }

@@ -1,0 +1,125 @@
+//! Regression tests for the `partial_cmp → total_cmp` sweep (pallas-lint
+//! rule R1). Two claims are pinned:
+//!
+//! 1. On the finite inputs every shipped workload produces, `total_cmp`
+//!    sorts in exactly the order the old `partial_cmp().unwrap()` code
+//!    did — the sweep is behavior-preserving where the old code worked.
+//! 2. Where the old code *panicked* (NaN reaching a comparator), the
+//!    public entry points now complete and return something sane.
+//!
+//! This file lives under `rust/tests/`, outside the lint's sweep scope
+//! (`rust/src`), so it may use `partial_cmp` as the reference comparator.
+
+use mmgpei::gp::nelder_mead;
+use mmgpei::linalg::Mat;
+use mmgpei::miu::miu_diag_bound;
+use mmgpei::problem::{Problem, Truth};
+use mmgpei::testutil::check;
+
+/// A problem with explicit costs and a shared arm; `validate()` is NOT
+/// called so NaN costs can be injected to exercise the no-panic paths.
+fn raw_problem(cost: Vec<f64>) -> Problem {
+    let n_arms = cost.len();
+    let user_arms = vec![(0..n_arms).collect::<Vec<_>>()];
+    let arm_users = Problem::compute_arm_users(n_arms, &user_arms);
+    Problem {
+        name: "float-order".into(),
+        n_users: 1,
+        cost,
+        user_arms,
+        arm_users,
+        prior_mean: vec![0.0; n_arms],
+        prior_cov: Mat::from_fn(n_arms, n_arms, |i, j| if i == j { 1.0 } else { 0.0 }),
+    }
+}
+
+#[test]
+fn total_cmp_sort_matches_partial_cmp_on_finite_inputs() {
+    // Mixed-sign zeros are excluded: partial_cmp calls them Equal (stable
+    // sort keeps input order) while total_cmp orders -0.0 < +0.0. No
+    // shipped cost/score path produces -0.0, so parity on nonzero finite
+    // values is the invariant that matters.
+    check("total_cmp order parity", |rng| {
+        let xs: Vec<f64> = (0..40)
+            .map(|_| {
+                let magnitude = rng.uniform_in(1e-6, 1e6);
+                if rng.below(2) == 0 { magnitude } else { -magnitude }
+            })
+            .collect();
+        let mut by_total = xs.clone();
+        by_total.sort_by(|a, b| a.total_cmp(b));
+        let mut by_partial = xs;
+        by_partial.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        assert_eq!(by_total, by_partial);
+    });
+}
+
+#[test]
+fn total_cmp_max_matches_partial_cmp_on_finite_inputs() {
+    check("total_cmp max parity", |rng| {
+        let xs: Vec<f64> = (0..17).map(|_| rng.uniform_in(-50.0, 50.0)).collect();
+        let max_total = xs.iter().copied().max_by(|a, b| a.total_cmp(b));
+        let max_partial = xs.iter().copied().max_by(|a, b| a.partial_cmp(b).unwrap());
+        assert_eq!(max_total, max_partial);
+    });
+}
+
+#[test]
+fn warm_start_survives_nan_cost() {
+    // Old code: sort_by(partial_cmp().unwrap()) aborted the service on a
+    // NaN cost. Now the NaN arm totally orders after every finite cost,
+    // so it is simply never warm-started.
+    let p = raw_problem(vec![3.0, f64::NAN, 1.0, 2.0]);
+    let picked = p.warm_start_arms(2);
+    assert_eq!(picked, vec![2, 3], "cheapest two finite arms, NaN last");
+}
+
+#[test]
+fn best_arm_survives_nan_performance() {
+    let p = raw_problem(vec![1.0, 1.0, 1.0]);
+    let t = Truth { z: vec![0.3, f64::NAN, 0.9] };
+    // No panic; the returned arm is a valid index. (Positive NaN sorts
+    // greatest under the IEEE total order, so it wins the argmax — the
+    // caller sees a deterministic answer instead of an abort.)
+    let best = t.best_arm(&p, 0);
+    assert!(best < 3);
+}
+
+#[test]
+fn miu_diag_bound_survives_nan_diagonal() {
+    let k = Mat::from_fn(3, 3, |i, j| {
+        if i == 1 && j == 1 {
+            f64::NAN
+        } else if i == j {
+            1.0
+        } else {
+            0.0
+        }
+    });
+    // `max(0.0)` clamps the NaN variance to 0 before the sort; the bound
+    // stays finite and the sort cannot panic.
+    let bound = miu_diag_bound(&k, 3);
+    assert!(bound.is_finite());
+    assert!((bound - 2.0).abs() < 1e-12);
+}
+
+#[test]
+fn nelder_mead_survives_nan_objective() {
+    // Old code panicked ordering the simplex the first time the objective
+    // returned NaN (e.g. a Cholesky failure inside the LML). Now the
+    // optimizer terminates and reports the NaN rather than aborting.
+    let (x, fx) = nelder_mead(|_| f64::NAN, &[0.5], 0.1, 1e-9, 25);
+    assert_eq!(x.len(), 1);
+    assert!(fx.is_nan());
+}
+
+#[test]
+fn nelder_mead_survives_partially_nan_objective() {
+    // NaN on half the domain: the simplex must still converge toward the
+    // finite half. x ≥ 0 → (x-1)²; x < 0 → NaN (positive NaN sorts worst
+    // under total order, so NaN vertices are discarded first).
+    let f = |v: &[f64]| if v[0] >= 0.0 { (v[0] - 1.0).powi(2) } else { f64::NAN };
+    let (x, fx) = nelder_mead(f, &[0.2], 0.3, 1e-10, 200);
+    assert!(fx.is_finite());
+    assert!((x[0] - 1.0).abs() < 1e-3, "argmin {x:?}, min {fx}");
+}

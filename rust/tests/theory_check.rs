@@ -106,9 +106,9 @@ fn sigma_hat_sum_bounded_by_miu_plus_m() {
         let mut gp = mmgpei::gp::Gp::new(p.prior_mean.clone(), p.prior_cov.clone());
         // Events sorted by dispatch time; observations land at finish.
         let mut dispatches: Vec<_> = r.observations.clone();
-        dispatches.sort_by(|a, b| a.start.partial_cmp(&b.start).unwrap());
+        dispatches.sort_by(|a, b| a.start.total_cmp(&b.start));
         let mut completions: Vec<_> = r.observations.clone();
-        completions.sort_by(|a, b| a.finish.partial_cmp(&b.finish).unwrap());
+        completions.sort_by(|a, b| a.finish.total_cmp(&b.finish));
         let mut ci = 0;
         let mut sigma_hat_sum = 0.0;
         for d in &dispatches {

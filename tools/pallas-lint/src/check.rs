@@ -1,0 +1,208 @@
+//! Per-file analysis pipeline: lex → pragmas → `#[cfg(test)]` mask →
+//! rule scan → pragma suppression → sorted diagnostics.
+
+use crate::diag::{Diagnostic, RuleId};
+use crate::lexer::{self, Tok, TokKind};
+use crate::{pragma, rules};
+
+/// Lint one file's source. `path` is the file's (possibly virtual) path;
+/// it determines rule scoping, so fixture tests can exercise scoped rules
+/// by labeling snippets with in-scope paths.
+pub fn lint_source(path: &str, src: &str) -> Vec<Diagnostic> {
+    let norm = path.replace('\\', "/");
+    let toks = lexer::lex(src);
+    let (pragmas, pragma_errors) = pragma::collect(&toks);
+    let code: Vec<&Tok> =
+        toks.iter().filter(|t| !matches!(t.kind, TokKind::LineComment | TokKind::BlockComment)).collect();
+    let mask = test_mask(&code);
+    let mut out: Vec<Diagnostic> = pragma_errors
+        .into_iter()
+        .map(|(line, message)| Diagnostic { path: norm.clone(), line, rule: RuleId::Pragma, message })
+        .collect();
+    for (rule, line, message) in rules::scan(&norm, &code, &mask) {
+        let suppressed = pragmas.iter().any(|p| p.target_line == line && p.rules.contains(&rule));
+        if !suppressed {
+            out.push(Diagnostic { path: norm.clone(), line, rule, message });
+        }
+    }
+    out.sort_by(|a, b| (a.line, a.rule).cmp(&(b.line, b.rule)));
+    out
+}
+
+/// Mark every token belonging to a `#[cfg(test)]` item (attribute through
+/// the item's closing brace, or its `;` for block-less items). Only R5
+/// consults this mask.
+fn test_mask(code: &[&Tok]) -> Vec<bool> {
+    let mut mask = vec![false; code.len()];
+    let mut i = 0;
+    while i < code.len() {
+        if !is_cfg_test_attr(code, i) {
+            i += 1;
+            continue;
+        }
+        let start = i;
+        let mut j = attr_end(code, i);
+        // Skip further stacked attributes on the same item.
+        while j + 1 < code.len() && code[j].text == "#" && code[j + 1].text == "[" {
+            j = attr_end(code, j);
+        }
+        // Find the item body `{` (or a terminating `;`) at bracket depth 0.
+        let mut depth = 0i32;
+        let mut body = None;
+        while j < code.len() {
+            match code[j].text.as_str() {
+                "(" | "[" => depth += 1,
+                ")" | "]" => depth -= 1,
+                "{" if depth == 0 => {
+                    body = Some(j);
+                    break;
+                }
+                ";" if depth == 0 => break,
+                _ => {}
+            }
+            j += 1;
+        }
+        let end = match body {
+            Some(open) => brace_close(code, open),
+            None => j.min(code.len().saturating_sub(1)),
+        };
+        for m in &mut mask[start..=end] {
+            *m = true;
+        }
+        i = end + 1;
+    }
+    mask
+}
+
+/// True when `code[i..]` starts a `#[cfg(… test …)]` attribute.
+fn is_cfg_test_attr(code: &[&Tok], i: usize) -> bool {
+    let t = |k: usize| code.get(k).map_or("", |tok| tok.text.as_str());
+    if !(t(i) == "#" && t(i + 1) == "[" && t(i + 2) == "cfg" && t(i + 3) == "(") {
+        return false;
+    }
+    // Scan the attribute's argument list for a `test` token — covers
+    // `cfg(test)` and compounds like `cfg(all(test, feature = "x"))`.
+    let mut depth = 1i32;
+    let mut k = i + 4;
+    while k < code.len() && depth > 0 {
+        match t(k) {
+            "(" => depth += 1,
+            ")" => depth -= 1,
+            "test" => return true,
+            _ => {}
+        }
+        k += 1;
+    }
+    false
+}
+
+/// Index just past the `]` closing the attribute starting at `code[i]`
+/// (which must be `#`).
+fn attr_end(code: &[&Tok], i: usize) -> usize {
+    let t = |k: usize| code.get(k).map_or("", |tok| tok.text.as_str());
+    let mut depth = 0i32;
+    let mut k = i + 1;
+    while k < code.len() {
+        match t(k) {
+            "[" => depth += 1,
+            "]" => {
+                depth -= 1;
+                if depth == 0 {
+                    return k + 1;
+                }
+            }
+            _ => {}
+        }
+        k += 1;
+    }
+    code.len()
+}
+
+/// Index of the `}` matching the `{` at `open` (or the last token when
+/// unbalanced).
+fn brace_close(code: &[&Tok], open: usize) -> usize {
+    let mut depth = 1i32;
+    let mut k = open + 1;
+    while k < code.len() {
+        match code[k].text.as_str() {
+            "{" => depth += 1,
+            "}" => {
+                depth -= 1;
+                if depth == 0 {
+                    return k;
+                }
+            }
+            _ => {}
+        }
+        k += 1;
+    }
+    code.len().saturating_sub(1)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn cfg_test_module_is_exempt_from_r5_only() {
+        let src = "pub fn lib() -> f64 { v.unwrap() }\n\
+                   #[cfg(test)]\n\
+                   mod tests {\n\
+                       fn t(a: f64, b: f64) { v.unwrap(); a.partial_cmp(&b); }\n\
+                   }\n";
+        let diags = lint_source("rust/src/gp/mod.rs", src);
+        // One R5 from the library fn, one R1 from the test body — the
+        // test-module unwrap is exempt, the test-module sort is not.
+        let r5: Vec<_> = diags.iter().filter(|d| d.rule == RuleId::LibPanic).collect();
+        let r1: Vec<_> = diags.iter().filter(|d| d.rule == RuleId::FloatTotalCmp).collect();
+        assert_eq!(r5.len(), 1, "{diags:?}");
+        assert_eq!(r5[0].line, 1);
+        assert_eq!(r1.len(), 1, "{diags:?}");
+        assert_eq!(r1[0].line, 4);
+    }
+
+    #[test]
+    fn justified_pragma_suppresses_only_its_rule_and_line() {
+        let src = "pub fn f() {\n\
+                   // pallas-lint: allow(R5) — heap non-empty: guarded by the peek above\n\
+                   let c = heap.pop().unwrap();\n\
+                   let d = heap.pop().unwrap();\n\
+                   }\n";
+        let diags = lint_source("rust/src/engine/mod.rs", src);
+        assert_eq!(diags.len(), 1, "{diags:?}");
+        assert_eq!(diags[0].line, 4);
+    }
+
+    #[test]
+    fn unjustified_pragma_reports_and_does_not_suppress() {
+        let src = "// pallas-lint: allow(R5)\npub fn f() -> f64 { v.unwrap() }\n";
+        let diags = lint_source("rust/src/gp/mod.rs", src);
+        assert_eq!(diags.len(), 2, "{diags:?}");
+        assert!(diags.iter().any(|d| d.rule == RuleId::Pragma));
+        assert!(diags.iter().any(|d| d.rule == RuleId::LibPanic));
+    }
+
+    #[test]
+    fn stacked_attributes_still_mask_the_item() {
+        let src = "#[cfg(test)]\n#[allow(dead_code)]\nmod tests { fn f() { v.unwrap(); } }\n";
+        assert!(lint_source("rust/src/gp/mod.rs", src).is_empty());
+    }
+
+    #[test]
+    fn cfg_test_use_item_without_body() {
+        let src = "#[cfg(test)]\nuse crate::testutil;\npub fn f() -> f64 { v.unwrap() }\n";
+        let diags = lint_source("rust/src/gp/mod.rs", src);
+        assert_eq!(diags.len(), 1, "the fn after the cfg(test) use must still be linted: {diags:?}");
+        assert_eq!(diags[0].line, 3);
+    }
+
+    #[test]
+    fn diagnostics_sorted_by_line() {
+        let src = "pub fn f(a: f64, b: f64) {\n  x.unwrap();\n  a.partial_cmp(&b);\n}\n";
+        let diags = lint_source("rust/src/gp/mod.rs", src);
+        let lines: Vec<u32> = diags.iter().map(|d| d.line).collect();
+        let mut sorted = lines.clone();
+        sorted.sort_unstable();
+        assert_eq!(lines, sorted);
+    }
+}

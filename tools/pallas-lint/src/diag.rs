@@ -1,0 +1,123 @@
+//! Diagnostic types: rule identifiers and file:line findings.
+
+use std::fmt;
+
+/// Identifier of a lint rule. `R1`–`R5` are the repo-invariant rules;
+/// [`RuleId::Pragma`] reports a malformed or unjustified
+/// `// pallas-lint: allow(…)` pragma and is itself not suppressible.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord)]
+pub enum RuleId {
+    /// R1 — float comparisons must go through `f64::total_cmp`
+    /// (`partial_cmp` panics on NaN and is a platform-drift escape hatch).
+    FloatTotalCmp,
+    /// R2 — no `HashMap`/`HashSet` in `report`/`engine`/`sched` paths:
+    /// hash iteration order is nondeterministic and breaks byte-stable
+    /// reports.
+    HashOrder,
+    /// R3 — no `Instant::now`/`SystemTime`/`thread::sleep` outside
+    /// `engine/clock.rs` and the bench harness: wall time must never leak
+    /// into virtual-time code.
+    WallClock,
+    /// R4 — no narrowing `as` casts on config-derived integers (negative
+    /// TOML values silently wrap); use `try_from` and reject.
+    WrappingCast,
+    /// R5 — no `unwrap`/`expect`/`println!` in library code outside
+    /// `cli`/`bench`/tests.
+    LibPanic,
+    /// Malformed, unknown, or justification-free pragma.
+    Pragma,
+}
+
+/// All suppressible rules, in report order.
+pub const RULES: [RuleId; 5] = [
+    RuleId::FloatTotalCmp,
+    RuleId::HashOrder,
+    RuleId::WallClock,
+    RuleId::WrappingCast,
+    RuleId::LibPanic,
+];
+
+impl RuleId {
+    /// Short code used in diagnostics and pragmas (`R1` … `R5`).
+    pub fn code(self) -> &'static str {
+        match self {
+            RuleId::FloatTotalCmp => "R1",
+            RuleId::HashOrder => "R2",
+            RuleId::WallClock => "R3",
+            RuleId::WrappingCast => "R4",
+            RuleId::LibPanic => "R5",
+            RuleId::Pragma => "pragma",
+        }
+    }
+
+    /// Kebab-case rule name, accepted in pragmas as an alias for the code.
+    pub fn name(self) -> &'static str {
+        match self {
+            RuleId::FloatTotalCmp => "float-total-cmp",
+            RuleId::HashOrder => "hash-order",
+            RuleId::WallClock => "wall-clock",
+            RuleId::WrappingCast => "wrapping-cast",
+            RuleId::LibPanic => "lib-panic",
+            RuleId::Pragma => "pragma",
+        }
+    }
+
+    /// Parse a pragma rule spec — `R1`/`r1` or the kebab-case name.
+    pub fn parse(s: &str) -> Option<RuleId> {
+        let t = s.trim();
+        RULES.iter().copied().find(|r| t.eq_ignore_ascii_case(r.code()) || t == r.name())
+    }
+}
+
+/// One lint finding.
+#[derive(Clone, Debug)]
+pub struct Diagnostic {
+    /// File the finding is in, as passed on the command line
+    /// (separators normalized to `/`).
+    pub path: String,
+    /// 1-based source line.
+    pub line: u32,
+    /// Violated rule.
+    pub rule: RuleId,
+    /// Human-readable description carrying the sanctioned fix.
+    pub message: String,
+}
+
+impl fmt::Display for Diagnostic {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(
+            f,
+            "{}:{}: {} [{}] {}",
+            self.path,
+            self.line,
+            self.rule.code(),
+            self.rule.name(),
+            self.message
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_accepts_codes_and_names() {
+        assert_eq!(RuleId::parse("R3"), Some(RuleId::WallClock));
+        assert_eq!(RuleId::parse("r5"), Some(RuleId::LibPanic));
+        assert_eq!(RuleId::parse("float-total-cmp"), Some(RuleId::FloatTotalCmp));
+        assert_eq!(RuleId::parse("R9"), None);
+        assert_eq!(RuleId::parse("pragma"), None, "pragma findings are not suppressible");
+    }
+
+    #[test]
+    fn display_is_file_line_code() {
+        let d = Diagnostic {
+            path: "rust/src/gp/mod.rs".into(),
+            line: 42,
+            rule: RuleId::FloatTotalCmp,
+            message: "msg".into(),
+        };
+        assert_eq!(d.to_string(), "rust/src/gp/mod.rs:42: R1 [float-total-cmp] msg");
+    }
+}

@@ -1,0 +1,389 @@
+//! Hand-rolled lexer over the Rust token grammar — just enough structure
+//! for the rule engine: identifiers, punctuation, literals, and comments,
+//! with string/char/raw-string/lifetime disambiguation handled correctly
+//! so a `"partial_cmp"` inside a string literal can never trip a rule.
+//!
+//! The lexer is total: any byte sequence produces a token stream (stray
+//! characters become [`TokKind::Punct`], unterminated literals run to end
+//! of file). Linting must never panic on weird-but-compiling input.
+
+/// Kind of a lexed token.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum TokKind {
+    /// Identifier or keyword (raw identifiers are stored without `r#`).
+    Ident,
+    /// Lifetime or loop label (`'a`, `'static`), stored without the quote.
+    Lifetime,
+    /// String-like literal: `"…"`, `r"…"`, `r#"…"#`, `b"…"`, `br#"…"#`.
+    Str,
+    /// Character or byte literal: `'x'`, `'\n'`, `b'['`.
+    Char,
+    /// Numeric literal (integer or float, any base, with suffix).
+    Num,
+    /// A single punctuation character (`.`, `:`, `(`, `#`, …).
+    Punct,
+    /// `// …` comment; `text` is the body after the slashes (pragmas
+    /// live here).
+    LineComment,
+    /// `/* … */` comment, possibly nested.
+    BlockComment,
+}
+
+/// One lexed token with its 1-based source line.
+#[derive(Clone, Debug)]
+pub struct Tok {
+    /// Token kind.
+    pub kind: TokKind,
+    /// Token text: identifier name, the punctuation character, or the
+    /// line-comment body. Empty for literals and block comments — their
+    /// content never participates in a rule.
+    pub text: String,
+    /// 1-based line the token starts on.
+    pub line: u32,
+}
+
+/// Lex `src` into a token stream.
+pub fn lex(src: &str) -> Vec<Tok> {
+    let mut lx = Lexer { chars: src.chars().collect(), i: 0, line: 1, toks: Vec::new() };
+    lx.run();
+    lx.toks
+}
+
+fn ident_start(c: char) -> bool {
+    c.is_ascii_alphabetic() || c == '_'
+}
+
+fn ident_continue(c: char) -> bool {
+    c.is_ascii_alphanumeric() || c == '_'
+}
+
+struct Lexer {
+    chars: Vec<char>,
+    i: usize,
+    line: u32,
+    toks: Vec<Tok>,
+}
+
+impl Lexer {
+    fn peek(&self, k: usize) -> Option<char> {
+        self.chars.get(self.i + k).copied()
+    }
+
+    fn bump(&mut self) -> Option<char> {
+        let c = self.chars.get(self.i).copied();
+        if let Some(ch) = c {
+            self.i += 1;
+            if ch == '\n' {
+                self.line += 1;
+            }
+        }
+        c
+    }
+
+    fn push(&mut self, kind: TokKind, text: String, line: u32) {
+        self.toks.push(Tok { kind, text, line });
+    }
+
+    fn run(&mut self) {
+        while let Some(c) = self.peek(0) {
+            let line = self.line;
+            if c.is_whitespace() {
+                self.bump();
+            } else if c == '/' && self.peek(1) == Some('/') {
+                self.line_comment(line);
+            } else if c == '/' && self.peek(1) == Some('*') {
+                self.block_comment(line);
+            } else if c == '"' {
+                self.bump();
+                self.string_body(line);
+            } else if c == '\'' {
+                self.quote(line);
+            } else if c == 'r' && self.raw_string_ahead(0) {
+                self.bump();
+                self.raw_string(line);
+            } else if c == 'b' && self.peek(1) == Some('\'') {
+                self.bump();
+                self.bump();
+                self.char_body(line);
+            } else if c == 'b' && self.peek(1) == Some('"') {
+                self.bump();
+                self.bump();
+                self.string_body(line);
+            } else if c == 'b' && self.peek(1) == Some('r') && self.raw_string_ahead(1) {
+                self.bump();
+                self.bump();
+                self.raw_string(line);
+            } else if c == 'r' && self.peek(1) == Some('#') && self.peek(2).is_some_and(ident_start) {
+                // Raw identifier `r#type`: strip the sigil, keep the name.
+                self.bump();
+                self.bump();
+                self.ident(line);
+            } else if ident_start(c) {
+                self.ident(line);
+            } else if c.is_ascii_digit() {
+                self.number(line);
+            } else {
+                self.bump();
+                self.push(TokKind::Punct, c.to_string(), line);
+            }
+        }
+    }
+
+    fn line_comment(&mut self, line: u32) {
+        self.bump();
+        self.bump();
+        let mut text = String::new();
+        while let Some(ch) = self.peek(0) {
+            if ch == '\n' {
+                break;
+            }
+            text.push(ch);
+            self.bump();
+        }
+        self.push(TokKind::LineComment, text, line);
+    }
+
+    fn block_comment(&mut self, line: u32) {
+        self.bump();
+        self.bump();
+        let mut depth = 1usize;
+        while depth > 0 {
+            match self.bump() {
+                None => break,
+                Some('/') if self.peek(0) == Some('*') => {
+                    self.bump();
+                    depth += 1;
+                }
+                Some('*') if self.peek(0) == Some('/') => {
+                    self.bump();
+                    depth -= 1;
+                }
+                _ => {}
+            }
+        }
+        self.push(TokKind::BlockComment, String::new(), line);
+    }
+
+    /// Body of a `"…"` / `b"…"` literal, opening quote already consumed.
+    fn string_body(&mut self, line: u32) {
+        loop {
+            match self.bump() {
+                None | Some('"') => break,
+                Some('\\') => {
+                    self.bump();
+                }
+                _ => {}
+            }
+        }
+        self.push(TokKind::Str, String::new(), line);
+    }
+
+    /// True if an `r"…"` / `r#…#"…"` opener sits at offset `off` (which
+    /// must point at the `r`).
+    fn raw_string_ahead(&self, off: usize) -> bool {
+        let mut k = off + 1;
+        while self.peek(k) == Some('#') {
+            k += 1;
+        }
+        self.peek(k) == Some('"')
+    }
+
+    /// Raw string body; position is just past the `r` (and `b`).
+    fn raw_string(&mut self, line: u32) {
+        let mut hashes = 0usize;
+        while self.peek(0) == Some('#') {
+            hashes += 1;
+            self.bump();
+        }
+        self.bump(); // opening quote
+        loop {
+            match self.bump() {
+                None => break,
+                Some('"') => {
+                    let mut k = 0;
+                    while k < hashes && self.peek(k) == Some('#') {
+                        k += 1;
+                    }
+                    if k == hashes {
+                        for _ in 0..hashes {
+                            self.bump();
+                        }
+                        break;
+                    }
+                }
+                _ => {}
+            }
+        }
+        self.push(TokKind::Str, String::new(), line);
+    }
+
+    /// A bare `'`: char literal (`'x'`, `'\n'`) or lifetime (`'a`).
+    fn quote(&mut self, line: u32) {
+        self.bump();
+        match (self.peek(0), self.peek(1)) {
+            (Some('\\'), _) => self.char_escape_body(line),
+            (Some(c), Some('\'')) if c != '\'' => {
+                self.bump();
+                self.bump();
+                self.push(TokKind::Char, String::new(), line);
+            }
+            (Some(c), _) if ident_start(c) => {
+                let mut text = String::new();
+                while let Some(ch) = self.peek(0) {
+                    if !ident_continue(ch) {
+                        break;
+                    }
+                    text.push(ch);
+                    self.bump();
+                }
+                self.push(TokKind::Lifetime, text, line);
+            }
+            _ => self.push(TokKind::Punct, '\''.to_string(), line),
+        }
+    }
+
+    /// Body of a char/byte literal, opening quote already consumed.
+    fn char_body(&mut self, line: u32) {
+        if self.peek(0) == Some('\\') {
+            self.char_escape_body(line);
+            return;
+        }
+        self.bump();
+        if self.peek(0) == Some('\'') {
+            self.bump();
+        }
+        self.push(TokKind::Char, String::new(), line);
+    }
+
+    /// Escaped char literal body (`\n`, `\'`, `\x41`, `\u{1F600}`);
+    /// position is at the backslash.
+    fn char_escape_body(&mut self, line: u32) {
+        self.bump(); // backslash
+        if self.peek(0) == Some('u') {
+            self.bump();
+            if self.peek(0) == Some('{') {
+                while let Some(ch) = self.bump() {
+                    if ch == '}' {
+                        break;
+                    }
+                }
+            }
+        } else {
+            self.bump(); // the escaped character itself
+        }
+        // Consume through the closing quote (covers multi-char escapes
+        // like \x41); a newline means a malformed literal — stop there
+        // rather than swallowing the rest of the file.
+        while let Some(ch) = self.peek(0) {
+            if ch == '\'' {
+                self.bump();
+                break;
+            }
+            if ch == '\n' {
+                break;
+            }
+            self.bump();
+        }
+        self.push(TokKind::Char, String::new(), line);
+    }
+
+    fn ident(&mut self, line: u32) {
+        let mut text = String::new();
+        while let Some(ch) = self.peek(0) {
+            if !ident_continue(ch) {
+                break;
+            }
+            text.push(ch);
+            self.bump();
+        }
+        self.push(TokKind::Ident, text, line);
+    }
+
+    fn number(&mut self, line: u32) {
+        // `0x…`/`0b…`/`0o…` disable exponent-sign handling so `0x1e-5`
+        // lexes as a number minus a number.
+        let radix_prefix = self.peek(0) == Some('0') && matches!(self.peek(1), Some('x' | 'X' | 'b' | 'o'));
+        let mut prev = ' ';
+        while let Some(ch) = self.peek(0) {
+            let exp_sign = !radix_prefix && (ch == '+' || ch == '-') && matches!(prev, 'e' | 'E');
+            let fraction = ch == '.' && prev != '.' && self.peek(1).is_some_and(|d| d.is_ascii_digit());
+            if ch.is_ascii_alphanumeric() || ch == '_' || exp_sign || fraction {
+                prev = ch;
+                self.bump();
+            } else {
+                break;
+            }
+        }
+        self.push(TokKind::Num, String::new(), line);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn idents(src: &str) -> Vec<String> {
+        lex(src).into_iter().filter(|t| t.kind == TokKind::Ident).map(|t| t.text).collect()
+    }
+
+    #[test]
+    fn identifiers_in_strings_and_comments_are_invisible() {
+        let src = r##"
+            // partial_cmp in a comment
+            /* HashMap /* nested */ still comment */
+            let s = "partial_cmp";
+            let r = r#"Instant::now"#;
+            let b = b"SystemTime";
+            let real = total_cmp;
+        "##;
+        let ids = idents(src);
+        assert!(ids.contains(&"total_cmp".to_string()));
+        for bad in ["partial_cmp", "HashMap", "Instant", "SystemTime"] {
+            assert!(!ids.contains(&bad.to_string()), "{bad} leaked out of a literal/comment");
+        }
+    }
+
+    #[test]
+    fn char_literals_vs_lifetimes() {
+        let toks = lex("fn f<'a>(x: &'a str) { let c = 'x'; let q = '\\''; let b = b'['; }");
+        let lifetimes: Vec<_> = toks.iter().filter(|t| t.kind == TokKind::Lifetime).collect();
+        assert_eq!(lifetimes.len(), 2, "{toks:?}");
+        let chars = toks.iter().filter(|t| t.kind == TokKind::Char).count();
+        assert_eq!(chars, 3, "{toks:?}");
+    }
+
+    #[test]
+    fn line_numbers_survive_multiline_literals() {
+        let src = "let a = \"two\nlines\";\nlet marker = 1;";
+        let toks = lex(src);
+        let marker = toks.iter().find(|t| t.text == "marker").map(|t| t.line);
+        assert_eq!(marker, Some(3));
+    }
+
+    #[test]
+    fn raw_strings_with_hashes_terminate_correctly() {
+        let toks = lex(r###"let x = r#"quote " inside"#; let after = 1;"###);
+        assert!(toks.iter().any(|t| t.text == "after"));
+        assert_eq!(toks.iter().filter(|t| t.kind == TokKind::Str).count(), 1);
+    }
+
+    #[test]
+    fn numbers_do_not_swallow_method_calls() {
+        let ids = idents("a.0.total_cmp(&b.0); 1.5e-3; 0x1e; x.max(1.0)");
+        assert!(ids.contains(&"total_cmp".to_string()));
+        assert!(ids.contains(&"max".to_string()));
+    }
+
+    #[test]
+    fn raw_identifiers_keep_their_name() {
+        let ids = idents("let r#type = 1;");
+        assert!(ids.contains(&"type".to_string()));
+    }
+
+    #[test]
+    fn comment_text_is_captured_for_pragmas() {
+        let toks = lex("let x = 1; // pallas-lint: allow(R5) — reason\n");
+        let c = toks.iter().find(|t| t.kind == TokKind::LineComment);
+        assert!(c.is_some_and(|t| t.text.contains("pallas-lint: allow(R5)")));
+    }
+}

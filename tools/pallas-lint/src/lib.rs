@@ -1,0 +1,69 @@
+//! # pallas-lint — determinism & float-safety lint for the mmgpei tree
+//!
+//! The repo's value proposition — byte-identical `RunReport`s, bit-exact
+//! incremental-vs-rebuild oracles, thread-invariant `WorkerPool` merges —
+//! rests on invariants that PRs 1–5 repeatedly hand-fixed. This crate
+//! turns them into machine-checked policy:
+//!
+//! * **R1** `float-total-cmp` — no `partial_cmp` float comparisons;
+//!   `f64::total_cmp` is total (no NaN panic, no platform drift).
+//! * **R2** `hash-order` — no `HashMap`/`HashSet` in `report`/`engine`/
+//!   `sched` paths (nondeterministic iteration order).
+//! * **R3** `wall-clock` — no `Instant::now`/`SystemTime`/`thread::sleep`
+//!   outside `engine/clock.rs` and the bench harness.
+//! * **R4** `wrapping-cast` — no `as usize`/`as u64` narrowing on
+//!   config-derived integers (negative TOML values silently wrap).
+//! * **R5** `lib-panic` — no `unwrap`/`expect`/`println!` in library code
+//!   outside `cli`/`bench`/tests.
+//!
+//! Legitimate sites carry `// pallas-lint: allow(<rule>) — <justification>`
+//! pragmas; the justification is mandatory and its absence is itself a
+//! finding. Zero dependencies: the lexer is hand-rolled over the Rust
+//! token grammar (strings, raw strings, char-vs-lifetime, nested block
+//! comments handled correctly), no `syn`, no proc-macros.
+//!
+//! CLI: `cargo run -p pallas-lint -- rust/src [more paths…]` — exit 0
+//! when clean, 1 with `file:line` diagnostics otherwise.
+
+#![warn(missing_docs)]
+
+mod check;
+mod lexer;
+mod pragma;
+mod rules;
+mod walk;
+
+pub mod diag;
+
+pub use check::lint_source;
+pub use diag::{Diagnostic, RuleId};
+
+use std::fmt;
+use std::path::PathBuf;
+
+/// I/O or usage error surfaced to the CLI (exit code 2, distinct from
+/// exit 1 = findings).
+#[derive(Debug)]
+pub struct LintError(pub String);
+
+impl fmt::Display for LintError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.0)
+    }
+}
+
+impl std::error::Error for LintError {}
+
+/// Lint every `.rs` file under the given paths (files or directories),
+/// returning all findings in deterministic (path, line, rule) order.
+pub fn lint_paths(paths: &[PathBuf]) -> Result<Vec<Diagnostic>, LintError> {
+    let mut out = Vec::new();
+    for root in paths {
+        for file in walk::rust_files(root)? {
+            let src = std::fs::read_to_string(&file)
+                .map_err(|e| LintError(format!("reading {}: {e}", file.display())))?;
+            out.extend(check::lint_source(&file.display().to_string(), &src));
+        }
+    }
+    Ok(out)
+}

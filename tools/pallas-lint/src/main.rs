@@ -1,0 +1,43 @@
+//! CLI entry point: `pallas-lint <path> [<path>…]`.
+//!
+//! Exit codes: 0 clean, 1 findings (one `file:line: <rule> …` per line),
+//! 2 usage or I/O error.
+
+use std::path::PathBuf;
+use std::process::ExitCode;
+
+const USAGE: &str = "usage: pallas-lint <path> [<path>…]\n\n\
+Lints .rs files (recursively for directories) against the repo's\n\
+determinism & float-safety rules R1–R5. See README.md §Correctness\n\
+tooling for the rule list and the `// pallas-lint: allow(<rule>) — <why>`\n\
+pragma syntax.";
+
+fn main() -> ExitCode {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    if args.iter().any(|a| a == "--help" || a == "-h") {
+        println!("{USAGE}");
+        return ExitCode::SUCCESS;
+    }
+    if args.is_empty() {
+        eprintln!("{USAGE}");
+        return ExitCode::from(2);
+    }
+    let paths: Vec<PathBuf> = args.iter().map(PathBuf::from).collect();
+    match pallas_lint::lint_paths(&paths) {
+        Err(e) => {
+            eprintln!("pallas-lint: {e}");
+            ExitCode::from(2)
+        }
+        Ok(diags) if diags.is_empty() => {
+            println!("pallas-lint: clean");
+            ExitCode::SUCCESS
+        }
+        Ok(diags) => {
+            for d in &diags {
+                println!("{d}");
+            }
+            println!("pallas-lint: {} finding(s)", diags.len());
+            ExitCode::FAILURE
+        }
+    }
+}

@@ -1,0 +1,134 @@
+//! `// pallas-lint: allow(<rule>, …) — <justification>` pragma parsing.
+//!
+//! A pragma suppresses the listed rules on its *target line*: the line
+//! the comment trails, or — when the comment stands alone on its line —
+//! the next line holding any code token. The justification is mandatory:
+//! a pragma without one suppresses nothing and is itself reported as a
+//! [`RuleId::Pragma`] finding, so every `allow` in the tree documents
+//! *why* the invariant holds at that site.
+
+use crate::diag::RuleId;
+use crate::lexer::{Tok, TokKind};
+
+/// One parsed, well-formed pragma.
+#[derive(Clone, Debug)]
+pub struct Pragma {
+    /// Rules this pragma suppresses.
+    pub rules: Vec<RuleId>,
+    /// Line whose findings are suppressed.
+    pub target_line: u32,
+}
+
+/// Scan a token stream for pragmas. Returns the well-formed pragmas and
+/// `(line, message)` errors for malformed ones.
+pub fn collect(toks: &[Tok]) -> (Vec<Pragma>, Vec<(u32, String)>) {
+    let mut pragmas = Vec::new();
+    let mut errors = Vec::new();
+    for (i, tok) in toks.iter().enumerate() {
+        if tok.kind != TokKind::LineComment {
+            continue;
+        }
+        let body = tok.text.trim_start_matches('/'); // doc comments: `/// pallas-lint: …`
+        let Some(rest) = body.trim_start().strip_prefix("pallas-lint:") else {
+            continue;
+        };
+        match parse_allow(rest.trim_start()) {
+            Ok(rules) => {
+                let target_line = target_line(toks, i, tok.line);
+                pragmas.push(Pragma { rules, target_line });
+            }
+            Err(msg) => errors.push((tok.line, msg)),
+        }
+    }
+    (pragmas, errors)
+}
+
+/// Parse `allow(R1, R5) — justification` (separator `—`/`-`/`:` optional,
+/// justification not).
+fn parse_allow(rest: &str) -> Result<Vec<RuleId>, String> {
+    let Some(args) = rest.strip_prefix("allow(") else {
+        return Err("unknown pallas-lint directive; expected `allow(<rule>, …) — <justification>`".into());
+    };
+    let Some(close) = args.find(')') else {
+        return Err("unclosed `allow(` in pallas-lint pragma".into());
+    };
+    let mut rules = Vec::new();
+    for part in args[..close].split(',') {
+        match RuleId::parse(part) {
+            Some(r) => rules.push(r),
+            None => return Err(format!("unknown rule `{}` in pallas-lint pragma", part.trim())),
+        }
+    }
+    if rules.is_empty() {
+        return Err("empty rule list in pallas-lint pragma".into());
+    }
+    let just = args[close + 1..]
+        .trim()
+        .trim_start_matches(|c: char| c == '—' || c == '–' || c == '-' || c == ':')
+        .trim();
+    if just.is_empty() {
+        return Err("pallas-lint allow pragma must carry a written justification after the rule list".into());
+    }
+    Ok(rules)
+}
+
+/// The line a pragma applies to: its own line when code precedes the
+/// comment there, else the next line bearing a code token.
+fn target_line(toks: &[Tok], comment_idx: usize, comment_line: u32) -> u32 {
+    let is_code = |t: &Tok| !matches!(t.kind, TokKind::LineComment | TokKind::BlockComment);
+    let trailing = toks[..comment_idx].iter().any(|t| t.line == comment_line && is_code(t));
+    if trailing {
+        return comment_line;
+    }
+    toks[comment_idx + 1..]
+        .iter()
+        .find(|t| is_code(t) && t.line > comment_line)
+        .map_or(comment_line, |t| t.line)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::lexer::lex;
+
+    #[test]
+    fn standalone_pragma_targets_next_code_line() {
+        let src = "fn f() {\n    // pallas-lint: allow(R5) — invariant: guarded above\n\n    g();\n}\n";
+        let (pragmas, errors) = collect(&lex(src));
+        assert!(errors.is_empty(), "{errors:?}");
+        assert_eq!(pragmas.len(), 1);
+        assert_eq!(pragmas[0].target_line, 4);
+        assert_eq!(pragmas[0].rules, vec![RuleId::LibPanic]);
+    }
+
+    #[test]
+    fn trailing_pragma_targets_its_own_line() {
+        let src = "let x = v.last(); // pallas-lint: allow(R5) — non-empty by construction\n";
+        let (pragmas, errors) = collect(&lex(src));
+        assert!(errors.is_empty());
+        assert_eq!(pragmas[0].target_line, 1);
+    }
+
+    #[test]
+    fn missing_justification_is_an_error() {
+        let (pragmas, errors) = collect(&lex("// pallas-lint: allow(R1)\nlet x = 1;\n"));
+        assert!(pragmas.is_empty());
+        assert_eq!(errors.len(), 1);
+        assert!(errors[0].1.contains("justification"), "{errors:?}");
+    }
+
+    #[test]
+    fn unknown_rule_is_an_error() {
+        let (pragmas, errors) = collect(&lex("// pallas-lint: allow(R7) — because\nlet x = 1;\n"));
+        assert!(pragmas.is_empty());
+        assert!(errors[0].1.contains("unknown rule"));
+    }
+
+    #[test]
+    fn multi_rule_pragma_and_name_aliases() {
+        let src = "// pallas-lint: allow(R3, lib-panic) — measurement plumbing only\nlet t = now();\n";
+        let (pragmas, errors) = collect(&lex(src));
+        assert!(errors.is_empty());
+        assert_eq!(pragmas[0].rules, vec![RuleId::WallClock, RuleId::LibPanic]);
+    }
+}

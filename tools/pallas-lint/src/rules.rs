@@ -1,0 +1,240 @@
+//! The R1–R5 rule matchers over a code-token stream.
+//!
+//! Every rule is a token-sequence pattern plus a *path scope* — the
+//! directories where the invariant is enforced or exempted. Scopes match
+//! normalized (`/`-separated) path substrings, so the lint behaves the
+//! same whether invoked on `rust/src` or an absolute path.
+
+use crate::diag::RuleId;
+use crate::lexer::{Tok, TokKind};
+
+/// Integer target types of a narrowing/wrapping `as` cast (R4).
+const INT_TYPES: [&str; 12] =
+    ["usize", "isize", "u8", "u16", "u32", "u64", "u128", "i8", "i16", "i32", "i64", "i128"];
+
+/// True when `path` has a directory component named `dir`.
+fn in_dir(path: &str, dir: &str) -> bool {
+    path.starts_with(&format!("{dir}/")) || path.contains(&format!("/{dir}/"))
+}
+
+/// R1 applies everywhere — test sorts drive determinism gates too.
+fn r1_applies(_path: &str) -> bool {
+    true
+}
+
+/// R2: hash-order iteration matters where bytes are gated — reports, the
+/// scheduling engine, and the policies.
+fn r2_applies(path: &str) -> bool {
+    in_dir(path, "report") || in_dir(path, "engine") || in_dir(path, "sched")
+}
+
+/// R3: wall-clock reads are legal only inside the clock substrate and
+/// the bench harness.
+fn r3_applies(path: &str) -> bool {
+    !(path.ends_with("engine/clock.rs") || in_dir(path, "bench") || in_dir(path, "benches"))
+}
+
+/// R4: the wrapping-cast class lives where TOML integers are converted.
+fn r4_applies(path: &str) -> bool {
+    in_dir(path, "config")
+}
+
+/// R5: library code only — binaries, CLI, bench harness, test utilities,
+/// and test/ example trees may panic and print freely.
+fn r5_applies(path: &str) -> bool {
+    let exempt_dirs = ["cli", "bench", "benches", "tests", "examples", "testutil"];
+    !(exempt_dirs.iter().any(|d| in_dir(path, d)) || path.ends_with("/main.rs") || path == "main.rs")
+}
+
+/// Scan `code` (comment-free token stream) for rule violations.
+/// `in_test[i]` marks tokens inside `#[cfg(test)]` items, which only R5
+/// exempts — determinism rules (R1–R4) hold in unit tests too.
+pub fn scan(path: &str, code: &[&Tok], in_test: &[bool]) -> Vec<(RuleId, u32, String)> {
+    let t = |k: usize| code.get(k).map_or("", |tok| tok.text.as_str());
+    let kind = |k: usize| code.get(k).map(|tok| tok.kind);
+    let (r1, r2, r3, r4, r5) =
+        (r1_applies(path), r2_applies(path), r3_applies(path), r4_applies(path), r5_applies(path));
+    let mut out = Vec::new();
+    for (i, tok) in code.iter().enumerate() {
+        if tok.kind != TokKind::Ident {
+            continue;
+        }
+        let line = tok.line;
+        match tok.text.as_str() {
+            "partial_cmp" if r1 => {
+                // `fn partial_cmp` is the `PartialOrd` impl itself, not a call.
+                if !(i > 0 && t(i - 1) == "fn") {
+                    out.push((
+                        RuleId::FloatTotalCmp,
+                        line,
+                        "float `partial_cmp` panics on NaN and invites platform drift; use \
+                         `f64::total_cmp`"
+                            .into(),
+                    ));
+                }
+            }
+            "HashMap" | "HashSet" if r2 => {
+                out.push((
+                    RuleId::HashOrder,
+                    line,
+                    format!(
+                        "`{}` in a byte-stability path: hash iteration order is nondeterministic; \
+                         use `Vec`, `BTreeMap`, or an index map",
+                        tok.text
+                    ),
+                ));
+            }
+            "Instant" if r3 => {
+                if t(i + 1) == ":" && t(i + 2) == ":" && t(i + 3) == "now" {
+                    out.push((
+                        RuleId::WallClock,
+                        line,
+                        "`Instant::now` outside `engine/clock.rs`/bench leaks wall time into \
+                         virtual-time code; route through `engine::Clock`"
+                            .into(),
+                    ));
+                }
+            }
+            "SystemTime" if r3 => {
+                out.push((
+                    RuleId::WallClock,
+                    line,
+                    "`SystemTime` outside `engine/clock.rs`/bench; route time through \
+                     `engine::Clock`"
+                        .into(),
+                ));
+            }
+            "sleep" if r3 => {
+                if i >= 3 && t(i - 1) == ":" && t(i - 2) == ":" && t(i - 3) == "thread" {
+                    out.push((
+                        RuleId::WallClock,
+                        line,
+                        "`thread::sleep` outside `engine/clock.rs`/bench stalls virtual-time \
+                         code on the wall clock"
+                            .into(),
+                    ));
+                }
+            }
+            "as" if r4 => {
+                let target = t(i + 1);
+                if INT_TYPES.contains(&target) {
+                    out.push((
+                        RuleId::WrappingCast,
+                        line,
+                        format!(
+                            "`as {target}` on a config-derived integer silently wraps negatives; \
+                             use `{target}::try_from` and reject out-of-range values"
+                        ),
+                    ));
+                }
+            }
+            "unwrap" if r5 && !in_test[i] => {
+                if i > 0 && t(i - 1) == "." && t(i + 1) == "(" && t(i + 2) == ")" {
+                    out.push((
+                        RuleId::LibPanic,
+                        line,
+                        "`.unwrap()` in library code; return an error, or justify with \
+                         `// pallas-lint: allow(R5) — <why this cannot fail>`"
+                            .into(),
+                    ));
+                }
+            }
+            "expect" if r5 && !in_test[i] => {
+                if i > 0 && t(i - 1) == "." && t(i + 1) == "(" && kind(i + 2) == Some(TokKind::Str) {
+                    out.push((
+                        RuleId::LibPanic,
+                        line,
+                        "`.expect(\"…\")` in library code; return an error, or justify with \
+                         `// pallas-lint: allow(R5) — <why this cannot fail>`"
+                            .into(),
+                    ));
+                }
+            }
+            "println" if r5 && !in_test[i] => {
+                if t(i + 1) == "!" {
+                    out.push((
+                        RuleId::LibPanic,
+                        line,
+                        "`println!` in library code pollutes stdout (reports are piped); use the \
+                         CLI layer or `eprintln!` diagnostics"
+                            .into(),
+                    ));
+                }
+            }
+            _ => {}
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::lexer::lex;
+
+    fn scan_src(path: &str, src: &str) -> Vec<(RuleId, u32, String)> {
+        let toks = lex(src);
+        let code: Vec<&Tok> =
+            toks.iter().filter(|t| !matches!(t.kind, TokKind::LineComment | TokKind::BlockComment)).collect();
+        let mask = vec![false; code.len()];
+        scan(path, &code, &mask)
+    }
+
+    #[test]
+    fn partial_cmp_call_flagged_but_impl_exempt() {
+        let src = "impl PartialOrd for X {\n    fn partial_cmp(&self, o: &X) -> Option<Ordering> { Some(self.cmp(o)) }\n}\nfn bad(a: f64, b: f64) { a.partial_cmp(&b); }\n";
+        let hits = scan_src("rust/src/x.rs", src);
+        assert_eq!(hits.len(), 1, "{hits:?}");
+        assert_eq!(hits[0].1, 4);
+    }
+
+    #[test]
+    fn hash_collections_only_flagged_in_scoped_dirs() {
+        let src = "use std::collections::HashMap;\n";
+        assert_eq!(scan_src("rust/src/sched/mod.rs", src).len(), 1);
+        assert_eq!(scan_src("rust/src/workload/mod.rs", src).len(), 0);
+    }
+
+    #[test]
+    fn wall_clock_exempt_in_clock_and_bench() {
+        let src = "let t = Instant::now();\nstd::thread::sleep(d);\n";
+        assert_eq!(scan_src("rust/src/sim/mod.rs", src).len(), 2);
+        assert_eq!(scan_src("rust/src/engine/clock.rs", src).len(), 0);
+        assert_eq!(scan_src("rust/src/bench/mod.rs", src).len(), 0);
+    }
+
+    #[test]
+    fn instant_import_alone_is_fine() {
+        assert_eq!(scan_src("rust/src/engine/mod.rs", "use std::time::{Duration, Instant};\n").len(), 0);
+    }
+
+    #[test]
+    fn wrapping_casts_flagged_in_config_only() {
+        let src = "let n = x as usize;\nlet f = x as f64;\n";
+        let hits = scan_src("rust/src/config/mod.rs", src);
+        assert_eq!(hits.len(), 1, "float casts are not narrowing: {hits:?}");
+        assert_eq!(scan_src("rust/src/gp/mod.rs", src).len(), 0);
+    }
+
+    #[test]
+    fn expect_with_byte_literal_is_a_parser_method_not_option_expect() {
+        let src = "self.expect(b'[')?;\nv.expect(\"boom\");\n";
+        let hits = scan_src("rust/src/report/json.rs", src);
+        assert_eq!(hits.len(), 1, "{hits:?}");
+        assert_eq!(hits[0].1, 2);
+    }
+
+    #[test]
+    fn lib_panics_exempt_in_cli_bench_main() {
+        let src = "fn f() { v.unwrap(); println!(\"x\"); }\n";
+        assert_eq!(scan_src("rust/src/gp/mod.rs", src).len(), 2);
+        assert_eq!(scan_src("rust/src/cli/mod.rs", src).len(), 0);
+        assert_eq!(scan_src("rust/src/main.rs", src).len(), 0);
+        assert_eq!(scan_src("rust/benches/fig2.rs", src).len(), 0);
+    }
+
+    #[test]
+    fn unwrap_or_variants_are_not_unwrap() {
+        assert_eq!(scan_src("rust/src/gp/mod.rs", "v.unwrap_or(0.0); v.unwrap_or_default();\n").len(), 0);
+    }
+}

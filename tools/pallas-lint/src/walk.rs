@@ -1,0 +1,56 @@
+//! Deterministic `.rs` file discovery: recursive walk, sorted paths, so
+//! diagnostics come out in the same order on every machine.
+
+use crate::LintError;
+use std::path::{Path, PathBuf};
+
+/// Collect every `.rs` file under `root` (or `root` itself when it is a
+/// file), sorted by path. Directories named `target` are skipped.
+pub fn rust_files(root: &Path) -> Result<Vec<PathBuf>, LintError> {
+    if root.is_file() {
+        return Ok(vec![root.to_path_buf()]);
+    }
+    if !root.is_dir() {
+        return Err(LintError(format!("no such file or directory: {}", root.display())));
+    }
+    let mut out = Vec::new();
+    let mut stack = vec![root.to_path_buf()];
+    while let Some(dir) = stack.pop() {
+        let rd = std::fs::read_dir(&dir).map_err(|e| LintError(format!("reading {}: {e}", dir.display())))?;
+        for entry in rd {
+            let entry = entry.map_err(|e| LintError(format!("reading {}: {e}", dir.display())))?;
+            let p = entry.path();
+            if p.is_dir() {
+                if p.file_name().is_some_and(|n| n == "target") {
+                    continue;
+                }
+                stack.push(p);
+            } else if p.extension().is_some_and(|e| e == "rs") {
+                out.push(p);
+            }
+        }
+    }
+    out.sort();
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn missing_path_is_an_error() {
+        let err = rust_files(Path::new("definitely/not/a/path"));
+        assert!(err.is_err());
+    }
+
+    #[test]
+    fn own_sources_are_found_sorted() {
+        let src = Path::new(env!("CARGO_MANIFEST_DIR")).join("src");
+        let files = rust_files(&src).expect("walk own src");
+        assert!(files.len() >= 7, "{files:?}");
+        let mut sorted = files.clone();
+        sorted.sort();
+        assert_eq!(files, sorted);
+    }
+}

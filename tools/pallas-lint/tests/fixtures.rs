@@ -1,0 +1,100 @@
+//! Fixture corpus: one known-bad and one known-good snippet per rule,
+//! linted under virtual paths that put them in each rule's scope. The
+//! bad fixtures are what the CI gate must reject (exit 1); the good
+//! fixtures pin the sanctioned replacement idioms as lint-clean.
+
+use pallas_lint::{lint_source, RuleId};
+use std::fs;
+use std::path::Path;
+
+fn fixture(name: &str) -> String {
+    let p = Path::new(env!("CARGO_MANIFEST_DIR")).join("tests/fixtures").join(name);
+    fs::read_to_string(&p).unwrap_or_else(|e| panic!("reading fixture {}: {e}", p.display()))
+}
+
+/// Lint a fixture under a virtual path (scoping is path-driven).
+fn lint_fixture(name: &str, virtual_path: &str) -> Vec<pallas_lint::Diagnostic> {
+    lint_source(virtual_path, &fixture(name))
+}
+
+#[test]
+fn r1_bad_flags_partial_cmp_and_good_is_clean() {
+    let bad = lint_fixture("r1_bad.rs", "rust/src/workload/r1_bad.rs");
+    assert!(bad.iter().any(|d| d.rule == RuleId::FloatTotalCmp), "{bad:?}");
+    assert_eq!(bad.iter().filter(|d| d.rule == RuleId::FloatTotalCmp).count(), 2);
+    let good = lint_fixture("r1_good.rs", "rust/src/workload/r1_good.rs");
+    assert!(good.is_empty(), "{good:?}");
+}
+
+#[test]
+fn r2_bad_flags_hashmap_in_report_paths_and_good_is_clean() {
+    let bad = lint_fixture("r2_bad.rs", "rust/src/report/r2_bad.rs");
+    assert!(bad.iter().any(|d| d.rule == RuleId::HashOrder), "{bad:?}");
+    let good = lint_fixture("r2_good.rs", "rust/src/report/r2_good.rs");
+    assert!(good.is_empty(), "{good:?}");
+    // Outside the byte-stability paths the same code is not R2's business.
+    let elsewhere = lint_fixture("r2_bad.rs", "rust/src/workload/r2_bad.rs");
+    assert!(!elsewhere.iter().any(|d| d.rule == RuleId::HashOrder), "{elsewhere:?}");
+}
+
+#[test]
+fn r3_bad_flags_wall_clock_reads_and_good_is_clean() {
+    let bad = lint_fixture("r3_bad.rs", "rust/src/sim/r3_bad.rs");
+    let r3 = bad.iter().filter(|d| d.rule == RuleId::WallClock).count();
+    // `SystemTime` flags on any mention (import + call); `Instant` only on `::now`.
+    assert_eq!(r3, 4, "SystemTime import + Instant::now + sleep + SystemTime::now: {bad:?}");
+    let good = lint_fixture("r3_good.rs", "rust/src/sim/r3_good.rs");
+    assert!(good.is_empty(), "{good:?}");
+    // The clock substrate itself is the sanctioned home for these calls.
+    let in_clock = lint_fixture("r3_bad.rs", "rust/src/engine/clock.rs");
+    assert!(!in_clock.iter().any(|d| d.rule == RuleId::WallClock), "{in_clock:?}");
+}
+
+#[test]
+fn r4_bad_flags_wrapping_casts_and_good_is_clean() {
+    let bad = lint_fixture("r4_bad.rs", "rust/src/config/r4_bad.rs");
+    assert_eq!(bad.iter().filter(|d| d.rule == RuleId::WrappingCast).count(), 2, "{bad:?}");
+    let good = lint_fixture("r4_good.rs", "rust/src/config/r4_good.rs");
+    assert!(good.is_empty(), "{good:?}");
+}
+
+#[test]
+fn r5_bad_flags_lib_panics_and_good_is_clean() {
+    let bad = lint_fixture("r5_bad.rs", "rust/src/gp/r5_bad.rs");
+    assert_eq!(bad.iter().filter(|d| d.rule == RuleId::LibPanic).count(), 3, "{bad:?}");
+    let good = lint_fixture("r5_good.rs", "rust/src/gp/r5_good.rs");
+    assert!(good.is_empty(), "justified pragma + cfg(test) must lint clean: {good:?}");
+    // The same panicking code is fine in the CLI layer.
+    let in_cli = lint_fixture("r5_bad.rs", "rust/src/cli/r5_bad.rs");
+    assert!(in_cli.is_empty(), "{in_cli:?}");
+}
+
+#[test]
+fn unjustified_pragma_is_reported_and_suppresses_nothing() {
+    let diags = lint_fixture("pragma_bad.rs", "rust/src/gp/pragma_bad.rs");
+    assert!(diags.iter().any(|d| d.rule == RuleId::Pragma), "{diags:?}");
+    assert!(diags.iter().any(|d| d.rule == RuleId::LibPanic), "{diags:?}");
+}
+
+#[test]
+fn every_bad_fixture_produces_findings_exit_1_contract() {
+    // The CLI exits 1 iff findings are non-empty; pin that every bad
+    // fixture would fail the gate and every good one would pass it.
+    let cases = [
+        ("r1_bad.rs", "rust/src/workload/f.rs", true),
+        ("r1_good.rs", "rust/src/workload/f.rs", false),
+        ("r2_bad.rs", "rust/src/sched/f.rs", true),
+        ("r2_good.rs", "rust/src/sched/f.rs", false),
+        ("r3_bad.rs", "rust/src/gp/f.rs", true),
+        ("r3_good.rs", "rust/src/gp/f.rs", false),
+        ("r4_bad.rs", "rust/src/config/f.rs", true),
+        ("r4_good.rs", "rust/src/config/f.rs", false),
+        ("r5_bad.rs", "rust/src/engine/f.rs", true),
+        ("r5_good.rs", "rust/src/engine/f.rs", false),
+        ("pragma_bad.rs", "rust/src/engine/f.rs", true),
+    ];
+    for (name, path, dirty) in cases {
+        let diags = lint_fixture(name, path);
+        assert_eq!(!diags.is_empty(), dirty, "{name} under {path}: {diags:?}");
+    }
+}

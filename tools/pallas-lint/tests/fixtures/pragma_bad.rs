@@ -1,0 +1,6 @@
+// Pragma bad: an `allow` without a written justification suppresses
+// nothing and is itself a finding.
+pub fn head(v: &[f64]) -> f64 {
+    // pallas-lint: allow(R5)
+    *v.first().unwrap()
+}

@@ -1,0 +1,9 @@
+// R1 bad: float sort through `partial_cmp` — panics on NaN and leaves
+// the order to a platform-dependent escape hatch.
+pub fn sort_scores(xs: &mut [f64]) {
+    xs.sort_by(|a, b| a.partial_cmp(b).unwrap());
+}
+
+pub fn best(xs: &[f64]) -> Option<f64> {
+    xs.iter().copied().max_by(|a, b| a.partial_cmp(b).unwrap())
+}

@@ -1,0 +1,9 @@
+// R1 good: `total_cmp` gives a total order — no NaN panic, identical
+// bytes on every platform.
+pub fn sort_scores(xs: &mut [f64]) {
+    xs.sort_by(|a, b| a.total_cmp(b));
+}
+
+pub fn best(xs: &[f64]) -> Option<f64> {
+    xs.iter().copied().max_by(|a, b| a.total_cmp(b))
+}

@@ -1,0 +1,8 @@
+// R2 bad (under a `report`/`engine`/`sched` path): hash iteration order
+// is nondeterministic, so any serialization or scheduling decision that
+// walks it breaks byte-identical reports.
+use std::collections::HashMap;
+
+pub fn kpi_lines(kpis: &HashMap<String, f64>) -> Vec<String> {
+    kpis.iter().map(|(k, v)| format!("{k}={v}")).collect()
+}

@@ -1,0 +1,6 @@
+// R2 good: `BTreeMap` iterates in key order — deterministic bytes.
+use std::collections::BTreeMap;
+
+pub fn kpi_lines(kpis: &BTreeMap<String, f64>) -> Vec<String> {
+    kpis.iter().map(|(k, v)| format!("{k}={v}")).collect()
+}

@@ -1,0 +1,10 @@
+// R3 bad (outside `engine/clock.rs`/bench): wall-clock reads leak real
+// time into virtual-time code paths.
+use std::time::{Instant, SystemTime};
+
+pub fn stamp() -> f64 {
+    let t0 = Instant::now();
+    std::thread::sleep(std::time::Duration::from_millis(1));
+    let _epoch = SystemTime::now();
+    t0.elapsed().as_secs_f64()
+}

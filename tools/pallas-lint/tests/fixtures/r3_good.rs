@@ -1,0 +1,9 @@
+// R3 good: time flows in through the engine's `Clock` abstraction —
+// virtual-time runs stay deterministic, wall-time runs plug in `WallClock`.
+pub trait Clock {
+    fn now(&self) -> f64;
+}
+
+pub fn stamp(clock: &dyn Clock) -> f64 {
+    clock.now()
+}

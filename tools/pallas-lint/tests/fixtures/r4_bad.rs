@@ -1,0 +1,9 @@
+// R4 bad (under a `config` path): a negative TOML integer wraps through
+// `as usize` into an enormous count — the PR-3/PR-5 bug class.
+pub fn parse_threads(raw: i64) -> usize {
+    raw as usize
+}
+
+pub fn parse_seeds(raw: i64) -> u64 {
+    raw as u64
+}

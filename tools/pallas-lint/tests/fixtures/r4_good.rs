@@ -1,0 +1,8 @@
+// R4 good: `try_from` rejects negatives instead of wrapping.
+pub fn parse_threads(raw: i64) -> Result<usize, String> {
+    usize::try_from(raw).map_err(|_| format!("threads must be ≥ 0, got {raw}"))
+}
+
+pub fn parse_seeds(raw: i64) -> Result<u64, String> {
+    u64::try_from(raw).map_err(|_| format!("seeds must be ≥ 0, got {raw}"))
+}

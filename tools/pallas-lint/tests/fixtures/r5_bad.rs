@@ -1,0 +1,10 @@
+// R5 bad (library path): panicking accessors and stdout noise in code
+// the service depends on.
+pub fn head(v: &[f64]) -> f64 {
+    println!("inspecting {} values", v.len());
+    *v.first().unwrap()
+}
+
+pub fn head_or_die(v: &[f64]) -> f64 {
+    *v.first().expect("empty input")
+}

@@ -1,0 +1,22 @@
+// R5 good: errors propagate; the one deliberate panic site carries a
+// justified pragma; test modules may unwrap freely.
+pub fn head(v: &[f64]) -> Option<f64> {
+    v.first().copied()
+}
+
+pub fn head_checked(v: &[f64]) -> Result<f64, String> {
+    v.first().copied().ok_or_else(|| "empty input".to_string())
+}
+
+pub fn head_invariant(v: &[f64]) -> f64 {
+    // pallas-lint: allow(R5) — callers validate non-emptiness upstream (`Problem::validate` asserts it).
+    *v.first().unwrap()
+}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn unwrap_in_tests_is_fine() {
+        assert_eq!(super::head(&[1.0]).unwrap(), 1.0);
+    }
+}

@@ -1,0 +1,33 @@
+//! Self-test: the real tree lints clean. This is the same sweep the
+//! blocking CI job runs (`cargo run -p pallas-lint -- rust/src
+//! tools/pallas-lint/src`), expressed as a `cargo test` so the gate also
+//! holds in plain `cargo test -q` runs with no extra CI plumbing.
+
+use std::path::{Path, PathBuf};
+
+fn repo_path(rel: &str) -> PathBuf {
+    // CARGO_MANIFEST_DIR = <repo>/tools/pallas-lint
+    Path::new(env!("CARGO_MANIFEST_DIR")).join("../..").join(rel)
+}
+
+#[test]
+fn main_crate_sources_lint_clean() {
+    let root = repo_path("rust/src");
+    let diags = pallas_lint::lint_paths(&[root]).expect("walk rust/src");
+    assert!(
+        diags.is_empty(),
+        "rust/src must lint clean; fix or add a justified pragma:\n{}",
+        diags.iter().map(|d| d.to_string()).collect::<Vec<_>>().join("\n")
+    );
+}
+
+#[test]
+fn lint_sources_lint_themselves_clean() {
+    let root = repo_path("tools/pallas-lint/src");
+    let diags = pallas_lint::lint_paths(&[root]).expect("walk own src");
+    assert!(
+        diags.is_empty(),
+        "pallas-lint must dogfood its own rules:\n{}",
+        diags.iter().map(|d| d.to_string()).collect::<Vec<_>>().join("\n")
+    );
+}
