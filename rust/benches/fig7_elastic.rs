@@ -15,13 +15,22 @@
 //!   are cancelled by departing devices and how long the requeued
 //!   decisions wait;
 //! * **ns/decision** under fleet churn (full runs only);
-//! * two hard gates (every mode, non-zero exit on failure):
+//! * a **device-aware vs device-blind** KPI pair: the same classed fleet
+//!   with per-(arm, device-class) true costs, scheduled once by
+//!   `mdmt-device` (scores `EI/(c(x, class_d)/s_d)` for the asking
+//!   device) and once by plain `mdmt` (device-blind scores) —
+//!   `fleet/device_{aware,blind}@F*/cumulative_regret`;
+//! * three hard gates (every mode, non-zero exit on failure):
 //!   - **unit parity**: a unit-speed always-on fleet through the engine
 //!     replays the plain simulator **bit-identically** (the refactor's
 //!     acceptance criterion in executable form);
 //!   - **device-churn parity**: MM-GP-EI's in-place device hooks vs the
-//!     `ForceRebuild` from-scratch oracle, bit-identical schedules and
-//!     regret.
+//!     `ForceRebuild` from-scratch oracle — both device-blind and
+//!     device-aware (per-device score invalidation in the hooks) —
+//!     bit-identical schedules and regret;
+//!   - **device-aware degeneration**: on a uniform unit-speed fleet with
+//!     no cost model, `mdmt-device` replays `mdmt` bit for bit
+//!     (`EI/(c/1.0)` is bitwise `EI/c`).
 //!
 //! Run: `cargo bench --bench fig7_elastic`
 //! CI:  `cargo bench --bench fig7_elastic -- --smoke --json reports/BENCH_fig7_elastic.json`
@@ -29,11 +38,11 @@
 use mmgpei::bench::{BenchOpts, Table};
 use mmgpei::cli::{make_instance, run_fleet_experiment};
 use mmgpei::config::ExperimentConfig;
-use mmgpei::problem::{DeviceFleet, Problem, Truth};
+use mmgpei::problem::{CostModel, DeviceFleet, PerClassCost, Problem, Truth};
 use mmgpei::report::{Direction, RunReport, TimingEntry};
 use mmgpei::sched::{ForceRebuild, MmGpEi, Policy};
-use mmgpei::sim::{simulate, simulate_fleet, SimConfig, SimResult};
-use mmgpei::workload::{fleet_schedule, FleetConfig, SyntheticConfig};
+use mmgpei::sim::{simulate, simulate_fleet, simulate_fleet_with_cost_model, SimConfig, SimResult};
+use mmgpei::workload::{fleet_schedule, round_robin_classes, FleetConfig, SyntheticConfig};
 
 fn main() {
     let opts = BenchOpts::from_env_args();
@@ -120,7 +129,9 @@ fn main() {
 
     // ------------------------------------------------------------------
     // Gate 2 — device-churn parity: in-place device hooks vs the
-    // from-scratch rebuild oracle over the elastic fleet.
+    // from-scratch rebuild oracle over the elastic fleet, device-blind
+    // AND device-aware (the latter exercises the per-device score
+    // invalidation the hooks perform under `ScoreMode::DeviceRate`).
     // ------------------------------------------------------------------
     let mut churn_mismatches = 0usize;
     for (seed, (problem, truth, fleet)) in instances.iter().enumerate() {
@@ -139,6 +150,25 @@ fn main() {
             churn_mismatches += 1;
             eprintln!("device-churn parity FAIL: seed {seed} — in-place ≠ rebuild oracle");
         }
+        // Device-aware arm: same elastic fleet, two device classes with a
+        // per-class cost table; the in-place hooks must invalidate the
+        // per-device score cache exactly like a from-scratch rebuild.
+        let model = PerClassCost::from_problem(problem, vec![1.0, 1.75], vec![f64::INFINITY; 2]);
+        let classed = fleet.clone().with_classes(round_robin_classes(fleet.n_devices(), 2));
+        let inc_dev =
+            |p: &Problem| -> Box<dyn Policy> { Box::new(MmGpEi::with_cost_model(p, &model)) };
+        let oracle_dev = |p: &Problem| -> Box<dyn Policy> {
+            Box::new(ForceRebuild(MmGpEi::with_cost_model(p, &model)))
+        };
+        let some_model = Some(&model as &dyn CostModel);
+        let da = simulate_fleet_with_cost_model(problem, truth, &classed, &inc_dev, &sim_cfg, some_model);
+        let db =
+            simulate_fleet_with_cost_model(problem, truth, &classed, &oracle_dev, &sim_cfg, some_model);
+        assert_eq!(da.n_rebuilds, 0, "device-aware in-place path must never rebuild");
+        if da.n_preemptions != db.n_preemptions || !sim_runs_bit_identical(&da.sim, &db.sim) {
+            churn_mismatches += 1;
+            eprintln!("device-churn parity FAIL: seed {seed} — device-aware in-place ≠ rebuild oracle");
+        }
     }
     report.push_kpi(
         "parity/device_churn_inplace_vs_rebuild_mismatches",
@@ -146,6 +176,31 @@ fn main() {
         Direction::LowerIsBetter,
     );
     println!("device-churn parity: {churn_mismatches}/{seeds} diverging seeds (must be 0)");
+
+    // ------------------------------------------------------------------
+    // Gate 3 — device-aware degeneration: on a uniform unit-speed fleet
+    // with no cost model, `mdmt-device` must replay `mdmt` bit for bit
+    // (DeviceRate at s_d = 1.0 over one class is bitwise CostRate).
+    // ------------------------------------------------------------------
+    let mut degen_mismatches = 0usize;
+    for (seed, (problem, truth, _)) in instances.iter().enumerate() {
+        let sim_cfg = SimConfig { n_devices: 3, ..Default::default() };
+        let unit = DeviceFleet::uniform(3);
+        let blind = |p: &Problem| -> Box<dyn Policy> { Box::new(MmGpEi::new(p)) };
+        let aware = |p: &Problem| -> Box<dyn Policy> { Box::new(MmGpEi::device_aware(p)) };
+        let a = simulate_fleet(problem, truth, &unit, &blind, &sim_cfg);
+        let b = simulate_fleet(problem, truth, &unit, &aware, &sim_cfg);
+        if !sim_runs_bit_identical(&a.sim, &b.sim) {
+            degen_mismatches += 1;
+            eprintln!("degeneration parity FAIL: seed {seed} — mdmt-device ≠ mdmt on unit fleet");
+        }
+    }
+    report.push_kpi(
+        "parity/device_aware_vs_blind_unit_fleet_mismatches",
+        degen_mismatches as f64,
+        Direction::LowerIsBetter,
+    );
+    println!("device-aware degeneration: {degen_mismatches}/{seeds} diverging seeds (must be 0)");
 
     // ------------------------------------------------------------------
     // The fleet sweep + the equal-aggregate-capacity control.
@@ -176,6 +231,7 @@ fn main() {
                 seed as u64,
                 cfg.backend,
                 &policy_pool,
+                None,
             )
             .expect("policy");
             let r = simulate(
@@ -214,6 +270,50 @@ fn main() {
     }
     println!("{}", table.to_markdown());
 
+    // ------------------------------------------------------------------
+    // Device-aware vs device-blind: the same classed fleet, the same
+    // per-(arm, device-class) true costs — the only difference is whether
+    // the policy's scores see the asking device. Lower device-aware
+    // regret is the payoff of the device-aware scheduling API.
+    // ------------------------------------------------------------------
+    let mut aware_cums = Vec::with_capacity(seeds as usize);
+    let mut blind_cums = Vec::with_capacity(seeds as usize);
+    for (problem, truth, fleet) in &instances {
+        let sim_cfg = SimConfig {
+            n_devices: fleet.n_devices(),
+            warm_start_per_user: cfg.warm_start,
+            horizon: None,
+            stop_at_cutoff: None,
+        };
+        let model = PerClassCost::from_problem(problem, vec![1.0, 1.75], vec![f64::INFINITY; 2]);
+        let classed = fleet.clone().with_classes(round_robin_classes(fleet.n_devices(), 2));
+        let some_model = Some(&model as &dyn CostModel);
+        let aware =
+            |p: &Problem| -> Box<dyn Policy> { Box::new(MmGpEi::with_cost_model(p, &model)) };
+        let blind = |p: &Problem| -> Box<dyn Policy> { Box::new(MmGpEi::new(p)) };
+        let a = simulate_fleet_with_cost_model(problem, truth, &classed, &aware, &sim_cfg, some_model);
+        let b = simulate_fleet_with_cost_model(problem, truth, &classed, &blind, &sim_cfg, some_model);
+        aware_cums.push(a.sim.cumulative_regret);
+        blind_cums.push(b.sim.cumulative_regret);
+    }
+    let aware_mean = mmgpei::metrics::mean_std(&aware_cums).0;
+    let blind_mean = mmgpei::metrics::mean_std(&blind_cums).0;
+    let f_n = fleet_cfg.n_devices;
+    report.push_kpi(
+        format!("fleet/device_aware@F{f_n}/cumulative_regret"),
+        aware_mean,
+        Direction::LowerIsBetter,
+    );
+    report.push_kpi(
+        format!("fleet/device_blind@F{f_n}/cumulative_regret"),
+        blind_mean,
+        Direction::LowerIsBetter,
+    );
+    println!(
+        "device-aware vs device-blind (2 classes, ×1.75 cost on class 1): \
+         aware {aware_mean:.2} vs blind {blind_mean:.2} cumulative regret"
+    );
+
     // ns/decision under fleet churn (wall clock — full runs only; smoke
     // keeps the report byte-stable).
     if !opts.smoke {
@@ -249,10 +349,10 @@ fn main() {
     // Write the report first (the mismatch KPIs are evidence worth
     // keeping), then hard-fail: both parities are correctness invariants.
     opts.finish(&report);
-    if unit_mismatches > 0 || churn_mismatches > 0 {
+    if unit_mismatches > 0 || churn_mismatches > 0 || degen_mismatches > 0 {
         eprintln!(
-            "FAIL: {unit_mismatches} unit-parity + {churn_mismatches} device-churn-parity \
-             mismatches (must be 0)"
+            "FAIL: {unit_mismatches} unit-parity + {churn_mismatches} device-churn-parity + \
+             {degen_mismatches} device-aware-degeneration mismatches (must be 0)"
         );
         std::process::exit(1);
     }

@@ -29,7 +29,7 @@ use mmgpei::prng::Rng;
 use mmgpei::problem::{Problem, Truth};
 use mmgpei::report::{Direction, RunReport, TimingEntry};
 use mmgpei::runtime::{default_artifact_dir, XlaBackend};
-use mmgpei::sched::{rescan_eirate, EiBackend, NativeBackend};
+use mmgpei::sched::{rescan_eirate, DeviceView, EiBackend, NativeBackend, ScoreMode};
 use mmgpei::testutil::gen;
 use mmgpei::workload::{synthetic_gp, SyntheticConfig};
 use std::hint::black_box;
@@ -116,7 +116,8 @@ fn micro_benches(report: &mut RunReport) {
                 black_box(&problem.cost),
                 black_box(&best),
                 black_box(&selected),
-                true,
+                ScoreMode::CostRate,
+                DeviceView::unit(0),
             ))
         });
         record(&stats, "eirate full rescan", &mut table);
@@ -124,7 +125,7 @@ fn micro_benches(report: &mut RunReport) {
         // (a') steady-state cached read — unchanged posterior and
         // incumbents, so only the O(L) mask/cost assembly runs.
         let stats = bench.run("eirate-cached", || {
-            let s = native.eirate(black_box(&best), black_box(&selected), true);
+            let s = native.eirate(black_box(&best), black_box(&selected), ScoreMode::CostRate, DeviceView::unit(0));
             black_box(s[s.len() - 1])
         });
         record(&stats, "eirate cached (clean decision)", &mut table);
@@ -162,7 +163,7 @@ fn micro_benches(report: &mut RunReport) {
                 xla.observe(a, truth.z[a]);
             }
             let stats = bench.run("xla", || {
-                let s = xla.eirate(black_box(&best), black_box(&selected), true);
+                let s = xla.eirate(black_box(&best), black_box(&selected), ScoreMode::CostRate, DeviceView::unit(0));
                 black_box(s[s.len() - 1])
             });
             record(&stats, "xla scheduler_step (PJRT)", &mut table);
@@ -193,10 +194,11 @@ fn drive_cached(
         for &u in &problem.arm_users[a] {
             best[u] = best[u].max(truth.z[a]);
         }
-        let scores = backend.eirate(&best, &selected, true);
+        let dev = DeviceView::unit(0);
+        let scores = backend.eirate(&best, &selected, ScoreMode::CostRate, dev);
         acc += scores[scores.len() - 1];
         if let Some(p) = picks.as_mut() {
-            p.push(backend.select_arm(&best, &selected, true));
+            p.push(backend.select_arm(&best, &selected, ScoreMode::CostRate, dev));
         }
     }
     acc
@@ -219,8 +221,15 @@ fn drive_rescan(
         for &u in &problem.arm_users[a] {
             best[u] = best[u].max(truth.z[a]);
         }
-        let scores =
-            rescan_eirate(&gp, &problem.arm_users, &problem.cost, &best, &selected, true);
+        let scores = rescan_eirate(
+            &gp,
+            &problem.arm_users,
+            &problem.cost,
+            &best,
+            &selected,
+            ScoreMode::CostRate,
+            DeviceView::unit(0),
+        );
         acc += scores[scores.len() - 1];
         if let Some(p) = picks.as_mut() {
             p.push(argmax(&scores));

@@ -7,20 +7,30 @@ use crate::config::{Backend, ExperimentConfig};
 use crate::metrics::{aggregate_curves, mean_std, p99, time_grid, StepCurve};
 use crate::pool::WorkerPool;
 use crate::prng::Rng;
-use crate::problem::{Problem, Truth};
+use crate::problem::{CostModel, PerClassCost, Problem, Truth};
 use crate::report::{Direction, RunReport, TimingEntry};
 use crate::runtime::{default_artifact_dir, XlaBackend};
 use crate::sched::{GpEiRandom, GpEiRoundRobin, MmGpEi, MmGpEiIndep, Oracle, Policy};
 use crate::sim::{
-    simulate, simulate_churn, simulate_fleet, ChurnResult, FleetResult, SimConfig, SimResult,
+    simulate, simulate_churn, simulate_fleet_with_cost_model, ChurnResult, FleetResult, SimConfig,
+    SimResult,
 };
-use crate::workload::{azure, churn_workload, deeplearning, fleet_schedule, synthetic_gp};
+use crate::workload::{
+    azure, churn_workload, deeplearning, fleet_schedule, round_robin_classes, synthetic_gp,
+};
 
 /// Instantiate a policy by CLI name.
 ///
-/// Vocabulary: `mdmt` (Algorithm 1), `mdmt-nocost` (EI-only ablation),
-/// `mdmt-indep` (independent-GP ablation), `round-robin`, `random`,
-/// `oracle`.
+/// Vocabulary: `mdmt` (Algorithm 1), `mdmt-device` (device-aware
+/// scoring — `EI/(c(x, class_d)/s_d)` for the asking device),
+/// `mdmt-nocost` (EI-only ablation), `mdmt-indep` (independent-GP
+/// ablation), `round-robin`, `random`, `oracle`.
+///
+/// `cost_model` feeds `mdmt-device` its per-class estimated-cost table
+/// (`--cost-model` / `[cost_model]`); pass `None` outside cost-model
+/// runs — `mdmt-device` then scores against the problem's single cost
+/// vector (speed-aware only). Class tables need the native backend, so
+/// `mdmt-device` ignores `--backend xla`.
 ///
 /// `policy_pool` is the worker pool handed to the per-user-GP policies'
 /// internal shards; pass `WorkerPool::new(1)` when the caller already
@@ -33,6 +43,7 @@ pub fn make_policy(
     seed: u64,
     backend: Backend,
     policy_pool: &WorkerPool,
+    cost_model: Option<&dyn CostModel>,
 ) -> Result<Box<dyn Policy>, String> {
     Ok(match name {
         "mdmt" => match backend {
@@ -42,6 +53,10 @@ pub fn make_policy(
                     .map_err(|e| format!("xla backend: {e:#}"))?;
                 Box::new(MmGpEi::with_backend(problem, Box::new(b)))
             }
+        },
+        "mdmt-device" => match cost_model {
+            Some(model) => Box::new(MmGpEi::with_cost_model(problem, model)),
+            None => Box::new(MmGpEi::device_aware(problem)),
         },
         "mdmt-nocost" => Box::new(MmGpEi::cost_insensitive(problem)),
         "mdmt-indep" => Box::new(MmGpEiIndep::with_pool(problem, policy_pool.clone())),
@@ -53,6 +68,12 @@ pub fn make_policy(
         "oracle" => Box::new(Oracle::new(problem, truth)),
         other => return Err(format!("unknown policy {other:?}")),
     })
+}
+
+/// Borrow a per-seed owned cost model as the trait object that
+/// [`make_policy`] and the engine take (`None` passes through).
+fn as_cost_model(model: &Option<PerClassCost>) -> Option<&dyn CostModel> {
+    model.as_ref().map(|m| m as &dyn CostModel)
 }
 
 /// Build the (problem, truth) instance for seed `seed` per the paper's
@@ -165,7 +186,8 @@ pub fn run_experiment(cfg: &ExperimentConfig) -> Result<ExperimentResults, Strin
             let seed_runs = pool.map_indexed(cfg.seeds as usize, |seed| {
                 let seed = seed as u64;
                 let (problem, truth) = make_instance(cfg, seed)?;
-                let mut policy = make_policy(policy_name, &problem, &truth, seed, cfg.backend, &policy_pool)?;
+                let mut policy =
+                    make_policy(policy_name, &problem, &truth, seed, cfg.backend, &policy_pool, None)?;
                 Ok::<SimResult, String>(simulate(
                     &problem,
                     &truth,
@@ -265,7 +287,7 @@ pub fn run_churn_experiment(cfg: &ExperimentConfig) -> Result<ChurnExperimentRes
     {
         let (p0, t0, _) = churn_workload(&cfg.churn_cfg, 0x6C0);
         for name in &cfg.policies {
-            make_policy(name, &p0, &t0, 0, cfg.backend, &policy_pool)?;
+            make_policy(name, &p0, &t0, 0, cfg.backend, &policy_pool, None)?;
         }
     }
     let mut cells = Vec::new();
@@ -275,7 +297,7 @@ pub fn run_churn_experiment(cfg: &ExperimentConfig) -> Result<ChurnExperimentRes
                 let seed = seed as u64;
                 let (problem, truth, schedule) = churn_workload(&cfg.churn_cfg, 0x6C0 + seed);
                 let factory = |p: &Problem| -> Box<dyn Policy> {
-                    make_policy(policy_name, p, &truth, seed, cfg.backend, &policy_pool)
+                    make_policy(policy_name, p, &truth, seed, cfg.backend, &policy_pool, None)
                         .expect("policy construction validated above")
                 };
                 simulate_churn(
@@ -376,6 +398,11 @@ impl FleetExperimentResults {
 /// timeline through the unified engine. Seeds shard across the worker
 /// pool exactly like [`run_experiment`]; `cfg.devices` is ignored — the
 /// fleet is the device dimension.
+///
+/// With `cfg.cost_model` enabled, each seed builds the `[cost_model]`
+/// per-class cost table against its instance, spreads device classes
+/// round-robin over the fleet, and charges devices per-class durations;
+/// `mdmt-device` additionally *scores* against the same table.
 pub fn run_fleet_experiment(cfg: &ExperimentConfig) -> Result<FleetExperimentResults, String> {
     cfg.validate()?;
     if !cfg.fleet {
@@ -387,8 +414,9 @@ pub fn run_fleet_experiment(cfg: &ExperimentConfig) -> Result<FleetExperimentRes
     // once, up front, instead of panicking inside the factory closure.
     {
         let (p0, t0) = make_instance(cfg, 0)?;
+        let model0 = if cfg.cost_model { Some(cfg.cost_model_cfg.build(&p0)) } else { None };
         for name in &cfg.policies {
-            make_policy(name, &p0, &t0, 0, cfg.backend, &policy_pool)?;
+            make_policy(name, &p0, &t0, 0, cfg.backend, &policy_pool, as_cost_model(&model0))?;
         }
     }
     let mut cells = Vec::new();
@@ -396,12 +424,21 @@ pub fn run_fleet_experiment(cfg: &ExperimentConfig) -> Result<FleetExperimentRes
         let seed_runs = pool.map_indexed(cfg.seeds as usize, |seed| {
             let seed = seed as u64;
             let (problem, truth) = make_instance(cfg, seed)?;
-            let fleet = fleet_schedule(&cfg.fleet_cfg, 0xF1EE7 + seed);
+            let mut fleet = fleet_schedule(&cfg.fleet_cfg, 0xF1EE7 + seed);
+            let model = if cfg.cost_model {
+                fleet = fleet.with_classes(round_robin_classes(
+                    fleet.n_devices(),
+                    cfg.cost_model_cfg.n_classes(),
+                ));
+                Some(cfg.cost_model_cfg.build(&problem))
+            } else {
+                None
+            };
             let factory = |p: &Problem| -> Box<dyn Policy> {
-                make_policy(policy_name, p, &truth, seed, cfg.backend, &policy_pool)
+                make_policy(policy_name, p, &truth, seed, cfg.backend, &policy_pool, as_cost_model(&model))
                     .expect("policy construction validated above")
             };
-            Ok::<FleetResult, String>(simulate_fleet(
+            Ok::<FleetResult, String>(simulate_fleet_with_cost_model(
                 &problem,
                 &truth,
                 &fleet,
@@ -412,6 +449,7 @@ pub fn run_fleet_experiment(cfg: &ExperimentConfig) -> Result<FleetExperimentRes
                     horizon: cfg.horizon,
                     stop_at_cutoff: None,
                 },
+                as_cost_model(&model),
             ))
         });
         let mut runs = Vec::with_capacity(cfg.seeds as usize);
@@ -527,6 +565,7 @@ mod tests {
         let (p, t) = make_instance(&cfg, 0).unwrap();
         for name in [
             "mdmt",
+            "mdmt-device",
             "mdmt-nocost",
             "mdmt-indep",
             "mdmt-fantasy",
@@ -536,10 +575,16 @@ mod tests {
             "random",
             "oracle",
         ] {
-            let pol = make_policy(name, &p, &t, 0, Backend::Native, &WorkerPool::new(1)).unwrap();
+            let pol =
+                make_policy(name, &p, &t, 0, Backend::Native, &WorkerPool::new(1), None).unwrap();
             assert!(!pol.name().is_empty());
         }
-        assert!(make_policy("ucb", &p, &t, 0, Backend::Native, &WorkerPool::new(1)).is_err());
+        assert!(make_policy("ucb", &p, &t, 0, Backend::Native, &WorkerPool::new(1), None).is_err());
+        // mdmt-device picks up a cost model when one is supplied.
+        let model = PerClassCost::from_problem(&p, vec![1.0, 2.0], vec![f64::INFINITY, f64::INFINITY]);
+        let pol = make_policy("mdmt-device", &p, &t, 0, Backend::Native, &WorkerPool::new(1), Some(&model))
+            .unwrap();
+        assert_eq!(pol.name(), "GP-EI-MDMT[device]");
     }
 
     #[test]
@@ -629,6 +674,34 @@ mod tests {
         assert!(report.timings.is_empty(), "smoke reports exclude wall-clock timings");
         // Fleet-disabled configs must refuse the fleet driver.
         assert!(run_fleet_experiment(&quick_cfg()).is_err());
+    }
+
+    #[test]
+    fn cost_model_fleet_sweep_runs_device_aware_policy() {
+        let mut cfg = quick_cfg();
+        cfg.fleet = true;
+        cfg.fleet_cfg = crate::workload::FleetConfig {
+            n_devices: 3,
+            initial_online: 3,
+            arrival_gap: 4.0,
+            uptime: (8.0, 20.0),
+            outage: (2.0, 6.0),
+            horizon: 60.0,
+            ..Default::default()
+        };
+        cfg.cost_model = true;
+        cfg.cost_model_cfg =
+            crate::config::CostModelConfig { multipliers: vec![1.0, 2.0], mem_limit: Vec::new() };
+        cfg.policies = vec!["mdmt-device".into(), "mdmt".into()];
+        cfg.seeds = 2;
+        let res = run_fleet_experiment(&cfg).unwrap();
+        let dev = res.cell("mdmt-device").unwrap();
+        assert_eq!(dev.runs.len(), 2);
+        assert!(dev.cumulative.0 >= 0.0);
+        assert_eq!(dev.n_rebuilds, 0, "mdmt-device applies device churn in place");
+        // The device-blind cell runs on the very same classed fleet with
+        // the same per-class true costs — only its *scores* are blind.
+        assert!(res.cell("mdmt").is_some());
     }
 
     #[test]

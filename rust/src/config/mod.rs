@@ -11,6 +11,7 @@ mod toml;
 
 pub use toml::{ParseError, TomlDoc, TomlValue};
 
+use crate::problem::{DeviceFleet, PerClassCost, Problem};
 use crate::workload::{ChurnConfig, FleetConfig, SyntheticConfig};
 
 /// Convert a TOML integer into a non-negative count. `usize::try_from`
@@ -38,6 +39,78 @@ impl std::str::FromStr for Backend {
             "xla" => Ok(Backend::Xla),
             other => Err(format!("unknown backend {other:?} (native|xla)")),
         }
+    }
+}
+
+/// Per-class cost-model knobs (the `[cost_model]` section): the
+/// parameters of a [`crate::problem::PerClassCost`], keyed by device
+/// class. Device classes are spread over the fleet round-robin
+/// (`d mod n_classes` — see [`crate::workload::round_robin_classes`]).
+#[derive(Clone, Debug)]
+pub struct CostModelConfig {
+    /// Per-class cost multipliers (`c(x, k) = base(x) · multipliers[k]`);
+    /// the length defines the number of device classes.
+    pub multipliers: Vec<f64>,
+    /// Per-class memory limits: an arm whose base cost exceeds its
+    /// class's limit is infeasible there (never scheduled on that
+    /// class). Empty = unlimited for every class; `inf` entries allowed.
+    pub mem_limit: Vec<f64>,
+}
+
+impl Default for CostModelConfig {
+    fn default() -> Self {
+        CostModelConfig { multipliers: vec![1.0], mem_limit: Vec::new() }
+    }
+}
+
+impl CostModelConfig {
+    /// Number of device classes the model distinguishes.
+    pub fn n_classes(&self) -> usize {
+        self.multipliers.len()
+    }
+
+    /// Effective per-class memory limits (+∞ for every class when the
+    /// `mem_limit` key was omitted).
+    pub fn limits(&self) -> Vec<f64> {
+        if self.mem_limit.is_empty() {
+            vec![f64::INFINITY; self.multipliers.len()]
+        } else {
+            self.mem_limit.clone()
+        }
+    }
+
+    /// Build the [`PerClassCost`] model over `problem`'s base costs.
+    pub fn build(&self, problem: &Problem) -> PerClassCost {
+        PerClassCost::from_problem(problem, self.multipliers.clone(), self.limits())
+    }
+
+    /// Sanity-check the knob ranges (mirrors `FleetConfig::validate`).
+    pub fn validate(&self) -> Result<(), String> {
+        if self.multipliers.is_empty() {
+            return Err("cost_model: multipliers must name at least one device class".into());
+        }
+        for (k, &m) in self.multipliers.iter().enumerate() {
+            if !m.is_finite() || !(m > 0.0) {
+                return Err(format!(
+                    "cost_model: multiplier for class {k} must be positive finite, got {m}"
+                ));
+            }
+        }
+        if !self.mem_limit.is_empty() && self.mem_limit.len() != self.multipliers.len() {
+            return Err(format!(
+                "cost_model: mem_limit length {} must match multipliers length {}",
+                self.mem_limit.len(),
+                self.multipliers.len()
+            ));
+        }
+        for (k, &l) in self.mem_limit.iter().enumerate() {
+            if !(l > 0.0) {
+                return Err(format!(
+                    "cost_model: memory limit for class {k} must be positive, got {l}"
+                ));
+            }
+        }
+        Ok(())
     }
 }
 
@@ -92,6 +165,15 @@ pub struct ExperimentConfig {
     /// [`Self::canonical_string`] **only when enabled** — same
     /// hash-stability contract as the churn block.
     pub fleet_cfg: FleetConfig,
+    /// Device-aware cost-model toggle (CLI `--cost-model` / a
+    /// `[cost_model]` TOML section): devices get round-robin classes and
+    /// the engine charges per-(arm, class) costs through
+    /// [`crate::problem::PerClassCost`]. Requires the fleet scenario.
+    pub cost_model: bool,
+    /// Cost-model knobs (used when `cost_model` is set). Folded into
+    /// [`Self::canonical_string`] **only when enabled** — same
+    /// hash-stability contract as the churn and fleet blocks.
+    pub cost_model_cfg: CostModelConfig,
 }
 
 impl Default for ExperimentConfig {
@@ -113,6 +195,8 @@ impl Default for ExperimentConfig {
             churn_cfg: ChurnConfig::default(),
             fleet: false,
             fleet_cfg: FleetConfig::default(),
+            cost_model: false,
+            cost_model_cfg: CostModelConfig::default(),
         }
     }
 }
@@ -256,6 +340,20 @@ impl ExperimentConfig {
                 cfg.fleet_cfg.horizon = v.as_float()?;
             }
         }
+        // A `[cost_model]` section opts the experiment into device-aware
+        // per-class costs; its keys override the `CostModelConfig`
+        // defaults. Validation requires the fleet scenario (device
+        // classes live on the fleet).
+        if doc.section_names().any(|s| s == "cost_model") {
+            cfg.cost_model = true;
+            let cm = doc.section("cost_model");
+            if let Some(v) = cm.get("multipliers") {
+                cfg.cost_model_cfg.multipliers = v.as_float_array()?;
+            }
+            if let Some(v) = cm.get("mem_limit") {
+                cfg.cost_model_cfg.mem_limit = v.as_float_array()?;
+            }
+        }
         let syn = doc.section("synthetic");
         if let Some(v) = syn.get("n_users") {
             cfg.synthetic.n_users = count(v, "synthetic.n_users")?;
@@ -346,6 +444,13 @@ impl ExperimentConfig {
                 f.horizon,
             ));
         }
+        if self.cost_model {
+            let m = &self.cost_model_cfg;
+            s.push_str(&format!(
+                "cost_model.multipliers={:?}\ncost_model.mem_limit={:?}\n",
+                m.multipliers, m.mem_limit
+            ));
+        }
         s
     }
 
@@ -414,7 +519,26 @@ impl ExperimentConfig {
                 );
             }
         }
+        if self.cost_model {
+            self.cost_model_cfg.validate()?;
+            if !self.fleet {
+                return Err(
+                    "[cost_model] requires the [fleet] scenario (device classes live on the \
+                     fleet; add a [fleet] section or drop [cost_model])"
+                        .into(),
+                );
+            }
+        }
         Ok(())
+    }
+
+    /// The uniform always-on unit-speed single-class fleet every
+    /// non-`[fleet]` scenario schedules over — the one constructor
+    /// behind `sim::simulate`, `sim::simulate_churn`,
+    /// `coordinator::serve`, and `coordinator::serve_churn`, so the
+    /// "`n` identical devices" convention is written down exactly once.
+    pub fn device_fleet(n_devices: usize) -> DeviceFleet {
+        DeviceFleet::uniform(n_devices)
     }
 }
 
@@ -659,6 +783,81 @@ n_models = 50
         assert!(s.fleet_cfg.initial_online <= s.fleet_cfg.n_devices);
         assert!(s.fleet_cfg.horizon <= 120.0);
         s.validate().unwrap();
+    }
+
+    #[test]
+    fn cost_model_section_opts_in_and_hashes_conditionally() {
+        // No [cost_model] section → off and — critically — the canonical
+        // string is unchanged, so cost-blind configs keep the
+        // config_hash their checked-in baselines were stamped with.
+        let plain = ExperimentConfig::from_toml_str(SAMPLE).unwrap();
+        assert!(!plain.cost_model);
+        assert!(!plain.canonical_string().contains("cost_model."));
+        let modeled = ExperimentConfig::from_toml_str(&format!(
+            "{SAMPLE}\n[fleet]\nn_devices = 4\n\
+             [cost_model]\nmultipliers = [1.0, 2.5]\nmem_limit = [inf, 5.0]\n"
+        ))
+        .unwrap();
+        assert!(modeled.cost_model);
+        assert_eq!(modeled.cost_model_cfg.multipliers, vec![1.0, 2.5]);
+        assert_eq!(modeled.cost_model_cfg.mem_limit, vec![f64::INFINITY, 5.0]);
+        assert_eq!(modeled.cost_model_cfg.n_classes(), 2);
+        assert!(modeled.canonical_string().contains("cost_model.multipliers=[1.0, 2.5]"));
+        assert_ne!(plain.config_hash(), modeled.config_hash());
+        // Cost-model knobs are experiment knobs: changing one moves the hash.
+        let mut m2 = modeled.clone();
+        m2.cost_model_cfg.multipliers[1] = 3.0;
+        assert_ne!(modeled.config_hash(), m2.config_hash());
+        // Omitted mem_limit means unlimited everywhere.
+        assert_eq!(CostModelConfig::default().limits(), vec![f64::INFINITY]);
+    }
+
+    #[test]
+    fn cost_model_knobs_are_validated_and_require_fleet() {
+        // [cost_model] without [fleet] is rejected: classes live on the fleet.
+        let err = ExperimentConfig::from_toml_str(
+            "[experiment]\ndataset = \"azure\"\n[cost_model]\nmultipliers = [1.0, 2.0]\n",
+        )
+        .unwrap_err();
+        assert!(err.contains("requires the [fleet]"), "{err}");
+        let with_fleet = |body: &str| {
+            ExperimentConfig::from_toml_str(&format!(
+                "[experiment]\ndataset = \"azure\"\n[fleet]\nn_devices = 4\n[cost_model]\n{body}"
+            ))
+        };
+        let err = with_fleet("multipliers = []\n").unwrap_err();
+        assert!(err.contains("at least one device class"), "{err}");
+        let err = with_fleet("multipliers = [1.0, -2.0]\n").unwrap_err();
+        assert!(err.contains("positive finite"), "{err}");
+        let err = with_fleet("multipliers = [1.0, 2.0]\nmem_limit = [5.0]\n").unwrap_err();
+        assert!(err.contains("mem_limit length"), "{err}");
+        let err = with_fleet("multipliers = [1.0]\nmem_limit = [0.0]\n").unwrap_err();
+        assert!(err.contains("memory limit"), "{err}");
+        assert!(with_fleet("multipliers = [1.0, 2.0]\n").is_ok());
+    }
+
+    #[test]
+    fn shipped_device_aware_config_parses() {
+        let cfg = ExperimentConfig::from_toml_str(include_str!(
+            "../../../configs/fig7_device_aware.toml"
+        ))
+        .unwrap();
+        assert!(cfg.fleet && cfg.cost_model);
+        assert_eq!(cfg.cost_model_cfg.n_classes(), 2);
+        assert!(cfg.cost_model_cfg.limits().iter().all(|l| l.is_infinite()));
+        assert!(cfg.policies.contains(&"mdmt-device".to_string()));
+    }
+
+    #[test]
+    fn device_fleet_constructor_is_uniform() {
+        let f = ExperimentConfig::device_fleet(3);
+        assert_eq!(f.n_devices(), 3);
+        for d in 0..3 {
+            assert_eq!(f.speed(d), 1.0);
+            assert_eq!(f.class(d), 0);
+            assert!(f.online_at_start(d));
+        }
+        assert!(f.events().is_empty());
     }
 
     #[test]

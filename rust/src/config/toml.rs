@@ -62,6 +62,15 @@ impl TomlValue {
         }
     }
 
+    /// Array-of-floats view (integer entries coerce, like
+    /// [`TomlValue::as_float`]).
+    pub fn as_float_array(&self) -> Result<Vec<f64>, String> {
+        match self {
+            TomlValue::Array(xs) => xs.iter().map(|v| v.as_float()).collect(),
+            other => Err(format!("expected array, got {other:?}")),
+        }
+    }
+
     /// Array-of-usize view.
     pub fn as_usize_array(&self) -> Result<Vec<usize>, String> {
         match self {
@@ -294,5 +303,15 @@ mod tests {
     fn negative_usize_array_rejected() {
         let doc = TomlDoc::parse("a = [1, -2]\n").unwrap();
         assert!(doc.section("").get("a").unwrap().as_usize_array().is_err());
+    }
+
+    #[test]
+    fn float_array_coerces_ints_and_rejects_strings() {
+        let doc = TomlDoc::parse("a = [1, 2.5, inf]\nb = [\"x\"]\n").unwrap();
+        assert_eq!(
+            doc.section("").get("a").unwrap().as_float_array().unwrap(),
+            vec![1.0, 2.5, f64::INFINITY]
+        );
+        assert!(doc.section("").get("b").unwrap().as_float_array().is_err());
     }
 }

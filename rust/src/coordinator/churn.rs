@@ -19,9 +19,10 @@
 use std::time::Duration;
 
 use super::{jobs_from, ServeConfig, ServedJob};
+use crate::config::ExperimentConfig;
 use crate::engine::{self, Clock, EngineParams, MockClock, PolicyFactory, PolicyHost, Tenancy, WallClock};
 use crate::metrics::StepCurve;
-use crate::problem::{ChurnSchedule, DeviceFleet, Problem, Truth};
+use crate::problem::{ChurnSchedule, Problem, Truth};
 
 /// Result of a live churn serving session.
 #[derive(Clone, Debug)]
@@ -90,11 +91,12 @@ fn serve_churn_on(
 ) -> ChurnServeReport {
     assert!(config.n_devices >= 1);
     assert!(config.time_scale > 0.0);
-    let fleet = DeviceFleet::uniform(config.n_devices);
+    let fleet = ExperimentConfig::device_fleet(config.n_devices);
     let params = EngineParams {
         problem,
         truth,
         sched_view: None,
+        cost_model: None,
         fleet: &fleet,
         tenancy: Tenancy::Churn(schedule),
         warm_start_per_user: config.warm_start_per_user,

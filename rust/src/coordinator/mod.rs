@@ -24,9 +24,10 @@ pub use churn::{serve_churn, serve_churn_deterministic, ChurnServeReport};
 
 use std::time::Duration;
 
+use crate::config::ExperimentConfig;
 use crate::engine::{self, EngineParams, Observation, PolicyHost, Tenancy, WallClock};
 use crate::metrics::StepCurve;
-use crate::problem::{ArmId, DeviceFleet, Problem, Truth};
+use crate::problem::{ArmId, Problem, Truth};
 use crate::sched::Policy;
 
 /// Serving parameters.
@@ -116,12 +117,13 @@ pub fn serve(
 ) -> ServeReport {
     assert!(config.n_devices >= 1);
     assert!(config.time_scale > 0.0);
-    let fleet = DeviceFleet::uniform(config.n_devices);
+    let fleet = ExperimentConfig::device_fleet(config.n_devices);
     let mut clock = WallClock::spawn(config.n_devices);
     let params = EngineParams {
         problem,
         truth,
         sched_view: None,
+        cost_model: None,
         fleet: &fleet,
         tenancy: Tenancy::Static,
         warm_start_per_user: config.warm_start_per_user,

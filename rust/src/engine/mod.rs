@@ -57,10 +57,10 @@ use std::time::{Duration, Instant};
 
 use crate::metrics::StepCurve;
 use crate::problem::{
-    ArmId, ChurnEventKind, ChurnSchedule, DeviceFleet, FleetEventKind, Problem, TenantSet, Truth,
-    UserId,
+    ArmId, ChurnEventKind, ChurnSchedule, CostModel, DeviceFleet, FleetEventKind, Problem,
+    TenantSet, Truth, UserId,
 };
-use crate::sched::{Incumbents, Policy, SchedContext};
+use crate::sched::{DeviceView, Incumbents, Policy, SchedContext};
 
 /// One finished evaluation (driver-side record; the policy learns the
 /// same `z` through [`Policy::observe`]).
@@ -104,6 +104,13 @@ pub struct EngineParams<'a> {
     /// Scheduler-visible cost view (Remark 1 estimated costs); `None`
     /// means the policy sees the true problem.
     pub sched_view: Option<&'a Problem>,
+    /// Per-(arm, device-class) true-cost model the engine charges
+    /// devices from; `None` keeps the historical `problem.cost` vector
+    /// (equivalently [`crate::problem::UniformCost`], byte-for-byte).
+    /// An arm the model declares infeasible on a device's class never
+    /// runs there: queue heads are left for a fitting device and a
+    /// policy pick that does not fit simply idles the asking device.
+    pub cost_model: Option<&'a dyn CostModel>,
     /// The device fleet (speeds + availability schedule). The clock must
     /// have been constructed over `fleet.n_devices()` device slots.
     pub fleet: &'a DeviceFleet,
@@ -354,6 +361,9 @@ struct Timed {
 /// Per-device engine state.
 struct DeviceState {
     speed: f64,
+    /// Device class — the row this device reads in the cost model's
+    /// `(arm, class)` table (0 for the paper's homogeneous fleets).
+    class: usize,
     online: bool,
     /// `(job id, arm)` of the in-flight job, if any.
     job: Option<(u64, ArmId)>,
@@ -373,6 +383,7 @@ struct Engine<'a, 'c> {
     problem: &'a Problem,
     view: &'a Problem,
     truth: &'a Truth,
+    cost_model: Option<&'a dyn CostModel>,
     clock: &'c mut dyn Clock,
     host: PolicyHost<'a>,
     static_mode: bool,
@@ -484,10 +495,21 @@ impl<'a, 'c> Engine<'a, 'c> {
         let devices: Vec<DeviceState> = (0..params.fleet.n_devices())
             .map(|d| DeviceState {
                 speed: params.fleet.speed(d),
+                class: params.fleet.class(d),
                 online: params.fleet.online_at_start(d),
                 job: None,
             })
             .collect();
+        if let Some(model) = params.cost_model {
+            for d in &devices {
+                assert!(
+                    d.class < model.n_classes(),
+                    "fleet assigns device class {} but the cost model has {} classes",
+                    d.class,
+                    model.n_classes()
+                );
+            }
+        }
 
         // Per-user optimum and the accuracy-zero empty reference floored
         // at the user's worst arm — the Option-based incumbent
@@ -505,6 +527,7 @@ impl<'a, 'c> Engine<'a, 'c> {
             problem,
             view,
             truth: params.truth,
+            cost_model: params.cost_model,
             clock,
             host,
             static_mode,
@@ -619,13 +642,29 @@ impl<'a, 'c> Engine<'a, 'c> {
         self.curve.push(now, v);
     }
 
+    /// True execution cost of `arm` on a device of `class`: the cost
+    /// model's `(arm, class)` entry when one is set (`None` =
+    /// infeasible there), else the problem's historical cost vector
+    /// (always feasible).
+    fn true_cost(&self, arm: ArmId, class: usize) -> Option<f64> {
+        match self.cost_model {
+            Some(m) => m.cost(arm, class),
+            None => Some(self.problem.cost[arm]),
+        }
+    }
+
     /// Ask `device` for work at `now`: requeued preempted decisions
     /// first, then the warm-start queue, then the policy. A device with
     /// no candidate parks (idle devices are re-asked after every timed
     /// tick; in the static paper setting no tick ever comes, so an
     /// exhausted device simply retires — the historical behavior).
+    ///
+    /// A queue head infeasible on this device's class is *left in
+    /// place* for a device that fits it — only blocked (retired) heads
+    /// are dropped — and the asker falls through to the next source.
     fn dispatch_device(&mut self, device: usize, now: f64) {
         let problem = self.problem;
+        let class = self.devices[device].class;
         while let Some(&(a, _)) = self.requeue.front() {
             if self.blocked[a] {
                 self.requeue.pop_front();
@@ -634,10 +673,15 @@ impl<'a, 'c> Engine<'a, 'c> {
             }
         }
         let mut requeued_at = None;
-        let arm = if let Some((a, t_pre)) = self.requeue.pop_front() {
-            requeued_at = Some(t_pre);
-            Some(a)
-        } else {
+        let mut arm = None;
+        if let Some(&(a, t_pre)) = self.requeue.front() {
+            if self.true_cost(a, class).is_some() {
+                self.requeue.pop_front();
+                requeued_at = Some(t_pre);
+                arm = Some(a);
+            }
+        }
+        if arm.is_none() {
             while let Some(&a) = self.warm.front() {
                 if self.blocked[a] {
                     self.warm.pop_front();
@@ -645,29 +689,41 @@ impl<'a, 'c> Engine<'a, 'c> {
                     break;
                 }
             }
-            if let Some(a) = self.warm.pop_front() {
-                Some(a)
-            } else {
-                let ctx = SchedContext {
-                    problem: self.view,
-                    selected: &self.blocked,
-                    observed: &self.observed,
-                    now,
-                };
-                // pallas-lint: allow(R3) — measures decision latency for the ns/decision KPI; the reading never feeds scheduling or virtual time.
-                let t0 = Instant::now();
-                let pick = self.host.policy_mut().select(&ctx);
-                let dt = t0.elapsed();
-                if self.collect_decision_latencies {
-                    self.decision_latencies.push(dt);
+            if let Some(&a) = self.warm.front() {
+                if self.true_cost(a, class).is_some() {
+                    self.warm.pop_front();
+                    arm = Some(a);
                 }
-                self.n_decisions += 1;
-                self.decision_wall += dt;
-                pick
             }
-        };
+        }
+        if arm.is_none() {
+            let ctx = SchedContext {
+                problem: self.view,
+                selected: &self.blocked,
+                observed: &self.observed,
+                now,
+                device: DeviceView { id: device, speed: self.devices[device].speed, class },
+            };
+            // pallas-lint: allow(R3) — measures decision latency for the ns/decision KPI; the reading never feeds scheduling or virtual time.
+            let t0 = Instant::now();
+            let pick = self.host.policy_mut().select(&ctx);
+            let dt = t0.elapsed();
+            if self.collect_decision_latencies {
+                self.decision_latencies.push(dt);
+            }
+            self.n_decisions += 1;
+            self.decision_wall += dt;
+            arm = pick;
+        }
         if let Some(a) = arm {
             assert!(!self.blocked[a], "policy returned a blocked (selected/retired) arm {a}");
+            let Some(true_c) = self.true_cost(a, class) else {
+                // A device-blind policy picked an arm infeasible on this
+                // device's class. Don't dispatch — the arm stays
+                // unselected for a device that fits it and this device
+                // idles until the next event re-asks it.
+                return;
+            };
             self.selected[a] = true;
             self.blocked[a] = true;
             if let Some(t_pre) = requeued_at {
@@ -682,7 +738,7 @@ impl<'a, 'c> Engine<'a, 'c> {
             self.next_job += 1;
             let job = self.next_job;
             self.devices[device].job = Some((job, a));
-            let dur = (problem.cost[a] / self.devices[device].speed) * self.time_scale;
+            let dur = (true_c / self.devices[device].speed) * self.time_scale;
             self.clock.dispatch(device, a, dur, job);
         }
     }
@@ -999,6 +1055,7 @@ mod tests {
             problem: p,
             truth: t,
             sched_view: None,
+            cost_model: None,
             fleet,
             tenancy: Tenancy::Static,
             warm_start_per_user: 2,
@@ -1104,6 +1161,54 @@ mod tests {
             run(&static_params(&p, &t, &fleet), PolicyHost::borrowed(&mut pol), &mut clock)
         }));
         assert!(result.is_err(), "borrowed host must refuse the rebuild fallback");
+    }
+
+    #[test]
+    fn cost_model_routes_infeasible_arms_to_fitting_class() {
+        let (p, t) = problem_and_truth();
+        // Class 1 is memory-limited to base cost ≤ 1: arms 1, 2, 4, 5
+        // (costs 2 and 3) only fit class-0 devices. A device-aware
+        // policy must still reveal every arm, all heavy ones on device 0.
+        let model =
+            crate::problem::PerClassCost::from_problem(&p, vec![1.0, 1.0], vec![f64::INFINITY, 1.0]);
+        let fleet = DeviceFleet::uniform(2).with_classes(vec![0, 1]);
+        let factory =
+            |p: &Problem| -> Box<dyn Policy> { Box::new(MmGpEi::with_cost_model(p, &model)) };
+        let mut params = static_params(&p, &t, &fleet);
+        params.cost_model = Some(&model);
+        let mut clock = VirtualClock::new(2);
+        let run = run(&params, PolicyHost::from_factory(&factory), &mut clock);
+        let mut arms: Vec<_> = run.observations.iter().map(|o| o.arm).collect();
+        arms.sort_unstable();
+        assert_eq!(arms, vec![0, 1, 2, 3, 4, 5], "every arm still completes exactly once");
+        for o in &run.observations {
+            if p.cost[o.arm] > 1.0 {
+                assert_eq!(o.device, 0, "arm {} exceeds class 1's memory limit", o.arm);
+            }
+        }
+        assert_eq!(run.curve.final_value(), 0.0);
+    }
+
+    #[test]
+    fn per_class_costs_scale_durations() {
+        let (p, t) = problem_and_truth();
+        // One class-1 device with a 3× cost multiplier and no memory
+        // limit: every job's duration is 3·c(arm).
+        let model = crate::problem::PerClassCost::from_problem(
+            &p,
+            vec![1.0, 3.0],
+            vec![f64::INFINITY, f64::INFINITY],
+        );
+        let fleet = DeviceFleet::uniform(1).with_classes(vec![1]);
+        let mut pol = MmGpEi::with_cost_model(&p, &model);
+        let mut params = static_params(&p, &t, &fleet);
+        params.cost_model = Some(&model);
+        let mut clock = VirtualClock::new(1);
+        let run = run(&params, PolicyHost::borrowed(&mut pol), &mut clock);
+        assert_eq!(run.observations.len(), 6);
+        for o in &run.observations {
+            assert!((o.finish - o.start - 3.0 * p.cost[o.arm]).abs() < 1e-12);
+        }
     }
 
     #[test]

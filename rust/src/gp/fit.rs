@@ -205,17 +205,23 @@ mod tests {
 
     #[test]
     fn fit_recovers_ballpark_hyperparameters() {
-        let pts: Vec<Vec<f64>> = (0..40).map(|i| vec![i as f64 * 0.25]).collect();
+        // Miri: the fit is hundreds of O(n³) LML evaluations, so shrink
+        // the sample and keep only the optimizer-improvement assert (the
+        // recovery bounds are statistical and need the full 40 points).
+        let n = if cfg!(miri) { 8 } else { 40 };
+        let pts: Vec<Vec<f64>> = (0..n).map(|i| vec![i as f64 * 0.25]).collect();
         let truth = Matern52 { variance: 2.0, lengthscale: 0.8 };
         let gram = truth.gram(&pts);
         let (l, _) = cholesky_jittered(&gram, 1e-10).unwrap();
         let mut rng = Rng::new(7);
-        let y = rng.mvn(&vec![0.0; 40], &l);
+        let y = rng.mvn(&vec![0.0; n], &l);
         let fitted = fit_matern52(&pts, &y, &Matern52 { variance: 0.5, lengthscale: 2.0 });
         // One sample path → loose recovery bounds; order of magnitude is
         // what matters for the prior-misspecification experiment.
-        assert!(fitted.variance > 0.4 && fitted.variance < 10.0, "{fitted:?}");
-        assert!(fitted.lengthscale > 0.2 && fitted.lengthscale < 3.2, "{fitted:?}");
+        if !cfg!(miri) {
+            assert!(fitted.variance > 0.4 && fitted.variance < 10.0, "{fitted:?}");
+            assert!(fitted.lengthscale > 0.2 && fitted.lengthscale < 3.2, "{fitted:?}");
+        }
         // Fitted LML must be at least as good as the init's.
         let init_lml = log_marginal_likelihood(
             &Matern52 { variance: 0.5, lengthscale: 2.0 }.gram(&pts),

@@ -431,6 +431,13 @@ mod tests {
         (Gp::new(vec![0.0; n], cov), z)
     }
 
+    /// Miri interprets ~100× slower than native: shrink the grids of the
+    /// tests that recompute O(n³) posteriors per observation so the
+    /// nightly Miri job stays inside its budget.
+    fn dim(native: usize) -> usize {
+        if cfg!(miri) { native.min(6) } else { native }
+    }
+
     #[test]
     fn prior_posterior_before_observations() {
         let (gp, _) = gp_on_grid(5);
@@ -452,9 +459,10 @@ mod tests {
 
     #[test]
     fn incremental_matches_slow_oracle() {
-        let (mut gp, z) = gp_on_grid(12);
+        let n = dim(12);
+        let (mut gp, z) = gp_on_grid(n);
         let order = [3usize, 7, 0, 11, 5, 9];
-        for &x in &order {
+        for &x in order.iter().filter(|&&x| x < n) {
             gp.observe(x, z[x]);
             let (mu_slow, sd_slow) = gp.recompute_posterior_slow();
             for a in 0..gp.n_arms() {
@@ -487,11 +495,12 @@ mod tests {
 
     #[test]
     fn variance_never_increases() {
-        let (mut gp, z) = gp_on_grid(15);
-        let mut prev: Vec<f64> = (0..15).map(|a| gp.posterior_std(a)).collect();
-        for x in [0usize, 14, 7, 3, 10] {
+        let n = dim(15);
+        let (mut gp, z) = gp_on_grid(n);
+        let mut prev: Vec<f64> = (0..n).map(|a| gp.posterior_std(a)).collect();
+        for &x in [0usize, 14, 7, 3, 10].iter().filter(|&&x| x < n) {
             gp.observe(x, z[x]);
-            for a in 0..15 {
+            for a in 0..n {
                 let s = gp.posterior_std(a);
                 assert!(s <= prev[a] + 1e-8, "σ must shrink (arm {a})");
                 prev[a] = s;
@@ -689,6 +698,28 @@ mod tests {
         let (mut gp, z) = gp_on_grid(4);
         gp.disable_arm(2);
         gp.observe(2, z[2]);
+    }
+
+    #[test]
+    fn prop_incremental_posterior_matches_slow_oracle_on_random_priors() {
+        // Case count comes from MMGPEI_PROP_CASES (the nightly Miri job
+        // sets it to 4); each case draws a fresh correlation prior and a
+        // fresh observation order.
+        crate::testutil::check("incremental posterior matches slow oracle", |rng| {
+            let n = dim(6);
+            let cov = crate::testutil::gen::covariance(rng, n);
+            let l = crate::linalg::cholesky_jittered(&cov, 1e-8).unwrap().0;
+            let z = rng.mvn(&vec![0.0; n], &l);
+            let mut gp = Gp::new(vec![0.0; n], cov);
+            for &x in &rng.choose_indices(n, n / 2) {
+                gp.observe(x, z[x]);
+                let (mu_slow, sd_slow) = gp.recompute_posterior_slow();
+                for a in 0..n {
+                    assert!((gp.posterior_mean(a) - mu_slow[a]).abs() < 1e-6, "mean, arm {a}");
+                    assert!((gp.posterior_std(a) - sd_slow[a]).abs() < 1e-5, "std, arm {a}");
+                }
+            }
+        });
     }
 
     #[test]

@@ -243,15 +243,21 @@ mod tests {
         // EI against a brute-force Monte-Carlo estimate.
         use crate::prng::Rng;
         let mut rng = Rng::new(123);
+        // Miri: 400k draws per case is far over the interpreter budget;
+        // fewer samples means a wider Monte-Carlo tolerance (~σ/√n).
+        let (n, tol) = if cfg!(miri) {
+            (4_000, 5e-2)
+        } else {
+            (400_000, 5e-3)
+        };
         for (mu, sigma, a) in [(0.0, 1.0, 0.5), (0.6, 0.2, 0.7), (1.0, 0.5, 0.0)] {
-            let n = 400_000;
             let mc: f64 = (0..n)
                 .map(|_| (rng.normal_with(mu, sigma) - a).max(0.0))
                 .sum::<f64>()
                 / n as f64;
             let analytic = expected_improvement(mu, sigma, a);
             assert!(
-                (mc - analytic).abs() < 5e-3,
+                (mc - analytic).abs() < tol,
                 "EI({mu},{sigma},{a}): mc={mc} analytic={analytic}"
             );
         }

@@ -504,9 +504,18 @@ mod tests {
         a
     }
 
+    /// Miri interprets ~100× slower than native: shrink the O(n³) test
+    /// dims so the nightly Miri job stays inside its budget. The asserts
+    /// are dimension-generic, so the shrunken runs check the same
+    /// invariants on smaller instances.
+    fn dim(native: usize) -> usize {
+        if cfg!(miri) { native.min(6) } else { native }
+    }
+
     #[test]
     fn cholesky_reconstructs() {
         for n in [1, 2, 3, 5, 17, 40] {
+            let n = dim(n);
             let a = random_spd(n, 100 + n as u64);
             let l = cholesky(&a).unwrap();
             // L Lᵀ == A
@@ -547,7 +556,7 @@ mod tests {
 
     #[test]
     fn solve_matches_direct() {
-        let n = 12;
+        let n = dim(12);
         let a = random_spd(n, 7);
         let l = cholesky(&a).unwrap();
         let mut rng = Rng::new(8);
@@ -561,7 +570,7 @@ mod tests {
 
     #[test]
     fn triangular_solves_roundtrip() {
-        let n = 9;
+        let n = dim(9);
         let a = random_spd(n, 21);
         let l = cholesky(&a).unwrap();
         let mut rng = Rng::new(22);
@@ -596,7 +605,7 @@ mod tests {
 
     #[test]
     fn incremental_matches_batch() {
-        let n = 20;
+        let n = dim(20);
         let a = random_spd(n, 55);
         let batch = cholesky(&a).unwrap();
         let mut inc = CholeskyFactor::new();
@@ -619,7 +628,7 @@ mod tests {
     fn incremental_sigma_is_conditional_std() {
         // σ̂ returned by append must equal sqrt(det(K_S)/det(K_S')) — the
         // Schur complement identity used in the paper's Lemma 5.
-        let n = 8;
+        let n = dim(8);
         let a = random_spd(n, 77);
         let mut inc = CholeskyFactor::new();
         for t in 0..n {
@@ -644,7 +653,7 @@ mod tests {
 
     #[test]
     fn incremental_solve_matches_batch_solve() {
-        let n = 15;
+        let n = dim(15);
         let a = random_spd(n, 91);
         let mut inc = CholeskyFactor::new();
         for t in 0..n {
@@ -678,7 +687,7 @@ mod tests {
     fn min_pivot_append_matches_plain_append_when_healthy() {
         // Well-conditioned input: the guard must be a no-op (zero jitter,
         // bit-identical factor to the plain append path).
-        let n = 10;
+        let n = dim(10);
         let a = random_spd(n, 314);
         let mut plain = CholeskyFactor::new();
         let mut guarded = CholeskyFactor::new();
@@ -718,7 +727,7 @@ mod tests {
         // The `_into` variants are the same arithmetic as the allocating
         // forms (which delegate to them) — and they must reuse capacity,
         // not reallocate, when called repeatedly at the same size.
-        let n = 11;
+        let n = dim(11);
         let a = random_spd(n, 33);
         let l = cholesky(&a).unwrap();
         let mut rng = Rng::new(34);
@@ -742,7 +751,7 @@ mod tests {
     fn preallocated_append_does_not_relayout() {
         // with_capacity(n) must make every append write in place (the
         // zero-allocation contract the GP hot path relies on).
-        let n = 12;
+        let n = dim(12);
         let a = random_spd(n, 66);
         let mut inc = CholeskyFactor::with_capacity(n);
         let batch = cholesky(&a).unwrap();
@@ -755,6 +764,27 @@ mod tests {
                 assert!((inc.get(i, j) - batch[(i, j)]).abs() < 1e-9, "({i},{j})");
             }
         }
+    }
+
+    #[test]
+    fn prop_incremental_factor_matches_batch_on_random_spd() {
+        // Case count comes from MMGPEI_PROP_CASES (the nightly Miri job
+        // sets it to 4); each case draws a fresh SPD instance.
+        crate::testutil::check("incremental cholesky matches batch", |rng| {
+            let n = dim(7);
+            let a = crate::testutil::gen::spd(rng, n);
+            let batch = cholesky(&a).unwrap();
+            let mut inc = CholeskyFactor::new();
+            for t in 0..n {
+                let cross: Vec<f64> = (0..t).map(|k| a[(t, k)]).collect();
+                inc.append(&cross, a[(t, t)]).unwrap();
+            }
+            for i in 0..n {
+                for j in 0..=i {
+                    assert!((inc.get(i, j) - batch[(i, j)]).abs() < 1e-8, "({i},{j})");
+                }
+            }
+        });
     }
 
     #[test]

@@ -31,7 +31,7 @@ USAGE: mmgpei <command> [options]
 COMMANDS
   simulate   virtual-time sweep
              --config FILE | --dataset azure|deeplearning|synthetic
-             --policies mdmt,round-robin,random[,mdmt-nocost,mdmt-indep,oracle]
+             --policies mdmt,round-robin,random[,mdmt-device,mdmt-nocost,mdmt-indep,oracle]
              --devices 1,2,4  --seeds 10  --backend native|xla
              --cutoff 0.01  [--csv reports/out.csv]  [--plot]
              [--json reports/BENCH_name.json]  [--smoke]
@@ -42,6 +42,10 @@ COMMANDS
              availability churn with deterministic preemption/requeue
              (knobs via a [fleet] config section, see
              configs/fig7_elastic.toml)
+             [--cost-model]  per-(arm, device-class) costs on the fleet
+             (requires --fleet; knobs via a [cost_model] config section:
+             multipliers, mem_limit; classes spread round-robin; the
+             mdmt-device policy scores EI/(c(x, class)/speed))
   serve      live threaded coordinator (wall clock)
              --dataset azure --policy mdmt --devices 4 --time-scale 0.005
              --backend native|xla --seed 0 [--verbose]
@@ -138,6 +142,10 @@ fn cmd_simulate(args: &Args) -> Result<(), String> {
     }
     if args.has_flag("fleet") {
         cfg.fleet = true;
+        cfg.validate()?;
+    }
+    if args.has_flag("cost-model") {
+        cfg.cost_model = true;
         cfg.validate()?;
     }
     if cfg.churn {
@@ -297,6 +305,13 @@ fn cmd_simulate_fleet(
         "simulate --fleet: {} devices ({} online at t=0), speeds [{}, {}), policies={:?} seeds={}",
         f.n_devices, f.initial_online, f.speed_range.0, f.speed_range.1, cfg.policies, cfg.seeds
     );
+    if cfg.cost_model {
+        eprintln!(
+            "  cost model: {} device classes, multipliers {:?} (round-robin over the fleet)",
+            cfg.cost_model_cfg.n_classes(),
+            cfg.cost_model_cfg.multipliers
+        );
+    }
     let results = mmgpei::cli::run_fleet_experiment(cfg)?;
     let mut table = Table::new(&[
         "policy",
@@ -392,7 +407,7 @@ fn cmd_serve(args: &Args) -> Result<(), String> {
     // Live serving is a single run: the policy gets the env-resolved pool
     // so MMGPEI_THREADS shards the per-user GP work.
     let pool = mmgpei::pool::WorkerPool::from_env();
-    let mut policy = make_policy(&policy_name, &problem, &truth, seed, cfg.backend, &pool)?;
+    let mut policy = make_policy(&policy_name, &problem, &truth, seed, cfg.backend, &pool, None)?;
     eprintln!(
         "serving {} with {} devices (time scale {}s/unit, backend {:?})",
         problem.name, devices, time_scale, cfg.backend
@@ -439,7 +454,8 @@ fn cmd_theory(args: &Args) -> Result<(), String> {
         for seed in 0..cfg.seeds {
             let (problem, truth) = mmgpei::cli::make_instance(&cfg, seed)?;
             let pool = mmgpei::pool::WorkerPool::new(1);
-            let mut policy = make_policy("mdmt", &problem, &truth, seed, Backend::Native, &pool)?;
+            let mut policy =
+                make_policy("mdmt", &problem, &truth, seed, Backend::Native, &pool, None)?;
             let r = simulate(
                 &problem,
                 &truth,

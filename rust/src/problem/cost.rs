@@ -1,0 +1,209 @@
+//! Per-(arm, device-class) cost models.
+//!
+//! The paper (Remark 1) keys execution cost by arm only: `c(x)` is one
+//! vector, every device is interchangeable. A service provider's fleet
+//! is not: GPU generations differ in throughput *per model family*
+//! (beyond the scalar speed `s_d` of [`super::DeviceFleet`]) and in
+//! memory — a model that does not fit a device class cannot run there at
+//! all. [`CostModel`] generalizes `Problem::cost` behind a
+//! `(arm, device-class)` lookup:
+//!
+//! * [`UniformCost`] — the paper's vector, one class. Byte-compatible:
+//!   every cost it returns is the exact `Problem::cost` float.
+//! * [`PerClassCost`] — per-class multipliers over a base vector plus a
+//!   per-class memory limit; an arm whose base cost (the size proxy)
+//!   exceeds a class's limit is **infeasible** there (`cost` returns
+//!   `None`) and must be treated as a non-candidate for that class's
+//!   devices.
+//!
+//! Remark-1 fidelity: the *scheduler* sees a cost model built from the
+//! scheduler-visible problem (the engine's `sched_view` split), while
+//! the engine charges devices from a model over the true costs — exactly
+//! the estimated-vs-true split the uniform vector already had.
+
+use super::ArmId;
+
+/// Execution-cost lookup keyed by `(arm, device-class)`.
+///
+/// `None` means the arm is infeasible on that class (memory limit):
+/// device-aware policies score it `−∞` for asking devices of the class,
+/// and the engine refuses to dispatch it there (the arm waits for a
+/// class that fits it).
+pub trait CostModel {
+    /// Number of device classes the model distinguishes.
+    fn n_classes(&self) -> usize;
+
+    /// True execution cost of `arm` on a device of `class`, or `None`
+    /// when the arm cannot run on that class at all.
+    fn cost(&self, arm: ArmId, class: usize) -> Option<f64>;
+
+    /// Dense per-class cost table for scoring backends:
+    /// `table[class][arm]`, with `+∞` marking infeasible entries (the
+    /// sentinel scoring maps to a `−∞` score, i.e. non-candidate).
+    fn class_table(&self, n_arms: usize) -> Vec<Vec<f64>> {
+        (0..self.n_classes())
+            .map(|k| (0..n_arms).map(|x| self.cost(x, k).unwrap_or(f64::INFINITY)).collect())
+            .collect()
+    }
+}
+
+/// The paper's uniform cost vector as a [`CostModel`]: one class, every
+/// lookup returns the exact `Problem::cost` float (byte-compatible with
+/// the pre-cost-model code paths).
+#[derive(Clone, Debug)]
+pub struct UniformCost {
+    cost: Vec<f64>,
+}
+
+impl UniformCost {
+    /// Wrap a per-arm cost vector. Panics on non-positive or non-finite
+    /// entries (generator-bug contract, mirroring `Problem::validate`).
+    pub fn new(cost: Vec<f64>) -> Self {
+        for (a, &c) in cost.iter().enumerate() {
+            assert!(c > 0.0 && c.is_finite(), "arm {a} has non-positive cost {c}");
+        }
+        UniformCost { cost }
+    }
+
+    /// The model every pre-cost-model run implicitly used.
+    pub fn from_problem(problem: &super::Problem) -> Self {
+        UniformCost::new(problem.cost.clone())
+    }
+}
+
+impl CostModel for UniformCost {
+    fn n_classes(&self) -> usize {
+        1
+    }
+
+    fn cost(&self, arm: ArmId, class: usize) -> Option<f64> {
+        assert!(class < 1, "UniformCost has one class, got {class}");
+        Some(self.cost[arm])
+    }
+}
+
+/// Per-class multipliers over a base cost vector, with per-class memory
+/// limits: `cost(x, k) = base[x] · multipliers[k]`, infeasible
+/// (`None`) when `base[x] > mem_limit[k]` — the base cost doubles as the
+/// model-size proxy (bigger models cost more *and* need more memory),
+/// which keeps the scenario deterministic with zero extra inputs.
+///
+/// With `multipliers = [1.0]` and `mem_limit = [+∞]` this degenerates
+/// bitwise to [`UniformCost`] (`x · 1.0` is an IEEE identity), which is
+/// what the uniform-fleet byte-parity gates rely on.
+#[derive(Clone, Debug)]
+pub struct PerClassCost {
+    base: Vec<f64>,
+    multipliers: Vec<f64>,
+    mem_limit: Vec<f64>,
+}
+
+impl PerClassCost {
+    /// Validate and build. Panics (generator-bug contract) unless: at
+    /// least one class; multipliers finite and positive; `mem_limit`
+    /// matches the class count with positive (possibly `+∞`) entries;
+    /// base costs positive finite; and every arm is feasible on at
+    /// least one class (otherwise it could never be served).
+    pub fn new(base: Vec<f64>, multipliers: Vec<f64>, mem_limit: Vec<f64>) -> Self {
+        assert!(!multipliers.is_empty(), "need at least one device class");
+        assert_eq!(mem_limit.len(), multipliers.len(), "mem_limit length must match multipliers");
+        for (k, &m) in multipliers.iter().enumerate() {
+            assert!(m.is_finite() && m > 0.0, "class {k} has non-positive multiplier {m}");
+        }
+        for (k, &l) in mem_limit.iter().enumerate() {
+            assert!(l > 0.0 && !l.is_nan(), "class {k} has non-positive memory limit {l}");
+        }
+        for (a, &c) in base.iter().enumerate() {
+            assert!(c > 0.0 && c.is_finite(), "arm {a} has non-positive base cost {c}");
+            assert!(
+                mem_limit.iter().any(|&l| c <= l),
+                "arm {a} (base cost {c}) is infeasible on every device class"
+            );
+        }
+        PerClassCost { base, multipliers, mem_limit }
+    }
+
+    /// Build over a problem's cost vector.
+    pub fn from_problem(problem: &super::Problem, multipliers: Vec<f64>, mem_limit: Vec<f64>) -> Self {
+        PerClassCost::new(problem.cost.clone(), multipliers, mem_limit)
+    }
+}
+
+impl CostModel for PerClassCost {
+    fn n_classes(&self) -> usize {
+        self.multipliers.len()
+    }
+
+    fn cost(&self, arm: ArmId, class: usize) -> Option<f64> {
+        if self.base[arm] > self.mem_limit[class] {
+            None
+        } else {
+            Some(self.base[arm] * self.multipliers[class])
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn uniform_cost_is_byte_compatible() {
+        let cost = vec![1.0, 2.5, 0.125];
+        let m = UniformCost::new(cost.clone());
+        assert_eq!(m.n_classes(), 1);
+        for (a, &c) in cost.iter().enumerate() {
+            assert_eq!(m.cost(a, 0).unwrap().to_bits(), c.to_bits());
+        }
+        assert_eq!(m.class_table(3), vec![cost]);
+    }
+
+    #[test]
+    fn per_class_multiplies_and_enforces_memory() {
+        let m = PerClassCost::new(vec![1.0, 3.0], vec![1.0, 2.0], vec![f64::INFINITY, 2.0]);
+        // Class 0: no limit, multiplier 1 — bitwise the base costs.
+        assert_eq!(m.cost(0, 0).unwrap().to_bits(), 1.0f64.to_bits());
+        assert_eq!(m.cost(1, 0).unwrap().to_bits(), 3.0f64.to_bits());
+        // Class 1: 2× cost, and arm 1 (base 3 > limit 2) is infeasible.
+        assert_eq!(m.cost(0, 1), Some(2.0));
+        assert_eq!(m.cost(1, 1), None);
+        let table = m.class_table(2);
+        assert_eq!(table[0], vec![1.0, 3.0]);
+        assert_eq!(table[1][0], 2.0);
+        assert!(table[1][1].is_infinite());
+    }
+
+    #[test]
+    fn unit_multiplier_is_an_ieee_identity() {
+        // The uniform-fleet byte-parity gates rely on x·1.0 == x bitwise.
+        let base = vec![0.1, 1e-300, 7.5, 1e300];
+        let m = PerClassCost::new(base.clone(), vec![1.0], vec![f64::INFINITY]);
+        for (a, &c) in base.iter().enumerate() {
+            assert_eq!(m.cost(a, 0).unwrap().to_bits(), c.to_bits());
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "infeasible on every device class")]
+    fn rejects_arm_feasible_nowhere() {
+        let _ = PerClassCost::new(vec![5.0], vec![1.0, 2.0], vec![1.0, 2.0]);
+    }
+
+    #[test]
+    #[should_panic(expected = "non-positive multiplier")]
+    fn rejects_bad_multiplier() {
+        let _ = PerClassCost::new(vec![1.0], vec![0.0], vec![f64::INFINITY]);
+    }
+
+    #[test]
+    #[should_panic(expected = "mem_limit length")]
+    fn rejects_mismatched_limits() {
+        let _ = PerClassCost::new(vec![1.0], vec![1.0, 2.0], vec![f64::INFINITY]);
+    }
+
+    #[test]
+    #[should_panic(expected = "non-positive cost")]
+    fn uniform_rejects_bad_cost() {
+        let _ = UniformCost::new(vec![1.0, -2.0]);
+    }
+}

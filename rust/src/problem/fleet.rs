@@ -72,6 +72,11 @@ pub struct DeviceFleet {
     speeds: Vec<f64>,
     online_at_start: Vec<bool>,
     events: Vec<FleetEvent>,
+    /// Per-device cost-model class (index into a
+    /// [`crate::problem::CostModel`]'s class axis). Constructors default
+    /// every device to class 0 — the uniform-cost setting — so fleets
+    /// built before the cost-model API stay byte-compatible.
+    classes: Vec<usize>,
 }
 
 impl DeviceFleet {
@@ -125,7 +130,21 @@ impl DeviceFleet {
                 || events.iter().any(|e| e.kind == FleetEventKind::Join),
             "fleet has no device that is ever online"
         );
-        DeviceFleet { speeds, online_at_start, events }
+        let classes = vec![0; n];
+        DeviceFleet { speeds, online_at_start, events, classes }
+    }
+
+    /// Assign per-device cost-model classes (builder style). Panics if
+    /// the length does not match the device count — same generator-bug
+    /// contract as [`DeviceFleet::new`].
+    pub fn with_classes(mut self, classes: Vec<usize>) -> Self {
+        assert_eq!(
+            classes.len(),
+            self.speeds.len(),
+            "classes length must match the device count"
+        );
+        self.classes = classes;
+        self
     }
 
     /// The paper's fleet: `n` identical unit-speed devices, online from
@@ -146,6 +165,13 @@ impl DeviceFleet {
     #[inline]
     pub fn speed(&self, d: usize) -> f64 {
         self.speeds[d]
+    }
+
+    /// Cost-model class of device `d` (0 unless assigned via
+    /// [`DeviceFleet::with_classes`]).
+    #[inline]
+    pub fn class(&self, d: usize) -> usize {
+        self.classes[d]
     }
 
     /// Whether device `d` is online at t = 0.
@@ -208,6 +234,23 @@ mod tests {
         assert_eq!(f.total_speed(), 3.0);
         assert_eq!(f.wake_order(), vec![0, 1, 2]);
         assert_eq!(f.end_time(), 0.0);
+    }
+
+    #[test]
+    fn classes_default_zero_and_assign_via_builder() {
+        let f = DeviceFleet::uniform(3);
+        assert_eq!((0..3).map(|d| f.class(d)).collect::<Vec<_>>(), vec![0, 0, 0]);
+        let g = DeviceFleet::uniform(3).with_classes(vec![0, 1, 0]);
+        assert_eq!(g.class(1), 1);
+        // Classes participate in fleet equality.
+        assert_ne!(f, g);
+        assert_eq!(f, DeviceFleet::uniform(3).with_classes(vec![0, 0, 0]));
+    }
+
+    #[test]
+    #[should_panic(expected = "classes length")]
+    fn rejects_wrong_class_count() {
+        let _ = DeviceFleet::uniform(2).with_classes(vec![0]);
     }
 
     #[test]

@@ -6,9 +6,11 @@
 //! scalar performance `z`. Users own subsets of arms (possibly
 //! overlapping — the paper explicitly allows shared models).
 
+mod cost;
 mod fleet;
 mod tenancy;
 
+pub use cost::{CostModel, PerClassCost, UniformCost};
 pub use fleet::{DeviceFleet, FleetEvent, FleetEventKind};
 pub use tenancy::{ChurnEvent, ChurnEventKind, ChurnSchedule, TenantSet};
 

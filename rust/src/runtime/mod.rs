@@ -148,7 +148,7 @@ mod pjrt {
 
     use super::{load_manifest, pick_bucket, ArtifactSpec, Result, RuntimeError, StepOutputs};
     use crate::problem::{ArmId, Problem};
-    use crate::sched::EiBackend;
+    use crate::sched::{DeviceView, EiBackend, ScoreMode};
     use std::path::Path;
 
     /// A compiled `scheduler_step` executable for one bucket.
@@ -342,16 +342,32 @@ mod pjrt {
             self.last = None;
         }
 
-        fn eirate(&mut self, _best: &[f64], selected: &[bool], use_cost: bool) -> &[f64] {
+        fn eirate(&mut self, _best: &[f64], selected: &[bool], mode: ScoreMode, device: DeviceView) -> &[f64] {
             // `best` is recomputed inside the artifact from (obs_mask, z) —
             // identical to the caller's incumbents for non-negative z.
+            // The artifact's in-graph score is EI/c(x) (CostRate); the
+            // other modes post-adjust the non-masked entries.
             let out = self.step(selected);
             self.score_buf.copy_from_slice(&out.eirate[..self.n_arms]);
-            if !use_cost {
-                // Undo the in-graph division for the EI-only ablation.
-                for (s, c) in self.score_buf.iter_mut().zip(&self.cost[..self.n_arms]) {
-                    if *s > super::NEG_INF_SCORE {
-                        *s *= c;
+            match mode {
+                ScoreMode::CostRate => {}
+                ScoreMode::EiOnly => {
+                    // Undo the in-graph division for the EI-only ablation.
+                    for (s, c) in self.score_buf.iter_mut().zip(&self.cost[..self.n_arms]) {
+                        if *s > super::NEG_INF_SCORE {
+                            *s *= c;
+                        }
+                    }
+                }
+                ScoreMode::DeviceRate => {
+                    // EI/(c/s_d) = (EI/c)·s_d. The AOT artifact bakes in a
+                    // single cost vector, so only the speed axis applies
+                    // (class tables need the native backend); s_d = 1.0 is
+                    // a bitwise no-op, preserving unit-fleet byte parity.
+                    for s in self.score_buf.iter_mut() {
+                        if *s > super::NEG_INF_SCORE {
+                            *s *= device.speed;
+                        }
                     }
                 }
             }
@@ -384,7 +400,7 @@ mod stub {
 
     use super::{Result, RuntimeError};
     use crate::problem::{ArmId, Problem};
-    use crate::sched::EiBackend;
+    use crate::sched::{DeviceView, EiBackend, ScoreMode};
     use std::path::Path;
 
     /// Stub [`EiBackend`]: the crate was built without the `xla` feature,
@@ -411,7 +427,7 @@ mod stub {
             match self._unconstructible {}
         }
 
-        fn eirate(&mut self, _best: &[f64], _selected: &[bool], _use_cost: bool) -> &[f64] {
+        fn eirate(&mut self, _best: &[f64], _selected: &[bool], _mode: ScoreMode, _device: DeviceView) -> &[f64] {
             match self._unconstructible {}
         }
 

@@ -97,8 +97,9 @@ impl TournamentTree {
     }
 
     /// Bulk-load every leaf from `scores` and rebuild bottom-up — `O(n)`,
-    /// the path taken when a mode flip (e.g. `use_cost`) invalidates the
-    /// whole score vector at once.
+    /// the path taken when a [`crate::sched::ScoreMode`] flip (or a new
+    /// asking device under `DeviceRate`) invalidates the whole score
+    /// vector at once.
     pub fn rebuild_from(&mut self, scores: &[f64]) {
         assert_eq!(scores.len(), self.n, "rebuild size mismatch");
         debug_assert!(scores.iter().all(|s| !s.is_nan()), "tournament scores must not be NaN");

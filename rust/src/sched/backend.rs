@@ -34,8 +34,9 @@
 //! it replaced.
 
 use super::argmax::TournamentTree;
+use super::{DeviceView, ScoreMode};
 use crate::gp::{expected_improvement, Gp};
-use crate::problem::{ArmId, Problem, UserId};
+use crate::problem::{ArmId, CostModel, Problem, UserId};
 
 /// Scoring backend: consumes observations, produces per-arm EIrate.
 ///
@@ -44,16 +45,20 @@ pub trait EiBackend {
     /// Incorporate the observation `z(x)`.
     fn observe(&mut self, arm: ArmId, z: f64);
 
-    /// Score every arm: `EIrate_t(x) = Σ_i 1(x ∈ 𝓛_i)·EI_{i,t}(x)/c(x)`
-    /// (paper Eqs. 4–5). `best[i]` is the incumbent `z(x_i*(t))` per user
-    /// and `selected[x]` marks arms that must score `−∞` (already
-    /// dispatched). `use_cost = false` gives the cost-insensitive EI
-    /// ablation (rank by Eq. 4 instead of Eq. 5).
+    /// Score every arm for the asking `device`. Under
+    /// [`ScoreMode::CostRate`]:
+    /// `EIrate_t(x) = Σ_i 1(x ∈ 𝓛_i)·EI_{i,t}(x)/c(x)` (paper Eqs. 4–5);
+    /// [`ScoreMode::EiOnly`] is the cost-insensitive ablation (rank by
+    /// Eq. 4) and [`ScoreMode::DeviceRate`] divides by the asking
+    /// device's *time* `c(x, class_d)/s_d` instead of the device-blind
+    /// cost (arms infeasible on `class_d` score `−∞`). `best[i]` is the
+    /// incumbent `z(x_i*(t))` per user and `selected[x]` marks arms that
+    /// must score `−∞` (already dispatched).
     ///
     /// Returns a borrow of the backend's preallocated score buffer — no
     /// allocation on the per-decision hot path. The slice is valid until
     /// the next call on the backend.
-    fn eirate(&mut self, best: &[f64], selected: &[bool], use_cost: bool) -> &[f64];
+    fn eirate(&mut self, best: &[f64], selected: &[bool], mode: ScoreMode, device: DeviceView) -> &[f64];
 
     /// Argmax of the current EIrate over unselected arms, with
     /// deterministic lowest-index tie-breaking; `None` when every arm is
@@ -62,8 +67,14 @@ pub trait EiBackend {
     /// backend's mask convention — native uses `−∞`, the XLA artifact
     /// `−1e30`); [`NativeBackend`] overrides it with an `O(1)` read of
     /// its tournament-tree index.
-    fn select_arm(&mut self, best: &[f64], selected: &[bool], use_cost: bool) -> Option<ArmId> {
-        let scores = self.eirate(best, selected, use_cost);
+    fn select_arm(
+        &mut self,
+        best: &[f64],
+        selected: &[bool],
+        mode: ScoreMode,
+        device: DeviceView,
+    ) -> Option<ArmId> {
+        let scores = self.eirate(best, selected, mode, device);
         let mut best_arm = None;
         let mut best_score = f64::NEG_INFINITY;
         for (x, &s) in scores.iter().enumerate() {
@@ -99,6 +110,24 @@ pub trait EiBackend {
         false
     }
 
+    /// Fleet churn: `device` joined (or rejoined). The posterior and EI
+    /// sums don't depend on which devices are online, so the default is
+    /// a trivially-true no-op; [`NativeBackend`] additionally drops its
+    /// assembled score buffer / tournament tree when they were keyed to
+    /// a [`ScoreMode::DeviceRate`] asking device — the per-device cache
+    /// is stale-by-key once the asking-device set changes — forcing a
+    /// bulk reassembly (identical floats, so rebuild-oracle parity
+    /// holds) on the next decision.
+    fn device_joined(&mut self, _device: usize) -> bool {
+        true
+    }
+
+    /// Fleet churn: `device` left. Same contract as
+    /// [`EiBackend::device_joined`].
+    fn device_left(&mut self, _device: usize) -> bool {
+        true
+    }
+
     /// The revealed value of `arm` if it has finished, else `None`.
     /// Churn drivers use this to restore a rejoining tenant's incumbent
     /// from its already-finished arms; backends that cannot answer
@@ -121,6 +150,12 @@ pub struct NativeBackend {
     /// invalidation.
     user_arms: Vec<Vec<ArmId>>,
     cost: Vec<f64>,
+    /// Per-class cost table `class_cost[class][arm]` from the
+    /// [`CostModel`] (`+∞` = infeasible on that class); a single row
+    /// equal to `cost` when built without a model, so
+    /// [`ScoreMode::DeviceRate`] on class 0 at unit speed reproduces
+    /// [`ScoreMode::CostRate`] bitwise.
+    class_cost: Vec<Vec<f64>>,
     /// Cached per-arm summed EI `Σ_i 1(x∈𝓛_i)·EI_{i,t}(x)` (cost division
     /// and the selected-mask are applied at output time).
     ei_cache: Vec<f64>,
@@ -140,9 +175,13 @@ pub struct NativeBackend {
     tree: TournamentTree,
     /// Selected mask `score_buf`/`tree` were assembled against.
     last_selected: Vec<bool>,
-    /// Cost mode of the last assembly; `None` forces the first call to
-    /// assemble every arm.
-    last_use_cost: Option<bool>,
+    /// Normalized `(mode, class, speed-bits)` key of the last assembly
+    /// (see [`NativeBackend::mode_key`]); `None` forces the next call to
+    /// assemble every arm. Device-blind modes normalize to
+    /// `(mode, 0, 1.0)` so alternating devices never invalidates them;
+    /// under [`ScoreMode::DeviceRate`] the buffer/tree are per-device
+    /// state, rebuilt whenever a different `(class, speed)` asks.
+    last_key: Option<(ScoreMode, usize, u64)>,
     /// Tenant churn: which users are currently active. A shared arm's GP
     /// maintenance is dropped only once *every* owner has left.
     active_users: Vec<bool>,
@@ -155,7 +194,9 @@ pub struct NativeBackend {
 }
 
 impl NativeBackend {
-    /// Build from a problem's prior and membership structure.
+    /// Build from a problem's prior and membership structure, with the
+    /// uniform single-class cost table (every device class sees
+    /// `problem.cost`).
     pub fn new(problem: &Problem) -> Self {
         let n = problem.n_arms();
         NativeBackend {
@@ -163,6 +204,7 @@ impl NativeBackend {
             arm_users: problem.arm_users.clone(),
             user_arms: problem.user_arms.clone(),
             cost: problem.cost.clone(),
+            class_cost: vec![problem.cost.clone()],
             ei_cache: vec![0.0; n],
             // NaN sentinel: no incumbent vector bit-matches it, so the
             // first decision scores every arm.
@@ -172,9 +214,30 @@ impl NativeBackend {
             score_buf: vec![f64::NEG_INFINITY; n],
             tree: TournamentTree::new(n),
             last_selected: vec![false; n],
-            last_use_cost: None,
+            last_key: None,
             active_users: vec![true; problem.n_users],
             observed_z: vec![f64::NAN; n],
+        }
+    }
+
+    /// Build with a per-(arm, device-class) [`CostModel`]: the model's
+    /// dense table is copied in (so the backend stays `'static`) and
+    /// serves [`ScoreMode::DeviceRate`] lookups; the scheduler-visible
+    /// `problem` should be the engine's `sched_view` (Remark 1) so the
+    /// estimated-vs-true cost split carries over unchanged.
+    pub fn with_cost_model(problem: &Problem, model: &dyn CostModel) -> Self {
+        let mut b = NativeBackend::new(problem);
+        b.class_cost = model.class_table(problem.n_arms());
+        b
+    }
+
+    /// Normalized assembly cache key: device-blind modes collapse to
+    /// `(mode, 0, 1.0)` so which device asks never invalidates them.
+    #[inline]
+    fn mode_key(mode: ScoreMode, device: DeviceView) -> (ScoreMode, usize, u64) {
+        match mode {
+            ScoreMode::DeviceRate => (mode, device.class, device.speed.to_bits()),
+            ScoreMode::EiOnly | ScoreMode::CostRate => (mode, 0, 1.0f64.to_bits()),
         }
     }
 
@@ -197,32 +260,47 @@ impl NativeBackend {
         }
     }
 
-    /// Masked, cost-normalized score of arm `x` from the EI cache.
+    /// Masked, mode-normalized score of arm `x` from the EI cache. At
+    /// unit speed on class 0 of the uniform table, the
+    /// [`ScoreMode::DeviceRate`] arm `ei / (c / 1.0)` is bitwise
+    /// `ei / c` — the [`ScoreMode::CostRate`] score — which the
+    /// uniform-fleet byte-parity gates rely on.
     #[inline]
-    fn assemble_score(&self, x: ArmId, selected: &[bool], use_cost: bool) -> f64 {
+    fn assemble_score(&self, x: ArmId, selected: &[bool], mode: ScoreMode, device: DeviceView) -> f64 {
         if selected[x] {
-            f64::NEG_INFINITY
-        } else if use_cost {
-            self.ei_cache[x] / self.cost[x]
-        } else {
-            self.ei_cache[x]
+            return f64::NEG_INFINITY;
+        }
+        match mode {
+            ScoreMode::EiOnly => self.ei_cache[x],
+            ScoreMode::CostRate => self.ei_cache[x] / self.cost[x],
+            ScoreMode::DeviceRate => {
+                let c = self.class_cost[device.class][x];
+                if c.is_infinite() {
+                    // Infeasible on the asking device's class: never a
+                    // candidate for this device.
+                    f64::NEG_INFINITY
+                } else {
+                    self.ei_cache[x] / (c / device.speed)
+                }
+            }
         }
     }
 
     /// Bring `ei_cache`, `score_buf`, and the tournament tree up to date
-    /// with `(best, selected, use_cost)` — the shared core of
+    /// with `(best, selected, mode, device)` — the shared core of
     /// [`EiBackend::eirate`] and [`EiBackend::select_arm`]. Work done:
     ///
     /// 1. incumbent-driven invalidation (bit-compared per user);
     /// 2. EI rescoring of the dirty set, `O(|dirty| · owners)`;
     /// 3. score assembly + `O(log |𝓛|)` tree repair for exactly the arms
     ///    whose inputs moved: dirty arms, arms whose `selected` bit
-    ///    flipped (found by a cheap bool-diff sweep), or — on a cost-mode
-    ///    flip / first call — everything at once via an `O(|𝓛|)` bulk
-    ///    tree rebuild.
+    ///    flipped (found by a cheap bool-diff sweep), or — on a
+    ///    mode/asking-device change, a fleet-churn invalidation, or the
+    ///    first call — everything at once via an `O(|𝓛|)` bulk tree
+    ///    rebuild.
     ///
     /// No allocation in any path (all buffers are preallocated).
-    fn refresh(&mut self, best: &[f64], selected: &[bool], use_cost: bool) {
+    fn refresh(&mut self, best: &[f64], selected: &[bool], mode: ScoreMode, device: DeviceView) {
         debug_assert_eq!(best.len(), self.user_arms.len());
         let n = self.ei_cache.len();
         debug_assert_eq!(selected.len(), n);
@@ -240,7 +318,8 @@ impl NativeBackend {
         }
         // 2. Rescore the dirty set — O(|dirty| · owners) instead of the
         //    full O(|𝓛| · owners) rescan.
-        let rebuild_all = self.last_use_cost != Some(use_cost);
+        let key = Self::mode_key(mode, device);
+        let rebuild_all = self.last_key != Some(key);
         for &x in &self.dirty_arms {
             let mu = self.gp.posterior_mean(x);
             let sigma = self.gp.posterior_std(x);
@@ -253,21 +332,22 @@ impl NativeBackend {
             // 3a. Re-assemble the dirty arm's masked score and repair its
             //     tree path (skipped when a bulk rebuild is coming).
             if !rebuild_all {
-                let s = self.assemble_score(x, selected, use_cost);
+                let s = self.assemble_score(x, selected, mode, device);
                 self.score_buf[x] = s;
                 self.tree.update(x, s);
             }
         }
         self.dirty_arms.clear();
         if rebuild_all {
-            // 3b. Cost-mode flip or first call: every masked score is
-            //     stale at once — assemble the whole buffer and rebuild
-            //     the tree bottom-up in O(|𝓛|).
+            // 3b. Mode/asking-device change, fleet-churn invalidation, or
+            //     first call: every masked score is stale at once —
+            //     assemble the whole buffer and rebuild the tree
+            //     bottom-up in O(|𝓛|).
             for x in 0..n {
-                self.score_buf[x] = self.assemble_score(x, selected, use_cost);
+                self.score_buf[x] = self.assemble_score(x, selected, mode, device);
             }
             self.last_selected.copy_from_slice(selected);
-            self.last_use_cost = Some(use_cost);
+            self.last_key = Some(key);
             self.tree.rebuild_from(&self.score_buf);
             return;
         }
@@ -276,7 +356,7 @@ impl NativeBackend {
         for x in 0..n {
             if self.last_selected[x] != selected[x] {
                 self.last_selected[x] = selected[x];
-                let s = self.assemble_score(x, selected, use_cost);
+                let s = self.assemble_score(x, selected, mode, device);
                 self.score_buf[x] = s;
                 self.tree.update(x, s);
             }
@@ -312,15 +392,22 @@ impl EiBackend for NativeBackend {
         }
     }
 
-    fn eirate(&mut self, best: &[f64], selected: &[bool], use_cost: bool) -> &[f64] {
-        self.refresh(best, selected, use_cost);
+    fn eirate(&mut self, best: &[f64], selected: &[bool], mode: ScoreMode, device: DeviceView) -> &[f64] {
+        self.refresh(best, selected, mode, device);
         &self.score_buf
     }
 
-    fn select_arm(&mut self, best: &[f64], selected: &[bool], use_cost: bool) -> Option<ArmId> {
-        self.refresh(best, selected, use_cost);
+    fn select_arm(
+        &mut self,
+        best: &[f64],
+        selected: &[bool],
+        mode: ScoreMode,
+        device: DeviceView,
+    ) -> Option<ArmId> {
+        self.refresh(best, selected, mode, device);
         // O(1) argmax read off the tournament tree. −∞ means every arm is
-        // masked (unselected arms always score ≥ 0: EI ≥ 0, cost > 0).
+        // masked or infeasible for the asking device (unselected feasible
+        // arms always score ≥ 0: EI ≥ 0, cost > 0, speed > 0).
         let (score, arm) = self.tree.best();
         if score == f64::NEG_INFINITY {
             None
@@ -378,6 +465,29 @@ impl EiBackend for NativeBackend {
             None
         }
     }
+
+    /// In-place fleet join: the EI cache is untouched (posterior and
+    /// incumbents don't see devices), but a [`ScoreMode::DeviceRate`]
+    /// score buffer/tree is keyed to the last asking device and the
+    /// asking-device set just changed — drop the assembly key so the
+    /// next decision bulk-reassembles (identical floats from the same
+    /// EI cache, so this stays bit-exact vs the rebuild oracle).
+    fn device_joined(&mut self, _device: usize) -> bool {
+        if matches!(self.last_key, Some((ScoreMode::DeviceRate, _, _))) {
+            self.last_key = None;
+        }
+        true
+    }
+
+    /// In-place fleet leave: same invalidation as
+    /// [`NativeBackend::device_joined`] (the departed device may be the
+    /// one the buffer was assembled for).
+    fn device_left(&mut self, _device: usize) -> bool {
+        if matches!(self.last_key, Some((ScoreMode::DeviceRate, _, _))) {
+            self.last_key = None;
+        }
+        true
+    }
 }
 
 /// Reference scorer: the full `O(|𝓛| · owners)` rescan [`NativeBackend`]
@@ -391,12 +501,18 @@ pub fn rescan_eirate(
     cost: &[f64],
     best: &[f64],
     selected: &[bool],
-    use_cost: bool,
+    mode: ScoreMode,
+    device: DeviceView,
 ) -> Vec<f64> {
     let n = gp.n_arms();
     let mut out = vec![f64::NEG_INFINITY; n];
     for (x, slot) in out.iter_mut().enumerate() {
         if selected[x] {
+            continue;
+        }
+        // Under DeviceRate, `cost` is the asking class's column of the
+        // cost-model table (+∞ = infeasible there → stays −∞).
+        if mode == ScoreMode::DeviceRate && cost[x].is_infinite() {
             continue;
         }
         let mu = gp.posterior_mean(x);
@@ -405,7 +521,11 @@ pub fn rescan_eirate(
         for &u in &arm_users[x] {
             ei_sum += expected_improvement(mu, sigma, best[u]);
         }
-        *slot = if use_cost { ei_sum / cost[x] } else { ei_sum };
+        *slot = match mode {
+            ScoreMode::EiOnly => ei_sum,
+            ScoreMode::CostRate => ei_sum / cost[x],
+            ScoreMode::DeviceRate => ei_sum / (cost[x] / device.speed),
+        };
     }
     out
 }
@@ -414,6 +534,7 @@ pub fn rescan_eirate(
 mod tests {
     use super::*;
     use crate::linalg::Mat;
+    use crate::problem::PerClassCost;
 
     fn problem() -> Problem {
         let user_arms = vec![vec![0, 1], vec![1, 2]];
@@ -429,10 +550,14 @@ mod tests {
         }
     }
 
+    fn d0() -> DeviceView {
+        DeviceView::unit(0)
+    }
+
     #[test]
     fn eirate_masks_selected() {
         let mut b = NativeBackend::new(&problem());
-        let scores = b.eirate(&[0.0, 0.0], &[true, false, false], true);
+        let scores = b.eirate(&[0.0, 0.0], &[true, false, false], ScoreMode::CostRate, d0());
         assert_eq!(scores[0], f64::NEG_INFINITY);
         assert!(scores[1].is_finite() && scores[2].is_finite());
     }
@@ -442,7 +567,7 @@ mod tests {
         let mut b = NativeBackend::new(&problem());
         // Arm 1 belongs to both users; with equal incumbents its EI sum
         // is twice a single user's EI for the same (μ,σ).
-        let scores_no_cost = b.eirate(&[0.2, 0.2], &[false; 3], false);
+        let scores_no_cost = b.eirate(&[0.2, 0.2], &[false; 3], ScoreMode::EiOnly, d0());
         let single = expected_improvement(0.5, 1.0, 0.2);
         assert!((scores_no_cost[0] - single).abs() < 1e-12);
         assert!((scores_no_cost[1] - 2.0 * single).abs() < 1e-12);
@@ -451,20 +576,120 @@ mod tests {
     #[test]
     fn cost_divides_score() {
         let mut b = NativeBackend::new(&problem());
-        let with_cost = b.eirate(&[0.2, 0.2], &[false; 3], true).to_vec();
-        let without = b.eirate(&[0.2, 0.2], &[false; 3], false).to_vec();
+        let with_cost = b.eirate(&[0.2, 0.2], &[false; 3], ScoreMode::CostRate, d0()).to_vec();
+        let without = b.eirate(&[0.2, 0.2], &[false; 3], ScoreMode::EiOnly, d0()).to_vec();
         assert!((with_cost[2] - without[2] / 4.0).abs() < 1e-12);
     }
 
     #[test]
     fn observe_shifts_scores() {
         let mut b = NativeBackend::new(&problem());
-        let before = b.eirate(&[0.0, 0.0], &[false; 3], true).to_vec();
+        let before = b.eirate(&[0.0, 0.0], &[false; 3], ScoreMode::CostRate, d0()).to_vec();
         b.observe(0, 0.9);
-        let after = b.eirate(&[0.9, 0.0], &[true, false, false], true).to_vec();
+        let after = b.eirate(&[0.9, 0.0], &[true, false, false], ScoreMode::CostRate, d0()).to_vec();
         // Incumbent rose for user 0; arm 1's score must drop (same prior,
         // higher bar for one of its users).
         assert!(after[1] < before[1]);
+    }
+
+    #[test]
+    fn device_rate_on_unit_device_is_bitwise_cost_rate() {
+        // The degeneration identity the fleet byte-parity gates rely on:
+        // ei / (c / 1.0) == ei / c bitwise, for every arm.
+        let p = problem();
+        let mut aware = NativeBackend::new(&p);
+        let mut blind = NativeBackend::new(&p);
+        for b in [&mut aware, &mut blind] {
+            b.observe(0, 0.7);
+        }
+        let best = [0.7, 0.0];
+        let selected = [true, false, false];
+        let a = aware.eirate(&best, &selected, ScoreMode::DeviceRate, d0()).to_vec();
+        let c = blind.eirate(&best, &selected, ScoreMode::CostRate, d0()).to_vec();
+        for x in 0..3 {
+            assert_eq!(a[x].to_bits(), c[x].to_bits(), "arm {x}");
+        }
+    }
+
+    #[test]
+    fn device_rate_divides_by_time_not_cost() {
+        // Speed 2 halves execution time, doubling every feasible score.
+        let p = problem();
+        let mut b = NativeBackend::new(&p);
+        let best = [0.2, 0.2];
+        let slow = b.eirate(&best, &[false; 3], ScoreMode::DeviceRate, d0()).to_vec();
+        let fast_dev = DeviceView { id: 1, speed: 2.0, class: 0 };
+        let fast = b.eirate(&best, &[false; 3], ScoreMode::DeviceRate, fast_dev).to_vec();
+        for x in 0..3 {
+            assert!((fast[x] - 2.0 * slow[x]).abs() < 1e-12, "arm {x}");
+        }
+    }
+
+    #[test]
+    fn infeasible_arm_scores_neg_inf_and_is_never_selected() {
+        let p = problem();
+        // Class 1 has memory limit 3: arm 2 (base cost 4) can't run there.
+        let model = PerClassCost::from_problem(&p, vec![1.0, 1.5], vec![f64::INFINITY, 3.0]);
+        let mut b = NativeBackend::with_cost_model(&p, &model);
+        let small_dev = DeviceView { id: 1, speed: 1.0, class: 1 };
+        let best = [0.0, 0.0];
+        let scores = b.eirate(&best, &[false; 3], ScoreMode::DeviceRate, small_dev).to_vec();
+        assert_eq!(scores[2], f64::NEG_INFINITY);
+        assert!(scores[0].is_finite() && scores[1].is_finite());
+        // With everything else masked, the infeasible arm is not picked
+        // even though it is the only unselected arm.
+        let pick = b.select_arm(&best, &[true, true, false], ScoreMode::DeviceRate, small_dev);
+        assert_eq!(pick, None);
+        // A class-0 device (no limit) still serves it.
+        let pick = b.select_arm(&best, &[true, true, false], ScoreMode::DeviceRate, d0());
+        assert_eq!(pick, Some(2));
+    }
+
+    #[test]
+    fn alternating_devices_match_rescan_per_device() {
+        // DeviceRate scores must be exact for whichever device asks,
+        // including after per-device cache rebuilds, and the fleet-churn
+        // hooks must not corrupt the assembly.
+        let p = problem();
+        let model = PerClassCost::from_problem(&p, vec![1.0, 2.0], vec![f64::INFINITY, 3.0]);
+        let mut b = NativeBackend::with_cost_model(&p, &model);
+        let table = model.class_table(3);
+        let devs = [d0(), DeviceView { id: 1, speed: 0.5, class: 1 }, DeviceView { id: 2, speed: 2.0, class: 0 }];
+        let mut selected = vec![false; 3];
+        let mut best = vec![0.0f64; 2];
+        let zs = [0.7, 0.4, 0.9];
+        for step in 0..3 {
+            for &dev in &devs {
+                let cached = b.eirate(&best, &selected, ScoreMode::DeviceRate, dev).to_vec();
+                let oracle = rescan_eirate(
+                    b.gp(),
+                    &p.arm_users,
+                    &table[dev.class],
+                    &best,
+                    &selected,
+                    ScoreMode::DeviceRate,
+                    dev,
+                );
+                for x in 0..3 {
+                    assert!(
+                        cached[x] == oracle[x],
+                        "step {step} dev {} arm {x}: {} vs {}",
+                        dev.id,
+                        cached[x],
+                        oracle[x]
+                    );
+                }
+            }
+            b.observe(step, zs[step]);
+            selected[step] = true;
+            for &u in &p.arm_users[step] {
+                best[u] = best[u].max(zs[step]);
+            }
+            // Fleet churn mid-sequence: invalidates the per-device
+            // assembly, must reproduce identical floats afterwards.
+            assert!(b.device_left(1));
+            assert!(b.device_joined(1));
+        }
     }
 
     #[test]
@@ -488,14 +713,14 @@ mod tests {
         let mut best = vec![0.0f64; 2];
         let zs = [0.7, 0.4, 0.9];
         for step in 0..3 {
-            for use_cost in [true, false] {
-                let cached = b.eirate(&best, &selected, use_cost).to_vec();
+            for mode in [ScoreMode::CostRate, ScoreMode::EiOnly] {
+                let cached = b.eirate(&best, &selected, mode, d0()).to_vec();
                 let oracle =
-                    rescan_eirate(b.gp(), &p.arm_users, &p.cost, &best, &selected, use_cost);
+                    rescan_eirate(b.gp(), &p.arm_users, &p.cost, &best, &selected, mode, d0());
                 for x in 0..3 {
                     assert!(
                         cached[x] == oracle[x],
-                        "step {step} use_cost {use_cost} arm {x}: {} vs {}",
+                        "step {step} mode {mode:?} arm {x}: {} vs {}",
                         cached[x],
                         oracle[x]
                     );
@@ -516,17 +741,17 @@ mod tests {
         let p = problem();
         let mut b = NativeBackend::new(&p);
         let best = [0.0, 0.0];
-        let _ = b.eirate(&best, &[false; 3], true);
+        let _ = b.eirate(&best, &[false; 3], ScoreMode::CostRate, d0());
         assert_eq!(b.pending_dirty(), 0);
-        let _ = b.eirate(&best, &[false; 3], true);
+        let _ = b.eirate(&best, &[false; 3], ScoreMode::CostRate, d0());
         assert_eq!(b.pending_dirty(), 0);
         // An observation dirties exactly the moved arm (identity prior)…
         b.observe(0, 0.3);
         assert_eq!(b.pending_dirty(), 1);
         // …and an incumbent move dirties exactly that user's arms.
-        let _ = b.eirate(&[0.3, 0.0], &[true, false, false], true);
+        let _ = b.eirate(&[0.3, 0.0], &[true, false, false], ScoreMode::CostRate, d0());
         assert_eq!(b.pending_dirty(), 0);
-        let _ = b.eirate(&[0.4, 0.0], &[true, false, false], true);
+        let _ = b.eirate(&[0.4, 0.0], &[true, false, false], ScoreMode::CostRate, d0());
         // user 0 owns arms {0, 1}: both were rescored and drained.
         assert_eq!(b.pending_dirty(), 0);
     }
@@ -543,9 +768,9 @@ mod tests {
         let mut best = vec![0.0f64; 2];
         let zs = [0.7, 0.4, 0.9];
         for step in 0..3 {
-            for use_cost in [true, false] {
+            for mode in [ScoreMode::CostRate, ScoreMode::EiOnly, ScoreMode::DeviceRate] {
                 let scan = {
-                    let scores = b.eirate(&best, &selected, use_cost);
+                    let scores = b.eirate(&best, &selected, mode, d0());
                     let mut arg = None;
                     let mut max = f64::NEG_INFINITY;
                     for (x, &s) in scores.iter().enumerate() {
@@ -556,8 +781,8 @@ mod tests {
                     }
                     arg
                 };
-                let tree = b.select_arm(&best, &selected, use_cost);
-                assert_eq!(tree, scan, "step {step} use_cost {use_cost}");
+                let tree = b.select_arm(&best, &selected, mode, d0());
+                assert_eq!(tree, scan, "step {step} mode {mode:?}");
             }
             b.observe(step, zs[step]);
             selected[step] = true;
@@ -566,7 +791,7 @@ mod tests {
             }
         }
         // Exhausted: every arm masked → no candidate.
-        assert_eq!(b.select_arm(&best, &selected, true), None);
+        assert_eq!(b.select_arm(&best, &selected, ScoreMode::CostRate, d0()), None);
     }
 
     #[test]
@@ -578,8 +803,8 @@ mod tests {
             fn observe(&mut self, arm: ArmId, z: f64) {
                 self.0.observe(arm, z);
             }
-            fn eirate(&mut self, best: &[f64], selected: &[bool], use_cost: bool) -> &[f64] {
-                self.0.eirate(best, selected, use_cost)
+            fn eirate(&mut self, best: &[f64], selected: &[bool], mode: ScoreMode, device: DeviceView) -> &[f64] {
+                self.0.eirate(best, selected, mode, device)
             }
             // select_arm: default linear scan.
             fn posterior(&mut self) -> (Vec<f64>, Vec<f64>) {
@@ -597,8 +822,8 @@ mod tests {
         let zs = [0.6, 0.8, 0.2];
         for step in 0..3 {
             assert_eq!(
-                tree.select_arm(&best, &selected, true),
-                lin.select_arm(&best, &selected, true),
+                tree.select_arm(&best, &selected, ScoreMode::CostRate, d0()),
+                lin.select_arm(&best, &selected, ScoreMode::CostRate, d0()),
                 "step {step}"
             );
             tree.observe(step, zs[step]);
@@ -614,10 +839,10 @@ mod tests {
     fn incumbent_move_invalidates_owned_arms_only() {
         let p = problem();
         let mut b = NativeBackend::new(&p);
-        let first = b.eirate(&[0.0, 0.0], &[false; 3], true).to_vec();
+        let first = b.eirate(&[0.0, 0.0], &[false; 3], ScoreMode::CostRate, d0()).to_vec();
         // Raise user 1's incumbent: arms 1 and 2 (owned by user 1) must
         // drop; arm 0 (user 0 only) must be byte-identical from cache.
-        let second = b.eirate(&[0.0, 0.5], &[false; 3], true).to_vec();
+        let second = b.eirate(&[0.0, 0.5], &[false; 3], ScoreMode::CostRate, d0()).to_vec();
         assert_eq!(first[0], second[0], "unowned arm served from cache");
         assert!(second[1] < first[1]);
         assert!(second[2] < first[2]);

@@ -318,6 +318,11 @@ impl Policy for Oracle {
 mod tests {
     use super::*;
     use crate::linalg::Mat;
+    use crate::sched::DeviceView;
+
+    fn ctx<'a>(p: &'a Problem, selected: &'a [bool], observed: &'a [bool]) -> SchedContext<'a> {
+        SchedContext { problem: p, selected, observed, now: 0.0, device: DeviceView::unit(0) }
+    }
 
     fn problem() -> Problem {
         // 3 users × 2 arms, disjoint.
@@ -342,9 +347,7 @@ mod tests {
         let observed = vec![false; 6];
         let mut owners = Vec::new();
         for _ in 0..3 {
-            let a = pol
-                .select(&SchedContext { problem: &p, selected: &selected, observed: &observed, now: 0.0 })
-                .unwrap();
+            let a = pol.select(&ctx(&p, &selected, &observed)).unwrap();
             selected[a] = true;
             owners.push(p.arm_users[a][0]);
         }
@@ -361,9 +364,7 @@ mod tests {
         let selected = vec![true, true, false, false, false, false];
         let observed = vec![true, true, false, false, false, false];
         for _ in 0..4 {
-            let a = pol
-                .select(&SchedContext { problem: &p, selected: &selected, observed: &observed, now: 0.0 })
-                .unwrap();
+            let a = pol.select(&ctx(&p, &selected, &observed)).unwrap();
             assert!(a >= 2, "user 0 has nothing left");
         }
     }
@@ -376,29 +377,13 @@ mod tests {
         let picks_a: Vec<_> = {
             let mut pol = GpEiRandom::new(&p, 7);
             (0..5)
-                .map(|_| {
-                    pol.select(&SchedContext {
-                        problem: &p,
-                        selected: &selected,
-                        observed: &observed,
-                        now: 0.0,
-                    })
-                    .unwrap()
-                })
+                .map(|_| pol.select(&ctx(&p, &selected, &observed)).unwrap())
                 .collect()
         };
         let picks_b: Vec<_> = {
             let mut pol = GpEiRandom::new(&p, 7);
             (0..5)
-                .map(|_| {
-                    pol.select(&SchedContext {
-                        problem: &p,
-                        selected: &selected,
-                        observed: &observed,
-                        now: 0.0,
-                    })
-                    .unwrap()
-                })
+                .map(|_| pol.select(&ctx(&p, &selected, &observed)).unwrap())
                 .collect()
         };
         assert_eq!(picks_a, picks_b);
@@ -411,16 +396,12 @@ mod tests {
         let mut selected = vec![false; 6];
         let observed = vec![false; 6];
         for _ in 0..6 {
-            let a = pol
-                .select(&SchedContext { problem: &p, selected: &selected, observed: &observed, now: 0.0 })
-                .unwrap();
+            let a = pol.select(&ctx(&p, &selected, &observed)).unwrap();
             assert!(!selected[a]);
             selected[a] = true;
             pol.observe(&p, a, 0.5);
         }
-        assert!(pol
-            .select(&SchedContext { problem: &p, selected: &selected, observed: &selected, now: 0.0 })
-            .is_none());
+        assert!(pol.select(&ctx(&p, &selected, &selected)).is_none());
     }
 
     #[test]
@@ -432,9 +413,7 @@ mod tests {
         let observed = vec![false; 6];
         let mut first_three = Vec::new();
         for _ in 0..3 {
-            let a = pol
-                .select(&SchedContext { problem: &p, selected: &selected, observed: &observed, now: 0.0 })
-                .unwrap();
+            let a = pol.select(&ctx(&p, &selected, &observed)).unwrap();
             selected[a] = true;
             first_three.push(a);
         }

@@ -85,7 +85,12 @@ impl Policy for MmGpEiFantasy {
 mod tests {
     use super::*;
     use crate::kernels::{Kernel, Matern52};
+    use crate::sched::DeviceView;
     use crate::sim::{simulate, SimConfig};
+
+    fn ctx<'a>(p: &'a Problem, selected: &'a [bool], observed: &'a [bool]) -> SchedContext<'a> {
+        SchedContext { problem: p, selected, observed, now: 0.0, device: DeviceView::unit(0) }
+    }
 
     /// One user, correlated arms on a line — fantasy conditioning must
     /// push the second pick away from a pending arm's neighborhood.
@@ -116,15 +121,11 @@ mod tests {
         let observed = vec![false; 8];
         // First pick with nothing pending.
         let mut selected = vec![false; 8];
-        let first = pol
-            .select(&SchedContext { problem: &p, selected: &selected, observed: &observed, now: 0.0 })
-            .unwrap();
+        let first = pol.select(&ctx(&p, &selected, &observed)).unwrap();
         selected[first] = true;
         // Second pick while the first is pending: must not be adjacent
         // (the fantasy collapses σ in the neighborhood).
-        let second = pol
-            .select(&SchedContext { problem: &p, selected: &selected, observed: &observed, now: 0.0 })
-            .unwrap();
+        let second = pol.select(&ctx(&p, &selected, &observed)).unwrap();
         let dist = (first as i64 - second as i64).abs();
         assert!(dist >= 2, "fantasy pick {second} too close to pending {first}");
     }

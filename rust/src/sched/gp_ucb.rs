@@ -169,7 +169,12 @@ impl Policy for GpUcbRoundRobin {
 mod tests {
     use super::*;
     use crate::linalg::Mat;
+    use crate::sched::DeviceView;
     use crate::sim::{simulate, SimConfig};
+
+    fn test_ctx<'a>(p: &'a Problem, selected: &'a [bool], observed: &'a [bool]) -> SchedContext<'a> {
+        SchedContext { problem: p, selected, observed, now: 0.0, device: DeviceView::unit(0) }
+    }
 
     fn problem() -> (Problem, crate::problem::Truth) {
         let user_arms = vec![vec![0, 1, 2], vec![3, 4, 5]];
@@ -220,7 +225,7 @@ mod tests {
         pol.observe(&p, 1, 0.9);
         let selected = vec![false, true, false, false, false, false];
         let observed = selected.clone();
-        let ctx = SchedContext { problem: &p, selected: &selected, observed: &observed, now: 0.0 };
+        let ctx = test_ctx(&p, &selected, &observed);
         let pick = pol.select(&ctx).unwrap();
         // User 1 has incumbent 0 → any of their arms dominates user 0's
         // remaining arms; cheapest user-1 arm (3, cost 1.0) should win.
@@ -234,15 +239,11 @@ mod tests {
         let mut selected = vec![false; 6];
         let observed = vec![false; 6];
         for _ in 0..6 {
-            let a = pol
-                .select(&SchedContext { problem: &p, selected: &selected, observed: &observed, now: 0.0 })
-                .unwrap();
+            let a = pol.select(&test_ctx(&p, &selected, &observed)).unwrap();
             assert!(!selected[a]);
             selected[a] = true;
             pol.observe(&p, a, t.z[a]);
         }
-        assert!(pol
-            .select(&SchedContext { problem: &p, selected: &selected, observed: &selected, now: 0.0 })
-            .is_none());
+        assert!(pol.select(&test_ctx(&p, &selected, &selected)).is_none());
     }
 }

@@ -1,7 +1,7 @@
 //! The paper's Algorithm 1: **MM-GP-EI** (GP-EI-MDMT in the experiments).
 
-use super::{EiBackend, Incumbents, NativeBackend, Policy, SchedContext};
-use crate::problem::{ArmId, Problem, UserId};
+use super::{DeviceView, EiBackend, Incumbents, NativeBackend, Policy, SchedContext, ScoreMode};
+use crate::problem::{ArmId, CostModel, Problem, UserId};
 
 /// Multi-device, multi-tenant GP-EI.
 ///
@@ -9,13 +9,16 @@ use crate::problem::{ArmId, Problem, UserId};
 /// policy refreshes per-user incumbents and dispatches
 /// `argmax_{x ∉ 𝓛_ob ∪ running} EIrate_t(x)` (Algorithm 1, line 8).
 ///
-/// Flags:
-/// * `use_cost = false` — ablation A1: rank by plain summed EI (Eq. 4)
-///   instead of EIrate (Eq. 5), i.e. drop the paper's time sensitivity.
+/// Variants, selected by [`ScoreMode`]:
+/// * [`MmGpEi::cost_insensitive`] — ablation A1: rank by plain summed EI
+///   (Eq. 4) instead of EIrate (Eq. 5), i.e. drop time sensitivity;
+/// * [`MmGpEi::device_aware`] / [`MmGpEi::with_cost_model`] — rank by
+///   `EI/(c(x, class_d)/s_d)` for the asking device, the first policy
+///   whose `device_{joined,left}` hooks do real work.
 pub struct MmGpEi {
     backend: Box<dyn EiBackend>,
     incumbents: Incumbents,
-    use_cost: bool,
+    mode: ScoreMode,
     name: String,
     /// Reusable incumbent-vector buffer (zero-allocation select path).
     best_buf: Vec<f64>,
@@ -28,7 +31,8 @@ pub struct MmGpEi {
 }
 
 impl MmGpEi {
-    /// Standard construction with the native rust GP backend.
+    /// Standard construction with the native rust GP backend
+    /// (device-blind EIrate, [`ScoreMode::CostRate`]).
     pub fn new(problem: &Problem) -> Self {
         Self::with_backend(problem, Box::new(NativeBackend::new(problem)))
     }
@@ -40,7 +44,7 @@ impl MmGpEi {
         MmGpEi {
             backend,
             incumbents: Incumbents::new(problem.n_users),
-            use_cost: true,
+            mode: ScoreMode::CostRate,
             name,
             best_buf: Vec::with_capacity(problem.n_users),
             active_users: vec![true; problem.n_users],
@@ -50,8 +54,32 @@ impl MmGpEi {
     /// Ablation: cost-insensitive variant ranking by summed EI only.
     pub fn cost_insensitive(problem: &Problem) -> Self {
         let mut p = Self::new(problem);
-        p.use_cost = false;
+        p.mode = ScoreMode::EiOnly;
         p.name = "GP-EI-MDMT[no-cost]".into();
+        p
+    }
+
+    /// Device-aware variant over the uniform cost table: rank by
+    /// `EI/(c(x)/s_d)` for the asking device. On a uniform unit-speed
+    /// fleet this degenerates bitwise to [`MmGpEi::new`] (`x/1.0` is an
+    /// IEEE identity) — pinned by the fleet byte-parity gates.
+    pub fn device_aware(problem: &Problem) -> Self {
+        let mut p = Self::new(problem);
+        p.mode = ScoreMode::DeviceRate;
+        p.name = "GP-EI-MDMT[device]".into();
+        p
+    }
+
+    /// Device-aware variant over a per-(arm, device-class)
+    /// [`CostModel`]: rank by `EI/(c(x, class_d)/s_d)`; arms infeasible
+    /// on the asking device's class (memory limit) are non-candidates
+    /// there. The model's table is copied into the backend, so the
+    /// policy stays `'static`.
+    pub fn with_cost_model(problem: &Problem, model: &dyn CostModel) -> Self {
+        let backend = Box::new(NativeBackend::with_cost_model(problem, model));
+        let mut p = Self::with_backend(problem, backend);
+        p.mode = ScoreMode::DeviceRate;
+        p.name = "GP-EI-MDMT[device]".into();
         p
     }
 
@@ -68,13 +96,14 @@ impl MmGpEi {
         self.best_buf.extend((0..problem.n_users).map(|u| incumbents.value(u)));
     }
 
-    /// Current EIrate scores for all arms (−∞ for selected arms).
-    /// Exposed for tests and for the live coordinator's metrics endpoint.
-    /// (Copies the backend's score buffer; the hot path in
-    /// [`Policy::select`] reads the backend's argmax index instead.)
+    /// Current EIrate scores for all arms (−∞ for selected arms), as the
+    /// asking device in `ctx` sees them. Exposed for tests and for the
+    /// live coordinator's metrics endpoint. (Copies the backend's score
+    /// buffer; the hot path in [`Policy::select`] reads the backend's
+    /// argmax index instead.)
     pub fn scores(&mut self, ctx: &SchedContext) -> Vec<f64> {
         self.fill_best(ctx.problem);
-        self.backend.eirate(&self.best_buf, ctx.selected, self.use_cost).to_vec()
+        self.backend.eirate(&self.best_buf, ctx.selected, self.mode, ctx.device).to_vec()
     }
 }
 
@@ -90,7 +119,7 @@ impl Policy for MmGpEi {
         // `sched::backend` module docs); the trait's default linear scan
         // elsewhere. Both skip dispatched arms regardless of the
         // backend's mask convention (native −∞, the XLA artifact −1e30).
-        self.backend.select_arm(&self.best_buf, ctx.selected, self.use_cost)
+        self.backend.select_arm(&self.best_buf, ctx.selected, self.mode, ctx.device)
     }
 
     fn observe(&mut self, problem: &Problem, arm: ArmId, z: f64) {
@@ -139,19 +168,20 @@ impl Policy for MmGpEi {
         true
     }
 
-    /// Device fleet churn is a no-op for MM-GP-EI: the shared posterior,
-    /// incumbents, and EIrate scores are functions of the *arm* history
-    /// only — which devices are online never enters Eqs. 4–5 — so the
-    /// in-place "change" is trivially bit-identical to the from-scratch
-    /// rebuild oracle (the fleet parity gates pin this).
-    fn device_joined(&mut self, _problem: &Problem, _device: usize) -> bool {
-        true
+    /// Device fleet churn, delegated to the backend: the shared
+    /// posterior and incumbents never see devices, but a
+    /// [`ScoreMode::DeviceRate`] backend keys its assembled score
+    /// buffer/tournament tree on the asking device and must drop that
+    /// cache when the fleet changes (bit-identical on reassembly, so
+    /// the in-place path still matches the rebuild oracle — the fleet
+    /// parity gates pin this).
+    fn device_joined(&mut self, _problem: &Problem, device: usize) -> bool {
+        self.backend.device_joined(device)
     }
 
-    /// See `device_joined` above: same no-op contract on a device
-    /// leave.
-    fn device_left(&mut self, _problem: &Problem, _device: usize) -> bool {
-        true
+    /// See [`MmGpEi::device_joined`]: same delegation on a device leave.
+    fn device_left(&mut self, _problem: &Problem, device: usize) -> bool {
+        self.backend.device_left(device)
     }
 }
 
@@ -159,6 +189,7 @@ impl Policy for MmGpEi {
 mod tests {
     use super::*;
     use crate::linalg::Mat;
+    use crate::problem::PerClassCost;
 
     /// 2 users × 2 arms each, independent prior, distinct costs.
     fn problem() -> Problem {
@@ -176,7 +207,16 @@ mod tests {
     }
 
     fn ctx<'a>(p: &'a Problem, selected: &'a [bool], observed: &'a [bool]) -> SchedContext<'a> {
-        SchedContext { problem: p, selected, observed, now: 0.0 }
+        ctx_on(p, selected, observed, DeviceView::unit(0))
+    }
+
+    fn ctx_on<'a>(
+        p: &'a Problem,
+        selected: &'a [bool],
+        observed: &'a [bool],
+        device: DeviceView,
+    ) -> SchedContext<'a> {
+        SchedContext { problem: p, selected, observed, now: 0.0, device }
     }
 
     #[test]
@@ -238,9 +278,53 @@ mod tests {
     }
 
     #[test]
+    fn device_aware_unit_device_matches_blind_bitwise() {
+        // The degeneration identity behind the fleet byte-parity gates.
+        let p = problem();
+        let mut aware = MmGpEi::device_aware(&p);
+        let mut blind = MmGpEi::new(&p);
+        aware.observe(&p, 0, 0.6);
+        blind.observe(&p, 0, 0.6);
+        let selected = vec![true, false, false, false];
+        let observed = vec![true, false, false, false];
+        let a = aware.scores(&ctx(&p, &selected, &observed));
+        let b = blind.scores(&ctx(&p, &selected, &observed));
+        for x in 0..4 {
+            assert_eq!(a[x].to_bits(), b[x].to_bits(), "arm {x}");
+        }
+        assert_eq!(
+            aware.select(&ctx(&p, &selected, &observed)),
+            blind.select(&ctx(&p, &selected, &observed))
+        );
+    }
+
+    #[test]
+    fn device_aware_skips_infeasible_arm_for_small_class() {
+        let p = problem();
+        // Class 1 devices can't hold arm 3 (base cost 10 > limit 5).
+        let model = PerClassCost::from_problem(&p, vec![1.0, 1.0], vec![f64::INFINITY, 5.0]);
+        let mut pol = MmGpEi::with_cost_model(&p, &model);
+        let selected = vec![true, true, true, false];
+        let observed = vec![true, true, true, false];
+        let small = DeviceView { id: 1, speed: 1.0, class: 1 };
+        assert_eq!(pol.select(&ctx_on(&p, &selected, &observed, small)), None);
+        let big = DeviceView { id: 0, speed: 1.0, class: 0 };
+        assert_eq!(pol.select(&ctx_on(&p, &selected, &observed, big)), Some(3));
+    }
+
+    #[test]
+    fn device_hooks_report_in_place() {
+        let p = problem();
+        let mut pol = MmGpEi::device_aware(&p);
+        assert!(pol.device_joined(&p, 1));
+        assert!(pol.device_left(&p, 1));
+    }
+
+    #[test]
     fn name_reflects_variant() {
         let p = problem();
         assert_eq!(MmGpEi::new(&p).name(), "GP-EI-MDMT[native]");
         assert_eq!(MmGpEi::cost_insensitive(&p).name(), "GP-EI-MDMT[no-cost]");
+        assert_eq!(MmGpEi::device_aware(&p).name(), "GP-EI-MDMT[device]");
     }
 }

@@ -32,6 +32,49 @@ pub use mm_gp_ei::MmGpEi;
 
 use crate::problem::{ArmId, Problem, UserId};
 
+/// How a backend turns per-arm EI sums into dispatch scores.
+///
+/// Replaces the old boolean-blind `use_cost: bool` plumbing: the third
+/// variant could not be expressed as a bool, and call sites read as
+/// `eirate(best, selected, ScoreMode::CostRate, device)` instead of an
+/// opaque `true`.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ScoreMode {
+    /// Rank by raw `EI(x)` — the paper's cost-insensitive ablation.
+    EiOnly,
+    /// Rank by `EI(x) / c(x)` — Algorithm 1's EIrate, device-blind.
+    CostRate,
+    /// Rank by `EI(x) / (c(x, class_d) / s_d)` for the *asking* device —
+    /// device-aware EIrate over a per-(arm, device-class)
+    /// [`crate::problem::CostModel`]; arms infeasible on the asking
+    /// device's class score `−∞` (non-candidates).
+    DeviceRate,
+}
+
+/// The asking device at a decision point, as visible to a policy.
+///
+/// On a uniform unit fleet this is `DeviceView::unit(id)` — speed `1.0`,
+/// class `0` — and [`ScoreMode::DeviceRate`] scoring degenerates bitwise
+/// to [`ScoreMode::CostRate`] (`x / 1.0` and `x · 1.0` are IEEE
+/// identities), which is what the byte-parity gates pin.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct DeviceView {
+    /// Engine device index.
+    pub id: usize,
+    /// Relative speed `s_d` (execution time = `c(x, class) / s_d`).
+    pub speed: f64,
+    /// Cost-model class (index into a [`crate::problem::CostModel`]).
+    pub class: usize,
+}
+
+impl DeviceView {
+    /// The view every pre-device-aware call site implicitly assumed:
+    /// unit speed, class 0.
+    pub fn unit(id: usize) -> Self {
+        DeviceView { id, speed: 1.0, class: 0 }
+    }
+}
+
 /// Incumbent value used for a user with no observation yet.
 ///
 /// The paper's protocol warm-starts two models per user, so the incumbent
@@ -57,6 +100,10 @@ pub struct SchedContext<'a> {
     pub observed: &'a [bool],
     /// Current (virtual or wall-clock) time.
     pub now: f64,
+    /// The device asking for work. Device-blind policies ignore it;
+    /// device-aware ones (e.g. [`MmGpEi::device_aware`]) score
+    /// `EI/(c(x, class_d)/s_d)` for exactly this device.
+    pub device: DeviceView,
 }
 
 impl<'a> SchedContext<'a> {
@@ -109,13 +156,14 @@ pub trait Policy {
     /// Same in-place/rebuild contract as the tenant hooks: the default
     /// `false` routes through the engine's from-scratch rebuild, so
     /// every policy is fleet-correct without changes. [`MmGpEi`]
-    /// overrides this with a trivially-true no-op — neither the shared
-    /// posterior, the incumbents, nor the EIrate scores depend on which
-    /// devices are online (EIrate ranks arms, not devices) — so the
-    /// in-place path is bit-identical to the rebuild oracle (pinned by
-    /// the fleet parity gates in `rust/tests/engine_parity.rs` and
-    /// `benches/fig7_elastic.rs`). A future device-aware policy (e.g.
-    /// speed-aware EIrate) would do real work here.
+    /// overrides this by delegating to its backend: the shared posterior
+    /// and incumbents don't depend on which devices are online, but a
+    /// [`ScoreMode::DeviceRate`] backend keys its score buffer and
+    /// tournament tree on the last asking device's `(class, speed)`, so
+    /// the hook invalidates that cache (the next decision bulk-rescores
+    /// for whichever device asks). Pinned bit-identical to the
+    /// [`ForceRebuild`] oracle by the fleet parity gates in
+    /// `rust/tests/engine_parity.rs` and `benches/fig7_elastic.rs`.
     fn device_joined(&mut self, _problem: &Problem, _device: usize) -> bool {
         false
     }
@@ -251,8 +299,20 @@ mod tests {
         let p = two_user_problem();
         let selected = vec![true, false, false, true];
         let observed = vec![true, false, false, false];
-        let ctx = SchedContext { problem: &p, selected: &selected, observed: &observed, now: 0.0 };
+        let ctx = SchedContext {
+            problem: &p,
+            selected: &selected,
+            observed: &observed,
+            now: 0.0,
+            device: DeviceView::unit(0),
+        };
         let cands: Vec<_> = ctx.candidates().collect();
         assert_eq!(cands, vec![1, 2]);
+    }
+
+    #[test]
+    fn unit_device_view_is_speed_one_class_zero() {
+        let d = DeviceView::unit(3);
+        assert_eq!(d, DeviceView { id: 3, speed: 1.0, class: 0 });
     }
 }

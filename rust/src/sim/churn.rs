@@ -24,9 +24,10 @@
 use std::time::Duration;
 
 use super::{Observation, SimConfig};
+use crate::config::ExperimentConfig;
 use crate::engine::{self, EngineParams, PolicyFactory, PolicyHost, Tenancy, VirtualClock};
 use crate::metrics::StepCurve;
-use crate::problem::{ChurnSchedule, DeviceFleet, Problem, Truth};
+use crate::problem::{ChurnSchedule, Problem, Truth};
 
 /// Result of one simulated churn run.
 #[derive(Clone, Debug)]
@@ -77,12 +78,13 @@ pub fn simulate_churn(
     config: &SimConfig,
 ) -> ChurnResult {
     assert!(config.n_devices >= 1, "need at least one device");
-    let fleet = DeviceFleet::uniform(config.n_devices);
+    let fleet = ExperimentConfig::device_fleet(config.n_devices);
     let mut clock = VirtualClock::new(config.n_devices);
     let params = EngineParams {
         problem,
         truth,
         sched_view: None,
+        cost_model: None,
         fleet: &fleet,
         tenancy: Tenancy::Churn(schedule),
         warm_start_per_user: config.warm_start_per_user,

@@ -30,9 +30,10 @@ pub use churn::{simulate_churn, ChurnResult};
 
 use std::time::Duration;
 
+use crate::config::ExperimentConfig;
 use crate::engine::{self, EngineParams, PolicyFactory, PolicyHost, Tenancy, VirtualClock};
 use crate::metrics::StepCurve;
-use crate::problem::{DeviceFleet, Problem, Truth};
+use crate::problem::{CostModel, DeviceFleet, Problem, Truth};
 use crate::sched::Policy;
 
 pub use crate::engine::Observation;
@@ -171,12 +172,13 @@ pub fn simulate_with_estimates(
         None => None,
     };
     assert!(config.n_devices >= 1, "need at least one device");
-    let fleet = DeviceFleet::uniform(config.n_devices);
+    let fleet = ExperimentConfig::device_fleet(config.n_devices);
     let mut clock = VirtualClock::new(config.n_devices);
     let params = EngineParams {
         problem,
         truth,
         sched_view: view,
+        cost_model: None,
         fleet: &fleet,
         tenancy: Tenancy::Static,
         warm_start_per_user: config.warm_start_per_user,
@@ -209,11 +211,33 @@ pub fn simulate_fleet(
     factory: &PolicyFactory,
     config: &SimConfig,
 ) -> FleetResult {
+    simulate_fleet_with_cost_model(problem, truth, fleet, factory, config, None)
+}
+
+/// Like [`simulate_fleet`], but devices are charged per-(arm, class)
+/// costs from `cost_model` (e.g. [`crate::problem::PerClassCost`]): a
+/// device of class `k` runs arm `x` for `c(x, k)/s_d` time units, and an
+/// arm the model declares infeasible on `k` never runs there — queue
+/// heads are left for a fitting device, and a device-blind policy pick
+/// that does not fit idles the asking device. `None` delegates to the
+/// historical `problem.cost` charging (byte-identical to
+/// [`simulate_fleet`]). Device-aware policies
+/// ([`crate::sched::MmGpEi::with_cost_model`]) see the asking device in
+/// `SchedContext::device` and rank by `EI/(c(x, class_d)/s_d)`.
+pub fn simulate_fleet_with_cost_model(
+    problem: &Problem,
+    truth: &Truth,
+    fleet: &DeviceFleet,
+    factory: &PolicyFactory,
+    config: &SimConfig,
+    cost_model: Option<&dyn CostModel>,
+) -> FleetResult {
     let mut clock = VirtualClock::new(fleet.n_devices());
     let params = EngineParams {
         problem,
         truth,
         sched_view: None,
+        cost_model,
         fleet,
         tenancy: Tenancy::Static,
         warm_start_per_user: config.warm_start_per_user,
@@ -518,5 +542,27 @@ mod tests {
         assert_eq!(key(&plain), key(&elastic.sim));
         assert_eq!(plain.cumulative_regret.to_bits(), elastic.sim.cumulative_regret.to_bits());
         assert_eq!(plain.inst_regret, elastic.sim.inst_regret);
+    }
+
+    #[test]
+    fn uniform_cost_model_matches_no_model_bitwise() {
+        // `UniformCost` wraps the problem's own cost vector, so charging
+        // through it must replay the no-model run bit-for-bit.
+        let (p, t) = problem_and_truth();
+        let factory = |p: &Problem| -> Box<dyn Policy> { Box::new(MmGpEi::new(p)) };
+        let fleet = DeviceFleet::uniform(2);
+        let cfg = SimConfig { n_devices: 2, ..Default::default() };
+        let plain = simulate_fleet(&p, &t, &fleet, &factory, &cfg);
+        let model = crate::problem::UniformCost::from_problem(&p);
+        let modeled = simulate_fleet_with_cost_model(&p, &t, &fleet, &factory, &cfg, Some(&model));
+        let key = |r: &FleetResult| -> Vec<(usize, usize, u64)> {
+            r.sim.observations.iter().map(|o| (o.arm, o.device, o.finish.to_bits())).collect()
+        };
+        assert_eq!(key(&plain), key(&modeled));
+        assert_eq!(
+            plain.sim.cumulative_regret.to_bits(),
+            modeled.sim.cumulative_regret.to_bits()
+        );
+        assert_eq!(plain.sim.inst_regret, modeled.sim.inst_regret);
     }
 }

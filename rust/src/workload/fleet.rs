@@ -92,6 +92,16 @@ fn exp_gap(rng: &mut Rng, mean: f64) -> f64 {
     -mean * u.ln()
 }
 
+/// Round-robin device-class assignment `d ↦ d mod n_classes` — the
+/// canonical mapping the CLI and benches use to spread a cost model's
+/// device classes over a fleet of any size (class 0 always exists, so
+/// `PerClassCost`'s every-arm-feasible-somewhere invariant can be
+/// checked against real classes).
+pub fn round_robin_classes(n_devices: usize, n_classes: usize) -> Vec<usize> {
+    assert!(n_classes > 0, "need at least one device class");
+    (0..n_devices).map(|d| d % n_classes).collect()
+}
+
 /// Generate a validated elastic fleet. Deterministic per
 /// `(config, seed)`: speeds first (one draw per device in index order),
 /// then each device's availability timeline in index order, so adding
@@ -152,6 +162,13 @@ mod tests {
             horizon: 100.0,
             ..Default::default()
         }
+    }
+
+    #[test]
+    fn round_robin_classes_cycle() {
+        assert_eq!(round_robin_classes(5, 2), vec![0, 1, 0, 1, 0]);
+        assert_eq!(round_robin_classes(3, 1), vec![0, 0, 0]);
+        assert_eq!(round_robin_classes(0, 4), Vec::<usize>::new());
     }
 
     #[test]

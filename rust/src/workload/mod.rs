@@ -22,7 +22,7 @@ mod synthetic;
 
 pub use churn::{churn_workload, ChurnConfig};
 pub use dataset::{Dataset, ProtocolSplit};
-pub use fleet::{fleet_schedule, FleetConfig};
+pub use fleet::{fleet_schedule, round_robin_classes, FleetConfig};
 pub use generators::{azure, deeplearning, AZURE_MODELS, DEEPLEARNING_MODELS};
 pub use synthetic::{synthetic_gp, SyntheticConfig};
 

@@ -16,7 +16,7 @@
 use std::alloc::{GlobalAlloc, Layout, System};
 use std::cell::Cell;
 
-use mmgpei::sched::{EiBackend, NativeBackend};
+use mmgpei::sched::{DeviceView, EiBackend, NativeBackend, ScoreMode};
 use mmgpei::workload::{synthetic_gp, SyntheticConfig};
 
 thread_local! {
@@ -82,9 +82,10 @@ fn hot_path_is_allocation_free_after_warmup() {
         for &u in &problem.arm_users[a] {
             best[u] = best[u].max(truth.z[a]);
         }
-        let scores = backend.eirate(best, selected, true);
+        let dev = DeviceView::unit(0);
+        let scores = backend.eirate(best, selected, ScoreMode::CostRate, dev);
         let fold = scores[n - 1];
-        let pick = backend.select_arm(best, selected, true);
+        let pick = backend.select_arm(best, selected, ScoreMode::CostRate, dev);
         (fold, pick)
     };
 
@@ -93,7 +94,7 @@ fn hot_path_is_allocation_free_after_warmup() {
     // capacity is preallocated at construction, so even this phase only
     // allocates inside construction — but we don't assert that; the
     // contract starts after warm-up.
-    let _ = backend.eirate(&best, &selected, true);
+    let _ = backend.eirate(&best, &selected, ScoreMode::CostRate, DeviceView::unit(0));
     let warm = n / 4;
     for a in 0..warm {
         let _ = step(&mut backend, a, &mut selected, &mut best);
@@ -109,7 +110,7 @@ fn hot_path_is_allocation_free_after_warmup() {
         if let Some(p) = pick {
             assert!(!selected[p]);
         }
-        let scores = backend.eirate(&best, &selected, false);
+        let scores = backend.eirate(&best, &selected, ScoreMode::EiOnly, DeviceView::unit(0));
         guard += scores[0];
     }
     let after = thread_allocs();

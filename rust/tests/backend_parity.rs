@@ -14,7 +14,7 @@ use std::path::PathBuf;
 
 use mmgpei::prng::Rng;
 use mmgpei::runtime::{default_artifact_dir, XlaBackend};
-use mmgpei::sched::{EiBackend, MmGpEi, NativeBackend, Policy, SchedContext};
+use mmgpei::sched::{DeviceView, EiBackend, MmGpEi, NativeBackend, Policy, SchedContext, ScoreMode};
 use mmgpei::sim::{simulate, SimConfig};
 use mmgpei::workload::azure;
 
@@ -79,8 +79,8 @@ fn posterior_and_eirate_agree() {
             );
         }
 
-        let e_n = native.eirate(&best, &selected, true);
-        let e_x = xla.eirate(&best, &selected, true);
+        let e_n = native.eirate(&best, &selected, ScoreMode::CostRate, DeviceView::unit(0));
+        let e_x = xla.eirate(&best, &selected, ScoreMode::CostRate, DeviceView::unit(0));
         for a in 0..problem.n_arms() {
             if selected[a] {
                 assert!(e_n[a] == f64::NEG_INFINITY || e_n[a] <= -1e29);
@@ -146,8 +146,8 @@ fn ei_only_ablation_parity() {
             best[u] = best[u].max(truth.z[a]);
         }
     }
-    let e_n = native.eirate(&best, &selected, false);
-    let e_x = xla.eirate(&best, &selected, false);
+    let e_n = native.eirate(&best, &selected, ScoreMode::EiOnly, DeviceView::unit(0));
+    let e_x = xla.eirate(&best, &selected, ScoreMode::EiOnly, DeviceView::unit(0));
     for a in 6..problem.n_arms() {
         assert!(
             (e_n[a] - e_x[a]).abs() < 1e-6 * (1.0 + e_n[a].abs()),
@@ -166,7 +166,13 @@ fn xla_scores_match_policy_argmax_semantics() {
     let (problem, _) = azure_instance(1234);
     let selected = vec![false; problem.n_arms()];
     let observed = vec![false; problem.n_arms()];
-    let ctx = SchedContext { problem: &problem, selected: &selected, observed: &observed, now: 0.0 };
+    let ctx = SchedContext {
+        problem: &problem,
+        selected: &selected,
+        observed: &observed,
+        now: 0.0,
+        device: DeviceView::unit(0),
+    };
     let pick_native = MmGpEi::new(&problem).select(&ctx).unwrap();
     let backend = XlaBackend::new(&problem, &dir).expect("load artifact");
     let pick_xla = MmGpEi::with_backend(&problem, Box::new(backend)).select(&ctx).unwrap();

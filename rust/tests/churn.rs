@@ -8,7 +8,9 @@ use mmgpei::config::ExperimentConfig;
 use mmgpei::prng::Rng;
 use mmgpei::problem::{ChurnEvent, ChurnEventKind, ChurnSchedule, Problem};
 use mmgpei::report::RunReport;
-use mmgpei::sched::{rescan_eirate, EiBackend, ForceRebuild, MmGpEi, NativeBackend, Policy};
+use mmgpei::sched::{
+    rescan_eirate, DeviceView, EiBackend, ForceRebuild, MmGpEi, NativeBackend, Policy, ScoreMode,
+};
 use mmgpei::sim::{simulate_churn, ChurnResult, SimConfig};
 use mmgpei::testutil::check;
 use mmgpei::workload::{churn_workload, ChurnConfig};
@@ -202,8 +204,10 @@ fn incremental_backend_scores_match_rebuilt_oracle_at_every_step() {
             for &(a, z) in &obs_order {
                 gp.observe(a, z);
             }
-            let cached = backend.eirate(&best, &blocked, true).to_vec();
-            let oracle = rescan_eirate(&gp, &p.arm_users, &p.cost, &best, &blocked, true);
+            let dev = DeviceView::unit(0);
+            let cached = backend.eirate(&best, &blocked, ScoreMode::CostRate, dev).to_vec();
+            let oracle =
+                rescan_eirate(&gp, &p.arm_users, &p.cost, &best, &blocked, ScoreMode::CostRate, dev);
             for x in 0..n {
                 assert!(
                     cached[x] == oracle[x],
@@ -224,7 +228,7 @@ fn incremental_backend_scores_match_rebuilt_oracle_at_every_step() {
                 }
                 arg
             };
-            assert_eq!(backend.select_arm(&best, &blocked, true), scan);
+            assert_eq!(backend.select_arm(&best, &blocked, ScoreMode::CostRate, dev), scan);
         }
     });
 }

@@ -17,16 +17,27 @@
 //! 3. **Preemption semantics**: speeds obey `c(x)/s_d`, a preempted arm
 //!    reveals nothing and is re-served, and the in-place device hooks
 //!    match the `ForceRebuild` oracle bit-for-bit.
+//! 4. **Device-aware degeneration**: on a uniform unit-speed fleet,
+//!    device-aware scoring (`EI/(c(x, class_d)/s_d)`) collapses to the
+//!    paper's `EI/c(x)` **bitwise** — with or without an explicit
+//!    [`UniformCost`] table — and the device-aware in-place hooks match
+//!    the rebuild oracle under fleet churn.
 
 use std::time::Duration;
 
 use mmgpei::coordinator::{serve_churn_deterministic, ChurnServeReport, ServeConfig};
-use mmgpei::problem::{DeviceFleet, FleetEvent, FleetEventKind, Problem};
+use mmgpei::problem::{
+    CostModel, DeviceFleet, FleetEvent, FleetEventKind, PerClassCost, Problem, UniformCost,
+};
 use mmgpei::report::{Direction, RunReport};
 use mmgpei::sched::{ForceRebuild, GpEiRandom, GpEiRoundRobin, MmGpEi, Policy};
-use mmgpei::sim::{simulate, simulate_churn, simulate_fleet, ChurnResult, SimConfig, SimResult};
+use mmgpei::sim::{
+    simulate, simulate_churn, simulate_fleet, simulate_fleet_with_cost_model, ChurnResult,
+    SimConfig, SimResult,
+};
 use mmgpei::workload::{
-    churn_workload, fleet_schedule, synthetic_gp, ChurnConfig, FleetConfig, SyntheticConfig,
+    churn_workload, fleet_schedule, round_robin_classes, synthetic_gp, ChurnConfig, FleetConfig,
+    SyntheticConfig,
 };
 
 fn synthetic_instance(seed: u64) -> (Problem, mmgpei::problem::Truth) {
@@ -391,6 +402,96 @@ fn inplace_device_hooks_match_force_rebuild_oracle() {
                 "oracle must exercise the rebuild path (seed {seed})"
             );
         }
+        assert_eq!(sim_key(&a.sim), sim_key(&b.sim), "seed {seed}: schedules diverged");
+        assert_eq!(a.sim.cumulative_regret.to_bits(), b.sim.cumulative_regret.to_bits());
+        assert_eq!(a.sim.inst_regret, b.sim.inst_regret);
+        assert_eq!(a.n_preemptions, b.n_preemptions);
+    }
+}
+
+// ---------------------------------------------------------------------
+// 4. Device-aware degeneration + device-aware hook parity.
+// ---------------------------------------------------------------------
+
+/// Fold a fleet run's deterministic quantities into a smoke report so
+/// two runs serialize byte-identically iff they agree float for float.
+/// KPI-only on purpose: the device-aware and device-blind policies carry
+/// different display names, which must not enter the parity comparison.
+fn fleet_report(name: &str, r: &SimResult) -> String {
+    let mut rep = RunReport::new(name, 0, true);
+    rep.push_kpi("cumulative_regret", r.cumulative_regret, Direction::LowerIsBetter);
+    rep.push_kpi("final_regret", r.inst_regret.final_value(), Direction::LowerIsBetter);
+    rep.push_kpi("makespan", r.makespan, Direction::LowerIsBetter);
+    rep.push_kpi("decisions", r.n_decisions as f64, Direction::LowerIsBetter);
+    rep.to_json_string()
+}
+
+#[test]
+fn device_aware_on_unit_fleet_matches_device_blind_report_bytes() {
+    // `EI/(c/1.0)` divides by the very same float as `EI/c`, so on a
+    // uniform unit-speed single-class fleet the device-aware policy must
+    // replay the device-blind one byte for byte — schedules, regret
+    // floats, and serialized report bytes — both without a cost model
+    // and with an explicit byte-compatible `UniformCost` table.
+    for seed in [0u64, 5] {
+        let (p, t) = synthetic_instance(0x400 + seed);
+        let uniform = UniformCost::from_problem(&p);
+        for devices in [1usize, 3] {
+            let cfg = SimConfig { n_devices: devices, ..Default::default() };
+            let fleet = DeviceFleet::uniform(devices);
+            let blind = |p: &Problem| -> Box<dyn Policy> { Box::new(MmGpEi::new(p)) };
+            let aware = |p: &Problem| -> Box<dyn Policy> { Box::new(MmGpEi::device_aware(p)) };
+            let aware_tbl =
+                |p: &Problem| -> Box<dyn Policy> { Box::new(MmGpEi::with_cost_model(p, &uniform)) };
+            let a = simulate_fleet(&p, &t, &fleet, &blind, &cfg);
+            let b = simulate_fleet(&p, &t, &fleet, &aware, &cfg);
+            let c = simulate_fleet_with_cost_model(
+                &p,
+                &t,
+                &fleet,
+                &aware_tbl,
+                &cfg,
+                Some(&uniform as &dyn CostModel),
+            );
+            assert_eq!(sim_key(&a.sim), sim_key(&b.sim), "seed {seed} @M{devices}: no-model run");
+            assert_eq!(sim_key(&a.sim), sim_key(&c.sim), "seed {seed} @M{devices}: UniformCost run");
+            assert_eq!(fleet_report("degen", &a.sim), fleet_report("degen", &b.sim));
+            assert_eq!(fleet_report("degen", &a.sim), fleet_report("degen", &c.sim));
+        }
+    }
+}
+
+#[test]
+fn device_aware_inplace_hooks_match_force_rebuild_oracle_under_churn() {
+    // Same invariant as `inplace_device_hooks_match_force_rebuild_oracle`
+    // but under `ScoreMode::DeviceRate` with a two-class cost table: the
+    // hooks' per-device score invalidation must be indistinguishable
+    // from rebuilding the policy from scratch at every fleet event.
+    let cfg = FleetConfig {
+        n_devices: 3,
+        initial_online: 2,
+        uptime: (4.0, 10.0),
+        outage: (2.0, 5.0),
+        horizon: 50.0,
+        ..Default::default()
+    };
+    for seed in 0..4u64 {
+        let (p, t) = synthetic_instance(0x500 + seed);
+        let fleet =
+            fleet_schedule(&cfg, 200 + seed).with_classes(round_robin_classes(cfg.n_devices, 2));
+        let model = PerClassCost::from_problem(&p, vec![1.0, 2.0], vec![f64::INFINITY; 2]);
+        let m = Some(&model as &dyn CostModel);
+        let inc = |p: &Problem| -> Box<dyn Policy> { Box::new(MmGpEi::with_cost_model(p, &model)) };
+        let oracle = |p: &Problem| -> Box<dyn Policy> {
+            Box::new(ForceRebuild(MmGpEi::with_cost_model(p, &model)))
+        };
+        let a = simulate_fleet_with_cost_model(&p, &t, &fleet, &inc, &SimConfig::default(), m);
+        let b = simulate_fleet_with_cost_model(&p, &t, &fleet, &oracle, &SimConfig::default(), m);
+        assert_eq!(a.n_rebuilds, 0, "device-aware in-place path never rebuilds");
+        assert!(
+            b.n_rebuilds > 0 || fleet.events().iter().all(|e| e.time == 0.0),
+            "oracle must exercise the rebuild path (seed {seed})"
+        );
         assert_eq!(sim_key(&a.sim), sim_key(&b.sim), "seed {seed}: schedules diverged");
         assert_eq!(a.sim.cumulative_regret.to_bits(), b.sim.cumulative_regret.to_bits());
         assert_eq!(a.sim.inst_regret, b.sim.inst_regret);

@@ -5,8 +5,8 @@
 
 use mmgpei::prng::Rng;
 use mmgpei::sched::{
-    rescan_eirate, EiBackend, GpEiRandom, GpEiRoundRobin, MmGpEi, MmGpEiIndep, NativeBackend,
-    Policy, TournamentTree,
+    rescan_eirate, DeviceView, EiBackend, GpEiRandom, GpEiRoundRobin, MmGpEi, MmGpEiIndep,
+    NativeBackend, Policy, ScoreMode, TournamentTree,
 };
 use mmgpei::sim::{simulate, SimConfig};
 use mmgpei::testutil::{check, gen};
@@ -239,10 +239,11 @@ fn cached_eirate_matches_brute_force_oracle() {
         let compare = |backend: &mut NativeBackend,
                        best: &[f64],
                        selected: &[bool],
-                       use_cost: bool,
+                       mode: ScoreMode,
                        step: usize| {
-            let cached = backend.eirate(best, selected, use_cost).to_vec();
-            let oracle = rescan_eirate(backend.gp(), &p.arm_users, &p.cost, best, selected, use_cost);
+            let dev = DeviceView::unit(0);
+            let cached = backend.eirate(best, selected, mode, dev).to_vec();
+            let oracle = rescan_eirate(backend.gp(), &p.arm_users, &p.cost, best, selected, mode, dev);
             let mut arg_c = None;
             let mut arg_o = None;
             let mut max_c = f64::NEG_INFINITY;
@@ -250,7 +251,7 @@ fn cached_eirate_matches_brute_force_oracle() {
             for x in 0..cached.len() {
                 assert!(
                     cached[x] == oracle[x],
-                    "step {step} use_cost {use_cost} arm {x}: cached {} vs oracle {}",
+                    "step {step} mode {mode:?} arm {x}: cached {} vs oracle {}",
                     cached[x],
                     oracle[x]
                 );
@@ -269,9 +270,9 @@ fn cached_eirate_matches_brute_force_oracle() {
         for (step, &a) in order.iter().enumerate() {
             // Score (both cost modes) before the observation; repeated
             // clean reads must also stay exact (pure cache hits).
-            compare(&mut backend, &best, &selected, true, step);
-            compare(&mut backend, &best, &selected, false, step);
-            compare(&mut backend, &best, &selected, true, step);
+            compare(&mut backend, &best, &selected, ScoreMode::CostRate, step);
+            compare(&mut backend, &best, &selected, ScoreMode::EiOnly, step);
+            compare(&mut backend, &best, &selected, ScoreMode::CostRate, step);
             backend.observe(a, t.z[a]);
             selected[a] = true;
             for &u in &p.arm_users[a] {
@@ -279,8 +280,12 @@ fn cached_eirate_matches_brute_force_oracle() {
             }
         }
         // Exhausted state: everything masked.
-        compare(&mut backend, &best, &selected, true, n);
-        assert_eq!(backend.select_arm(&best, &selected, true), None, "exhausted → no candidate");
+        compare(&mut backend, &best, &selected, ScoreMode::CostRate, n);
+        assert_eq!(
+            backend.select_arm(&best, &selected, ScoreMode::CostRate, DeviceView::unit(0)),
+            None,
+            "exhausted → no candidate"
+        );
     });
 }
 
@@ -309,9 +314,11 @@ fn tournament_select_matches_oracle_argmax() {
         let mut best = vec![0.0f64; p.n_users];
         let mut order: Vec<usize> = (0..n).collect();
         rng.shuffle(&mut order);
+        let dev = DeviceView::unit(0);
         for (step, &a) in order.iter().enumerate() {
-            for use_cost in [true, false] {
-                let oracle = rescan_eirate(backend.gp(), &p.arm_users, &p.cost, &best, &selected, use_cost);
+            for mode in [ScoreMode::CostRate, ScoreMode::EiOnly] {
+                let oracle =
+                    rescan_eirate(backend.gp(), &p.arm_users, &p.cost, &best, &selected, mode, dev);
                 let mut want = None;
                 let mut max = f64::NEG_INFINITY;
                 for (x, &s) in oracle.iter().enumerate() {
@@ -320,8 +327,8 @@ fn tournament_select_matches_oracle_argmax() {
                         want = Some(x);
                     }
                 }
-                let got = backend.select_arm(&best, &selected, use_cost);
-                assert_eq!(got, want, "step {step} use_cost {use_cost}");
+                let got = backend.select_arm(&best, &selected, mode, dev);
+                assert_eq!(got, want, "step {step} mode {mode:?}");
             }
             backend.observe(a, t.z[a]);
             selected[a] = true;
@@ -329,7 +336,7 @@ fn tournament_select_matches_oracle_argmax() {
                 best[u] = best[u].max(t.z[a]);
             }
         }
-        assert_eq!(backend.select_arm(&best, &selected, true), None);
+        assert_eq!(backend.select_arm(&best, &selected, ScoreMode::CostRate, dev), None);
     });
 }
 
@@ -390,8 +397,10 @@ fn double_observation_is_ignored_not_corrupting() {
         for &u in &p.arm_users[a] {
             best[u] = best[u].max(t.z[a]);
         }
-        let cached = backend.eirate(&best, &selected, true).to_vec();
-        let oracle = rescan_eirate(backend.gp(), &p.arm_users, &p.cost, &best, &selected, true);
+        let dev = DeviceView::unit(0);
+        let cached = backend.eirate(&best, &selected, ScoreMode::CostRate, dev).to_vec();
+        let oracle =
+            rescan_eirate(backend.gp(), &p.arm_users, &p.cost, &best, &selected, ScoreMode::CostRate, dev);
         for x in 0..n {
             assert!(cached[x] == oracle[x], "arm {x}: {} vs {}", cached[x], oracle[x]);
         }
