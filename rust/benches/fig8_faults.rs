@@ -1,0 +1,315 @@
+//! Figure 8 (extension) — **fault-tolerant serving**: seeded device
+//! crash/restart cycles, lost jobs, and straggler slowdowns replayed
+//! through the unified scheduling engine, with per-job deadlines and
+//! capped-backoff retries.
+//!
+//! Not a paper figure: the paper's model (§3) assumes devices never
+//! fail and jobs always complete, but the service-provider setting it
+//! motivates — preemptible cloud capacity, flaky accelerators — loses
+//! devices and jobs all the time. This harness measures, per policy:
+//!
+//! * **cumulative regret under faults** vs the **fault-free elastic
+//!   baseline** on the same seeds (`regret_vs_fault_free`, a
+//!   deterministic ratio — the robustness tax);
+//! * **served fraction** (abandoned arms push it below 1), **retry
+//!   count**, **abandoned arms**, and **p99 recovery latency** (first
+//!   failure of an arm → its successful completion);
+//! * three hard gates (every mode, non-zero exit on failure):
+//!   - **byte identity**: an **empty** `FaultPlan` must reproduce the
+//!     fault-free `simulate_fleet` run **bit for bit** — schedule,
+//!     regret bits, curve, preemption accounting — with all fault
+//!     counters zero (the "fault layer costs nothing when off"
+//!     invariant in executable form);
+//!   - **cross-loop parity**: `coordinator::serve_fleet_deterministic`
+//!     (wall-clock adapter on the engine's `MockClock`) must replay
+//!     `sim::simulate_faults` (virtual clock) bit for bit under the
+//!     same preemption-heavy fault trace;
+//!   - **replay determinism**: the seeded plan generator and a full
+//!     faulty run are bit-stable across repeated invocations.
+//!
+//! Run: `cargo bench --bench fig8_faults`
+//! CI:  `cargo bench --bench fig8_faults -- --smoke --json reports/BENCH_fig8_faults.json`
+
+use std::time::Duration;
+
+use mmgpei::bench::{BenchOpts, Table};
+use mmgpei::cli::{make_instance, run_faults_experiment, run_fleet_experiment};
+use mmgpei::config::ExperimentConfig;
+use mmgpei::coordinator::{serve_fleet_deterministic, FleetServeReport, ServeConfig};
+use mmgpei::engine::FaultStats;
+use mmgpei::problem::{DeviceFleet, FaultPlan, Problem, Truth};
+use mmgpei::report::{Direction, RunReport};
+use mmgpei::sched::{MmGpEi, Policy};
+use mmgpei::sim::{simulate_faults, simulate_fleet, FaultResult, SimConfig, SimResult};
+use mmgpei::workload::{fault_plan, fleet_schedule, FaultsConfig, FleetConfig, SyntheticConfig};
+
+fn main() {
+    let opts = BenchOpts::from_env_args();
+    let (synthetic, fleet_cfg, faults_cfg) = if opts.smoke {
+        // Pinned CI preset (must be identical on every machine).
+        (
+            SyntheticConfig { n_users: 8, n_models: 6, ..Default::default() },
+            FleetConfig {
+                n_devices: 4,
+                initial_online: 3,
+                speed_range: (0.5, 2.0),
+                arrival_gap: 6.0,
+                uptime: (15.0, 40.0),
+                outage: (4.0, 10.0),
+                horizon: 80.0,
+            },
+            FaultsConfig {
+                mtbf: 20.0,
+                mean_downtime: 4.0,
+                job_failure_gap: 10.0,
+                straggler_gap: 15.0,
+                horizon: 80.0,
+                ..Default::default()
+            },
+        )
+    } else {
+        (
+            SyntheticConfig { n_users: 16, n_models: 10, ..Default::default() },
+            FleetConfig { n_devices: 6, initial_online: 4, ..Default::default() },
+            FaultsConfig::default(),
+        )
+    };
+    let seeds = opts.seeds("MMGPEI_FIG8_SEEDS", 5, 2);
+
+    let cfg = ExperimentConfig {
+        name: "fig8-faults".into(),
+        dataset: "synthetic".into(),
+        policies: vec!["mdmt".into(), "round-robin".into(), "random".into()],
+        devices: vec![1], // unused: the fleet is the device dimension
+        seeds,
+        threads: opts.threads(),
+        synthetic: synthetic.clone(),
+        fleet: true,
+        fleet_cfg: fleet_cfg.clone(),
+        faults: true,
+        faults_cfg: faults_cfg.clone(),
+        ..Default::default()
+    };
+
+    let mut report = RunReport::new("fig8_faults", 0, opts.smoke);
+    // Per-seed (instance, fleet, plan): built once, shared by every gate
+    // (the sweep re-derives them inside `run_faults_experiment`,
+    // identically seeded).
+    let instances: Vec<(Problem, Truth, DeviceFleet, FaultPlan)> = (0..seeds)
+        .map(|seed| {
+            let (problem, truth) = make_instance(&cfg, seed).expect("instance");
+            let fleet = fleet_schedule(&fleet_cfg, 0xF1EE7 + seed);
+            let plan = fault_plan(&faults_cfg, fleet.n_devices(), 0xFA17 + seed);
+            (problem, truth, fleet, plan)
+        })
+        .collect();
+    let n_events: usize = instances.iter().map(|(_, _, _, pl)| pl.events().len()).sum();
+    println!(
+        "=== Figure 8 (ext) — faults: mtbf={} downtime={} job_failure_gap={} straggler_gap={}, \
+         {} devices, {} seeds, {} planned fault events ===",
+        faults_cfg.mtbf,
+        faults_cfg.mean_downtime,
+        faults_cfg.job_failure_gap,
+        faults_cfg.straggler_gap,
+        fleet_cfg.n_devices,
+        seeds,
+        n_events
+    );
+
+    let factory = |p: &Problem| -> Box<dyn Policy> { Box::new(MmGpEi::new(p)) };
+    let sim_cfg = |fleet: &DeviceFleet| SimConfig {
+        n_devices: fleet.n_devices(),
+        warm_start_per_user: cfg.warm_start,
+        horizon: None,
+        stop_at_cutoff: None,
+    };
+
+    // ------------------------------------------------------------------
+    // Gate 1 — byte identity: an empty fault plan must reproduce the
+    // fault-free fleet run bit for bit, with every fault counter zero.
+    // ------------------------------------------------------------------
+    let empty = FaultPlan::empty();
+    let mut identity_mismatches = 0usize;
+    for (seed, (problem, truth, fleet, _)) in instances.iter().enumerate() {
+        let sc = sim_cfg(fleet);
+        let fault_free = simulate_fleet(problem, truth, fleet, &factory, &sc);
+        let no_faults = simulate_faults(problem, truth, fleet, &empty, &factory, &sc);
+        if !sim_runs_bit_identical(&fault_free.sim, &no_faults.fleet.sim)
+            || fault_free.n_preemptions != no_faults.fleet.n_preemptions
+            || fault_free.requeue_latency != no_faults.fleet.requeue_latency
+            || fault_free.n_rebuilds != no_faults.fleet.n_rebuilds
+            || no_faults.fault_stats != FaultStats::default()
+            || no_faults.served_fraction != 1.0
+        {
+            identity_mismatches += 1;
+            eprintln!("byte-identity FAIL: seed {seed} — empty plan ≠ fault-free run");
+        }
+    }
+    report.push_kpi(
+        "parity/empty_plan_vs_fault_free_mismatches",
+        identity_mismatches as f64,
+        Direction::LowerIsBetter,
+    );
+    println!("byte identity: {identity_mismatches}/{seeds} diverging seeds (must be 0)");
+
+    // ------------------------------------------------------------------
+    // Gate 2 — cross-loop parity: the wall-clock fleet adapter on the
+    // deterministic MockClock must replay the virtual-clock fault
+    // simulator bit for bit under the seeded preemption-heavy plan.
+    // ------------------------------------------------------------------
+    let mut parity_mismatches = 0usize;
+    for (seed, (problem, truth, fleet, plan)) in instances.iter().enumerate() {
+        let sc = sim_cfg(fleet);
+        let sim = simulate_faults(problem, truth, fleet, plan, &factory, &sc);
+        let serve_cfg = ServeConfig {
+            n_devices: fleet.n_devices(),
+            time_scale: 1.0, // wall seconds = cost units: directly comparable
+            warm_start_per_user: cfg.warm_start,
+            verbose: false,
+        };
+        let served =
+            serve_fleet_deterministic(problem, truth, fleet, Some(plan), &factory, &serve_cfg);
+        if !faulty_runs_match(&sim, &served) {
+            parity_mismatches += 1;
+            eprintln!("cross-loop parity FAIL: seed {seed} — serve_fleet_deterministic ≠ simulate_faults");
+        }
+    }
+    report.push_kpi(
+        "parity/serve_fleet_vs_simulate_faults_mismatches",
+        parity_mismatches as f64,
+        Direction::LowerIsBetter,
+    );
+    println!("cross-loop parity: {parity_mismatches}/{seeds} diverging seeds (must be 0)");
+
+    // ------------------------------------------------------------------
+    // Gate 3 — replay determinism: the plan generator and a full faulty
+    // run are bit-stable across invocations of the same seed.
+    // ------------------------------------------------------------------
+    let mut replay_mismatches = 0usize;
+    for (seed, (problem, truth, fleet, plan)) in instances.iter().enumerate() {
+        let regen = fault_plan(&faults_cfg, fleet.n_devices(), 0xFA17 + seed as u64);
+        let sc = sim_cfg(fleet);
+        let a = simulate_faults(problem, truth, fleet, plan, &factory, &sc);
+        let b = simulate_faults(problem, truth, fleet, plan, &factory, &sc);
+        if regen != *plan
+            || !sim_runs_bit_identical(&a.fleet.sim, &b.fleet.sim)
+            || a.fault_stats != b.fault_stats
+            || a.served_fraction.to_bits() != b.served_fraction.to_bits()
+        {
+            replay_mismatches += 1;
+            eprintln!("replay determinism FAIL: seed {seed} — same seed, different run");
+        }
+    }
+    report.push_kpi(
+        "parity/fault_replay_mismatches",
+        replay_mismatches as f64,
+        Direction::LowerIsBetter,
+    );
+    println!("replay determinism: {replay_mismatches}/{seeds} diverging seeds (must be 0)");
+
+    // ------------------------------------------------------------------
+    // The faults sweep + the fault-free control on the same seeds.
+    // ------------------------------------------------------------------
+    let results = run_faults_experiment(&cfg).expect("fig8 faults sweep");
+    results.push_kpis(&mut report, "faults/");
+    let baseline_cfg = ExperimentConfig { faults: false, ..cfg.clone() };
+    let baseline = run_fleet_experiment(&baseline_cfg).expect("fig8 fault-free baseline");
+    let mut table = Table::new(&[
+        "policy",
+        "faulty regret (mean±σ)",
+        "fault-free regret",
+        "ratio",
+        "served",
+        "retries",
+        "abandoned",
+        "p99 recovery",
+    ]);
+    for cell in &results.cells {
+        let base = baseline
+            .cell(&cell.policy)
+            .map(|b| b.cumulative.0)
+            .unwrap_or(f64::NAN);
+        let ratio = if base > 0.0 { cell.cumulative.0 / base } else { f64::NAN };
+        report.push_kpi(
+            format!("faults/{}@D{}/regret_vs_fault_free", cell.policy, fleet_cfg.n_devices),
+            ratio,
+            Direction::LowerIsBetter,
+        );
+        table.row(vec![
+            cell.policy.clone(),
+            format!("{:.2} ± {:.2}", cell.cumulative.0, cell.cumulative.1),
+            format!("{base:.2}"),
+            if ratio.is_finite() { format!("{ratio:.2}×") } else { "n/a".into() },
+            format!("{:.0}%", 100.0 * cell.served_fraction),
+            cell.n_retries.to_string(),
+            cell.n_abandoned.to_string(),
+            if cell.p99_recovery_latency.is_finite() {
+                format!("{:.2}", cell.p99_recovery_latency)
+            } else {
+                "n/a".into()
+            },
+        ]);
+    }
+    println!("{}", table.to_markdown());
+
+    println!(
+        "expected shape: faults cost regret (lost completions + retry backoff + downtime) over \
+         the fault-free elastic baseline; the retry path keeps the served fraction near 1, and \
+         MDMT's shared prior keeps the robustness tax smallest."
+    );
+    // Write the report first (the mismatch KPIs are evidence worth
+    // keeping), then hard-fail: all three parities are correctness
+    // invariants of the fault layer.
+    opts.finish(&report);
+    if identity_mismatches > 0 || parity_mismatches > 0 || replay_mismatches > 0 {
+        eprintln!(
+            "FAIL: {identity_mismatches} byte-identity + {parity_mismatches} cross-loop-parity + \
+             {replay_mismatches} replay-determinism mismatches (must be 0)"
+        );
+        std::process::exit(1);
+    }
+}
+
+/// Bit-exact run equality: schedule, regret accounting, curve.
+fn sim_runs_bit_identical(a: &SimResult, b: &SimResult) -> bool {
+    let obs = |r: &SimResult| -> Vec<(usize, usize, u64, u64, u64)> {
+        r.observations
+            .iter()
+            .map(|o| (o.arm, o.device, o.start.to_bits(), o.finish.to_bits(), o.z.to_bits()))
+            .collect()
+    };
+    obs(a) == obs(b)
+        && a.cumulative_regret.to_bits() == b.cumulative_regret.to_bits()
+        && a.makespan.to_bits() == b.makespan.to_bits()
+        && a.inst_regret == b.inst_regret
+}
+
+/// Cross-loop equality between the virtual-clock fault simulator and the
+/// wall-semantics fleet adapter at `time_scale = 1.0`: the served
+/// schedule (through the same `Duration` conversion both reports use),
+/// the regret curve, the fault counters, and the served fraction.
+fn faulty_runs_match(sim: &FaultResult, served: &FleetServeReport) -> bool {
+    let sim_jobs: Vec<(usize, usize, Duration, Duration)> = sim
+        .fleet
+        .sim
+        .observations
+        .iter()
+        .map(|o| {
+            (
+                o.arm,
+                o.device,
+                Duration::from_secs_f64(o.start.max(0.0)),
+                Duration::from_secs_f64(o.finish.max(0.0)),
+            )
+        })
+        .collect();
+    let serve_jobs: Vec<(usize, usize, Duration, Duration)> =
+        served.jobs.iter().map(|j| (j.arm, j.device, j.start, j.finish)).collect();
+    sim_jobs == serve_jobs
+        && sim.fleet.sim.inst_regret == served.inst_regret
+        && Duration::from_secs_f64(sim.fleet.sim.makespan.max(0.0)) == served.makespan
+        && sim.fleet.n_preemptions == served.n_preemptions
+        && sim.fleet.n_rebuilds == served.n_rebuilds
+        && sim.fault_stats == served.fault_stats
+        && sim.served_fraction.to_bits() == served.served_fraction.to_bits()
+}

@@ -7,16 +7,17 @@ use crate::config::{Backend, ExperimentConfig};
 use crate::metrics::{aggregate_curves, mean_std, p99, time_grid, StepCurve};
 use crate::pool::WorkerPool;
 use crate::prng::Rng;
-use crate::problem::{CostModel, PerClassCost, Problem, Truth};
+use crate::problem::{CostModel, DeviceFleet, PerClassCost, Problem, Truth};
 use crate::report::{Direction, RunReport, TimingEntry};
 use crate::runtime::{default_artifact_dir, XlaBackend};
 use crate::sched::{GpEiRandom, GpEiRoundRobin, MmGpEi, MmGpEiIndep, Oracle, Policy};
 use crate::sim::{
-    simulate, simulate_churn, simulate_fleet_with_cost_model, ChurnResult, FleetResult, SimConfig,
-    SimResult,
+    simulate, simulate_churn, simulate_faults, simulate_fleet_with_cost_model, ChurnResult,
+    FaultResult, FleetResult, SimConfig, SimResult,
 };
 use crate::workload::{
-    azure, churn_workload, deeplearning, fleet_schedule, round_robin_classes, synthetic_gp,
+    azure, churn_workload, deeplearning, fault_plan, fleet_schedule, round_robin_classes,
+    synthetic_gp,
 };
 
 /// Instantiate a policy by CLI name.
@@ -461,6 +462,195 @@ pub fn run_fleet_experiment(cfg: &ExperimentConfig) -> Result<FleetExperimentRes
     Ok(FleetExperimentResults { config: cfg.clone(), cells })
 }
 
+/// Aggregated results for one policy of a **fault-injection** sweep
+/// (`--faults` / a `[faults]` config section). Like the fleet sweep,
+/// cells are keyed by policy only — the device set is fixed per config.
+#[derive(Clone, Debug)]
+pub struct FaultsCell {
+    /// Policy name.
+    pub policy: String,
+    /// Per-seed raw fault runs.
+    pub runs: Vec<FaultResult>,
+    /// Mean ± std of cumulative regret over seeds.
+    pub cumulative: (f64, f64),
+    /// Mean served fraction over seeds (abandoned arms push it below 1).
+    pub served_fraction: f64,
+    /// Total crashes injected across seeds (plan-determined but gated so
+    /// the scenario itself cannot drift).
+    pub n_crashes: usize,
+    /// Total lost jobs (injected kills + blown deadlines) across seeds.
+    pub n_job_failures: usize,
+    /// Total deadline kills across seeds (subset of `n_job_failures`).
+    pub n_deadline_kills: usize,
+    /// Total scheduled retries across seeds.
+    pub n_retries: usize,
+    /// Total abandoned arms across seeds.
+    pub n_abandoned: usize,
+    /// p99 of first-failure → successful-completion latency over every
+    /// (seed, recovered arm) pair (NaN when nothing failed — dropped by
+    /// `push_kpi`).
+    pub p99_recovery_latency: f64,
+}
+
+/// Full fault-injection sweep output.
+#[derive(Clone, Debug)]
+pub struct FaultsExperimentResults {
+    /// Config used.
+    pub config: ExperimentConfig,
+    /// One cell per policy, in sweep order.
+    pub cells: Vec<FaultsCell>,
+}
+
+impl FaultsExperimentResults {
+    /// Find a cell.
+    pub fn cell(&self, policy: &str) -> Option<&FaultsCell> {
+        self.cells.iter().find(|c| c.policy == policy)
+    }
+
+    /// Fold this sweep into `report`: config fingerprint + per-policy
+    /// fault KPIs (all virtual-time, hence seed-deterministic), and —
+    /// outside smoke mode — per-decision scheduler wall time.
+    pub fn push_kpis(&self, report: &mut RunReport, prefix: &str) {
+        report.fold_config(&self.config.canonical_string());
+        let d = self.faults_device_count();
+        for cell in &self.cells {
+            let key = |metric: &str| format!("{prefix}{}@D{d}/{metric}", cell.policy);
+            report.push_kpi(key("cumulative_regret"), cell.cumulative.0, Direction::LowerIsBetter);
+            let finals: Vec<f64> =
+                cell.runs.iter().map(|r| r.fleet.sim.inst_regret.final_value()).collect();
+            report.push_kpi(key("final_regret"), mean_std(&finals).0, Direction::LowerIsBetter);
+            let makespans: Vec<f64> = cell.runs.iter().map(|r| r.fleet.sim.makespan).collect();
+            report.push_kpi(key("makespan"), mean_std(&makespans).0, Direction::LowerIsBetter);
+            report.push_kpi(key("served_fraction"), cell.served_fraction, Direction::HigherIsBetter);
+            report.push_kpi(key("crashes"), cell.n_crashes as f64, Direction::LowerIsBetter);
+            report.push_kpi(key("job_failures"), cell.n_job_failures as f64, Direction::LowerIsBetter);
+            report.push_kpi(
+                key("deadline_kills"),
+                cell.n_deadline_kills as f64,
+                Direction::LowerIsBetter,
+            );
+            report.push_kpi(key("retries"), cell.n_retries as f64, Direction::LowerIsBetter);
+            report.push_kpi(key("abandoned"), cell.n_abandoned as f64, Direction::LowerIsBetter);
+            report.push_kpi(
+                key("p99_recovery_latency"),
+                cell.p99_recovery_latency,
+                Direction::LowerIsBetter,
+            );
+            let decisions: u64 = cell.runs.iter().map(|r| r.fleet.sim.n_decisions as u64).sum();
+            if decisions > 0 {
+                let total_ns: f64 = cell
+                    .runs
+                    .iter()
+                    .map(|r| r.fleet.sim.decision_wall_time.as_nanos() as f64)
+                    .sum();
+                report.push_timing(TimingEntry::flat(
+                    key("decision_wall"),
+                    decisions,
+                    total_ns / decisions as f64,
+                ));
+            }
+        }
+    }
+
+    /// The device-slot count the sweep ran over (for KPI labels).
+    fn faults_device_count(&self) -> usize {
+        if self.config.fleet {
+            self.config.fleet_cfg.n_devices
+        } else {
+            self.config.devices.first().copied().unwrap_or(1)
+        }
+    }
+}
+
+/// Run the fault-injection sweep described by `cfg` (requires
+/// `cfg.faults`): for each (policy × seed), build the dataset instance,
+/// the device set (the seeded `[fleet]` when enabled, else a uniform
+/// always-on fleet of `cfg.devices[0]` slots), and a seeded fault plan,
+/// then replay everything through the engine's fault layer. Seeds shard
+/// across the worker pool exactly like [`run_experiment`].
+pub fn run_faults_experiment(cfg: &ExperimentConfig) -> Result<FaultsExperimentResults, String> {
+    cfg.validate()?;
+    if !cfg.faults {
+        return Err(
+            "run_faults_experiment requires faults to be enabled (--faults / [faults])".into()
+        );
+    }
+    let pool = WorkerPool::new(cfg.effective_threads());
+    let policy_pool = WorkerPool::new(1);
+    // Surface construction errors (unknown policy, missing XLA artifacts)
+    // once, up front, instead of panicking inside the factory closure.
+    {
+        let (p0, t0) = make_instance(cfg, 0)?;
+        for name in &cfg.policies {
+            make_policy(name, &p0, &t0, 0, cfg.backend, &policy_pool, None)?;
+        }
+    }
+    let mut cells = Vec::new();
+    for policy_name in &cfg.policies {
+        let seed_runs = pool.map_indexed(cfg.seeds as usize, |seed| {
+            let seed = seed as u64;
+            let (problem, truth) = make_instance(cfg, seed)?;
+            let fleet = if cfg.fleet {
+                fleet_schedule(&cfg.fleet_cfg, 0xF1EE7 + seed)
+            } else {
+                DeviceFleet::uniform(cfg.devices.first().copied().unwrap_or(1))
+            };
+            let plan = fault_plan(&cfg.faults_cfg, fleet.n_devices(), 0xFA17 + seed);
+            let factory = |p: &Problem| -> Box<dyn Policy> {
+                make_policy(policy_name, p, &truth, seed, cfg.backend, &policy_pool, None)
+                    .expect("policy construction validated above")
+            };
+            Ok::<FaultResult, String>(simulate_faults(
+                &problem,
+                &truth,
+                &fleet,
+                &plan,
+                &factory,
+                &SimConfig {
+                    n_devices: fleet.n_devices(),
+                    warm_start_per_user: cfg.warm_start,
+                    horizon: cfg.horizon,
+                    stop_at_cutoff: None,
+                },
+            ))
+        });
+        let mut runs = Vec::with_capacity(cfg.seeds as usize);
+        for run in seed_runs {
+            runs.push(run?);
+        }
+        cells.push(aggregate_faults_cell(policy_name, runs));
+    }
+    Ok(FaultsExperimentResults { config: cfg.clone(), cells })
+}
+
+/// Aggregate per-seed fault runs into a cell.
+pub fn aggregate_faults_cell(policy: &str, runs: Vec<FaultResult>) -> FaultsCell {
+    let cumulative =
+        mean_std(&runs.iter().map(|r| r.fleet.sim.cumulative_regret).collect::<Vec<_>>());
+    let served_fraction =
+        mean_std(&runs.iter().map(|r| r.served_fraction).collect::<Vec<_>>()).0;
+    let n_crashes = runs.iter().map(|r| r.fault_stats.n_crashes).sum();
+    let n_job_failures = runs.iter().map(|r| r.fault_stats.n_job_failures).sum();
+    let n_deadline_kills = runs.iter().map(|r| r.fault_stats.n_deadline_kills).sum();
+    let n_retries = runs.iter().map(|r| r.fault_stats.n_retries).sum();
+    let n_abandoned = runs.iter().map(|r| r.fault_stats.n_abandoned).sum();
+    // NaN when nothing ever failed — dropped by push_kpi.
+    let p99_recovery_latency =
+        p99(runs.iter().flat_map(|r| r.fault_stats.recovery_latency.iter().copied()).collect());
+    FaultsCell {
+        policy: policy.to_string(),
+        runs,
+        cumulative,
+        served_fraction,
+        n_crashes,
+        n_job_failures,
+        n_deadline_kills,
+        n_retries,
+        n_abandoned,
+        p99_recovery_latency,
+    }
+}
+
 /// Aggregate per-seed fleet runs into a cell.
 pub fn aggregate_fleet_cell(policy: &str, runs: Vec<FleetResult>) -> FleetCell {
     let cumulative =
@@ -674,6 +864,49 @@ mod tests {
         assert!(report.timings.is_empty(), "smoke reports exclude wall-clock timings");
         // Fleet-disabled configs must refuse the fleet driver.
         assert!(run_fleet_experiment(&quick_cfg()).is_err());
+    }
+
+    #[test]
+    fn faults_sweep_produces_cells_and_kpis() {
+        let mut cfg = quick_cfg();
+        cfg.fleet = true;
+        cfg.fleet_cfg = crate::workload::FleetConfig {
+            n_devices: 3,
+            initial_online: 3,
+            arrival_gap: 4.0,
+            uptime: (40.0, 80.0),
+            outage: (2.0, 6.0),
+            horizon: 100.0,
+            ..Default::default()
+        };
+        cfg.faults = true;
+        cfg.faults_cfg = crate::workload::FaultsConfig {
+            mtbf: 15.0,
+            mean_downtime: 3.0,
+            job_failure_gap: 8.0,
+            straggler_gap: 10.0,
+            horizon: 100.0,
+            ..Default::default()
+        };
+        cfg.policies = vec!["mdmt".into(), "round-robin".into()];
+        cfg.seeds = 2;
+        let res = run_faults_experiment(&cfg).unwrap();
+        assert_eq!(res.cells.len(), 2);
+        let mdmt = res.cell("mdmt").unwrap();
+        assert_eq!(mdmt.runs.len(), 2);
+        assert!(mdmt.cumulative.0 >= 0.0);
+        assert!(mdmt.served_fraction > 0.0 && mdmt.served_fraction <= 1.0);
+        assert!(
+            mdmt.n_crashes + mdmt.n_job_failures > 0,
+            "gaps well under the horizon must inject faults"
+        );
+        let mut report = RunReport::new("faults-test", 0, true);
+        res.push_kpis(&mut report, "faults/");
+        assert!(report.kpis.iter().any(|k| k.name == "faults/mdmt@D3/cumulative_regret"));
+        assert!(report.kpis.iter().any(|k| k.name == "faults/round-robin@D3/served_fraction"));
+        assert!(report.timings.is_empty(), "smoke reports exclude wall-clock timings");
+        // Faults-disabled configs must refuse the faults driver.
+        assert!(run_faults_experiment(&quick_cfg()).is_err());
     }
 
     #[test]

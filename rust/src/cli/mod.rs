@@ -5,9 +5,10 @@
 mod driver;
 
 pub use driver::{
-    aggregate_cell, aggregate_churn_cell, aggregate_fleet_cell, make_instance, make_policy,
-    run_churn_experiment, run_experiment, run_fleet_experiment, CellResult, ChurnCell,
-    ChurnExperimentResults, ExperimentResults, FleetCell, FleetExperimentResults,
+    aggregate_cell, aggregate_churn_cell, aggregate_faults_cell, aggregate_fleet_cell,
+    make_instance, make_policy, run_churn_experiment, run_experiment, run_faults_experiment,
+    run_fleet_experiment, CellResult, ChurnCell, ChurnExperimentResults, ExperimentResults,
+    FaultsCell, FaultsExperimentResults, FleetCell, FleetExperimentResults,
 };
 
 use std::collections::BTreeMap;

@@ -12,7 +12,7 @@ mod toml;
 pub use toml::{ParseError, TomlDoc, TomlValue};
 
 use crate::problem::{DeviceFleet, PerClassCost, Problem};
-use crate::workload::{ChurnConfig, FleetConfig, SyntheticConfig};
+use crate::workload::{ChurnConfig, FaultsConfig, FleetConfig, SyntheticConfig};
 
 /// Convert a TOML integer into a non-negative count. `usize::try_from`
 /// rejects negatives — which `as usize` would wrap into enormous
@@ -174,6 +174,17 @@ pub struct ExperimentConfig {
     /// [`Self::canonical_string`] **only when enabled** — same
     /// hash-stability contract as the churn and fleet blocks.
     pub cost_model_cfg: CostModelConfig,
+    /// Fault-injection scenario toggle (CLI `--faults` / a `[faults]`
+    /// TOML section): the sweep generates a seeded
+    /// [`crate::problem::FaultPlan`] (device crashes/restarts, lost
+    /// jobs, stragglers) and runs it through the engine's fault layer
+    /// with deadline/retry/backoff semantics.
+    pub faults: bool,
+    /// Fault-plan knobs (used when `faults` is set). Folded into
+    /// [`Self::canonical_string`] **only when enabled** — same
+    /// hash-stability contract as the churn/fleet/cost-model blocks, so
+    /// fault-free configs keep their historical `config_hash`.
+    pub faults_cfg: FaultsConfig,
 }
 
 impl Default for ExperimentConfig {
@@ -197,6 +208,8 @@ impl Default for ExperimentConfig {
             fleet_cfg: FleetConfig::default(),
             cost_model: false,
             cost_model_cfg: CostModelConfig::default(),
+            faults: false,
+            faults_cfg: FaultsConfig::default(),
         }
     }
 }
@@ -354,6 +367,45 @@ impl ExperimentConfig {
                 cfg.cost_model_cfg.mem_limit = v.as_float_array()?;
             }
         }
+        // A `[faults]` section opts the experiment into fault-injected
+        // serving; its keys override the `FaultsConfig` defaults.
+        if doc.section_names().any(|s| s == "faults") {
+            cfg.faults = true;
+            let fa = doc.section("faults");
+            if let Some(v) = fa.get("mtbf") {
+                cfg.faults_cfg.mtbf = v.as_float()?;
+            }
+            if let Some(v) = fa.get("mean_downtime") {
+                cfg.faults_cfg.mean_downtime = v.as_float()?;
+            }
+            if let Some(v) = fa.get("job_failure_gap") {
+                cfg.faults_cfg.job_failure_gap = v.as_float()?;
+            }
+            if let Some(v) = fa.get("straggler_gap") {
+                cfg.faults_cfg.straggler_gap = v.as_float()?;
+            }
+            if let Some(v) = fa.get("slowdown_lo") {
+                cfg.faults_cfg.slowdown.0 = v.as_float()?;
+            }
+            if let Some(v) = fa.get("slowdown_hi") {
+                cfg.faults_cfg.slowdown.1 = v.as_float()?;
+            }
+            if let Some(v) = fa.get("horizon") {
+                cfg.faults_cfg.horizon = v.as_float()?;
+            }
+            if let Some(v) = fa.get("deadline_factor") {
+                cfg.faults_cfg.retry.deadline_factor = v.as_float()?;
+            }
+            if let Some(v) = fa.get("max_retries") {
+                cfg.faults_cfg.retry.max_retries = count(v, "faults.max_retries")?;
+            }
+            if let Some(v) = fa.get("backoff_base") {
+                cfg.faults_cfg.retry.backoff_base = v.as_float()?;
+            }
+            if let Some(v) = fa.get("backoff_cap") {
+                cfg.faults_cfg.retry.backoff_cap = v.as_float()?;
+            }
+        }
         let syn = doc.section("synthetic");
         if let Some(v) = syn.get("n_users") {
             cfg.synthetic.n_users = count(v, "synthetic.n_users")?;
@@ -451,6 +503,26 @@ impl ExperimentConfig {
                 m.multipliers, m.mem_limit
             ));
         }
+        if self.faults {
+            let f = &self.faults_cfg;
+            s.push_str(&format!(
+                "faults.mtbf={}\nfaults.mean_downtime={}\nfaults.job_failure_gap={}\n\
+                 faults.straggler_gap={}\nfaults.slowdown=({},{})\nfaults.horizon={}\n\
+                 faults.deadline_factor={}\nfaults.max_retries={}\nfaults.backoff_base={}\n\
+                 faults.backoff_cap={}\n",
+                f.mtbf,
+                f.mean_downtime,
+                f.job_failure_gap,
+                f.straggler_gap,
+                f.slowdown.0,
+                f.slowdown.1,
+                f.horizon,
+                f.retry.deadline_factor,
+                f.retry.max_retries,
+                f.retry.backoff_base,
+                f.retry.backoff_cap,
+            ));
+        }
         s
     }
 
@@ -486,6 +558,7 @@ impl ExperimentConfig {
         self.fleet_cfg.n_devices = self.fleet_cfg.n_devices.min(4);
         self.fleet_cfg.initial_online = self.fleet_cfg.initial_online.min(self.fleet_cfg.n_devices);
         self.fleet_cfg.horizon = self.fleet_cfg.horizon.min(120.0);
+        self.faults_cfg.horizon = self.faults_cfg.horizon.min(120.0);
         self
     }
 
@@ -525,6 +598,24 @@ impl ExperimentConfig {
                 return Err(
                     "[cost_model] requires the [fleet] scenario (device classes live on the \
                      fleet; add a [fleet] section or drop [cost_model])"
+                        .into(),
+                );
+            }
+        }
+        if self.faults {
+            self.faults_cfg.validate()?;
+            if self.churn {
+                return Err(
+                    "faults + churn cannot be combined yet (the engine merges all three event \
+                     streams; the driver surface is a ROADMAP open item)"
+                        .into(),
+                );
+            }
+            if self.cost_model {
+                return Err(
+                    "faults + cost_model cannot be combined yet (the fault sweep charges the \
+                     problem's base costs; per-class charging under faults is a ROADMAP open \
+                     item)"
                         .into(),
                 );
             }
@@ -834,6 +925,94 @@ n_models = 50
         let err = with_fleet("multipliers = [1.0]\nmem_limit = [0.0]\n").unwrap_err();
         assert!(err.contains("memory limit"), "{err}");
         assert!(with_fleet("multipliers = [1.0, 2.0]\n").is_ok());
+    }
+
+    #[test]
+    fn faults_section_opts_in_and_hashes_conditionally() {
+        // No [faults] section → faults off and — critically — the
+        // canonical string is unchanged, so fault-free configs keep the
+        // config_hash their checked-in baselines were stamped with.
+        let plain = ExperimentConfig::from_toml_str(SAMPLE).unwrap();
+        assert!(!plain.faults);
+        assert!(!plain.canonical_string().contains("faults."));
+        let faulty = ExperimentConfig::from_toml_str(&format!(
+            "{SAMPLE}\n[faults]\nmtbf = 30.0\nmean_downtime = 5.0\nmax_retries = 2\n\
+             deadline_factor = 4.0\nslowdown_lo = 2.0\nslowdown_hi = 6.0\n"
+        ))
+        .unwrap();
+        assert!(faulty.faults);
+        assert_eq!(faulty.faults_cfg.mtbf, 30.0);
+        assert_eq!(faulty.faults_cfg.mean_downtime, 5.0);
+        assert_eq!(faulty.faults_cfg.retry.max_retries, 2);
+        assert_eq!(faulty.faults_cfg.retry.deadline_factor, 4.0);
+        assert_eq!(faulty.faults_cfg.slowdown, (2.0, 6.0));
+        assert!(faulty.canonical_string().contains("faults.mtbf=30"));
+        assert_ne!(plain.config_hash(), faulty.config_hash());
+        // Fault knobs are experiment knobs: changing one moves the hash.
+        let mut f2 = faulty.clone();
+        f2.faults_cfg.retry.backoff_cap = 9.0;
+        assert_ne!(faulty.config_hash(), f2.config_hash());
+    }
+
+    #[test]
+    fn faults_knobs_are_validated_and_pairings_rejected() {
+        let with_faults = |body: &str| {
+            ExperimentConfig::from_toml_str(&format!(
+                "[experiment]\ndataset = \"azure\"\n[faults]\n{body}"
+            ))
+        };
+        let err = with_faults("mtbf = -1.0\n").unwrap_err();
+        assert!(err.contains("mtbf"), "{err}");
+        let err = with_faults("mean_downtime = 0.0\n").unwrap_err();
+        assert!(err.contains("mean_downtime"), "{err}");
+        let err = with_faults("slowdown_lo = 0.5\n").unwrap_err();
+        assert!(err.contains("slowdown"), "{err}");
+        let err = with_faults("deadline_factor = 1.0\n").unwrap_err();
+        assert!(err.contains("deadline_factor"), "{err}");
+        let err = with_faults("backoff_cap = 0.01\n").unwrap_err();
+        assert!(err.contains("backoff_cap"), "{err}");
+        let err = with_faults("horizon = 0.0\n").unwrap_err();
+        assert!(err.contains("horizon"), "{err}");
+        // A negative count must error through `count()`, not wrap.
+        let err = with_faults("max_retries = -1\n").unwrap_err();
+        assert!(err.contains("faults.max_retries"), "{err}");
+        // Undesigned pairings are rejected up front.
+        let err = ExperimentConfig::from_toml_str(
+            "[experiment]\ndataset = \"azure\"\n[churn]\nn_users = 8\n[faults]\nmtbf = 30.0\n",
+        )
+        .unwrap_err();
+        assert!(err.contains("faults + churn"), "{err}");
+        let err = ExperimentConfig::from_toml_str(
+            "[experiment]\ndataset = \"azure\"\n[fleet]\nn_devices = 4\n\
+             [cost_model]\nmultipliers = [1.0, 2.0]\n[faults]\nmtbf = 30.0\n",
+        )
+        .unwrap_err();
+        assert!(err.contains("faults + cost_model"), "{err}");
+        // faults + fleet is a designed pairing.
+        assert!(ExperimentConfig::from_toml_str(
+            "[experiment]\ndataset = \"azure\"\n[fleet]\nn_devices = 4\n[faults]\nmtbf = 30.0\n",
+        )
+        .is_ok());
+        assert!(with_faults("mtbf = 30.0\n").is_ok());
+    }
+
+    #[test]
+    fn smoke_shrinks_faults_but_keeps_them_valid() {
+        let mut cfg = ExperimentConfig::from_toml_str(SAMPLE).unwrap();
+        cfg.faults = true;
+        cfg.faults_cfg.horizon = 500.0;
+        let s = cfg.smoke();
+        assert!(s.faults_cfg.horizon <= 120.0);
+        s.validate().unwrap();
+    }
+
+    #[test]
+    fn shipped_faults_config_parses() {
+        let cfg = ExperimentConfig::from_toml_str(include_str!("../../../configs/fig8_faults.toml"))
+            .unwrap();
+        assert!(cfg.faults && cfg.fleet);
+        assert!(!cfg.churn && !cfg.cost_model);
+        assert!(cfg.faults_cfg.any_channel_active());
     }
 
     #[test]

@@ -104,6 +104,7 @@ fn serve_churn_on(
         stop_at_cutoff: None,
         time_scale: config.time_scale,
         collect_decision_latencies: true,
+        faults: None,
         verbose: config.verbose,
     };
     let run = engine::run(&params, PolicyHost::from_factory(factory), clock);

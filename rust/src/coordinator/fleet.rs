@@ -1,0 +1,244 @@
+//! Live serving over an **elastic fleet with fault injection**: the
+//! wall-clock fleet adapter over the unified engine.
+//!
+//! This is the adapter the eager-cancellation rewrite of
+//! [`crate::engine::WallClock`] unlocks: device leaves, crashes,
+//! deadline kills, and straggler re-dispatches all preempt in-flight
+//! jobs, and with condvar-based worker waits the cancelled sleep ends
+//! *now* — the device accepts its next job immediately instead of
+//! snoozing out the cancelled cost (which corrupted any
+//! preemption-heavy wall schedule under the old lazy cancel).
+//!
+//! Faults come from a validated [`FaultPlan`] (see
+//! [`crate::workload::fault_plan`]) interpreted in cost units: an event
+//! at plan time `t` fires `t × time_scale` wall seconds after start.
+//! Pass [`FaultPlan::empty`] (or rather `None`) for fault-free elastic
+//! serving.
+//!
+//! [`serve_fleet_deterministic`] runs the very same adapter on the
+//! engine's [`MockClock`] — wall-clock semantics, virtual delivery — so
+//! the cross-loop parity tests can compare it bit for bit against
+//! `sim::simulate_faults` over one preemption-heavy fault trace
+//! (`rust/tests/engine_parity.rs`).
+
+use std::time::Duration;
+
+use super::{jobs_from, ServeConfig, ServedJob};
+use crate::engine::{
+    self, Clock, EngineParams, FaultStats, MockClock, PolicyFactory, PolicyHost, Tenancy,
+    WallClock,
+};
+use crate::metrics::StepCurve;
+use crate::problem::{DeviceFleet, FaultPlan, Problem, Truth};
+
+/// Result of a live fleet serving session (faulty or fault-free).
+#[derive(Clone, Debug)]
+pub struct FleetServeReport {
+    /// Policy display name.
+    pub policy: String,
+    /// All completions in completion order.
+    pub jobs: Vec<ServedJob>,
+    /// Instantaneous regret (average gap over users) in wall seconds.
+    pub inst_regret: StepCurve,
+    /// Wall-clock latency of every scheduling decision.
+    pub decision_latencies: Vec<Duration>,
+    /// Total session duration (last event offset).
+    pub makespan: Duration,
+    /// Jobs cancelled because their device left or crashed mid-run.
+    pub n_preemptions: usize,
+    /// Per re-dispatched preempted arm: preemption → re-dispatch delay.
+    pub requeue_latency: Vec<Duration>,
+    /// Fleet/fault events served through the rebuild fallback (0 for
+    /// MM-GP-EI).
+    pub n_rebuilds: usize,
+    /// Fault-path counters (all zero when no plan was injected).
+    pub fault_stats: FaultStats,
+    /// Arms whose observation actually landed, over all arms.
+    pub served_fraction: f64,
+}
+
+/// Run a live serving session over an elastic `fleet`, optionally under
+/// a fault plan (see the module docs). `config.n_devices` is ignored:
+/// the fleet defines the device set.
+pub fn serve_fleet(
+    problem: &Problem,
+    truth: &Truth,
+    fleet: &DeviceFleet,
+    faults: Option<&FaultPlan>,
+    factory: &PolicyFactory,
+    config: &ServeConfig,
+) -> FleetServeReport {
+    let mut clock = WallClock::spawn(fleet.n_devices());
+    serve_fleet_on(problem, truth, fleet, faults, factory, config, &mut clock)
+}
+
+/// The wall-clock fleet adapter on the engine's deterministic
+/// [`MockClock`]: identical code path and report shape as
+/// [`serve_fleet`], but completions are delivered in exact virtual time
+/// — bit-replayable and directly comparable against
+/// `sim::simulate_faults` (the cross-loop parity gate uses exactly
+/// this).
+pub fn serve_fleet_deterministic(
+    problem: &Problem,
+    truth: &Truth,
+    fleet: &DeviceFleet,
+    faults: Option<&FaultPlan>,
+    factory: &PolicyFactory,
+    config: &ServeConfig,
+) -> FleetServeReport {
+    let mut clock = MockClock::new(fleet.n_devices());
+    serve_fleet_on(problem, truth, fleet, faults, factory, config, &mut clock)
+}
+
+/// The shared adapter body: configure the engine in static-tenancy
+/// fleet mode with the fault layer armed (or not) and reshape the run
+/// into a [`FleetServeReport`].
+fn serve_fleet_on(
+    problem: &Problem,
+    truth: &Truth,
+    fleet: &DeviceFleet,
+    faults: Option<&FaultPlan>,
+    factory: &PolicyFactory,
+    config: &ServeConfig,
+    clock: &mut dyn Clock,
+) -> FleetServeReport {
+    assert!(config.time_scale > 0.0);
+    let params = EngineParams {
+        problem,
+        truth,
+        sched_view: None,
+        cost_model: None,
+        fleet,
+        tenancy: Tenancy::Static,
+        warm_start_per_user: config.warm_start_per_user,
+        horizon: None,
+        stop_at_cutoff: None,
+        time_scale: config.time_scale,
+        collect_decision_latencies: true,
+        faults,
+        verbose: config.verbose,
+    };
+    let run = engine::run(&params, PolicyHost::from_factory(factory), clock);
+    let served_fraction = run.observations.len() as f64 / problem.n_arms() as f64;
+    FleetServeReport {
+        policy: run.policy,
+        jobs: jobs_from(&run.observations),
+        inst_regret: run.curve.scaled(1.0 / problem.n_users as f64),
+        decision_latencies: run.decision_latencies,
+        makespan: Duration::from_secs_f64(run.makespan.max(0.0)),
+        n_preemptions: run.n_preemptions,
+        requeue_latency: run
+            .requeue_latency
+            .iter()
+            .map(|&x| Duration::from_secs_f64(x.max(0.0)))
+            .collect(),
+        n_rebuilds: run.n_rebuilds,
+        fault_stats: run.fault_stats,
+        served_fraction,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::Mat;
+    use crate::problem::{FaultEvent, FaultKind, RetryPolicy};
+    use crate::sched::{MmGpEi, Policy};
+
+    fn tiny() -> (Problem, Truth) {
+        let user_arms = vec![vec![0, 1], vec![2, 3]];
+        let arm_users = Problem::compute_arm_users(4, &user_arms);
+        let p = Problem {
+            name: "serve-fleet".into(),
+            n_users: 2,
+            cost: vec![1.0, 2.0, 1.0, 2.0],
+            user_arms,
+            arm_users,
+            prior_mean: vec![0.5; 4],
+            prior_cov: Mat::eye(4),
+        };
+        let t = Truth { z: vec![0.6, 0.9, 0.4, 0.8] };
+        (p, t)
+    }
+
+    fn factory(p: &Problem) -> Box<dyn Policy> {
+        Box::new(MmGpEi::new(p))
+    }
+
+    #[test]
+    fn live_fleet_survives_a_preemption_heavy_plan() {
+        // Crash/restart cycles on both devices plus a job kill, on the
+        // real wall clock. With eager cancellation the whole session is
+        // bounded by the virtual makespan × scale, not by the sum of
+        // cancelled sleeps.
+        let (p, t) = tiny();
+        let fleet = DeviceFleet::uniform(2);
+        let plan = FaultPlan::new(
+            2,
+            vec![
+                FaultEvent { time: 0.5, device: 0, kind: FaultKind::DeviceCrash },
+                FaultEvent { time: 0.6, device: 1, kind: FaultKind::JobFailure },
+                FaultEvent { time: 1.5, device: 0, kind: FaultKind::DeviceRestart },
+                FaultEvent { time: 2.0, device: 1, kind: FaultKind::Straggler(2.0) },
+            ],
+            RetryPolicy { deadline_factor: 50.0, ..RetryPolicy::default() },
+        );
+        let cfg = ServeConfig { n_devices: 2, time_scale: 0.01, warm_start_per_user: 1, verbose: false };
+        let report = serve_fleet(&p, &t, &fleet, Some(&plan), &factory, &cfg);
+        // Everything is eventually served despite the faults.
+        let mut arms: Vec<_> = report.jobs.iter().map(|j| j.arm).collect();
+        arms.sort_unstable();
+        assert_eq!(arms, vec![0, 1, 2, 3]);
+        assert_eq!(report.served_fraction, 1.0);
+        assert_eq!(report.inst_regret.final_value(), 0.0);
+        assert_eq!(report.fault_stats.n_crashes, 1);
+        assert_eq!(report.fault_stats.n_restarts, 1);
+        assert_eq!(report.fault_stats.n_job_failures, 1);
+        assert!(report.n_preemptions >= 1, "the crash must preempt the in-flight job");
+        assert_eq!(report.n_rebuilds, 0, "MM-GP-EI absorbs fleet/fault events in place");
+    }
+
+    #[test]
+    fn deterministic_variant_is_bit_replayable_under_faults() {
+        let (p, t) = tiny();
+        let fleet = DeviceFleet::uniform(2);
+        let plan = FaultPlan::new(
+            2,
+            vec![
+                FaultEvent { time: 0.5, device: 0, kind: FaultKind::DeviceCrash },
+                FaultEvent { time: 0.7, device: 1, kind: FaultKind::JobFailure },
+                FaultEvent { time: 1.2, device: 0, kind: FaultKind::DeviceRestart },
+            ],
+            RetryPolicy::default(),
+        );
+        let cfg = ServeConfig { n_devices: 2, time_scale: 1.0, warm_start_per_user: 1, verbose: false };
+        let a = serve_fleet_deterministic(&p, &t, &fleet, Some(&plan), &factory, &cfg);
+        let b = serve_fleet_deterministic(&p, &t, &fleet, Some(&plan), &factory, &cfg);
+        let key = |r: &FleetServeReport| -> Vec<(usize, usize, Duration)> {
+            r.jobs.iter().map(|j| (j.arm, j.device, j.finish)).collect()
+        };
+        assert_eq!(key(&a), key(&b));
+        assert_eq!(a.inst_regret, b.inst_regret);
+        assert_eq!(a.fault_stats, b.fault_stats);
+        assert_eq!(a.requeue_latency, b.requeue_latency);
+    }
+
+    #[test]
+    fn no_plan_matches_empty_plan_deterministically() {
+        // The adapter-level face of the byte-identity gate: `None` and
+        // an empty plan are the same fault-free mode.
+        let (p, t) = tiny();
+        let fleet = DeviceFleet::uniform(2);
+        let cfg = ServeConfig { n_devices: 2, time_scale: 1.0, warm_start_per_user: 1, verbose: false };
+        let none = serve_fleet_deterministic(&p, &t, &fleet, None, &factory, &cfg);
+        let empty_plan = FaultPlan::empty();
+        let empty = serve_fleet_deterministic(&p, &t, &fleet, Some(&empty_plan), &factory, &cfg);
+        let key = |r: &FleetServeReport| -> Vec<(usize, usize, Duration)> {
+            r.jobs.iter().map(|j| (j.arm, j.device, j.finish)).collect()
+        };
+        assert_eq!(key(&none), key(&empty));
+        assert_eq!(none.inst_regret, empty.inst_regret);
+        assert_eq!(none.fault_stats, FaultStats::default());
+        assert_eq!(empty.fault_stats, FaultStats::default());
+    }
+}

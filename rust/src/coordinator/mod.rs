@@ -17,10 +17,19 @@
 //! The report includes per-decision latencies — the number that must stay
 //! far below `min c(x) × time_scale` for the scheduler never to become
 //! the bottleneck (§Perf L3 target).
+//!
+//! Three wall-clock adapters share the engine: [`serve`] (static
+//! fleet), [`serve_churn`] (tenant arrivals/departures), and
+//! [`serve_fleet`] (elastic fleets with optional fault injection —
+//! viable live because [`crate::engine::WallClock`] cancellation is
+//! eager: a preempted worker wakes from its condvar wait immediately
+//! instead of sleeping out the cancelled job).
 
 mod churn;
+mod fleet;
 
 pub use churn::{serve_churn, serve_churn_deterministic, ChurnServeReport};
+pub use fleet::{serve_fleet, serve_fleet_deterministic, FleetServeReport};
 
 use std::time::Duration;
 
@@ -131,6 +140,7 @@ pub fn serve(
         stop_at_cutoff: None,
         time_scale: config.time_scale,
         collect_decision_latencies: true,
+        faults: None,
         verbose: config.verbose,
     };
     let run = engine::run(&params, PolicyHost::borrowed(policy), &mut clock);

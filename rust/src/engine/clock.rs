@@ -9,23 +9,28 @@
 //!   identical seeds replay identical schedules (the simulator's
 //!   substrate);
 //! * [`WallClock`] — real asynchrony: one worker thread per device that
-//!   "trains" a model by sleeping its scaled cost and reports back over
-//!   a channel; timed-event deadlines are served by `recv_timeout` (the
-//!   live coordinator's substrate);
+//!   "trains" a model by waiting out its scaled cost on a condvar and
+//!   reports back over a channel; timed-event deadlines are served by
+//!   `recv_timeout` (the live coordinator's substrate);
 //! * [`MockClock`] — the wall clock's deterministic stand-in: same
 //!   adapter-facing semantics (deadline handling, start reconstruction)
 //!   but virtual delivery, used by the cross-loop parity tests to drive
 //!   the wall-clock adapters over an exactly replayable trace.
 //!
-//! Device preemption (elastic fleets) uses **lazy cancellation**: every
-//! dispatch carries a job id; a cancelled job's completion is dropped at
-//! delivery time ([`VirtualClock`] filters stale heap entries,
-//! [`WallClock`] stale channel messages), so the revealed-on-completion
-//! contract is preserved — a preempted arm reveals nothing.
+//! Device preemption (elastic fleets, fault injection) keeps the
+//! **revealed-on-completion contract**: every dispatch carries a job id,
+//! and a cancelled job's completion is never delivered — a preempted arm
+//! reveals nothing. [`VirtualClock`] filters stale heap entries lazily;
+//! [`WallClock`] cancellation is **eager**: the worker's timed condvar
+//! wait observes the bumped cancel generation and aborts the job
+//! immediately, so the device accepts its next dispatch now instead of
+//! sleeping out the cancelled cost (any already-sent completion is
+//! dropped at delivery as a stale message).
 
 use std::cmp::Ordering;
 use std::collections::BinaryHeap;
 use std::sync::mpsc::{self, RecvTimeoutError};
+use std::sync::{Arc, Condvar, Mutex};
 use std::thread::{self, JoinHandle};
 use std::time::{Duration, Instant};
 
@@ -42,7 +47,8 @@ pub struct Completion {
     pub arm: ArmId,
     /// Dispatch time in clock units.
     pub start: f64,
-    /// Job id (engine-issued, used for lazy cancellation).
+    /// Job id (engine-issued; cancellation matches on it — lazily
+    /// filtered by [`VirtualClock`], eagerly aborted by [`WallClock`]).
     pub job: u64,
 }
 
@@ -241,17 +247,37 @@ struct WallDone {
     job: u64,
 }
 
+/// Leader↔worker mailbox for one device: the pending job hand-off plus
+/// the cancellation generation counter. Guarded by the slot mutex; every
+/// state change notifies the paired [`Condvar`] so a worker mid-wait
+/// re-examines the world immediately.
+struct Slot {
+    /// Next job for the worker to run (leader sets, worker takes).
+    pending: Option<WallJob>,
+    /// Bumped by every `cancel`; a worker that started a job under an
+    /// older generation aborts it at the next condvar wake-up.
+    cancel_gen: u64,
+    /// Set once by `Drop`: workers exit without finishing their waits.
+    shutdown: bool,
+}
+
+type SharedSlot = Arc<(Mutex<Slot>, Condvar)>;
+
 /// Real wall-clock time over a pool of device worker threads. Running a
-/// model is simulated by sleeping its (speed- and scale-adjusted) cost;
-/// the completion flows back over a shared channel. Timed-event
-/// deadlines are served by `recv_timeout` — the leader wakes for
-/// whichever comes first, exactly like the virtual loop but under real
-/// asynchrony.
+/// model is simulated by waiting out its (speed- and scale-adjusted)
+/// cost on a per-device condvar; the completion flows back over a shared
+/// channel. Timed-event deadlines are served by `recv_timeout` — the
+/// leader wakes for whichever comes first, exactly like the virtual loop
+/// but under real asynchrony. `cancel` is **eager**: it bumps the slot's
+/// cancel generation and notifies the condvar, so the worker abandons
+/// the job immediately and the device is free for its next dispatch now
+/// (no residual sleep) — the property the fleet/fault serving adapters
+/// and their preemption-heavy schedules rely on.
 pub struct WallClock {
     t0: Instant,
-    job_txs: Vec<mpsc::Sender<WallJob>>,
+    slots: Vec<SharedSlot>,
     done_rx: mpsc::Receiver<WallDone>,
-    workers: Vec<JoinHandle<()>>,
+    workers: Vec<Option<JoinHandle<()>>>,
     live: Vec<Option<u64>>,
     /// Duration (seconds) of the job running on each device — used to
     /// reconstruct `Completion::start` from the measured finish, the
@@ -260,31 +286,75 @@ pub struct WallClock {
     n_live: usize,
 }
 
+/// Body of one device worker thread: take the pending job under the slot
+/// lock, wait out its cost on the condvar (re-checking the cancel
+/// generation and the shutdown flag at every wake-up), and report the
+/// completion only if the job survived uncancelled. Any poisoned-lock
+/// error means the leader (or a sibling) panicked — exit quietly; the
+/// leader side re-raises with context.
+fn worker_loop(device: usize, slot: SharedSlot, done_tx: mpsc::Sender<WallDone>) {
+    let (lock, cv) = &*slot;
+    loop {
+        // Phase 1: wait for a job (or shutdown).
+        let (job, my_gen) = {
+            let Ok(mut guard) = lock.lock() else { return };
+            loop {
+                if guard.shutdown {
+                    return;
+                }
+                if let Some(job) = guard.pending.take() {
+                    break (job, guard.cancel_gen);
+                }
+                let Ok(next) = cv.wait(guard) else { return };
+                guard = next;
+            }
+        };
+        // Phase 2: "train" the model — a timed condvar wait that a
+        // cancel (generation bump) or shutdown interrupts immediately.
+        let deadline = Instant::now() + job.sleep;
+        let finished = {
+            let Ok(mut guard) = lock.lock() else { return };
+            loop {
+                if guard.shutdown {
+                    return;
+                }
+                if guard.cancel_gen != my_gen {
+                    break false; // preempted — abort, reveal nothing
+                }
+                let now = Instant::now();
+                if now >= deadline {
+                    break true;
+                }
+                let Ok((next, _)) = cv.wait_timeout(guard, deadline - now) else { return };
+                guard = next;
+            }
+        };
+        if finished && done_tx.send(WallDone { device, arm: job.arm, job: job.job }).is_err() {
+            return; // leader gone
+        }
+    }
+}
+
 impl WallClock {
     /// Spawn one worker thread per device slot (offline fleet devices
     /// simply never receive jobs) and start the clock.
     pub fn spawn(n_devices: usize) -> Self {
         let (done_tx, done_rx) = mpsc::channel::<WallDone>();
-        let mut job_txs = Vec::with_capacity(n_devices);
+        let mut slots = Vec::with_capacity(n_devices);
         let mut workers = Vec::with_capacity(n_devices);
         for device in 0..n_devices {
-            let (tx, rx) = mpsc::channel::<WallJob>();
+            let slot: SharedSlot = Arc::new((
+                Mutex::new(Slot { pending: None, cancel_gen: 0, shutdown: false }),
+                Condvar::new(),
+            ));
+            let worker_slot = Arc::clone(&slot);
             let done_tx = done_tx.clone();
-            job_txs.push(tx);
-            workers.push(thread::spawn(move || {
-                // Device worker: "train" each model by sleeping its
-                // cost, then report completion.
-                while let Ok(job) = rx.recv() {
-                    thread::sleep(job.sleep);
-                    if done_tx.send(WallDone { device, arm: job.arm, job: job.job }).is_err() {
-                        break; // leader gone
-                    }
-                }
-            }));
+            slots.push(slot);
+            workers.push(Some(thread::spawn(move || worker_loop(device, worker_slot, done_tx))));
         }
         WallClock {
             t0: Instant::now(),
-            job_txs,
+            slots,
             done_rx,
             workers,
             live: vec![None; n_devices],
@@ -296,6 +366,23 @@ impl WallClock {
     /// Number of live (non-cancelled) in-flight jobs (tests/diagnostics).
     pub fn in_flight(&self) -> usize {
         self.n_live
+    }
+
+    /// The worker thread for `device` died: join it and re-raise its
+    /// panic with a diagnosable message instead of the opaque poisoned
+    /// lock / hung channel the leader observed.
+    fn propagate_worker_panic(&mut self, device: usize) -> ! {
+        let payload = self.workers[device].take().and_then(|w| w.join().err());
+        let msg = match payload.as_ref() {
+            Some(p) => p
+                .downcast_ref::<&str>()
+                .map(|s| (*s).to_string())
+                .or_else(|| p.downcast_ref::<String>().cloned())
+                .unwrap_or_else(|| "non-string panic payload".to_string()),
+            None => "worker exited without a panic payload (slot lock poisoned)".to_string(),
+        };
+        // pallas-lint: allow(R5) — deliberate: a dead device worker cannot be recovered mid-run; re-raise with the worker's own payload so the failure is diagnosable.
+        panic!("device {device} worker thread panicked: {msg}");
     }
 
     fn deliver(&mut self, m: WallDone) -> Option<Completion> {
@@ -318,27 +405,43 @@ impl Clock for WallClock {
 
     fn dispatch(&mut self, device: usize, arm: ArmId, dur: f64, job: u64) {
         debug_assert!(self.live[device].is_none(), "device {device} already busy");
+        if self.workers[device].as_ref().is_none_or(|w| w.is_finished()) {
+            self.propagate_worker_panic(device);
+        }
         self.live[device] = Some(job);
         self.dur[device] = dur;
         self.n_live += 1;
-        self.job_txs[device]
-            .send(WallJob { arm, job, sleep: Duration::from_secs_f64(dur) })
-            // pallas-lint: allow(R5) — workers live until `Drop` closes the channel; a hung-up worker mid-run means a worker panicked, which this re-raises.
-            .expect("worker hung up");
+        let (lock, cv) = &*self.slots[device];
+        match lock.lock() {
+            Ok(mut guard) => {
+                debug_assert!(guard.pending.is_none(), "device {device} has an untaken job");
+                guard.pending = Some(WallJob { arm, job, sleep: Duration::from_secs_f64(dur) });
+            }
+            Err(_) => self.propagate_worker_panic(device),
+        }
+        cv.notify_all();
     }
 
-    /// Lazy cancellation only: the completion is suppressed, but the
-    /// worker thread keeps sleeping out the cancelled job's cost — a job
-    /// dispatched to the same device afterwards queues behind that
-    /// residual sleep. Fine for the current adapters (fleet preemption
-    /// runs only on the virtual clock); a real wall-clock fleet adapter
-    /// needs interruptible workers (e.g. a condvar wait with a cancel
-    /// flag) before its schedules mean anything — see the ROADMAP's
-    /// wall-clock fleet serving item.
+    /// Eager cancellation: bump the slot's cancel generation (and clear a
+    /// not-yet-taken pending job) under the lock, then notify the worker.
+    /// A worker mid-wait observes the new generation at the wake-up and
+    /// abandons the job immediately — the device accepts its next
+    /// dispatch now, with no residual sleep. A completion the worker
+    /// already sent is dropped at delivery (stale job id), preserving the
+    /// revealed-on-completion contract either way.
     fn cancel(&mut self, device: usize, job: u64) {
         if self.live[device] == Some(job) {
             self.live[device] = None;
             self.n_live -= 1;
+            let (lock, cv) = &*self.slots[device];
+            match lock.lock() {
+                Ok(mut guard) => {
+                    guard.pending = None;
+                    guard.cancel_gen += 1;
+                }
+                Err(_) => self.propagate_worker_panic(device),
+            }
+            cv.notify_all();
         }
     }
 
@@ -374,11 +477,19 @@ impl Clock for WallClock {
 
 impl Drop for WallClock {
     fn drop(&mut self) {
-        // Hang up the job channels so workers exit their recv loop, then
-        // join them (a preempted job's worker finishes its sleep first —
-        // bounded by the longest job).
-        self.job_txs.clear();
-        for w in self.workers.drain(..) {
+        // Raise the shutdown flag and wake every worker: a worker mid-job
+        // abandons its wait at the notify (no residual sleep), so the
+        // joins below return promptly even with jobs in flight.
+        for slot in &self.slots {
+            let (lock, cv) = &**slot;
+            // A poisoned slot means its worker already died — nothing to
+            // wake; the join below just collects the corpse.
+            if let Ok(mut guard) = lock.lock() {
+                guard.shutdown = true;
+            }
+            cv.notify_all();
+        }
+        for w in self.workers.drain(..).flatten() {
             let _ = w.join();
         }
     }
@@ -478,5 +589,95 @@ mod tests {
         // The worker's Done message for the preempted job must be
         // discarded, not delivered.
         assert!(matches!(c.next_event(None), Step::Exhausted));
+    }
+
+    #[test]
+    fn wall_clock_cancel_is_eager() {
+        // Regression pin for the condvar rewrite: under the old
+        // sleep-based workers a cancelled 30 s job was slept out in full
+        // and the next dispatch queued behind the residual sleep. The
+        // preempted device must accept its next job *immediately*.
+        let t0 = Instant::now();
+        let mut c = WallClock::spawn(1);
+        c.dispatch(0, 1, 30.0, 1);
+        c.cancel(0, 1);
+        assert_eq!(c.in_flight(), 0);
+        c.dispatch(0, 2, 0.001, 2);
+        match c.next_event(None) {
+            Step::Completed(done) => assert_eq!((done.arm, done.job), (2, 2)),
+            other => panic!("expected the replacement job, got {other:?}"),
+        }
+        drop(c); // must not wait out the cancelled sleep either
+        assert!(
+            t0.elapsed() < Duration::from_secs(10),
+            "eager cancel regressed: cancelled job's cost was slept out ({:?})",
+            t0.elapsed()
+        );
+    }
+
+    #[test]
+    fn wall_clock_cancel_then_redispatch_races_are_clean() {
+        // Hammer the cancel → immediate re-dispatch edge: whatever the
+        // worker was doing (not yet taken the job, mid-wait, or already
+        // finished), only the *latest* live job may ever be delivered.
+        let mut c = WallClock::spawn(2);
+        let mut job = 0u64;
+        for round in 0..50 {
+            for d in 0..2 {
+                job += 1;
+                c.dispatch(d, round, 5.0, job);
+                c.cancel(d, job);
+                job += 1;
+                c.dispatch(d, 1000 + round, 0.0005, job);
+            }
+            let mut seen = 0;
+            while seen < 2 {
+                match c.next_event(None) {
+                    Step::Completed(done) => {
+                        assert!(done.arm >= 1000, "cancelled job {} delivered", done.job);
+                        seen += 1;
+                    }
+                    other => panic!("expected completion, got {other:?}"),
+                }
+            }
+        }
+        assert_eq!(c.in_flight(), 0);
+    }
+
+    #[test]
+    fn wall_clock_propagates_worker_panic_with_context() {
+        let mut c = WallClock::spawn(1);
+        // Simulate a crashed device worker: retire the real worker
+        // through the shutdown path, then install a panicked handle in
+        // its place.
+        {
+            let (lock, cv) = &*c.slots[0];
+            lock.lock().unwrap().shutdown = true;
+            cv.notify_all();
+        }
+        if let Some(real) = c.workers[0].take() {
+            real.join().unwrap();
+        }
+        let crashed = thread::spawn(|| panic!("simulated worker crash"));
+        while !crashed.is_finished() {
+            thread::yield_now();
+        }
+        c.workers[0] = Some(crashed);
+        let err = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            c.dispatch(0, 3, 0.001, 1);
+        }))
+        .expect_err("dispatch to a dead worker must fail");
+        let msg = err
+            .downcast_ref::<String>()
+            .cloned()
+            .unwrap_or_else(|| "non-string panic".to_string());
+        assert!(
+            msg.contains("device 0 worker thread panicked") && msg.contains("simulated worker crash"),
+            "panic message must name the device and carry the worker's payload, got: {msg}"
+        );
+        // The failed dispatch marked the device live; clear it so Drop's
+        // bookkeeping (which only joins workers) stays consistent.
+        c.live[0] = None;
+        c.n_live = 0;
     }
 }

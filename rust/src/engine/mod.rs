@@ -18,15 +18,19 @@
 //!                 Clock: VirtualClock │ WallClock │ MockClock
 //! ```
 //!
-//! The engine is parameterized over two event streams beyond
+//! The engine is parameterized over three event streams beyond
 //! completions: **tenant churn** ([`Tenancy::Churn`], PR 4's
-//! arrival/departure timeline) and **device fleet availability**
-//! ([`crate::problem::DeviceFleet`] — elastic heterogeneous capacity,
-//! new in this layer). The merged timed-event order is deterministic:
+//! arrival/departure timeline), **device fleet availability**
+//! ([`crate::problem::DeviceFleet`] — elastic heterogeneous capacity),
+//! and **fault injection** ([`crate::problem::FaultPlan`] — device
+//! crashes/restarts, lost jobs, stragglers, with deadline/retry
+//! semantics). The merged timed-event order is deterministic:
 //! `(time, rank, id)` with rank `DeviceLeave < TenantDeparture <
-//! TenantArrival < DeviceJoin` — capacity shrinks first, the cohort
-//! turns over, and a joining device asks for work against the
-//! post-churn arm set.
+//! TenantArrival < DeviceJoin < FaultCrash < FaultJobKill <
+//! FaultStraggler < FaultRestart` — capacity shrinks first, the cohort
+//! turns over, a joining device asks for work against the post-churn
+//! arm set, and injected faults land last so they see the scheduled
+//! world.
 //!
 //! **Heterogeneous speeds.** A job on device `d` occupies it for
 //! `c(x)/s_d` time units; the *policy* still sees the (estimated) costs
@@ -36,12 +40,26 @@
 //! fleet-free runs **byte-identical** to the pre-engine loops (pinned by
 //! `rust/tests/engine_parity.rs` and the CI determinism gate).
 //!
-//! **Preemption.** A device that leaves mid-job cancels the job (lazy
-//! cancellation in the clock) and requeues the in-flight arm's decision
-//! into a FIFO consulted *before* the warm-start queue — the decision
-//! was already made, it just never ran. Nothing is revealed: the
+//! **Preemption.** A device that leaves (or crashes) mid-job cancels
+//! the job and requeues the in-flight arm's decision into a FIFO
+//! consulted *before* the warm-start queue — the decision was already
+//! made, it just never ran. Nothing is revealed: the
 //! revealed-on-completion contract holds, a preempted arm is simply
-//! unselected again.
+//! unselected again. The [`VirtualClock`] filters the cancelled
+//! completion lazily; the [`WallClock`] aborts the worker's wait
+//! eagerly (condvar + cancel generation), so the device is free for its
+//! next dispatch immediately — either way the completion is never
+//! delivered.
+//!
+//! **Faults.** With a non-empty [`crate::problem::FaultPlan`], jobs can
+//! die (`JobFailure` — completion lost, nothing revealed, the arm
+//! retried with capped exponential backoff and abandoned after
+//! `max_retries`), slow down (`Straggler` — remaining cost stretched),
+//! and every dispatch gets the deadline `k × ĉ(x, class_d)/s_d` over the
+//! *scheduler-visible* cost estimate; blowing it counts as a failure.
+//! An **empty** plan arms none of this machinery — no deadlines, no
+//! extra wake-ups — so empty-plan runs are byte-identical to runs with
+//! no plan at all (the `fig8_faults` hard gate).
 //!
 //! **Regret accounting.** Two modes, bit-compatible with the historical
 //! loops: the static paper setting integrates the all-user gap sum
@@ -57,8 +75,8 @@ use std::time::{Duration, Instant};
 
 use crate::metrics::StepCurve;
 use crate::problem::{
-    ArmId, ChurnEventKind, ChurnSchedule, CostModel, DeviceFleet, FleetEventKind, Problem,
-    TenantSet, Truth, UserId,
+    ArmId, ChurnEventKind, ChurnSchedule, CostModel, DeviceFleet, FaultKind, FaultPlan,
+    FleetEventKind, Problem, TenantSet, Truth, UserId,
 };
 use crate::sched::{DeviceView, Incumbents, Policy, SchedContext};
 
@@ -132,6 +150,12 @@ pub struct EngineParams<'a> {
     /// the decision count and the accumulated wall total, so the
     /// dominant bench-sweep path does not grow a throwaway `Vec`.
     pub collect_decision_latencies: bool,
+    /// Deterministic fault injection (crashes/restarts, job failures,
+    /// stragglers) plus the deadline/retry semantics jobs run under.
+    /// `None` — or an **empty** plan — disables the whole fault layer:
+    /// no deadlines are armed and no extra wake-ups occur, so such runs
+    /// are byte-identical to the historical fault-free engine.
+    pub faults: Option<&'a FaultPlan>,
     /// Print progress lines to stderr (live serving).
     pub verbose: bool,
 }
@@ -323,6 +347,32 @@ pub struct EngineRun {
     /// (An arm whose tenant retired before re-dispatch never reappears
     /// here.)
     pub requeue_latency: Vec<f64>,
+    /// Fault-injection counters (all zero / empty in fault-free runs).
+    pub fault_stats: FaultStats,
+}
+
+/// Counters for the fault-injection layer, reported alongside the run.
+/// Every field stays at its default in fault-free (and empty-plan) runs.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct FaultStats {
+    /// Devices dropped offline by an injected crash.
+    pub n_crashes: usize,
+    /// Crashed devices brought back by an injected restart.
+    pub n_restarts: usize,
+    /// In-flight jobs killed by an injected [`FaultKind::JobFailure`].
+    pub n_job_failures: usize,
+    /// In-flight jobs killed for blowing their retry-policy deadline.
+    pub n_deadline_kills: usize,
+    /// In-flight jobs slowed by an injected straggler event.
+    pub n_stragglers: usize,
+    /// Retry re-dispatches scheduled (each failed attempt below the
+    /// retry cap schedules exactly one).
+    pub n_retries: usize,
+    /// Arms abandoned after exhausting `max_retries` failed attempts.
+    pub n_abandoned: usize,
+    /// Per recovered arm (failed at least once, eventually completed):
+    /// first failure → eventual completion delay, in completion order.
+    pub recovery_latency: Vec<f64>,
 }
 
 /// Merged timed-event kinds, in deterministic tie-break order.
@@ -332,6 +382,11 @@ enum TimedKind {
     TenantDeparture(UserId),
     TenantArrival(UserId),
     DeviceJoin(usize),
+    FaultCrash(usize),
+    FaultJobKill(usize),
+    /// Device index + slowdown factor on the remaining cost.
+    FaultStraggler(usize, f64),
+    FaultRestart(usize),
 }
 
 impl TimedKind {
@@ -341,12 +396,21 @@ impl TimedKind {
             TimedKind::TenantDeparture(_) => 1,
             TimedKind::TenantArrival(_) => 2,
             TimedKind::DeviceJoin(_) => 3,
+            TimedKind::FaultCrash(_) => 4,
+            TimedKind::FaultJobKill(_) => 5,
+            TimedKind::FaultStraggler(..) => 6,
+            TimedKind::FaultRestart(_) => 7,
         }
     }
 
     fn id(self) -> usize {
         match self {
-            TimedKind::DeviceLeave(d) | TimedKind::DeviceJoin(d) => d,
+            TimedKind::DeviceLeave(d)
+            | TimedKind::DeviceJoin(d)
+            | TimedKind::FaultCrash(d)
+            | TimedKind::FaultJobKill(d)
+            | TimedKind::FaultStraggler(d, _)
+            | TimedKind::FaultRestart(d) => d,
             TimedKind::TenantDeparture(u) | TimedKind::TenantArrival(u) => u,
         }
     }
@@ -365,8 +429,25 @@ struct DeviceState {
     /// `(arm, class)` table (0 for the paper's homogeneous fleets).
     class: usize,
     online: bool,
-    /// `(job id, arm)` of the in-flight job, if any.
-    job: Option<(u64, ArmId)>,
+    /// The in-flight job, if any.
+    job: Option<InFlight>,
+}
+
+/// Engine-side record of one dispatched, not-yet-completed job.
+struct InFlight {
+    job: u64,
+    arm: ArmId,
+    /// Dispatch time (clock units) — the Observation's `start` when a
+    /// straggler re-dispatch makes the clock's reconstruction wrong.
+    start: f64,
+    /// Estimated completion time: dispatch + scaled duration, stretched
+    /// by stragglers. Exact in virtual time; on the wall clock the same
+    /// arithmetic over the requested sleep.
+    finish_est: f64,
+    /// Absolute kill time `start + k × ĉ/s_d` (faults enabled only).
+    deadline: Option<f64>,
+    /// Whether a straggler re-dispatched this job mid-flight.
+    slowed: bool,
 }
 
 /// Drive one full run of the engine. The clock must have been
@@ -429,6 +510,19 @@ struct Engine<'a, 'c> {
     n_preemptions: usize,
     requeue_latency: Vec<f64>,
     stopped: bool,
+
+    /// The fault plan, pre-filtered: `None` when the caller passed no
+    /// plan *or an empty one*, so every fault-path branch below is
+    /// byte-inert exactly when the plan injects nothing.
+    faults: Option<&'a FaultPlan>,
+    /// Pending retry releases, sorted ascending by `(time, arm)`.
+    retry_pending: Vec<(f64, ArmId)>,
+    /// Failed attempts per arm (deadline kills + injected job failures).
+    attempts: Vec<usize>,
+    /// First failure time per arm, cleared on eventual completion (feeds
+    /// the recovery-latency KPI).
+    first_fault: Vec<Option<f64>>,
+    fault_stats: FaultStats,
 }
 
 impl<'a, 'c> Engine<'a, 'c> {
@@ -474,6 +568,25 @@ impl<'a, 'c> Engine<'a, 'c> {
                 FleetEventKind::Leave => TimedKind::DeviceLeave(e.device),
             };
             timed.push(Timed { time: e.time, kind });
+        }
+        // An empty plan must be indistinguishable from no plan at all
+        // (the byte-identity gate), so filter it out up front.
+        let faults = params.faults.filter(|plan| !plan.is_empty());
+        if let Some(plan) = faults {
+            for e in plan.events() {
+                assert!(
+                    e.device < params.fleet.n_devices(),
+                    "fault plan references out-of-range device {}",
+                    e.device
+                );
+                let kind = match e.kind {
+                    FaultKind::DeviceCrash => TimedKind::FaultCrash(e.device),
+                    FaultKind::JobFailure => TimedKind::FaultJobKill(e.device),
+                    FaultKind::Straggler(f) => TimedKind::FaultStraggler(e.device, f),
+                    FaultKind::DeviceRestart => TimedKind::FaultRestart(e.device),
+                };
+                timed.push(Timed { time: e.time, kind });
+            }
         }
         timed.sort_by(|a, b| {
             a.time
@@ -566,6 +679,11 @@ impl<'a, 'c> Engine<'a, 'c> {
             n_preemptions: 0,
             requeue_latency: Vec::new(),
             stopped: false,
+            faults,
+            retry_pending: Vec::new(),
+            attempts: vec![0; n_arms],
+            first_fault: vec![None; n_arms],
+            fault_stats: FaultStats::default(),
         };
         if engine.static_mode {
             // Historical static curve: starts at the empty-incumbent gap
@@ -653,6 +771,23 @@ impl<'a, 'c> Engine<'a, 'c> {
         }
     }
 
+    /// *Scheduler-visible* cost estimate `ĉ(arm, class)` — the Remark-1
+    /// split the retry deadline is computed from: the estimated base
+    /// cost (`sched_view` when set), scaled by the cost model's
+    /// class multiplier when one is in force. Falls back to the base
+    /// estimate if the model calls the pair infeasible (the dispatch
+    /// path has already ruled that out).
+    fn est_cost(&self, arm: ArmId, class: usize) -> f64 {
+        let base = self.view.cost[arm];
+        match self.cost_model {
+            Some(m) => match m.cost(arm, class) {
+                Some(c) => c * (base / self.problem.cost[arm]),
+                None => base,
+            },
+            None => base,
+        }
+    }
+
     /// Ask `device` for work at `now`: requeued preempted decisions
     /// first, then the warm-start queue, then the policy. A device with
     /// no candidate parks (idle devices are re-asked after every timed
@@ -737,8 +872,24 @@ impl<'a, 'c> Engine<'a, 'c> {
             }
             self.next_job += 1;
             let job = self.next_job;
-            self.devices[device].job = Some((job, a));
             let dur = (true_c / self.devices[device].speed) * self.time_scale;
+            // Faults armed → every job gets the deadline
+            // `k × ĉ(x, class_d)/s_d` over the scheduler-visible
+            // estimate. Fault-free, `deadline` stays `None` and no
+            // deadline machinery ever wakes the loop.
+            let deadline = self.faults.map(|plan| {
+                let est = self.est_cost(a, self.devices[device].class);
+                now + plan.retry().deadline_factor * (est / self.devices[device].speed)
+                    * self.time_scale
+            });
+            self.devices[device].job = Some(InFlight {
+                job,
+                arm: a,
+                start: now,
+                finish_est: now + dur,
+                deadline,
+                slowed: false,
+            });
             self.clock.dispatch(device, a, dur, job);
         }
     }
@@ -806,20 +957,38 @@ impl<'a, 'c> Engine<'a, 'c> {
                         eprintln!("[{now:8.3}s] tenant {u} left");
                     }
                 }
-                TimedKind::DeviceJoin(d) => {
-                    debug_assert!(!self.devices[d].online, "fleet schedule is validated");
+                TimedKind::DeviceJoin(d) | TimedKind::FaultRestart(d) => {
+                    // A fleet schedule alone never double-joins (it is
+                    // validated), but a fault plan's crash/restart cycle
+                    // can overlap it — state transitions are idempotent,
+                    // so an already-online device simply skips the event.
+                    if self.devices[d].online {
+                        continue;
+                    }
                     self.devices[d].online = true;
+                    if matches!(ev.kind, TimedKind::FaultRestart(_)) {
+                        self.fault_stats.n_restarts += 1;
+                    }
                     self.host.device_joined(view, &self.tenants, d);
                     if self.verbose {
                         eprintln!("[{now:8.3}s] device {d} joined (speed {})", self.devices[d].speed);
                     }
                 }
-                TimedKind::DeviceLeave(d) => {
-                    debug_assert!(self.devices[d].online, "fleet schedule is validated");
+                TimedKind::DeviceLeave(d) | TimedKind::FaultCrash(d) => {
+                    // Same idempotence as joins: a crash landing on a
+                    // device the fleet schedule already took offline (or
+                    // vice versa) is a no-op, not a validation failure.
+                    if !self.devices[d].online {
+                        continue;
+                    }
                     self.devices[d].online = false;
-                    if let Some((job, arm)) = self.devices[d].job.take() {
+                    if matches!(ev.kind, TimedKind::FaultCrash(_)) {
+                        self.fault_stats.n_crashes += 1;
+                    }
+                    if let Some(inflight) = self.devices[d].job.take() {
                         // Preemption: cancel the job (nothing is
                         // revealed) and requeue the arm's decision.
+                        let (job, arm) = (inflight.job, inflight.arm);
                         self.clock.cancel(d, job);
                         self.selected[arm] = false;
                         self.blocked[arm] = self.retired[arm];
@@ -833,7 +1002,115 @@ impl<'a, 'c> Engine<'a, 'c> {
                     }
                     self.host.device_left(view, &self.tenants, d);
                 }
+                TimedKind::FaultJobKill(d) => {
+                    // The in-flight job dies: completion lost, nothing
+                    // revealed, the arm enters the retry path. Hitting
+                    // an idle (or offline) device is a no-op.
+                    if let Some(inflight) = self.devices[d].job.take() {
+                        self.clock.cancel(d, inflight.job);
+                        self.fault_stats.n_job_failures += 1;
+                        self.fail_job(inflight.arm, now);
+                        if self.verbose {
+                            eprintln!("[{now:8.3}s] job on device {d} failed (arm {})", inflight.arm);
+                        }
+                    }
+                }
+                TimedKind::FaultStraggler(d, factor) => {
+                    // The in-flight job slows down: cancel it and
+                    // re-dispatch the *remaining* cost stretched by the
+                    // factor, under a fresh job id. The original start
+                    // and deadline are kept — a straggler can still blow
+                    // its deadline later.
+                    if let Some(mut inflight) = self.devices[d].job.take() {
+                        self.clock.cancel(d, inflight.job);
+                        let remaining = (inflight.finish_est - now).max(0.0) * factor;
+                        self.next_job += 1;
+                        inflight.job = self.next_job;
+                        inflight.finish_est = now + remaining;
+                        inflight.slowed = true;
+                        let (job, arm) = (inflight.job, inflight.arm);
+                        self.devices[d].job = Some(inflight);
+                        self.clock.dispatch(d, arm, remaining, job);
+                        self.fault_stats.n_stragglers += 1;
+                        if self.verbose {
+                            eprintln!("[{now:8.3}s] arm {arm} on device {d} straggling ({factor}×)");
+                        }
+                    }
+                }
             }
+        }
+    }
+
+    /// One failed attempt of `arm` at `now` (injected job failure or a
+    /// blown deadline): nothing is revealed; the arm stays blocked while
+    /// it backs off and is released into the requeue FIFO after
+    /// `min(base × 2^attempt, cap)` scaled clock units — or abandoned
+    /// for the rest of the run once `max_retries` attempts failed (its
+    /// user's regret keeps integrating; the service degrades instead of
+    /// spinning).
+    fn fail_job(&mut self, arm: ArmId, now: f64) {
+        // pallas-lint: allow(R5) — `fail_job` is only reachable from fault handlers, which the empty-filtered plan gates.
+        let retry = self.faults.expect("fault machinery runs only with a non-empty plan").retry();
+        if self.first_fault[arm].is_none() {
+            self.first_fault[arm] = Some(now);
+        }
+        let attempt = self.attempts[arm];
+        self.attempts[arm] += 1;
+        if attempt < retry.max_retries {
+            let release = now + retry.backoff(attempt) * self.time_scale;
+            let pos = self.retry_pending.partition_point(|&(t, a)| {
+                t.total_cmp(&release).is_lt() || (t.total_cmp(&release).is_eq() && a < arm)
+            });
+            self.retry_pending.insert(pos, (release, arm));
+            self.fault_stats.n_retries += 1;
+        } else {
+            // Abandoned: the arm stays selected/blocked forever.
+            self.fault_stats.n_abandoned += 1;
+            if self.verbose {
+                eprintln!("arm {arm} abandoned after {} failed attempts", self.attempts[arm]);
+            }
+        }
+    }
+
+    /// Kill every in-flight job whose deadline is due at `now` (ascending
+    /// device order — deterministic), then hand the freed device its next
+    /// job. Only meaningful with faults armed; fault-free runs never set
+    /// a deadline.
+    fn apply_due_deadline_kills(&mut self, now: f64) {
+        for d in 0..self.devices.len() {
+            let due = match &self.devices[d].job {
+                Some(j) => matches!(j.deadline, Some(t) if t <= now) && j.finish_est > now,
+                None => false,
+            };
+            if !due {
+                continue;
+            }
+            if let Some(inflight) = self.devices[d].job.take() {
+                self.clock.cancel(d, inflight.job);
+                self.fault_stats.n_deadline_kills += 1;
+                if self.verbose {
+                    eprintln!("[{now:8.3}s] arm {} blew its deadline on device {d}", inflight.arm);
+                }
+                self.fail_job(inflight.arm, now);
+                if self.devices[d].online {
+                    self.dispatch_device(d, now);
+                }
+            }
+        }
+    }
+
+    /// Unblock every backed-off arm whose release time is due at `now`,
+    /// in `(release, arm)` order, into the requeue FIFO (ahead of the
+    /// warm-start queue — the decision was already made once).
+    fn release_due_retries(&mut self, now: f64) {
+        while let Some(&(t, arm)) = self.retry_pending.first() {
+            if t > now {
+                break;
+            }
+            self.retry_pending.remove(0);
+            self.selected[arm] = false;
+            self.blocked[arm] = self.retired[arm];
+            self.requeue.push_back((arm, now));
         }
     }
 
@@ -842,7 +1119,19 @@ impl<'a, 'c> Engine<'a, 'c> {
     fn handle_completion(&mut self, c: Completion) {
         let problem = self.problem;
         let now = c.finish;
-        self.devices[c.device].job = None;
+        let in_flight = self.devices[c.device].job.take();
+        // A straggler re-dispatch covered only the *remaining* cost, so
+        // the clock's start is the re-dispatch instant — report the
+        // engine-recorded original dispatch time instead. Fault-free,
+        // `slowed` is never set and the historical clock-side start is
+        // used untouched (byte identity).
+        let start = match &in_flight {
+            Some(j) if j.slowed => j.start,
+            _ => c.start,
+        };
+        if let Some(t0) = self.first_fault[c.arm].take() {
+            self.fault_stats.recovery_latency.push(now - t0);
+        }
         let z = self.truth.z[c.arm];
         self.observed[c.arm] = true;
         // pallas-lint: allow(R3) — measures observe latency for the decision-wall KPI; never read by scheduling or virtual time.
@@ -851,7 +1140,7 @@ impl<'a, 'c> Engine<'a, 'c> {
         self.decision_wall += t0.elapsed();
         self.observations.push(Observation {
             arm: c.arm,
-            start: c.start,
+            start,
             finish: now,
             z,
             device: c.device,
@@ -876,6 +1165,37 @@ impl<'a, 'c> Engine<'a, 'c> {
         }
     }
 
+    /// Next TimedDue wake-up deadline for the clock: the next merged
+    /// timed event, plus — with faults armed — any in-flight job's kill
+    /// deadline that will actually fire (strictly before the job's own
+    /// estimated completion) and the earliest pending retry release.
+    /// Fault-free (or empty-plan), this is exactly the historical
+    /// next-timed-event deadline: zero extra wake-ups, byte identity.
+    fn next_wakeup(&self) -> Option<f64> {
+        let mut dl = self.timed.get(self.next_timed).map(|e| e.time * self.time_scale);
+        if self.faults.is_some() {
+            let mut fold = |t: f64| {
+                dl = Some(match dl {
+                    Some(x) if x <= t => x,
+                    _ => t,
+                });
+            };
+            for d in &self.devices {
+                if let Some(j) = &d.job {
+                    if let Some(t) = j.deadline {
+                        if t < j.finish_est {
+                            fold(t);
+                        }
+                    }
+                }
+            }
+            if let Some(&(t, _)) = self.retry_pending.first() {
+                fold(t);
+            }
+        }
+        dl
+    }
+
     fn run(mut self) -> EngineRun {
         // t = 0: churn mode starts with everyone inactive (a fresh
         // policy with an empty history is already "rebuilt", so
@@ -898,17 +1218,21 @@ impl<'a, 'c> Engine<'a, 'c> {
         }
         self.wake_idle(now0);
 
-        // Main event loop: next event is the earlier of the next timed
-        // deadline and the next completion; timed events apply first on
-        // ties.
+        // Main event loop: next event is the earliest of the next timed
+        // deadline, the next job-kill deadline / retry release (faults
+        // armed only), and the next completion; timed events apply first
+        // on ties.
         loop {
-            let deadline =
-                self.timed.get(self.next_timed).map(|e| e.time * self.time_scale);
+            let deadline = self.next_wakeup();
             match self.clock.next_event(deadline) {
                 Step::Exhausted => break,
                 Step::TimedDue(now) => {
                     self.integrate_to(now);
                     self.drain_due_events(now);
+                    if self.faults.is_some() {
+                        self.apply_due_deadline_kills(now);
+                        self.release_due_retries(now);
+                    }
                     if !self.static_mode {
                         self.push_curve(now);
                     }
@@ -988,6 +1312,7 @@ impl<'a, 'c> Engine<'a, 'c> {
             n_rebuilds: self.host.n_rebuilds,
             n_preemptions: self.n_preemptions,
             requeue_latency: self.requeue_latency,
+            fault_stats: self.fault_stats,
         }
     }
 }
@@ -1031,7 +1356,7 @@ fn enqueue_warm_arms(
 mod tests {
     use super::*;
     use crate::linalg::Mat;
-    use crate::problem::FleetEvent;
+    use crate::problem::{FaultEvent, FleetEvent, RetryPolicy};
     use crate::sched::MmGpEi;
 
     fn problem_and_truth() -> (Problem, Truth) {
@@ -1063,6 +1388,7 @@ mod tests {
             stop_at_cutoff: None,
             time_scale: 1.0,
             collect_decision_latencies: false,
+            faults: None,
             verbose: false,
         }
     }
@@ -1209,6 +1535,196 @@ mod tests {
         for o in &run.observations {
             assert!((o.finish - o.start - 3.0 * p.cost[o.arm]).abs() < 1e-12);
         }
+    }
+
+    fn fault_params<'a>(
+        p: &'a Problem,
+        t: &'a Truth,
+        fleet: &'a DeviceFleet,
+        plan: &'a FaultPlan,
+    ) -> EngineParams<'a> {
+        let mut params = static_params(p, t, fleet);
+        params.faults = Some(plan);
+        params
+    }
+
+    fn run_with_faults(p: &Problem, t: &Truth, fleet: &DeviceFleet, plan: &FaultPlan) -> EngineRun {
+        let factory = |p: &Problem| -> Box<dyn Policy> { Box::new(MmGpEi::new(p)) };
+        let mut clock = VirtualClock::new(fleet.n_devices());
+        run(&fault_params(p, t, fleet, plan), PolicyHost::from_factory(&factory), &mut clock)
+    }
+
+    #[test]
+    fn empty_fault_plan_is_byte_identical_to_no_plan() {
+        let (p, t) = problem_and_truth();
+        let fleet = DeviceFleet::uniform(2);
+        let factory = |p: &Problem| -> Box<dyn Policy> { Box::new(MmGpEi::new(p)) };
+        let mut clock_a = VirtualClock::new(2);
+        let base = run(&static_params(&p, &t, &fleet), PolicyHost::from_factory(&factory), &mut clock_a);
+        let empty = FaultPlan::empty();
+        let faulted = run_with_faults(&p, &t, &fleet, &empty);
+        let key = |r: &EngineRun| -> Vec<(usize, usize, u64, u64)> {
+            r.observations
+                .iter()
+                .map(|o| (o.arm, o.device, o.start.to_bits(), o.finish.to_bits()))
+                .collect()
+        };
+        assert_eq!(key(&base), key(&faulted));
+        assert_eq!(base.cumulative_regret.to_bits(), faulted.cumulative_regret.to_bits());
+        assert_eq!(base.curve, faulted.curve);
+        assert_eq!(faulted.fault_stats, FaultStats::default());
+    }
+
+    #[test]
+    fn crash_preempts_and_restart_resumes_service() {
+        let (p, t) = problem_and_truth();
+        let fleet = DeviceFleet::uniform(1);
+        // Warm start dispatches a cost-1 arm at t = 0; the crash at 0.5
+        // preempts it and the device is down until t = 2.
+        let plan = FaultPlan::new(
+            1,
+            vec![
+                FaultEvent { time: 0.5, device: 0, kind: FaultKind::DeviceCrash },
+                FaultEvent { time: 2.0, device: 0, kind: FaultKind::DeviceRestart },
+            ],
+            RetryPolicy::default(),
+        );
+        let run = run_with_faults(&p, &t, &fleet, &plan);
+        assert_eq!(run.fault_stats.n_crashes, 1);
+        assert_eq!(run.fault_stats.n_restarts, 1);
+        assert_eq!(run.n_preemptions, 1);
+        assert_eq!(run.requeue_latency.len(), 1);
+        assert!((run.requeue_latency[0] - 1.5).abs() < 1e-12, "preempted at 0.5, re-served at 2");
+        // Every arm is still revealed exactly once, none during the
+        // all-devices-down window (0.5, 2).
+        let mut arms: Vec<_> = run.observations.iter().map(|o| o.arm).collect();
+        arms.sort_unstable();
+        assert_eq!(arms, vec![0, 1, 2, 3, 4, 5]);
+        for o in &run.observations {
+            assert!(
+                o.finish <= 0.5 + 1e-12 || o.finish >= 2.0 - 1e-12,
+                "arm {} completed at {} while every device was down",
+                o.arm,
+                o.finish
+            );
+        }
+        assert_eq!(run.curve.final_value(), 0.0, "service recovers fully after the restart");
+    }
+
+    #[test]
+    fn job_failure_retries_with_backoff_and_reveals_once() {
+        let (p, t) = problem_and_truth();
+        let fleet = DeviceFleet::uniform(1);
+        let retry = RetryPolicy { deadline_factor: 10.0, max_retries: 3, backoff_base: 0.5, backoff_cap: 4.0 };
+        // Kill whatever runs at t = 0.5 (the first warm-start arm).
+        let plan = FaultPlan::new(
+            1,
+            vec![FaultEvent { time: 0.5, device: 0, kind: FaultKind::JobFailure }],
+            retry,
+        );
+        let run = run_with_faults(&p, &t, &fleet, &plan);
+        assert_eq!(run.fault_stats.n_job_failures, 1);
+        assert_eq!(run.fault_stats.n_retries, 1);
+        assert_eq!(run.fault_stats.n_abandoned, 0);
+        assert_eq!(run.fault_stats.recovery_latency.len(), 1);
+        assert!(run.fault_stats.recovery_latency[0] >= 0.5, "backoff alone is 0.5");
+        let mut arms: Vec<_> = run.observations.iter().map(|o| o.arm).collect();
+        arms.sort_unstable();
+        assert_eq!(arms, vec![0, 1, 2, 3, 4, 5], "the failed arm is eventually re-served once");
+    }
+
+    #[test]
+    fn repeated_failures_abandon_the_arm() {
+        // One user, two arms: the cheap arm (the warm head, and the
+        // best arm) is killed on both of its attempts and abandoned
+        // under max_retries = 1; the run degrades gracefully to the
+        // other arm's incumbent instead of spinning.
+        let user_arms = vec![vec![0, 1]];
+        let arm_users = Problem::compute_arm_users(2, &user_arms);
+        let p = Problem {
+            name: "abandon".into(),
+            n_users: 1,
+            cost: vec![1.0, 3.0],
+            user_arms,
+            arm_users,
+            prior_mean: vec![0.5; 2],
+            prior_cov: Mat::eye(2),
+        };
+        let t = Truth { z: vec![0.9, 0.5] };
+        let fleet = DeviceFleet::uniform(1);
+        let retry =
+            RetryPolicy { deadline_factor: 10.0, max_retries: 1, backoff_base: 0.25, backoff_cap: 0.25 };
+        // Timeline: arm 0 runs 0→1, killed at 0.5 (attempt 1, retried —
+        // released at 0.75); arm 1 runs 0.5→3.5; arm 0 re-dispatched
+        // from the requeue 3.5→4.5, killed again at 4.0 → abandoned.
+        let plan = FaultPlan::new(
+            1,
+            vec![
+                FaultEvent { time: 0.5, device: 0, kind: FaultKind::JobFailure },
+                FaultEvent { time: 4.0, device: 0, kind: FaultKind::JobFailure },
+            ],
+            retry,
+        );
+        let run = run_with_faults(&p, &t, &fleet, &plan);
+        assert_eq!(run.fault_stats.n_job_failures, 2);
+        assert_eq!(run.fault_stats.n_retries, 1);
+        assert_eq!(run.fault_stats.n_abandoned, 1);
+        // Only the surviving arm is revealed; the abandoned arm's gap
+        // stays open forever.
+        let arms: Vec<_> = run.observations.iter().map(|o| o.arm).collect();
+        assert_eq!(arms, vec![1], "only the un-killed arm completes");
+        assert!(
+            (run.curve.final_value() - 0.4).abs() < 1e-12,
+            "graceful degradation: the user's gap settles at z* − z₁ = 0.9 − 0.5"
+        );
+    }
+
+    #[test]
+    fn deadline_kill_fires_on_straggling_job() {
+        let (p, t) = problem_and_truth();
+        let fleet = DeviceFleet::uniform(1);
+        // Deadline factor 2 on unit-estimate costs: a job stretched past
+        // 2× its estimate must be killed and retried.
+        let retry = RetryPolicy { deadline_factor: 2.0, max_retries: 3, backoff_base: 0.25, backoff_cap: 1.0 };
+        // 10× slowdown at t = 0.5: the in-flight cost-1 arm would now
+        // finish at 0.5 + 0.5·10 = 5.5, but its deadline is 2.0.
+        let plan = FaultPlan::new(
+            1,
+            vec![FaultEvent { time: 0.5, device: 0, kind: FaultKind::Straggler(10.0) }],
+            retry,
+        );
+        let run = run_with_faults(&p, &t, &fleet, &plan);
+        assert_eq!(run.fault_stats.n_stragglers, 1);
+        assert_eq!(run.fault_stats.n_deadline_kills, 1);
+        assert_eq!(run.fault_stats.n_retries, 1);
+        let mut arms: Vec<_> = run.observations.iter().map(|o| o.arm).collect();
+        arms.sort_unstable();
+        assert_eq!(arms, vec![0, 1, 2, 3, 4, 5]);
+    }
+
+    #[test]
+    fn straggler_that_meets_its_deadline_reports_original_start() {
+        let (p, t) = problem_and_truth();
+        let fleet = DeviceFleet::uniform(1);
+        // Mild 1.5× slowdown, generous deadline: the job completes late
+        // but alive, and its observation keeps the original dispatch
+        // time (start = 0), not the re-dispatch instant.
+        let retry = RetryPolicy { deadline_factor: 10.0, ..RetryPolicy::default() };
+        let plan = FaultPlan::new(
+            1,
+            vec![FaultEvent { time: 0.5, device: 0, kind: FaultKind::Straggler(1.5) }],
+            retry,
+        );
+        let run = run_with_faults(&p, &t, &fleet, &plan);
+        assert_eq!(run.fault_stats.n_stragglers, 1);
+        assert_eq!(run.fault_stats.n_deadline_kills, 0);
+        let slowed = &run.observations[0];
+        assert_eq!(slowed.start, 0.0, "straggler keeps its original dispatch time");
+        assert!(
+            (slowed.finish - (0.5 + 0.5 * 1.5)).abs() < 1e-12,
+            "remaining cost is stretched: finish at 0.5 + 0.5×1.5, got {}",
+            slowed.finish
+        );
     }
 
     #[test]

@@ -46,6 +46,11 @@ COMMANDS
              (requires --fleet; knobs via a [cost_model] config section:
              multipliers, mem_limit; classes spread round-robin; the
              mdmt-device policy scores EI/(c(x, class)/speed))
+             [--faults]  deterministic fault injection: seeded device
+             crash/restart cycles, lost jobs, stragglers, plus per-job
+             deadlines with capped-backoff retries (knobs via a [faults]
+             config section, see configs/fig8_faults.toml; combine with
+             --fleet for an elastic faulty fleet)
   serve      live threaded coordinator (wall clock)
              --dataset azure --policy mdmt --devices 4 --time-scale 0.005
              --backend native|xla --seed 0 [--verbose]
@@ -148,8 +153,15 @@ fn cmd_simulate(args: &Args) -> Result<(), String> {
         cfg.cost_model = true;
         cfg.validate()?;
     }
+    if args.has_flag("faults") {
+        cfg.faults = true;
+        cfg.validate()?;
+    }
     if cfg.churn {
         return cmd_simulate_churn(&cfg, args, smoke);
+    }
+    if cfg.faults {
+        return cmd_simulate_faults(&cfg, args, smoke);
     }
     if cfg.fleet {
         return cmd_simulate_fleet(&cfg, args, smoke);
@@ -353,6 +365,72 @@ fn cmd_simulate_fleet(
     if let Some(path) = args.get("json") {
         let mut report = RunReport::new(cfg.name.clone(), 0, smoke);
         results.push_kpis(&mut report, "fleet/");
+        report.write(path).map_err(|e| e.to_string())?;
+        eprintln!("wrote {path}");
+    }
+    Ok(())
+}
+
+/// The faults branch of `simulate`: sweep (policy × seeds) under the
+/// seeded fault plan (crash/restart cycles, lost jobs, stragglers,
+/// deadline kills with capped-backoff retries) and print robustness
+/// KPIs next to the regret numbers.
+fn cmd_simulate_faults(
+    cfg: &mmgpei::config::ExperimentConfig,
+    args: &Args,
+    smoke: bool,
+) -> Result<(), String> {
+    let fc = &cfg.faults_cfg;
+    eprintln!(
+        "simulate --faults: mtbf={} downtime={} job_failure_gap={} straggler_gap={} horizon={}, policies={:?} seeds={}",
+        fc.mtbf, fc.mean_downtime, fc.job_failure_gap, fc.straggler_gap, fc.horizon, cfg.policies, cfg.seeds
+    );
+    if cfg.fleet {
+        let f = &cfg.fleet_cfg;
+        eprintln!(
+            "  elastic fleet: {} devices ({} online at t=0), speeds [{}, {})",
+            f.n_devices, f.initial_online, f.speed_range.0, f.speed_range.1
+        );
+    }
+    let results = mmgpei::cli::run_faults_experiment(cfg)?;
+    let mut table = Table::new(&[
+        "policy",
+        "cumulative regret (mean±σ)",
+        "served",
+        "crashes",
+        "job failures",
+        "retries",
+        "abandoned",
+        "p99 recovery",
+    ]);
+    for cell in &results.cells {
+        table.row(vec![
+            cell.policy.clone(),
+            format!("{:.2} ± {:.2}", cell.cumulative.0, cell.cumulative.1),
+            format!("{:.0}%", 100.0 * cell.served_fraction),
+            cell.n_crashes.to_string(),
+            cell.n_job_failures.to_string(),
+            cell.n_retries.to_string(),
+            cell.n_abandoned.to_string(),
+            if cell.p99_recovery_latency.is_finite() {
+                format!("{:.2}", cell.p99_recovery_latency)
+            } else {
+                "n/a".into()
+            },
+        ]);
+    }
+    println!("{}", table.to_markdown());
+    if args.has_flag("plot") {
+        let curves: Vec<(String, StepCurve)> = results
+            .cells
+            .iter()
+            .map(|c| (c.policy.clone(), c.runs[0].fleet.sim.inst_regret.clone()))
+            .collect();
+        println!("{}", ascii_plot("instantaneous regret under faults", &curves, 72, 16));
+    }
+    if let Some(path) = args.get("json") {
+        let mut report = RunReport::new(cfg.name.clone(), 0, smoke);
+        results.push_kpis(&mut report, "faults/");
         report.write(path).map_err(|e| e.to_string())?;
         eprintln!("wrote {path}");
     }

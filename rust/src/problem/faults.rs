@@ -1,0 +1,368 @@
+//! Deterministic fault injection for the serving engine.
+//!
+//! The paper's model assumes every dispatched job eventually returns its
+//! observation. A production service does not get that luxury: devices
+//! crash and come back, jobs fail without revealing anything, and
+//! stragglers finish late. This module holds the driver-side vocabulary
+//! for injecting those failures **deterministically** — a validated,
+//! totally ordered [`FaultPlan`] the engine merges into its timed-event
+//! stream (beside tenant churn and fleet availability), so a faulty run
+//! replays bit-for-bit from its seed:
+//!
+//! * [`FaultKind::DeviceCrash`] / [`FaultKind::DeviceRestart`] — the
+//!   device drops offline (an in-flight job is preempted and its arm
+//!   requeued through the fleet machinery; nothing is revealed) and
+//!   later returns;
+//! * [`FaultKind::JobFailure`] — the in-flight job on the device dies:
+//!   its completion is lost, nothing is revealed to the GP, and the arm
+//!   enters the bounded retry/backoff path of [`RetryPolicy`];
+//! * [`FaultKind::Straggler`] — the in-flight job slows down: its
+//!   *remaining* cost is stretched by the given factor (the observation,
+//!   when it finally lands, is unchanged — stragglers delay, they do not
+//!   corrupt).
+//!
+//! [`RetryPolicy`] also carries the per-job deadline: a dispatched job
+//! is killed after `deadline_factor × c̄(x, class_d)/s_d` clock units
+//! (`c̄` is the *scheduler-visible* cost estimate — Remark 1's split),
+//! counted as a failure, and retried with capped exponential backoff.
+//! After `max_retries` failed attempts the arm is abandoned for the rest
+//! of the run — the service degrades gracefully instead of spinning.
+
+/// What a fault event does when its time comes.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum FaultKind {
+    /// The device drops offline mid-run; a running job is preempted (arm
+    /// requeued, nothing revealed), and the device stops asking for work
+    /// until a [`FaultKind::DeviceRestart`].
+    DeviceCrash,
+    /// The crashed device comes back online and asks for work.
+    DeviceRestart,
+    /// The in-flight job on the device fails: the completion is lost,
+    /// nothing is revealed, and the arm is retried under the plan's
+    /// [`RetryPolicy`]. No effect on an idle device.
+    JobFailure,
+    /// The in-flight job on the device slows down: its remaining cost is
+    /// multiplied by the factor (validated ≥ 1). No effect on an idle
+    /// device.
+    Straggler(f64),
+}
+
+impl FaultKind {
+    /// Deterministic tie-break rank inside the engine's merged timeline.
+    /// All fault ranks sit *after* the fleet/churn ranks 0–3, so a plan
+    /// that shares a timestamp with a scheduled fleet or churn event
+    /// applies after it — and an empty plan leaves the historical order
+    /// untouched. Within faults: capacity shrinks first (crash), then
+    /// in-flight jobs are killed/slowed, then capacity returns (restart)
+    /// — a restarting device asks for work against the post-fault queue.
+    pub(crate) fn rank(self) -> u8 {
+        match self {
+            FaultKind::DeviceCrash => 4,
+            FaultKind::JobFailure => 5,
+            FaultKind::Straggler(_) => 6,
+            FaultKind::DeviceRestart => 7,
+        }
+    }
+}
+
+/// One injected fault in (virtual or scaled wall-clock) time.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct FaultEvent {
+    /// Event time (same unit as arm costs).
+    pub time: f64,
+    /// Affected device index.
+    pub device: usize,
+    /// What happens.
+    pub kind: FaultKind,
+}
+
+/// Deadline/retry semantics for failed jobs (shared by the whole plan).
+///
+/// A dispatched job gets the deadline `deadline_factor × ĉ/s_d` (ĉ the
+/// scheduler-visible cost estimate for the arm on the device's class);
+/// blowing it counts as a job failure. Each failure of an arm schedules
+/// a re-dispatch after `min(backoff_base × 2^attempt, backoff_cap)`
+/// clock units (attempt 0 for the first failure); after `max_retries`
+/// failures the arm is abandoned — never re-dispatched, its user's
+/// regret keeps integrating against whatever incumbent exists.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct RetryPolicy {
+    /// Deadline multiplier `k > 1` on the estimated job duration.
+    pub deadline_factor: f64,
+    /// Failed attempts after which the arm is abandoned.
+    pub max_retries: usize,
+    /// First backoff delay, in clock units (> 0).
+    pub backoff_base: f64,
+    /// Upper bound on any backoff delay (≥ `backoff_base`).
+    pub backoff_cap: f64,
+}
+
+impl Default for RetryPolicy {
+    fn default() -> Self {
+        RetryPolicy { deadline_factor: 3.0, max_retries: 3, backoff_base: 0.25, backoff_cap: 4.0 }
+    }
+}
+
+impl RetryPolicy {
+    /// Panics with a description on invalid knobs (generator bug, not a
+    /// runtime condition — mirroring [`super::DeviceFleet::new`]).
+    pub fn validate(&self) {
+        assert!(
+            self.deadline_factor.is_finite() && self.deadline_factor > 1.0,
+            "retry deadline_factor must be finite and > 1, got {}",
+            self.deadline_factor
+        );
+        assert!(
+            self.backoff_base.is_finite() && self.backoff_base > 0.0,
+            "retry backoff_base must be finite and positive, got {}",
+            self.backoff_base
+        );
+        assert!(
+            self.backoff_cap.is_finite() && self.backoff_cap >= self.backoff_base,
+            "retry backoff_cap must be finite and >= backoff_base, got {}",
+            self.backoff_cap
+        );
+    }
+
+    /// Backoff delay before re-dispatching after the `attempt`-th failure
+    /// (0-based): `min(backoff_base × 2^attempt, backoff_cap)`, computed
+    /// by iterative doubling so huge attempt counts saturate at the cap
+    /// instead of overflowing.
+    pub fn backoff(&self, attempt: usize) -> f64 {
+        let mut delay = self.backoff_base;
+        for _ in 0..attempt {
+            if delay >= self.backoff_cap {
+                break;
+            }
+            delay *= 2.0;
+        }
+        delay.min(self.backoff_cap)
+    }
+}
+
+/// A validated, deterministically ordered fault-injection timeline plus
+/// the retry semantics jobs run under.
+///
+/// Invariants enforced by [`FaultPlan::new`]: finite non-negative event
+/// times; device indices in range; straggler factors finite and ≥ 1;
+/// events totally ordered by `(time, kind rank, device)`; per device,
+/// crash/restart events strictly alternate starting with a crash; no two
+/// events share `(time, device, kind rank)` (the order would be
+/// ambiguous); and a valid [`RetryPolicy`].
+///
+/// An **empty** plan ([`FaultPlan::empty`]) is the engine's fault-free
+/// mode: it contributes no timed events and arms no deadline machinery,
+/// so runs are *byte-identical* to runs with no plan at all — the hard
+/// gate `fig8_faults` enforces.
+#[derive(Clone, Debug, PartialEq)]
+pub struct FaultPlan {
+    events: Vec<FaultEvent>,
+    retry: RetryPolicy,
+}
+
+impl FaultPlan {
+    /// Sort and validate a fault timeline for a fleet of `n_devices`
+    /// device slots. Panics with a description on an inconsistent plan.
+    pub fn new(n_devices: usize, mut events: Vec<FaultEvent>, retry: RetryPolicy) -> Self {
+        retry.validate();
+        for e in &events {
+            assert!(
+                e.time.is_finite() && e.time >= 0.0,
+                "fault event time must be finite and non-negative, got {} for device {}",
+                e.time,
+                e.device
+            );
+            assert!(
+                e.device < n_devices,
+                "fault event references out-of-range device {}",
+                e.device
+            );
+            if let FaultKind::Straggler(factor) = e.kind {
+                assert!(
+                    factor.is_finite() && factor >= 1.0,
+                    "straggler factor must be finite and >= 1, got {factor} for device {}",
+                    e.device
+                );
+            }
+        }
+        events.sort_by(|a, b| {
+            a.time
+                .total_cmp(&b.time)
+                .then_with(|| a.kind.rank().cmp(&b.kind.rank()))
+                .then_with(|| a.device.cmp(&b.device))
+        });
+        let mut crashed = vec![false; n_devices];
+        let mut last: Vec<Option<(f64, u8)>> = vec![None; n_devices];
+        for e in &events {
+            match e.kind {
+                FaultKind::DeviceCrash => {
+                    assert!(!crashed[e.device], "device {} crashes while already crashed", e.device);
+                    crashed[e.device] = true;
+                }
+                FaultKind::DeviceRestart => {
+                    assert!(crashed[e.device], "device {} restarts without a prior crash", e.device);
+                    crashed[e.device] = false;
+                }
+                FaultKind::JobFailure | FaultKind::Straggler(_) => {}
+            }
+            let key = (e.time, e.kind.rank());
+            assert!(
+                last[e.device] != Some(key),
+                "device {} has two identical-kind fault events at time {}",
+                e.device,
+                e.time
+            );
+            last[e.device] = Some(key);
+        }
+        FaultPlan { events, retry }
+    }
+
+    /// The fault-free plan: no events, default retry knobs, byte-inert.
+    pub fn empty() -> Self {
+        FaultPlan { events: Vec::new(), retry: RetryPolicy::default() }
+    }
+
+    /// Whether the plan injects nothing (the engine's byte-identity
+    /// fast path: no deadlines, no extra wake-ups).
+    pub fn is_empty(&self) -> bool {
+        self.events.is_empty()
+    }
+
+    /// The ordered fault timeline.
+    pub fn events(&self) -> &[FaultEvent] {
+        &self.events
+    }
+
+    /// The retry/deadline semantics in force.
+    pub fn retry(&self) -> &RetryPolicy {
+        &self.retry
+    }
+
+    /// Last fault-event time (0 when the timeline is empty).
+    pub fn end_time(&self) -> f64 {
+        self.events.last().map(|e| e.time).unwrap_or(0.0)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn empty_plan_is_empty_and_valid() {
+        let p = FaultPlan::empty();
+        assert!(p.is_empty());
+        assert_eq!(p.events().len(), 0);
+        assert_eq!(p.end_time(), 0.0);
+        p.retry().validate();
+    }
+
+    #[test]
+    fn events_sort_by_time_then_rank_then_device() {
+        let p = FaultPlan::new(
+            3,
+            vec![
+                FaultEvent { time: 5.0, device: 2, kind: FaultKind::DeviceRestart },
+                FaultEvent { time: 5.0, device: 1, kind: FaultKind::JobFailure },
+                FaultEvent { time: 5.0, device: 0, kind: FaultKind::Straggler(2.0) },
+                FaultEvent { time: 2.0, device: 2, kind: FaultKind::DeviceCrash },
+            ],
+            RetryPolicy::default(),
+        );
+        let order: Vec<_> = p.events().iter().map(|e| (e.time, e.device, e.kind.rank())).collect();
+        assert_eq!(order, vec![(2.0, 2, 4), (5.0, 1, 5), (5.0, 0, 6), (5.0, 2, 7)]);
+        assert_eq!(p.end_time(), 5.0);
+    }
+
+    #[test]
+    fn backoff_doubles_and_caps() {
+        let r = RetryPolicy { deadline_factor: 2.0, max_retries: 10, backoff_base: 0.5, backoff_cap: 3.0 };
+        assert_eq!(r.backoff(0), 0.5);
+        assert_eq!(r.backoff(1), 1.0);
+        assert_eq!(r.backoff(2), 2.0);
+        assert_eq!(r.backoff(3), 3.0);
+        assert_eq!(r.backoff(50), 3.0);
+        assert_eq!(r.backoff(10_000), 3.0, "huge attempts must saturate, not overflow");
+    }
+
+    #[test]
+    #[should_panic(expected = "crashes while already crashed")]
+    fn rejects_double_crash() {
+        let _ = FaultPlan::new(
+            1,
+            vec![
+                FaultEvent { time: 1.0, device: 0, kind: FaultKind::DeviceCrash },
+                FaultEvent { time: 2.0, device: 0, kind: FaultKind::DeviceCrash },
+            ],
+            RetryPolicy::default(),
+        );
+    }
+
+    #[test]
+    #[should_panic(expected = "restarts without a prior crash")]
+    fn rejects_restart_without_crash() {
+        let _ = FaultPlan::new(
+            1,
+            vec![FaultEvent { time: 1.0, device: 0, kind: FaultKind::DeviceRestart }],
+            RetryPolicy::default(),
+        );
+    }
+
+    #[test]
+    #[should_panic(expected = "out-of-range device")]
+    fn rejects_out_of_range_device() {
+        let _ = FaultPlan::new(
+            2,
+            vec![FaultEvent { time: 1.0, device: 5, kind: FaultKind::JobFailure }],
+            RetryPolicy::default(),
+        );
+    }
+
+    #[test]
+    #[should_panic(expected = "straggler factor")]
+    fn rejects_sub_unit_straggler() {
+        let _ = FaultPlan::new(
+            1,
+            vec![FaultEvent { time: 1.0, device: 0, kind: FaultKind::Straggler(0.5) }],
+            RetryPolicy::default(),
+        );
+    }
+
+    #[test]
+    #[should_panic(expected = "identical-kind fault events")]
+    fn rejects_duplicate_events() {
+        let _ = FaultPlan::new(
+            1,
+            vec![
+                FaultEvent { time: 1.0, device: 0, kind: FaultKind::JobFailure },
+                FaultEvent { time: 1.0, device: 0, kind: FaultKind::JobFailure },
+            ],
+            RetryPolicy::default(),
+        );
+    }
+
+    #[test]
+    #[should_panic(expected = "deadline_factor")]
+    fn rejects_sub_unit_deadline_factor() {
+        let _ = FaultPlan::new(
+            1,
+            Vec::new(),
+            RetryPolicy { deadline_factor: 1.0, ..RetryPolicy::default() },
+        );
+    }
+
+    #[test]
+    fn crash_restart_alternation_allows_cycles() {
+        let p = FaultPlan::new(
+            1,
+            vec![
+                FaultEvent { time: 1.0, device: 0, kind: FaultKind::DeviceCrash },
+                FaultEvent { time: 2.0, device: 0, kind: FaultKind::DeviceRestart },
+                FaultEvent { time: 3.0, device: 0, kind: FaultKind::DeviceCrash },
+            ],
+            RetryPolicy::default(),
+        );
+        assert_eq!(p.events().len(), 3);
+        assert!(!p.is_empty());
+    }
+}

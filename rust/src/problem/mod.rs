@@ -7,10 +7,12 @@
 //! overlapping — the paper explicitly allows shared models).
 
 mod cost;
+mod faults;
 mod fleet;
 mod tenancy;
 
 pub use cost::{CostModel, PerClassCost, UniformCost};
+pub use faults::{FaultEvent, FaultKind, FaultPlan, RetryPolicy};
 pub use fleet::{DeviceFleet, FleetEvent, FleetEventKind};
 pub use tenancy::{ChurnEvent, ChurnEventKind, ChurnSchedule, TenantSet};
 

@@ -92,6 +92,7 @@ pub fn simulate_churn(
         stop_at_cutoff: None,
         time_scale: 1.0,
         collect_decision_latencies: false,
+        faults: None,
         verbose: false,
     };
     let run = engine::run(&params, PolicyHost::from_factory(factory), &mut clock);

@@ -22,7 +22,11 @@
 //!   devices);
 //! * [`simulate_churn`] — dynamic tenancy (arrival/departure traffic);
 //! * [`simulate_fleet`] — elastic heterogeneous fleets (per-device
-//!   speeds, devices joining/leaving mid-run, preemption + requeue).
+//!   speeds, devices joining/leaving mid-run, preemption + requeue);
+//! * [`simulate_faults`] — fault-injected serving (device crashes, lost
+//!   jobs, stragglers, deadline kills + retry/backoff) over a
+//!   [`FaultPlan`]; with an empty plan it is byte-identical to
+//!   [`simulate_fleet`].
 
 mod churn;
 
@@ -31,9 +35,9 @@ pub use churn::{simulate_churn, ChurnResult};
 use std::time::Duration;
 
 use crate::config::ExperimentConfig;
-use crate::engine::{self, EngineParams, PolicyFactory, PolicyHost, Tenancy, VirtualClock};
+use crate::engine::{self, EngineParams, FaultStats, PolicyFactory, PolicyHost, Tenancy, VirtualClock};
 use crate::metrics::StepCurve;
-use crate::problem::{CostModel, DeviceFleet, Problem, Truth};
+use crate::problem::{CostModel, DeviceFleet, FaultPlan, Problem, Truth};
 use crate::sched::Policy;
 
 pub use crate::engine::Observation;
@@ -186,6 +190,7 @@ pub fn simulate_with_estimates(
         stop_at_cutoff: config.stop_at_cutoff,
         time_scale: 1.0,
         collect_decision_latencies: false,
+        faults: None,
         verbose: false,
     };
     let run = engine::run(&params, PolicyHost::borrowed(policy), &mut clock);
@@ -245,6 +250,7 @@ pub fn simulate_fleet_with_cost_model(
         stop_at_cutoff: config.stop_at_cutoff,
         time_scale: 1.0,
         collect_decision_latencies: false,
+        faults: None,
         verbose: false,
     };
     let mut run = engine::run(&params, PolicyHost::from_factory(factory), &mut clock);
@@ -256,6 +262,76 @@ pub fn simulate_fleet_with_cost_model(
         n_preemptions,
         requeue_latency,
         n_rebuilds,
+    }
+}
+
+/// Result of one **fault-injected** run ([`simulate_faults`]): the
+/// elastic-fleet accounting of [`FleetResult`] plus the fault KPIs the
+/// `fig8_faults` bench reports.
+#[derive(Clone, Debug)]
+pub struct FaultResult {
+    /// The schedule, regret, and preemption accounting (identical in
+    /// meaning — and, for an empty plan, identical in bytes — to a
+    /// [`simulate_fleet`] run).
+    pub fleet: FleetResult,
+    /// Fault-path counters: crashes, restarts, lost jobs, deadline
+    /// kills, stragglers, retries, abandoned arms, recovery latencies.
+    pub fault_stats: FaultStats,
+    /// Arms whose observation actually landed, over all arms — the
+    /// served fraction KPI (1.0 in a fault-free static run; abandoned
+    /// arms push it below 1).
+    pub served_fraction: f64,
+}
+
+/// Run one simulation over an elastic fleet **under fault injection**:
+/// the plan's device crashes preempt in-flight jobs (nothing revealed,
+/// arm requeued), job failures and blown deadlines enter the plan's
+/// bounded retry/backoff path, and stragglers stretch remaining work.
+/// The run survives windows with every device down — queues are held
+/// and the Eq.-2 regret integral keeps accruing until capacity returns.
+///
+/// An **empty** plan arms no fault machinery at all: the run is
+/// byte-identical to [`simulate_fleet`] on the same inputs (the hard
+/// gate in `fig8_faults`).
+pub fn simulate_faults(
+    problem: &Problem,
+    truth: &Truth,
+    fleet: &DeviceFleet,
+    plan: &FaultPlan,
+    factory: &PolicyFactory,
+    config: &SimConfig,
+) -> FaultResult {
+    let mut clock = VirtualClock::new(fleet.n_devices());
+    let params = EngineParams {
+        problem,
+        truth,
+        sched_view: None,
+        cost_model: None,
+        fleet,
+        tenancy: Tenancy::Static,
+        warm_start_per_user: config.warm_start_per_user,
+        horizon: config.horizon,
+        stop_at_cutoff: config.stop_at_cutoff,
+        time_scale: 1.0,
+        collect_decision_latencies: false,
+        faults: Some(plan),
+        verbose: false,
+    };
+    let mut run = engine::run(&params, PolicyHost::from_factory(factory), &mut clock);
+    let n_preemptions = run.n_preemptions;
+    let requeue_latency = std::mem::take(&mut run.requeue_latency);
+    let n_rebuilds = run.n_rebuilds;
+    let fault_stats = std::mem::take(&mut run.fault_stats);
+    let served_fraction = run.observations.len() as f64 / problem.n_arms() as f64;
+    FaultResult {
+        fleet: FleetResult {
+            sim: sim_result_from(run, problem.n_users),
+            n_preemptions,
+            requeue_latency,
+            n_rebuilds,
+        },
+        fault_stats,
+        served_fraction,
     }
 }
 
@@ -542,6 +618,73 @@ mod tests {
         assert_eq!(key(&plain), key(&elastic.sim));
         assert_eq!(plain.cumulative_regret.to_bits(), elastic.sim.cumulative_regret.to_bits());
         assert_eq!(plain.inst_regret, elastic.sim.inst_regret);
+    }
+
+    #[test]
+    fn empty_fault_plan_matches_simulate_fleet_bitwise() {
+        // The fig8_faults hard gate in miniature: an empty plan must arm
+        // no fault machinery and replay the fleet run bit-for-bit.
+        let (p, t) = problem_and_truth();
+        let factory = |p: &Problem| -> Box<dyn Policy> { Box::new(MmGpEi::new(p)) };
+        let fleet = DeviceFleet::uniform(2);
+        let cfg = SimConfig { n_devices: 2, ..Default::default() };
+        let plain = simulate_fleet(&p, &t, &fleet, &factory, &cfg);
+        let plan = crate::problem::FaultPlan::empty();
+        let faulty = simulate_faults(&p, &t, &fleet, &plan, &factory, &cfg);
+        let key = |r: &SimResult| -> Vec<(usize, usize, u64)> {
+            r.observations.iter().map(|o| (o.arm, o.device, o.finish.to_bits())).collect()
+        };
+        assert_eq!(key(&plain.sim), key(&faulty.fleet.sim));
+        assert_eq!(
+            plain.sim.cumulative_regret.to_bits(),
+            faulty.fleet.sim.cumulative_regret.to_bits()
+        );
+        assert_eq!(plain.sim.inst_regret, faulty.fleet.sim.inst_regret);
+        assert_eq!(faulty.fault_stats, FaultStats::default());
+        assert_eq!(faulty.served_fraction, 1.0);
+    }
+
+    #[test]
+    fn run_survives_all_devices_down_window() {
+        // Graceful degradation: both devices crash into an overlapping
+        // outage window; queues are held, the regret integral keeps
+        // accruing, and service resumes when capacity returns.
+        use crate::problem::{FaultEvent, FaultKind, FaultPlan, RetryPolicy};
+        let (p, t) = problem_and_truth();
+        let factory = |p: &Problem| -> Box<dyn Policy> { Box::new(MmGpEi::new(p)) };
+        let fleet = DeviceFleet::uniform(2);
+        let plan = FaultPlan::new(
+            2,
+            vec![
+                FaultEvent { time: 0.5, device: 0, kind: FaultKind::DeviceCrash },
+                FaultEvent { time: 0.5, device: 1, kind: FaultKind::DeviceCrash },
+                FaultEvent { time: 5.0, device: 0, kind: FaultKind::DeviceRestart },
+                FaultEvent { time: 5.0, device: 1, kind: FaultKind::DeviceRestart },
+            ],
+            RetryPolicy::default(),
+        );
+        let cfg = SimConfig { n_devices: 2, ..Default::default() };
+        let r = simulate_faults(&p, &t, &fleet, &plan, &factory, &cfg);
+        assert_eq!(r.fault_stats.n_crashes, 2);
+        assert_eq!(r.fault_stats.n_restarts, 2);
+        // Nothing completes inside the dead window…
+        for o in &r.fleet.sim.observations {
+            assert!(
+                o.finish <= 0.5 + 1e-12 || o.finish >= 5.0 - 1e-12,
+                "completion at {} inside the all-devices-down window",
+                o.finish
+            );
+        }
+        // …but the run still serves everything afterwards.
+        assert_eq!(r.served_fraction, 1.0);
+        assert_eq!(r.fleet.sim.observations.len(), 6);
+        assert_eq!(r.fleet.sim.inst_regret.final_value(), 0.0);
+        // The dead window costs real regret relative to fault-free.
+        let plain = simulate_fleet(&p, &t, &fleet, &factory, &cfg);
+        assert!(
+            r.fleet.sim.cumulative_regret > plain.sim.cumulative_regret,
+            "Eq.-2 regret must keep integrating across the outage"
+        );
     }
 
     #[test]

@@ -1,0 +1,284 @@
+//! Fault-injection workload: a seeded generator for [`FaultPlan`]s.
+//!
+//! Models the failure regimes a multi-tenant serving fleet actually
+//! sees: per-device crash/restart cycles with exponential inter-crash
+//! gaps (spot reclaims, OOM kills), fleet-wide job failures arriving as
+//! a Poisson-like stream (flaky trainer processes), and stragglers whose
+//! remaining work is stretched by a uniform slowdown factor (noisy
+//! neighbors, thermal throttling). Deterministic per `(config, seed)`;
+//! validation and total ordering live in [`FaultPlan::new`].
+
+use crate::prng::Rng;
+use crate::problem::{FaultEvent, FaultKind, FaultPlan, RetryPolicy};
+
+use super::fleet::exp_gap;
+
+/// Parameters of the fault-plan generator. A mean gap of `0.0` disables
+/// that fault channel entirely; with all three channels disabled the
+/// generator returns [`FaultPlan::empty`] (the engine's byte-inert
+/// fault-free mode).
+#[derive(Clone, Debug)]
+pub struct FaultsConfig {
+    /// Mean exponential gap between crashes of one device (mean time
+    /// between failures); `0.0` disables crash injection.
+    pub mtbf: f64,
+    /// Mean exponential downtime between a crash and its restart. Must
+    /// be positive when `mtbf` is.
+    pub mean_downtime: f64,
+    /// Mean exponential gap between fleet-wide job-failure events;
+    /// `0.0` disables job-failure injection.
+    pub job_failure_gap: f64,
+    /// Mean exponential gap between fleet-wide straggler events; `0.0`
+    /// disables straggler injection.
+    pub straggler_gap: f64,
+    /// Uniform straggler slowdown factor range `[lo, hi)`, `1 ≤ lo < hi`.
+    pub slowdown: (f64, f64),
+    /// Generate fault events in `[0, horizon)`; an event at or past the
+    /// horizon is dropped (a trailing crash leaves its device down).
+    pub horizon: f64,
+    /// Deadline/retry semantics the plan's jobs run under.
+    pub retry: RetryPolicy,
+}
+
+impl Default for FaultsConfig {
+    fn default() -> Self {
+        FaultsConfig {
+            mtbf: 60.0,
+            mean_downtime: 8.0,
+            job_failure_gap: 15.0,
+            straggler_gap: 25.0,
+            slowdown: (1.5, 4.0),
+            horizon: 240.0,
+            retry: RetryPolicy::default(),
+        }
+    }
+}
+
+impl FaultsConfig {
+    /// Sanity-check the knob ranges (mirrors `FleetConfig::validate`).
+    pub fn validate(&self) -> Result<(), String> {
+        for (name, v) in [
+            ("mtbf", self.mtbf),
+            ("job_failure_gap", self.job_failure_gap),
+            ("straggler_gap", self.straggler_gap),
+        ] {
+            if !(v.is_finite() && v >= 0.0) {
+                return Err(format!(
+                    "faults: {name} must be finite and >= 0 (0 disables), got {v}"
+                ));
+            }
+        }
+        if self.mtbf > 0.0 && !(self.mean_downtime.is_finite() && self.mean_downtime > 0.0) {
+            return Err(format!(
+                "faults: mean_downtime must be finite and positive when mtbf > 0, got {}",
+                self.mean_downtime
+            ));
+        }
+        if self.straggler_gap > 0.0
+            && (!(self.slowdown.0 >= 1.0) || !(self.slowdown.1 > self.slowdown.0))
+        {
+            return Err(format!(
+                "faults: slowdown range must satisfy 1 <= lo < hi, got {:?}",
+                self.slowdown
+            ));
+        }
+        if !(self.horizon > 0.0) {
+            return Err("faults: horizon must be positive".into());
+        }
+        if !(self.retry.deadline_factor.is_finite() && self.retry.deadline_factor > 1.0) {
+            return Err(format!(
+                "faults: retry deadline_factor must be finite and > 1, got {}",
+                self.retry.deadline_factor
+            ));
+        }
+        if !(self.retry.backoff_base.is_finite() && self.retry.backoff_base > 0.0) {
+            return Err(format!(
+                "faults: retry backoff_base must be finite and positive, got {}",
+                self.retry.backoff_base
+            ));
+        }
+        if !(self.retry.backoff_cap.is_finite() && self.retry.backoff_cap >= self.retry.backoff_base)
+        {
+            return Err(format!(
+                "faults: retry backoff_cap must be finite and >= backoff_base, got {}",
+                self.retry.backoff_cap
+            ));
+        }
+        Ok(())
+    }
+
+    /// Whether any fault channel is active. When false the generated
+    /// plan is empty and the engine's fault machinery stays disarmed.
+    pub fn any_channel_active(&self) -> bool {
+        self.mtbf > 0.0 || self.job_failure_gap > 0.0 || self.straggler_gap > 0.0
+    }
+}
+
+/// Generate a validated fault plan for a fleet of `n_devices` slots.
+/// Deterministic per `(config, n_devices, seed)`: each device's
+/// crash/restart timeline is drawn in device-index order, then the
+/// job-failure stream, then the straggler stream — fixed draw order, so
+/// adding knobs later cannot silently reshuffle earlier draws (the same
+/// discipline as `fleet_schedule`).
+pub fn fault_plan(config: &FaultsConfig, n_devices: usize, seed: u64) -> FaultPlan {
+    // pallas-lint: allow(R5) — generator precondition: configs come from `ExperimentConfig::validate`d TOML or test literals; an invalid one is a caller bug surfaced at startup, not at serve time.
+    config.validate().expect("invalid faults config");
+    assert!(n_devices > 0, "fault plan needs at least one device slot");
+    let mut rng = Rng::new(seed);
+    let mut events = Vec::new();
+
+    // Per-device crash/restart alternation (always starts with a crash;
+    // a trailing crash without a restart leaves the device down).
+    if config.mtbf > 0.0 {
+        for d in 0..n_devices {
+            let mut t = 0.0;
+            loop {
+                t += exp_gap(&mut rng, config.mtbf);
+                if t >= config.horizon {
+                    break;
+                }
+                events.push(FaultEvent { time: t, device: d, kind: FaultKind::DeviceCrash });
+                t += exp_gap(&mut rng, config.mean_downtime);
+                if t >= config.horizon {
+                    break;
+                }
+                events.push(FaultEvent { time: t, device: d, kind: FaultKind::DeviceRestart });
+            }
+        }
+    }
+
+    // Fleet-wide job-failure stream: each event picks its victim device
+    // uniformly (a kill landing on an idle or crashed device is a no-op
+    // at run time — the engine's handlers are idempotent).
+    if config.job_failure_gap > 0.0 {
+        let mut t = 0.0;
+        loop {
+            t += exp_gap(&mut rng, config.job_failure_gap);
+            if t >= config.horizon {
+                break;
+            }
+            let device = rng.below(n_devices);
+            events.push(FaultEvent { time: t, device, kind: FaultKind::JobFailure });
+        }
+    }
+
+    // Fleet-wide straggler stream with per-event slowdown factors.
+    if config.straggler_gap > 0.0 {
+        let mut t = 0.0;
+        loop {
+            t += exp_gap(&mut rng, config.straggler_gap);
+            if t >= config.horizon {
+                break;
+            }
+            let device = rng.below(n_devices);
+            let factor = rng.uniform_in(config.slowdown.0, config.slowdown.1);
+            events.push(FaultEvent { time: t, device, kind: FaultKind::Straggler(factor) });
+        }
+    }
+
+    FaultPlan::new(n_devices, events, config.retry)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn small() -> FaultsConfig {
+        FaultsConfig {
+            mtbf: 20.0,
+            mean_downtime: 4.0,
+            job_failure_gap: 10.0,
+            straggler_gap: 12.0,
+            slowdown: (1.5, 3.0),
+            horizon: 80.0,
+            ..Default::default()
+        }
+    }
+
+    #[test]
+    fn deterministic_per_seed() {
+        let a = fault_plan(&small(), 4, 9);
+        let b = fault_plan(&small(), 4, 9);
+        let c = fault_plan(&small(), 4, 10);
+        assert_eq!(a, b);
+        assert_ne!(a, c);
+    }
+
+    #[test]
+    fn events_respect_horizon_and_devices() {
+        let cfg = small();
+        for seed in 0..6 {
+            let plan = fault_plan(&cfg, 3, seed);
+            for e in plan.events() {
+                assert!(e.time < cfg.horizon, "event at {} past horizon", e.time);
+                assert!(e.device < 3);
+                if let FaultKind::Straggler(f) = e.kind {
+                    assert!(f >= cfg.slowdown.0 && f < cfg.slowdown.1);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn all_three_channels_fire_across_seeds() {
+        let cfg = small();
+        let (mut crash, mut kill, mut slow) = (false, false, false);
+        for seed in 0..10 {
+            for e in fault_plan(&cfg, 4, seed).events() {
+                match e.kind {
+                    FaultKind::DeviceCrash => crash = true,
+                    FaultKind::JobFailure => kill = true,
+                    FaultKind::Straggler(_) => slow = true,
+                    FaultKind::DeviceRestart => {}
+                }
+            }
+        }
+        assert!(crash && kill && slow, "gaps well under the horizon must produce all kinds");
+    }
+
+    #[test]
+    fn disabled_channels_produce_empty_plan() {
+        let cfg = FaultsConfig {
+            mtbf: 0.0,
+            job_failure_gap: 0.0,
+            straggler_gap: 0.0,
+            ..small()
+        };
+        assert!(!cfg.any_channel_active());
+        let plan = fault_plan(&cfg, 4, 1);
+        assert!(plan.is_empty());
+        assert_eq!(plan, FaultPlan::empty());
+    }
+
+    #[test]
+    fn single_channel_configs_generate_only_that_kind() {
+        let cfg = FaultsConfig { mtbf: 0.0, straggler_gap: 0.0, ..small() };
+        let plan = fault_plan(&cfg, 2, 3);
+        assert!(!plan.is_empty(), "job-failure gap 10 against horizon 80 must fire");
+        assert!(plan.events().iter().all(|e| e.kind == FaultKind::JobFailure));
+    }
+
+    #[test]
+    fn validate_rejects_bad_knobs() {
+        assert!(FaultsConfig { mtbf: -1.0, ..small() }.validate().is_err());
+        assert!(FaultsConfig { mtbf: f64::NAN, ..small() }.validate().is_err());
+        assert!(FaultsConfig { mean_downtime: 0.0, ..small() }.validate().is_err());
+        assert!(FaultsConfig { job_failure_gap: -0.5, ..small() }.validate().is_err());
+        assert!(FaultsConfig { slowdown: (0.5, 2.0), ..small() }.validate().is_err());
+        assert!(FaultsConfig { slowdown: (2.0, 2.0), ..small() }.validate().is_err());
+        assert!(FaultsConfig { horizon: 0.0, ..small() }.validate().is_err());
+        let bad_retry =
+            RetryPolicy { deadline_factor: 1.0, ..RetryPolicy::default() };
+        assert!(FaultsConfig { retry: bad_retry, ..small() }.validate().is_err());
+        let bad_cap = RetryPolicy { backoff_cap: 0.1, ..RetryPolicy::default() };
+        assert!(FaultsConfig { retry: bad_cap, ..small() }.validate().is_err());
+        assert!(small().validate().is_ok());
+    }
+
+    #[test]
+    fn mean_downtime_ignored_when_crashes_disabled() {
+        // With mtbf = 0 the downtime knob is dead; don't reject it.
+        let cfg = FaultsConfig { mtbf: 0.0, mean_downtime: 0.0, ..small() };
+        assert!(cfg.validate().is_ok());
+    }
+}

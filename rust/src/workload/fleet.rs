@@ -83,8 +83,9 @@ impl FleetConfig {
 }
 
 /// Exponential gap with the given mean (inverse-CDF; the `u = 0` corner
-/// is rejected so `ln` stays finite).
-fn exp_gap(rng: &mut Rng, mean: f64) -> f64 {
+/// is rejected so `ln` stays finite). Shared with the fault-plan
+/// generator, which models crash arrivals the same way.
+pub(crate) fn exp_gap(rng: &mut Rng, mean: f64) -> f64 {
     let mut u = rng.uniform();
     while u <= f64::MIN_POSITIVE {
         u = rng.uniform();

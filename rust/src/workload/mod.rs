@@ -16,12 +16,14 @@
 
 mod churn;
 mod dataset;
+mod fault_plan;
 mod fleet;
 mod generators;
 mod synthetic;
 
 pub use churn::{churn_workload, ChurnConfig};
 pub use dataset::{Dataset, ProtocolSplit};
+pub use fault_plan::{fault_plan, FaultsConfig};
 pub use fleet::{fleet_schedule, round_robin_classes, FleetConfig};
 pub use generators::{azure, deeplearning, AZURE_MODELS, DEEPLEARNING_MODELS};
 pub use synthetic::{synthetic_gp, SyntheticConfig};

@@ -409,6 +409,141 @@ fn double_observation_is_ignored_not_corrupting() {
 }
 
 #[test]
+fn retry_backoff_is_deterministic_bounded_and_monotone() {
+    // The capped-exponential backoff the fault layer schedules retries
+    // with: for randomized (base, cap) knobs the sequence must be
+    // deterministic, non-decreasing, bounded by the cap, and equal to
+    // min(base × 2^attempt, cap) — including huge attempt counts that
+    // would overflow a naive 2^attempt.
+    check("retry backoff sequence", |rng| {
+        let base = 0.01 + rng.uniform_in(0.0, 2.0);
+        let cap = base + rng.uniform_in(0.0, 16.0);
+        let retry = mmgpei::problem::RetryPolicy {
+            backoff_base: base,
+            backoff_cap: cap,
+            ..mmgpei::problem::RetryPolicy::default()
+        };
+        retry.validate();
+        let mut prev = 0.0f64;
+        for attempt in 0..64usize {
+            let d = retry.backoff(attempt);
+            assert_eq!(
+                d.to_bits(),
+                retry.backoff(attempt).to_bits(),
+                "backoff({attempt}) must be deterministic"
+            );
+            assert!(d >= base - 1e-15, "backoff({attempt}) = {d} below base {base}");
+            assert!(d <= cap + 1e-15, "backoff({attempt}) = {d} above cap {cap}");
+            assert!(d >= prev - 1e-15, "backoff must be non-decreasing: {prev} -> {d}");
+            // Closed form, guarded against overflow by the cap.
+            let naive = base * (2.0f64).powi(attempt.min(60) as i32);
+            assert!((d - naive.min(cap)).abs() <= 1e-9 * cap.max(1.0), "backoff({attempt})");
+            prev = d;
+        }
+        // Saturation: far past the doubling range the cap is exact.
+        assert_eq!(retry.backoff(1000).to_bits(), cap.to_bits());
+    });
+}
+
+#[test]
+fn generated_fault_plans_are_deterministic_and_well_formed() {
+    // The seeded plan generator: same (config, n_devices, seed) → the
+    // same plan bit for bit, and every generated plan passes the
+    // validating constructor's invariants (in-range devices, in-horizon
+    // times, crash/restart alternation — `FaultPlan::new` panics inside
+    // `fault_plan` otherwise, so reaching here proves them).
+    check("fault plan generation", |rng| {
+        let cfg = mmgpei::workload::FaultsConfig {
+            mtbf: if rng.below(4) == 0 { 0.0 } else { 2.0 + rng.uniform_in(0.0, 30.0) },
+            mean_downtime: 1.0 + rng.uniform_in(0.0, 8.0),
+            job_failure_gap: if rng.below(4) == 0 { 0.0 } else { 2.0 + rng.uniform_in(0.0, 20.0) },
+            straggler_gap: if rng.below(4) == 0 { 0.0 } else { 2.0 + rng.uniform_in(0.0, 20.0) },
+            horizon: 20.0 + rng.uniform_in(0.0, 80.0),
+            ..Default::default()
+        };
+        cfg.validate().expect("randomized knobs stay in the valid range");
+        let n_devices = 1 + rng.below(6);
+        let seed = rng.next_u64();
+        let plan = mmgpei::workload::fault_plan(&cfg, n_devices, seed);
+        let replay = mmgpei::workload::fault_plan(&cfg, n_devices, seed);
+        assert_eq!(plan, replay, "same seed must regenerate the same plan");
+        for e in plan.events() {
+            assert!(e.time >= 0.0 && e.time < cfg.horizon, "event at {} outside horizon", e.time);
+            assert!(e.device < n_devices);
+        }
+        if !cfg.any_channel_active() {
+            assert!(plan.is_empty(), "all channels off must generate the empty plan");
+        }
+        // Ordered timeline (ties broken deterministically upstream).
+        for w in plan.events().windows(2) {
+            assert!(w[0].time <= w[1].time, "events must be time-ordered");
+        }
+    });
+}
+
+#[test]
+fn faulty_runs_replay_bit_exactly_and_bound_retries() {
+    // A full faulty simulation is deterministic per (instance, plan) and
+    // its retry accounting is bounded by the policy: every scheduled
+    // retry answers a failure, and no arm is both abandoned and served.
+    check("faulty run determinism", |rng| {
+        let (nu, nm) = (2 + rng.below(3), 2 + rng.below(3));
+        let (p, t) = gen::problem(rng, nu, nm);
+        let n_devices = 1 + rng.below(3);
+        let fleet = mmgpei::problem::DeviceFleet::uniform(n_devices);
+        let cfg = mmgpei::workload::FaultsConfig {
+            mtbf: 3.0 + rng.uniform_in(0.0, 6.0),
+            mean_downtime: 1.0 + rng.uniform_in(0.0, 2.0),
+            job_failure_gap: 2.0 + rng.uniform_in(0.0, 4.0),
+            straggler_gap: 3.0 + rng.uniform_in(0.0, 6.0),
+            horizon: 40.0,
+            ..Default::default()
+        };
+        let plan = mmgpei::workload::fault_plan(&cfg, n_devices, rng.next_u64());
+        let factory = |p: &mmgpei::problem::Problem| -> Box<dyn Policy> { Box::new(MmGpEi::new(p)) };
+        let sim_cfg = SimConfig { n_devices, warm_start_per_user: 2, horizon: None, stop_at_cutoff: None };
+        let a = mmgpei::sim::simulate_faults(&p, &t, &fleet, &plan, &factory, &sim_cfg);
+        let b = mmgpei::sim::simulate_faults(&p, &t, &fleet, &plan, &factory, &sim_cfg);
+        let key = |r: &mmgpei::sim::FaultResult| -> Vec<(usize, usize, u64, u64)> {
+            r.fleet
+                .sim
+                .observations
+                .iter()
+                .map(|o| (o.arm, o.device, o.start.to_bits(), o.finish.to_bits()))
+                .collect()
+        };
+        assert_eq!(key(&a), key(&b), "same plan must replay the same schedule");
+        assert_eq!(a.fault_stats, b.fault_stats);
+        assert_eq!(a.served_fraction.to_bits(), b.served_fraction.to_bits());
+
+        let s = &a.fault_stats;
+        let failures = s.n_job_failures + s.n_deadline_kills;
+        assert_eq!(
+            s.n_retries + s.n_abandoned,
+            failures,
+            "every failure either schedules a retry or abandons the arm"
+        );
+        assert!(
+            s.n_abandoned * (plan.retry().max_retries + 1) <= failures,
+            "abandonment requires exhausting the retry budget first"
+        );
+        assert!(s.n_restarts <= s.n_crashes, "restarts can never outnumber crashes");
+        for &l in &s.recovery_latency {
+            assert!(l.is_finite() && l >= 0.0, "recovery latency {l} must be a real delay");
+        }
+        // Exactly-once on the served side: no arm completes twice, and
+        // the served fraction matches the observation count.
+        let mut seen = vec![false; p.n_arms()];
+        for o in &a.fleet.sim.observations {
+            assert!(!seen[o.arm], "arm {} observed twice under faults", o.arm);
+            seen[o.arm] = true;
+        }
+        let frac = a.fleet.sim.observations.len() as f64 / p.n_arms() as f64;
+        assert_eq!(a.served_fraction.to_bits(), frac.to_bits());
+    });
+}
+
+#[test]
 fn more_devices_never_increase_time_to_any_cutoff() {
     // Weak-monotonicity spot check on a fixed mid-size instance (full
     // statistical version lives in the fig5 bench).
