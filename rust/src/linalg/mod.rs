@@ -235,6 +235,7 @@ impl CholeskyFactor {
             return;
         }
         let new_cap = need.max(self.cap * 2).max(8);
+        // pallas-lint: allow(R6) — capacity-doubling relayout: reached O(log n) times over a run, never in steady state once the factor's stride has grown to its horizon (alloc_counter proves the per-decision path stays at zero).
         let mut data = vec![0.0; new_cap * new_cap];
         for i in 0..self.n {
             data[i * new_cap..i * new_cap + self.n]
@@ -338,6 +339,7 @@ impl CholeskyFactor {
         min_pivot: f64,
     ) -> Result<(f64, f64), LinalgError> {
         if cross.len() != self.n {
+            // pallas-lint: allow(R6) — cold error path: the format! only runs when the caller hands a mis-sized cross-covariance slice, which aborts the observation instead of entering the hot loop.
             return Err(LinalgError::DimensionMismatch(format!(
                 "append expected {} cross-covariances, got {}",
                 self.n,

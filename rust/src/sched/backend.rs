@@ -256,6 +256,7 @@ impl NativeBackend {
     fn mark_dirty(dirty: &mut [bool], dirty_arms: &mut Vec<ArmId>, x: ArmId) {
         if !dirty[x] {
             dirty[x] = true;
+            // pallas-lint: allow(R6) — dirty-arm worklist is with_capacity(n) at construction and the `dirty` bitmap caps it at one entry per arm, so the push never reallocates (alloc_counter gate).
             dirty_arms.push(x);
         }
     }

@@ -7,8 +7,10 @@
 //! 2. Where the old code *panicked* (NaN reaching a comparator), the
 //!    public entry points now complete and return something sane.
 //!
-//! This file lives under `rust/tests/`, outside the lint's sweep scope
-//! (`rust/src`), so it may use `partial_cmp` as the reference comparator.
+//! This file is *inside* the lint's sweep scope (CI lints `rust/tests`
+//! too), so its deliberate `partial_cmp` reference comparators carry
+//! justified `allow(R1)` pragmas — they exist to check parity against
+//! the old semantics, not to order floats for real.
 
 use mmgpei::gp::nelder_mead;
 use mmgpei::linalg::Mat;
@@ -49,6 +51,7 @@ fn total_cmp_sort_matches_partial_cmp_on_finite_inputs() {
         let mut by_total = xs.clone();
         by_total.sort_by(|a, b| a.total_cmp(b));
         let mut by_partial = xs;
+        // pallas-lint: allow(R1) — this IS the reference comparator the parity test compares total_cmp against; inputs are finite by construction.
         by_partial.sort_by(|a, b| a.partial_cmp(b).unwrap());
         assert_eq!(by_total, by_partial);
     });
@@ -59,6 +62,7 @@ fn total_cmp_max_matches_partial_cmp_on_finite_inputs() {
     check("total_cmp max parity", |rng| {
         let xs: Vec<f64> = (0..17).map(|_| rng.uniform_in(-50.0, 50.0)).collect();
         let max_total = xs.iter().copied().max_by(|a, b| a.total_cmp(b));
+        // pallas-lint: allow(R1) — reference comparator for the max-parity claim; inputs are finite by construction.
         let max_partial = xs.iter().copied().max_by(|a, b| a.partial_cmp(b).unwrap());
         assert_eq!(max_total, max_partial);
     });

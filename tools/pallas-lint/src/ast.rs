@@ -1,0 +1,240 @@
+//! Lightweight item/statement tree produced by [`crate::parser`].
+//!
+//! This is deliberately *not* a full Rust AST: the graph rules (R6–R8)
+//! only need to know, per function, which calls/macros/identifiers occur
+//! in which statement, which statements bind names, and how blocks nest.
+//! Expressions stay flat; types are reduced to the last identifier of
+//! their leading path (`Mutex<Vec<f64>>` → `Mutex`).
+
+use std::collections::{BTreeMap, BTreeSet};
+
+/// One call/macro/identifier occurrence inside a statement.
+#[derive(Clone, Debug)]
+pub enum Event {
+    /// `recv.name(…)` — `recv` is the receiver's identifier chain
+    /// (`self.field` → `["self", "field"]`), empty when the receiver is a
+    /// complex expression (`f(x).name(…)`).
+    Method {
+        /// Receiver identifier chain, outermost first.
+        recv: Vec<String>,
+        /// Method name.
+        name: String,
+        /// 1-based source line of the call.
+        line: u32,
+    },
+    /// `A::B::name(…)` or a bare `name(…)` call — `segs` are the path
+    /// segments, last one the called name.
+    PathCall {
+        /// Path segments (`["Vec", "new"]`, or `["helper"]` for a bare call).
+        segs: Vec<String>,
+        /// 1-based source line of the call.
+        line: u32,
+    },
+    /// `name!(…)` macro invocation.
+    Macro {
+        /// Macro name without the `!`.
+        name: String,
+        /// 1-based source line.
+        line: u32,
+    },
+    /// Any other identifier use (dataflow rules match bindings on these).
+    Word {
+        /// The identifier.
+        name: String,
+        /// 1-based source line.
+        line: u32,
+    },
+}
+
+impl Event {
+    /// Source line of the event.
+    pub fn line(&self) -> u32 {
+        match self {
+            Event::Method { line, .. }
+            | Event::PathCall { line, .. }
+            | Event::Macro { line, .. }
+            | Event::Word { line, .. } => *line,
+        }
+    }
+}
+
+/// One statement: its events, any nested blocks, and — for `let`
+/// statements — the names the pattern binds.
+#[derive(Clone, Debug, Default)]
+pub struct Stmt {
+    /// Whether this is a `let` statement.
+    pub is_let: bool,
+    /// Names bound by the `let` pattern (empty otherwise).
+    pub bindings: Vec<String>,
+    /// Events in source order (nested-block events live in `children`).
+    pub events: Vec<Event>,
+    /// Nested blocks (if/match/loop bodies, bare blocks) in source order.
+    pub children: Vec<Vec<Stmt>>,
+    /// 1-based line the statement starts on.
+    pub line: u32,
+}
+
+/// One `fn` item with a parsed body.
+#[derive(Clone, Debug)]
+pub struct FnDef {
+    /// Function name.
+    pub name: String,
+    /// `impl` self type (`impl Gp` → `Gp`), `None` for free fns and trait
+    /// declarations.
+    pub self_ty: Option<String>,
+    /// Trait name when inside `impl Trait for T` or a `trait` block.
+    pub trait_name: Option<String>,
+    /// File the fn lives in (normalized path, as passed to the linter).
+    pub file: String,
+    /// Module path derived from the file path (`gp::stats`).
+    pub module: String,
+    /// 1-based line of the `fn` keyword.
+    pub line: u32,
+    /// Inside a `#[cfg(test)]` item.
+    pub in_test: bool,
+    /// Inside a `#[cfg(feature = …)]` item — excluded from graph rules,
+    /// which model the default-features build the dynamic gates run.
+    pub in_feature: bool,
+    /// Body statements.
+    pub body: Vec<Stmt>,
+}
+
+impl FnDef {
+    /// Qualified display name: `Gp::observe`, `EiBackend::select_arm`, or
+    /// `gp::stats::erf` for free fns.
+    pub fn qname(&self) -> String {
+        if let Some(ty) = &self.self_ty {
+            return format!("{ty}::{}", self.name);
+        }
+        if let Some(tr) = &self.trait_name {
+            return format!("{tr}::{}", self.name);
+        }
+        if self.module.is_empty() {
+            self.name.clone()
+        } else {
+            format!("{}::{}", self.module, self.name)
+        }
+    }
+}
+
+/// Everything the parser extracts from one file.
+#[derive(Clone, Debug)]
+pub struct ParsedFile {
+    /// Normalized path the file was linted under.
+    pub path: String,
+    /// Module path derived from the path.
+    pub module: String,
+    /// All fn items (free, impl, trait-default), outermost to innermost.
+    pub fns: Vec<FnDef>,
+    /// Struct fields: type → field → base type of the field.
+    pub fields: BTreeMap<String, BTreeMap<String, String>>,
+    /// Type names defined or impl'd in this file.
+    pub types: BTreeSet<String>,
+    /// Trait names declared in this file.
+    pub traits: BTreeSet<String>,
+}
+
+impl ParsedFile {
+    /// Empty file record for `path`.
+    pub fn new(path: &str) -> ParsedFile {
+        ParsedFile {
+            path: path.to_string(),
+            module: module_of(path),
+            fns: Vec::new(),
+            fields: BTreeMap::new(),
+            types: BTreeSet::new(),
+            traits: BTreeSet::new(),
+        }
+    }
+}
+
+/// Module path for a file: the components after the last `src`/`tests`/
+/// `benches`/`examples` directory, with `mod.rs`/`lib.rs`/`main.rs`
+/// collapsed into their parent (`rust/src/gp/stats.rs` → `gp::stats`,
+/// `rust/src/pool/mod.rs` → `pool`).
+pub fn module_of(path: &str) -> String {
+    let norm = path.replace('\\', "/");
+    let parts: Vec<&str> = norm.split('/').collect();
+    let mut idx = None;
+    for (i, p) in parts.iter().enumerate() {
+        if matches!(*p, "src" | "tests" | "benches" | "examples") {
+            idx = Some(i);
+        }
+    }
+    let mut comps: Vec<&str> = match idx {
+        Some(i) => parts[i + 1..].to_vec(),
+        None => parts.last().map(|p| vec![*p]).unwrap_or_default(),
+    };
+    if let Some(last) = comps.last() {
+        if let Some(stem) = last.strip_suffix(".rs") {
+            let stem = stem.to_string();
+            comps.pop();
+            if !matches!(stem.as_str(), "mod" | "lib" | "main") {
+                return comps
+                    .iter()
+                    .map(|c| c.to_string())
+                    .chain(std::iter::once(stem))
+                    .collect::<Vec<_>>()
+                    .join("::");
+            }
+        }
+    }
+    comps.join("::")
+}
+
+/// Visit every event under `stmts` (depth-first, source order).
+pub fn for_each_event<'a>(stmts: &'a [Stmt], f: &mut impl FnMut(&'a Stmt, &'a Event)) {
+    for s in stmts {
+        for ev in &s.events {
+            f(s, ev);
+        }
+        for ch in &s.children {
+            for_each_event(ch, f);
+        }
+    }
+}
+
+/// All events of one statement including its nested blocks, flattened.
+pub fn stmt_events_flat(stmt: &Stmt) -> Vec<&Event> {
+    let mut out: Vec<&Event> = stmt.events.iter().collect();
+    for ch in &stmt.children {
+        for s in ch {
+            out.extend(stmt_events_flat(s));
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn module_paths_collapse_mod_lib_main() {
+        assert_eq!(module_of("rust/src/gp/stats.rs"), "gp::stats");
+        assert_eq!(module_of("rust/src/pool/mod.rs"), "pool");
+        assert_eq!(module_of("rust/src/lib.rs"), "");
+        assert_eq!(module_of("rust/tests/alloc_counter.rs"), "alloc_counter");
+        assert_eq!(module_of("tools/pallas-lint/src/main.rs"), "");
+    }
+
+    #[test]
+    fn qname_prefers_self_type_then_trait_then_module() {
+        let base = FnDef {
+            name: "f".into(),
+            self_ty: None,
+            trait_name: None,
+            file: "rust/src/gp/mod.rs".into(),
+            module: "gp".into(),
+            line: 1,
+            in_test: false,
+            in_feature: false,
+            body: Vec::new(),
+        };
+        assert_eq!(base.qname(), "gp::f");
+        let m = FnDef { self_ty: Some("Gp".into()), ..base.clone() };
+        assert_eq!(m.qname(), "Gp::f");
+        let t = FnDef { trait_name: Some("EiBackend".into()), ..base };
+        assert_eq!(t.qname(), "EiBackend::f");
+    }
+}

@@ -1,0 +1,127 @@
+//! Crate-wide call-graph machinery shared by the graph rules: function
+//! identity keys, scope exclusion, and reachability BFS with parent
+//! chains for diagnostics.
+
+use crate::ast::{for_each_event, Event, FnDef};
+use crate::resolve::{Ctx, Index};
+use std::collections::BTreeMap;
+
+/// Stable identity of a `fn` item: (file, line, qualified name) — line
+/// alone is not enough, terse one-line impls can put several fns on it.
+pub type FnKey<'a> = (&'a str, u32, String);
+
+/// Key of `fn_def`.
+pub fn fn_key(fn_def: &FnDef) -> FnKey<'_> {
+    (fn_def.file.as_str(), fn_def.line, fn_def.qname())
+}
+
+/// True when `path` has a directory component named `dir` (same matching
+/// as the token rules' scoping, duplicated here to keep modules acyclic).
+pub fn in_dir(path: &str, dir: &str) -> bool {
+    path.starts_with(&format!("{dir}/")) || path.contains(&format!("/{dir}/"))
+}
+
+/// Files outside the graph rules' world: test/bench/example trees model
+/// harness code, not the serving hot path.
+pub fn excluded_from_graph(path: &str) -> bool {
+    in_dir(path, "tests") || in_dir(path, "benches") || in_dir(path, "examples")
+}
+
+/// Fns the graph rules skip entirely: test items, optional-feature items
+/// (the dynamic alloc/TSan gates run the default-features build), and
+/// anything in an excluded tree.
+pub fn graph_skip(fn_def: &FnDef) -> bool {
+    fn_def.in_test || fn_def.in_feature || excluded_from_graph(&fn_def.file)
+}
+
+/// Reachability map: fn key → (fn, BFS parent) for every fn statically
+/// reachable from `roots` through resolvable calls.
+pub type Reach<'a> = BTreeMap<FnKey<'a>, (&'a FnDef, Option<FnKey<'a>>)>;
+
+/// BFS the call graph from `roots` (roots excluded by [`graph_skip`] are
+/// dropped). Deterministic: worklist order never affects the key set, and
+/// parents only affect diagnostic chains, which follow first-discovery.
+pub fn reachable<'a>(index: &Index<'a>, roots: &[&'a FnDef]) -> Reach<'a> {
+    let mut seen: Reach<'a> = BTreeMap::new();
+    let mut work: Vec<&'a FnDef> = Vec::new();
+    for &r in roots {
+        if graph_skip(r) {
+            continue;
+        }
+        if seen.insert(fn_key(r), (r, None)).is_none() {
+            work.push(r);
+        }
+    }
+    while let Some(fn_def) = work.pop() {
+        let ctx = Ctx::of(fn_def);
+        for_each_event(&fn_def.body, &mut |_s, ev| {
+            if !matches!(ev, Event::Method { .. } | Event::PathCall { .. }) {
+                return;
+            }
+            for callee in index.resolve(ev, &ctx) {
+                if graph_skip(callee) {
+                    continue;
+                }
+                let k = fn_key(callee);
+                if !seen.contains_key(&k) {
+                    seen.insert(k, (callee, Some(fn_key(fn_def))));
+                    work.push(callee);
+                }
+            }
+        });
+    }
+    seen
+}
+
+/// Human-readable discovery chain for `key`: `callee ← caller ← … ← root`
+/// (capped at 6 hops).
+pub fn chain(reach: &Reach<'_>, key: FnKey<'_>) -> String {
+    let mut parts = Vec::new();
+    let mut k = Some(key);
+    while let Some(cur) = k.take() {
+        if parts.len() >= 6 {
+            break;
+        }
+        match reach.get(&cur) {
+            Some((fn_def, parent)) => {
+                parts.push(fn_def.qname());
+                k.clone_from(parent);
+            }
+            None => break,
+        }
+    }
+    parts.join(" ← ")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ast::ParsedFile;
+    use crate::lexer::{lex, Tok, TokKind};
+    use crate::parser::parse_file;
+
+    fn parse(path: &str, src: &str) -> ParsedFile {
+        let toks = lex(src);
+        let code: Vec<&Tok> = toks
+            .iter()
+            .filter(|t| !matches!(t.kind, TokKind::LineComment | TokKind::BlockComment))
+            .collect();
+        parse_file(path, &code)
+    }
+
+    #[test]
+    fn bfs_reaches_through_hops_and_skips_cfg_test() {
+        let src = "struct A;\n\
+                   impl A { fn root(&self) { self.mid(); } fn mid(&self) { self.leaf(); } fn leaf(&self) {} }\n\
+                   #[cfg(test)]\nfn t() { x.push(1); }\n";
+        let files = vec![parse("rust/src/m/mod.rs", src)];
+        let ix = Index::new(&files);
+        let roots: Vec<&crate::ast::FnDef> = vec![&files[0].fns[0]];
+        let reach = reachable(&ix, &roots);
+        // Reach keys sort by (file, line, qname); all three fns share line 2.
+        let names: Vec<String> = reach.values().map(|(f, _)| f.qname()).collect();
+        assert_eq!(names, ["A::leaf", "A::mid", "A::root"]);
+        let leaf_key = fn_key(&files[0].fns[2]);
+        assert_eq!(chain(&reach, leaf_key), "A::leaf ← A::mid ← A::root");
+    }
+}

@@ -1,31 +1,65 @@
-//! Per-file analysis pipeline: lex → pragmas → `#[cfg(test)]` mask →
-//! rule scan → pragma suppression → sorted diagnostics.
+//! Analysis pipeline. Per file: lex → pragmas → `#[cfg(test)]` mask →
+//! token-rule scan (R1–R5). Then, over the *whole file set at once*: parse
+//! to AST, build the crate-wide call-resolution index, and run the graph
+//! rules (R6–R8) — reachability and lock-order are only meaningful when
+//! every file is in the same index. Pragma suppression applies uniformly,
+//! keyed by `(path, target line, rule)`.
 
 use crate::diag::{Diagnostic, RuleId};
 use crate::lexer::{self, Tok, TokKind};
-use crate::{pragma, rules};
+use crate::{ast, configflow, hotpath, lockorder, parser, pragma, resolve, rules};
 
 /// Lint one file's source. `path` is the file's (possibly virtual) path;
 /// it determines rule scoping, so fixture tests can exercise scoped rules
-/// by labeling snippets with in-scope paths.
+/// by labeling snippets with in-scope paths. Graph rules run over the
+/// single-file "crate" this implies.
 pub fn lint_source(path: &str, src: &str) -> Vec<Diagnostic> {
-    let norm = path.replace('\\', "/");
-    let toks = lexer::lex(src);
-    let (pragmas, pragma_errors) = pragma::collect(&toks);
-    let code: Vec<&Tok> =
-        toks.iter().filter(|t| !matches!(t.kind, TokKind::LineComment | TokKind::BlockComment)).collect();
-    let mask = test_mask(&code);
-    let mut out: Vec<Diagnostic> = pragma_errors
-        .into_iter()
-        .map(|(line, message)| Diagnostic { path: norm.clone(), line, rule: RuleId::Pragma, message })
-        .collect();
-    for (rule, line, message) in rules::scan(&norm, &code, &mask) {
-        let suppressed = pragmas.iter().any(|p| p.target_line == line && p.rules.contains(&rule));
+    lint_sources(&[(path.to_string(), src.to_string())])
+}
+
+/// Lint a set of `(path, source)` files as one crate-wide analysis unit:
+/// token rules see each file independently; the R6–R8 call-graph rules
+/// see all of them through one symbol index.
+pub fn lint_sources(files: &[(String, String)]) -> Vec<Diagnostic> {
+    let mut out = Vec::new();
+    let mut parsed: Vec<ast::ParsedFile> = Vec::new();
+    let mut tables: Vec<(String, Vec<pragma::Pragma>)> = Vec::new();
+    for (path, src) in files {
+        let norm = path.replace('\\', "/");
+        let toks = lexer::lex(src);
+        let (pragmas, pragma_errors) = pragma::collect(&toks);
+        let code: Vec<&Tok> = toks
+            .iter()
+            .filter(|t| !matches!(t.kind, TokKind::LineComment | TokKind::BlockComment))
+            .collect();
+        let mask = test_mask(&code);
+        out.extend(
+            pragma_errors
+                .into_iter()
+                .map(|(line, message)| Diagnostic { path: norm.clone(), line, rule: RuleId::Pragma, message }),
+        );
+        for (rule, line, message) in rules::scan(&norm, &code, &mask) {
+            let suppressed = pragmas.iter().any(|p| p.target_line == line && p.rules.contains(&rule));
+            if !suppressed {
+                out.push(Diagnostic { path: norm.clone(), line, rule, message });
+            }
+        }
+        parsed.push(parser::parse_file(&norm, &code));
+        tables.push((norm, pragmas));
+    }
+    let index = resolve::Index::new(&parsed);
+    let mut graph = hotpath::check(&index);
+    graph.extend(lockorder::check(&index));
+    graph.extend(configflow::check(&index));
+    for d in graph {
+        let suppressed = tables.iter().any(|(p, pragmas)| {
+            *p == d.path && pragmas.iter().any(|pr| pr.target_line == d.line && pr.rules.contains(&d.rule))
+        });
         if !suppressed {
-            out.push(Diagnostic { path: norm.clone(), line, rule, message });
+            out.push(d);
         }
     }
-    out.sort_by(|a, b| (a.line, a.rule).cmp(&(b.line, b.rule)));
+    out.sort_by(|a, b| (a.path.as_str(), a.line, a.rule).cmp(&(b.path.as_str(), b.line, b.rule)));
     out
 }
 

@@ -1,0 +1,154 @@
+//! R8 `config-validation`: every raw numeric field read in the `config`
+//! module must flow through the validated accessors — `count()` (the
+//! clamping constructor) or an explicit `try_from` conversion — before
+//! being used as a count, capacity, or index.
+//!
+//! The rule is a per-statement dataflow check, deliberately local: an
+//! `as_int()` call is sanctioned when (a) it is inside `count()` itself,
+//! (b) `try_from`/`count` appears in the same statement, or (c) its
+//! `let`-binding is later used in the same block together with
+//! `try_from`/`count`. Anything else is a raw read that can smuggle a
+//! negative or oversized value into an allocation size.
+
+use crate::ast::{stmt_events_flat, Event, FnDef, Stmt};
+use crate::callgraph::in_dir;
+use crate::diag::{Diagnostic, RuleId};
+use crate::resolve::Index;
+use std::collections::BTreeSet;
+
+/// Run R8 over the index; returns unsorted diagnostics.
+pub fn check(index: &Index<'_>) -> Vec<Diagnostic> {
+    let mut out = Vec::new();
+    let mut seen: BTreeSet<(String, u32)> = BTreeSet::new();
+    for pf in index.files {
+        if !in_dir(&pf.path, "config") {
+            continue;
+        }
+        for fn_def in &pf.fns {
+            if fn_def.in_test || fn_def.name == "count" {
+                continue;
+            }
+            block(fn_def, &fn_def.body, &mut out, &mut seen);
+        }
+    }
+    out
+}
+
+/// Does this event sanction a raw read in its statement?
+fn sanctions(ev: &Event) -> bool {
+    match ev {
+        Event::PathCall { segs, .. } => {
+            matches!(segs.last().map(String::as_str), Some("try_from" | "count"))
+        }
+        Event::Method { name, .. } => name == "count",
+        _ => false,
+    }
+}
+
+fn block(fn_def: &FnDef, stmts: &[Stmt], out: &mut Vec<Diagnostic>, seen: &mut BTreeSet<(String, u32)>) {
+    for (i, s) in stmts.iter().enumerate() {
+        let flat = stmt_events_flat(s);
+        let sites: Vec<u32> = flat
+            .iter()
+            .filter_map(|ev| match ev {
+                Event::Method { name, line, .. } if name == "as_int" => Some(*line),
+                _ => None,
+            })
+            .collect();
+        if !sites.is_empty() {
+            let mut sanctioned = flat.iter().any(|ev| sanctions(ev));
+            if !sanctioned && s.is_let && !s.bindings.is_empty() {
+                let binds: BTreeSet<&str> = s.bindings.iter().map(String::as_str).collect();
+                for later in &stmts[i + 1..] {
+                    let lf = stmt_events_flat(later);
+                    let uses = lf.iter().any(
+                        |ev| matches!(ev, Event::Word { name, .. } if binds.contains(name.as_str())),
+                    );
+                    if uses && lf.iter().any(|ev| sanctions(ev)) {
+                        sanctioned = true;
+                        break;
+                    }
+                }
+            }
+            if !sanctioned {
+                for line in sites {
+                    if seen.insert((fn_def.file.clone(), line)) {
+                        out.push(Diagnostic {
+                            path: fn_def.file.clone(),
+                            line,
+                            rule: RuleId::ConfigValidation,
+                            message: format!(
+                                "raw `as_int` read in `{}` does not flow through `count()`/`try_from`; \
+                                 validate the value before use or justify with \
+                                 `// pallas-lint: allow(R8) — <why>`",
+                                fn_def.qname()
+                            ),
+                        });
+                    }
+                }
+            }
+        }
+        for ch in &s.children {
+            block(fn_def, ch, out, seen);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ast::ParsedFile;
+    use crate::lexer::{lex, Tok, TokKind};
+    use crate::parser::parse_file;
+
+    fn run(path: &str, src: &str) -> Vec<Diagnostic> {
+        let toks = lex(src);
+        let code: Vec<&Tok> = toks
+            .iter()
+            .filter(|t| !matches!(t.kind, TokKind::LineComment | TokKind::BlockComment))
+            .collect();
+        let files: Vec<ParsedFile> = vec![parse_file(path, &code)];
+        let ix = Index::new(&files);
+        check(&ix)
+    }
+
+    #[test]
+    fn unsanctioned_as_int_is_flagged() {
+        let src = "impl Cfg {\n\
+                       fn workers(&self) -> i64 { let raw = self.v.as_int(); raw.wrapping_mul(2) }\n\
+                   }\n";
+        let diags = run("rust/src/config/mod.rs", src);
+        assert_eq!(diags.len(), 1, "{diags:?}");
+        assert_eq!(diags[0].line, 2);
+        assert!(diags[0].message.contains("Cfg::workers"));
+    }
+
+    #[test]
+    fn same_statement_try_from_sanctions() {
+        let src = "impl Cfg {\n\
+                       fn workers(&self) -> Option<usize> { usize::try_from(self.v.as_int()).ok() }\n\
+                   }\n";
+        assert!(run("rust/src/config/mod.rs", src).is_empty());
+    }
+
+    #[test]
+    fn later_statement_binding_flow_sanctions() {
+        let src = "impl Cfg {\n\
+                       fn workers(&self) -> Option<usize> {\n\
+                           let x = self.v.as_int();\n\
+                           usize::try_from(x).ok()\n\
+                       }\n\
+                   }\n";
+        assert!(run("rust/src/config/mod.rs", src).is_empty());
+    }
+
+    #[test]
+    fn count_fn_and_non_config_files_are_exempt() {
+        let src = "impl Cfg {\n\
+                       fn count(&self) -> i64 { self.v.as_int() }\n\
+                   }\n";
+        assert!(run("rust/src/config/mod.rs", src).is_empty());
+        let src2 = "impl Gp { fn f(&self) -> i64 { self.v.as_int() } }\n";
+        assert!(run("rust/src/gp/mod.rs", src2).is_empty());
+    }
+}

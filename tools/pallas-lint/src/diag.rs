@@ -2,9 +2,10 @@
 
 use std::fmt;
 
-/// Identifier of a lint rule. `R1`–`R5` are the repo-invariant rules;
-/// [`RuleId::Pragma`] reports a malformed or unjustified
-/// `// pallas-lint: allow(…)` pragma and is itself not suppressible.
+/// Identifier of a lint rule. `R1`–`R5` are the token-level repo-invariant
+/// rules, `R6`–`R8` the call-graph/flow rules; [`RuleId::Pragma`] reports
+/// a malformed or unjustified `// pallas-lint: allow(…)` pragma and is
+/// itself not suppressible.
 #[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord)]
 pub enum RuleId {
     /// R1 — float comparisons must go through `f64::total_cmp`
@@ -24,17 +25,30 @@ pub enum RuleId {
     /// R5 — no `unwrap`/`expect`/`println!` in library code outside
     /// `cli`/`bench`/tests.
     LibPanic,
+    /// R6 — no allocating construct in any fn statically reachable from
+    /// the serving hot-path roots (`Gp::observe`, `EiBackend::eirate`,
+    /// `EiBackend::select_arm`).
+    HotPathAlloc,
+    /// R7 — the Mutex lock-order graph of `pool`/`engine/clock.rs`/
+    /// `coordinator` must be acyclic (static deadlock freedom).
+    LockOrder,
+    /// R8 — numeric config reads must flow through `count()`/`try_from`
+    /// before use.
+    ConfigValidation,
     /// Malformed, unknown, or justification-free pragma.
     Pragma,
 }
 
 /// All suppressible rules, in report order.
-pub const RULES: [RuleId; 5] = [
+pub const RULES: [RuleId; 8] = [
     RuleId::FloatTotalCmp,
     RuleId::HashOrder,
     RuleId::WallClock,
     RuleId::WrappingCast,
     RuleId::LibPanic,
+    RuleId::HotPathAlloc,
+    RuleId::LockOrder,
+    RuleId::ConfigValidation,
 ];
 
 impl RuleId {
@@ -46,6 +60,9 @@ impl RuleId {
             RuleId::WallClock => "R3",
             RuleId::WrappingCast => "R4",
             RuleId::LibPanic => "R5",
+            RuleId::HotPathAlloc => "R6",
+            RuleId::LockOrder => "R7",
+            RuleId::ConfigValidation => "R8",
             RuleId::Pragma => "pragma",
         }
     }
@@ -58,6 +75,9 @@ impl RuleId {
             RuleId::WallClock => "wall-clock",
             RuleId::WrappingCast => "wrapping-cast",
             RuleId::LibPanic => "lib-panic",
+            RuleId::HotPathAlloc => "hot-path-alloc",
+            RuleId::LockOrder => "lock-order",
+            RuleId::ConfigValidation => "config-validation",
             RuleId::Pragma => "pragma",
         }
     }
@@ -106,6 +126,9 @@ mod tests {
         assert_eq!(RuleId::parse("R3"), Some(RuleId::WallClock));
         assert_eq!(RuleId::parse("r5"), Some(RuleId::LibPanic));
         assert_eq!(RuleId::parse("float-total-cmp"), Some(RuleId::FloatTotalCmp));
+        assert_eq!(RuleId::parse("R6"), Some(RuleId::HotPathAlloc));
+        assert_eq!(RuleId::parse("lock-order"), Some(RuleId::LockOrder));
+        assert_eq!(RuleId::parse("r8"), Some(RuleId::ConfigValidation));
         assert_eq!(RuleId::parse("R9"), None);
         assert_eq!(RuleId::parse("pragma"), None, "pragma findings are not suppressible");
     }

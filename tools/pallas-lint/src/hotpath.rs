@@ -1,0 +1,135 @@
+//! R6 `hot-path-alloc`: no allocating construct in any function statically
+//! reachable from the serving hot-path roots — `Gp::observe`,
+//! `EiBackend::eirate`, and `EiBackend::select_arm` (impls *and* the
+//! trait default).
+//!
+//! This is the whole-tree static complement of the dynamic
+//! `rust/tests/alloc_counter.rs` gate: the counting allocator proves zero
+//! allocations on the paths a test run happens to execute; R6 proves it
+//! over every path the call graph can reach, in every build of the
+//! default feature set. `#[cfg(feature = …)]` items are excluded to match
+//! what the dynamic gate runs (the XLA stub path allocates by design).
+//!
+//! Flagged constructs: `format!`/`vec!`, `Vec::new`-style constructors on
+//! heap-owning types, and growth/copy methods (`push`, `extend`,
+//! `collect`, `to_vec`, `clone`, …) whose receiver does not resolve to a
+//! crate fn. Amortized or cold sites carry
+//! `// pallas-lint: allow(R6) — <why>` pragmas.
+
+use crate::ast::{for_each_event, Event, FnDef};
+use crate::callgraph::{chain, fn_key, reachable};
+use crate::diag::{Diagnostic, RuleId};
+use crate::resolve::{Ctx, Index, ALLOC_CTORS, ALLOC_MACROS, ALLOC_METHODS, ALLOC_TYPES};
+
+/// Hot-path roots: (self type or trait, fn name, is-trait).
+const ROOTS: [(&str, &str, bool); 3] =
+    [("Gp", "observe", false), ("EiBackend", "eirate", true), ("EiBackend", "select_arm", true)];
+
+/// Run R6 over the index; returns unsorted diagnostics.
+pub fn check(index: &Index<'_>) -> Vec<Diagnostic> {
+    let mut roots: Vec<&FnDef> = Vec::new();
+    for (owner, name, is_trait) in ROOTS {
+        if is_trait {
+            roots.extend(index.trait_methods(owner, name));
+        } else {
+            roots.extend(index.methods_on(owner, name));
+        }
+    }
+    let reach = reachable(index, &roots);
+    let mut out = Vec::new();
+    for (key, (fn_def, _parent)) in &reach {
+        let ctx = Ctx::of(fn_def);
+        for_each_event(&fn_def.body, &mut |_s, ev| {
+            let what = match ev {
+                Event::Macro { name, .. } if ALLOC_MACROS.contains(&name.as_str()) => {
+                    Some(format!("`{name}!`"))
+                }
+                Event::PathCall { segs, .. }
+                    if segs.len() >= 2
+                        && ALLOC_TYPES.contains(&segs[segs.len() - 2].as_str())
+                        && ALLOC_CTORS.contains(&segs[segs.len() - 1].as_str()) =>
+                {
+                    Some(format!("`{}`", segs.join("::")))
+                }
+                Event::Method { name, .. }
+                    if ALLOC_METHODS.contains(&name.as_str())
+                        && index.resolve(ev, &ctx).is_empty() =>
+                {
+                    Some(format!("`.{name}()`"))
+                }
+                _ => None,
+            };
+            if let Some(what) = what {
+                out.push(Diagnostic {
+                    path: fn_def.file.clone(),
+                    line: ev.line(),
+                    rule: RuleId::HotPathAlloc,
+                    message: format!(
+                        "{what} allocates in `{}`, statically reachable from a hot-path root \
+                         ({}); hoist the allocation out of the decision path or justify with \
+                         `// pallas-lint: allow(R6) — <why amortized or cold>`",
+                        fn_def.qname(),
+                        chain(&reach, key.clone()),
+                    ),
+                });
+            }
+        });
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ast::ParsedFile;
+    use crate::lexer::{lex, Tok, TokKind};
+    use crate::parser::parse_file;
+
+    fn parse(path: &str, src: &str) -> ParsedFile {
+        let toks = lex(src);
+        let code: Vec<&Tok> = toks
+            .iter()
+            .filter(|t| !matches!(t.kind, TokKind::LineComment | TokKind::BlockComment))
+            .collect();
+        parse_file(path, &code)
+    }
+
+    #[test]
+    fn one_hop_alloc_is_found_and_unreachable_alloc_is_not() {
+        let src = "struct Gp { buf: Vec<f64> }\n\
+                   impl Gp {\n\
+                       pub fn observe(&mut self, y: f64) { self.record(y); }\n\
+                       fn record(&mut self, y: f64) { self.buf.push(y); }\n\
+                       pub fn cold(&self) -> Vec<f64> { self.buf.to_vec() }\n\
+                   }\n";
+        let files = vec![parse("rust/src/gp/mod.rs", src)];
+        let ix = Index::new(&files);
+        let diags = check(&ix);
+        assert_eq!(diags.len(), 1, "{diags:?}");
+        assert_eq!(diags[0].line, 4);
+        assert!(diags[0].message.contains("Gp::record ← Gp::observe"), "{}", diags[0].message);
+    }
+
+    #[test]
+    fn trait_default_and_impls_are_roots() {
+        let src = "trait EiBackend { fn select_arm(&mut self) -> usize { self.refresh(); 0 } }\n\
+                   struct N;\n\
+                   impl EiBackend for N { }\n\
+                   impl N { fn refresh(&mut self) { let s = format!(\"x\"); } }\n";
+        let files = vec![parse("rust/src/sched/backend.rs", src)];
+        let ix = Index::new(&files);
+        let diags = check(&ix);
+        assert_eq!(diags.len(), 1, "{diags:?}");
+        assert_eq!(diags[0].line, 4);
+    }
+
+    #[test]
+    fn feature_gated_fns_are_outside_the_graph() {
+        let src = "struct Gp;\n\
+                   #[cfg(feature = \"xla\")]\n\
+                   impl Gp { pub fn observe(&mut self) { let v = vec![1.0]; } }\n";
+        let files = vec![parse("rust/src/gp/mod.rs", src)];
+        let ix = Index::new(&files);
+        assert!(check(&ix).is_empty());
+    }
+}

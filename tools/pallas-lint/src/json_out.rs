@@ -1,0 +1,64 @@
+//! Machine-readable lint reports through the main crate's canonical JSON
+//! writer (`mmgpei::report::json`), so `pallas-lint --json` artifacts are
+//! byte-stable the same way the bench reports are: two runs over the same
+//! tree produce identical files, which is what lets CI archive them next
+//! to `bench-reports` and diff across commits.
+
+use crate::diag::Diagnostic;
+use mmgpei::report::json::Json;
+
+/// Render `diags` (already sorted by the caller) as a canonical JSON
+/// document: `{"schema": "pallas-lint-v1", "count": N, "findings": […]}`.
+pub fn render(diags: &[Diagnostic]) -> String {
+    let findings: Vec<Json> = diags
+        .iter()
+        .map(|d| {
+            Json::Obj(vec![
+                ("path".into(), Json::str(d.path.as_str())),
+                ("line".into(), Json::num(f64::from(d.line))),
+                ("rule".into(), Json::str(d.rule.code())),
+                ("name".into(), Json::str(d.rule.name())),
+                ("message".into(), Json::str(d.message.as_str())),
+            ])
+        })
+        .collect();
+    Json::Obj(vec![
+        ("schema".into(), Json::str("pallas-lint-v1")),
+        ("count".into(), Json::num(diags.len() as f64)),
+        ("findings".into(), Json::Arr(findings)),
+    ])
+    .to_pretty()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::diag::RuleId;
+
+    #[test]
+    fn report_is_canonical_and_parses_back() {
+        let diags = vec![Diagnostic {
+            path: "rust/src/gp/mod.rs".to_string(),
+            line: 7,
+            rule: RuleId::HotPathAlloc,
+            message: "`.push()` allocates".to_string(),
+        }];
+        let text = render(&diags);
+        assert_eq!(text, render(&diags), "serialization must be deterministic");
+        let doc = mmgpei::report::json::parse(&text).unwrap();
+        assert_eq!(doc.get("schema").unwrap().as_str(), Some("pallas-lint-v1"));
+        assert_eq!(doc.get("count").unwrap().as_u64(), Some(1));
+        let f = &doc.get("findings").unwrap().as_arr().unwrap()[0];
+        assert_eq!(f.get("rule").unwrap().as_str(), Some("R6"));
+        assert_eq!(f.get("name").unwrap().as_str(), Some("hot-path-alloc"));
+        assert_eq!(f.get("line").unwrap().as_u64(), Some(7));
+    }
+
+    #[test]
+    fn empty_report_has_zero_count() {
+        let text = render(&[]);
+        let doc = mmgpei::report::json::parse(&text).unwrap();
+        assert_eq!(doc.get("count").unwrap().as_u64(), Some(0));
+        assert!(doc.get("findings").unwrap().as_arr().unwrap().is_empty());
+    }
+}

@@ -1,9 +1,12 @@
-//! # pallas-lint — determinism & float-safety lint for the mmgpei tree
+//! # pallas-lint — determinism, float-safety & call-graph lint for mmgpei
 //!
 //! The repo's value proposition — byte-identical `RunReport`s, bit-exact
-//! incremental-vs-rebuild oracles, thread-invariant `WorkerPool` merges —
-//! rests on invariants that PRs 1–5 repeatedly hand-fixed. This crate
-//! turns them into machine-checked policy:
+//! incremental-vs-rebuild oracles, thread-invariant `WorkerPool` merges,
+//! an allocation-free serving decision path — rests on invariants that
+//! PRs 1–8 repeatedly hand-fixed. This crate turns them into
+//! machine-checked policy.
+//!
+//! Token rules (per file, over the raw token stream):
 //!
 //! * **R1** `float-total-cmp` — no `partial_cmp` float comparisons;
 //!   `f64::total_cmp` is total (no NaN panic, no platform drift).
@@ -16,27 +19,62 @@
 //! * **R5** `lib-panic` — no `unwrap`/`expect`/`println!` in library code
 //!   outside `cli`/`bench`/tests.
 //!
+//! Graph rules (crate-wide, over a hand-rolled AST and a CHA-style call
+//! graph built across *all* linted files at once):
+//!
+//! * **R6** `hot-path-alloc` — no allocating construct in any fn
+//!   statically reachable from `Gp::observe`, `EiBackend::eirate`, or
+//!   `EiBackend::select_arm`; the static complement of the dynamic
+//!   `alloc_counter` test gate.
+//! * **R7** `lock-order` — the Mutex acquisition-order graph of `pool`,
+//!   `engine/clock.rs`, and `coordinator` must be acyclic; the static
+//!   complement of the nightly TSan job.
+//! * **R8** `config-validation` — numeric config reads (`as_int`) must
+//!   flow through `count()`/`try_from` before use.
+//!
 //! Legitimate sites carry `// pallas-lint: allow(<rule>) — <justification>`
 //! pragmas; the justification is mandatory and its absence is itself a
-//! finding. Zero dependencies: the lexer is hand-rolled over the Rust
-//! token grammar (strings, raw strings, char-vs-lifetime, nested block
-//! comments handled correctly), no `syn`, no proc-macros.
+//! finding. No external dependencies: lexer and recursive-descent parser
+//! are hand-rolled over the Rust grammar (strings, raw strings,
+//! char-vs-lifetime, nested block comments, generics, nested blocks), no
+//! `syn`, no proc-macros — only the main crate's canonical JSON writer
+//! for `--json` reports.
 //!
-//! CLI: `cargo run -p pallas-lint -- rust/src [more paths…]` — exit 0
-//! when clean, 1 with `file:line` diagnostics otherwise.
+//! CLI: `cargo run -p pallas-lint -- [--json <file>] rust/src [more
+//! paths…]` — exit 0 when clean, 1 with `file:line` diagnostics otherwise.
 
 #![warn(missing_docs)]
 
+mod ast;
+mod callgraph;
 mod check;
+mod configflow;
+mod hotpath;
+mod json_out;
 mod lexer;
+mod lockorder;
+mod parser;
 mod pragma;
+mod resolve;
 mod rules;
 mod walk;
 
 pub mod diag;
 
-pub use check::lint_source;
+pub use check::{lint_source, lint_sources};
 pub use diag::{Diagnostic, RuleId};
+pub use json_out::render as render_json;
+
+/// The parsed, well-formed `allow` pragmas of one file as
+/// `(target line, rules)` pairs in source order. Malformed pragmas are
+/// not included (they are findings, not suppressions). Powers the
+/// tree-wide pragma-inventory golden test: the set of places the repo
+/// opts out of its own invariants is itself a pinned artifact.
+pub fn pragma_inventory(src: &str) -> Vec<(u32, Vec<RuleId>)> {
+    let toks = lexer::lex(src);
+    let (pragmas, _errors) = pragma::collect(&toks);
+    pragmas.into_iter().map(|p| (p.target_line, p.rules)).collect()
+}
 
 use std::fmt;
 use std::path::PathBuf;
@@ -54,16 +92,18 @@ impl fmt::Display for LintError {
 
 impl std::error::Error for LintError {}
 
-/// Lint every `.rs` file under the given paths (files or directories),
-/// returning all findings in deterministic (path, line, rule) order.
+/// Lint every `.rs` file under the given paths (files or directories) as
+/// one analysis unit — the R6–R8 call-graph rules resolve calls across
+/// all of them — returning all findings in deterministic
+/// (path, line, rule) order.
 pub fn lint_paths(paths: &[PathBuf]) -> Result<Vec<Diagnostic>, LintError> {
-    let mut out = Vec::new();
+    let mut files = Vec::new();
     for root in paths {
         for file in walk::rust_files(root)? {
             let src = std::fs::read_to_string(&file)
                 .map_err(|e| LintError(format!("reading {}: {e}", file.display())))?;
-            out.extend(check::lint_source(&file.display().to_string(), &src));
+            files.push((file.display().to_string(), src));
         }
     }
-    Ok(out)
+    Ok(check::lint_sources(&files))
 }

@@ -1,0 +1,292 @@
+//! R7 `lock-order`: extract the Mutex/Condvar acquisition orders in the
+//! concurrency-bearing modules (`pool`, `engine/clock.rs`, `coordinator`),
+//! build the lock-order graph, and fail on any cycle.
+//!
+//! This is the static complement of the nightly TSan job: TSan only sees
+//! executed interleavings; a cyclic lock order is a deadlock waiting for
+//! the interleaving CI never ran.
+//!
+//! Model: a *lock class* is `module::receiver-chain` (`pool::slots` for
+//! `self.slots.lock()` in `pool/mod.rs`), so every instance of a field
+//! shares a class — the classic conservative approximation. A `lock()`
+//! guard bound by `let` is held to the end of its block; a temporary
+//! guard dies with its statement (nested blocks of that statement run
+//! with it held); `drop(guard)` releases early. Calls made while holding
+//! a lock contribute the callee's transitive acquisitions as edges.
+
+use crate::ast::{for_each_event, Event, FnDef, Stmt};
+use crate::callgraph::{excluded_from_graph, fn_key, graph_skip, in_dir, FnKey};
+use crate::diag::{Diagnostic, RuleId};
+use crate::resolve::{Ctx, Index};
+use std::collections::{BTreeMap, BTreeSet};
+
+/// Files whose locking behavior R7 audits.
+fn r7_scope(path: &str) -> bool {
+    in_dir(path, "pool") || path.ends_with("engine/clock.rs") || in_dir(path, "coordinator")
+}
+
+/// Lock class of a `lock()` call: `module::receiver-chain`, `self.`
+/// stripped so methods and free fns over the same field agree.
+fn lock_class(fn_def: &FnDef, recv: &[String]) -> String {
+    let name = if recv.is_empty() { "<expr>".to_string() } else { recv.join(".") };
+    let name = name.strip_prefix("self.").unwrap_or(&name);
+    format!("{}::{name}", fn_def.module)
+}
+
+type Edges<'a> = BTreeMap<(String, String), Vec<(&'a str, u32)>>;
+type AcqMemo<'a> = BTreeMap<FnKey<'a>, BTreeSet<String>>;
+
+/// Run R7 over the index; returns unsorted diagnostics.
+pub fn check<'a>(index: &Index<'a>) -> Vec<Diagnostic> {
+    let mut memo: AcqMemo<'a> = BTreeMap::new();
+    let mut edges: Edges<'a> = BTreeMap::new();
+    for pf in index.files {
+        if excluded_from_graph(&pf.path) || !r7_scope(&pf.path) {
+            continue;
+        }
+        for fn_def in &pf.fns {
+            if graph_skip(fn_def) {
+                continue;
+            }
+            walk_locks(index, &mut memo, fn_def, &fn_def.body, &[], &mut edges);
+        }
+    }
+    // Cycle detection over lock classes: an edge (a, b) is part of a cycle
+    // when b reaches a (or a == b).
+    let mut adj: BTreeMap<&str, BTreeSet<&str>> = BTreeMap::new();
+    for (a, b) in edges.keys() {
+        adj.entry(a).or_default().insert(b);
+    }
+    let mut out = Vec::new();
+    for ((a, b), sites) in &edges {
+        if a == b || reaches(&adj, b, a) {
+            for (file, line) in sites {
+                out.push(Diagnostic {
+                    path: file.to_string(),
+                    line: *line,
+                    rule: RuleId::LockOrder,
+                    message: format!(
+                        "lock-order cycle: `{a}` is held while `{b}` is acquired here, and the \
+                         reverse order exists elsewhere; pick one global acquisition order"
+                    ),
+                });
+            }
+        }
+    }
+    out
+}
+
+/// Does `src` reach `dst` in the lock-order graph?
+fn reaches(adj: &BTreeMap<&str, BTreeSet<&str>>, src: &str, dst: &str) -> bool {
+    let mut seen: BTreeSet<&str> = BTreeSet::new();
+    let mut stack = vec![src];
+    seen.insert(src);
+    while let Some(x) = stack.pop() {
+        if x == dst {
+            return true;
+        }
+        if let Some(next) = adj.get(x) {
+            for y in next {
+                if seen.insert(y) {
+                    stack.push(y);
+                }
+            }
+        }
+    }
+    false
+}
+
+/// Every lock class `fn_def` (transitively) acquires, for call-under-lock
+/// edges. Memoized; recursion cycles contribute nothing (conservative).
+fn transitive_acquires<'a>(
+    index: &Index<'a>,
+    memo: &mut AcqMemo<'a>,
+    fn_def: &'a FnDef,
+    stack: &mut BTreeSet<FnKey<'a>>,
+) -> BTreeSet<String> {
+    let key = fn_key(fn_def);
+    if let Some(got) = memo.get(&key) {
+        return got.clone();
+    }
+    if stack.contains(&key) {
+        return BTreeSet::new();
+    }
+    stack.insert(key.clone());
+    let mut events = Vec::new();
+    for_each_event(&fn_def.body, &mut |_s, ev| events.push(ev));
+    let mut acq = BTreeSet::new();
+    let ctx = Ctx::of(fn_def);
+    let in_scope = r7_scope(&fn_def.file) && !graph_skip(fn_def);
+    for ev in events {
+        if let Event::Method { recv, name, .. } = ev {
+            if name == "lock" && in_scope {
+                acq.insert(lock_class(fn_def, recv));
+            }
+        }
+        if matches!(ev, Event::Method { .. } | Event::PathCall { .. }) {
+            for callee in index.resolve(ev, &ctx) {
+                if graph_skip(callee) {
+                    continue;
+                }
+                acq.extend(transitive_acquires(index, memo, callee, stack));
+            }
+        }
+    }
+    stack.remove(&key);
+    memo.insert(key, acq.clone());
+    acq
+}
+
+/// Walk a block's statements tracking which lock classes are held, and
+/// record held→acquired edges. `held` carries the enclosing blocks' live
+/// guards.
+fn walk_locks<'a>(
+    index: &Index<'a>,
+    memo: &mut AcqMemo<'a>,
+    fn_def: &'a FnDef,
+    stmts: &[Stmt],
+    held: &[(String, Option<Vec<String>>)],
+    edges: &mut Edges<'a>,
+) {
+    // Guards `let`-bound in *this* block, live until its end (or `drop`).
+    let mut mine: Vec<(String, Option<Vec<String>>)> = Vec::new();
+    for s in stmts {
+        // Guards acquired in this statement; temporaries die with it.
+        let mut stmt_locks: Vec<(String, Option<Vec<String>>)> = Vec::new();
+        for ev in &s.events {
+            match ev {
+                Event::Method { recv, name, line } if name == "lock" => {
+                    let cls = lock_class(fn_def, recv);
+                    for (h, _) in held.iter().chain(&mine).chain(&stmt_locks) {
+                        edges.entry((h.clone(), cls.clone())).or_default().push((fn_def.file.as_str(), *line));
+                    }
+                    let bindings = if s.is_let { Some(s.bindings.clone()) } else { None };
+                    stmt_locks.push((cls, bindings));
+                }
+                Event::Method { .. } | Event::PathCall { .. } => {
+                    if let Event::PathCall { segs, .. } = ev {
+                        if segs.last().map(String::as_str) == Some("drop") {
+                            continue; // `drop(x)` releases, handled below
+                        }
+                    }
+                    let ctx = Ctx::of(fn_def);
+                    for callee in index.resolve(ev, &ctx) {
+                        if graph_skip(callee) {
+                            continue;
+                        }
+                        let mut stack = BTreeSet::new();
+                        for cls2 in transitive_acquires(index, memo, callee, &mut stack) {
+                            for (h, _) in held.iter().chain(&mine).chain(&stmt_locks) {
+                                if *h != cls2 {
+                                    edges
+                                        .entry((h.clone(), cls2.clone()))
+                                        .or_default()
+                                        .push((fn_def.file.as_str(), ev.line()));
+                                }
+                            }
+                        }
+                    }
+                }
+                _ => {}
+            }
+        }
+        // `drop(guard)` in this statement releases the named guards.
+        let mut dropped: BTreeSet<&str> = BTreeSet::new();
+        let names_drop = s.events.iter().any(|ev| {
+            matches!(ev, Event::PathCall { segs, .. } if segs.last().map(String::as_str) == Some("drop"))
+        });
+        if names_drop {
+            for ev in &s.events {
+                if let Event::Word { name, .. } = ev {
+                    dropped.insert(name);
+                }
+            }
+            mine.retain(|(_, b)| {
+                !b.as_ref().is_some_and(|names| names.iter().any(|n| dropped.contains(n.as_str())))
+            });
+        }
+        // Nested blocks run with this statement's locks held (if-let /
+        // match over a `lock()` scrutinee).
+        for ch in &s.children {
+            let inner: Vec<(String, Option<Vec<String>>)> =
+                held.iter().chain(&mine).chain(&stmt_locks).cloned().collect();
+            walk_locks(index, memo, fn_def, ch, &inner, edges);
+        }
+        // `let`-bound guards persist to the end of this block.
+        for (cls, b) in stmt_locks {
+            if b.is_some() {
+                mine.push((cls, b));
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ast::ParsedFile;
+    use crate::lexer::{lex, Tok, TokKind};
+    use crate::parser::parse_file;
+
+    fn parse(path: &str, src: &str) -> ParsedFile {
+        let toks = lex(src);
+        let code: Vec<&Tok> = toks
+            .iter()
+            .filter(|t| !matches!(t.kind, TokKind::LineComment | TokKind::BlockComment))
+            .collect();
+        parse_file(path, &code)
+    }
+
+    fn run(src: &str) -> Vec<Diagnostic> {
+        let files = vec![parse("rust/src/pool/mod.rs", src)];
+        let ix = Index::new(&files);
+        check(&ix)
+    }
+
+    #[test]
+    fn two_lock_cycle_is_flagged() {
+        let src = "struct S { a: Mutex<u8>, b: Mutex<u8> }\n\
+                   impl S {\n\
+                       fn ab(&self) { let ga = self.a.lock(); let gb = self.b.lock(); }\n\
+                       fn ba(&self) { let gb = self.b.lock(); let ga = self.a.lock(); }\n\
+                   }\n";
+        let diags = run(src);
+        assert_eq!(diags.len(), 2, "{diags:?}");
+        assert!(diags[0].message.contains("pool::a") && diags[0].message.contains("pool::b"));
+    }
+
+    #[test]
+    fn consistent_order_is_clean_even_through_a_call() {
+        let src = "struct S { a: Mutex<u8>, b: Mutex<u8> }\n\
+                   impl S {\n\
+                       fn ab(&self) { let ga = self.a.lock(); let gb = self.b.lock(); }\n\
+                       fn via(&self) { let ga = self.a.lock(); self.tail(); }\n\
+                       fn tail(&self) { let gb = self.b.lock(); }\n\
+                   }\n";
+        assert!(run(src).is_empty());
+    }
+
+    #[test]
+    fn drop_releases_the_guard() {
+        let src = "struct S { a: Mutex<u8>, b: Mutex<u8> }\n\
+                   impl S {\n\
+                       fn ab(&self) { let ga = self.a.lock(); drop(ga); let gb = self.b.lock(); }\n\
+                       fn ba(&self) { let gb = self.b.lock(); let ga = self.a.lock(); }\n\
+                   }\n";
+        // Without the drop this is the two-lock cycle; with it, `ab` holds
+        // nothing when acquiring b, so only the b→a edge exists — acyclic.
+        assert!(run(src).is_empty());
+    }
+
+    #[test]
+    fn out_of_scope_modules_are_ignored() {
+        let src = "struct S { a: Mutex<u8>, b: Mutex<u8> }\n\
+                   impl S {\n\
+                       fn ab(&self) { let ga = self.a.lock(); let gb = self.b.lock(); }\n\
+                       fn ba(&self) { let gb = self.b.lock(); let ga = self.a.lock(); }\n\
+                   }\n";
+        let files = vec![parse("rust/src/gp/mod.rs", src)];
+        let ix = Index::new(&files);
+        assert!(check(&ix).is_empty());
+    }
+}

@@ -1,16 +1,20 @@
-//! CLI entry point: `pallas-lint <path> [<path>…]`.
+//! CLI entry point: `pallas-lint [--json <file>] <path> [<path>…]`.
 //!
 //! Exit codes: 0 clean, 1 findings (one `file:line: <rule> …` per line),
-//! 2 usage or I/O error.
+//! 2 usage or I/O error. `--json` additionally writes a canonical
+//! machine-readable report (written on clean runs too, with `count: 0`,
+//! so CI can archive it unconditionally).
 
 use std::path::PathBuf;
 use std::process::ExitCode;
 
-const USAGE: &str = "usage: pallas-lint <path> [<path>…]\n\n\
+const USAGE: &str = "usage: pallas-lint [--json <file>] <path> [<path>…]\n\n\
 Lints .rs files (recursively for directories) against the repo's\n\
-determinism & float-safety rules R1–R5. See README.md §Correctness\n\
+determinism, float-safety, and call-graph rules R1–R8; all paths form\n\
+one analysis unit for the R6–R8 graph rules. See README.md §Correctness\n\
 tooling for the rule list and the `// pallas-lint: allow(<rule>) — <why>`\n\
-pragma syntax.";
+pragma syntax. `--json <file>` writes a canonical JSON report\n\
+(schema `pallas-lint-v1`).";
 
 fn main() -> ExitCode {
     let args: Vec<String> = std::env::args().skip(1).collect();
@@ -18,26 +22,49 @@ fn main() -> ExitCode {
         println!("{USAGE}");
         return ExitCode::SUCCESS;
     }
-    if args.is_empty() {
+    let mut json_path: Option<PathBuf> = None;
+    let mut paths: Vec<PathBuf> = Vec::new();
+    let mut it = args.iter();
+    while let Some(a) = it.next() {
+        if a == "--json" {
+            match it.next() {
+                Some(p) => json_path = Some(PathBuf::from(p)),
+                None => {
+                    eprintln!("pallas-lint: --json requires a file argument\n\n{USAGE}");
+                    return ExitCode::from(2);
+                }
+            }
+        } else {
+            paths.push(PathBuf::from(a));
+        }
+    }
+    if paths.is_empty() {
         eprintln!("{USAGE}");
         return ExitCode::from(2);
     }
-    let paths: Vec<PathBuf> = args.iter().map(PathBuf::from).collect();
     match pallas_lint::lint_paths(&paths) {
         Err(e) => {
             eprintln!("pallas-lint: {e}");
             ExitCode::from(2)
         }
-        Ok(diags) if diags.is_empty() => {
-            println!("pallas-lint: clean");
-            ExitCode::SUCCESS
-        }
         Ok(diags) => {
-            for d in &diags {
-                println!("{d}");
+            if let Some(out) = &json_path {
+                let doc = pallas_lint::render_json(&diags);
+                if let Err(e) = std::fs::write(out, doc) {
+                    eprintln!("pallas-lint: writing {}: {e}", out.display());
+                    return ExitCode::from(2);
+                }
             }
-            println!("pallas-lint: {} finding(s)", diags.len());
-            ExitCode::FAILURE
+            if diags.is_empty() {
+                println!("pallas-lint: clean");
+                ExitCode::SUCCESS
+            } else {
+                for d in &diags {
+                    println!("{d}");
+                }
+                println!("pallas-lint: {} finding(s)", diags.len());
+                ExitCode::FAILURE
+            }
         }
     }
 }

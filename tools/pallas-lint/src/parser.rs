@@ -1,0 +1,802 @@
+//! Hand-rolled recursive-descent parser over the [`crate::lexer`] token
+//! stream, producing the [`crate::ast`] item/statement tree.
+//!
+//! Like the lexer, the parser is total: any token sequence produces *some*
+//! tree (unknown constructs are skipped token-by-token), so weird but
+//! compiling code can never panic the linter — at worst a construct is
+//! invisible to the graph rules, which keeps them conservative.
+//!
+//! What it understands, because the rules need it:
+//! * item nesting (`mod`, `impl`, `trait`, `fn`) with `#[cfg(test)]` /
+//!   `#[cfg(feature = …)]` attribution;
+//! * struct fields and their base types (for `self.field.method()`
+//!   receiver typing);
+//! * fn bodies as statement lists: `let` bindings, nested blocks, and
+//!   method/path/macro call events with receiver chains.
+
+use crate::ast::{Event, FnDef, ParsedFile, Stmt};
+use crate::lexer::{Tok, TokKind};
+
+/// Keywords that look like calls when followed by `(` but are not.
+const KEYWORD_CALLS: [&str; 20] = [
+    "if", "while", "for", "match", "return", "in", "as", "loop", "else", "move", "fn", "let",
+    "mut", "ref", "pub", "impl", "where", "unsafe", "break", "continue",
+];
+
+/// Statement heads whose trailing `}` ends the statement (no `;` needed).
+const BLOCK_HEADS: [&str; 6] = ["if", "for", "while", "loop", "match", "unsafe"];
+
+/// Parse one file's comment-free code tokens into a [`ParsedFile`].
+pub fn parse_file(path: &str, code: &[&Tok]) -> ParsedFile {
+    let mut p = Parser { code, i: 0, pf: ParsedFile::new(path) };
+    p.items(false, false, false);
+    p.pf
+}
+
+struct Parser<'a> {
+    code: &'a [&'a Tok],
+    i: usize,
+    pf: ParsedFile,
+}
+
+impl Parser<'_> {
+    fn tok(&self, k: isize) -> Option<&Tok> {
+        let j = self.i as isize + k;
+        if j < 0 {
+            return None;
+        }
+        self.code.get(j as usize).copied()
+    }
+
+    fn t(&self, k: isize) -> &str {
+        self.tok(k).map_or("", |t| t.text.as_str())
+    }
+
+    fn kind(&self, k: isize) -> Option<TokKind> {
+        self.tok(k).map(|t| t.kind)
+    }
+
+    fn line(&self) -> u32 {
+        self.tok(0).map_or(0, |t| t.line)
+    }
+
+    fn eof(&self) -> bool {
+        self.i >= self.code.len()
+    }
+
+    // --- item level ---
+
+    fn items(&mut self, in_test: bool, in_feature: bool, end_at_brace: bool) {
+        let mut pending_test = false;
+        let mut pending_feature = false;
+        while !self.eof() {
+            let t = self.t(0).to_string();
+            if end_at_brace && t == "}" {
+                self.i += 1;
+                return;
+            }
+            match t.as_str() {
+                "#" => {
+                    let (is_t, is_f) = self.attr_cfg_flags();
+                    pending_test |= is_t;
+                    pending_feature |= is_f;
+                    continue;
+                }
+                "pub" => {
+                    self.i += 1;
+                    if self.t(0) == "(" {
+                        self.skip_balanced("(", ")");
+                    }
+                    continue;
+                }
+                "unsafe" | "default" | "async" | "extern" => {
+                    self.i += 1;
+                    if t == "extern" && self.kind(0) == Some(TokKind::Str) {
+                        self.i += 1;
+                    }
+                    continue;
+                }
+                "struct" => self.parse_struct(),
+                "enum" | "union" => {
+                    self.i += 2; // keyword + name
+                    self.skip_generics();
+                    if self.t(0) == "{" {
+                        self.skip_balanced("{", "}");
+                    } else if self.t(0) == ";" {
+                        self.i += 1;
+                    }
+                }
+                "impl" => self.parse_impl(in_test || pending_test, in_feature || pending_feature),
+                "trait" => self.parse_trait(in_test || pending_test, in_feature || pending_feature),
+                "fn" => {
+                    self.parse_fn(None, None, in_test || pending_test, in_feature || pending_feature)
+                }
+                "mod" => {
+                    self.i += 2; // mod name
+                    if self.t(0) == "{" {
+                        self.i += 1;
+                        self.items(in_test || pending_test, in_feature || pending_feature, true);
+                    } else if self.t(0) == ";" {
+                        self.i += 1;
+                    }
+                }
+                "use" | "static" | "const" | "type" => self.skip_to_semi(),
+                "macro_rules" => {
+                    self.i += 1;
+                    if self.t(0) == "!" {
+                        self.i += 1;
+                    }
+                    self.i += 1; // name
+                    if self.t(0) == "{" {
+                        self.skip_balanced("{", "}");
+                    }
+                }
+                _ => {
+                    self.i += 1;
+                    continue;
+                }
+            }
+            pending_test = false;
+            pending_feature = false;
+        }
+    }
+
+    /// At `#`: skip the attribute; report whether a `cfg(…)` argument list
+    /// mentions `test` / `feature`.
+    fn attr_cfg_flags(&mut self) -> (bool, bool) {
+        self.i += 1;
+        let mut is_test = false;
+        let mut is_feature = false;
+        if self.t(0) == "[" {
+            let scan_cfg = self.t(1) == "cfg";
+            let mut depth = 0i32;
+            while !self.eof() {
+                match self.t(0) {
+                    "[" => depth += 1,
+                    "]" => {
+                        depth -= 1;
+                        if depth == 0 {
+                            self.i += 1;
+                            break;
+                        }
+                    }
+                    "test" if scan_cfg => is_test = true,
+                    "feature" if scan_cfg => is_feature = true,
+                    _ => {}
+                }
+                self.i += 1;
+            }
+        }
+        (is_test, is_feature)
+    }
+
+    fn skip_balanced(&mut self, open: &str, close: &str) {
+        let mut depth = 0i32;
+        while !self.eof() {
+            let t = self.t(0);
+            if t == open {
+                depth += 1;
+            } else if t == close {
+                depth -= 1;
+                if depth == 0 {
+                    self.i += 1;
+                    return;
+                }
+            }
+            self.i += 1;
+        }
+    }
+
+    fn skip_generics(&mut self) {
+        if self.t(0) != "<" {
+            return;
+        }
+        let mut depth = 0i32;
+        while !self.eof() {
+            match self.t(0) {
+                "<" => depth += 1,
+                ">" => {
+                    depth -= 1;
+                    if depth == 0 {
+                        self.i += 1;
+                        return;
+                    }
+                }
+                // A brace/paren inside generics means we mis-detected a
+                // comparison; bail without consuming it.
+                "(" | "{" => return,
+                _ => {}
+            }
+            self.i += 1;
+        }
+    }
+
+    fn skip_to_semi(&mut self) {
+        while !self.eof() {
+            match self.t(0) {
+                ";" => {
+                    self.i += 1;
+                    return;
+                }
+                "{" => {
+                    self.skip_balanced("{", "}");
+                    return;
+                }
+                "(" => {
+                    self.skip_balanced("(", ")");
+                }
+                "[" => {
+                    self.skip_balanced("[", "]");
+                }
+                _ => self.i += 1,
+            }
+        }
+    }
+
+    /// Parse a type up to a `stop` token at depth 0; return the last ident
+    /// of the leading path (`""` for non-path types).
+    fn type_base(&mut self, stop: &[&str]) -> String {
+        let mut depth = 0i32;
+        let mut base = String::new();
+        let mut lead = true;
+        while !self.eof() {
+            let t = self.t(0);
+            if depth == 0 && stop.contains(&t) {
+                return base;
+            }
+            match t {
+                "<" | "(" | "[" => {
+                    depth += 1;
+                    lead = false;
+                }
+                ">" | ")" | "]" => depth -= 1,
+                _ => {
+                    if depth == 0
+                        && lead
+                        && self.kind(0) == Some(TokKind::Ident)
+                        && !matches!(t, "dyn" | "impl" | "mut")
+                    {
+                        base = t.to_string();
+                    }
+                }
+            }
+            self.i += 1;
+        }
+        base
+    }
+
+    fn parse_struct(&mut self) {
+        self.i += 1; // struct
+        let name = self.t(0).to_string();
+        self.i += 1;
+        self.skip_generics();
+        while !self.eof() && !matches!(self.t(0), "{" | "(" | ";") {
+            self.i += 1; // where clause
+        }
+        match self.t(0) {
+            ";" => {
+                self.i += 1;
+                self.pf.types.insert(name);
+                return;
+            }
+            "(" => {
+                self.skip_balanced("(", ")");
+                if self.t(0) == ";" {
+                    self.i += 1;
+                }
+                self.pf.types.insert(name);
+                return;
+            }
+            _ => {}
+        }
+        self.i += 1; // {
+        let mut fields = Vec::new();
+        while !self.eof() && self.t(0) != "}" {
+            if self.t(0) == "#" {
+                self.attr_cfg_flags();
+                continue;
+            }
+            if self.t(0) == "pub" {
+                self.i += 1;
+                if self.t(0) == "(" {
+                    self.skip_balanced("(", ")");
+                }
+                continue;
+            }
+            if self.kind(0) == Some(TokKind::Ident) && self.t(1) == ":" {
+                let fname = self.t(0).to_string();
+                self.i += 2;
+                let base = self.type_base(&[",", "}"]);
+                fields.push((fname, base));
+                if self.t(0) == "," {
+                    self.i += 1;
+                }
+            } else {
+                self.i += 1;
+            }
+        }
+        if self.t(0) == "}" {
+            self.i += 1;
+        }
+        self.pf.types.insert(name.clone());
+        self.pf.fields.entry(name).or_default().extend(fields);
+    }
+
+    /// Parse an `A::B<..>` type path at the cursor; return the last ident.
+    fn path_head(&mut self) -> String {
+        let mut base = String::new();
+        while !self.eof() {
+            if self.kind(0) == Some(TokKind::Ident) {
+                base = self.t(0).to_string();
+                self.i += 1;
+                if self.t(0) == "<" {
+                    self.skip_generics();
+                }
+                if self.t(0) == ":" && self.t(1) == ":" {
+                    self.i += 2;
+                    continue;
+                }
+                return base;
+            } else if self.t(0) == "<" {
+                self.skip_generics();
+            } else {
+                return base;
+            }
+        }
+        base
+    }
+
+    fn parse_impl(&mut self, in_test: bool, in_feature: bool) {
+        self.i += 1; // impl
+        self.skip_generics();
+        let first = self.path_head();
+        let mut trait_name = None;
+        let mut self_ty = first.clone();
+        if self.t(0) == "for" {
+            self.i += 1;
+            trait_name = Some(first);
+            self_ty = self.path_head();
+        }
+        while !self.eof() && self.t(0) != "{" {
+            self.i += 1; // where clause
+        }
+        self.i += 1; // {
+        self.pf.types.insert(self_ty.clone());
+        let mut pending_test = false;
+        let mut pending_feature = false;
+        while !self.eof() && self.t(0) != "}" {
+            match self.t(0) {
+                "#" => {
+                    let (is_t, is_f) = self.attr_cfg_flags();
+                    pending_test |= is_t;
+                    pending_feature |= is_f;
+                }
+                "pub" => {
+                    self.i += 1;
+                    if self.t(0) == "(" {
+                        self.skip_balanced("(", ")");
+                    }
+                }
+                "unsafe" | "default" | "async" | "extern" => self.i += 1,
+                "fn" => {
+                    self.parse_fn(
+                        Some(self_ty.clone()),
+                        trait_name.clone(),
+                        in_test || pending_test,
+                        in_feature || pending_feature,
+                    );
+                    pending_test = false;
+                    pending_feature = false;
+                }
+                "const" | "type" => {
+                    self.skip_to_semi();
+                    pending_test = false;
+                    pending_feature = false;
+                }
+                _ => self.i += 1,
+            }
+        }
+        if self.t(0) == "}" {
+            self.i += 1;
+        }
+    }
+
+    fn parse_trait(&mut self, in_test: bool, in_feature: bool) {
+        self.i += 1; // trait
+        let name = self.t(0).to_string();
+        self.i += 1;
+        self.pf.traits.insert(name.clone());
+        while !self.eof() && self.t(0) != "{" {
+            self.i += 1;
+        }
+        self.i += 1;
+        let mut pending_test = false;
+        let mut pending_feature = false;
+        while !self.eof() && self.t(0) != "}" {
+            match self.t(0) {
+                "#" => {
+                    let (is_t, is_f) = self.attr_cfg_flags();
+                    pending_test |= is_t;
+                    pending_feature |= is_f;
+                }
+                "fn" => {
+                    self.parse_fn(
+                        None,
+                        Some(name.clone()),
+                        in_test || pending_test,
+                        in_feature || pending_feature,
+                    );
+                    pending_test = false;
+                    pending_feature = false;
+                }
+                "const" | "type" => {
+                    self.skip_to_semi();
+                    pending_test = false;
+                    pending_feature = false;
+                }
+                _ => self.i += 1,
+            }
+        }
+        if self.t(0) == "}" {
+            self.i += 1;
+        }
+    }
+
+    fn parse_fn(
+        &mut self,
+        self_ty: Option<String>,
+        trait_name: Option<String>,
+        in_test: bool,
+        in_feature: bool,
+    ) {
+        let ln = self.line();
+        self.i += 1; // fn
+        let name = self.t(0).to_string();
+        self.i += 1;
+        self.skip_generics();
+        if self.t(0) == "(" {
+            self.skip_balanced("(", ")");
+        }
+        // Return type / where clause: scan to the body `{` or a `;`.
+        while !self.eof() && !matches!(self.t(0), "{" | ";") {
+            match self.t(0) {
+                "<" => self.skip_generics(),
+                "(" => self.skip_balanced("(", ")"),
+                _ => self.i += 1,
+            }
+        }
+        if self.t(0) == ";" {
+            self.i += 1;
+            return; // declaration without body
+        }
+        let body = self.parse_block();
+        let fndef = FnDef {
+            name,
+            self_ty,
+            trait_name,
+            file: self.pf.path.clone(),
+            module: self.pf.module.clone(),
+            line: ln,
+            in_test,
+            in_feature,
+            body,
+        };
+        self.pf.fns.push(fndef);
+    }
+
+    // --- statement level ---
+
+    /// At `{`: parse statements until the matching `}`.
+    fn parse_block(&mut self) -> Vec<Stmt> {
+        self.i += 1; // {
+        let mut stmts = Vec::new();
+        // (statement under construction, its first token) — flushed on `;`,
+        // on a statement-ending block close, and at the block's `}`.
+        let mut cur: Option<(Stmt, String)> = None;
+        fn flush(stmts: &mut Vec<Stmt>, cur: &mut Option<(Stmt, String)>) {
+            if let Some((s, _)) = cur.take() {
+                if !s.events.is_empty() || !s.children.is_empty() || s.is_let {
+                    stmts.push(s);
+                }
+            }
+        }
+        while !self.eof() {
+            let t = self.t(0).to_string();
+            let k = self.kind(0);
+            if t == "}" {
+                self.i += 1;
+                flush(&mut stmts, &mut cur);
+                return stmts;
+            }
+            if cur.is_none() {
+                let mut s = Stmt { line: self.line(), ..Stmt::default() };
+                if t == "let" {
+                    s.is_let = true;
+                    self.i += 1;
+                    self.let_pattern(&mut s);
+                    cur = Some((s, t));
+                    continue;
+                }
+                cur = Some((s, t.clone()));
+            }
+            if t == ";" {
+                self.i += 1;
+                flush(&mut stmts, &mut cur);
+                continue;
+            }
+            if t == "{" {
+                let child = self.parse_block();
+                if let Some((s, first)) = cur.as_mut() {
+                    s.children.push(child);
+                    let ends = BLOCK_HEADS.contains(&first.as_str())
+                        && !matches!(self.t(0), "else" | "." | "?" | ";" | ")");
+                    if ends {
+                        flush(&mut stmts, &mut cur);
+                    }
+                }
+                continue;
+            }
+            if k == Some(TokKind::Ident) {
+                let line = self.line();
+                let next = self.t(1);
+                if next == "!" && !matches!(t.as_str(), "if" | "while" | "match" | "return") {
+                    if let Some((s, _)) = cur.as_mut() {
+                        s.events.push(Event::Macro { name: t, line });
+                    }
+                    self.i += 2;
+                    continue;
+                }
+                if next == "(" && !KEYWORD_CALLS.contains(&t.as_str()) {
+                    let ev = if self.t(-1) == "." {
+                        let recv = self.recv_chain(self.i as isize - 1);
+                        Event::Method { recv, name: t, line }
+                    } else if self.t(-1) == ":" && self.t(-2) == ":" {
+                        Event::PathCall { segs: self.path_segments_back(self.i), line }
+                    } else {
+                        Event::PathCall { segs: vec![t], line }
+                    };
+                    if let Some((s, _)) = cur.as_mut() {
+                        s.events.push(ev);
+                    }
+                    self.i += 1;
+                    continue;
+                }
+                if let Some((s, _)) = cur.as_mut() {
+                    s.events.push(Event::Word { name: t, line });
+                }
+                self.i += 1;
+                continue;
+            }
+            self.i += 1;
+        }
+        flush(&mut stmts, &mut cur);
+        stmts
+    }
+
+    /// After `let`: collect the pattern's bound names into `s.bindings` and
+    /// position the cursor at the `=` / `;` (skipping a `: Type` ascription).
+    fn let_pattern(&mut self, s: &mut Stmt) {
+        let mut depth = 0i32;
+        while !self.eof() {
+            let pt = self.t(0);
+            if depth == 0 && matches!(pt, "=" | ";" | ":") {
+                break;
+            }
+            match pt {
+                "(" | "[" | "<" => depth += 1,
+                ")" | "]" | ">" => depth -= 1,
+                _ => {
+                    if self.kind(0) == Some(TokKind::Ident)
+                        && !matches!(pt, "mut" | "ref")
+                        && !matches!(self.t(1), "(" | "{")
+                        && !(self.t(1) == ":" && self.t(2) == ":")
+                    {
+                        s.bindings.push(pt.to_string());
+                    }
+                }
+            }
+            self.i += 1;
+        }
+        if self.t(0) == ":" {
+            // type ascription: skip to `=` / `;` at depth 0
+            let mut depth = 0i32;
+            while !self.eof() {
+                let pt = self.t(0);
+                if depth == 0 && matches!(pt, "=" | ";") {
+                    break;
+                }
+                match pt {
+                    "(" | "[" | "<" => depth += 1,
+                    ")" | "]" | ">" => depth -= 1,
+                    _ => {}
+                }
+                self.i += 1;
+            }
+        }
+    }
+
+    /// Walk back from the `.` before a method name, collecting the
+    /// receiver's identifier chain. Empty for complex receivers
+    /// (call results), which the resolver treats as unresolvable.
+    fn recv_chain(&self, dot_idx: isize) -> Vec<String> {
+        let mut out = Vec::new();
+        let mut j = dot_idx;
+        while j >= 0 {
+            let Some(tok) = self.code.get(j as usize) else { break };
+            match tok.text.as_str() {
+                "." => {
+                    j -= 1;
+                    continue;
+                }
+                "?" => {
+                    j -= 1;
+                    continue;
+                }
+                "]" => {
+                    // skip an index expression `a[i]`
+                    let mut depth = 0i32;
+                    while j >= 0 {
+                        match self.code[j as usize].text.as_str() {
+                            "]" => depth += 1,
+                            "[" => {
+                                depth -= 1;
+                                if depth == 0 {
+                                    break;
+                                }
+                            }
+                            _ => {}
+                        }
+                        j -= 1;
+                    }
+                    j -= 1;
+                    continue;
+                }
+                ")" => return Vec::new(), // call-result receiver
+                _ => {}
+            }
+            match tok.kind {
+                TokKind::Ident => {
+                    out.push(tok.text.clone());
+                    j -= 1;
+                    if j >= 0 && self.code[j as usize].text == "." {
+                        continue;
+                    }
+                    break;
+                }
+                TokKind::Num => {
+                    // tuple index `a.0.method()`
+                    j -= 1;
+                    if j >= 0 && self.code[j as usize].text == "." {
+                        continue;
+                    }
+                    break;
+                }
+                _ => break,
+            }
+        }
+        out.reverse();
+        out
+    }
+
+    /// Collect the `A::B::name` segments ending at `code[name_idx]`.
+    fn path_segments_back(&self, name_idx: usize) -> Vec<String> {
+        let mut segs = vec![self.code[name_idx].text.clone()];
+        let mut j = name_idx as isize - 1;
+        while j >= 1
+            && self.code[j as usize].text == ":"
+            && self.code[(j - 1) as usize].text == ":"
+        {
+            j -= 2;
+            // turbofish `Vec::<f64>::new`: skip back over `<…>`
+            if j >= 0 && self.code[j as usize].text == ">" {
+                let mut depth = 0i32;
+                while j >= 0 {
+                    match self.code[j as usize].text.as_str() {
+                        ">" => depth += 1,
+                        "<" => {
+                            depth -= 1;
+                            if depth == 0 {
+                                break;
+                            }
+                        }
+                        _ => {}
+                    }
+                    j -= 1;
+                }
+                j -= 1;
+            }
+            if j >= 0 && self.code[j as usize].kind == TokKind::Ident {
+                segs.push(self.code[j as usize].text.clone());
+                j -= 1;
+            } else {
+                break;
+            }
+        }
+        segs.reverse();
+        segs
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::lexer::lex;
+
+    fn parse(path: &str, src: &str) -> ParsedFile {
+        let toks = lex(src);
+        let code: Vec<&Tok> = toks
+            .iter()
+            .filter(|t| !matches!(t.kind, TokKind::LineComment | TokKind::BlockComment))
+            .collect();
+        parse_file(path, &code)
+    }
+
+    #[test]
+    fn impl_methods_capture_self_type_and_trait() {
+        let src = "struct Gp { buf: Vec<f64> }\n\
+                   impl Gp { pub fn observe(&mut self) { self.buf.push(1.0); } }\n\
+                   trait EiBackend { fn eirate(&self) -> f64; fn pick(&self) -> usize { self.fallback() } }\n\
+                   impl EiBackend for Gp { fn eirate(&self) -> f64 { 0.0 } }\n";
+        let pf = parse("rust/src/gp/mod.rs", src);
+        assert_eq!(pf.fns.len(), 3, "{:?}", pf.fns.iter().map(|f| f.qname()).collect::<Vec<_>>());
+        assert_eq!(pf.fns[0].qname(), "Gp::observe");
+        assert_eq!(pf.fns[1].qname(), "EiBackend::pick");
+        assert_eq!(pf.fns[2].qname(), "Gp::eirate");
+        assert_eq!(pf.fns[2].trait_name.as_deref(), Some("EiBackend"));
+        assert_eq!(pf.fields["Gp"]["buf"], "Vec");
+    }
+
+    #[test]
+    fn method_events_carry_receiver_chains() {
+        let src = "impl A { fn f(&self) { self.x.lock(); y.push(1); g(2); B::make(); h(3).push(4); } }\n";
+        let pf = parse("x.rs", src);
+        let mut shapes = Vec::new();
+        for s in &pf.fns[0].body {
+            for e in &s.events {
+                match e {
+                    Event::Method { recv, name, .. } => shapes.push(format!("m:{}:{}", recv.join("."), name)),
+                    Event::PathCall { segs, .. } => shapes.push(format!("p:{}", segs.join("::"))),
+                    Event::Macro { name, .. } => shapes.push(format!("x:{name}")),
+                    Event::Word { .. } => {}
+                }
+            }
+        }
+        assert_eq!(
+            shapes,
+            ["m:self.x:lock", "m:y:push", "p:g", "p:B::make", "p:h", "m::push"],
+            "complex receiver must yield an empty chain"
+        );
+    }
+
+    #[test]
+    fn let_bindings_and_nested_blocks() {
+        let src = "fn f() { let (a, mut b) = g(); if a { b.push(1); } let c: Vec<f64> = h(); }\n";
+        let pf = parse("x.rs", src);
+        let body = &pf.fns[0].body;
+        assert_eq!(body.len(), 3, "{body:?}");
+        assert_eq!(body[0].bindings, ["a", "b"]);
+        assert!(body[1].children.len() == 1 && !body[1].is_let);
+        assert_eq!(body[2].bindings, ["c"]);
+    }
+
+    #[test]
+    fn cfg_attrs_mark_test_and_feature_items() {
+        let src = "#[cfg(test)]\nmod tests { fn t() { x.push(1); } }\n\
+                   #[cfg(feature = \"xla\")]\nfn gated() { y.push(2); }\n\
+                   fn plain() {}\n";
+        let pf = parse("x.rs", src);
+        assert!(pf.fns[0].in_test && !pf.fns[0].in_feature);
+        assert!(pf.fns[1].in_feature && !pf.fns[1].in_test);
+        assert_eq!(pf.fns.len(), 3);
+        assert!(!pf.fns[2].in_test && !pf.fns[2].in_feature);
+    }
+
+    #[test]
+    fn trait_default_bodies_are_parsed() {
+        let src = "trait T { fn a(&self) -> f64; fn b(&self) -> f64 { self.a() + 1.0 } }\n";
+        let pf = parse("x.rs", src);
+        assert_eq!(pf.fns.len(), 1);
+        assert_eq!(pf.fns[0].qname(), "T::b");
+        assert_eq!(pf.fns[0].body[0].events.len(), 1);
+    }
+}

@@ -119,7 +119,7 @@ mod tests {
 
     #[test]
     fn unknown_rule_is_an_error() {
-        let (pragmas, errors) = collect(&lex("// pallas-lint: allow(R7) — because\nlet x = 1;\n"));
+        let (pragmas, errors) = collect(&lex("// pallas-lint: allow(R9) — because\nlet x = 1;\n"));
         assert!(pragmas.is_empty());
         assert!(errors[0].1.contains("unknown rule"));
     }

@@ -1,0 +1,319 @@
+//! Crate-wide call resolution: a CHA-style (class-hierarchy-analysis)
+//! index over every parsed file, answering "which `fn` items can this
+//! call event reach?".
+//!
+//! Resolution is deliberately *typed-lite*: `self.method()` resolves via
+//! the impl's self type, `self.field.method()` via the struct field's
+//! recorded base type, `Type::method()` via path, free fns by module, and
+//! — as a last resort — by crate-wide unique name. Two guardrails keep
+//! the fallback sound for the graph rules: it never claims allocating
+//! method names (an unknown receiver's `.push()` must stay visible to
+//! R6), and never claims common std method names (a crate type defining
+//! `expect`, like `report::json::Parser`, must not swallow every
+//! `Result::expect` in the tree).
+
+use crate::ast::{Event, FnDef, ParsedFile};
+use std::collections::{BTreeMap, BTreeSet};
+
+/// Macros that allocate (R6).
+pub const ALLOC_MACROS: [&str; 2] = ["format", "vec"];
+
+/// Heap-owning types whose constructors allocate (R6).
+pub const ALLOC_TYPES: [&str; 10] =
+    ["Vec", "String", "Box", "VecDeque", "BTreeMap", "BTreeSet", "HashMap", "HashSet", "Rc", "Arc"];
+
+/// Constructor names that allocate when called on an [`ALLOC_TYPES`] path.
+pub const ALLOC_CTORS: [&str; 3] = ["new", "with_capacity", "from"];
+
+/// Method names that (re)allocate on std containers (R6).
+pub const ALLOC_METHODS: [&str; 15] = [
+    "push", "push_str", "extend", "insert", "collect", "to_vec", "to_string", "to_owned", "clone",
+    "reserve", "resize", "append", "repeat", "join", "split_off",
+];
+
+/// Common std method names the unique-name fallback must never claim.
+const STD_METHODS: [&str; 31] = [
+    "expect", "expect_err", "unwrap", "unwrap_or", "unwrap_or_else", "unwrap_err", "ok", "err",
+    "ok_or", "map", "map_err", "and_then", "iter", "into_iter", "iter_mut", "next", "peek", "get",
+    "get_mut", "len", "is_empty", "lock", "wait", "take", "last", "first", "min", "max", "abs",
+    "sqrt", "drop",
+];
+
+/// Resolution context: the enclosing fn's impl/trait/module coordinates.
+pub struct Ctx<'a> {
+    /// `impl` self type of the enclosing fn.
+    pub self_ty: Option<&'a str>,
+    /// Trait of the enclosing fn (impl block or trait default).
+    pub trait_name: Option<&'a str>,
+    /// Module path of the enclosing fn's file.
+    pub module: &'a str,
+}
+
+impl<'a> Ctx<'a> {
+    /// Context of `fn_def`.
+    pub fn of(fn_def: &'a FnDef) -> Ctx<'a> {
+        Ctx {
+            self_ty: fn_def.self_ty.as_deref(),
+            trait_name: fn_def.trait_name.as_deref(),
+            module: &fn_def.module,
+        }
+    }
+}
+
+/// The crate-wide symbol index. All maps are `BTreeMap`s so iteration —
+/// and therefore every diagnostic the graph rules emit — is deterministic.
+pub struct Index<'a> {
+    /// The parsed files the index was built over.
+    pub files: &'a [ParsedFile],
+    methods: BTreeMap<(&'a str, &'a str), Vec<&'a FnDef>>,
+    trait_defaults: BTreeMap<(&'a str, &'a str), Vec<&'a FnDef>>,
+    method_by_name: BTreeMap<&'a str, Vec<&'a FnDef>>,
+    free_fns: BTreeMap<&'a str, Vec<&'a FnDef>>,
+    fields: BTreeMap<&'a str, BTreeMap<&'a str, &'a str>>,
+    types: BTreeSet<&'a str>,
+    traits: BTreeSet<&'a str>,
+}
+
+impl<'a> Index<'a> {
+    /// Build the index over `files`.
+    pub fn new(files: &'a [ParsedFile]) -> Index<'a> {
+        let mut ix = Index {
+            files,
+            methods: BTreeMap::new(),
+            trait_defaults: BTreeMap::new(),
+            method_by_name: BTreeMap::new(),
+            free_fns: BTreeMap::new(),
+            fields: BTreeMap::new(),
+            types: BTreeSet::new(),
+            traits: BTreeSet::new(),
+        };
+        for pf in files {
+            ix.types.extend(pf.types.iter().map(String::as_str));
+            ix.traits.extend(pf.traits.iter().map(String::as_str));
+            for (ty, fs) in &pf.fields {
+                let entry = ix.fields.entry(ty).or_default();
+                for (f, base) in fs {
+                    entry.insert(f, base);
+                }
+            }
+            for f in &pf.fns {
+                if let Some(ty) = &f.self_ty {
+                    ix.methods.entry((ty.as_str(), f.name.as_str())).or_default().push(f);
+                    ix.method_by_name.entry(f.name.as_str()).or_default().push(f);
+                } else if let Some(tr) = &f.trait_name {
+                    ix.trait_defaults.entry((tr.as_str(), f.name.as_str())).or_default().push(f);
+                    ix.method_by_name.entry(f.name.as_str()).or_default().push(f);
+                } else {
+                    ix.free_fns.entry(f.name.as_str()).or_default().push(f);
+                }
+            }
+        }
+        ix
+    }
+
+    /// Impl methods of the trait named `tr` whose fn name is `name`, plus
+    /// trait defaults — used both for root collection and trait-CHA.
+    pub fn trait_methods(&self, tr: &str, name: &str) -> Vec<&'a FnDef> {
+        let mut out: Vec<&'a FnDef> = self
+            .method_by_name
+            .get(name)
+            .into_iter()
+            .flatten()
+            .filter(|f| f.trait_name.as_deref() == Some(tr))
+            .copied()
+            .collect();
+        out.extend(self.trait_defaults.get(&(tr, name)).into_iter().flatten().copied());
+        out
+    }
+
+    /// Methods on `ty` named `name` (impl blocks anywhere in the tree).
+    pub fn methods_on(&self, ty: &str, name: &str) -> Vec<&'a FnDef> {
+        self.methods.get(&(ty, name)).cloned().unwrap_or_default()
+    }
+
+    /// Resolve a call event to its possible callees (empty when unknown —
+    /// std calls, complex receivers, trait objects without an index entry).
+    pub fn resolve(&self, ev: &Event, ctx: &Ctx<'_>) -> Vec<&'a FnDef> {
+        match ev {
+            Event::PathCall { segs, .. } if segs.len() >= 2 => {
+                let name = segs[segs.len() - 1].as_str();
+                let mut head = segs[segs.len() - 2].as_str();
+                if head == "Self" {
+                    if let Some(ty) = ctx.self_ty {
+                        head = ty;
+                    }
+                }
+                if let Some(got) = self.methods.get(&(head, name)) {
+                    return got.clone();
+                }
+                if let Some(got) = self.trait_defaults.get(&(head, name)) {
+                    return got.clone();
+                }
+                if self.types.contains(head) || self.traits.contains(head) {
+                    return Vec::new(); // known type, method defined elsewhere (std)
+                }
+                // module-qualified free fn: `stats::erf(…)`
+                let cands = self.free_fns.get(name).cloned().unwrap_or_default();
+                cands
+                    .into_iter()
+                    .filter(|f| {
+                        f.module.ends_with(head) || f.module.split("::").any(|m| m == head)
+                    })
+                    .collect()
+            }
+            Event::PathCall { segs, .. } => {
+                let name = segs[0].as_str();
+                let cands = self.free_fns.get(name).cloned().unwrap_or_default();
+                if cands.is_empty() {
+                    return Vec::new();
+                }
+                let same: Vec<&FnDef> =
+                    cands.iter().copied().filter(|f| f.module == ctx.module).collect();
+                if !same.is_empty() {
+                    return same;
+                }
+                if cands.len() == 1 {
+                    return cands;
+                }
+                Vec::new()
+            }
+            Event::Method { recv, name, .. } => {
+                if recv.first().map(String::as_str) == Some("self") {
+                    if let Some(self_ty) = ctx.self_ty {
+                        if recv.len() == 1 {
+                            let got = self.methods_on(self_ty, name);
+                            if !got.is_empty() {
+                                return got;
+                            }
+                            if let Some(tr) = ctx.trait_name {
+                                if let Some(got) = self.trait_defaults.get(&(tr, name.as_str())) {
+                                    return got.clone();
+                                }
+                            }
+                            return self.unique_method(name);
+                        }
+                        if recv.len() == 2 {
+                            let fty = self
+                                .fields
+                                .get(self_ty)
+                                .and_then(|fs| fs.get(recv[1].as_str()))
+                                .copied()
+                                .unwrap_or("");
+                            if !fty.is_empty() {
+                                // typed field: either a crate method or a
+                                // std-container method (unresolvable, fine)
+                                return self.methods_on(fty, name);
+                            }
+                            return self.unique_method(name);
+                        }
+                    } else if let Some(tr) = ctx.trait_name {
+                        if recv.len() == 1 {
+                            // trait default method body: CHA over every impl
+                            let cha = self.trait_methods(tr, name);
+                            if !cha.is_empty() {
+                                return cha;
+                            }
+                            return self.unique_method(name);
+                        }
+                    }
+                }
+                if !recv.is_empty() {
+                    return self.unique_method(name);
+                }
+                // expression receiver (`f(x).method(…)`): no ident chain to
+                // anchor a guess — leave unresolved.
+                Vec::new()
+            }
+            _ => Vec::new(),
+        }
+    }
+
+    /// Fallback: resolve by name when the method is defined exactly once
+    /// crate-wide, excluding alloc/std names (see module docs).
+    fn unique_method(&self, name: &str) -> Vec<&'a FnDef> {
+        if ALLOC_METHODS.contains(&name) || STD_METHODS.contains(&name) {
+            return Vec::new();
+        }
+        match self.method_by_name.get(name) {
+            Some(cands) if cands.len() == 1 => cands.clone(),
+            _ => Vec::new(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::lexer::{lex, Tok, TokKind};
+    use crate::parser::parse_file;
+
+    fn parse(path: &str, src: &str) -> ParsedFile {
+        let toks = lex(src);
+        let code: Vec<&Tok> = toks
+            .iter()
+            .filter(|t| !matches!(t.kind, TokKind::LineComment | TokKind::BlockComment))
+            .collect();
+        parse_file(path, &code)
+    }
+
+    fn first_event_resolution(files: &[ParsedFile]) -> Vec<String> {
+        let ix = Index::new(files);
+        let caller = &files[0].fns[0];
+        let ctx = Ctx::of(caller);
+        let mut out = Vec::new();
+        crate::ast::for_each_event(&caller.body, &mut |_s, ev| {
+            if matches!(ev, Event::Method { .. } | Event::PathCall { .. }) {
+                for callee in ix.resolve(ev, &ctx) {
+                    out.push(callee.qname());
+                }
+            }
+        });
+        out
+    }
+
+    #[test]
+    fn self_and_field_receivers_resolve_through_types() {
+        let src = "struct A { inner: B }\n\
+                   impl A { fn top(&self) { self.step(); self.inner.run(); } fn step(&self) {} }\n\
+                   struct B;\nimpl B { fn run(&self) {} }\n";
+        let files = vec![parse("rust/src/m/mod.rs", src)];
+        assert_eq!(first_event_resolution(&files), ["A::step", "B::run"]);
+    }
+
+    #[test]
+    fn trait_default_self_calls_resolve_via_cha() {
+        let src = "trait T { fn go(&self) { self.hook(); } }\n\
+                   struct X;\nimpl T for X { fn hook(&self) {} }\n\
+                   struct Y;\nimpl T for Y { fn hook(&self) {} }\n";
+        let files = vec![parse("rust/src/m/mod.rs", src)];
+        assert_eq!(first_event_resolution(&files), ["X::hook", "Y::hook"]);
+    }
+
+    #[test]
+    fn std_method_names_never_resolve_by_unique_fallback() {
+        // `Parser::expect` is the only `expect` in the crate, but a call on
+        // an unrelated receiver must NOT resolve to it.
+        let src = "struct P;\nimpl P { fn expect(&self) {} }\n\
+                   struct Q;\nimpl Q { fn f(&self, v: Option<u8>) { v.expect(\"boom\"); } }\n";
+        let pf = parse("rust/src/m/mod.rs", src);
+        let files = vec![pf];
+        let ix = Index::new(&files);
+        let caller = &files[0].fns[1];
+        let ctx = Ctx::of(caller);
+        let mut resolved = Vec::new();
+        crate::ast::for_each_event(&caller.body, &mut |_s, ev| {
+            if let Event::Method { .. } = ev {
+                resolved.extend(ix.resolve(ev, &ctx).iter().map(|f| f.qname()));
+            }
+        });
+        assert!(resolved.is_empty(), "{resolved:?}");
+    }
+
+    #[test]
+    fn module_qualified_free_fns_resolve() {
+        let a = parse("rust/src/gp/mod.rs", "fn caller() { stats::erf(1.0); }\n");
+        let b = parse("rust/src/gp/stats.rs", "pub fn erf(x: f64) -> f64 { x }\n");
+        let files = vec![a, b];
+        assert_eq!(first_event_resolution(&files), ["gp::stats::erf"]);
+    }
+}

@@ -70,6 +70,41 @@ fn r5_bad_flags_lib_panics_and_good_is_clean() {
 }
 
 #[test]
+fn r6_bad_flags_interprocedural_hot_path_allocs_and_good_is_clean() {
+    let bad = lint_fixture("r6_bad.rs", "rust/src/gp/r6_bad.rs");
+    let r6: Vec<_> = bad.iter().filter(|d| d.rule == RuleId::HotPathAlloc).collect();
+    assert_eq!(r6.len(), 3, "push + format! + push_str, one call hop from observe: {bad:?}");
+    // The finding is interprocedural: the sites are in `record`, the root
+    // is `observe`, and the diagnostic carries the discovery chain.
+    assert!(r6.iter().all(|d| d.message.contains("Gp::record ← Gp::observe")), "{r6:?}");
+    let good = lint_fixture("r6_good.rs", "rust/src/gp/r6_good.rs");
+    assert!(good.is_empty(), "cold `report` alloc must not leak into the hot set: {good:?}");
+}
+
+#[test]
+fn r7_bad_flags_the_two_lock_cycle_and_good_is_clean() {
+    let bad = lint_fixture("r7_bad.rs", "rust/src/pool/r7_bad.rs");
+    let r7: Vec<_> = bad.iter().filter(|d| d.rule == RuleId::LockOrder).collect();
+    assert_eq!(r7.len(), 2, "both edges of the a ⇄ b cycle: {bad:?}");
+    let good = lint_fixture("r7_good.rs", "rust/src/pool/r7_good.rs");
+    assert!(good.is_empty(), "consistent a → b order (incl. through `tail`) must pass: {good:?}");
+    // The same cycle outside the audited concurrency modules is not R7's
+    // business.
+    let elsewhere = lint_fixture("r7_bad.rs", "rust/src/gp/r7_bad.rs");
+    assert!(!elsewhere.iter().any(|d| d.rule == RuleId::LockOrder), "{elsewhere:?}");
+}
+
+#[test]
+fn r8_bad_flags_unvalidated_config_reads_and_good_is_clean() {
+    let bad = lint_fixture("r8_bad.rs", "rust/src/config/r8_bad.rs");
+    assert_eq!(bad.iter().filter(|d| d.rule == RuleId::ConfigValidation).count(), 1, "{bad:?}");
+    let good = lint_fixture("r8_good.rs", "rust/src/config/r8_good.rs");
+    assert!(good.is_empty(), "later-statement try_from flow and count() itself are sanctioned: {good:?}");
+    let elsewhere = lint_fixture("r8_bad.rs", "rust/src/gp/r8_bad.rs");
+    assert!(elsewhere.is_empty(), "{elsewhere:?}");
+}
+
+#[test]
 fn unjustified_pragma_is_reported_and_suppresses_nothing() {
     let diags = lint_fixture("pragma_bad.rs", "rust/src/gp/pragma_bad.rs");
     assert!(diags.iter().any(|d| d.rule == RuleId::Pragma), "{diags:?}");
@@ -91,6 +126,12 @@ fn every_bad_fixture_produces_findings_exit_1_contract() {
         ("r4_good.rs", "rust/src/config/f.rs", false),
         ("r5_bad.rs", "rust/src/engine/f.rs", true),
         ("r5_good.rs", "rust/src/engine/f.rs", false),
+        ("r6_bad.rs", "rust/src/gp/f.rs", true),
+        ("r6_good.rs", "rust/src/gp/f.rs", false),
+        ("r7_bad.rs", "rust/src/pool/f.rs", true),
+        ("r7_good.rs", "rust/src/pool/f.rs", false),
+        ("r8_bad.rs", "rust/src/config/f.rs", true),
+        ("r8_good.rs", "rust/src/config/f.rs", false),
         ("pragma_bad.rs", "rust/src/engine/f.rs", true),
     ];
     for (name, path, dirty) in cases {

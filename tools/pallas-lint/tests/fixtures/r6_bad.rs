@@ -1,0 +1,24 @@
+//! Known-bad R6 fixture: the hot path allocates one call hop away from
+//! `Gp::observe`, so the finding must be interprocedural.
+
+pub struct Gp {
+    buf: Vec<f64>,
+    log: String,
+    n: usize,
+}
+
+impl Gp {
+    /// Hot-path root: statically reachable set starts here.
+    pub fn observe(&mut self, x: usize, y: f64) {
+        self.n += 1;
+        self.record(x, y);
+    }
+
+    /// One hop from the root — the `.push()` and `format!` below are the
+    /// violations R6 must surface through the call graph.
+    fn record(&mut self, x: usize, y: f64) {
+        self.buf.push(y);
+        let msg = format!("obs arm={x}");
+        self.log.push_str(&msg);
+    }
+}

@@ -1,0 +1,27 @@
+//! Known-good R6 fixture: the hot path writes into preallocated storage;
+//! the only allocating fn (`report`) is NOT reachable from `Gp::observe`,
+//! which pins the rule's reachability precision.
+
+pub struct Gp {
+    buf: Vec<f64>,
+    n: usize,
+}
+
+impl Gp {
+    /// Hot-path root: indexed writes only, no growth.
+    pub fn observe(&mut self, x: usize, y: f64) {
+        self.buf[x] = y;
+        self.n += 1;
+        self.refresh(x);
+    }
+
+    fn refresh(&mut self, x: usize) {
+        self.buf[x] *= 0.5;
+    }
+
+    /// Allocates, but is only called from cold reporting code — R6 must
+    /// stay silent here.
+    pub fn report(&self) -> Vec<f64> {
+        self.buf.to_vec()
+    }
+}

@@ -1,0 +1,36 @@
+//! Known-bad R7 fixture: two-lock cycle. `merge_ab` acquires a → b while
+//! `merge_ba` acquires b → a, so the lock-order graph has the cycle
+//! pool::a ⇄ pool::b and the linter must flag it.
+
+use std::sync::Mutex;
+
+pub struct Shards {
+    a: Mutex<Vec<f64>>,
+    b: Mutex<Vec<f64>>,
+}
+
+impl Shards {
+    pub fn merge_ab(&self) -> f64 {
+        let ga = match self.a.lock() {
+            Ok(g) => g,
+            Err(p) => p.into_inner(),
+        };
+        let gb = match self.b.lock() {
+            Ok(g) => g,
+            Err(p) => p.into_inner(),
+        };
+        ga[0] + gb[0]
+    }
+
+    pub fn merge_ba(&self) -> f64 {
+        let gb = match self.b.lock() {
+            Ok(g) => g,
+            Err(p) => p.into_inner(),
+        };
+        let ga = match self.a.lock() {
+            Ok(g) => g,
+            Err(p) => p.into_inner(),
+        };
+        gb[0] - ga[0]
+    }
+}

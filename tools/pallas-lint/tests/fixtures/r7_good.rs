@@ -1,0 +1,40 @@
+//! Known-good R7 fixture: both paths acquire in the same a → b order, one
+//! of them through a call hop (`tail` acquires b while the caller holds a),
+//! so the lock-order graph has a single edge and stays acyclic.
+
+use std::sync::Mutex;
+
+pub struct Shards {
+    a: Mutex<Vec<f64>>,
+    b: Mutex<Vec<f64>>,
+}
+
+impl Shards {
+    pub fn merge(&self) -> f64 {
+        let ga = match self.a.lock() {
+            Ok(g) => g,
+            Err(p) => p.into_inner(),
+        };
+        let gb = match self.b.lock() {
+            Ok(g) => g,
+            Err(p) => p.into_inner(),
+        };
+        ga[0] + gb[0]
+    }
+
+    pub fn merge_via_call(&self) -> f64 {
+        let ga = match self.a.lock() {
+            Ok(g) => g,
+            Err(p) => p.into_inner(),
+        };
+        ga[0] + self.tail()
+    }
+
+    fn tail(&self) -> f64 {
+        let gb = match self.b.lock() {
+            Ok(g) => g,
+            Err(p) => p.into_inner(),
+        };
+        gb[0]
+    }
+}

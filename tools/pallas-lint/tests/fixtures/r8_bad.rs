@@ -1,0 +1,7 @@
+//! Known-bad R8 fixture: a numeric config read (`as_int`) whose value never
+//! flows through `usize::try_from`/`count()` before use.
+
+pub fn shard_seed(v: &Value) -> Option<i64> {
+    let raw = v.as_int()?;
+    Some(raw.wrapping_mul(2).wrapping_add(1))
+}

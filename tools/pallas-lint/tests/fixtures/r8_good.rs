@@ -1,0 +1,16 @@
+//! Known-good R8 fixture: every `as_int` read is sanctioned — either the
+//! value flows through `usize::try_from` in a later statement, or the read
+//! happens inside the `count()` validation helper itself.
+
+pub fn shard_count(v: &Value) -> Option<usize> {
+    let raw = v.as_int()?;
+    usize::try_from(raw).ok()
+}
+
+pub fn count(v: &Value, field: &str) -> Option<i64> {
+    let raw = v.as_int()?;
+    if raw < 0 {
+        return None;
+    }
+    Some(raw)
+}

@@ -1,0 +1,101 @@
+//! Golden test over the tree's `// pallas-lint: allow(…)` inventory.
+//!
+//! Every pragma is a place the repo opts out of its own invariants, so
+//! the *set* of them is a pinned artifact: adding a suppression anywhere
+//! in `rust/src`, `rust/benches`, `rust/tests`, or the linter's own
+//! sources means updating this table — turning silent lint-debt growth
+//! into a reviewable diff line. Line numbers are deliberately not
+//! pinned (formatting would churn them); the (file, rules, count)
+//! triple is the stable shape.
+
+use std::collections::BTreeMap;
+use std::fs;
+use std::path::{Path, PathBuf};
+
+/// `(relative path, "+"-joined rule codes, pragma count)` — keep sorted
+/// by path then rules.
+const GOLDEN: [(&str, &str, usize); 17] = [
+    ("rust/src/engine/clock.rs", "R5", 3),
+    ("rust/src/engine/mod.rs", "R3", 2),
+    ("rust/src/engine/mod.rs", "R5", 3),
+    ("rust/src/gp/mod.rs", "R5", 3),
+    ("rust/src/gp/mod.rs", "R6", 5),
+    ("rust/src/linalg/mod.rs", "R6", 2),
+    ("rust/src/metrics/mod.rs", "R5", 1),
+    ("rust/src/miu/mod.rs", "R5", 1),
+    ("rust/src/pool/mod.rs", "R5", 4),
+    ("rust/src/problem/mod.rs", "R5", 1),
+    ("rust/src/runtime/mod.rs", "R5", 1),
+    ("rust/src/sched/backend.rs", "R6", 1),
+    ("rust/src/workload/churn.rs", "R5", 3),
+    ("rust/src/workload/fault_plan.rs", "R5", 1),
+    ("rust/src/workload/fleet.rs", "R5", 1),
+    ("rust/src/workload/synthetic.rs", "R5", 1),
+    ("rust/tests/float_order.rs", "R1", 2),
+];
+
+fn repo_path(rel: &str) -> PathBuf {
+    Path::new(env!("CARGO_MANIFEST_DIR")).join("../..").join(rel)
+}
+
+fn rust_files(dir: &Path, out: &mut Vec<PathBuf>) {
+    let mut entries: Vec<PathBuf> = fs::read_dir(dir)
+        .unwrap_or_else(|e| panic!("reading {}: {e}", dir.display()))
+        .map(|e| e.expect("dir entry").path())
+        .collect();
+    entries.sort();
+    for p in entries {
+        if p.is_dir() {
+            if p.file_name().map(|n| n == "target").unwrap_or(false) {
+                continue;
+            }
+            rust_files(&p, out);
+        } else if p.extension().map(|e| e == "rs").unwrap_or(false) {
+            out.push(p);
+        }
+    }
+}
+
+#[test]
+fn pragma_inventory_matches_the_golden_table() {
+    let roots = ["rust/src", "rust/benches", "rust/tests", "tools/pallas-lint/src"];
+    let mut inventory: BTreeMap<(String, String), usize> = BTreeMap::new();
+    for root in roots {
+        let abs = repo_path(root);
+        let mut files = Vec::new();
+        rust_files(&abs, &mut files);
+        assert!(!files.is_empty(), "no .rs files under {root} — wrong repo layout?");
+        for file in files {
+            let src = fs::read_to_string(&file)
+                .unwrap_or_else(|e| panic!("reading {}: {e}", file.display()));
+            let suffix = file.strip_prefix(&abs).expect("walked file under root");
+            let rel = format!("{root}/{}", suffix.display()).replace('\\', "/");
+            for (_line, rules) in pallas_lint::pragma_inventory(&src) {
+                let codes: Vec<&str> = rules.iter().map(|r| r.code()).collect();
+                *inventory.entry((rel.clone(), codes.join("+"))).or_insert(0) += 1;
+            }
+        }
+    }
+    let got: Vec<(String, String, usize)> =
+        inventory.into_iter().map(|((p, r), n)| (p, r, n)).collect();
+    let want: Vec<(String, String, usize)> =
+        GOLDEN.iter().map(|&(p, r, n)| (p.to_string(), r.to_string(), n)).collect();
+    assert_eq!(
+        got, want,
+        "pragma inventory drifted — if the new suppression is justified, update GOLDEN in {}",
+        file!()
+    );
+}
+
+#[test]
+fn golden_table_is_sorted_and_rules_are_known() {
+    let mut sorted = GOLDEN;
+    sorted.sort();
+    assert_eq!(sorted, GOLDEN, "keep GOLDEN sorted by (path, rules)");
+    for (_, rules, n) in GOLDEN {
+        assert!(n > 0);
+        for code in rules.split('+') {
+            assert!(pallas_lint::RuleId::parse(code).is_some(), "unknown rule {code} in GOLDEN");
+        }
+    }
+}

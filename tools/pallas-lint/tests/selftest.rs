@@ -1,7 +1,10 @@
 //! Self-test: the real tree lints clean. This is the same sweep the
 //! blocking CI job runs (`cargo run -p pallas-lint -- rust/src
-//! tools/pallas-lint/src`), expressed as a `cargo test` so the gate also
-//! holds in plain `cargo test -q` runs with no extra CI plumbing.
+//! rust/benches rust/tests tools/pallas-lint/src`), expressed as a
+//! `cargo test` so the gate also holds in plain `cargo test -q` runs
+//! with no extra CI plumbing. All roots are linted in ONE call: the
+//! R6–R8 graph rules resolve calls across the whole set, exactly like
+//! CI does.
 
 use std::path::{Path, PathBuf};
 
@@ -11,18 +14,26 @@ fn repo_path(rel: &str) -> PathBuf {
 }
 
 #[test]
-fn main_crate_sources_lint_clean() {
-    let root = repo_path("rust/src");
-    let diags = pallas_lint::lint_paths(&[root]).expect("walk rust/src");
+fn full_tree_lints_clean_as_one_analysis_unit() {
+    let roots = [
+        repo_path("rust/src"),
+        repo_path("rust/benches"),
+        repo_path("rust/tests"),
+        repo_path("tools/pallas-lint/src"),
+    ];
+    let diags = pallas_lint::lint_paths(&roots).expect("walk lint roots");
     assert!(
         diags.is_empty(),
-        "rust/src must lint clean; fix or add a justified pragma:\n{}",
+        "the tree must lint clean (incl. the R6 hot-path-alloc and R7 lock-order graph rules); \
+         fix or add a justified pragma:\n{}",
         diags.iter().map(|d| d.to_string()).collect::<Vec<_>>().join("\n")
     );
 }
 
 #[test]
 fn lint_sources_lint_themselves_clean() {
+    // Dogfood in isolation too: the linter's own sources must hold the
+    // invariants with no help from pragmas elsewhere in the tree.
     let root = repo_path("tools/pallas-lint/src");
     let diags = pallas_lint::lint_paths(&[root]).expect("walk own src");
     assert!(
