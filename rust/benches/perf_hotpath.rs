@@ -11,7 +11,15 @@
 //!    serving run, with an up-front bit-identical argmax check;
 //!  * **scaling sweep** (§Perf P2): ns/decision and ns/observe across
 //!    tenant counts for the fused observe kernels + tournament argmax,
-//!    with tournament-vs-rescan parity hard-gated at every size;
+//!    with tournament-vs-rescan parity hard-gated at every size
+//!    (`MMGPEI_GP_STRUCTURE=sharded` swaps in the sharded store — every
+//!    mode, including `--smoke`, so CI can determinism-gate it);
+//!  * **sharded store** (§Perf P2s): sharded-vs-dense parity gates
+//!    (bitwise at ρ = 0, 1e-7 relative at ρ > 0), then the 10⁴–10⁶
+//!    tenant scaling sweep dense can't reach — `MMGPEI_P2_USERS` picks
+//!    the grid (full runs only), `scaling/ns_per_observe@u{N}x16` is
+//!    gated sub-quadratic in N, and serving throughput lands as
+//!    `throughput/decisions_per_sec@u{N}x16`;
 //!  * the AOT XLA artifact: one full `scheduler_step` execution via PJRT
 //!    (requires `--features xla` + `make artifacts`; skipped otherwise);
 //!  * end-to-end decision latency inside the live coordinator.
@@ -25,6 +33,8 @@
 //! CI:  `cargo bench --bench perf_hotpath -- --smoke --json reports/BENCH_perf_hotpath.json`
 
 use mmgpei::bench::{BenchOpts, Bencher, Table};
+use mmgpei::gp::{Gp, KroneckerPrior, ShardedGp};
+use mmgpei::kernels::{Kernel, Matern52};
 use mmgpei::prng::Rng;
 use mmgpei::problem::{Problem, Truth};
 use mmgpei::report::{Direction, RunReport, TimingEntry};
@@ -44,6 +54,7 @@ fn main() {
 
     let mut mismatches = cached_vs_rescan(&mut report, opts.smoke);
     mismatches += scaling_sweep(&mut report, opts.smoke);
+    mismatches += sharded_sweep(&mut report, opts.smoke);
 
     if !opts.smoke {
         coordinator_latency(&mut report);
@@ -182,9 +193,20 @@ fn drive_cached(
     problem: &Problem,
     truth: &Truth,
     order: &[usize],
+    picks: Option<&mut Vec<Option<usize>>>,
+) -> f64 {
+    drive_backend(NativeBackend::new(problem), problem, truth, order, picks)
+}
+
+/// [`drive_cached`] over a caller-built backend — the §P2/§P2s hook that
+/// lets the same serving run exercise the dense or the sharded store.
+fn drive_backend(
+    mut backend: NativeBackend,
+    problem: &Problem,
+    truth: &Truth,
+    order: &[usize],
     mut picks: Option<&mut Vec<Option<usize>>>,
 ) -> f64 {
-    let mut backend = NativeBackend::new(problem);
     let mut selected = vec![false; problem.n_arms()];
     let mut best = vec![0.0f64; problem.n_users];
     let mut acc = 0.0;
@@ -355,7 +377,9 @@ fn cached_vs_rescan(report: &mut RunReport, smoke: bool) -> usize {
 ///   timing entries. Smoke reports stay byte-identical because wall-clock
 ///   numbers are excluded there by construction.
 fn scaling_sweep(report: &mut RunReport, smoke: bool) -> usize {
-    println!("\n=== §Perf P2: user-count scaling (fused observe + tournament argmax) ===\n");
+    let sharded = p2_structure_sharded();
+    let structure = if sharded { "sharded" } else { "dense" };
+    println!("\n=== §Perf P2: user-count scaling (fused observe + tournament argmax, {structure} store) ===\n");
     let sizes: &[(usize, usize)] = if smoke { &[(8, 8), (16, 8)] } else { &[(16, 16), (32, 16), (64, 16), (96, 16)] };
     let bench = Bencher {
         warmup: Duration::from_millis(100),
@@ -368,17 +392,29 @@ fn scaling_sweep(report: &mut RunReport, smoke: bool) -> usize {
     for &(n_users, n_models) in sizes {
         let cfg = SyntheticConfig { n_users, n_models, ..Default::default() };
         report.fold_config(&format!("p2 n_users={n_users} n_models={n_models}"));
+        if sharded {
+            // Folded only when selected so dense reports keep their
+            // baseline-stamped config hash (the `[gp]` convention).
+            report.fold_config("p2 structure=sharded");
+        }
         let (problem, truth) = synthetic_gp(&cfg, 0x5CA1E);
         let l = problem.n_arms();
         let mut order: Vec<usize> = (0..l / 2).map(|i| (i * 7 + 3) % l).collect();
         order.sort_unstable();
         order.dedup();
         let n_decisions = order.len();
+        // The env-selected store under test; ρ = 0 keeps the sharded
+        // variant bitwise against the same rescan oracle.
+        let prior = sharded.then(|| kron_prior(&cfg, &problem));
+        let make_backend = || match &prior {
+            Some(p) => NativeBackend::sharded(&problem, p.clone()),
+            None => NativeBackend::new(&problem),
+        };
 
         // Parity gate: tournament-tree picks vs the rescan oracle.
         let mut picks_tree = Vec::with_capacity(n_decisions);
         let mut picks_rescan = Vec::with_capacity(n_decisions);
-        drive_cached(&problem, &truth, &order, Some(&mut picks_tree));
+        drive_backend(make_backend(), &problem, &truth, &order, Some(&mut picks_tree));
         drive_rescan(&problem, &truth, &order, Some(&mut picks_rescan));
         let mismatches = picks_tree.iter().zip(&picks_rescan).filter(|(t, r)| t != r).count();
         total_mismatches += mismatches;
@@ -396,16 +432,26 @@ fn scaling_sweep(report: &mut RunReport, smoke: bool) -> usize {
 
         // ns/decision: one full serving run (observe → incumbent fold →
         // dirty rescore → tree argmax per decision), amortized.
-        let s_drive = bench.run("drive", || black_box(drive_cached(&problem, &truth, &order, None)));
+        let s_drive =
+            bench.run("drive", || black_box(drive_backend(make_backend(), &problem, &truth, &order, None)));
         let ns_decision = s_drive.mean.as_nanos() as f64 / n_decisions as f64;
         // ns/observe: the fused GP observation pass alone, amortized over
         // a fresh sequential run (same protocol as §P1's observe group).
-        let s_obs = bench.run("observe", || {
-            let mut gp = mmgpei::gp::Gp::new(problem.prior_mean.clone(), problem.prior_cov.clone());
-            for &a in &order {
-                gp.observe(a, truth.z[a]);
+        let s_obs = bench.run("observe", || match &prior {
+            Some(p) => {
+                let mut gp = ShardedGp::new(p.clone());
+                for &a in &order {
+                    gp.observe(a, truth.z[a]);
+                }
+                black_box(gp.posterior_mean(0))
             }
-            black_box(gp.posterior_mean(0))
+            None => {
+                let mut gp = Gp::new(problem.prior_mean.clone(), problem.prior_cov.clone());
+                for &a in &order {
+                    gp.observe(a, truth.z[a]);
+                }
+                black_box(gp.posterior_mean(0))
+            }
         });
         let ns_observe = s_obs.mean.as_nanos() as f64 / n_decisions as f64;
         report.push_kpi(format!("scaling/ns_per_decision@u{n_users}x{n_models}"), ns_decision, Direction::LowerIsBetter);
@@ -432,6 +478,237 @@ fn scaling_sweep(report: &mut RunReport, smoke: bool) -> usize {
         println!("{}", table.to_markdown());
         println!("(ns/decision should grow sub-linearly in users: dirty sets are per-user blocks)");
     }
+    total_mismatches
+}
+
+/// §P2 store selector: `MMGPEI_GP_STRUCTURE=sharded` swaps the dense
+/// backend for the sharded one — honored in **every** mode, including
+/// `--smoke`, which is how CI's determinism gate replays the sharded
+/// smoke run at two thread widths and `cmp`s the report bytes.
+fn p2_structure_sharded() -> bool {
+    match std::env::var("MMGPEI_GP_STRUCTURE").as_deref() {
+        Err(_) | Ok("dense") => false,
+        Ok("sharded") => true,
+        Ok(v) => panic!("MMGPEI_GP_STRUCTURE={v:?}: expected dense|sharded"),
+    }
+}
+
+/// Kronecker form of the synthetic workload's prior: ρ = 0 (independent
+/// tenants) over the same shared Matérn-5/2 model gram, i.e. bitwise the
+/// block-diagonal `prior_cov` that `synthetic_gp` materializes — so the
+/// sharded-vs-dense gates below demand exact equality, not a tolerance.
+fn kron_prior(cfg: &SyntheticConfig, problem: &Problem) -> KroneckerPrior {
+    let pts: Vec<Vec<f64>> = (0..cfg.n_models).map(|m| vec![m as f64 * 0.25]).collect();
+    let c = Matern52 { variance: cfg.variance, lengthscale: cfg.lengthscale }.gram(&pts);
+    KroneckerPrior::new(cfg.n_users, c, 0.0, problem.prior_mean.clone()).expect("synthetic model gram is PSD")
+}
+
+fn rel_close(a: f64, b: f64, tol: f64) -> bool {
+    (a - b).abs() <= tol * a.abs().max(b.abs()).max(1.0)
+}
+
+/// §Perf P2s — the sharded block-Kronecker store (`[gp] structure =
+/// "sharded"`), in three parts:
+///
+/// * **ρ = 0 parity gate** (every mode, incl. `--smoke`): a full serving
+///   run through `NativeBackend::sharded` must reproduce the dense
+///   backend's picks *and* its score fold bit for bit — independent
+///   tenants make the sharded store algebraically identical to the dense
+///   factor, down to the float schedule;
+/// * **ρ > 0 parity gate** (every mode): on a small coupled instance the
+///   Woodbury cross-term must match the dense oracle over the
+///   materialized B(ρ) ⊗ C covariance to 1e-7 relative;
+/// * **scaling sweep** (full runs only): tenant counts from
+///   `MMGPEI_P2_USERS` (comma list, default `10000,100000`, ignored in
+///   `--smoke` like every grid knob) × 16 models — bare
+///   `ShardedGp::observe` at ρ = 0.25 (`scaling/ns_per_observe@u{N}x16`,
+///   hard-gated **sub-quadratic** in N) and whole-backend serving
+///   throughput at ρ = 0 (`throughput/decisions_per_sec@u{N}x16`). The
+///   dense store is O(L²) memory and O(t²) per observe — at these sizes
+///   it cannot even be constructed, which is the point.
+///
+/// Every divergence lands in the report as a hard-gated KPI and in the
+/// returned count, which `main` turns into a non-zero exit.
+fn sharded_sweep(report: &mut RunReport, smoke: bool) -> usize {
+    println!("\n=== §Perf P2s: sharded block-Kronecker GP ===\n");
+    let mut total_mismatches = 0usize;
+
+    // (1) ρ = 0: bitwise dense parity over a full serving run.
+    let sizes: &[(usize, usize)] = if smoke { &[(8, 8), (16, 8)] } else { &[(16, 16), (64, 16)] };
+    for &(n_users, n_models) in sizes {
+        let cfg = SyntheticConfig { n_users, n_models, ..Default::default() };
+        report.fold_config(&format!("p2s parity n_users={n_users} n_models={n_models}"));
+        let (problem, truth) = synthetic_gp(&cfg, 0x5CA1E);
+        let l = problem.n_arms();
+        let mut order: Vec<usize> = (0..l / 2).map(|i| (i * 7 + 3) % l).collect();
+        order.sort_unstable();
+        order.dedup();
+        let mut picks_dense = Vec::with_capacity(order.len());
+        let mut picks_sharded = Vec::with_capacity(order.len());
+        let acc_dense =
+            drive_backend(NativeBackend::new(&problem), &problem, &truth, &order, Some(&mut picks_dense));
+        let backend = NativeBackend::sharded(&problem, kron_prior(&cfg, &problem));
+        let acc_sharded = drive_backend(backend, &problem, &truth, &order, Some(&mut picks_sharded));
+        let mut mismatches = picks_dense.iter().zip(&picks_sharded).filter(|(d, s)| d != s).count();
+        mismatches += usize::from(acc_dense.to_bits() != acc_sharded.to_bits());
+        total_mismatches += mismatches;
+        report.push_kpi(
+            format!("parity/sharded_vs_dense_mismatches@u{n_users}x{n_models}"),
+            mismatches as f64,
+            Direction::LowerIsBetter,
+        );
+        println!("parity(ρ=0) u{n_users}x{n_models}: {mismatches} sharded-vs-dense divergences (must be 0)");
+    }
+
+    // (2) ρ > 0: the Woodbury cross-term vs the dense oracle, rel-tol.
+    {
+        let (n_users, n_models, rho) = (6usize, 4usize, 0.25f64);
+        report.fold_config(&format!("p2s rho-parity n_users={n_users} n_models={n_models} rho={rho}"));
+        let pts: Vec<Vec<f64>> = (0..n_models).map(|m| vec![m as f64 * 0.25]).collect();
+        let c = Matern52 { variance: 1.0, lengthscale: 0.8 }.gram(&pts);
+        let prior = KroneckerPrior::constant_mean(n_users, c, rho, 0.1).expect("Matérn gram is PSD");
+        let (mean, cov) = prior.dense_prior();
+        let mut dense = Gp::new(mean, cov);
+        let mut sharded = ShardedGp::new(prior);
+        let n = sharded.n_arms();
+        for k in 0..n / 2 {
+            let x = (k * 5 + 2) % n;
+            if dense.is_observed(x) {
+                continue;
+            }
+            let z = ((k * 37 + 11) % 97) as f64 / 97.0 - 0.5;
+            dense.observe(x, z);
+            sharded.observe(x, z);
+        }
+        let mut mismatches = 0usize;
+        for x in 0..n {
+            let (dm, ds) = (dense.posterior_mean(x), dense.posterior_std(x));
+            let (sm, ss) = (sharded.posterior_mean(x), sharded.posterior_std(x));
+            if !rel_close(dm, sm, 1e-7) || !rel_close(ds, ss, 1e-7) {
+                mismatches += 1;
+            }
+        }
+        total_mismatches += mismatches;
+        report.push_kpi(
+            format!("parity/sharded_vs_dense_rho_mismatches@u{n_users}x{n_models}"),
+            mismatches as f64,
+            Direction::LowerIsBetter,
+        );
+        println!(
+            "parity(ρ={rho}) u{n_users}x{n_models}: {mismatches}/{n} posteriors beyond 1e-7 relative (must be 0)"
+        );
+    }
+
+    if smoke {
+        return total_mismatches; // Scaling timings are wall-clock noise.
+    }
+
+    // (3) 10⁴–10⁶-tenant scaling: dense-infeasible sizes, sharded only.
+    let grid: Vec<usize> = std::env::var("MMGPEI_P2_USERS")
+        .ok()
+        .map(|s| {
+            s.split(',')
+                .map(|p| p.trim().replace('_', ""))
+                .filter(|p| !p.is_empty())
+                .map(|p| p.parse().unwrap_or_else(|_| panic!("MMGPEI_P2_USERS: bad tenant count {p:?}")))
+                .collect()
+        })
+        .unwrap_or_else(|| vec![10_000, 100_000]);
+    let n_models = 16usize;
+    let pts: Vec<Vec<f64>> = (0..n_models).map(|m| vec![m as f64 * 0.25]).collect();
+    let c = Matern52 { variance: 1.0, lengthscale: 0.8 }.gram(&pts);
+    let mut table = Table::new(&["tenants", "L (arms)", "ns/observe (ρ=0.25)", "decisions/s (ρ=0)"]);
+    let mut prev: Option<(usize, f64)> = None;
+    for &n_users in &grid {
+        report.fold_config(&format!("p2s n_users={n_users} n_models={n_models}"));
+        // (a) Bare sharded observe with cross-tenant coupling on: every
+        // observation lands on a fresh tenant, so each pays the worst
+        // case — cold-shard setup plus the Woodbury capacitance refresh.
+        let prior = KroneckerPrior::constant_mean(n_users, c.clone(), 0.25, 0.0).expect("Matérn gram is PSD");
+        let mut gp = ShardedGp::new(prior);
+        let k_obs = 2048.min(n_users);
+        let stride = n_users / k_obs;
+        let t0 = std::time::Instant::now();
+        for k in 0..k_obs {
+            let x = (k * stride) * n_models + (k % n_models);
+            let z = ((k * 37 + 11) % 97) as f64 / 97.0 - 0.5;
+            black_box(gp.observe(x, z));
+        }
+        let ns_observe = t0.elapsed().as_nanos() as f64 / k_obs as f64;
+        report.push_kpi(
+            format!("scaling/ns_per_observe@u{n_users}x{n_models}"),
+            ns_observe,
+            Direction::LowerIsBetter,
+        );
+        report.push_timing(TimingEntry::flat(
+            format!("p2s/ns_per_observe@u{n_users}x{n_models}"),
+            k_obs as u64,
+            ns_observe,
+        ));
+        // Acceptance gate: per-observe cost must grow sub-quadratically
+        // in the tenant count (per-tenant factorization makes it near
+        // constant; the quadratic envelope leaves wall-clock headroom).
+        if let Some((n_prev, ns_prev)) = prev {
+            let ratio = n_users as f64 / n_prev as f64;
+            if ratio > 1.0 && ns_observe > ns_prev * ratio * ratio {
+                eprintln!(
+                    "FAIL: ns/observe grew super-quadratically: {ns_prev:.0} @ u{n_prev} → {ns_observe:.0} @ u{n_users}"
+                );
+                total_mismatches += 1;
+            }
+        }
+        prev = Some((n_users, ns_observe));
+
+        // (b) Whole-backend serving throughput at ρ = 0: observe →
+        // incumbent fold → dirty rescore → tree argmax per decision, on
+        // the user-major membership the config path wires up.
+        let prior0 = KroneckerPrior::constant_mean(n_users, c.clone(), 0.0, 0.0).expect("Matérn gram is PSD");
+        let n_arms = prior0.n_arms();
+        let mut backend = NativeBackend::sharded_user_major(prior0, vec![1.0; n_arms]);
+        let mut selected = vec![false; n_arms];
+        let mut best = vec![0.0f64; n_users];
+        let dev = DeviceView::unit(0);
+        // Warm decision outside the timed loop: it pays the one-time
+        // full score assembly + tournament-tree build.
+        let warm = backend.eirate(&best, &selected, ScoreMode::CostRate, dev);
+        black_box(warm[warm.len() - 1]);
+        let n_dec = 2048.min(n_users);
+        let stride_d = n_users / n_dec;
+        let mut acc = 0.0;
+        let t0 = std::time::Instant::now();
+        for k in 0..n_dec {
+            let u = k * stride_d;
+            let x = u * n_models + ((k + 7) % n_models);
+            let z = ((k * 53 + 29) % 101) as f64 / 101.0 - 0.5;
+            backend.observe(x, z);
+            selected[x] = true;
+            best[u] = best[u].max(z);
+            let scores = backend.eirate(&best, &selected, ScoreMode::CostRate, dev);
+            acc += scores[scores.len() - 1];
+            black_box(backend.select_arm(&best, &selected, ScoreMode::CostRate, dev));
+        }
+        let elapsed = t0.elapsed();
+        black_box(acc);
+        let dps = n_dec as f64 / elapsed.as_secs_f64();
+        report.push_kpi(
+            format!("throughput/decisions_per_sec@u{n_users}x{n_models}"),
+            dps,
+            Direction::HigherIsBetter,
+        );
+        report.push_timing(TimingEntry::flat(
+            format!("p2s/ns_per_decision@u{n_users}x{n_models}"),
+            n_dec as u64,
+            elapsed.as_nanos() as f64 / n_dec as f64,
+        ));
+        table.row(vec![
+            n_users.to_string(),
+            n_arms.to_string(),
+            format!("{ns_observe:.0}"),
+            format!("{dps:.0}"),
+        ]);
+    }
+    println!("{}", table.to_markdown());
+    println!("(per-tenant shards keep ns/observe ~flat in tenants; dense O(L²) memory can't reach these sizes)");
     total_mismatches
 }
 

@@ -3,7 +3,9 @@
 //! aggregate the metrics the figures plot. Shared by the CLI launcher
 //! and the `cargo bench` figure harnesses.
 
-use crate::config::{Backend, ExperimentConfig};
+use crate::config::{Backend, ExperimentConfig, GpStructure};
+use crate::gp::KroneckerPrior;
+use crate::kernels::{Kernel, Matern52};
 use crate::metrics::{aggregate_curves, mean_std, p99, time_grid, StepCurve};
 use crate::pool::WorkerPool;
 use crate::prng::Rng;
@@ -99,6 +101,59 @@ pub fn make_instance(cfg: &ExperimentConfig, seed: u64) -> Result<(Problem, Trut
     }
 }
 
+/// Reconstruct the B(ρ) ⊗ C Kronecker factorization of the workload's
+/// dense prior, for the sharded GP store (`[gp] structure = "sharded"`).
+///
+/// The synthetic and churn workloads *generate* their dense
+/// `problem.prior_cov` from exactly this structure (shared Matérn-5/2
+/// model gram `C` over the grid `m · 0.25`, exchangeable user factor
+/// `B(ρ)` — ρ = 0 for synthetic, `churn.user_corr` under churn), so the
+/// prior built here is bitwise the same covariance the dense oracle
+/// factors; only the mean shift is instance-specific, hence the
+/// per-seed `problem` argument. Real datasets have empirical dense
+/// priors with no Kronecker factorization — config validation rejects
+/// them before this runs, and the error here is the backstop.
+pub fn sharded_prior_for(cfg: &ExperimentConfig, problem: &Problem) -> Result<KroneckerPrior, String> {
+    let (n_users, n_models, variance, lengthscale, rho) = if cfg.churn {
+        let c = &cfg.churn_cfg;
+        (c.n_users, c.n_models, c.variance, c.lengthscale, c.user_corr)
+    } else if cfg.dataset == "synthetic" {
+        let s = &cfg.synthetic;
+        (s.n_users, s.n_models, s.variance, s.lengthscale, 0.0)
+    } else {
+        return Err(format!(
+            "sharded GP prior: dataset {:?} has an empirical dense prior (only the synthetic and \
+             churn workloads are Kronecker-structured)",
+            cfg.dataset
+        ));
+    };
+    let pts: Vec<Vec<f64>> = (0..n_models).map(|m| vec![m as f64 * 0.25]).collect();
+    let model_cov = Matern52 { variance, lengthscale }.gram(&pts);
+    KroneckerPrior::new(n_users, model_cov, rho, problem.prior_mean.clone())
+}
+
+/// [`make_policy`] twin for `[gp] structure = "sharded"` sweeps.
+///
+/// `mdmt` gets the sharded native backend ([`MmGpEi::sharded`]); the
+/// GP-free baselines (`round-robin`, `random`, `oracle`) delegate to
+/// [`make_policy`] unchanged so cross-policy comparisons stay valid.
+/// Config validation guarantees no other policy name reaches a sharded
+/// sweep (they would silently score off a dense store), so the
+/// delegation arm never constructs a second GP-EI variant in practice.
+pub fn make_sharded_policy(
+    name: &str,
+    problem: &Problem,
+    truth: &Truth,
+    seed: u64,
+    policy_pool: &WorkerPool,
+    prior: &KroneckerPrior,
+) -> Result<Box<dyn Policy>, String> {
+    match name {
+        "mdmt" => Ok(Box::new(MmGpEi::sharded(problem, prior.clone()))),
+        _ => make_policy(name, problem, truth, seed, Backend::Native, policy_pool, None),
+    }
+}
+
 /// Aggregated results for one (policy, device-count) cell of the sweep.
 #[derive(Clone, Debug)]
 pub struct CellResult {
@@ -187,8 +242,12 @@ pub fn run_experiment(cfg: &ExperimentConfig) -> Result<ExperimentResults, Strin
             let seed_runs = pool.map_indexed(cfg.seeds as usize, |seed| {
                 let seed = seed as u64;
                 let (problem, truth) = make_instance(cfg, seed)?;
-                let mut policy =
-                    make_policy(policy_name, &problem, &truth, seed, cfg.backend, &policy_pool, None)?;
+                let mut policy = if cfg.gp_structure == GpStructure::Sharded {
+                    let prior = sharded_prior_for(cfg, &problem)?;
+                    make_sharded_policy(policy_name, &problem, &truth, seed, &policy_pool, &prior)?
+                } else {
+                    make_policy(policy_name, &problem, &truth, seed, cfg.backend, &policy_pool, None)?
+                };
                 Ok::<SimResult, String>(simulate(
                     &problem,
                     &truth,
@@ -287,8 +346,15 @@ pub fn run_churn_experiment(cfg: &ExperimentConfig) -> Result<ChurnExperimentRes
     // once, up front, instead of panicking inside the factory closure.
     {
         let (p0, t0, _) = churn_workload(&cfg.churn_cfg, 0x6C0);
-        for name in &cfg.policies {
-            make_policy(name, &p0, &t0, 0, cfg.backend, &policy_pool, None)?;
+        if cfg.gp_structure == GpStructure::Sharded {
+            let prior = sharded_prior_for(cfg, &p0)?;
+            for name in &cfg.policies {
+                make_sharded_policy(name, &p0, &t0, 0, &policy_pool, &prior)?;
+            }
+        } else {
+            for name in &cfg.policies {
+                make_policy(name, &p0, &t0, 0, cfg.backend, &policy_pool, None)?;
+            }
         }
     }
     let mut cells = Vec::new();
@@ -297,9 +363,19 @@ pub fn run_churn_experiment(cfg: &ExperimentConfig) -> Result<ChurnExperimentRes
             let seed_runs = pool.map_indexed(cfg.seeds as usize, |seed| {
                 let seed = seed as u64;
                 let (problem, truth, schedule) = churn_workload(&cfg.churn_cfg, 0x6C0 + seed);
+                // Per-seed: the Kronecker prior carries the instance's
+                // (seed-dependent) mean shift alongside the shared B ⊗ C.
+                let sharded_prior = (cfg.gp_structure == GpStructure::Sharded).then(|| {
+                    sharded_prior_for(cfg, &problem)
+                        .expect("sharded prior construction validated above")
+                });
                 let factory = |p: &Problem| -> Box<dyn Policy> {
-                    make_policy(policy_name, p, &truth, seed, cfg.backend, &policy_pool, None)
-                        .expect("policy construction validated above")
+                    match &sharded_prior {
+                        Some(prior) => make_sharded_policy(policy_name, p, &truth, seed, &policy_pool, prior)
+                            .expect("policy construction validated above"),
+                        None => make_policy(policy_name, p, &truth, seed, cfg.backend, &policy_pool, None)
+                            .expect("policy construction validated above"),
+                    }
                 };
                 simulate_churn(
                     &problem,
@@ -834,6 +910,55 @@ mod tests {
         assert!(report.timings.is_empty(), "smoke reports exclude wall-clock timings");
         // Churn-disabled configs must refuse the churn driver.
         assert!(run_churn_experiment(&quick_cfg()).is_err());
+    }
+
+    #[test]
+    fn sharded_structure_runs_synthetic_and_churn_sweeps() {
+        // Synthetic sweep (ρ = 0): the sharded store is bitwise the dense
+        // oracle, so the whole sweep's aggregates must match to the bit.
+        let mut cfg = quick_cfg();
+        cfg.dataset = "synthetic".into();
+        cfg.synthetic.n_users = 4;
+        cfg.synthetic.n_models = 3;
+        cfg.policies = vec!["mdmt".into()];
+        cfg.devices = vec![2];
+        cfg.seeds = 2;
+        let dense = run_experiment(&cfg).unwrap();
+        cfg.gp_structure = GpStructure::Sharded;
+        let sharded = run_experiment(&cfg).unwrap();
+        let (d, s) = (dense.cell("mdmt", 2).unwrap(), sharded.cell("mdmt", 2).unwrap());
+        assert_eq!(d.cumulative.0.to_bits(), s.cumulative.0.to_bits(), "ρ = 0 sharded ≠ dense");
+        for (dr, sr) in d.runs.iter().zip(&s.runs) {
+            assert_eq!(dr.n_decisions, sr.n_decisions);
+            assert_eq!(dr.makespan.to_bits(), sr.makespan.to_bits());
+        }
+        // The sharded mdmt policy advertises its backend in its label.
+        let (p, t) = make_instance(&cfg, 0).unwrap();
+        let prior = sharded_prior_for(&cfg, &p).unwrap();
+        let pol = make_sharded_policy("mdmt", &p, &t, 0, &WorkerPool::new(1), &prior).unwrap();
+        assert_eq!(pol.name(), "GP-EI-MDMT[sharded]");
+        let rr = make_sharded_policy("round-robin", &p, &t, 0, &WorkerPool::new(1), &prior).unwrap();
+        assert!(!rr.name().is_empty(), "baselines delegate to the dense factory");
+        // Churn sweep (ρ > 0): the sharded store serves arrivals and
+        // departures in place — no driver-side rebuilds.
+        let mut cfg = quick_cfg();
+        cfg.churn = true;
+        cfg.churn_cfg = crate::workload::ChurnConfig {
+            n_users: 6,
+            n_models: 4,
+            initial_users: 2,
+            ..Default::default()
+        };
+        cfg.policies = vec!["mdmt".into()];
+        cfg.devices = vec![2];
+        cfg.seeds = 1;
+        cfg.gp_structure = GpStructure::Sharded;
+        let res = run_churn_experiment(&cfg).unwrap();
+        let mdmt = res.cell("mdmt", 2).unwrap();
+        assert_eq!(mdmt.n_rebuilds, 0, "sharded mdmt serves churn in place");
+        assert!(mdmt.served_fraction > 0.0);
+        // Real datasets have no Kronecker factorization to shard.
+        assert!(sharded_prior_for(&quick_cfg(), &p).is_err());
     }
 
     #[test]

@@ -6,9 +6,10 @@ mod driver;
 
 pub use driver::{
     aggregate_cell, aggregate_churn_cell, aggregate_faults_cell, aggregate_fleet_cell,
-    make_instance, make_policy, run_churn_experiment, run_experiment, run_faults_experiment,
-    run_fleet_experiment, CellResult, ChurnCell, ChurnExperimentResults, ExperimentResults,
-    FaultsCell, FaultsExperimentResults, FleetCell, FleetExperimentResults,
+    make_instance, make_policy, make_sharded_policy, run_churn_experiment, run_experiment,
+    run_faults_experiment, run_fleet_experiment, sharded_prior_for, CellResult, ChurnCell,
+    ChurnExperimentResults, ExperimentResults, FaultsCell, FaultsExperimentResults, FleetCell,
+    FleetExperimentResults,
 };
 
 use std::collections::BTreeMap;

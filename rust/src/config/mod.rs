@@ -42,6 +42,32 @@ impl std::str::FromStr for Backend {
     }
 }
 
+/// Which data structure serves the native backend's GP posterior (the
+/// `[gp]` section's `structure` key).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum GpStructure {
+    /// One dense incremental-Cholesky factor over every arm — the
+    /// default, and the oracle all sharded parity gates compare against.
+    #[default]
+    Dense,
+    /// Per-tenant Cholesky shards + low-rank cross-tenant coupling
+    /// ([`crate::gp::ShardedGp`]) for the Kronecker-structured
+    /// multi-tenant priors the synthetic and churn workloads generate —
+    /// the 10⁴–10⁶-tenant scaling mode.
+    Sharded,
+}
+
+impl std::str::FromStr for GpStructure {
+    type Err = String;
+    fn from_str(s: &str) -> Result<Self, String> {
+        match s {
+            "dense" => Ok(GpStructure::Dense),
+            "sharded" => Ok(GpStructure::Sharded),
+            other => Err(format!("unknown gp structure {other:?} (dense|sharded)")),
+        }
+    }
+}
+
 /// Per-class cost-model knobs (the `[cost_model]` section): the
 /// parameters of a [`crate::problem::PerClassCost`], keyed by device
 /// class. Device classes are spread over the fleet round-robin
@@ -138,6 +164,11 @@ pub struct ExperimentConfig {
     pub cutoff: f64,
     /// Scoring backend for MM-GP-EI.
     pub backend: Backend,
+    /// GP posterior structure for the native backend (a `[gp]` TOML
+    /// section with `structure = "sharded"` opts in). Folded into
+    /// [`Self::canonical_string`] **only when sharded**, so dense
+    /// configs keep the `config_hash` their baselines were stamped with.
+    pub gp_structure: GpStructure,
     /// Worker threads for the seed sweep and policy-internal shard pools
     /// (`0` = resolve from `MMGPEI_THREADS`, serial when unset). An
     /// *execution* knob, not an experiment knob: results are byte-
@@ -200,6 +231,7 @@ impl Default for ExperimentConfig {
             horizon: None,
             cutoff: 0.01,
             backend: Backend::Native,
+            gp_structure: GpStructure::Dense,
             threads: 0,
             synthetic: SyntheticConfig::default(),
             churn: false,
@@ -263,6 +295,15 @@ impl ExperimentConfig {
             cfg.threads = usize::try_from(t).map_err(|_| {
                 format!("threads must be ≥ 0 (0 = resolve from MMGPEI_THREADS), got {t}")
             })?;
+        }
+        // A `[gp]` section selects the posterior structure behind the
+        // native backend; `structure = "sharded"` swaps the dense factor
+        // for the per-tenant sharded store.
+        if doc.section_names().any(|s| s == "gp") {
+            let gp = doc.section("gp");
+            if let Some(v) = gp.get("structure") {
+                cfg.gp_structure = v.as_str()?.parse()?;
+            }
         }
         // A `[churn]` section opts the experiment into the churn
         // scenario; its keys override the `ChurnConfig` defaults.
@@ -458,6 +499,13 @@ impl ExperimentConfig {
             self.synthetic.cost_range.0,
             self.synthetic.cost_range.1,
         );
+        if self.gp_structure == GpStructure::Sharded {
+            // Results-affecting only away from the dense default (ρ > 0
+            // posteriors agree to tolerance, not bitwise), so — like the
+            // scenario blocks — the key is appended only when it departs
+            // from the default and historical hashes stay put.
+            s.push_str("gp.structure=sharded\n");
+        }
         if self.churn {
             let c = &self.churn_cfg;
             s.push_str(&format!(
@@ -578,6 +626,37 @@ impl ExperimentConfig {
         }
         if !(self.cutoff > 0.0) {
             return Err("cutoff must be positive".into());
+        }
+        if self.gp_structure == GpStructure::Sharded {
+            if self.backend != Backend::Native {
+                return Err("[gp] structure = \"sharded\" requires backend = \"native\" (the AOT \
+                            XLA artifact has no sharded store)"
+                    .into());
+            }
+            if !self.churn && self.dataset != "synthetic" {
+                return Err(format!(
+                    "[gp] structure = \"sharded\" requires a Kronecker-structured prior, which \
+                     only the synthetic and churn workloads generate (dataset {:?} has an \
+                     empirical dense prior)",
+                    self.dataset
+                ));
+            }
+            if self.fleet || self.faults || self.cost_model {
+                return Err("[gp] structure = \"sharded\" cannot be combined with \
+                            [fleet]/[faults]/[cost_model] yet (sharded-prior construction for \
+                            those drivers is a ROADMAP open item)"
+                    .into());
+            }
+            for p in &self.policies {
+                if !["mdmt", "round-robin", "random", "oracle"].contains(&p.as_str()) {
+                    return Err(format!(
+                        "[gp] structure = \"sharded\" currently serves the \"mdmt\" policy (plus \
+                         the GP-free baselines round-robin/random/oracle); policy {p:?} would \
+                         silently fall back to the dense store — drop it or use structure = \
+                         \"dense\""
+                    ));
+                }
+            }
         }
         if self.churn {
             self.churn_cfg.validate()?;
@@ -1025,6 +1104,82 @@ n_models = 50
         assert_eq!(cfg.cost_model_cfg.n_classes(), 2);
         assert!(cfg.cost_model_cfg.limits().iter().all(|l| l.is_infinite()));
         assert!(cfg.policies.contains(&"mdmt-device".to_string()));
+    }
+
+    #[test]
+    fn gp_section_opts_in_and_hashes_conditionally() {
+        // No [gp] section → dense structure and — critically — the
+        // canonical string is unchanged, so dense configs keep the
+        // config_hash their checked-in baselines were stamped with.
+        let plain = ExperimentConfig::from_toml_str(SAMPLE).unwrap();
+        assert_eq!(plain.gp_structure, GpStructure::Dense);
+        assert!(!plain.canonical_string().contains("gp.structure"));
+        // An explicit dense selection is also hash-neutral.
+        let dense = ExperimentConfig::from_toml_str(
+            "[experiment]\ndataset = \"azure\"\n[gp]\nstructure = \"dense\"\n",
+        )
+        .unwrap();
+        assert_eq!(dense.gp_structure, GpStructure::Dense);
+        assert!(!dense.canonical_string().contains("gp.structure"));
+        let sharded = ExperimentConfig::from_toml_str(
+            "[experiment]\ndataset = \"synthetic\"\npolicies = [\"mdmt\"]\n\
+             [gp]\nstructure = \"sharded\"\n",
+        )
+        .unwrap();
+        assert_eq!(sharded.gp_structure, GpStructure::Sharded);
+        assert!(sharded.canonical_string().contains("gp.structure=sharded"));
+        // The structure is an experiment knob away from the default:
+        // ρ > 0 posteriors agree to tolerance, not bitwise.
+        let mut as_dense = sharded.clone();
+        as_dense.gp_structure = GpStructure::Dense;
+        assert_ne!(sharded.config_hash(), as_dense.config_hash());
+        // Churn + sharded is the headline pairing and must validate.
+        let churned = ExperimentConfig::from_toml_str(
+            "[experiment]\ndataset = \"azure\"\npolicies = [\"mdmt\"]\n\
+             [gp]\nstructure = \"sharded\"\n[churn]\nn_users = 8\n",
+        )
+        .unwrap();
+        assert!(churned.churn);
+        assert_eq!(churned.gp_structure, GpStructure::Sharded);
+    }
+
+    #[test]
+    fn gp_structure_pairings_are_validated() {
+        let err = ExperimentConfig::from_toml_str(
+            "[experiment]\ndataset = \"synthetic\"\n[gp]\nstructure = \"blocked\"\n",
+        )
+        .unwrap_err();
+        assert!(err.contains("unknown gp structure"), "{err}");
+        // Sharded needs the native backend…
+        let err = ExperimentConfig::from_toml_str(
+            "[experiment]\ndataset = \"synthetic\"\npolicies = [\"mdmt\"]\nbackend = \"xla\"\n\
+             [gp]\nstructure = \"sharded\"\n",
+        )
+        .unwrap_err();
+        assert!(err.contains("backend"), "{err}");
+        // …a Kronecker-structured workload…
+        let err = ExperimentConfig::from_toml_str(
+            "[experiment]\ndataset = \"azure\"\npolicies = [\"mdmt\"]\n[gp]\nstructure = \"sharded\"\n",
+        )
+        .unwrap_err();
+        assert!(err.contains("Kronecker"), "{err}");
+        // …no fleet/faults/cost_model pairing…
+        let err = ExperimentConfig::from_toml_str(
+            "[experiment]\ndataset = \"synthetic\"\npolicies = [\"mdmt\"]\n\
+             [gp]\nstructure = \"sharded\"\n[fleet]\nn_devices = 4\n",
+        )
+        .unwrap_err();
+        assert!(err.contains("fleet"), "{err}");
+        // …and no GP policies that would silently fall back to dense.
+        let err = ExperimentConfig::from_toml_str(
+            "[experiment]\ndataset = \"synthetic\"\npolicies = [\"mdmt\", \"mdmt-nocost\"]\n\
+             [gp]\nstructure = \"sharded\"\n",
+        )
+        .unwrap_err();
+        assert!(err.contains("mdmt-nocost"), "{err}");
+        assert_eq!("dense".parse::<GpStructure>().unwrap(), GpStructure::Dense);
+        assert_eq!("sharded".parse::<GpStructure>().unwrap(), GpStructure::Sharded);
+        assert!("kronecker".parse::<GpStructure>().is_err());
     }
 
     #[test]

@@ -23,12 +23,21 @@
 //! decision time. The `recompute_posterior_slow` method is the
 //! textbook-formula oracle used by the test suite to validate the
 //! incremental path.
+//!
+//! For multi-tenant priors with the Kronecker structure `B(ρ) ⊗ C`,
+//! [`ShardedGp`] (see its type-level docs) replaces the single dense
+//! factor with per-tenant Cholesky shards plus a low-rank cross-tenant
+//! coupling — `O(t_u²)` per observe regardless of the global observation
+//! count, which is what scales the scheduler to 10⁴–10⁶ tenants. The
+//! dense [`Gp`] remains the default and the parity oracle.
 
 mod fit;
+mod shard;
 mod stats;
 
 pub use fit::{fit_matern52, log_marginal_likelihood, log_marginal_likelihood_scratch, nelder_mead};
 pub use fit::{FittedMatern, LmlScratch};
+pub use shard::{KroneckerPrior, ShardedGp};
 pub use stats::{erf, erfc, expected_improvement, norm_cdf, norm_pdf, tau};
 
 use std::fmt;

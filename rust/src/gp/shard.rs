@@ -1,0 +1,1107 @@
+//! Sharded block-Kronecker GP posterior for 10⁴–10⁶ tenants.
+//!
+//! The dense [`Gp`](crate::gp::Gp) keeps ONE incremental Cholesky factor
+//! over *all* tenants' arms: `O(t²)` per observe and `O(n²)` prior
+//! storage, the wall between this repo and the million-tenant north star.
+//! The multi-tenant workloads, however, draw their prior from an exactly
+//! exploitable structure (`workload/churn.rs`,
+//! [`crate::kernels::kronecker_arm_cov`]):
+//!
+//! ```text
+//! K = B(ρ) ⊗ C,   B(ρ) = (1 − ρ)·I + ρ·𝟙𝟙ᵀ,   C = model gram (m × m)
+//! ```
+//!
+//! [`ShardedGp`] factors the observed gram `K_t = A + ρ·F Fᵀ` instead,
+//! where `A = blockdiag_u{(1 − ρ)·C[S_u, S_u]}` collects each tenant `u`'s
+//! observed models `S_u` and row `k` of `F` is `ℓ_{s_k}` — row `s_k` of
+//! `L_C = chol(C)` (so `F Fᵀ` reproduces the cross-tenant coupling
+//! `C[s, s']` exactly). Each tenant gets an independent **shard**: a mini
+//! Cholesky factor of `(1 − ρ)·C[S_u, S_u]` updated in `O(t_u²)` per
+//! observation — *never* `O(t²)` in the global observation count — plus
+//! `O(m)`-sized Woodbury feature vectors. The cross-tenant correction
+//! goes through the m × m capacitance `M = I + ρ·T`, `T = Σ_u W̃_uᵀ W̃_u`,
+//! `W̃_u = L_u⁻¹ F_u` (Woodbury identity), refreshed in `O(m³)` per
+//! observation and applied lazily at posterior read:
+//!
+//! ```text
+//! μ(a)  = local_mu(a) + ρ·(ℓ_i − h_a)ᵀ u,        u = M⁻¹ b̂,  b̂ = Σ_u W̃_uᵀ β_u
+//! σ²(a) = local_var(a) + ρ·[C_ii − 2·h_aᵀℓ_i − ρ·ℓ_iᵀTℓ_i + p_aᵀ M⁻¹ p_a]
+//! p_a   = h_a + ρ·Tℓ_i,   h_a = W̃_uᵀ (L_u⁻¹ k_local(a))
+//! ```
+//!
+//! Every per-read quantity that needs global state (`M⁻¹`, `T·ℓ_i`,
+//! `ℓ_iᵀu`, `ℓ_iᵀTℓ_i`, the cold-tenant tables) is recomputed *at observe
+//! time* into preallocated buffers, so posterior reads are pure `&self`
+//! with no scratch: `O(m)` for a mean, `O(m²)` for a variance, `O(1)` for
+//! a tenant with no observations — which is what keeps an all-dirty
+//! rescore pass `O(n)` at scale.
+//!
+//! **Determinism & parity.** All update loops run in a fixed order
+//! (tenant-local observation order, then a fixed-order global fold), and
+//! the tenant-local arithmetic mirrors `Gp::observe`'s float operations
+//! verbatim (`mul_add` folds, same append/jitter ladder, same pin-on-read
+//! contract). At `ρ = 0` the prior is block-diagonal and the dense
+//! factor's cross-tenant entries are exact zeros, so the sharded posterior
+//! is **bit-identical** to the dense one (`rust/tests/sharded_gp.rs`); at
+//! `ρ > 0` the two are exact-math equal and agree to tight relative
+//! tolerance. Bulk entry points ([`ShardedGp::observe_batch`],
+//! [`ShardedGp::posterior_snapshot`]) distribute tenant shards across the
+//! deterministic [`WorkerPool`] under its fixed-shard/fixed-merge
+//! contract, so results are byte-identical at any thread width.
+
+use super::{expected_improvement, GpError, DEFAULT_JITTER, MIN_PIVOT};
+use crate::linalg::{cholesky_jittered, cholesky_lower_in_place, dot, CholeskyFactor, Mat};
+use crate::pool::WorkerPool;
+use crate::problem::ArmId;
+
+/// The Kronecker prior `K = B(ρ) ⊗ C` a [`ShardedGp`] factors: an
+/// exchangeable cross-tenant similarity `B(ρ) = (1 − ρ)I + ρ𝟙𝟙ᵀ` over a
+/// shared per-model gram `C` (see
+/// [`crate::kernels::exchangeable_user_sim`] /
+/// [`crate::kernels::kronecker_arm_cov`], which build the same structure
+/// densely). Arms are user-major: arm `(u, i) = u·m + i`.
+#[derive(Clone, Debug)]
+pub struct KroneckerPrior {
+    n_users: usize,
+    /// `C` — the shared m × m model covariance.
+    model_cov: Mat,
+    /// `L_C` with `C = L_C L_Cᵀ`; its rows are the Woodbury feature
+    /// vectors `ℓ_i` (`C[i, j] = ℓ_iᵀ ℓ_j`).
+    chol_c: Mat,
+    rho: f64,
+    /// Per-arm prior mean, user-major (`n_users · m` entries).
+    prior_mean: Vec<f64>,
+}
+
+impl KroneckerPrior {
+    /// Build and validate a Kronecker prior. `rho ∈ [0, 1)` (the
+    /// exchangeable similarity is PD on that range — matching
+    /// [`crate::kernels::exchangeable_user_sim`]); `prior_mean` is
+    /// user-major with one entry per arm.
+    pub fn new(n_users: usize, model_cov: Mat, rho: f64, prior_mean: Vec<f64>) -> Result<Self, String> {
+        if n_users == 0 {
+            return Err("KroneckerPrior: n_users must be positive".into());
+        }
+        let m = model_cov.rows();
+        if m == 0 || model_cov.cols() != m {
+            return Err(format!(
+                "KroneckerPrior: model covariance must be square and non-empty, got {}x{}",
+                model_cov.rows(),
+                model_cov.cols()
+            ));
+        }
+        if !(0.0..1.0).contains(&rho) {
+            return Err(format!("KroneckerPrior: rho must be in [0, 1), got {rho}"));
+        }
+        if prior_mean.len() != n_users * m {
+            return Err(format!(
+                "KroneckerPrior: prior_mean has {} entries, expected n_users*m = {}",
+                prior_mean.len(),
+                n_users * m
+            ));
+        }
+        let (chol_c, _jitter) = cholesky_jittered(&model_cov, DEFAULT_JITTER)
+            .map_err(|e| format!("KroneckerPrior: model covariance is not PSD: {e}"))?;
+        Ok(KroneckerPrior { n_users, model_cov, chol_c, rho, prior_mean })
+    }
+
+    /// [`KroneckerPrior::new`] with a constant prior mean on every arm.
+    pub fn constant_mean(n_users: usize, model_cov: Mat, rho: f64, mean: f64) -> Result<Self, String> {
+        let n = n_users * model_cov.rows();
+        Self::new(n_users, model_cov, rho, vec![mean; n])
+    }
+
+    /// Number of tenants.
+    pub fn n_users(&self) -> usize {
+        self.n_users
+    }
+
+    /// Number of models per tenant (`m`).
+    pub fn n_models(&self) -> usize {
+        self.model_cov.rows()
+    }
+
+    /// Total number of arms (`n_users · m`).
+    pub fn n_arms(&self) -> usize {
+        self.n_users * self.model_cov.rows()
+    }
+
+    /// Cross-tenant correlation `ρ`.
+    pub fn rho(&self) -> f64 {
+        self.rho
+    }
+
+    /// The shared model covariance `C`.
+    pub fn model_cov(&self) -> &Mat {
+        &self.model_cov
+    }
+
+    /// Per-arm prior mean (user-major).
+    pub fn prior_mean(&self) -> &[f64] {
+        &self.prior_mean
+    }
+
+    /// Materialize the dense `(prior_mean, B(ρ) ⊗ C)` pair — the input a
+    /// dense [`Gp`](crate::gp::Gp) oracle takes. Entry-for-entry
+    /// bit-identical to [`crate::kernels::kronecker_arm_cov`] over
+    /// [`crate::kernels::exchangeable_user_sim`] (same `B_uv · C_ij`
+    /// products), so dense-vs-sharded parity gates can use either
+    /// construction. Dense-feasible sizes only: `O(n²)` memory.
+    pub fn dense_prior(&self) -> (Vec<f64>, Mat) {
+        let m = self.model_cov.rows();
+        let n = self.n_users * m;
+        let cov = Mat::from_fn(n, n, |a, b| {
+            let b_uv = if a / m == b / m { 1.0 } else { self.rho };
+            b_uv * self.model_cov[(a % m, b % m)]
+        });
+        (self.prior_mean.clone(), cov)
+    }
+}
+
+/// One tenant's independent posterior state: a mini Cholesky factor over
+/// the tenant's observed models (gram `(1 − ρ)·C[S_u, S_u]`) plus the
+/// Woodbury feature matrices. All float state lives in ONE flat buffer so
+/// the lazy per-tenant setup is a single allocation.
+#[derive(Clone, Debug)]
+struct Shard {
+    m: usize,
+    /// `L_u = chol((1 − ρ)·C[S_u, S_u])`, appended per observation.
+    chol: CholeskyFactor,
+    /// Model index of each tenant-local observation, in order.
+    obs_models: Vec<usize>,
+    /// Flat storage, layout `[w | wt | h | beta | local_mu | local_var]`:
+    /// `w[i·m + k] = (L_u⁻¹ k_local(i))_k` per model i, `wt[k·m + j]` =
+    /// row k of `W̃_u = L_u⁻¹ F_u`, `h[i·m + j] = (W̃_uᵀ w_i)_j`, `beta =
+    /// L_u⁻¹ (z − μ₀)`, and the tenant-local posterior accumulators.
+    data: Vec<f64>,
+}
+
+impl Shard {
+    /// Lazy one-time per-tenant setup (first observation of the tenant).
+    fn boxed(m: usize) -> Box<Shard> {
+        // pallas-lint: allow(R6) — lazy one-time shard setup: a tenant's first observation allocates its O(m²) state once and never again; the steady-state observe path is allocation-free (tests/alloc_counter.rs warms every tenant before measuring).
+        let data = vec![0.0; 3 * m * m + 3 * m];
+        // pallas-lint: allow(R6) — same lazy one-time shard setup as `data` above.
+        let obs_models = vec![0usize; m];
+        let chol = CholeskyFactor::with_capacity(m);
+        // pallas-lint: allow(R6) — same lazy one-time shard setup as `data` above (one box per tenant, amortized over its lifetime).
+        Box::new(Shard { m, chol, obs_models, data })
+    }
+
+    #[inline]
+    fn w_row(&self, i: usize) -> &[f64] {
+        &self.data[i * self.m..i * self.m + self.m]
+    }
+
+    #[inline]
+    fn wt_row(&self, k: usize) -> &[f64] {
+        let m = self.m;
+        &self.data[m * m + k * m..m * m + k * m + m]
+    }
+
+    #[inline]
+    fn h_row(&self, i: usize) -> &[f64] {
+        let m = self.m;
+        &self.data[2 * m * m + i * m..2 * m * m + i * m + m]
+    }
+
+    #[inline]
+    fn local_mu(&self, i: usize) -> f64 {
+        self.data[3 * self.m * self.m + self.m + i]
+    }
+
+    #[inline]
+    fn local_var(&self, i: usize) -> f64 {
+        self.data[3 * self.m * self.m + 2 * self.m + i]
+    }
+
+    /// One tenant-local observation of model `s` with value `z`
+    /// (`prior_mean_x` = the observed arm's prior mean). Mirrors the
+    /// float-operation sequence of the dense `Gp::observe` restricted to
+    /// this tenant's block — same `append_jittered_min_pivot` ladder,
+    /// same `mul_add` β/w folds, same `μ += w·β` / `σ² −= w²` updates over
+    /// *all* m models (eager even for disabled arms: bit-identical to the
+    /// dense enable-time catch-up) — then extends the Woodbury features
+    /// (`wt` row, `h` rows) when `ρ > 0`. Returns `(t, β_t)` where `t` is
+    /// the tenant-local observation index. Allocation-free.
+    fn ingest(
+        &mut self,
+        prior: &KroneckerPrior,
+        s: usize,
+        z: f64,
+        prior_mean_x: f64,
+        cross_buf: &mut [f64],
+    ) -> (usize, f64) {
+        let m = self.m;
+        let rho = prior.rho;
+        let scale = 1.0 - rho;
+        let t = self.chol.dim();
+        let crow = prior.model_cov.row(s);
+        // Cross-covariances against the tenant's prior observations, in
+        // tenant-local observation order (the shard's gram is
+        // (1 − ρ)·C[S_u, S_u]).
+        for (dst, &sk) in cross_buf[..t].iter_mut().zip(&self.obs_models[..t]) {
+            *dst = scale * crow[sk];
+        }
+        let diag = scale * crow[s];
+        // Same min-pivot append (and therefore the same jitter ladder and
+        // NaN guard) as the dense GP — see `Gp::observe_inner`.
+        let (ltt, _jitter) = self
+            .chol
+            .append_jittered_min_pivot(&cross_buf[..t], diag, DEFAULT_JITTER, MIN_PIVOT)
+            // pallas-lint: allow(R5) — mirrors the dense Gp::observe contract: KroneckerPrior::new verified C is PSD and min-pivot jittering absorbs rank deficiency, so failure means the prior itself is broken.
+            .expect("kernel append failed: model covariance irrecoverably non-PSD");
+        let lrow = &self.chol.row(t)[..t];
+        let (w_zone, rest) = self.data.split_at_mut(m * m);
+        let (wt_zone, rest) = rest.split_at_mut(m * m);
+        let (h_zone, rest) = rest.split_at_mut(m * m);
+        let (beta_zone, rest) = rest.split_at_mut(m);
+        let (mu_zone, var_zone) = rest.split_at_mut(m);
+        // New last entry of β: solve row t of L_u·β = (z − μ₀).
+        let mut acc = z - prior_mean_x;
+        for (l, b) in lrow.iter().zip(&beta_zone[..t]) {
+            acc = l.mul_add(-b, acc);
+        }
+        let beta_t = acc / ltt;
+        beta_zone[t] = beta_t;
+        self.obs_models[t] = s;
+        if rho > 0.0 {
+            // Row t of W̃_u = L_u⁻¹ F_u: forward-substitute ℓ_s against
+            // the earlier W̃ rows (fixed order — deterministic).
+            let (prev, tail) = wt_zone.split_at_mut(t * m);
+            let wt_new = &mut tail[..m];
+            wt_new.copy_from_slice(prior.chol_c.row(s));
+            for (k, l) in lrow.iter().enumerate() {
+                let prow = &prev[k * m..k * m + m];
+                for (dst, p) in wt_new.iter_mut().zip(prow) {
+                    *dst = l.mul_add(-p, *dst);
+                }
+            }
+            for v in wt_new.iter_mut() {
+                *v /= ltt;
+            }
+        }
+        // Extend every model's w by one entry and fold into the local
+        // μ/σ² accumulators — the same contiguous sweep as the dense GP's
+        // per-arm loop, restricted to this tenant's m models.
+        for i in 0..m {
+            let wa = &mut w_zone[i * m..i * m + t + 1];
+            let mut num = scale * crow[i];
+            for (l, w) in lrow.iter().zip(&wa[..t]) {
+                num = l.mul_add(-w, num);
+            }
+            let w_new = num / ltt;
+            wa[t] = w_new;
+            mu_zone[i] += w_new * beta_t;
+            var_zone[i] -= w_new * w_new;
+            if rho > 0.0 {
+                // h_i ← h_i + w_i[t]·W̃_t (incremental W̃ᵀw).
+                let wt_new = &wt_zone[t * m..t * m + m];
+                let hrow = &mut h_zone[i * m..i * m + m];
+                for (hd, wv) in hrow.iter_mut().zip(wt_new) {
+                    *hd = w_new.mul_add(*wv, *hd);
+                }
+            }
+        }
+        (t, beta_t)
+    }
+}
+
+/// Per-tenant work item for [`ShardedGp::observe_batch`]: the tenant's
+/// shard (taken out of the table so worker chunks own disjoint state),
+/// its observations, and the `(t, β_t)` results the serial global fold
+/// consumes afterwards.
+struct TenantWork {
+    user: usize,
+    shard: Box<Shard>,
+    /// `(batch position, model, z, prior mean of the arm)` per observation.
+    items: Vec<(usize, usize, f64, f64)>,
+    /// `(t, β_t)` per item, filled by the worker.
+    out: Vec<(usize, f64)>,
+}
+
+/// Sharded block-Kronecker GP posterior: the scale-out twin of the dense
+/// [`Gp`](crate::gp::Gp) for priors of the form `B(ρ) ⊗ C` (see the
+/// `gp/shard.rs` module docs for the factorization). Mirrors the dense
+/// observe/posterior/EI/churn surface; selected behind
+/// `[gp] structure = "sharded"` (the dense path remains the default and
+/// the correctness oracle).
+#[derive(Clone, Debug)]
+pub struct ShardedGp {
+    prior: KroneckerPrior,
+    n_models: usize,
+    n_arms: usize,
+    /// Lazily created per-tenant shards (`None` until the tenant's first
+    /// observation — a cold tenant costs 8 bytes and reads in O(1)).
+    shards: Vec<Option<Box<Shard>>>,
+    observed: Vec<bool>,
+    /// Observed value per arm (valid where `observed`); posterior reads
+    /// pin observed arms to `(z, 0)` exactly like the dense GP.
+    observed_z: Vec<f64>,
+    enabled: Vec<bool>,
+    /// Dense ascending list of enabled arms (the ρ > 0 dirty superset).
+    enabled_arms: Vec<ArmId>,
+    /// Frozen `(arm, μ, σ²)` snapshots for *disabled, unobserved* arms,
+    /// sorted by arm: a departed tenant's posterior reads stay at their
+    /// disable-time values (the dense GP freezes state the same way) while
+    /// the shard keeps accumulating underneath — re-enabling just drops
+    /// the snapshot, which is the lazy form of the dense bit-exact
+    /// catch-up.
+    frozen: Vec<(ArmId, f64, f64)>,
+    /// ρ = 0 dirty set of the most recent observation (`changed_len`
+    /// entries; capacity m — tenant-local moves only).
+    changed_arms: Vec<ArmId>,
+    changed_len: usize,
+    /// Scratch for the tenant-local cross-covariance vector.
+    cross_buf: Vec<f64>,
+    /// Global observation count.
+    t_total: usize,
+    /// `T = Σ_u W̃_uᵀW̃_u` (m × m, rank-1 updated per observation in
+    /// arrival order — deterministic).
+    tmat: Vec<f64>,
+    /// `b̂ = Σ_u W̃_uᵀβ_u`.
+    bhat: Vec<f64>,
+    /// Scratch for the in-place factorization of `M = I + ρT`.
+    mfac: Vec<f64>,
+    /// `D = M⁻¹`, recomputed per observation (all posterior reads are
+    /// then pure `&self` lookups — no solve at read time).
+    dmat: Vec<f64>,
+    /// `u = M⁻¹ b̂`.
+    ucap: Vec<f64>,
+    /// `tl[i·m + j] = (T·ℓ_i)_j` per model i.
+    tl: Vec<f64>,
+    /// `g_mu[i] = ℓ_iᵀ u` — the cold-tenant mean correction.
+    g_mu: Vec<f64>,
+    /// `g_q[i] = ℓ_iᵀ T ℓ_i`.
+    g_q: Vec<f64>,
+    /// Cold-tenant posterior variance per model:
+    /// `C_ii − ρ²·g_q[i] + ρ³·(Tℓ_i)ᵀD(Tℓ_i)` — an O(1) read.
+    cold_var: Vec<f64>,
+    /// Forward-solve scratch for the explicit `M⁻¹` columns.
+    solve_buf: Vec<f64>,
+    /// Change-reporting tolerance (same contract as the dense GP).
+    change_tol: f64,
+}
+
+impl ShardedGp {
+    /// Fresh sharded GP over the given Kronecker prior. Allocates the
+    /// O(n) per-arm tables and the O(m²) global coupling state up front;
+    /// per-tenant shards (O(m²) each) are created lazily on the tenant's
+    /// first observation.
+    pub fn new(prior: KroneckerPrior) -> Self {
+        let m = prior.n_models();
+        let n = prior.n_arms();
+        let mut cold_var = vec![0.0; m];
+        for (i, cv) in cold_var.iter_mut().enumerate() {
+            *cv = prior.model_cov[(i, i)];
+        }
+        let mut dmat = vec![0.0; m * m];
+        for j in 0..m {
+            dmat[j * m + j] = 1.0;
+        }
+        let mut enabled_arms = Vec::with_capacity(n);
+        enabled_arms.extend(0..n);
+        ShardedGp {
+            n_models: m,
+            n_arms: n,
+            shards: (0..prior.n_users).map(|_| None).collect(),
+            observed: vec![false; n],
+            observed_z: vec![0.0; n],
+            enabled: vec![true; n],
+            enabled_arms,
+            frozen: Vec::new(),
+            changed_arms: vec![0; m],
+            changed_len: 0,
+            cross_buf: vec![0.0; m],
+            t_total: 0,
+            tmat: vec![0.0; m * m],
+            bhat: vec![0.0; m],
+            mfac: vec![0.0; m * m],
+            dmat,
+            ucap: vec![0.0; m],
+            tl: vec![0.0; m * m],
+            g_mu: vec![0.0; m],
+            g_q: vec![0.0; m],
+            cold_var,
+            solve_buf: vec![0.0; m],
+            change_tol: 0.0,
+            prior,
+        }
+    }
+
+    /// The prior this posterior factors.
+    pub fn prior(&self) -> &KroneckerPrior {
+        &self.prior
+    }
+
+    /// Total number of arms.
+    pub fn n_arms(&self) -> usize {
+        self.n_arms
+    }
+
+    /// Number of tenants.
+    pub fn n_users(&self) -> usize {
+        self.prior.n_users
+    }
+
+    /// Number of models per tenant.
+    pub fn n_models(&self) -> usize {
+        self.n_models
+    }
+
+    /// Number of observations so far.
+    pub fn n_observed(&self) -> usize {
+        self.t_total
+    }
+
+    /// Number of enabled arms.
+    pub fn n_enabled(&self) -> usize {
+        self.enabled_arms.len()
+    }
+
+    /// Whether arm `x` has been observed.
+    pub fn is_observed(&self, x: ArmId) -> bool {
+        self.observed[x]
+    }
+
+    /// Whether arm `x` is enabled (its posterior is live).
+    pub fn is_enabled(&self, x: ArmId) -> bool {
+        self.enabled[x]
+    }
+
+    /// Prior mean of arm `x`.
+    pub fn prior_mean(&self, x: ArmId) -> f64 {
+        self.prior.prior_mean[x]
+    }
+
+    /// Set the change-reporting tolerance (see the dense
+    /// [`Gp::set_change_tolerance`](crate::gp::Gp::set_change_tolerance);
+    /// 0.0 = exact reporting, required for bit-stable caching).
+    pub fn set_change_tolerance(&mut self, tol: f64) {
+        self.change_tol = tol;
+    }
+
+    /// Current change-reporting tolerance.
+    pub fn change_tolerance(&self) -> f64 {
+        self.change_tol
+    }
+
+    /// Lazily create tenant `u`'s shard (one allocation per tenant,
+    /// amortized over its lifetime).
+    fn ensure_shard(&mut self, u: usize) {
+        if self.shards[u].is_some() {
+            return;
+        }
+        let m = self.n_models;
+        let scale = 1.0 - self.prior.rho;
+        let mut sh = Shard::boxed(m);
+        let base = u * m;
+        let off = 3 * m * m;
+        for i in 0..m {
+            // local_mu starts at the prior mean, local_var at the
+            // tenant-local prior variance (1 − ρ)·C_ii — exactly the
+            // dense initialization when ρ = 0.
+            sh.data[off + m + i] = self.prior.prior_mean[base + i];
+            sh.data[off + 2 * m + i] = scale * self.prior.model_cov[(i, i)];
+        }
+        self.shards[u] = Some(sh);
+    }
+
+    /// Refresh every global read table from the current `(T, b̂)`:
+    /// factor `M = I + ρT` in place, invert it explicitly (`D = M⁻¹`),
+    /// and precompute `u`, `T·ℓ_i`, `ℓ_iᵀu`, `ℓ_iᵀTℓ_i` and the
+    /// cold-tenant variances. `O(m³)`, allocation-free, run once per
+    /// observation (ρ > 0 only) so posterior reads stay pure `&self`.
+    fn refresh_cap_tables(&mut self) {
+        let m = self.n_models;
+        let rho = self.prior.rho;
+        let Self { prior, tmat, bhat, mfac, dmat, ucap, tl, g_mu, g_q, cold_var, solve_buf, .. } = self;
+        for j in 0..m {
+            for k in 0..m {
+                let v = rho * tmat[j * m + k];
+                mfac[j * m + k] = if j == k { 1.0 + v } else { v };
+            }
+        }
+        cholesky_lower_in_place(mfac, m)
+            // pallas-lint: allow(R5) — M = I + ρT with T = ΣW̃ᵀW̃ positive semidefinite is positive definite by construction (unit diagonal shift); failure means the accumulators were corrupted, which is worth aborting on.
+            .expect("capacitance I + rho*T must be positive definite");
+        // D = M⁻¹ column by column: forward solve L y = e_c into scratch,
+        // back-substitute Lᵀ x = y straight into D's column c.
+        for c in 0..m {
+            for i in 0..m {
+                let mut acc = if i == c { 1.0 } else { 0.0 };
+                for k in 0..i {
+                    acc = mfac[i * m + k].mul_add(-solve_buf[k], acc);
+                }
+                solve_buf[i] = acc / mfac[i * m + i];
+            }
+            for i in (0..m).rev() {
+                let mut acc = solve_buf[i];
+                for k in i + 1..m {
+                    acc = mfac[k * m + i].mul_add(-dmat[k * m + c], acc);
+                }
+                dmat[i * m + c] = acc / mfac[i * m + i];
+            }
+        }
+        // u = D·b̂.
+        for j in 0..m {
+            let drow = &dmat[j * m..j * m + m];
+            let mut acc = 0.0;
+            for (dv, bv) in drow.iter().zip(bhat.iter()) {
+                acc = dv.mul_add(*bv, acc);
+            }
+            ucap[j] = acc;
+        }
+        // Per-model read tables.
+        for i in 0..m {
+            let li = prior.chol_c.row(i);
+            {
+                let tli = &mut tl[i * m..i * m + m];
+                for (j, dst) in tli.iter_mut().enumerate() {
+                    let trow = &tmat[j * m..j * m + m];
+                    let mut acc = 0.0;
+                    for (tv, lv) in trow.iter().zip(li) {
+                        acc = tv.mul_add(*lv, acc);
+                    }
+                    *dst = acc;
+                }
+            }
+            let tli = &tl[i * m..i * m + m];
+            g_mu[i] = dot(li, &ucap[..]);
+            g_q[i] = dot(li, tli);
+            // Cold-tenant variance: C_ii − ρ²·g_q + ρ³·tlᵀDtl (always
+            // ≤ C_ii: per eigencomponent ρλ/(1 + ρλ) ≤ 1).
+            let mut quad = 0.0;
+            for (j, tv) in tli.iter().enumerate() {
+                let drow = &dmat[j * m..j * m + m];
+                let mut racc = 0.0;
+                for (dv, tk) in drow.iter().zip(tli) {
+                    racc = dv.mul_add(*tk, racc);
+                }
+                quad = tv.mul_add(racc, quad);
+            }
+            cold_var[i] = prior.model_cov[(i, i)] - rho * rho * g_q[i] + rho * rho * rho * quad;
+        }
+    }
+
+    /// Shared observation implementation; fills the ρ = 0 dirty set.
+    fn observe_inner(&mut self, x: ArmId, z: f64) -> Result<(), GpError> {
+        if self.observed[x] {
+            return Err(GpError::AlreadyObserved(x));
+        }
+        assert!(
+            self.enabled[x],
+            "observation of disabled arm {x}: the driver must not dispatch a departed tenant's arms"
+        );
+        let m = self.n_models;
+        let u = x / m;
+        let s = x % m;
+        self.ensure_shard(u);
+        let rho = self.prior.rho;
+        let tol = self.change_tol;
+        self.t_total += 1;
+        let Self { prior, shards, cross_buf, changed_arms, changed_len, enabled, observed, observed_z, tmat, bhat, .. } =
+            self;
+        // pallas-lint: allow(R5) — ensure_shard above just filled this tenant's slot; an empty slot here is state corruption worth aborting on.
+        let shard = shards[u].as_deref_mut().expect("tenant shard just ensured");
+        let (t, beta_t) = shard.ingest(prior, s, z, prior.prior_mean[x], cross_buf);
+        observed[x] = true;
+        observed_z[x] = z;
+        if rho == 0.0 {
+            // Tenant-local dirty set, identical to the dense GP's: the
+            // moved arms of the observing tenant in ascending order (same
+            // d_mu/d_var threshold arithmetic), then the observed arm.
+            let base = u * m;
+            let mut len = 0usize;
+            for i in 0..m {
+                let a = base + i;
+                if i == s || !enabled[a] {
+                    continue;
+                }
+                let w_new = shard.data[i * m + t];
+                let d_mu = w_new * beta_t;
+                let d_var = w_new * w_new;
+                if d_mu.abs() > tol || d_var > tol {
+                    changed_arms[len] = a;
+                    len += 1;
+                }
+            }
+            changed_arms[len] = x;
+            *changed_len = len + 1;
+        } else {
+            // Global coupling: fold the new W̃ row into (T, b̂) — rank-1,
+            // in arrival order — then refresh the read tables. Every
+            // enabled arm's posterior moves; `dirty_view` reports the
+            // enabled list itself.
+            *changed_len = 0;
+            let wt_new = shard.wt_row(t);
+            for j in 0..m {
+                let wj = wt_new[j];
+                bhat[j] = wj.mul_add(beta_t, bhat[j]);
+                let trow = &mut tmat[j * m..j * m + m];
+                for (dst, wk) in trow.iter_mut().zip(wt_new) {
+                    *dst = wj.mul_add(*wk, *dst);
+                }
+            }
+            self.refresh_cap_tables();
+        }
+        Ok(())
+    }
+
+    /// The dirty set of the most recent observation: at ρ = 0 the exact
+    /// dense-equal tenant-local set; at ρ > 0 every enabled arm (the
+    /// global coupling moves every posterior — a conservative, exact
+    /// superset).
+    fn dirty_view(&self) -> &[ArmId] {
+        if self.prior.rho > 0.0 {
+            &self.enabled_arms
+        } else {
+            &self.changed_arms[..self.changed_len]
+        }
+    }
+
+    /// Incorporate the observation `z(x)` in `O(t_u² + m³)` — independent
+    /// of the global observation count. Returns the arms whose posterior
+    /// moved beyond the change tolerance (dense-equal tenant-local set at
+    /// ρ = 0; every enabled arm — a conservative, exact superset — at
+    /// ρ > 0). Repeat observation is logged to stderr and skipped with an
+    /// empty dirty set, mirroring the dense [`Gp::observe`](crate::gp::Gp::observe).
+    pub fn observe(&mut self, x: ArmId, z: f64) -> &[ArmId] {
+        match self.observe_inner(x, z) {
+            Ok(()) => self.dirty_view(),
+            Err(e) => {
+                eprintln!("mmgpei::gp: ignoring observation: {e}");
+                &[]
+            }
+        }
+    }
+
+    /// Fallible form of [`ShardedGp::observe`]: returns `Err` instead of
+    /// logging when the arm was already observed.
+    pub fn try_observe(&mut self, x: ArmId, z: f64) -> Result<&[ArmId], GpError> {
+        self.observe_inner(x, z)?;
+        Ok(self.dirty_view())
+    }
+
+    /// Bulk observation: tenant-local updates run in parallel across the
+    /// [`WorkerPool`] (each tenant's shard is independent state), then the
+    /// global `(T, b̂)` rank-1 folds are applied serially in the original
+    /// batch order and the read tables refreshed once. The final state is
+    /// **bit-identical** to calling [`ShardedGp::observe`] on the batch in
+    /// order, at any thread width (fixed-shard/fixed-merge contract).
+    ///
+    /// All-or-nothing: any already-observed, batch-duplicated, or
+    /// disabled arm fails the whole batch before any state changes.
+    pub fn observe_batch(&mut self, pool: &WorkerPool, obs: &[(ArmId, f64)]) -> Result<(), GpError> {
+        let m = self.n_models;
+        for &(x, _) in obs {
+            if self.observed[x] {
+                return Err(GpError::AlreadyObserved(x));
+            }
+            assert!(
+                self.enabled[x],
+                "observation of disabled arm {x}: the driver must not dispatch a departed tenant's arms"
+            );
+        }
+        let mut order: Vec<usize> = (0..obs.len()).collect();
+        order.sort_unstable_by_key(|&k| (obs[k].0, k));
+        for pair in order.windows(2) {
+            if obs[pair[0]].0 == obs[pair[1]].0 {
+                return Err(GpError::AlreadyObserved(obs[pair[0]].0));
+            }
+        }
+        // Group by tenant (ascending user, batch order within a tenant),
+        // taking each shard out of the table so chunks own disjoint state.
+        order.sort_unstable_by_key(|&k| (obs[k].0 / m, k));
+        let mut groups: Vec<TenantWork> = Vec::new();
+        for &k in &order {
+            let (x, z) = obs[k];
+            let u = x / m;
+            if groups.last().map(|g| g.user) != Some(u) {
+                self.ensure_shard(u);
+                // pallas-lint: allow(R5) — ensure_shard above just filled this tenant's slot; an empty slot is state corruption worth aborting on.
+                let shard = self.shards[u].take().expect("tenant shard just ensured");
+                groups.push(TenantWork { user: u, shard, items: Vec::new(), out: Vec::new() });
+            }
+            // pallas-lint: allow(R5) — the loop above pushed at least one group.
+            let g = groups.last_mut().expect("group just pushed");
+            g.items.push((k, x % m, z, self.prior.prior_mean[x]));
+        }
+        // Parallel tenant-local phase: deterministic regardless of chunk
+        // boundaries — each tenant's update touches only its own shard.
+        let prior = &self.prior;
+        pool.for_each_chunk_mut(&mut groups, |chunk| {
+            let mut cross = vec![0.0; m];
+            for tw in chunk {
+                for &(_, s, z, mu0) in &tw.items {
+                    let r = tw.shard.ingest(prior, s, z, mu0, &mut cross);
+                    tw.out.push(r);
+                }
+            }
+        });
+        // Reinstall the shards, mark observations, and collect the per-
+        // observation (tenant, t, β_t) triples in batch order.
+        let mut per_obs: Vec<(usize, usize, f64)> = vec![(0, 0, 0.0); obs.len()];
+        for tw in groups {
+            for (&(k, _, z, _), &(t, beta_t)) in tw.items.iter().zip(&tw.out) {
+                per_obs[k] = (tw.user, t, beta_t);
+                let x = obs[k].0;
+                self.observed[x] = true;
+                self.observed_z[x] = z;
+            }
+            self.shards[tw.user] = Some(tw.shard);
+        }
+        self.t_total += obs.len();
+        self.changed_len = 0;
+        if self.prior.rho > 0.0 {
+            // Serial global fold in the original batch order: the same
+            // rank-1 update sequence sequential observes would have run,
+            // so (T, b̂) — and every table derived from them — match the
+            // sequential path bit for bit.
+            let Self { shards, tmat, bhat, .. } = self;
+            for &(u, t, beta_t) in &per_obs {
+                // pallas-lint: allow(R5) — the shard was reinstalled by the loop above.
+                let shard = shards[u].as_deref().expect("tenant shard reinstalled");
+                let wt_new = shard.wt_row(t);
+                for j in 0..m {
+                    let wj = wt_new[j];
+                    bhat[j] = wj.mul_add(beta_t, bhat[j]);
+                    let trow = &mut tmat[j * m..j * m + m];
+                    for (dst, wk) in trow.iter_mut().zip(wt_new) {
+                        *dst = wj.mul_add(*wk, *dst);
+                    }
+                }
+            }
+            self.refresh_cap_tables();
+        }
+        Ok(())
+    }
+
+    /// Posterior mean of arm `x`: pinned `z` for observed arms, the
+    /// frozen snapshot for disabled arms, else the lazy sharded read
+    /// (`O(1)` cold tenant, `O(m)` warm).
+    pub fn posterior_mean(&self, x: ArmId) -> f64 {
+        if self.observed[x] {
+            return self.observed_z[x];
+        }
+        if !self.enabled[x] {
+            if let Ok(k) = self.frozen.binary_search_by(|e| e.0.cmp(&x)) {
+                return self.frozen[k].1;
+            }
+        }
+        self.live_mean(x)
+    }
+
+    /// Posterior standard deviation of arm `x` (0 for observed arms,
+    /// frozen for disabled arms; variance clamped at 0 like the dense GP).
+    pub fn posterior_std(&self, x: ArmId) -> f64 {
+        self.posterior_var(x).max(0.0).sqrt()
+    }
+
+    fn posterior_var(&self, x: ArmId) -> f64 {
+        if self.observed[x] {
+            return 0.0;
+        }
+        if !self.enabled[x] {
+            if let Ok(k) = self.frozen.binary_search_by(|e| e.0.cmp(&x)) {
+                return self.frozen[k].2;
+            }
+        }
+        self.live_var(x)
+    }
+
+    /// Live (unpinned, unfrozen) posterior mean.
+    fn live_mean(&self, x: ArmId) -> f64 {
+        let m = self.n_models;
+        let (u, i) = (x / m, x % m);
+        let rho = self.prior.rho;
+        match &self.shards[u] {
+            Some(sh) => {
+                let local = sh.local_mu(i);
+                if rho == 0.0 {
+                    local
+                } else {
+                    // μ = local + ρ·(ℓ_i − h_a)ᵀu, with ℓ_iᵀu precomputed.
+                    let h = sh.h_row(i);
+                    let mut hc = 0.0;
+                    for (hv, uv) in h.iter().zip(&self.ucap) {
+                        hc = hv.mul_add(*uv, hc);
+                    }
+                    rho.mul_add(self.g_mu[i] - hc, local)
+                }
+            }
+            None => {
+                let mu0 = self.prior.prior_mean[x];
+                if rho == 0.0 {
+                    mu0
+                } else {
+                    rho.mul_add(self.g_mu[i], mu0)
+                }
+            }
+        }
+    }
+
+    /// Live (unpinned, unfrozen) posterior variance.
+    fn live_var(&self, x: ArmId) -> f64 {
+        let m = self.n_models;
+        let (u, i) = (x / m, x % m);
+        let rho = self.prior.rho;
+        match &self.shards[u] {
+            Some(sh) => {
+                let lv = sh.local_var(i);
+                if rho == 0.0 {
+                    return lv;
+                }
+                // σ² = local + ρ·[C_ii − 2hᵀℓ_i − ρ·g_q + pᵀDp],
+                // p = h + ρ·Tℓ_i — all from precomputed tables, O(m²).
+                let h = sh.h_row(i);
+                let li = self.prior.chol_c.row(i);
+                let tli = &self.tl[i * m..i * m + m];
+                let mut hl = 0.0;
+                for (hv, lv2) in h.iter().zip(li) {
+                    hl = hv.mul_add(*lv2, hl);
+                }
+                let mut quad = 0.0;
+                for j in 0..m {
+                    let pj = rho.mul_add(tli[j], h[j]);
+                    let drow = &self.dmat[j * m..j * m + m];
+                    let mut racc = 0.0;
+                    for (k, dv) in drow.iter().enumerate() {
+                        let pk = rho.mul_add(tli[k], h[k]);
+                        racc = dv.mul_add(pk, racc);
+                    }
+                    quad = pj.mul_add(racc, quad);
+                }
+                let cross = self.prior.model_cov[(i, i)] - 2.0 * hl - rho * self.g_q[i] + quad;
+                rho.mul_add(cross, lv)
+            }
+            None => {
+                if rho == 0.0 {
+                    self.prior.model_cov[(i, i)]
+                } else {
+                    self.cold_var[i]
+                }
+            }
+        }
+    }
+
+    /// Expected improvement of arm `x` over incumbent `best` (paper
+    /// Eq. 3 via Lemma 1) — same formula path as the dense GP.
+    pub fn ei(&self, x: ArmId, best: f64) -> f64 {
+        expected_improvement(self.posterior_mean(x), self.posterior_std(x), best)
+    }
+
+    /// Stop maintaining arm `x`'s visible posterior (tenant departure):
+    /// reads freeze at the current `(μ, σ²)` while the shard keeps
+    /// accumulating underneath (the shared posterior keeps the
+    /// knowledge). Idempotent; mirrors the dense
+    /// [`Gp::disable_arm`](crate::gp::Gp::disable_arm) freeze semantics.
+    pub fn disable_arm(&mut self, x: ArmId) {
+        if !self.enabled[x] {
+            return;
+        }
+        if !self.observed[x] {
+            let mu = self.live_mean(x);
+            let var = self.live_var(x);
+            if let Err(pos) = self.frozen.binary_search_by(|e| e.0.cmp(&x)) {
+                self.frozen.insert(pos, (x, mu, var));
+            }
+        }
+        self.enabled[x] = false;
+        // pallas-lint: allow(R5) — mirrors dense Gp::disable_arm: enabled[x] was true so x is in enabled_arms (the two are updated together); divergence is state corruption worth aborting on.
+        let pos = self.enabled_arms.binary_search(&x).expect("enabled list out of sync");
+        self.enabled_arms.remove(pos);
+    }
+
+    /// Resume maintaining arm `x`'s posterior (tenant join/rejoin):
+    /// drops the frozen snapshot, so the next read sees the fully
+    /// caught-up lazy posterior — at ρ = 0 bit-identical to the dense
+    /// GP's replay-based catch-up (the shard accumulators never stopped
+    /// running the same float sequence). Idempotent.
+    pub fn enable_arm(&mut self, x: ArmId) {
+        if self.enabled[x] {
+            return;
+        }
+        self.enabled[x] = true;
+        if let Err(pos) = self.enabled_arms.binary_search(&x) {
+            self.enabled_arms.insert(pos, x);
+        }
+        if let Ok(pos) = self.frozen.binary_search_by(|e| e.0.cmp(&x)) {
+            self.frozen.remove(pos);
+        }
+    }
+
+    /// Materialize the full posterior `(mean, std)` — the bulk read the
+    /// bench harnesses and diagnostics use. Arm ranges are distributed
+    /// across the [`WorkerPool`] (`map_chunks`, fixed shards merged in
+    /// range order), and every entry is a pure `&self` read, so the
+    /// result is byte-identical at any thread width.
+    pub fn posterior_snapshot(&self, pool: &WorkerPool) -> (Vec<f64>, Vec<f64>) {
+        let n = self.n_arms;
+        let chunks = pool.map_chunks(n, |range| {
+            let mut mu = Vec::with_capacity(range.len());
+            let mut sd = Vec::with_capacity(range.len());
+            for x in range {
+                mu.push(self.posterior_mean(x));
+                sd.push(self.posterior_std(x));
+            }
+            (mu, sd)
+        });
+        let mut mu = Vec::with_capacity(n);
+        let mut sd = Vec::with_capacity(n);
+        for (cm, cs) in chunks {
+            mu.extend_from_slice(&cm);
+            sd.extend_from_slice(&cs);
+        }
+        (mu, sd)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gp::Gp;
+    use crate::kernels::{exchangeable_user_sim, kronecker_arm_cov, Kernel, Matern52};
+
+    /// Shared Matérn-5/2 model gram on the workload's grid `[i·0.25]`.
+    fn model_gram(m: usize) -> Mat {
+        let pts: Vec<Vec<f64>> = (0..m).map(|i| vec![i as f64 * 0.25]).collect();
+        Matern52 { variance: 1.0, lengthscale: 0.8 }.gram(&pts)
+    }
+
+    fn rel_close(a: f64, b: f64, tol: f64) -> bool {
+        (a - b).abs() <= tol * a.abs().max(b.abs()).max(1.0)
+    }
+
+    #[test]
+    fn dense_prior_matches_kronecker_arm_cov_bitwise() {
+        let (nu, m) = (3, 3);
+        let c = model_gram(m);
+        let prior = KroneckerPrior::constant_mean(nu, c.clone(), 0.3, 0.5).unwrap();
+        let (_, dense) = prior.dense_prior();
+        let arms: Vec<(usize, usize)> = (0..nu * m).map(|a| (a / m, a % m)).collect();
+        let oracle = kronecker_arm_cov(&arms, &exchangeable_user_sim(nu, 0.3), &c);
+        for a in 0..nu * m {
+            for b in 0..nu * m {
+                assert_eq!(dense[(a, b)].to_bits(), oracle[(a, b)].to_bits(), "({a},{b})");
+            }
+        }
+    }
+
+    #[test]
+    fn rho_zero_matches_dense_bitwise() {
+        let (nu, m) = (3, 3);
+        let prior = KroneckerPrior::constant_mean(nu, model_gram(m), 0.0, 0.5).unwrap();
+        let (mean, cov) = prior.dense_prior();
+        let mut dense = Gp::new(mean, cov);
+        let mut sharded = ShardedGp::new(prior);
+        let obs = [(0usize, 0.7), (4, 0.4), (1, 0.9), (8, 0.2), (3, 0.6)];
+        for &(x, z) in &obs {
+            let d: Vec<ArmId> = dense.observe(x, z).to_vec();
+            let s: Vec<ArmId> = sharded.observe(x, z).to_vec();
+            assert_eq!(d, s, "dirty set after arm {x}");
+            for a in 0..nu * m {
+                assert_eq!(dense.posterior_mean(a).to_bits(), sharded.posterior_mean(a).to_bits(), "mu[{a}]");
+                assert_eq!(dense.posterior_std(a).to_bits(), sharded.posterior_std(a).to_bits(), "sd[{a}]");
+            }
+        }
+    }
+
+    #[test]
+    fn rho_positive_matches_dense_to_rel_tol() {
+        let (nu, m) = (4, 3);
+        let prior = KroneckerPrior::constant_mean(nu, model_gram(m), 0.35, 0.5).unwrap();
+        let (mean, cov) = prior.dense_prior();
+        let mut dense = Gp::new(mean, cov);
+        let mut sharded = ShardedGp::new(prior);
+        let obs = [(0usize, 0.7), (5, 0.4), (1, 0.9), (10, 0.2), (7, 0.6)];
+        for &(x, z) in &obs {
+            dense.observe(x, z);
+            sharded.observe(x, z);
+            for a in 0..nu * m {
+                let (dm, sm) = (dense.posterior_mean(a), sharded.posterior_mean(a));
+                let (ds, ss) = (dense.posterior_std(a), sharded.posterior_std(a));
+                assert!(rel_close(dm, sm, 1e-9), "mu[{a}]: {dm} vs {sm}");
+                assert!(rel_close(ds, ss, 1e-8), "sd[{a}]: {ds} vs {ss}");
+                assert!(rel_close(dense.ei(a, 0.5), sharded.ei(a, 0.5), 1e-7), "ei[{a}]");
+            }
+        }
+        // Cold tenant 3 was never observed: its reads came from the O(1)
+        // tables (checked above) and cost no shard.
+        assert!(sharded.shards[3].is_none());
+    }
+
+    #[test]
+    fn double_observe_is_logged_and_skipped() {
+        let prior = KroneckerPrior::constant_mean(2, model_gram(2), 0.3, 0.0).unwrap();
+        let mut gp = ShardedGp::new(prior);
+        assert!(!gp.observe(1, 0.4).is_empty());
+        let mu = gp.posterior_mean(0);
+        assert_eq!(gp.try_observe(1, 0.9), Err(GpError::AlreadyObserved(1)));
+        assert!(gp.observe(1, 0.9).is_empty());
+        assert_eq!(gp.posterior_mean(0).to_bits(), mu.to_bits(), "state must not move on a repeat");
+        assert_eq!(gp.posterior_mean(1), 0.4);
+        assert_eq!(gp.n_observed(), 1);
+    }
+
+    #[test]
+    fn disable_freezes_and_enable_catches_up() {
+        let (nu, m) = (3, 3);
+        let prior = KroneckerPrior::constant_mean(nu, model_gram(m), 0.0, 0.5).unwrap();
+        let (mean, cov) = prior.dense_prior();
+        let mut dense = Gp::new(mean, cov);
+        let mut sharded = ShardedGp::new(prior);
+        dense.observe(0, 0.7);
+        sharded.observe(0, 0.7);
+        dense.disable_arm(1);
+        sharded.disable_arm(1);
+        assert!(!sharded.is_enabled(1));
+        let frozen_mu = sharded.posterior_mean(1);
+        let frozen_sd = sharded.posterior_std(1);
+        // More same-tenant observations move the live posterior but not
+        // the frozen read — in both implementations.
+        dense.observe(2, 0.9);
+        sharded.observe(2, 0.9);
+        assert_eq!(sharded.posterior_mean(1).to_bits(), frozen_mu.to_bits());
+        assert_eq!(sharded.posterior_std(1).to_bits(), frozen_sd.to_bits());
+        assert_eq!(dense.posterior_mean(1).to_bits(), frozen_mu.to_bits());
+        // Re-enable: both catch up bit-identically.
+        dense.enable_arm(1);
+        sharded.enable_arm(1);
+        for a in 0..nu * m {
+            assert_eq!(dense.posterior_mean(a).to_bits(), sharded.posterior_mean(a).to_bits(), "mu[{a}]");
+            assert_eq!(dense.posterior_std(a).to_bits(), sharded.posterior_std(a).to_bits(), "sd[{a}]");
+        }
+    }
+
+    #[test]
+    fn observe_batch_matches_sequential_bitwise() {
+        let (nu, m) = (4, 3);
+        let c = model_gram(m);
+        let prior = KroneckerPrior::constant_mean(nu, c, 0.4, 0.5).unwrap();
+        let mut seq = ShardedGp::new(prior.clone());
+        let mut bat = ShardedGp::new(prior);
+        let obs = [(0usize, 0.7), (5, 0.4), (1, 0.9), (10, 0.2), (7, 0.6), (3, 0.1)];
+        for &(x, z) in &obs {
+            seq.observe(x, z);
+        }
+        let pool = WorkerPool::new(2);
+        bat.observe_batch(&pool, &obs).unwrap();
+        for a in 0..nu * m {
+            assert_eq!(seq.posterior_mean(a).to_bits(), bat.posterior_mean(a).to_bits(), "mu[{a}]");
+            assert_eq!(seq.posterior_std(a).to_bits(), bat.posterior_std(a).to_bits(), "sd[{a}]");
+        }
+        // Batch validation is all-or-nothing.
+        assert_eq!(bat.observe_batch(&pool, &[(2, 0.5), (0, 0.1)]), Err(GpError::AlreadyObserved(0)));
+        assert_eq!(bat.observe_batch(&pool, &[(2, 0.5), (2, 0.6)]), Err(GpError::AlreadyObserved(2)));
+        assert!(!bat.is_observed(2), "failed batch must not partially apply");
+    }
+
+    #[test]
+    fn prior_validation_rejects_bad_inputs() {
+        assert!(KroneckerPrior::constant_mean(0, model_gram(2), 0.0, 0.0).is_err());
+        assert!(KroneckerPrior::constant_mean(2, model_gram(2), 1.0, 0.0).is_err());
+        assert!(KroneckerPrior::constant_mean(2, model_gram(2), -0.1, 0.0).is_err());
+        assert!(KroneckerPrior::new(2, model_gram(2), 0.3, vec![0.0; 3]).is_err());
+    }
+}

@@ -200,6 +200,7 @@ impl CholeskyFactor {
     /// Empty factor with reserved capacity (avoids re-layouts when the
     /// final size is known, e.g. `n_arms`).
     pub fn with_capacity(cap: usize) -> Self {
+        // pallas-lint: allow(R6) — one-time construction reserve: reached from the observe root only through ShardedGp's lazy per-tenant shard setup, which allocates once per tenant and never again in steady state (tests/alloc_counter.rs warms every tenant before measuring).
         CholeskyFactor { data: vec![0.0; cap * cap], cap, n: 0 }
     }
 
@@ -464,6 +465,49 @@ pub fn principal_submatrix(a: &Mat, idx: &[usize]) -> Mat {
         }
     }
     out
+}
+
+/// In-place lower Cholesky factorization of a symmetric positive-definite
+/// matrix stored as a flat row-major `n × n` slice: on success `a` holds
+/// `L` (with the strict upper triangle zeroed) such that the original
+/// matrix equals `L Lᵀ`.
+///
+/// This is the allocation-free twin of [`cholesky`] for preallocated flat
+/// storage — the sharded GP re-factors its `m × m` coupling matrix
+/// `M = I + ρT` on every observation, and the scheduler hot path must not
+/// allocate (see `rust/tests/alloc_counter.rs`), so the factorization has
+/// to happen in the caller's scratch buffer. Inner products use
+/// `f64::mul_add` like every other factorization here, so results are
+/// bit-identical to [`cholesky`] on the same input.
+pub fn cholesky_lower_in_place(a: &mut [f64], n: usize) -> Result<(), LinalgError> {
+    if a.len() != n * n {
+        // pallas-lint: allow(R6) — cold error path: the format! only runs on a mis-sized scratch buffer, which aborts the factorization instead of entering the hot loop.
+        return Err(LinalgError::DimensionMismatch(format!(
+            "cholesky_lower_in_place needs n*n = {} storage, got {}",
+            n * n,
+            a.len()
+        )));
+    }
+    for i in 0..n {
+        for j in 0..=i {
+            let mut sum = a[i * n + j];
+            for k in 0..j {
+                sum = a[i * n + k].mul_add(-a[j * n + k], sum);
+            }
+            if i == j {
+                if sum <= 0.0 {
+                    return Err(LinalgError::NotPositiveDefinite(i, sum));
+                }
+                a[i * n + i] = sum.sqrt();
+            } else {
+                a[i * n + j] = sum / a[j * n + j];
+            }
+        }
+        for j in i + 1..n {
+            a[i * n + j] = 0.0;
+        }
+    }
+    Ok(())
 }
 
 /// Maximum absolute difference between two matrices (test helper).
@@ -804,5 +848,34 @@ mod tests {
         assert_eq!(dot(&[1.0, 2.0, 3.0], &[4.0, 5.0, 6.0]), 32.0);
         let a = Mat::from_rows(&[&[1.0, 2.0], &[3.0, 4.0]]);
         assert_eq!(matvec(&a, &[1.0, 1.0]), vec![3.0, 7.0]);
+    }
+
+    #[test]
+    fn in_place_cholesky_matches_batch_bitwise() {
+        for n in [1, 2, 5, 12] {
+            let n = dim(n);
+            let a = random_spd(n, 900 + n as u64);
+            let l = cholesky(&a).unwrap();
+            let mut flat = vec![0.0; n * n];
+            for i in 0..n {
+                flat[i * n..(i + 1) * n].copy_from_slice(a.row(i));
+            }
+            cholesky_lower_in_place(&mut flat, n).unwrap();
+            for i in 0..n {
+                for j in 0..n {
+                    assert_eq!(flat[i * n + j].to_bits(), l[(i, j)].to_bits(), "n={n} ({i},{j})");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn in_place_cholesky_rejects_bad_inputs() {
+        // Mis-sized storage.
+        let mut short = vec![0.0; 3];
+        assert!(matches!(cholesky_lower_in_place(&mut short, 2), Err(LinalgError::DimensionMismatch(_))));
+        // Indefinite matrix.
+        let mut indef = vec![1.0, 2.0, 2.0, 1.0];
+        assert!(matches!(cholesky_lower_in_place(&mut indef, 2), Err(LinalgError::NotPositiveDefinite(1, _))));
     }
 }

@@ -35,7 +35,7 @@
 
 use super::argmax::TournamentTree;
 use super::{DeviceView, ScoreMode};
-use crate::gp::{expected_improvement, Gp};
+use crate::gp::{expected_improvement, Gp, KroneckerPrior, ShardedGp};
 use crate::problem::{ArmId, CostModel, Problem, UserId};
 
 /// Scoring backend: consumes observations, produces per-arm EIrate.
@@ -137,12 +137,88 @@ pub trait EiBackend {
     }
 }
 
+/// The posterior store behind [`NativeBackend`]: either the dense
+/// incremental-Cholesky [`Gp`] (the default, and the oracle every parity
+/// gate compares against) or the sharded block-Kronecker [`ShardedGp`]
+/// selected by `[gp] structure = "sharded"` for multi-tenant priors far
+/// above the dense-feasible range. Both expose the same
+/// observe/posterior/churn surface — dirty-set reporting included — so
+/// the dirty-set → EIrate-cache → tournament-tree invalidation path is
+/// store-agnostic and stays bit-stable under either store.
+enum GpStore {
+    Dense(Gp),
+    Sharded(ShardedGp),
+}
+
+impl GpStore {
+    #[inline]
+    fn observe(&mut self, x: ArmId, z: f64) -> &[ArmId] {
+        match self {
+            GpStore::Dense(gp) => gp.observe(x, z),
+            GpStore::Sharded(gp) => gp.observe(x, z),
+        }
+    }
+
+    #[inline]
+    fn posterior_mean(&self, x: ArmId) -> f64 {
+        match self {
+            GpStore::Dense(gp) => gp.posterior_mean(x),
+            GpStore::Sharded(gp) => gp.posterior_mean(x),
+        }
+    }
+
+    #[inline]
+    fn posterior_std(&self, x: ArmId) -> f64 {
+        match self {
+            GpStore::Dense(gp) => gp.posterior_std(x),
+            GpStore::Sharded(gp) => gp.posterior_std(x),
+        }
+    }
+
+    #[inline]
+    fn is_observed(&self, x: ArmId) -> bool {
+        match self {
+            GpStore::Dense(gp) => gp.is_observed(x),
+            GpStore::Sharded(gp) => gp.is_observed(x),
+        }
+    }
+
+    #[inline]
+    fn is_enabled(&self, x: ArmId) -> bool {
+        match self {
+            GpStore::Dense(gp) => gp.is_enabled(x),
+            GpStore::Sharded(gp) => gp.is_enabled(x),
+        }
+    }
+
+    fn enable_arm(&mut self, x: ArmId) {
+        match self {
+            GpStore::Dense(gp) => gp.enable_arm(x),
+            GpStore::Sharded(gp) => gp.enable_arm(x),
+        }
+    }
+
+    fn disable_arm(&mut self, x: ArmId) {
+        match self {
+            GpStore::Dense(gp) => gp.disable_arm(x),
+            GpStore::Sharded(gp) => gp.disable_arm(x),
+        }
+    }
+
+    fn n_arms(&self) -> usize {
+        match self {
+            GpStore::Dense(gp) => gp.n_arms(),
+            GpStore::Sharded(gp) => gp.n_arms(),
+        }
+    }
+}
+
 /// Native rust backend: incremental-Cholesky GP posterior, O(1)-read
 /// mean/std at decision time (see [`crate::gp::Gp`]), and a dirty-set
 /// EIrate cache so each decision rescores only the arms whose posterior
 /// or owner incumbents moved since the last decision.
 pub struct NativeBackend {
-    gp: Gp,
+    gp: GpStore,
     /// Flattened membership (arm → owning users) copied from the problem
     /// so scoring needs no `Problem` borrow.
     arm_users: Vec<Vec<usize>>,
@@ -194,30 +270,80 @@ pub struct NativeBackend {
 }
 
 impl NativeBackend {
-    /// Build from a problem's prior and membership structure, with the
-    /// uniform single-class cost table (every device class sees
-    /// `problem.cost`).
-    pub fn new(problem: &Problem) -> Self {
-        let n = problem.n_arms();
+    /// Shared construction core: any posterior store plus the membership
+    /// structure and device-blind cost vector.
+    fn from_parts(gp: GpStore, arm_users: Vec<Vec<usize>>, user_arms: Vec<Vec<ArmId>>, cost: Vec<f64>) -> Self {
+        let n = gp.n_arms();
+        let n_users = user_arms.len();
+        debug_assert_eq!(arm_users.len(), n);
+        debug_assert_eq!(cost.len(), n);
         NativeBackend {
-            gp: Gp::new(problem.prior_mean.clone(), problem.prior_cov.clone()),
-            arm_users: problem.arm_users.clone(),
-            user_arms: problem.user_arms.clone(),
-            cost: problem.cost.clone(),
-            class_cost: vec![problem.cost.clone()],
+            gp,
+            arm_users,
+            user_arms,
+            class_cost: vec![cost.clone()],
+            cost,
             ei_cache: vec![0.0; n],
             // NaN sentinel: no incumbent vector bit-matches it, so the
             // first decision scores every arm.
-            last_best: vec![f64::NAN; problem.n_users],
+            last_best: vec![f64::NAN; n_users],
             dirty: vec![true; n],
             dirty_arms: (0..n).collect(),
             score_buf: vec![f64::NEG_INFINITY; n],
             tree: TournamentTree::new(n),
             last_selected: vec![false; n],
             last_key: None,
-            active_users: vec![true; problem.n_users],
+            active_users: vec![true; n_users],
             observed_z: vec![f64::NAN; n],
         }
+    }
+
+    /// Build from a problem's prior and membership structure, with the
+    /// uniform single-class cost table (every device class sees
+    /// `problem.cost`).
+    pub fn new(problem: &Problem) -> Self {
+        Self::from_parts(
+            GpStore::Dense(Gp::new(problem.prior_mean.clone(), problem.prior_cov.clone())),
+            problem.arm_users.clone(),
+            problem.user_arms.clone(),
+            problem.cost.clone(),
+        )
+    }
+
+    /// Build over the sharded block-Kronecker store ([`ShardedGp`])
+    /// instead of the dense factor, taking membership and costs from the
+    /// problem. The problem's own `prior_mean`/`prior_cov` are **not**
+    /// read — `prior` is the structured form of the same prior (the
+    /// `[gp] structure = "sharded"` config path constructs it from the
+    /// workload recipe; `rust/tests/sharded_gp.rs` gates the parity).
+    pub fn sharded(problem: &Problem, prior: KroneckerPrior) -> Self {
+        assert_eq!(
+            prior.n_arms(),
+            problem.n_arms(),
+            "sharded prior shape must match the problem arm set"
+        );
+        assert_eq!(prior.n_users(), problem.n_users, "sharded prior tenant count must match the problem");
+        Self::from_parts(
+            GpStore::Sharded(ShardedGp::new(prior)),
+            problem.arm_users.clone(),
+            problem.user_arms.clone(),
+            problem.cost.clone(),
+        )
+    }
+
+    /// Build over the sharded store with the canonical user-major
+    /// membership (tenant `u` exclusively owns arms `u·m..(u+1)·m`) and
+    /// an explicit device-blind cost vector — no dense `Problem` needed,
+    /// which is the constructor the 10⁴–10⁶-tenant scaling sweeps use
+    /// (materializing an `O(n²)` prior covariance is exactly what the
+    /// sharded store exists to avoid).
+    pub fn sharded_user_major(prior: KroneckerPrior, cost: Vec<f64>) -> Self {
+        let n = prior.n_arms();
+        let m = prior.n_models();
+        assert_eq!(cost.len(), n, "cost vector must have one entry per arm");
+        let user_arms: Vec<Vec<ArmId>> = (0..prior.n_users()).map(|u| (u * m..(u + 1) * m).collect()).collect();
+        let arm_users: Vec<Vec<usize>> = (0..n).map(|x| vec![x / m]).collect();
+        Self::from_parts(GpStore::Sharded(ShardedGp::new(prior)), arm_users, user_arms, cost)
     }
 
     /// Build with a per-(arm, device-class) [`CostModel`]: the model's
@@ -241,9 +367,28 @@ impl NativeBackend {
         }
     }
 
-    /// Borrow the underlying GP (tests, diagnostics).
+    /// Borrow the underlying dense GP (tests, diagnostics, the
+    /// `rescan_eirate` oracle).
+    ///
+    /// # Panics
+    /// When the backend runs the sharded store — callers that support
+    /// both use [`NativeBackend::sharded_gp`] to discriminate.
     pub fn gp(&self) -> &Gp {
-        &self.gp
+        match &self.gp {
+            GpStore::Dense(gp) => gp,
+            GpStore::Sharded(_) => {
+                panic!("NativeBackend::gp(): backend runs the sharded store; use sharded_gp() instead")
+            }
+        }
+    }
+
+    /// Borrow the sharded store, if this backend was built with one
+    /// ([`NativeBackend::sharded`] / [`NativeBackend::sharded_user_major`]).
+    pub fn sharded_gp(&self) -> Option<&ShardedGp> {
+        match &self.gp {
+            GpStore::Dense(_) => None,
+            GpStore::Sharded(gp) => Some(gp),
+        }
     }
 
     /// Number of arms the next decision will rescore (tests/metrics).
@@ -427,7 +572,10 @@ impl EiBackend for NativeBackend {
     }
 
     fn label(&self) -> &'static str {
-        "native"
+        match &self.gp {
+            GpStore::Dense(_) => "native",
+            GpStore::Sharded(_) => "sharded",
+        }
     }
 
     /// Incremental join: re-enable the tenant's arms in the live GP
@@ -833,6 +981,63 @@ mod tests {
             for &u in &p.arm_users[step] {
                 best[u] = best[u].max(zs[step]);
             }
+        }
+    }
+
+    #[test]
+    fn sharded_store_matches_dense_backend_at_rho_zero() {
+        // 2 tenants × 2 models, independent tenants (ρ = 0): the sharded
+        // store must reproduce the dense backend's scores, picks, and
+        // posterior snapshot bit for bit, whichever constructor built it.
+        let c = Mat::from_rows(&[&[1.0, 0.3], &[0.3, 1.0]]);
+        let prior = KroneckerPrior::constant_mean(2, c, 0.0, 0.5).unwrap();
+        let (mean, cov) = prior.dense_prior();
+        let user_arms = vec![vec![0, 1], vec![2, 3]];
+        let arm_users = Problem::compute_arm_users(4, &user_arms);
+        let cost = vec![1.0, 2.0, 1.0, 3.0];
+        let p = Problem {
+            name: "s".into(),
+            n_users: 2,
+            cost: cost.clone(),
+            user_arms,
+            arm_users,
+            prior_mean: mean,
+            prior_cov: cov,
+        };
+        let mut dense = NativeBackend::new(&p);
+        let mut shard = NativeBackend::sharded(&p, prior.clone());
+        let mut major = NativeBackend::sharded_user_major(prior, cost);
+        assert_eq!(dense.label(), "native");
+        assert_eq!(shard.label(), "sharded");
+        assert!(shard.sharded_gp().is_some());
+        assert!(dense.sharded_gp().is_none());
+        let mut selected = vec![false; 4];
+        let mut best = vec![0.0f64; 2];
+        let zs = [0.7, 0.4, 0.9, 0.2];
+        for step in 0..4 {
+            let pick = dense.select_arm(&best, &selected, ScoreMode::CostRate, d0());
+            assert_eq!(pick, shard.select_arm(&best, &selected, ScoreMode::CostRate, d0()), "step {step}");
+            assert_eq!(pick, major.select_arm(&best, &selected, ScoreMode::CostRate, d0()), "step {step}");
+            let ds = dense.eirate(&best, &selected, ScoreMode::CostRate, d0()).to_vec();
+            let ss = shard.eirate(&best, &selected, ScoreMode::CostRate, d0()).to_vec();
+            let ms = major.eirate(&best, &selected, ScoreMode::CostRate, d0()).to_vec();
+            for x in 0..4 {
+                assert_eq!(ds[x].to_bits(), ss[x].to_bits(), "step {step} arm {x}");
+                assert_eq!(ds[x].to_bits(), ms[x].to_bits(), "step {step} arm {x} (user-major)");
+            }
+            dense.observe(step, zs[step]);
+            shard.observe(step, zs[step]);
+            major.observe(step, zs[step]);
+            selected[step] = true;
+            for &u in &p.arm_users[step] {
+                best[u] = best[u].max(zs[step]);
+            }
+        }
+        let (dm, dsd) = dense.posterior();
+        let (sm, ssd) = shard.posterior();
+        for x in 0..4 {
+            assert_eq!(dm[x].to_bits(), sm[x].to_bits(), "posterior mean arm {x}");
+            assert_eq!(dsd[x].to_bits(), ssd[x].to_bits(), "posterior std arm {x}");
         }
     }
 

@@ -51,6 +51,17 @@ impl MmGpEi {
         }
     }
 
+    /// Construction over the sharded block-Kronecker GP store
+    /// (`[gp] structure = "sharded"`): same [`ScoreMode::CostRate`]
+    /// scoring as [`MmGpEi::new`], but the posterior is served by
+    /// [`crate::gp::ShardedGp`] — per-tenant Cholesky shards plus a
+    /// low-rank cross-tenant coupling — instead of one dense factor.
+    /// The policy reports as `GP-EI-MDMT[sharded]`; the dense path
+    /// remains the default and the parity oracle.
+    pub fn sharded(problem: &Problem, prior: crate::gp::KroneckerPrior) -> Self {
+        Self::with_backend(problem, Box::new(NativeBackend::sharded(problem, prior)))
+    }
+
     /// Ablation: cost-insensitive variant ranking by summed EI only.
     pub fn cost_insensitive(problem: &Problem) -> Self {
         let mut p = Self::new(problem);

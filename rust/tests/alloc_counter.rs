@@ -16,6 +16,8 @@
 use std::alloc::{GlobalAlloc, Layout, System};
 use std::cell::Cell;
 
+use mmgpei::gp::KroneckerPrior;
+use mmgpei::kernels::{Kernel, Matern52};
 use mmgpei::sched::{DeviceView, EiBackend, NativeBackend, ScoreMode};
 use mmgpei::workload::{synthetic_gp, SyntheticConfig};
 
@@ -118,6 +120,70 @@ fn hot_path_is_allocation_free_after_warmup() {
         after - before,
         0,
         "observe/eirate/select_arm must not allocate after warm-up ({} allocations leaked; guard {guard})",
+        after - before
+    );
+}
+
+#[test]
+fn sharded_hot_path_is_allocation_free_after_warmup() {
+    // The sharded-store twin of the audit above, with the cross-tenant
+    // coupling ON (ρ > 0) so every observe runs the full Woodbury path:
+    // per-tenant Cholesky append, W̃ forward substitution, the global
+    // (T, b̂) rank-1 fold, and the capacitance refresh — all into
+    // construction-time buffers. Tenant shards are *lazily* boxed, so the
+    // warm-up must touch every tenant once; after that, zero allocations.
+    let (n_users, n_models, rho) = (12usize, 10usize, 0.3f64);
+    let n = n_users * n_models;
+    let pts: Vec<Vec<f64>> = (0..n_models).map(|m| vec![m as f64 * 0.25]).collect();
+    let gram = Matern52 { variance: 1.0, lengthscale: 0.8 }.gram(&pts);
+    let prior = KroneckerPrior::constant_mean(n_users, gram, rho, 0.0).expect("valid prior");
+    // Heterogeneous costs so the cost-normalized assembly path runs.
+    let cost: Vec<f64> = (0..n).map(|x| 0.5 + 1.5 * ((x * 7 % 11) as f64 / 11.0)).collect();
+    let mut backend = NativeBackend::sharded_user_major(prior, cost);
+    let mut selected = vec![false; n];
+    let mut best = vec![0.0f64; n_users];
+    let z_for = |a: usize| ((a * 37 + 11) % 97) as f64 / 97.0 - 0.5;
+
+    let step = |backend: &mut NativeBackend, a: usize, selected: &mut [bool], best: &mut [f64]| {
+        backend.observe(a, z_for(a));
+        selected[a] = true;
+        best[a / n_models] = best[a / n_models].max(z_for(a));
+        let dev = DeviceView::unit(0);
+        let scores = backend.eirate(best, selected, ScoreMode::CostRate, dev);
+        let fold = scores[n - 1];
+        let pick = backend.select_arm(best, selected, ScoreMode::CostRate, dev);
+        (fold, pick)
+    };
+
+    // Warm-up: bulk score/tree build, then one observe on EVERY tenant —
+    // materializing each lazy shard exactly once.
+    let _ = backend.eirate(&best, &selected, ScoreMode::CostRate, DeviceView::unit(0));
+    for u in 0..n_users {
+        let _ = step(&mut backend, u * n_models + (u % n_models), &mut selected, &mut best);
+    }
+
+    // Measured phase: the rest of the serving run — every remaining arm
+    // of every (already materialized) tenant, with mode flips included.
+    let before = thread_allocs();
+    let mut guard = 0.0;
+    for a in 0..n {
+        if selected[a] {
+            continue;
+        }
+        let (fold, pick) = step(&mut backend, a, &mut selected, &mut best);
+        guard += fold;
+        if let Some(p) = pick {
+            assert!(!selected[p]);
+        }
+        let scores = backend.eirate(&best, &selected, ScoreMode::EiOnly, DeviceView::unit(0));
+        guard += scores[0];
+    }
+    let after = thread_allocs();
+    assert_eq!(
+        after - before,
+        0,
+        "sharded observe/eirate/select_arm must not allocate after warm-up \
+         ({} allocations leaked; guard {guard})",
         after - before
     );
 }

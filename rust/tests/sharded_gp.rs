@@ -1,0 +1,331 @@
+//! Sharded block-Kronecker GP (`gp::ShardedGp`) vs the dense oracle.
+//!
+//! The contract under test, end to end:
+//!  * **ρ = 0** (independent tenants): the sharded store is *bitwise* the
+//!    dense factor — posteriors, dirty sets, EI, and backend-level
+//!    selections, over a whole serving run;
+//!  * **ρ > 0** (exchangeable cross-tenant coupling): the Woodbury
+//!    cross-term matches the dense factorization of the materialized
+//!    B(ρ) ⊗ C prior to tight relative tolerance, including through
+//!    churn disable/enable replays and double-observe no-ops;
+//!  * **determinism**: batch observes replay the sequential schedule bit
+//!    for bit at any pool width, posterior snapshots are pool-width
+//!    invariant, and a `[gp] structure = "sharded"` experiment serializes
+//!    byte-identical reports at `threads = 1` and `threads = 4`.
+
+use mmgpei::config::{ExperimentConfig, GpStructure};
+use mmgpei::gp::{Gp, GpError, KroneckerPrior, ShardedGp};
+use mmgpei::kernels::{Kernel, Matern52};
+use mmgpei::pool::WorkerPool;
+use mmgpei::report::RunReport;
+use mmgpei::sched::{DeviceView, EiBackend, NativeBackend, ScoreMode};
+use mmgpei::workload::{synthetic_gp, ChurnConfig, SyntheticConfig};
+
+/// Shared Matérn-5/2 model gram over the workloads' `m · 0.25` grid.
+fn model_gram(n_models: usize, variance: f64, lengthscale: f64) -> mmgpei::linalg::Mat {
+    let pts: Vec<Vec<f64>> = (0..n_models).map(|m| vec![m as f64 * 0.25]).collect();
+    Matern52 { variance, lengthscale }.gram(&pts)
+}
+
+fn rel_close(a: f64, b: f64, tol: f64) -> bool {
+    (a - b).abs() <= tol * a.abs().max(b.abs()).max(1.0)
+}
+
+/// Deterministic pseudo-observation for arm-index `k`.
+fn z_for(k: usize) -> f64 {
+    ((k * 37 + 11) % 97) as f64 / 97.0 - 0.5
+}
+
+#[test]
+fn rho_zero_posteriors_dirty_sets_and_ei_are_bitwise_dense() {
+    let cfg = SyntheticConfig { n_users: 8, n_models: 5, ..Default::default() };
+    let (problem, truth) = synthetic_gp(&cfg, 0xD15E);
+    let prior = KroneckerPrior::new(
+        cfg.n_users,
+        model_gram(cfg.n_models, cfg.variance, cfg.lengthscale),
+        0.0,
+        problem.prior_mean.clone(),
+    )
+    .unwrap();
+    // The Kronecker form at ρ = 0 *is* the synthetic workload's
+    // block-diagonal prior, bit for bit.
+    let (kmean, kcov) = prior.dense_prior();
+    assert_eq!(kmean, problem.prior_mean);
+    assert_eq!(kcov, problem.prior_cov);
+
+    let mut dense = Gp::new(problem.prior_mean.clone(), problem.prior_cov.clone());
+    let mut sharded = ShardedGp::new(prior);
+    let n = problem.n_arms();
+    for k in 0..n / 2 {
+        let x = (k * 7 + 3) % n;
+        if dense.is_observed(x) {
+            continue;
+        }
+        let d_dirty: Vec<usize> = dense.observe(x, truth.z[x]).to_vec();
+        let s_dirty: Vec<usize> = sharded.observe(x, truth.z[x]).to_vec();
+        assert_eq!(d_dirty, s_dirty, "dirty set diverged at step {k} (arm {x})");
+        for a in 0..n {
+            assert_eq!(
+                dense.posterior_mean(a).to_bits(),
+                sharded.posterior_mean(a).to_bits(),
+                "mean bits diverged at arm {a} after observing {x}"
+            );
+            assert_eq!(
+                dense.posterior_std(a).to_bits(),
+                sharded.posterior_std(a).to_bits(),
+                "std bits diverged at arm {a} after observing {x}"
+            );
+            let best = 0.2;
+            assert_eq!(
+                mmgpei::gp::expected_improvement(dense.posterior_mean(a), dense.posterior_std(a), best)
+                    .to_bits(),
+                sharded.ei(a, best).to_bits(),
+                "EI bits diverged at arm {a}"
+            );
+        }
+    }
+}
+
+#[test]
+fn rho_positive_matches_dense_oracle_to_rel_tol() {
+    let (n_users, n_models, rho) = (7usize, 4usize, 0.3f64);
+    let prior =
+        KroneckerPrior::constant_mean(n_users, model_gram(n_models, 1.0, 0.8), rho, 0.15).unwrap();
+    let (mean, cov) = prior.dense_prior();
+    let mut dense = Gp::new(mean, cov);
+    let mut sharded = ShardedGp::new(prior);
+    let n = sharded.n_arms();
+    for k in 0..n / 2 {
+        let x = (k * 5 + 2) % n;
+        if dense.is_observed(x) {
+            continue;
+        }
+        dense.observe(x, z_for(k));
+        sharded.observe(x, z_for(k));
+        for a in 0..n {
+            assert!(
+                rel_close(dense.posterior_mean(a), sharded.posterior_mean(a), 1e-9),
+                "mean diverged at arm {a}: dense {} vs sharded {}",
+                dense.posterior_mean(a),
+                sharded.posterior_mean(a)
+            );
+            assert!(
+                rel_close(dense.posterior_std(a), sharded.posterior_std(a), 1e-8),
+                "std diverged at arm {a}: dense {} vs sharded {}",
+                dense.posterior_std(a),
+                sharded.posterior_std(a)
+            );
+        }
+    }
+    // EI rides on (mean, std), so it inherits the tolerance.
+    for a in 0..n {
+        let d_ei = mmgpei::gp::expected_improvement(dense.posterior_mean(a), dense.posterior_std(a), 0.1);
+        assert!(rel_close(d_ei, sharded.ei(a, 0.1), 1e-7), "EI diverged at arm {a}");
+    }
+}
+
+#[test]
+fn churn_replay_with_disable_enable_and_double_observe_tracks_dense() {
+    let (n_users, n_models, rho) = (6usize, 4usize, 0.3f64);
+    let prior =
+        KroneckerPrior::constant_mean(n_users, model_gram(n_models, 1.0, 0.8), rho, 0.0).unwrap();
+    let (mean, cov) = prior.dense_prior();
+    let mut dense = Gp::new(mean, cov);
+    let mut sharded = ShardedGp::new(prior);
+    let m = n_models;
+    let n = sharded.n_arms();
+
+    // Warm both stores, then tenant 2 departs.
+    for (k, x) in [0usize, 5, 9, 14].into_iter().enumerate() {
+        dense.observe(x, z_for(k));
+        sharded.observe(x, z_for(k));
+    }
+    for x in 2 * m..3 * m {
+        dense.disable_arm(x);
+        sharded.disable_arm(x);
+    }
+    assert_eq!(sharded.n_enabled(), n - m);
+
+    // Observations keep arriving while tenant 2 is away; its frozen
+    // posterior must hold the pre-departure values on both stores.
+    let frozen: Vec<(u64, u64)> =
+        (2 * m..3 * m).map(|x| (sharded.posterior_mean(x).to_bits(), sharded.posterior_std(x).to_bits())).collect();
+    for (k, x) in [1usize, 7, 13, 19].into_iter().enumerate() {
+        dense.observe(x, z_for(k + 40));
+        sharded.observe(x, z_for(k + 40));
+    }
+    for (i, x) in (2 * m..3 * m).enumerate() {
+        assert_eq!(sharded.posterior_mean(x).to_bits(), frozen[i].0, "frozen mean drifted at arm {x}");
+        assert_eq!(sharded.posterior_std(x).to_bits(), frozen[i].1, "frozen std drifted at arm {x}");
+        assert!(
+            rel_close(dense.posterior_mean(x), f64::from_bits(frozen[i].0), 1e-8),
+            "dense frozen value disagrees at arm {x}"
+        );
+    }
+
+    // Double observe: logged and skipped on both stores, posterior
+    // untouched to the bit.
+    let before: Vec<u64> = (0..n).map(|a| sharded.posterior_mean(a).to_bits()).collect();
+    assert_eq!(sharded.try_observe(5, 99.0), Err(GpError::AlreadyObserved(5)));
+    assert_eq!(dense.try_observe(5, 99.0), Err(GpError::AlreadyObserved(5)));
+    assert!(sharded.observe(5, 99.0).is_empty(), "double observe must report no dirty arms");
+    for a in 0..n {
+        assert_eq!(sharded.posterior_mean(a).to_bits(), before[a], "double observe moved arm {a}");
+    }
+
+    // Tenant 2 rejoins: both stores catch up on everything it missed.
+    for x in 2 * m..3 * m {
+        dense.enable_arm(x);
+        sharded.enable_arm(x);
+    }
+    assert_eq!(sharded.n_enabled(), n);
+    for a in 0..n {
+        assert!(
+            rel_close(dense.posterior_mean(a), sharded.posterior_mean(a), 1e-8),
+            "post-rejoin mean diverged at arm {a}"
+        );
+        assert!(
+            rel_close(dense.posterior_std(a), sharded.posterior_std(a), 1e-7),
+            "post-rejoin std diverged at arm {a}"
+        );
+    }
+}
+
+#[test]
+fn backend_selections_and_scores_are_bitwise_dense_at_rho_zero() {
+    let cfg = SyntheticConfig { n_users: 10, n_models: 4, ..Default::default() };
+    let (problem, truth) = synthetic_gp(&cfg, 0xBACC);
+    let prior = KroneckerPrior::new(
+        cfg.n_users,
+        model_gram(cfg.n_models, cfg.variance, cfg.lengthscale),
+        0.0,
+        problem.prior_mean.clone(),
+    )
+    .unwrap();
+    let mut dense = NativeBackend::new(&problem);
+    let mut sharded = NativeBackend::sharded(&problem, prior);
+    assert_eq!(dense.label(), "native");
+    assert_eq!(sharded.label(), "sharded");
+    let n = problem.n_arms();
+    let mut selected = vec![false; n];
+    let mut best = vec![0.0f64; problem.n_users];
+    let dev = DeviceView::unit(0);
+    for k in 0..n / 2 {
+        let d_pick = dense.select_arm(&best, &selected, ScoreMode::CostRate, dev);
+        let s_pick = sharded.select_arm(&best, &selected, ScoreMode::CostRate, dev);
+        assert_eq!(d_pick, s_pick, "selection diverged at decision {k}");
+        let d_scores: Vec<u64> =
+            dense.eirate(&best, &selected, ScoreMode::CostRate, dev).iter().map(|s| s.to_bits()).collect();
+        let s_scores: Vec<u64> =
+            sharded.eirate(&best, &selected, ScoreMode::CostRate, dev).iter().map(|s| s.to_bits()).collect();
+        assert_eq!(d_scores, s_scores, "score bits diverged at decision {k}");
+        let x = (k * 7 + 3) % n;
+        if selected[x] {
+            continue;
+        }
+        dense.observe(x, truth.z[x]);
+        sharded.observe(x, truth.z[x]);
+        selected[x] = true;
+        for &u in &problem.arm_users[x] {
+            best[u] = best[u].max(truth.z[x]);
+        }
+    }
+}
+
+#[test]
+fn observe_batch_replays_sequential_bitwise_and_is_all_or_nothing() {
+    let (n_users, n_models, rho) = (12usize, 4usize, 0.35f64);
+    let prior =
+        KroneckerPrior::constant_mean(n_users, model_gram(n_models, 1.0, 0.8), rho, 0.05).unwrap();
+    let mut seq = ShardedGp::new(prior);
+    let mut batch = seq.clone();
+    let obs: Vec<(usize, f64)> = (0..16).map(|k| ((k * 5 + 1) % (n_users * n_models), z_for(k))).collect();
+    // The stride-5 walk over 48 arms yields 16 distinct indices.
+    for &(x, z) in &obs {
+        seq.observe(x, z);
+    }
+    let pool = WorkerPool::new(4);
+    batch.observe_batch(&pool, &obs).unwrap();
+    let (sm, ss) = seq.posterior_snapshot(&pool);
+    let (bm, bs) = batch.posterior_snapshot(&pool);
+    let bits = |v: &[f64]| v.iter().map(|x| x.to_bits()).collect::<Vec<_>>();
+    assert_eq!(bits(&sm), bits(&bm), "batch means must replay the sequential schedule exactly");
+    assert_eq!(bits(&ss), bits(&bs), "batch stds must replay the sequential schedule exactly");
+
+    // All-or-nothing: a duplicate poisons the whole batch, and the store
+    // is untouched.
+    let before = bits(&batch.posterior_snapshot(&pool).0);
+    let dup = vec![(2usize, 0.4), (2usize, 0.5)];
+    assert!(batch.observe_batch(&pool, &dup).is_err());
+    let already = vec![(obs[0].0, 1.0)];
+    assert_eq!(batch.observe_batch(&pool, &already), Err(GpError::AlreadyObserved(obs[0].0)));
+    assert_eq!(bits(&batch.posterior_snapshot(&pool).0), before, "failed batch must not mutate");
+}
+
+#[test]
+fn posterior_snapshot_is_pool_width_invariant() {
+    let (n_users, n_models, rho) = (40usize, 3usize, 0.2f64);
+    let prior =
+        KroneckerPrior::constant_mean(n_users, model_gram(n_models, 1.0, 0.8), rho, 0.0).unwrap();
+    let mut gp = ShardedGp::new(prior);
+    for k in 0..30 {
+        gp.observe((k * 11 + 4) % (n_users * n_models), z_for(k));
+    }
+    let (m1, s1) = gp.posterior_snapshot(&WorkerPool::new(1));
+    let (m4, s4) = gp.posterior_snapshot(&WorkerPool::new(4));
+    let bits = |v: &[f64]| v.iter().map(|x| x.to_bits()).collect::<Vec<_>>();
+    assert_eq!(bits(&m1), bits(&m4));
+    assert_eq!(bits(&s1), bits(&s4));
+}
+
+#[test]
+fn sharded_experiment_reports_are_byte_identical_across_thread_counts() {
+    // The CI determinism gate in miniature: the same `[gp] structure =
+    // "sharded"` sweep at width 1 and width 4 must serialize identically.
+    let run = |threads: usize| -> String {
+        let cfg = ExperimentConfig {
+            name: "sharded-invariance".into(),
+            dataset: "synthetic".into(),
+            policies: vec!["mdmt".into(), "round-robin".into()],
+            devices: vec![1, 2],
+            seeds: 3,
+            threads,
+            gp_structure: GpStructure::Sharded,
+            synthetic: SyntheticConfig { n_users: 6, n_models: 5, ..Default::default() },
+            ..Default::default()
+        };
+        let res = mmgpei::cli::run_experiment(&cfg).expect("sharded sweep");
+        let mut report = RunReport::new("sharded_invariance", 0, true);
+        report.provenance.commit = "pinned".into(); // not thread-related
+        res.push_kpis(&mut report, "syn/", &[0.05]);
+        report.to_json_string()
+    };
+    let serial = run(1);
+    let pooled = run(4);
+    assert_eq!(serial, pooled, "sharded sweep must serialize byte-identically at any width");
+    assert!(serial.contains("cumulative_regret"), "report must actually carry KPIs");
+
+    // Same contract under churn (ρ > 0 exercises the Woodbury path).
+    let run_churn = |threads: usize| -> String {
+        let cfg = ExperimentConfig {
+            name: "sharded-churn-invariance".into(),
+            dataset: "synthetic".into(),
+            policies: vec!["mdmt".into()],
+            devices: vec![2],
+            seeds: 2,
+            threads,
+            gp_structure: GpStructure::Sharded,
+            churn: true,
+            churn_cfg: ChurnConfig { n_users: 6, n_models: 4, initial_users: 2, ..Default::default() },
+            ..Default::default()
+        };
+        let res = mmgpei::cli::run_churn_experiment(&cfg).expect("sharded churn sweep");
+        let mut report = RunReport::new("sharded_churn_invariance", 0, true);
+        report.provenance.commit = "pinned".into();
+        res.push_kpis(&mut report, "churn/");
+        report.to_json_string()
+    };
+    let serial = run_churn(1);
+    assert_eq!(serial, run_churn(4), "sharded churn sweep must serialize byte-identically");
+    assert!(serial.contains("mean_exit_regret"));
+}

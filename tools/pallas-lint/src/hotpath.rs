@@ -1,7 +1,7 @@
 //! R6 `hot-path-alloc`: no allocating construct in any function statically
 //! reachable from the serving hot-path roots — `Gp::observe`,
-//! `EiBackend::eirate`, and `EiBackend::select_arm` (impls *and* the
-//! trait default).
+//! `ShardedGp::observe`, `EiBackend::eirate`, and `EiBackend::select_arm`
+//! (impls *and* the trait default).
 //!
 //! This is the whole-tree static complement of the dynamic
 //! `rust/tests/alloc_counter.rs` gate: the counting allocator proves zero
@@ -22,8 +22,12 @@ use crate::diag::{Diagnostic, RuleId};
 use crate::resolve::{Ctx, Index, ALLOC_CTORS, ALLOC_MACROS, ALLOC_METHODS, ALLOC_TYPES};
 
 /// Hot-path roots: (self type or trait, fn name, is-trait).
-const ROOTS: [(&str, &str, bool); 3] =
-    [("Gp", "observe", false), ("EiBackend", "eirate", true), ("EiBackend", "select_arm", true)];
+const ROOTS: [(&str, &str, bool); 4] = [
+    ("Gp", "observe", false),
+    ("ShardedGp", "observe", false),
+    ("EiBackend", "eirate", true),
+    ("EiBackend", "select_arm", true),
+];
 
 /// Run R6 over the index; returns unsorted diagnostics.
 pub fn check(index: &Index<'_>) -> Vec<Diagnostic> {
